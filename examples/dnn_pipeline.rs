@@ -1,0 +1,66 @@
+//! DNN pipelines (§V-B, Fig 7): compile the resnet and mobilenet layers
+//! under the coarse-grained double-buffered scheduler, stream a batch
+//! of tiles through the global buffer model (Fig 12), and contrast the
+//! two layers' pipelining behaviour — resnet's channel-major reuse
+//! buffers everything, mobilenet chases the depthwise stage row by row.
+//!
+//! Run: `cargo run --release --example dnn_pipeline`
+
+use pushmem::apps::{mobilenet, resnet};
+use pushmem::cgra::simulate;
+use pushmem::coordinator::{compile, gen_inputs, sequential_comparison, GlobalBuffer};
+
+fn main() -> anyhow::Result<()> {
+    let gb = GlobalBuffer::default();
+    for (name, program) in [
+        ("resnet", resnet::build(resnet::Size::paper())),
+        ("mobilenet", mobilenet::build(mobilenet::Size::paper())),
+    ] {
+        println!("== {name} ==");
+        let c = compile(&program)?;
+        println!("  policy        {:?}", c.schedule.kind);
+        println!("  completion    {} cycles/tile", c.graph.completion);
+        println!("  coarse II     {} cycles (double-buffered tile overlap)", c.graph.coarse_ii);
+
+        // Stream 16 tiles through the global buffer.
+        let inputs = gen_inputs(&c.lp);
+        let in_words: i64 = inputs.values().map(|t| t.data.len() as i64).sum();
+        let out_words = c.graph.buffers[&c.lp.output].data_box.cardinality();
+        let plan = gb.plan(in_words, out_words, c.graph.completion, c.graph.coarse_ii, 16);
+        println!(
+            "  16 tiles      {} cycles total, interval {} ({}), fill {} / drain {}",
+            plan.total_cycles,
+            plan.interval,
+            if plan.compute_bound { "compute-bound" } else { "memory-bound" },
+            plan.fill_cycles,
+            plan.drain_cycles
+        );
+
+        // One cycle-accurate tile, validated against the reference.
+        let res = simulate(&c.design, &c.graph, &inputs)?;
+        let golden = c.lp.execute(&inputs)?;
+        let out = &golden[&c.lp.output];
+        for pt in out.shape.points() {
+            assert_eq!(res.output.get(&pt), out.get(&pt), "{name}: mismatch at {pt:?}");
+        }
+        println!(
+            "  simulated     {} MACs issued, {} SRAM accesses — bit-exact vs reference",
+            res.stats.pe_ops,
+            res.stats.sram_reads + res.stats.sram_writes
+        );
+
+        // The Table VI/VII contrast.
+        let s = sequential_comparison(&program)?;
+        println!(
+            "  vs sequential {:.2}x faster, {:.2}x less SRAM ({} -> {} words)\n",
+            s.speedup, s.memory_reduction, s.seq_words, s.opt_words
+        );
+    }
+    println!(
+        "resnet re-reads its whole ifmap per output channel, so pipelining \
+         cannot shrink\nits buffers (reduction ~1x); mobilenet's pointwise \
+         stage consumes depthwise rows\nas they appear, recovering most of \
+         the stencil-style locality."
+    );
+    Ok(())
+}

@@ -1,0 +1,44 @@
+//! Schedule exploration (§VI-C, Table V): compile the Harris corner
+//! detector under six Halide schedules and print the
+//! resource/throughput trade-off — buffering vs recomputation,
+//! unrolling, tile size, and host offload — exactly the exploration the
+//! paper's scheduling language enables "with little design effort".
+//!
+//! Run: `cargo run --release --example schedule_explorer`
+
+use pushmem::apps::harris::{build, Schedule};
+use pushmem::coordinator::compile;
+
+fn main() -> anyhow::Result<()> {
+    println!("Harris corner detector: six schedules, one algorithm\n");
+    println!(
+        "{:<24} {:>8} {:>6} {:>6} {:>10} {:>10}",
+        "schedule", "px/cyc", "PEs", "MEMs", "cycles", "SRAM words"
+    );
+    for (label, sched) in [
+        ("sch1: recompute all", Schedule::RecomputeAll),
+        ("sch2: recompute some", Schedule::RecomputeSome),
+        ("sch3: no recompute", Schedule::NoRecompute),
+        ("sch4: unroll by 2", Schedule::UnrollBy2),
+        ("sch5: 4x larger tile", Schedule::BiggerTile),
+        ("sch6: last on host", Schedule::LastOnHost),
+    ] {
+        let c = compile(&build(60, sched))?;
+        println!(
+            "{:<24} {:>8.2} {:>6} {:>6} {:>10} {:>10}",
+            label,
+            c.graph.output_pixels_per_cycle(),
+            c.design.pe_count(),
+            c.design.mem_tiles(),
+            c.graph.completion,
+            c.design.sram_words(),
+        );
+    }
+    println!(
+        "\nThe shape of Table V: recomputation trades many PEs for few \
+         memories;\nunrolling doubles throughput and roughly doubles \
+         resources; a larger tile\nruns ~4x longer on the same hardware; \
+         host offload trims both counts."
+    );
+    Ok(())
+}

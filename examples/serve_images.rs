@@ -1,0 +1,94 @@
+//! End-to-end serving driver (the Fig 12 deployment shape): start the
+//! tile server on the compiled gaussian accelerator, stream a batch of
+//! real image tiles over TCP from a client thread, validate every
+//! response against the XLA golden model, and report
+//! latency/throughput.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_images`
+
+use std::net::TcpStream;
+use std::time::Instant;
+
+use pushmem::apps;
+use pushmem::coordinator::{compile, serve};
+use pushmem::poly::BoxSet;
+use pushmem::runtime::Runtime;
+use pushmem::tensor::Tensor;
+
+const TILES: usize = 24;
+
+fn main() -> anyhow::Result<()> {
+    let (program, artifact) = apps::by_name("gaussian").unwrap();
+    let c = compile(&program)?;
+    let completion = c.graph.completion;
+
+    // Server on an ephemeral port, one thread per connection.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let compiled = std::sync::Arc::new(c);
+    {
+        let compiled = std::sync::Arc::clone(&compiled);
+        std::thread::spawn(move || {
+            for stream in listener.incoming().flatten() {
+                let c = std::sync::Arc::clone(&compiled);
+                let mut s = stream;
+                std::thread::spawn(move || {
+                    let _ = serve::handle_connection(&c, &mut s);
+                });
+            }
+        });
+    }
+
+    // Golden model for response validation (CPU baseline too).
+    let golden = Runtime::cpu().ok().and_then(|rt| {
+        let p = std::path::Path::new("artifacts").join(format!("{artifact}.hlo.txt"));
+        p.exists().then(|| (rt, p))
+    });
+    let golden = match golden {
+        Some((rt, p)) => Some(rt.load(&p)?),
+        None => {
+            eprintln!("note: run `make artifacts` for XLA validation; using reference only");
+            None
+        }
+    };
+
+    // Client: stream TILES distinct 64x64 tiles.
+    let mut stream = TcpStream::connect(addr)?;
+    let mut latencies = Vec::new();
+    let t0 = Instant::now();
+    let mut validated = 0usize;
+    for k in 0..TILES {
+        let tile = Tensor::from_fn(BoxSet::from_extents(&[64, 64]), |p| {
+            ((p[0] * 31 + p[1] * 7 + k as i64 * 131) % 251) as i32
+        });
+        let t1 = Instant::now();
+        let (words, cycles, sim_us) = serve::request(&mut stream, &[&tile])?;
+        latencies.push(t1.elapsed().as_secs_f64());
+        assert_eq!(cycles as i64, completion);
+        if let Some(m) = &golden {
+            let (expect, _) = m.run(&[&tile])?;
+            assert_eq!(words, expect, "tile {k}: server output != XLA golden");
+            validated += 1;
+        }
+        if k == 0 {
+            println!("first tile: {} output words, {} cycles, sim {} µs", words.len(), cycles, sim_us);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = latencies[latencies.len() / 2];
+    let p99 = latencies[(latencies.len() * 99 / 100).min(latencies.len() - 1)];
+    println!("\n== serving report ==");
+    println!("tiles served        {TILES}");
+    println!("validated vs XLA    {validated}");
+    println!("throughput          {:.1} tiles/s", TILES as f64 / wall);
+    println!("latency p50         {:.2} ms", p50 * 1e3);
+    println!("latency p99         {:.2} ms", p99 * 1e3);
+    println!(
+        "accelerator time    {:.3} ms/tile @ 900 MHz ({} cycles)",
+        completion as f64 / 900.0e6 * 1e3,
+        completion
+    );
+    Ok(())
+}

@@ -1,0 +1,63 @@
+"""AOT lowering: JAX golden models -> HLO *text* artifacts.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids, which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once per build (``make artifacts``); Python is never on the rust
+request path.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--only app]
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_app(fn, shapes):
+    specs = [jax.ShapeDtypeStruct(s, jnp.int32) for s in shapes]
+    return jax.jit(fn).lower(*specs)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower a single app")
+    ap.add_argument("--out", default=None, help="(legacy) single-file output")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    reg = model.registry()
+    names = [args.only] if args.only else sorted(reg)
+    for name in names:
+        fn, shapes = reg[name]
+        text = to_hlo_text(lower_app(fn, shapes))
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>8} chars  {path}")
+    # Legacy single-artifact mode used by the original scaffold Makefile.
+    if args.out:
+        fn, shapes = reg["gaussian"]
+        with open(args.out, "w") as f:
+            f.write(to_hlo_text(lower_app(fn, shapes)))
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels (build-time only, never on the request path).
+
+All kernels use ``interpret=True`` so they lower to plain HLO the CPU
+PJRT client can run; on a real TPU the same BlockSpecs express the
+HBM<->VMEM schedule that the paper's unified buffers express with
+AGG/SRAM/TB (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from .conv import conv3x3_pallas, conv_layer_pallas  # noqa: F401
+from . import ref  # noqa: F401

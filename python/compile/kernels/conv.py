@@ -1,0 +1,100 @@
+"""Pallas kernels for the compute hot-spots.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's
+physical unified buffer pushes fetch-width vectors through AGG -> wide
+SRAM -> TB on a static schedule, with shift-register taps feeding the
+stencil rows. The TPU analogue used here:
+
+* the 3x3 stencil consumes **three row-shifted views** of the image —
+  the three line-buffer taps — each streamed through VMEM in
+  non-overlapping ``BLOCK_ROWS``-high blocks (the wide fetch);
+* the resnet channel conv reshapes the reduction into an int32
+  ``jnp.dot`` so the MXU systolic array plays the paper's unrolled
+  MAC-tree PEs.
+
+Everything is int32 and ``interpret=True`` (real-TPU lowering emits
+Mosaic custom-calls the CPU PJRT plugin cannot run).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows of output computed per grid step (the VMEM block height).
+BLOCK_ROWS = 8
+
+
+def _conv3x3_kernel(top_ref, mid_ref, bot_ref, w_ref, o_ref, *, shift):
+    """One output block from the three line-buffer tap streams."""
+    w = w_ref[...]
+    rows = (top_ref[...], mid_ref[...], bot_ref[...])
+    wdt = rows[0].shape[1]
+    acc = jnp.zeros((rows[0].shape[0], wdt - 2), dtype=jnp.int32)
+    for ry in range(3):
+        for rx in range(3):
+            acc = acc + w[ry, rx] * rows[ry][:, rx : wdt - 2 + rx]
+    o_ref[...] = jnp.right_shift(acc, shift)
+
+
+def conv3x3_pallas(img, weights, shift=4):
+    """3x3 valid conv (H, W) -> (H-2, W-2), row-blocked through VMEM.
+
+    The grid walks output row blocks; tap stream ``ry`` delivers rows
+    ``[i*B + ry, i*B + ry + B)`` — three shifted streams standing in for
+    the two line buffers plus the live row of the paper's design.
+    """
+    h, w = img.shape
+    oh, ow = h - 2, w - 2
+    # Pad output rows up to a block multiple (computed rows beyond the
+    # image are sliced away — the Halide-style round-up).
+    pad = (-oh) % BLOCK_ROWS
+    if pad:
+        img = jnp.pad(img, ((0, pad), (0, 0)))
+        return conv3x3_pallas(img, weights, shift)[:oh, :]
+    taps = [img[ry : oh + ry, :] for ry in range(3)]
+    grid = (oh // BLOCK_ROWS,)
+    tap_spec = pl.BlockSpec((BLOCK_ROWS, w), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_conv3x3_kernel, shift=shift),
+        grid=grid,
+        in_specs=[tap_spec, tap_spec, tap_spec, pl.BlockSpec((3, 3), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, ow), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((oh, ow), jnp.int32),
+        interpret=True,
+    )(*taps, weights)
+
+
+def _conv_layer_kernel(patches_ref, w_ref, o_ref, *, shift):
+    """MXU-shaped channel conv: (Cout, K) @ (K, N) int32 dot."""
+    acc = jnp.dot(w_ref[...], patches_ref[...], preferred_element_type=jnp.int32)
+    o_ref[...] = jnp.maximum(jnp.right_shift(acc, shift), 0)
+
+
+def conv_layer_pallas(ifmap, weights, shift=4):
+    """Multi-channel 3x3 valid conv + relu via an im2col matmul.
+
+    ifmap (Cin, H, W), weights (Cout, Cin, 3, 3) -> (Cout, H-2, W-2).
+    The im2col happens at trace time (jnp slicing); the Pallas kernel is
+    the (Cout, Cin*9) x (Cin*9, OH*OW) integer matmul — the MXU
+    realization of the paper's unrolled reduction tree.
+    """
+    cin, h, w = ifmap.shape
+    cout = weights.shape[0]
+    oh, ow = h - 2, w - 2
+    patches = jnp.stack(
+        [
+            ifmap[ci, ry : oh + ry, rx : ow + rx].reshape(-1)
+            for ci in range(cin)
+            for ry in range(3)
+            for rx in range(3)
+        ]
+    )  # (Cin*9, OH*OW)
+    wmat = weights.reshape(cout, cin * 9)
+    out = pl.pallas_call(
+        functools.partial(_conv_layer_kernel, shift=shift),
+        out_shape=jax.ShapeDtypeStruct((cout, oh * ow), jnp.int32),
+        interpret=True,
+    )(patches, wmat)
+    return out.reshape(cout, oh, ow)

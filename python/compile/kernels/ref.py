@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Pallas kernels: the correctness standard
+pytest holds the kernels to (bit-exact int32)."""
+
+import jax.numpy as jnp
+
+
+def conv3x3_ref(img, weights, shift):
+    """3x3 valid convolution over an (H, W) int32 image with a (3, 3)
+    int32 kernel, arithmetic-shifted right by ``shift``."""
+    h, w = img.shape
+    acc = jnp.zeros((h - 2, w - 2), dtype=jnp.int32)
+    for ry in range(3):
+        for rx in range(3):
+            acc = acc + weights[ry, rx] * img[ry : h - 2 + ry, rx : w - 2 + rx]
+    return jnp.right_shift(acc, shift)
+
+
+def conv_layer_ref(ifmap, weights, shift):
+    """Multi-channel 3x3 valid conv: ifmap (Cin, H, W), weights
+    (Cout, Cin, 3, 3) -> (Cout, H-2, W-2), int32, >> shift, relu'd."""
+    cin, h, w = ifmap.shape
+    cout = weights.shape[0]
+    acc = jnp.zeros((cout, h - 2, w - 2), dtype=jnp.int32)
+    for ci in range(cin):
+        for ry in range(3):
+            for rx in range(3):
+                acc = acc + (
+                    weights[:, ci, ry, rx][:, None, None]
+                    * ifmap[ci, ry : h - 2 + ry, rx : w - 2 + rx][None, :, :]
+                )
+    return jnp.maximum(jnp.right_shift(acc, shift), 0)

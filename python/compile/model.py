@@ -1,0 +1,180 @@
+"""Layer-2 golden models: bit-exact int32 JAX ports of the seven
+mini-Halide applications in ``rust/src/apps/``.
+
+These are the reference the paper validates against ("we validate the
+output images against each other", §VI-B): the rust coordinator runs
+each app on the cycle-accurate CGRA simulator AND executes the
+AOT-lowered HLO of the matching function here, then compares
+pixel-exactly. The stencil/conv hot-spots call the Layer-1 Pallas
+kernels so they lower into the same HLO.
+
+Every function is a pure int32 map from input tiles (with halo) to the
+output tile; shifts are arithmetic, matching Rust's ``>>`` on i32.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import conv3x3_pallas, conv_layer_pallas
+
+# Binomial 3x3 kernel used by gaussian and unsharp.
+BINOMIAL = jnp.array([[1, 2, 1], [2, 4, 2], [1, 2, 1]], dtype=jnp.int32)
+
+
+def gaussian(img):
+    """(H, W) -> (H-2, W-2): binomial blur >> 4 (the L1 stencil kernel)."""
+    return conv3x3_pallas(img, BINOMIAL, shift=4)
+
+
+def _sobel(img, horizontal):
+    h, w = img.shape
+    a = lambda dy, dx: img[dy : h - 2 + dy, dx : w - 2 + dx]
+    if horizontal:
+        return (a(0, 2) - a(0, 0)) + 2 * (a(1, 2) - a(1, 0)) + (a(2, 2) - a(2, 0))
+    return (a(2, 0) - a(0, 0)) + 2 * (a(2, 1) - a(0, 1)) + (a(2, 2) - a(0, 2))
+
+
+def _box3(img):
+    h, w = img.shape
+    acc = jnp.zeros((h - 2, w - 2), dtype=jnp.int32)
+    for dy in range(3):
+        for dx in range(3):
+            acc = acc + img[dy : h - 2 + dy, dx : w - 2 + dx]
+    return acc
+
+
+HARRIS_THRESHOLD = 1
+
+
+def harris(img):
+    """(H, W) -> (H-4, W-4): corner response, thresholded."""
+    ix = _sobel(img, True)
+    iy = _sobel(img, False)
+    ixx = jnp.right_shift(ix * ix, 4)
+    ixy = jnp.right_shift(ix * iy, 4)
+    iyy = jnp.right_shift(iy * iy, 4)
+    sxx = _box3(ixx)
+    sxy = _box3(ixy)
+    syy = _box3(iyy)
+    det = jnp.right_shift(sxx * syy, 6) - jnp.right_shift(sxy * sxy, 6)
+    tr = sxx + syy
+    resp = det - jnp.right_shift(tr * tr, 10)
+    return jnp.where(resp > HARRIS_THRESHOLD, resp, 0)
+
+
+def harris_resp(img):
+    """The accelerator part of harris sch6 (threshold on the host)."""
+    ix = _sobel(img, True)
+    iy = _sobel(img, False)
+    sxx = _box3(jnp.right_shift(ix * ix, 4))
+    sxy = _box3(jnp.right_shift(ix * iy, 4))
+    syy = _box3(jnp.right_shift(iy * iy, 4))
+    det = jnp.right_shift(sxx * syy, 6) - jnp.right_shift(sxy * sxy, 6)
+    tr = sxx + syy
+    return det - jnp.right_shift(tr * tr, 10)
+
+
+def upsample(img):
+    """(H, W) -> (H, 2, W, 2): 2x nearest neighbour, strip-mined layout."""
+    h, w = img.shape
+    return jnp.broadcast_to(img[:, None, :, None], (h, 2, w, 2)).astype(jnp.int32)
+
+
+def unsharp(img):
+    """(H, W) -> (H-2, W-2): center + 2*(center - blur), clamped."""
+    blur = conv3x3_pallas(img, BINOMIAL, shift=4)
+    center = img[1:-1, 1:-1]
+    return jnp.clip(center + 2 * (center - blur), 0, 255)
+
+
+# --- camera ----------------------------------------------------------
+
+CCM = jnp.array([[20, -3, -1], [-2, 19, -1], [-1, -4, 21]], dtype=jnp.int32)
+
+
+def _demosaic(img, channel):
+    """Bilinear demosaic over the (H-2, W-2) interior; parity of the
+    *output* coordinate +1 selects the Bayer phase (RGGB)."""
+    h, w = img.shape
+    a = lambda dy, dx: img[dy : h - 2 + dy, dx : w - 2 + dx]
+    center = a(1, 1)
+    hh = jnp.right_shift(a(1, 0) + a(1, 2), 1)
+    vv = jnp.right_shift(a(0, 1) + a(2, 1), 1)
+    x4 = jnp.right_shift(a(0, 0) + a(0, 2) + a(2, 0) + a(2, 2), 2)
+    plus4 = jnp.right_shift(a(0, 1) + a(2, 1) + a(1, 0) + a(1, 2), 2)
+    yy = jnp.arange(h - 2, dtype=jnp.int32)[:, None]
+    xx = jnp.arange(w - 2, dtype=jnp.int32)[None, :]
+    row_even = ((yy + 1) & 1) == 0
+    col_even = ((xx + 1) & 1) == 0
+    row_even, col_even = jnp.broadcast_arrays(row_even, col_even)
+    if channel == 0:
+        return jnp.where(row_even, jnp.where(col_even, center, hh), jnp.where(col_even, vv, x4))
+    if channel == 1:
+        g_here = ((yy + 1) & 1) != ((xx + 1) & 1)
+        return jnp.where(g_here, center, plus4)
+    return jnp.where(row_even, jnp.where(col_even, x4, vv), jnp.where(col_even, hh, center))
+
+
+def _ccm_row(dem_r, dem_g, dem_b, row):
+    v = CCM[row, 0] * dem_r + CCM[row, 1] * dem_g + CCM[row, 2] * dem_b
+    return jnp.clip(jnp.right_shift(v, 4), 0, 255)
+
+
+def _sharpen(img):
+    h, w = img.shape
+    a = lambda dy, dx: img[dy : h - 2 + dy, dx : w - 2 + dx]
+    cross = jnp.right_shift(a(0, 1) + a(2, 1) + a(1, 0) + a(1, 2), 2)
+    return jnp.clip(a(1, 1) + (a(1, 1) - cross), 0, 255)
+
+
+def _tone(e):
+    lo = jnp.right_shift(3 * e, 1)
+    hi = jnp.right_shift(e, 1) + 64
+    return jnp.clip(jnp.where(e < 64, lo, hi), 0, 255)
+
+
+def camera(img):
+    """(H, W) Bayer -> (H-4, W-4) RGB555-packed."""
+    dem = [_demosaic(img, c) for c in range(3)]
+    ccm = [_ccm_row(dem[0], dem[1], dem[2], r) for r in range(3)]
+    shp = [_sharpen(c) for c in ccm]
+    t = [jnp.right_shift(_tone(s), 3) for s in shp]
+    return (t[0] << 10) | (t[1] << 5) | t[2]
+
+
+def resnet(ifmap, weights):
+    """(Cin,H,W),(Cout,Cin,3,3) -> (Cout,H-2,W-2): conv+relu, >> 4 — the
+    L1 MXU kernel."""
+    return conv_layer_pallas(ifmap, weights, shift=4)
+
+
+def mobilenet(ifmap, dw_weights, pw_weights):
+    """(C,H,W),(C,3,3),(Cout,C) -> (H-2,W-2,Cout): depthwise >> 4 then
+    pointwise accumulate, pixels-outermost layout."""
+    c, h, w = ifmap.shape
+    acc = jnp.zeros((c, h - 2, w - 2), dtype=jnp.int32)
+    for ry in range(3):
+        for rx in range(3):
+            acc = acc + (
+                dw_weights[:, ry, rx][:, None, None]
+                * ifmap[:, ry : h - 2 + ry, rx : w - 2 + rx]
+            )
+    dw = jnp.right_shift(acc, 4)  # (C, H-2, W-2)
+    # pointwise: out[y, x, co] = sum_ci dw[ci, y, x] * pw[co, ci]
+    return jnp.einsum("cyx,oc->yxo", dw, pw_weights).astype(jnp.int32)
+
+
+# --- AOT registry ----------------------------------------------------
+
+def registry():
+    """App name -> (fn, input shapes) with paper-scale tiles (64x64
+    input streams; see rust/src/apps/mod.rs::all)."""
+    return {
+        "gaussian": (gaussian, [(64, 64)]),
+        "harris": (harris, [(64, 64)]),
+        "harris_resp": (harris_resp, [(64, 64)]),
+        "upsample": (upsample, [(64, 64)]),
+        "unsharp": (unsharp, [(64, 64)]),
+        "camera": (camera, [(64, 64)]),
+        "resnet": (resnet, [(8, 16, 16), (16, 8, 3, 3)]),
+        "mobilenet": (mobilenet, [(8, 18, 18), (8, 3, 3), (16, 8)]),
+    }

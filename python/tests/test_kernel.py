@@ -1,0 +1,92 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles, bit-exact,
+with hypothesis sweeping shapes and value ranges."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv3x3_pallas, conv_layer_pallas
+from compile.kernels.ref import conv3x3_ref, conv_layer_ref
+
+
+def _img(rng, h, w, lo=-256, hi=256):
+    return jnp.asarray(rng.integers(lo, hi, size=(h, w)), dtype=jnp.int32)
+
+
+def test_conv3x3_matches_ref_basic():
+    rng = np.random.default_rng(0)
+    img = _img(rng, 18, 20)
+    wts = jnp.asarray(rng.integers(-8, 8, size=(3, 3)), dtype=jnp.int32)
+    out = conv3x3_pallas(img, wts, shift=4)
+    ref = conv3x3_ref(img, wts, shift=4)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(min_value=3, max_value=40),
+    w=st.integers(min_value=3, max_value=40),
+    shift=st.integers(min_value=0, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_conv3x3_matches_ref_swept(h, w, shift, seed):
+    rng = np.random.default_rng(seed)
+    img = _img(rng, h, w)
+    wts = jnp.asarray(rng.integers(-16, 16, size=(3, 3)), dtype=jnp.int32)
+    out = conv3x3_pallas(img, wts, shift=shift)
+    ref = conv3x3_ref(img, wts, shift=shift)
+    assert out.shape == (h - 2, w - 2)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_conv3x3_negative_values_arithmetic_shift():
+    # Arithmetic >> on negatives must match Rust i32 semantics.
+    img = jnp.full((10, 10), -3, dtype=jnp.int32)
+    wts = jnp.ones((3, 3), dtype=jnp.int32)
+    out = conv3x3_pallas(img, wts, shift=2)
+    # sum = -27; -27 >> 2 == -7 (floor).
+    assert int(out[0, 0]) == -7
+
+
+def test_conv_layer_matches_ref_basic():
+    rng = np.random.default_rng(1)
+    ifmap = jnp.asarray(rng.integers(-64, 64, size=(4, 10, 12)), dtype=jnp.int32)
+    w = jnp.asarray(rng.integers(-8, 8, size=(6, 4, 3, 3)), dtype=jnp.int32)
+    out = conv_layer_pallas(ifmap, w, shift=4)
+    ref = conv_layer_ref(ifmap, w, shift=4)
+    assert out.shape == (6, 8, 10)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    cin=st.integers(min_value=1, max_value=6),
+    cout=st.integers(min_value=1, max_value=8),
+    h=st.integers(min_value=3, max_value=14),
+    w=st.integers(min_value=3, max_value=14),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_conv_layer_matches_ref_swept(cin, cout, h, w, seed):
+    rng = np.random.default_rng(seed)
+    ifmap = jnp.asarray(rng.integers(-32, 32, size=(cin, h, w)), dtype=jnp.int32)
+    wts = jnp.asarray(rng.integers(-8, 8, size=(cout, cin, 3, 3)), dtype=jnp.int32)
+    out = conv_layer_pallas(ifmap, wts, shift=2)
+    ref = conv_layer_ref(ifmap, wts, shift=2)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_relu_clamps_negatives():
+    ifmap = jnp.full((1, 4, 4), -10, dtype=jnp.int32)
+    w = jnp.ones((1, 1, 3, 3), dtype=jnp.int32)
+    out = conv_layer_pallas(ifmap, w, shift=0)
+    assert int(jnp.max(out)) == 0
+
+
+def test_non_block_multiple_rows_padded():
+    rng = np.random.default_rng(3)
+    img = _img(rng, 9, 11)  # 7 output rows: not a BLOCK_ROWS multiple
+    wts = jnp.ones((3, 3), dtype=jnp.int32)
+    out = conv3x3_pallas(img, wts, shift=0)
+    ref = conv3x3_ref(img, wts, shift=0)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))

@@ -1,0 +1,112 @@
+"""Layer-2 golden models: structural checks plus numpy cross-checks of
+the trickier apps (harris, camera, mobilenet) against straight-line
+reference implementations."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import model
+
+
+def _img(seed, shape, lo=0, hi=253):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(lo, hi, size=shape), dtype=jnp.int32)
+
+
+def test_registry_shapes_lower():
+    # Every registered app traces and produces a static output shape.
+    for name, (fn, shapes) in model.registry().items():
+        args = [jnp.zeros(s, dtype=jnp.int32) for s in shapes]
+        out = fn(*args)
+        assert out.dtype == jnp.int32, name
+        assert all(d > 0 for d in out.shape), name
+
+
+def test_gaussian_shape_and_identity_kernel():
+    img = _img(0, (64, 64))
+    out = model.gaussian(img)
+    assert out.shape == (62, 62)
+    # With the binomial kernel, a constant image maps to itself.
+    flat = jnp.full((64, 64), 100, dtype=jnp.int32)
+    assert int(model.gaussian(flat)[5, 5]) == 100
+
+
+def test_harris_matches_numpy_reference():
+    # int32 throughout: the CGRA, rust reference and XLA all wrap at 32
+    # bits, so the numpy oracle must too.
+    img = np.asarray(_img(1, (20, 20)), dtype=np.int32)
+
+    def sobel(img, horiz):
+        h, w = img.shape
+        a = lambda dy, dx: img[dy : h - 2 + dy, dx : w - 2 + dx]
+        if horiz:
+            return (a(0, 2) - a(0, 0)) + 2 * (a(1, 2) - a(1, 0)) + (a(2, 2) - a(2, 0))
+        return (a(2, 0) - a(0, 0)) + 2 * (a(2, 1) - a(0, 1)) + (a(2, 2) - a(0, 2))
+
+    def box(v):
+        h, w = v.shape
+        return sum(
+            v[dy : h - 2 + dy, dx : w - 2 + dx] for dy in range(3) for dx in range(3)
+        )
+
+    ix, iy = sobel(img, True), sobel(img, False)
+    sxx = box((ix * ix) >> 4)
+    sxy = box((ix * iy) >> 4)
+    syy = box((iy * iy) >> 4)
+    det = ((sxx * syy) >> 6) - ((sxy * sxy) >> 6)
+    tr = sxx + syy
+    resp = det - ((tr * tr) >> 10)
+    expect = np.where(resp > model.HARRIS_THRESHOLD, resp, 0)
+
+    got = np.asarray(model.harris(jnp.asarray(img, dtype=jnp.int32)))
+    np.testing.assert_array_equal(got, expect.astype(np.int32))
+
+
+def test_upsample_repeats_pixels():
+    img = _img(2, (6, 6))
+    out = np.asarray(model.upsample(img))
+    src = np.asarray(img)
+    for yo in range(6):
+        for xo in range(6):
+            assert (out[yo, :, xo, :] == src[yo, xo]).all()
+
+
+def test_unsharp_flat_image_is_identity():
+    flat = jnp.full((20, 20), 77, dtype=jnp.int32)
+    out = model.unsharp(flat)
+    assert int(out[3, 3]) == 77
+
+
+def test_camera_output_is_rgb555():
+    img = _img(3, (32, 32))
+    out = np.asarray(model.camera(img))
+    assert out.shape == (28, 28)
+    assert (out >= 0).all() and (out < (1 << 15)).all()
+
+
+def test_mobilenet_matches_numpy():
+    ifmap = np.asarray(_img(4, (3, 8, 8)), dtype=np.int64)
+    wd = np.asarray(_img(5, (3, 3, 3), -4, 4), dtype=np.int64)
+    wp = np.asarray(_img(6, (5, 3), -4, 4), dtype=np.int64)
+    c, h, w = ifmap.shape
+    dw = np.zeros((c, h - 2, w - 2), dtype=np.int64)
+    for ry in range(3):
+        for rx in range(3):
+            dw += wd[:, ry, rx][:, None, None] * ifmap[:, ry : h - 2 + ry, rx : w - 2 + rx]
+    dw >>= 4
+    expect = np.einsum("cyx,oc->yxo", dw, wp)
+    got = np.asarray(
+        model.mobilenet(
+            jnp.asarray(ifmap, dtype=jnp.int32),
+            jnp.asarray(wd, dtype=jnp.int32),
+            jnp.asarray(wp, dtype=jnp.int32),
+        )
+    )
+    np.testing.assert_array_equal(got, expect.astype(np.int32))
+
+
+def test_resnet_uses_relu():
+    ifmap = jnp.full((2, 6, 6), -5, dtype=jnp.int32)
+    w = jnp.ones((3, 2, 3, 3), dtype=jnp.int32)
+    out = model.resnet(ifmap, w)
+    assert int(jnp.max(out)) == 0

@@ -1,0 +1,28 @@
+//! Fig 13: energy per operation, CGRA vs FPGA, per application. The
+//! paper's headline: the CGRA is 4.3x more energy-efficient on average.
+
+#[path = "harness.rs"]
+mod harness;
+
+use pushmem::apps;
+use pushmem::coordinator::report_app;
+
+fn main() {
+    harness::rule("Fig 13: energy per op (pJ), CGRA vs FPGA");
+    println!("{:<14} {:>12} {:>12} {:>8}", "app", "CGRA pJ/op", "FPGA pJ/op", "ratio");
+    let mut ratios = Vec::new();
+    for name in ["gaussian", "harris", "upsample", "unsharp", "camera", "resnet", "mobilenet"] {
+        let (p, _) = apps::by_name(name).unwrap();
+        let r = report_app(&p, None, None).unwrap();
+        let ratio = r.fpga.energy_per_op_pj / r.cgra_energy_per_op_pj;
+        println!(
+            "{:<14} {:>12.2} {:>12.2} {:>8.2}",
+            name, r.cgra_energy_per_op_pj, r.fpga.energy_per_op_pj, ratio
+        );
+        ratios.push(ratio);
+    }
+    println!(
+        "\ngeomean FPGA/CGRA energy ratio: {:.2}x (paper: 4.3x)",
+        harness::geomean(&ratios)
+    );
+}

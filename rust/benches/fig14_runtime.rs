@@ -1,0 +1,49 @@
+//! Fig 14: application runtime on CGRA (900 MHz), FPGA (200 MHz), and
+//! CPU (the XLA-compiled golden model on this host — the same role the
+//! paper's Xeon plays). The paper's headline: CGRA 4.7x faster than
+//! FPGA and faster than the CPU.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::path::PathBuf;
+
+use pushmem::apps;
+use pushmem::coordinator::report_app;
+use pushmem::runtime::Runtime;
+
+fn main() {
+    harness::rule("Fig 14: runtime per tile (ms), CGRA vs FPGA vs CPU");
+    let rt = Runtime::cpu().ok();
+    println!(
+        "{:<14} {:>10} {:>10} {:>10} {:>11}",
+        "app", "CGRA ms", "FPGA ms", "CPU ms", "FPGA/CGRA"
+    );
+    let mut ratios = Vec::new();
+    for name in ["gaussian", "harris", "upsample", "unsharp", "camera", "resnet", "mobilenet"] {
+        let (p, artifact) = apps::by_name(name).unwrap();
+        let path = PathBuf::from("artifacts").join(format!("{artifact}.hlo.txt"));
+        let r = report_app(
+            &p,
+            if path.exists() { Some(path.as_path()) } else { None },
+            rt.as_ref(),
+        )
+        .unwrap();
+        let ratio = r.fpga.runtime_s / r.cgra_runtime_s;
+        println!(
+            "{:<14} {:>10.4} {:>10.4} {:>10} {:>11.2}",
+            name,
+            r.cgra_runtime_s * 1e3,
+            r.fpga.runtime_s * 1e3,
+            r.cpu_time_s
+                .map(|t| format!("{:.4}", t * 1e3))
+                .unwrap_or_else(|| "-".into()),
+            ratio
+        );
+        ratios.push(ratio);
+    }
+    println!(
+        "\ngeomean FPGA/CGRA runtime ratio: {:.2}x (paper: 4.7x)",
+        harness::geomean(&ratios)
+    );
+}

@@ -1,0 +1,39 @@
+//! Minimal bench harness (criterion is not vendored in this offline
+//! image): measures wall-clock with warmup and repetition, prints
+//! mean ± spread, and hosts the table printers the paper-reproduction
+//! benches share. Used via `#[path = "harness.rs"] mod harness;`.
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+/// Time `f` with one warmup and `iters` measured runs; returns
+/// (mean seconds, min, max) and prints a criterion-ish line.
+pub fn time<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    f(); // warmup
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = samples.iter().cloned().fold(0.0, f64::max);
+    println!(
+        "bench {name:<40} {:>10.3} ms  [{:.3} .. {:.3}]",
+        mean * 1e3,
+        min * 1e3,
+        max * 1e3
+    );
+    mean
+}
+
+pub fn rule(title: &str) {
+    println!("\n==== {title} ====");
+}
+
+/// Geometric mean of ratios.
+pub fn geomean(v: &[f64]) -> f64 {
+    (v.iter().map(|x| x.ln()).sum::<f64>() / v.len() as f64).exp()
+}

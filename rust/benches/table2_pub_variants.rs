@@ -1,0 +1,66 @@
+//! Table II: the three physical unified buffer implementations — area
+//! and energy per access for a 3x3 convolution — plus a timing bench of
+//! the shipped memory tile's cycle model.
+
+#[path = "harness.rs"]
+mod harness;
+
+use pushmem::cost::area::{table2_variants, PubVariant};
+use pushmem::hw::{AffineConfig, MemTile, MemTileConfig, PortCtlConfig};
+use pushmem::poly::Affine;
+
+fn main() {
+    harness::rule("Table II: physical unified buffer variants (model)");
+    println!(
+        "{:<28} {:>12} {:>8} {:>12} {:>14}",
+        "variant", "MEM um^2", "SRAM %", "total um^2", "pJ / access"
+    );
+    let rows = table2_variants();
+    for (v, c) in &rows {
+        let name = match v {
+            PubVariant::DpSramPes => "DP SRAM + PEs (baseline)",
+            PubVariant::DpSramAg => "DP SRAM + AG",
+            PubVariant::WideSpSram => "4-wide SP SRAM + AGG/TB/AG",
+        };
+        println!(
+            "{:<28} {:>12.0} {:>8.0} {:>12.0} {:>14.2}",
+            name,
+            c.mem_tile_um2,
+            100.0 * c.sram_fraction,
+            c.total_ub_um2,
+            c.energy_pj_per_access
+        );
+    }
+    let base = rows[0].1;
+    let best = rows[2].1;
+    println!(
+        "\nimprovement baseline -> shipped: area {:.2}x, energy {:.2}x (paper: ~2x / ~2x)",
+        base.total_ub_um2 / best.total_ub_um2,
+        base.energy_pj_per_access / best.energy_pj_per_access
+    );
+
+    // Timing: one full pass of a 4096-word delay buffer through the
+    // behavioral memory tile.
+    harness::rule("memtile cycle-model throughput");
+    let cfg = |coeffs: Vec<i64>, off: i64| AffineConfig::from_affine(&Affine::new(coeffs, off));
+    let tile_cfg = MemTileConfig {
+        fetch_width: 4,
+        capacity: 2048,
+        serial_in: vec![PortCtlConfig::new(vec![1024, 4], cfg(vec![0, 1], 0), cfg(vec![4, 1], 0))
+            .with_modulus(4)],
+        serial_in_agg: vec![0],
+        agg_flush: vec![PortCtlConfig::new(vec![1024], cfg(vec![1], 0), cfg(vec![4], 3))
+            .with_modulus(512)],
+        sram_read: vec![PortCtlConfig::new(vec![1024], cfg(vec![1], 0), cfg(vec![4], 6))
+            .with_modulus(512)],
+        tb_out: vec![PortCtlConfig::new(vec![1024, 4], cfg(vec![4, 1], 0), cfg(vec![4, 1], 8))
+            .with_modulus(8)],
+    };
+    harness::time("memtile 4096-word pass", 20, || {
+        let mut t = MemTile::new(tile_cfg.clone());
+        for cycle in 0..4112 {
+            let w = if cycle < 4096 { Some(cycle) } else { None };
+            let _ = t.tick(cycle, &[w]).unwrap();
+        }
+    });
+}

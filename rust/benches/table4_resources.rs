@@ -1,0 +1,32 @@
+//! Table IV: FPGA (BRAM/DSP/FF/LUT) and CGRA (PEs/MEMs) resources for
+//! every application, plus compile-time timing.
+
+#[path = "harness.rs"]
+mod harness;
+
+use pushmem::apps;
+use pushmem::coordinator::{compile, report_app};
+
+fn main() {
+    harness::rule("Table IV: resources per application");
+    println!(
+        "{:<12} {:>5} {:>5} {:>7} {:>7} | {:>5} {:>5}",
+        "app", "BRAM", "DSP", "FF", "LUT", "PEs", "MEMs"
+    );
+    for name in ["gaussian", "harris", "upsample", "unsharp", "camera", "resnet", "mobilenet"] {
+        let (p, _) = apps::by_name(name).unwrap();
+        let r = report_app(&p, None, None).unwrap();
+        println!(
+            "{:<12} {:>5} {:>5} {:>7} {:>7} | {:>5} {:>5}",
+            name, r.fpga.bram, r.fpga.dsp, r.fpga.ff, r.fpga.lut, r.pes, r.mems
+        );
+    }
+
+    harness::rule("compile time per app");
+    for name in ["gaussian", "harris", "camera"] {
+        let (p, _) = apps::by_name(name).unwrap();
+        harness::time(&format!("compile {name}"), 5, || {
+            let _ = compile(&p).unwrap();
+        });
+    }
+}

@@ -1,0 +1,44 @@
+//! Table V: six Halide schedules of the Harris corner detector —
+//! pixels/cycle, PEs, MEMs, and runtime cycles.
+
+#[path = "harness.rs"]
+mod harness;
+
+use pushmem::apps;
+use pushmem::coordinator::report_app;
+
+fn main() {
+    harness::rule("Table V: Harris schedule exploration");
+    println!(
+        "{:<24} {:>8} {:>6} {:>6} {:>10}",
+        "schedule", "px/cyc", "PEs", "MEMs", "cycles"
+    );
+    let rows = [
+        ("sch1: recompute all", "harris_sch1"),
+        ("sch2: recompute some", "harris_sch2"),
+        ("sch3: no recompute", "harris"),
+        ("sch4: unroll by 2", "harris_sch4"),
+        ("sch5: 4x larger tile", "harris_sch5"),
+        ("sch6: last on host", "harris_sch6"),
+    ];
+    let mut sch1_pes = 0;
+    let mut sch3_pes = 0;
+    for (label, name) in rows {
+        let (p, _) = apps::by_name(name).unwrap();
+        let r = report_app(&p, None, None).unwrap();
+        if name == "harris_sch1" {
+            sch1_pes = r.pes;
+        }
+        if name == "harris" {
+            sch3_pes = r.pes;
+        }
+        println!(
+            "{:<24} {:>8.2} {:>6} {:>6} {:>10}",
+            label, r.pixels_per_cycle, r.pes, r.mems, r.completion
+        );
+    }
+    println!(
+        "\nrecompute-all / no-recompute PE ratio: {:.1}x (paper: 769/83 = 9.3x)",
+        sch1_pes as f64 / sch3_pes as f64
+    );
+}

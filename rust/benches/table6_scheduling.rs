@@ -1,0 +1,26 @@
+//! Table VI: completion time of the optimized hardware-pipeline
+//! schedule vs the naïve sequential baseline, per application.
+
+#[path = "harness.rs"]
+mod harness;
+
+use pushmem::apps;
+use pushmem::coordinator::sequential_comparison;
+
+fn main() {
+    harness::rule("Table VI: sequential vs optimized completion time");
+    println!(
+        "{:<14} {:>12} {:>12} {:>9}",
+        "app", "seq cycles", "opt cycles", "speedup"
+    );
+    let mut speedups = Vec::new();
+    for p in apps::all() {
+        let s = sequential_comparison(&p).unwrap();
+        println!(
+            "{:<14} {:>12} {:>12} {:>9.2}",
+            s.name, s.seq_completion, s.opt_completion, s.speedup
+        );
+        speedups.push(s.speedup);
+    }
+    println!("\ngeomean speedup: {:.2}x (paper: 3x-22x per app)", harness::geomean(&speedups));
+}

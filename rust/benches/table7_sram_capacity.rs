@@ -1,0 +1,24 @@
+//! Table VII: required SRAM capacity (live 16-bit words) under the
+//! sequential baseline vs the pipelined schedule.
+
+#[path = "harness.rs"]
+mod harness;
+
+use pushmem::apps;
+use pushmem::coordinator::sequential_comparison;
+
+fn main() {
+    harness::rule("Table VII: SRAM words, sequential vs pipelined");
+    println!(
+        "{:<14} {:>12} {:>12} {:>10}",
+        "app", "seq words", "final words", "reduction"
+    );
+    for p in apps::all() {
+        let s = sequential_comparison(&p).unwrap();
+        println!(
+            "{:<14} {:>12} {:>12} {:>10.2}",
+            s.name, s.seq_words, s.opt_words, s.memory_reduction
+        );
+    }
+    println!("\npaper shape: stencils 28-306x, mobilenet ~7x, resnet ~1x");
+}

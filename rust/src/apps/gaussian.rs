@@ -1,0 +1,66 @@
+//! Gaussian: 3x3 binomial blur (`[1 2 1; 2 4 2; 1 2 4]/16`-style kernel
+//! — we use the exact binomial `[1 2 1]⊗[1 2 1] / 16`), reduction fully
+//! unrolled: the canonical stencil pipeline.
+
+use crate::halide::{Expr, Func, HwSchedule, InputDecl, Program};
+
+/// Binomial weight at (ry, rx).
+fn w(ry: i64, rx: i64) -> i32 {
+    let v = |k: i64| [1, 2, 1][k as usize];
+    v(ry) * v(rx)
+}
+
+/// Build the app with a `tile x tile` output (input is `tile+2` square;
+/// tile 62 gives the paper's 64x64 input stream).
+pub fn build(tile: i64) -> Program {
+    let mut terms = Vec::new();
+    for ry in 0..3 {
+        for rx in 0..3 {
+            terms.push(Expr::mul(
+                Expr::c(w(ry, rx)),
+                Expr::ld(
+                    "input",
+                    vec![
+                        Expr::add(Expr::v("y"), Expr::c(ry as i32)),
+                        Expr::add(Expr::v("x"), Expr::c(rx as i32)),
+                    ],
+                ),
+            ));
+        }
+    }
+    let gauss = Func::pure_fn("gaussian", &["y", "x"], Expr::shr(Expr::sum(terms), 4));
+    Program {
+        name: "gaussian".into(),
+        inputs: vec![InputDecl { name: "input".into(), rank: 2 }],
+        funcs: vec![gauss],
+        schedule: HwSchedule::new([tile, tile]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::testutil::compile_and_validate;
+    use crate::sched::{classify, PipelineKind};
+
+    #[test]
+    fn end_to_end_bit_exact() {
+        let (lp, stats) = compile_and_validate(&build(14));
+        assert_eq!(lp.output, "gaussian");
+        assert!(stats.words_out >= 14 * 14);
+    }
+
+    #[test]
+    fn classified_as_stencil() {
+        let lp = crate::halide::lower::lower(&build(14)).unwrap();
+        assert_eq!(classify(&lp), PipelineKind::Stencil);
+    }
+
+    #[test]
+    fn pe_count_near_paper() {
+        // Table IV: gaussian uses 19 PEs on the CGRA.
+        let lp = crate::halide::lower::lower(&build(62)).unwrap();
+        let ops = lp.stages[0].alu_ops();
+        assert!((15..=24).contains(&ops), "alu ops {ops}");
+    }
+}

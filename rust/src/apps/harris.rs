@@ -1,0 +1,209 @@
+//! Harris corner detector: sobel gradients, gradient products, 3x3 box
+//! sums, and the corner response — the paper's schedule-exploration
+//! subject (Table V).
+
+use crate::halide::{BinOp, Expr, Func, HwSchedule, InputDecl, Program};
+
+/// The six schedules of Table V.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    /// sch1: nothing materialized — every intermediate recomputed.
+    RecomputeAll,
+    /// sch2: only the gradients are buffered.
+    RecomputeSome,
+    /// sch3: every intermediate buffered.
+    NoRecompute,
+    /// sch4: sch3 + unroll x by 2.
+    UnrollBy2,
+    /// sch5: sch3 with a 2x-per-side larger tile.
+    BiggerTile,
+    /// sch6: sch3 with the threshold stage on the host CPU.
+    LastOnHost,
+}
+
+fn sobel(name: &str, horizontal: bool) -> Func {
+    // 3x3 sobel over `input`, offsets 0..2 (kept non-negative so every
+    // domain min is 0).
+    let at = |dy: i64, dx: i64| {
+        Expr::ld(
+            "input",
+            vec![
+                Expr::add(Expr::v("y"), Expr::c(dy as i32)),
+                Expr::add(Expr::v("x"), Expr::c(dx as i32)),
+            ],
+        )
+    };
+    let body = if horizontal {
+        // d/dx: right column minus left column, middle row doubled.
+        Expr::sum(vec![
+            Expr::sub(at(0, 2), at(0, 0)),
+            Expr::mul(Expr::c(2), Expr::sub(at(1, 2), at(1, 0))),
+            Expr::sub(at(2, 2), at(2, 0)),
+        ])
+    } else {
+        Expr::sum(vec![
+            Expr::sub(at(2, 0), at(0, 0)),
+            Expr::mul(Expr::c(2), Expr::sub(at(2, 1), at(0, 1))),
+            Expr::sub(at(2, 2), at(0, 2)),
+        ])
+    };
+    Func::pure_fn(name, &["y", "x"], body)
+}
+
+fn product(name: &str, a: &str, b: &str) -> Func {
+    // Scaled gradient product (>>4 keeps 16-bit-ish ranges).
+    Func::pure_fn(
+        name,
+        &["y", "x"],
+        Expr::shr(
+            Expr::mul(
+                Expr::ld(a, vec![Expr::v("y"), Expr::v("x")]),
+                Expr::ld(b, vec![Expr::v("y"), Expr::v("x")]),
+            ),
+            4,
+        ),
+    )
+}
+
+fn box3(name: &str, src: &str) -> Func {
+    let mut terms = Vec::new();
+    for dy in 0..3 {
+        for dx in 0..3 {
+            terms.push(Expr::ld(
+                src,
+                vec![
+                    Expr::add(Expr::v("y"), Expr::c(dy)),
+                    Expr::add(Expr::v("x"), Expr::c(dx)),
+                ],
+            ));
+        }
+    }
+    Func::pure_fn(name, &["y", "x"], Expr::sum(terms))
+}
+
+/// Corner response threshold.
+pub const THRESHOLD: i32 = 1;
+
+pub fn build(tile: i64, sched: Schedule) -> Program {
+    let ld = |b: &str| Expr::ld(b, vec![Expr::v("y"), Expr::v("x")]);
+    // response = det(S) - (trace(S)^2 >> 4); S from the box sums.
+    let det = Expr::sub(
+        Expr::shr(Expr::mul(ld("sxx"), ld("syy")), 6),
+        Expr::shr(Expr::mul(ld("sxy"), ld("sxy")), 6),
+    );
+    let tr = Expr::add(ld("sxx"), ld("syy"));
+    let resp = Func::pure_fn(
+        "resp",
+        &["y", "x"],
+        Expr::sub(det, Expr::shr(Expr::mul(tr.clone(), tr), 10)),
+    );
+    let corners = Func::pure_fn(
+        "corners",
+        &["y", "x"],
+        Expr::select(
+            Expr::bin(BinOp::Gt, ld("resp"), Expr::c(THRESHOLD)),
+            ld("resp"),
+            Expr::c(0),
+        ),
+    );
+
+    let funcs = vec![
+        sobel("ix", true),
+        sobel("iy", false),
+        product("ixx", "ix", "ix"),
+        product("ixy", "ix", "iy"),
+        product("iyy", "iy", "iy"),
+        box3("sxx", "ixx"),
+        box3("sxy", "ixy"),
+        box3("syy", "iyy"),
+        resp,
+        corners,
+    ];
+
+    let tile = if sched == Schedule::BiggerTile { tile * 2 } else { tile };
+    let mut hs = HwSchedule::new([tile, tile]);
+    match sched {
+        Schedule::RecomputeAll => {}
+        Schedule::RecomputeSome => {
+            hs = hs.store_at("ix").store_at("iy");
+        }
+        Schedule::NoRecompute | Schedule::BiggerTile | Schedule::LastOnHost => {
+            for f in ["ix", "iy", "ixx", "ixy", "iyy", "sxx", "sxy", "syy", "resp"] {
+                hs = hs.store_at(f);
+            }
+        }
+        Schedule::UnrollBy2 => {
+            for f in ["ix", "iy", "ixx", "ixy", "iyy", "sxx", "sxy", "syy", "resp"] {
+                hs = hs.store_at(f);
+            }
+            for f in [
+                "ix", "iy", "ixx", "ixy", "iyy", "sxx", "sxy", "syy", "resp", "corners",
+            ] {
+                hs = hs.unroll(f, "x", 2);
+            }
+        }
+    }
+    if sched == Schedule::LastOnHost {
+        hs = hs.on_host("corners");
+    }
+
+    Program {
+        name: format!("harris_{sched:?}").to_lowercase(),
+        inputs: vec![InputDecl { name: "input".into(), rank: 2 }],
+        funcs,
+        schedule: hs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::testutil::compile_and_validate;
+    use crate::halide::lower::lower;
+
+    #[test]
+    fn no_recompute_end_to_end() {
+        compile_and_validate(&build(12, Schedule::NoRecompute));
+    }
+
+    #[test]
+    fn recompute_some_end_to_end() {
+        compile_and_validate(&build(12, Schedule::RecomputeSome));
+    }
+
+    #[test]
+    fn unrolled_end_to_end() {
+        compile_and_validate(&build(12, Schedule::UnrollBy2));
+    }
+
+    #[test]
+    fn recompute_tradeoff_shape() {
+        // Table V: recompute-all needs far more PEs but fewer memories
+        // than no-recompute.
+        let all = lower(&build(20, Schedule::RecomputeAll)).unwrap();
+        let none = lower(&build(20, Schedule::NoRecompute)).unwrap();
+        let pe_all: usize = all.stages.iter().map(|s| s.alu_ops()).sum();
+        let pe_none: usize = none.stages.iter().map(|s| s.alu_ops()).sum();
+        assert!(
+            pe_all > 5 * pe_none,
+            "recompute {pe_all} vs buffered {pe_none}"
+        );
+        assert!(all.stages.len() < none.stages.len());
+    }
+
+    #[test]
+    fn host_schedule_moves_last_stage() {
+        let lp = lower(&build(12, Schedule::LastOnHost)).unwrap();
+        assert_eq!(lp.output, "resp");
+        assert_eq!(lp.host_funcs.len(), 1);
+    }
+
+    #[test]
+    fn pe_count_near_paper_sch3() {
+        // Table V sch3: 83 PEs. Our decomposition lands in the same
+        // regime (tens, not hundreds).
+        let lp = lower(&build(58, Schedule::NoRecompute)).unwrap();
+        let ops: usize = lp.stages.iter().map(|s| s.alu_ops()).sum();
+        assert!((50..=110).contains(&ops), "ops {ops}");
+    }
+}

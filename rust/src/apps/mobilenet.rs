@@ -1,0 +1,99 @@
+//! MobileNet layer: depthwise separable convolution — a fully-unrolled
+//! depthwise 3x3 stage followed by a pointwise (1x1) channel reduction.
+//! The pointwise stage iterates pixels outermost, so it consumes
+//! depthwise rows shortly after they are produced: "structurally
+//! similar to a stencil pipeline" (§VI-D), which is why mobilenet keeps
+//! most of the pipelining speedup and memory reduction that resnet
+//! loses (Tables VI/VII).
+
+use crate::halide::{Expr, Func, HwSchedule, InputDecl, Program};
+
+#[derive(Clone, Copy, Debug)]
+pub struct Size {
+    pub channels: i64,
+    pub cout: i64,
+    pub height: i64,
+    pub width: i64,
+}
+
+impl Size {
+    pub fn paper() -> Size {
+        Size { channels: 8, cout: 16, height: 16, width: 16 }
+    }
+
+    pub fn small() -> Size {
+        Size { channels: 2, cout: 3, height: 5, width: 5 }
+    }
+}
+
+pub fn build(s: Size) -> Program {
+    // Depthwise 3x3, reduction unrolled in space (9 MACs per channel
+    // pixel): a pure stage.
+    let mut terms = Vec::new();
+    for ry in 0..3i32 {
+        for rx in 0..3i32 {
+            terms.push(Expr::mul(
+                Expr::ld(
+                    "ifmap",
+                    vec![
+                        Expr::v("c"),
+                        Expr::add(Expr::v("y"), Expr::c(ry)),
+                        Expr::add(Expr::v("x"), Expr::c(rx)),
+                    ],
+                ),
+                Expr::ld(
+                    "dw_weights",
+                    vec![Expr::v("c"), Expr::c(ry), Expr::c(rx)],
+                ),
+            ));
+        }
+    }
+    let dw = Func::pure_fn("dw", &["c", "y", "x"], Expr::shr(Expr::sum(terms), 4));
+
+    // Pointwise 1x1 across channels, pixels outermost so the reduction
+    // chases the depthwise stage row by row.
+    let pw = Func::reduce_fn(
+        "mobilenet",
+        &["y", "x", "co"],
+        Expr::c(0),
+        &[("ci", 0, s.channels)],
+        Expr::add(
+            Expr::ld("mobilenet", vec![Expr::v("y"), Expr::v("x"), Expr::v("co")]),
+            Expr::mul(
+                Expr::ld("dw", vec![Expr::v("ci"), Expr::v("y"), Expr::v("x")]),
+                Expr::ld("pw_weights", vec![Expr::v("co"), Expr::v("ci")]),
+            ),
+        ),
+    );
+
+    Program {
+        name: "mobilenet".into(),
+        inputs: vec![
+            InputDecl { name: "ifmap".into(), rank: 3 },
+            InputDecl { name: "dw_weights".into(), rank: 3 },
+            InputDecl { name: "pw_weights".into(), rank: 2 },
+        ],
+        funcs: vec![dw, pw],
+        schedule: HwSchedule::new([s.height, s.width, s.cout]).store_at("dw"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::testutil::compile_and_validate;
+    use crate::sched::{classify, PipelineKind};
+
+    #[test]
+    fn end_to_end_bit_exact() {
+        compile_and_validate(&build(Size::small()));
+    }
+
+    #[test]
+    fn dnn_policy_with_pure_dw() {
+        let lp = crate::halide::lower::lower(&build(Size::small())).unwrap();
+        assert_eq!(classify(&lp), PipelineKind::Dnn);
+        assert!(!lp.stages[0].is_reduction());
+        assert!(lp.stages[1].is_reduction());
+    }
+}

@@ -1,0 +1,146 @@
+//! The evaluation applications (Table III) plus the six Harris
+//! schedules of Table V, written in the embedded mini-Halide DSL.
+//!
+//! | app       | type    | structure here                                |
+//! |-----------|---------|-----------------------------------------------|
+//! | gaussian  | stencil | 3x3 binomial blur, fully unrolled             |
+//! | harris    | stencil | sobel grads, products, box sums, response     |
+//! | upsample  | stencil | 2x nearest-neighbour (strip-mined 4-D domain) |
+//! | unsharp   | stencil | in + 2*(in - blur), clamped                   |
+//! | camera    | stencil | demosaic + denoise + CCM + gamma (3 channels) |
+//! | resnet    | DNN     | multi-channel 3x3 conv layer, weight-major    |
+//! | mobilenet | DNN     | depthwise (unrolled) + pointwise (reduction)  |
+//!
+//! All arithmetic is i32 (the golden JAX models match bit-exactly);
+//! normalizations use shifts so every app is division-free.
+//!
+//! The default tiles keep input streams at 64x64 (the paper's Table
+//! V/VI cycle counts are one pass over a 64x64 input tile); `small`
+//! variants keep unit and integration tests fast.
+
+pub mod camera;
+pub mod gaussian;
+pub mod harris;
+pub mod mobilenet;
+pub mod resnet;
+pub mod unsharp;
+pub mod upsample;
+
+use crate::halide::Program;
+
+/// All seven evaluation applications at paper-scale tiles.
+pub fn all() -> Vec<Program> {
+    vec![
+        gaussian::build(62),
+        harris::build(60, harris::Schedule::NoRecompute),
+        upsample::build(64),
+        unsharp::build(62),
+        camera::build(60),
+        resnet::build(resnet::Size::paper()),
+        mobilenet::build(mobilenet::Size::paper()),
+    ]
+}
+
+/// Look up an app (or harris schedule variant) by CLI name. Returns the
+/// program plus the name of the golden HLO artifact that validates it.
+pub fn by_name(name: &str) -> Option<(Program, &'static str)> {
+    use harris::Schedule as HS;
+    Some(match name {
+        "gaussian" => (gaussian::build(62), "gaussian"),
+        "harris" | "harris_sch3" => (harris::build(60, HS::NoRecompute), "harris"),
+        "harris_sch1" => (harris::build(60, HS::RecomputeAll), "harris"),
+        "harris_sch2" => (harris::build(60, HS::RecomputeSome), "harris"),
+        "harris_sch4" => (harris::build(60, HS::UnrollBy2), "harris"),
+        "harris_sch5" => (harris::build(60, HS::BiggerTile), "harris"),
+        "harris_sch6" => (harris::build(60, HS::LastOnHost), "harris"),
+        "upsample" => (upsample::build(64), "upsample"),
+        "unsharp" => (unsharp::build(62), "unsharp"),
+        "camera" => (camera::build(60), "camera"),
+        "resnet" => (resnet::build(resnet::Size::paper()), "resnet"),
+        "mobilenet" => (mobilenet::build(mobilenet::Size::paper()), "mobilenet"),
+        _ => return None,
+    })
+}
+
+/// CLI names of everything in [`by_name`].
+pub const NAMES: &[&str] = &[
+    "gaussian",
+    "harris",
+    "harris_sch1",
+    "harris_sch2",
+    "harris_sch4",
+    "harris_sch5",
+    "harris_sch6",
+    "upsample",
+    "unsharp",
+    "camera",
+    "resnet",
+    "mobilenet",
+];
+
+/// Small variants for tests.
+pub fn all_small() -> Vec<Program> {
+    vec![
+        gaussian::build(14),
+        harris::build(12, harris::Schedule::NoRecompute),
+        upsample::build(12),
+        unsharp::build(12),
+        camera::build(12),
+        resnet::build(resnet::Size::small()),
+        mobilenet::build(mobilenet::Size::small()),
+    ]
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use std::collections::BTreeMap;
+
+    use crate::cgra::simulate;
+    use crate::extraction::extract;
+    use crate::halide::{lower, LoweredPipeline, Program};
+    use crate::mapping::map_design;
+    use crate::sched;
+    use crate::tensor::Tensor;
+
+    /// Compile an app end to end, simulate it cycle-accurately on
+    /// pseudo-random inputs, and compare bit-exactly with the
+    /// functional reference execution.
+    pub fn compile_and_validate(p: &Program) -> (LoweredPipeline, crate::cgra::SimStats) {
+        let lp = lower::lower(p).unwrap_or_else(|e| panic!("{}: lower: {e:#}", p.name));
+        let ps = sched::schedule(&lp).unwrap_or_else(|e| panic!("{}: sched: {e:#}", p.name));
+        let g = extract(&lp, &ps).unwrap_or_else(|e| panic!("{}: extract: {e:#}", p.name));
+        let d = map_design(&g).unwrap_or_else(|e| panic!("{}: map: {e:#}", p.name));
+
+        let mut ins: BTreeMap<String, Tensor> = BTreeMap::new();
+        for (i, name) in lp.inputs.iter().enumerate() {
+            let seed = 17 + 11 * i as i64;
+            ins.insert(
+                name.clone(),
+                Tensor::from_fn(lp.buffers[name].clone(), |pt| {
+                    let mut h = seed;
+                    for &v in pt {
+                        h = h.wrapping_mul(31).wrapping_add(v + 7);
+                    }
+                    (h.rem_euclid(253)) as i32
+                }),
+            );
+        }
+        let golden = lp
+            .execute(&ins)
+            .unwrap_or_else(|e| panic!("{}: reference exec: {e:#}", p.name));
+        let res = simulate(&d, &g, &ins)
+            .unwrap_or_else(|e| panic!("{}: simulate: {e:#}", p.name));
+        let out = &golden[&lp.output];
+        for pt in out.shape.points() {
+            // The simulator's output box may be halo-rounded; compare
+            // on the reference box.
+            assert_eq!(
+                res.output.get(&pt),
+                out.get(&pt),
+                "{}: mismatch at {pt:?}",
+                p.name
+            );
+        }
+        (lp, res.stats)
+    }
+}

@@ -1,0 +1,92 @@
+//! ResNet layer: multi-channel 3x3 convolution + ReLU, with the
+//! reduction loops *not* unrolled — the canonical DNN pipeline (§V-B).
+//! The output-channel-major loop order re-reads the whole ifmap per
+//! output channel, which is why resnet cannot fuse with its neighbours
+//! and sees no memory reduction from pipelining (Tables VI/VII).
+
+use crate::halide::{Expr, Func, HwSchedule, InputDecl, Program};
+
+#[derive(Clone, Copy, Debug)]
+pub struct Size {
+    pub cin: i64,
+    pub cout: i64,
+    pub height: i64,
+    pub width: i64,
+}
+
+impl Size {
+    /// Evaluation-scale layer (kept modest so the cycle-accurate
+    /// simulation of ~200k MACs stays fast).
+    pub fn paper() -> Size {
+        Size { cin: 8, cout: 16, height: 14, width: 14 }
+    }
+
+    pub fn small() -> Size {
+        Size { cin: 2, cout: 2, height: 5, width: 5 }
+    }
+}
+
+pub fn build(s: Size) -> Program {
+    let conv = Func::reduce_fn(
+        "conv",
+        &["co", "y", "x"],
+        Expr::c(0),
+        &[("ci", 0, s.cin), ("ry", 0, 3), ("rx", 0, 3)],
+        Expr::add(
+            Expr::ld("conv", vec![Expr::v("co"), Expr::v("y"), Expr::v("x")]),
+            Expr::mul(
+                Expr::ld(
+                    "ifmap",
+                    vec![
+                        Expr::v("ci"),
+                        Expr::add(Expr::v("y"), Expr::v("ry")),
+                        Expr::add(Expr::v("x"), Expr::v("rx")),
+                    ],
+                ),
+                Expr::ld(
+                    "weights",
+                    vec![Expr::v("co"), Expr::v("ci"), Expr::v("ry"), Expr::v("rx")],
+                ),
+            ),
+        ),
+    );
+    let relu = Func::pure_fn(
+        "resnet",
+        &["co", "y", "x"],
+        Expr::max(
+            Expr::shr(
+                Expr::ld("conv", vec![Expr::v("co"), Expr::v("y"), Expr::v("x")]),
+                4,
+            ),
+            Expr::c(0),
+        ),
+    );
+    Program {
+        name: "resnet".into(),
+        inputs: vec![
+            InputDecl { name: "ifmap".into(), rank: 3 },
+            InputDecl { name: "weights".into(), rank: 4 },
+        ],
+        funcs: vec![conv, relu],
+        schedule: HwSchedule::new([s.cout, s.height, s.width]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::testutil::compile_and_validate;
+    use crate::sched::{classify, PipelineKind};
+
+    #[test]
+    fn end_to_end_bit_exact() {
+        compile_and_validate(&build(Size::small()));
+    }
+
+    #[test]
+    fn dnn_policy() {
+        let lp = crate::halide::lower::lower(&build(Size::small())).unwrap();
+        assert_eq!(classify(&lp), PipelineKind::Dnn);
+        assert!(lp.stages[0].is_reduction());
+    }
+}

@@ -1,0 +1,81 @@
+//! Unsharp masking: sharpen by adding back twice the difference from a
+//! 3x3 gaussian blur, clamped to 8-bit range. The pointwise combine
+//! must see the *delayed* input (aligned with the blur), which is what
+//! gives unsharp its extra memories in Table IV.
+
+use crate::halide::{Expr, Func, HwSchedule, InputDecl, Program};
+
+fn w(ry: i64, rx: i64) -> i32 {
+    let v = |k: i64| [1, 2, 1][k as usize];
+    v(ry) * v(rx)
+}
+
+pub fn build(tile: i64) -> Program {
+    let mut terms = Vec::new();
+    for ry in 0..3 {
+        for rx in 0..3 {
+            terms.push(Expr::mul(
+                Expr::c(w(ry, rx)),
+                Expr::ld(
+                    "input",
+                    vec![
+                        Expr::add(Expr::v("y"), Expr::c(ry as i32)),
+                        Expr::add(Expr::v("x"), Expr::c(rx as i32)),
+                    ],
+                ),
+            ));
+        }
+    }
+    let blur = Func::pure_fn("blur", &["y", "x"], Expr::shr(Expr::sum(terms), 4));
+    // Center-aligned input pixel for the combine.
+    let center = Expr::ld(
+        "input",
+        vec![
+            Expr::add(Expr::v("y"), Expr::c(1)),
+            Expr::add(Expr::v("x"), Expr::c(1)),
+        ],
+    );
+    let sharp = Func::pure_fn(
+        "unsharp",
+        &["y", "x"],
+        Expr::clamp(
+            Expr::add(
+                center.clone(),
+                Expr::shr(
+                    Expr::mul(
+                        Expr::c(2),
+                        Expr::sub(center, Expr::ld("blur", vec![Expr::v("y"), Expr::v("x")])),
+                    ),
+                    0,
+                ),
+            ),
+            0,
+            255,
+        ),
+    );
+    Program {
+        name: "unsharp".into(),
+        inputs: vec![InputDecl { name: "input".into(), rank: 2 }],
+        funcs: vec![blur, sharp],
+        schedule: HwSchedule::new([tile, tile]).store_at("blur"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::testutil::compile_and_validate;
+    use crate::sched::{classify, PipelineKind};
+
+    #[test]
+    fn end_to_end_bit_exact() {
+        compile_and_validate(&build(12));
+    }
+
+    #[test]
+    fn stencil_policy() {
+        let lp = crate::halide::lower::lower(&build(12)).unwrap();
+        assert_eq!(classify(&lp), PipelineKind::Stencil);
+        assert_eq!(lp.stages.len(), 2);
+    }
+}

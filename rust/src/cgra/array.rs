@@ -1,0 +1,94 @@
+//! The island-style CGRA array (Fig 11): a 16x32 grid where one quarter
+//! of the tiles are memory tiles and the rest are processing elements.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TileKind {
+    Pe,
+    Mem,
+}
+
+/// Array geometry. The paper's array is 16 rows x 32 columns with every
+/// fourth column a MEM column (one quarter of the tiles are MEMs).
+#[derive(Clone, Copy, Debug)]
+pub struct CgraSpec {
+    pub rows: usize,
+    pub cols: usize,
+    /// Every `mem_column_period`-th column holds MEM tiles.
+    pub mem_column_period: usize,
+    /// Routing tracks per grid edge.
+    pub channel_width: usize,
+}
+
+impl Default for CgraSpec {
+    fn default() -> Self {
+        CgraSpec { rows: 16, cols: 32, mem_column_period: 4, channel_width: 10 }
+    }
+}
+
+impl CgraSpec {
+    pub fn kind(&self, _row: usize, col: usize) -> TileKind {
+        if col % self.mem_column_period == self.mem_column_period - 1 {
+            TileKind::Mem
+        } else {
+            TileKind::Pe
+        }
+    }
+
+    pub fn total_tiles(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn mem_tiles(&self) -> usize {
+        (0..self.cols)
+            .filter(|&c| self.kind(0, c) == TileKind::Mem)
+            .count()
+            * self.rows
+    }
+
+    pub fn pe_tiles(&self) -> usize {
+        self.total_tiles() - self.mem_tiles()
+    }
+
+    /// All positions of a given kind, row-major.
+    pub fn positions(&self, kind: TileKind) -> Vec<(usize, usize)> {
+        let mut v = Vec::new();
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                if self.kind(r, c) == kind {
+                    v.push((r, c));
+                }
+            }
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper() {
+        let s = CgraSpec::default();
+        assert_eq!(s.total_tiles(), 512);
+        // One fourth of the tiles are MEMs (Fig 11).
+        assert_eq!(s.mem_tiles(), 128);
+        assert_eq!(s.pe_tiles(), 384);
+    }
+
+    #[test]
+    fn mem_columns_periodic() {
+        let s = CgraSpec::default();
+        assert_eq!(s.kind(0, 3), TileKind::Mem);
+        assert_eq!(s.kind(5, 7), TileKind::Mem);
+        assert_eq!(s.kind(0, 0), TileKind::Pe);
+        assert_eq!(s.kind(15, 30), TileKind::Pe);
+    }
+
+    #[test]
+    fn positions_cover() {
+        let s = CgraSpec::default();
+        assert_eq!(s.positions(TileKind::Mem).len(), 128);
+        assert_eq!(s.positions(TileKind::Pe).len(), 384);
+    }
+}

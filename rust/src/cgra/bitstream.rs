@@ -1,0 +1,139 @@
+//! Configuration bitstream assembly: serialize every placed tile's
+//! configuration registers (ID extents, AG/SG deltas and offsets,
+//! moduli, PE opcodes/constants/delays) into the per-tile configuration
+//! words the CGRA loads at program time (§V-C "Finishing Steps").
+
+use crate::hw::affine_fn::AffineConfig;
+use crate::hw::{PeOp, PortCtlConfig};
+use crate::mapping::{BankConfig, MappedDesign, OperandSrc};
+
+/// One tile's configuration: address + payload words.
+#[derive(Clone, Debug)]
+pub struct TileConfig {
+    pub label: String,
+    pub words: Vec<u32>,
+}
+
+fn push_affine(words: &mut Vec<u32>, cfg: &AffineConfig, extents: &[i64]) {
+    // Fig 5c hardware holds the per-dim deltas + offset.
+    for d in cfg.deltas(extents) {
+        words.push(d as i32 as u32);
+    }
+    words.push(cfg.offset as i32 as u32);
+}
+
+fn push_ctl(words: &mut Vec<u32>, c: &PortCtlConfig) {
+    words.push(c.extents.len() as u32);
+    for &e in &c.extents {
+        words.push(e as u32);
+    }
+    push_affine(words, &c.addr, &c.extents);
+    push_affine(words, &c.sched, &c.extents);
+    words.push(c.modulus.unwrap_or(0) as u32);
+}
+
+/// Assemble the full bitstream for a mapped design.
+pub fn assemble(d: &MappedDesign) -> Vec<TileConfig> {
+    let mut tiles = Vec::new();
+    for (name, mb) in &d.buffers {
+        for (bi, bank) in mb.banks.iter().enumerate() {
+            let mut words = Vec::new();
+            match &bank.config {
+                BankConfig::Wide(cfg) => {
+                    words.push(0xB0); // tile type tag: wide PUB
+                    words.push(cfg.fetch_width as u32);
+                    words.push(cfg.capacity as u32);
+                    for c in cfg
+                        .serial_in
+                        .iter()
+                        .chain(&cfg.agg_flush)
+                        .chain(&cfg.sram_read)
+                        .chain(&cfg.tb_out)
+                    {
+                        push_ctl(&mut words, c);
+                    }
+                }
+                BankConfig::Dual(cfg) => {
+                    words.push(0xB1); // tile type tag: dual-port
+                    words.push(cfg.capacity as u32);
+                    for c in cfg.writes.iter().chain(&cfg.reads) {
+                        push_ctl(&mut words, c);
+                    }
+                }
+            }
+            tiles.push(TileConfig { label: format!("{name}[{bi}]"), words });
+        }
+    }
+    for (ki, k) in d.kernels.iter().enumerate() {
+        for (ni, n) in k.nodes.iter().enumerate() {
+            let mut words = vec![0xA0_u32]; // tile type tag: PE
+            words.push(match &n.cfg.op {
+                PeOp::Bin(op) => *op as u32,
+                PeOp::Un(op) => 0x40 + *op as u32,
+                PeOp::Select => 0x50,
+                PeOp::Acc { op, .. } => 0x60 + *op as u32,
+            });
+            if let PeOp::Acc { init, period, .. } = n.cfg.op {
+                words.push(init as u32);
+                words.push(period as u32);
+            }
+            for k in 0..3 {
+                words.push(n.cfg.consts[k].map(|v| v as u32).unwrap_or(0));
+                words.push(n.cfg.delays[k] as u32);
+                words.push(match &n.srcs[k] {
+                    OperandSrc::Load(l) => 0x100 + *l as u32,
+                    OperandSrc::Node(j) => 0x200 + *j as u32,
+                    OperandSrc::Iter(d) => 0x300 + *d as u32,
+                    OperandSrc::None => 0,
+                });
+            }
+            tiles.push(TileConfig { label: format!("pe{ki}.{ni}"), words });
+        }
+    }
+    tiles
+}
+
+/// Total bitstream size in bytes.
+pub fn size_bytes(tiles: &[TileConfig]) -> usize {
+    tiles.iter().map(|t| t.words.len() * 4).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::extraction::extract;
+    use crate::halide::func::{Func, InputDecl, Program};
+    use crate::halide::lower::lower;
+    use crate::halide::schedule::HwSchedule;
+    use crate::halide::Expr;
+    use crate::mapping::map_design;
+    use crate::sched;
+
+    #[test]
+    fn bitstream_covers_all_tiles() {
+        let a = Func::pure_fn(
+            "a",
+            &["y", "x"],
+            Expr::add(
+                Expr::ld("in", vec![Expr::v("y"), Expr::v("x")]),
+                Expr::ld("in", vec![Expr::add(Expr::v("y"), Expr::c(1)), Expr::v("x")]),
+            ),
+        );
+        let p = Program {
+            name: "p".into(),
+            inputs: vec![InputDecl { name: "in".into(), rank: 2 }],
+            funcs: vec![a],
+            schedule: HwSchedule::new([10, 10]),
+        };
+        let lp = lower(&p).unwrap();
+        let ps = sched::schedule(&lp).unwrap();
+        let g = extract(&lp, &ps).unwrap();
+        let d = map_design(&g).unwrap();
+        let bs = assemble(&d);
+        // One config per bank + one per PE node.
+        let expect = d.buffers.values().map(|b| b.banks.len()).sum::<usize>() + d.pe_count();
+        assert_eq!(bs.len(), expect);
+        assert!(size_bytes(&bs) > 0);
+        assert!(bs.iter().all(|t| !t.words.is_empty()));
+    }
+}

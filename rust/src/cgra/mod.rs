@@ -1,0 +1,27 @@
+//! The CGRA target (§VI, Fig 11/12).
+//!
+//! * [`array`] — the 16x32 island-style array: PE tiles with 16-bit ALUs
+//!   where an FPGA has LUTs, MEM tiles with physical unified buffers
+//!   where it has BRAMs (one quarter of the columns are MEMs).
+//! * [`place`] / [`route`] — greedy producer-proximity placement and
+//!   capacity-checked shortest-path routing (the "standard multi-stage
+//!   optimization with global PnR followed by detailed PnR" of §V-C,
+//!   simplified to one stage each).
+//! * [`bitstream`] — serialization of every tile's configuration
+//!   registers into the final configuration bitstream.
+//! * [`sim`] — the cycle-accurate functional simulator: ticks every
+//!   configured memory tile (controllers, AGG, wide SRAM, TB), shift
+//!   register chain and PE pipeline each cycle, streams the input tiles
+//!   in on their arrival schedules, and collects the drained output for
+//!   golden-model comparison.
+
+pub mod array;
+pub mod bitstream;
+pub mod place;
+pub mod route;
+pub mod sim;
+
+pub use array::{CgraSpec, TileKind};
+pub use place::{place, Placement};
+pub use route::{route, RoutingResult};
+pub use sim::{simulate, SimResult, SimStats};

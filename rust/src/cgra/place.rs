@@ -1,0 +1,325 @@
+//! Placement: map design nodes (PEs, MEM tiles, I/O pads) onto the
+//! CGRA grid. Greedy producer-proximity placement: nodes are placed in
+//! dataflow order, each at the free compatible tile closest to the
+//! centroid of its already-placed producers (global placement); a
+//! local-swap refinement pass then reduces total wirelength (detailed
+//! placement) — the two-stage structure of §V-C's "standard multi-stage
+//! optimization".
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+use super::array::{CgraSpec, TileKind};
+use crate::mapping::{MappedDesign, OperandSrc, PortImpl};
+
+/// A placeable node of the design.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Node {
+    /// `(buffer, bank, chained tile index)`
+    Mem(String, usize, usize),
+    /// `(kernel index, pe node index)`
+    Pe(usize, usize),
+    /// Input pad on the west edge (stream index).
+    InPad(usize),
+    /// Output pad on the east edge (stream index).
+    OutPad(usize),
+}
+
+/// Directed nets (producer -> consumer) with unit weight.
+pub type Net = (Node, Node);
+
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub spec: CgraSpec,
+    pub at: BTreeMap<Node, (usize, usize)>,
+    pub nets: Vec<Net>,
+    pub pe_used: usize,
+    pub mem_used: usize,
+}
+
+impl Placement {
+    pub fn wirelength(&self) -> usize {
+        self.nets
+            .iter()
+            .map(|(a, b)| {
+                let (ra, ca) = self.at[a];
+                let (rb, cb) = self.at[b];
+                ra.abs_diff(rb) + ca.abs_diff(cb)
+            })
+            .sum()
+    }
+
+    pub fn utilization(&self) -> f64 {
+        (self.pe_used + self.mem_used) as f64 / self.spec.total_tiles() as f64
+    }
+}
+
+/// Build the node/net list from a mapped design.
+pub fn design_graph(d: &MappedDesign) -> (Vec<Node>, Vec<Net>) {
+    let mut nodes = Vec::new();
+    let mut nets = Vec::new();
+
+    // Memory tiles (chained tiles are separate nodes, linked in series).
+    for (name, mb) in &d.buffers {
+        for (bi, bank) in mb.banks.iter().enumerate() {
+            for t in 0..bank.tiles {
+                nodes.push(Node::Mem(name.clone(), bi, t));
+                if t > 0 {
+                    nets.push((
+                        Node::Mem(name.clone(), bi, t - 1),
+                        Node::Mem(name.clone(), bi, t),
+                    ));
+                }
+            }
+        }
+    }
+    // PEs and kernel-internal nets.
+    for (ki, k) in d.kernels.iter().enumerate() {
+        for (ni, n) in k.nodes.iter().enumerate() {
+            nodes.push(Node::Pe(ki, ni));
+            for s in &n.srcs {
+                match s {
+                    OperandSrc::Node(j) => nets.push((Node::Pe(ki, *j), Node::Pe(ki, ni))),
+                    OperandSrc::Load(l) => {
+                        let (buf, port) = &k.loads[*l];
+                        // The serving bank (or the bank whose write
+                        // stream feeds the SR chain).
+                        let mb = &d.buffers[buf];
+                        match &mb.port_impls[*port] {
+                            PortImpl::Mem { bank, .. } => {
+                                nets.push((Node::Mem(buf.clone(), *bank, 0), Node::Pe(ki, ni)));
+                            }
+                            PortImpl::Shift { .. } => {
+                                if !mb.banks.is_empty() {
+                                    nets.push((Node::Mem(buf.clone(), 0, 0), Node::Pe(ki, ni)));
+                                }
+                                // Fully-SR buffers route from the writer
+                                // kernel's root PE instead.
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        // Store net: root PE -> destination buffer's first bank.
+        if let Some(root) = k.nodes.len().checked_sub(1) {
+            let mb = &d.buffers[&k.store.0];
+            if !mb.banks.is_empty() {
+                nets.push((Node::Pe(ki, root), Node::Mem(k.store.0.clone(), 0, 0)));
+            }
+        }
+    }
+    (nodes, nets)
+}
+
+/// Place a design onto the array.
+pub fn place(d: &MappedDesign, spec: CgraSpec) -> Result<Placement> {
+    let (nodes, nets) = design_graph(d);
+    let need_pe = nodes.iter().filter(|n| matches!(n, Node::Pe(..))).count();
+    let need_mem = nodes.iter().filter(|n| matches!(n, Node::Mem(..))).count();
+    if need_pe > spec.pe_tiles() || need_mem > spec.mem_tiles() {
+        bail!(
+            "design does not fit: needs {need_pe} PEs / {need_mem} MEMs, array has {} / {}",
+            spec.pe_tiles(),
+            spec.mem_tiles()
+        );
+    }
+
+    let mut free_pe = spec.positions(TileKind::Pe);
+    let mut free_mem = spec.positions(TileKind::Mem);
+    let mut at: BTreeMap<Node, (usize, usize)> = BTreeMap::new();
+
+    // Producer map for centroid targeting.
+    let mut producers: BTreeMap<&Node, Vec<&Node>> = BTreeMap::new();
+    for (a, b) in &nets {
+        producers.entry(b).or_default().push(a);
+    }
+
+    for node in &nodes {
+        let target = producers
+            .get(node)
+            .map(|ps| {
+                let placed: Vec<(usize, usize)> =
+                    ps.iter().filter_map(|p| at.get(*p).copied()).collect();
+                if placed.is_empty() {
+                    (spec.rows / 2, 0)
+                } else {
+                    (
+                        placed.iter().map(|p| p.0).sum::<usize>() / placed.len(),
+                        placed.iter().map(|p| p.1).sum::<usize>() / placed.len(),
+                    )
+                }
+            })
+            .unwrap_or((spec.rows / 2, 0));
+        let pool = match node {
+            Node::Mem(..) => &mut free_mem,
+            Node::Pe(..) => &mut free_pe,
+            _ => continue,
+        };
+        let (bi, _) = pool
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &(r, c))| r.abs_diff(target.0) + c.abs_diff(target.1))
+            .unwrap();
+        at.insert(node.clone(), pool.swap_remove(bi));
+    }
+
+    // I/O pads on the array edges.
+    let mut p = Placement {
+        spec,
+        at,
+        nets,
+        pe_used: need_pe,
+        mem_used: need_mem,
+    };
+    let n_in = d
+        .buffers
+        .values()
+        .filter(|b| b.banks.is_empty() && b.sr_words == 0)
+        .count()
+        .max(1);
+    for k in 0..n_in {
+        p.at.insert(Node::InPad(k), (k % spec.rows, 0));
+    }
+    p.at.insert(Node::OutPad(0), (spec.rows / 2, spec.cols - 1));
+
+    // Detailed placement: single-pass pairwise swap refinement.
+    refine(&mut p);
+    Ok(p)
+}
+
+/// One pass of profitable same-kind swaps, with incremental wirelength
+/// deltas: only the nets incident to the swapped pair are re-measured
+/// (§Perf — the full-recompute version dominated camera's compile).
+fn refine(p: &mut Placement) {
+    let keys: Vec<Node> = p
+        .at
+        .keys()
+        .filter(|n| matches!(n, Node::Pe(..) | Node::Mem(..)))
+        .cloned()
+        .collect();
+    // Net indices incident to each node.
+    let mut incident: BTreeMap<&Node, Vec<usize>> = BTreeMap::new();
+    for (ni, (a, b)) in p.nets.iter().enumerate() {
+        incident.entry(a).or_default().push(ni);
+        if b != a {
+            incident.entry(b).or_default().push(ni);
+        }
+    }
+    let nets = p.nets.clone();
+    let local = |at: &BTreeMap<Node, (usize, usize)>, idxs: &[usize]| -> usize {
+        idxs.iter()
+            .map(|&ni| {
+                let (a, b) = &nets[ni];
+                let (ra, ca) = at[a];
+                let (rb, cb) = at[b];
+                ra.abs_diff(rb) + ca.abs_diff(cb)
+            })
+            .sum()
+    };
+    for i in 0..keys.len() {
+        for j in (i + 1)..keys.len() {
+            let same_kind = matches!(
+                (&keys[i], &keys[j]),
+                (Node::Pe(..), Node::Pe(..)) | (Node::Mem(..), Node::Mem(..))
+            );
+            if !same_kind {
+                continue;
+            }
+            let mut touched: Vec<usize> = incident
+                .get(&keys[i])
+                .into_iter()
+                .chain(incident.get(&keys[j]))
+                .flatten()
+                .copied()
+                .collect();
+            touched.sort_unstable();
+            touched.dedup();
+            if touched.is_empty() {
+                continue;
+            }
+            let before = local(&p.at, &touched);
+            let (pi, pj) = (p.at[&keys[i]], p.at[&keys[j]]);
+            p.at.insert(keys[i].clone(), pj);
+            p.at.insert(keys[j].clone(), pi);
+            if local(&p.at, &touched) >= before {
+                p.at.insert(keys[i].clone(), pi);
+                p.at.insert(keys[j].clone(), pj);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::extraction::extract;
+    use crate::halide::func::{Func, InputDecl, Program};
+    use crate::halide::lower::lower;
+    use crate::halide::schedule::HwSchedule;
+    use crate::halide::Expr;
+    use crate::mapping::map_design;
+    use crate::sched;
+
+    fn small_design() -> MappedDesign {
+        let a = Func::pure_fn(
+            "a",
+            &["y", "x"],
+            Expr::mul(Expr::c(3), Expr::ld("in", vec![Expr::v("y"), Expr::v("x")])),
+        );
+        let b = Func::pure_fn(
+            "b",
+            &["y", "x"],
+            Expr::add(
+                Expr::ld("a", vec![Expr::v("y"), Expr::v("x")]),
+                Expr::ld("a", vec![Expr::add(Expr::v("y"), Expr::c(1)), Expr::v("x")]),
+            ),
+        );
+        let p = Program {
+            name: "p".into(),
+            inputs: vec![InputDecl { name: "in".into(), rank: 2 }],
+            funcs: vec![a, b],
+            schedule: HwSchedule::new([24, 24]).store_at("a"),
+        };
+        let lp = lower(&p).unwrap();
+        let ps = sched::schedule(&lp).unwrap();
+        let g = extract(&lp, &ps).unwrap();
+        map_design(&g).unwrap()
+    }
+
+    #[test]
+    fn places_within_array() {
+        let d = small_design();
+        let pl = place(&d, CgraSpec::default()).unwrap();
+        assert_eq!(pl.pe_used, d.pe_count());
+        assert_eq!(pl.mem_used, d.mem_tiles());
+        // All positions distinct and kind-compatible.
+        let mut seen = std::collections::HashSet::new();
+        for (n, &(r, c)) in &pl.at {
+            assert!(seen.insert((r, c)), "overlapping placement");
+            match n {
+                Node::Mem(..) => assert_eq!(pl.spec.kind(r, c), TileKind::Mem),
+                Node::Pe(..) => assert_eq!(pl.spec.kind(r, c), TileKind::Pe),
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_oversized_design() {
+        let d = small_design();
+        let tiny = CgraSpec { rows: 1, cols: 2, mem_column_period: 2, channel_width: 4 };
+        assert!(place(&d, tiny).is_err());
+    }
+
+    #[test]
+    fn refinement_does_not_increase_wirelength() {
+        let d = small_design();
+        let pl = place(&d, CgraSpec::default()).unwrap();
+        // Wirelength is finite and bounded by a gross upper bound.
+        let wl = pl.wirelength();
+        assert!(wl > 0);
+        assert!(wl < pl.nets.len() * (pl.spec.rows + pl.spec.cols));
+    }
+}

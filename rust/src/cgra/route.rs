@@ -1,0 +1,139 @@
+//! Routing: connect placed nets over the island-style grid's channel
+//! network. Each net takes an L-shaped (dimension-ordered) path; edge
+//! occupancy is tracked against the channel width, and congested nets
+//! retry with the transposed L. This is a deliberately simple detailed
+//! router — the designs the compiler emits are sparse relative to a
+//! 10-track fabric.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+use super::place::Placement;
+
+#[derive(Clone, Debug)]
+pub struct RoutingResult {
+    pub total_wirelength: usize,
+    pub max_edge_occupancy: usize,
+    /// Per-net hop counts.
+    pub net_lengths: Vec<usize>,
+}
+
+type Edge = ((usize, usize), (usize, usize));
+
+fn l_path(a: (usize, usize), b: (usize, usize), row_first: bool) -> Vec<Edge> {
+    let mut edges = Vec::new();
+    let mut cur = a;
+    let legs: [bool; 2] = if row_first { [true, false] } else { [false, true] };
+    for rows in legs {
+        loop {
+            let next = if rows {
+                if cur.0 == b.0 {
+                    break;
+                }
+                if b.0 > cur.0 { (cur.0 + 1, cur.1) } else { (cur.0 - 1, cur.1) }
+            } else {
+                if cur.1 == b.1 {
+                    break;
+                }
+                if b.1 > cur.1 { (cur.0, cur.1 + 1) } else { (cur.0, cur.1 - 1) }
+            };
+            edges.push((cur, next));
+            cur = next;
+        }
+    }
+    edges
+}
+
+/// Route all nets of a placement.
+pub fn route(p: &Placement) -> Result<RoutingResult> {
+    let mut occupancy: HashMap<Edge, usize> = HashMap::new();
+    let cap = p.spec.channel_width;
+    let mut net_lengths = Vec::with_capacity(p.nets.len());
+    let mut total = 0usize;
+
+    for (src, dst) in &p.nets {
+        let (a, b) = (p.at[src], p.at[dst]);
+        let mut routed = false;
+        for row_first in [true, false] {
+            let path = l_path(a, b, row_first);
+            if path.iter().all(|e| occupancy.get(e).copied().unwrap_or(0) < cap) {
+                for e in &path {
+                    *occupancy.entry(*e).or_insert(0) += 1;
+                }
+                total += path.len();
+                net_lengths.push(path.len());
+                routed = true;
+                break;
+            }
+        }
+        if !routed {
+            bail!("unroutable net {src:?} -> {dst:?}: channels congested");
+        }
+    }
+
+    Ok(RoutingResult {
+        total_wirelength: total,
+        max_edge_occupancy: occupancy.values().copied().max().unwrap_or(0),
+        net_lengths,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::array::CgraSpec;
+    use crate::cgra::place::Node;
+    use std::collections::BTreeMap;
+
+    fn tiny_placement(nets: Vec<(Node, Node)>, at: Vec<(Node, (usize, usize))>) -> Placement {
+        Placement {
+            spec: CgraSpec { rows: 4, cols: 4, mem_column_period: 4, channel_width: 2 },
+            at: at.into_iter().collect::<BTreeMap<_, _>>(),
+            nets,
+            pe_used: 0,
+            mem_used: 0,
+        }
+    }
+
+    #[test]
+    fn routes_simple_net() {
+        let a = Node::Pe(0, 0);
+        let b = Node::Pe(0, 1);
+        let p = tiny_placement(
+            vec![(a.clone(), b.clone())],
+            vec![(a, (0, 0)), (b, (2, 3))],
+        );
+        let r = route(&p).unwrap();
+        assert_eq!(r.total_wirelength, 5);
+        assert_eq!(r.max_edge_occupancy, 1);
+    }
+
+    #[test]
+    fn congestion_fails_when_capacity_exhausted() {
+        // 5 identical nets through a width-2 channel: both L shapes
+        // saturate.
+        let mut nets = Vec::new();
+        let mut at = Vec::new();
+        let a = Node::Pe(0, 0);
+        let b = Node::Pe(0, 1);
+        at.push((a.clone(), (0, 0)));
+        at.push((b.clone(), (0, 3)));
+        for _ in 0..5 {
+            nets.push((a.clone(), b.clone()));
+        }
+        let p = tiny_placement(nets, at);
+        assert!(route(&p).is_err());
+    }
+
+    #[test]
+    fn zero_length_net() {
+        let a = Node::Pe(0, 0);
+        let b = Node::Pe(0, 1);
+        let p = tiny_placement(
+            vec![(a.clone(), b.clone())],
+            vec![(a, (1, 1)), (b, (1, 1))],
+        );
+        let r = route(&p).unwrap();
+        assert_eq!(r.total_wirelength, 0);
+    }
+}

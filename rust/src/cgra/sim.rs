@@ -1,0 +1,591 @@
+//! Cycle-accurate functional simulation of a mapped design.
+//!
+//! Every configured hardware element is ticked every cycle: memory-tile
+//! controllers (ID/AG/SG recurrences), aggregators, the wide single-port
+//! SRAM, transpose buffers, dual-port fallback tiles, shift-register
+//! chains, and PE pipelines (with operand retiming delays and gated
+//! accumulators). Inputs stream in on their arrival schedules from the
+//! global buffer; the drained output stream is collected for bit-exact
+//! comparison against the golden model.
+//!
+//! Hot-loop layout (§Perf): all port identities are interned to dense
+//! wire indices at setup; input feeds, kernel store firings and output
+//! drains are pre-materialized as time-sorted event vectors walked with
+//! cursors — the per-cycle loop does no hashing and no allocation.
+
+use anyhow::{Context, Result};
+use std::collections::{BTreeMap, HashMap};
+
+use crate::hw::affine_fn::{AffineConfig, AffineHw, DeltaImpl};
+use crate::hw::id::IterationDomain;
+use crate::hw::memtile::{DelayLine, DpMemTile, MemTile};
+use crate::hw::{PeOp, PeTile};
+use crate::mapping::{BankConfig, MappedDesign, OperandSrc, PortImpl, SrSource};
+use crate::poly::CycleSchedule;
+use crate::tensor::Tensor;
+use crate::ub::UbGraph;
+
+/// Aggregate hardware activity, consumed by the energy model.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimStats {
+    pub cycles: i64,
+    pub sram_reads: u64,
+    pub sram_writes: u64,
+    pub pe_ops: u64,
+    pub sr_shifts: u64,
+    pub words_in: u64,
+    pub words_out: u64,
+}
+
+pub struct SimResult {
+    /// Collected output over the output buffer's data box.
+    pub output: Tensor,
+    pub stats: SimStats,
+}
+
+enum SimBank {
+    Wide(MemTile),
+    Dual(DpMemTile),
+}
+
+impl SimBank {
+    fn tick(&mut self, cycle: i64, inputs: &[Option<i64>]) -> Result<Vec<Option<i64>>> {
+        match self {
+            SimBank::Wide(t) => t.tick(cycle, inputs),
+            SimBank::Dual(t) => t.tick(cycle, inputs),
+        }
+    }
+}
+
+/// A schedule-gated iteration tracker (the kernel's loop counters).
+struct GatedIter {
+    id: IterationDomain,
+    sg: DeltaImpl,
+    mins: Vec<i64>,
+    latched: Vec<i64>,
+    done: bool,
+}
+
+impl GatedIter {
+    fn new(domain: &crate::poly::BoxSet, sched: &CycleSchedule) -> Self {
+        let extents: Vec<i64> = domain.dims.iter().map(|d| d.extent).collect();
+        let mins: Vec<i64> = domain.dims.iter().map(|d| d.min).collect();
+        // Rebase the schedule onto zero-based counters.
+        let delta: i64 = sched.expr.coeffs.iter().zip(&mins).map(|(c, m)| c * m).sum();
+        let cfg = AffineConfig::from_affine(&sched.expr.shift(delta));
+        let sg = DeltaImpl::new(&cfg, &extents);
+        GatedIter {
+            id: IterationDomain::new(extents),
+            sg,
+            latched: mins.clone(),
+            mins,
+            done: false,
+        }
+    }
+
+    /// Returns true when the schedule fires this cycle (latching the
+    /// current point).
+    fn tick(&mut self, cycle: i64) -> bool {
+        if self.done || cycle != self.sg.value() {
+            return false;
+        }
+        for (k, v) in self.id.point().iter().enumerate() {
+            self.latched[k] = self.mins[k] + v;
+        }
+        match self.id.step() {
+            Some((inc, clr)) => self.sg.step(&inc, &clr),
+            None => self.done = true,
+        }
+        true
+    }
+}
+
+struct SimKernel {
+    pes: Vec<PeTile>,
+    iter: GatedIter,
+    /// Accumulator gate (root fires depth-1 cycles after issue).
+    acc_gate: Option<GatedIter>,
+    /// Interned wire index per load.
+    load_wires: Vec<usize>,
+    node_snap: Vec<i32>,
+}
+
+/// A time-sorted event stream walked with a cursor.
+struct EventStream<T> {
+    events: Vec<(i64, T)>,
+    cursor: usize,
+}
+
+impl<T> EventStream<T> {
+    fn new(mut events: Vec<(i64, T)>) -> Self {
+        events.sort_by_key(|e| e.0);
+        EventStream { events, cursor: 0 }
+    }
+
+    /// Yield all events at exactly `cycle` (cursor order).
+    fn take(&mut self, cycle: i64, mut f: impl FnMut(&T)) {
+        while let Some((t, v)) = self.events.get(self.cursor) {
+            if *t != cycle {
+                debug_assert!(*t > cycle, "event stream fell behind");
+                break;
+            }
+            f(v);
+            self.cursor += 1;
+        }
+    }
+}
+
+/// Run the design on concrete inputs.
+pub fn simulate(
+    design: &MappedDesign,
+    graph: &UbGraph,
+    inputs: &BTreeMap<String, Tensor>,
+) -> Result<SimResult> {
+    let mut stats = SimStats::default();
+
+    // --- Intern wire and write-slot identities ----------------------
+    // Wire id per (buffer, output port); slot id per (buffer, in port).
+    let mut wire_of: HashMap<(&str, usize), usize> = HashMap::new();
+    let mut slot_of: HashMap<(&str, usize), usize> = HashMap::new();
+    for (name, ub) in &graph.buffers {
+        for o in 0..ub.outputs.len() {
+            let id = wire_of.len();
+            wire_of.insert((name.as_str(), o), id);
+        }
+        for i in 0..ub.inputs.len() {
+            let id = slot_of.len();
+            slot_of.insert((name.as_str(), i), id);
+        }
+    }
+    let n_wires = wire_of.len();
+    let n_slots = slot_of.len();
+
+    // Epoch-stamped value arrays: "set this cycle" without clearing.
+    let mut wire_val = vec![0i64; n_wires];
+    let mut wire_ep = vec![u32::MAX; n_wires];
+    let mut slot_val = vec![0i64; n_slots];
+    let mut slot_ep = vec![u32::MAX; n_slots];
+
+    // --- Precompute event feeds as cursor streams --------------------
+    // Input-stream words.
+    let mut feeds: Vec<EventStream<(usize, i64)>> = Vec::new();
+    for ep in &graph.input_streams {
+        let t = inputs
+            .get(&ep.buffer)
+            .with_context(|| format!("missing input {}", ep.buffer))?;
+        let port = &graph.buffers[&ep.buffer].inputs[ep.port];
+        let slot = slot_of[&(ep.buffer.as_str(), ep.port)];
+        let ev: Vec<(i64, (usize, i64))> = port
+            .events()
+            .into_iter()
+            .map(|(cycle, coords)| (cycle, (slot, t.get(&coords) as i64)))
+            .collect();
+        stats.words_in += ev.len() as u64;
+        feeds.push(EventStream::new(ev));
+    }
+    // Kernel store firings: (slot, kernel index).
+    let mut store_fires: Vec<EventStream<(usize, usize)>> = Vec::new();
+    for (ki, k) in design.kernels.iter().enumerate() {
+        let port = &graph.buffers[&k.store.0].inputs[k.store.1];
+        let slot = slot_of[&(k.store.0.as_str(), k.store.1)];
+        let ev: Vec<(i64, (usize, usize))> =
+            port.events().into_iter().map(|(c, _)| (c, (slot, ki))).collect();
+        store_fires.push(EventStream::new(ev));
+    }
+    // Output drains: (wire, flat output offset).
+    let out_buf = &graph.output_streams[0].buffer;
+    let mut output = Tensor::zeros(graph.buffers[out_buf].data_box.clone());
+    let mut drains: Vec<EventStream<(usize, Vec<i64>)>> = Vec::new();
+    let mut expected_out = 0u64;
+    for ep in &graph.output_streams {
+        let port = &graph.buffers[&ep.buffer].outputs[ep.port];
+        let wire = wire_of[&(ep.buffer.as_str(), ep.port)];
+        let ev: Vec<(i64, (usize, Vec<i64>))> = port
+            .events()
+            .into_iter()
+            .map(|(c, coords)| (c, (wire, coords)))
+            .collect();
+        expected_out += ev.len() as u64;
+        drains.push(EventStream::new(ev));
+    }
+
+    // --- Instantiate hardware --------------------------------------
+    struct BankInst {
+        bank: SimBank,
+        in_slots: Vec<usize>,
+        out_wires: Vec<usize>,
+        ins: Vec<Option<i64>>,
+    }
+    let mut banks: Vec<BankInst> = Vec::new();
+    struct TapInst {
+        wire: usize,
+        src_wire: Option<usize>, // None => source is a write slot
+        src_slot: usize,
+        line: DelayLine,
+    }
+    let mut taps: Vec<TapInst> = Vec::new();
+    for (name, mb) in &design.buffers {
+        for bank in mb.banks.iter() {
+            banks.push(BankInst {
+                bank: match &bank.config {
+                    BankConfig::Wide(cfg) => SimBank::Wide(MemTile::new(cfg.clone())),
+                    BankConfig::Dual(cfg) => SimBank::Dual(DpMemTile::new(cfg.clone())),
+                },
+                in_slots: bank
+                    .in_ports
+                    .iter()
+                    .map(|&i| slot_of[&(name.as_str(), i)])
+                    .collect(),
+                out_wires: bank
+                    .out_ports
+                    .iter()
+                    .map(|&o| wire_of[&(name.as_str(), o)])
+                    .collect(),
+                ins: vec![None; bank.in_ports.len()],
+            });
+        }
+        for (o, imp) in mb.port_impls.iter().enumerate() {
+            if let PortImpl::Shift { src, depth } = imp {
+                let (src_wire, src_slot) = match src {
+                    SrSource::Input(i) => (None, slot_of[&(name.as_str(), *i)]),
+                    SrSource::Output(j) => (Some(wire_of[&(name.as_str(), *j)]), 0),
+                };
+                taps.push(TapInst {
+                    wire: wire_of[&(name.as_str(), o)],
+                    src_wire,
+                    src_slot,
+                    line: DelayLine::new(*depth as usize),
+                });
+            }
+        }
+    }
+    // Topologically order taps: Output-sourced after their source tap
+    // (or any bank wire, which is resolved before taps anyway).
+    {
+        let tap_wires: std::collections::HashSet<usize> = taps.iter().map(|t| t.wire).collect();
+        let mut placed: std::collections::HashSet<usize> = std::collections::HashSet::new();
+        let mut order: Vec<TapInst> = Vec::with_capacity(taps.len());
+        let mut remaining = taps;
+        while !remaining.is_empty() {
+            let before = remaining.len();
+            let (ready, rest): (Vec<TapInst>, Vec<TapInst>) =
+                remaining.into_iter().partition(|t| match t.src_wire {
+                    Some(w) => !tap_wires.contains(&w) || placed.contains(&w),
+                    None => true,
+                });
+            for t in &ready {
+                placed.insert(t.wire);
+            }
+            order.extend(ready);
+            remaining = rest;
+            anyhow::ensure!(remaining.len() < before, "cyclic shift-register chain");
+        }
+        taps = order;
+    }
+
+    let mut kernels: Vec<SimKernel> = design
+        .kernels
+        .iter()
+        .map(|k| {
+            let acc_gate = k.nodes.last().and_then(|n| match n.cfg.op {
+                PeOp::Acc { .. } => Some(GatedIter::new(
+                    &k.domain,
+                    &k.schedule.delayed(k.latency - 1),
+                )),
+                _ => None,
+            });
+            SimKernel {
+                pes: k.nodes.iter().map(|n| PeTile::new(n.cfg.clone())).collect(),
+                iter: GatedIter::new(&k.domain, &k.schedule),
+                acc_gate,
+                load_wires: k
+                    .loads
+                    .iter()
+                    .map(|(b, p)| wire_of[&(b.as_str(), *p)])
+                    .collect(),
+                node_snap: vec![0; k.nodes.len()],
+            }
+        })
+        .collect();
+
+    let mut collected = 0u64;
+    let horizon = graph.completion + 8;
+
+    // --- The clock loop ---------------------------------------------
+    for cycle in 0..horizon {
+        let ep = cycle as u32;
+
+        // 1. Buffer write-slot words this cycle: input feeds, then
+        // kernel root registers (wire values for this cycle).
+        for f in feeds.iter_mut() {
+            f.take(cycle, |&(slot, w)| {
+                slot_val[slot] = w;
+                slot_ep[slot] = ep;
+            });
+        }
+        for (ki, sf) in store_fires.iter_mut().enumerate() {
+            let root = kernels[ki].pes.last().map(|p| p.output()).unwrap_or(0);
+            sf.take(cycle, |&(slot, _)| {
+                slot_val[slot] = root as i64;
+                slot_ep[slot] = ep;
+            });
+        }
+
+        // 2. Tick memory banks.
+        for b in banks.iter_mut() {
+            for (k, &slot) in b.in_slots.iter().enumerate() {
+                b.ins[k] = (slot_ep[slot] == ep).then(|| slot_val[slot]);
+            }
+            let outs = b
+                .bank
+                .tick(cycle, &b.ins)
+                .with_context(|| format!("bank at cycle {cycle}"))?;
+            for (k, w) in outs.into_iter().enumerate() {
+                if let Some(v) = w {
+                    let wire = b.out_wires[k];
+                    wire_val[wire] = v;
+                    wire_ep[wire] = ep;
+                }
+            }
+        }
+
+        // 3. Advance shift-register chains (topological order).
+        for t in taps.iter_mut() {
+            let feed_val = match t.src_wire {
+                Some(w) => {
+                    if wire_ep[w] == ep {
+                        wire_val[w]
+                    } else {
+                        0
+                    }
+                }
+                None => {
+                    if slot_ep[t.src_slot] == ep {
+                        slot_val[t.src_slot]
+                    } else {
+                        0
+                    }
+                }
+            };
+            let v = t.line.push(feed_val);
+            stats.sr_shifts += 1;
+            wire_val[t.wire] = v;
+            wire_ep[t.wire] = ep;
+        }
+
+        // 4. Tick kernels (iteration latches, then registered PEs).
+        for (ki, sk) in kernels.iter_mut().enumerate() {
+            sk.iter.tick(cycle);
+            let acc_fire = match &mut sk.acc_gate {
+                Some(g) => g.tick(cycle),
+                None => true,
+            };
+            let mk = &design.kernels[ki];
+            for (s, p) in sk.node_snap.iter_mut().zip(&sk.pes) {
+                *s = p.output();
+            }
+            for (ni, node) in mk.nodes.iter().enumerate() {
+                let mut ops = [0i32; 3];
+                for (s, slot) in node.srcs.iter().zip(ops.iter_mut()) {
+                    *slot = match s {
+                        OperandSrc::Load(l) => {
+                            let w = sk.load_wires[*l];
+                            if wire_ep[w] == ep {
+                                wire_val[w] as i32
+                            } else {
+                                0
+                            }
+                        }
+                        OperandSrc::Node(j) => sk.node_snap[*j],
+                        OperandSrc::Iter(d) => sk.iter.latched[*d] as i32,
+                        OperandSrc::None => 0,
+                    };
+                }
+                let is_acc = matches!(node.cfg.op, PeOp::Acc { .. });
+                if !is_acc || acc_fire {
+                    sk.pes[ni].tick(ops);
+                    stats.pe_ops += 1;
+                }
+            }
+        }
+
+        // 5. Collect drained output words.
+        for d in drains.iter_mut() {
+            let mut err = None;
+            d.take(cycle, |(wire, coords)| {
+                if wire_ep[*wire] != ep {
+                    err = Some(*wire);
+                    return;
+                }
+                output.set(coords, wire_val[*wire] as i32);
+                collected += 1;
+            });
+            if let Some(w) = err {
+                anyhow::bail!("drain wire {w} silent at cycle {cycle}");
+            }
+        }
+    }
+
+    anyhow::ensure!(
+        collected == expected_out,
+        "collected {collected}/{expected_out} output words"
+    );
+    stats.cycles = graph.completion;
+    stats.words_out = collected;
+    for b in &banks {
+        if let SimBank::Wide(t) = &b.bank {
+            stats.sram_reads += t.sram.stats.reads;
+            stats.sram_writes += t.sram.stats.writes;
+        }
+    }
+
+    Ok(SimResult { output, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::extraction::extract;
+    use crate::halide::func::{Func, InputDecl, Program};
+    use crate::halide::lower::lower;
+    use crate::halide::schedule::HwSchedule;
+    use crate::halide::{Expr, LoweredPipeline};
+    use crate::mapping::map_design;
+    use crate::sched;
+
+    fn compile(p: &Program) -> (LoweredPipeline, UbGraph, MappedDesign) {
+        let lp = lower(p).unwrap();
+        let ps = sched::schedule(&lp).unwrap();
+        let g = extract(&lp, &ps).unwrap();
+        let d = map_design(&g).unwrap();
+        (lp, g, d)
+    }
+
+    fn brighten_blur(tile: i64) -> Program {
+        let brighten = Func::pure_fn(
+            "brighten",
+            &["y", "x"],
+            Expr::mul(Expr::c(2), Expr::ld("input", vec![Expr::v("y"), Expr::v("x")])),
+        );
+        let blur = Func::pure_fn(
+            "blur",
+            &["y", "x"],
+            Expr::shr(
+                Expr::sum(vec![
+                    Expr::ld("brighten", vec![Expr::v("y"), Expr::v("x")]),
+                    Expr::ld(
+                        "brighten",
+                        vec![Expr::v("y"), Expr::add(Expr::v("x"), Expr::c(1))],
+                    ),
+                    Expr::ld(
+                        "brighten",
+                        vec![Expr::add(Expr::v("y"), Expr::c(1)), Expr::v("x")],
+                    ),
+                    Expr::ld(
+                        "brighten",
+                        vec![
+                            Expr::add(Expr::v("y"), Expr::c(1)),
+                            Expr::add(Expr::v("x"), Expr::c(1)),
+                        ],
+                    ),
+                ]),
+                2,
+            ),
+        );
+        Program {
+            name: "bb".into(),
+            inputs: vec![InputDecl { name: "input".into(), rank: 2 }],
+            funcs: vec![brighten, blur],
+            schedule: HwSchedule::new([tile, tile]).store_at("brighten"),
+        }
+    }
+
+    #[test]
+    fn brighten_blur_simulates_bit_exact() {
+        let p = brighten_blur(15);
+        let (lp, g, d) = compile(&p);
+        let input = Tensor::from_fn(lp.buffers["input"].clone(), |pt| {
+            ((pt[0] * 31 + pt[1] * 7) % 251) as i32
+        });
+        let mut ins = BTreeMap::new();
+        ins.insert("input".to_string(), input.clone());
+        // Golden: functional reference execution.
+        let golden = &lp.execute(&ins).unwrap()["blur"];
+        // Hardware: cycle-accurate simulation.
+        let res = simulate(&d, &g, &ins).unwrap();
+        for y in 0..15 {
+            for x in 0..15 {
+                assert_eq!(
+                    res.output.get(&[y, x]),
+                    golden.get(&[y, x]),
+                    "pixel ({y},{x})"
+                );
+            }
+        }
+        assert!(res.stats.pe_ops > 0);
+        assert!(res.stats.words_out >= 15 * 15);
+    }
+
+    #[test]
+    fn reduction_pipeline_simulates_bit_exact() {
+        // Non-unrolled 3x3 box filter: DNN policy, accumulator PE,
+        // dual-port ifmap fallback.
+        let conv = Func::reduce_fn(
+            "conv",
+            &["y", "x"],
+            Expr::c(0),
+            &[("ry", 0, 3), ("rx", 0, 3)],
+            Expr::add(
+                Expr::ld("conv", vec![Expr::v("y"), Expr::v("x")]),
+                Expr::ld(
+                    "in",
+                    vec![
+                        Expr::add(Expr::v("y"), Expr::v("ry")),
+                        Expr::add(Expr::v("x"), Expr::v("rx")),
+                    ],
+                ),
+            ),
+        );
+        let p = Program {
+            name: "boxf".into(),
+            inputs: vec![InputDecl { name: "in".into(), rank: 2 }],
+            funcs: vec![conv],
+            schedule: HwSchedule::new([6, 6]),
+        };
+        let (lp, g, d) = compile(&p);
+        let input = Tensor::from_fn(lp.buffers["in"].clone(), |pt| {
+            (pt[0] * 10 + pt[1]) as i32
+        });
+        let mut ins = BTreeMap::new();
+        ins.insert("in".to_string(), input.clone());
+        let golden = &lp.execute(&ins).unwrap()["conv"];
+        let res = simulate(&d, &g, &ins).unwrap();
+        for y in 0..6 {
+            for x in 0..6 {
+                assert_eq!(res.output.get(&[y, x]), golden.get(&[y, x]), "({y},{x})");
+            }
+        }
+    }
+
+    #[test]
+    fn unrolled_pipeline_simulates_bit_exact() {
+        let mut p = brighten_blur(14);
+        p.schedule = HwSchedule::new([14, 14])
+            .store_at("brighten")
+            .unroll("brighten", "x", 2)
+            .unroll("blur", "x", 2);
+        let (lp, g, d) = compile(&p);
+        let input = Tensor::from_fn(lp.buffers["input"].clone(), |pt| {
+            ((pt[0] * 13 + pt[1] * 3) % 199) as i32
+        });
+        let mut ins = BTreeMap::new();
+        ins.insert("input".to_string(), input.clone());
+        let golden = &lp.execute(&ins).unwrap()["blur"];
+        let res = simulate(&d, &g, &ins).unwrap();
+        for y in 0..14 {
+            for x in 0..14 {
+                assert_eq!(res.output.get(&[y, x]), golden.get(&[y, x]), "({y},{x})");
+            }
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! Compilation driver: run the full pipeline of Fig 1 and bundle every
+//! intermediate for inspection, simulation, and reporting.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::cgra::{place, route, CgraSpec, Placement, RoutingResult};
+use crate::extraction::extract;
+use crate::halide::{lower, LoweredPipeline, Program};
+use crate::mapping::{map_design, MappedDesign};
+use crate::sched::{self, PipelineSchedule};
+use crate::tensor::Tensor;
+use crate::ub::UbGraph;
+
+/// Everything the compiler produced for one program.
+pub struct Compiled {
+    pub program: Program,
+    pub lp: LoweredPipeline,
+    pub schedule: PipelineSchedule,
+    pub graph: UbGraph,
+    pub design: MappedDesign,
+    /// `None` when the design does not fit the array (the paper's
+    /// camera footnote) — simulation still works; placement-derived
+    /// numbers are reported as unavailable.
+    pub placement: Option<Placement>,
+    pub routing: Option<RoutingResult>,
+}
+
+impl Compiled {
+    pub fn fits(&self) -> bool {
+        self.placement.is_some()
+    }
+}
+
+/// Full compile: lower → schedule → extract → map → place & route.
+pub fn compile(program: &Program) -> Result<Compiled> {
+    let lp = lower::lower(program).context("lowering")?;
+    let schedule = sched::schedule(&lp).context("scheduling")?;
+    let graph = extract(&lp, &schedule).context("buffer extraction")?;
+    let design = map_design(&graph).context("buffer mapping")?;
+    let placement = place(&design, CgraSpec::default()).ok();
+    let routing = placement.as_ref().and_then(|p| route(p).ok());
+    Ok(Compiled {
+        program: program.clone(),
+        lp,
+        schedule,
+        graph,
+        design,
+        placement,
+        routing,
+    })
+}
+
+/// Deterministic pseudo-random inputs (the same stream the tests use):
+/// identical values feed the CGRA simulator and the XLA golden model.
+pub fn gen_inputs(lp: &LoweredPipeline) -> BTreeMap<String, Tensor> {
+    let mut ins = BTreeMap::new();
+    for (i, name) in lp.inputs.iter().enumerate() {
+        let seed = 17 + 11 * i as i64;
+        ins.insert(
+            name.clone(),
+            Tensor::from_fn(lp.buffers[name].clone(), |pt| {
+                let mut h = seed;
+                for &v in pt {
+                    h = h.wrapping_mul(31).wrapping_add(v + 7);
+                }
+                (h.rem_euclid(253)) as i32
+            }),
+        );
+    }
+    ins
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+
+    #[test]
+    fn compile_every_registered_app_small() {
+        for p in apps::all_small() {
+            let c = compile(&p).unwrap_or_else(|e| panic!("{}: {e:#}", p.name));
+            assert!(c.design.pe_count() > 0, "{}", p.name);
+            assert!(c.fits(), "{} should fit at small scale", p.name);
+        }
+    }
+
+    #[test]
+    fn inputs_are_deterministic() {
+        let p = apps::gaussian::build(14);
+        let lp = lower::lower(&p).unwrap();
+        let a = gen_inputs(&lp);
+        let b = gen_inputs(&lp);
+        assert_eq!(a["input"].data, b["input"].data);
+    }
+}

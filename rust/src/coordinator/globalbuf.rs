@@ -1,0 +1,96 @@
+//! The global buffer (Fig 12): a multi-banked, double-buffered staging
+//! memory between main memory and the CGRA. It gives the array a
+//! deterministic access latency — tiles are fully staged before the
+//! statically-scheduled computation starts, and the *next* tile loads
+//! while the current one computes. If compute finishes first, the whole
+//! CGRA stalls until the tile is staged (coarse-grained stalling, §VI).
+
+/// Double-buffered tile streaming model.
+#[derive(Clone, Copy, Debug)]
+pub struct GlobalBuffer {
+    /// Words per cycle from main memory into the global buffer.
+    pub fill_bandwidth: f64,
+    /// Words per cycle from the global buffer back to main memory.
+    pub drain_bandwidth: f64,
+}
+
+impl Default for GlobalBuffer {
+    fn default() -> Self {
+        // A 64-bit DDR-ish channel at the CGRA clock: 4 16-bit words
+        // per cycle each way.
+        GlobalBuffer { fill_bandwidth: 4.0, drain_bandwidth: 4.0 }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct StreamPlan {
+    /// Cycles to stage one input tile.
+    pub fill_cycles: i64,
+    /// Cycles to drain one output tile.
+    pub drain_cycles: i64,
+    /// Steady-state interval between tiles (the larger of compute II
+    /// and staging time).
+    pub interval: i64,
+    /// Total cycles for `tiles` tiles.
+    pub total_cycles: i64,
+    /// Fraction of intervals in which the CGRA is compute-bound
+    /// (1.0 = never stalls on memory).
+    pub compute_bound: bool,
+}
+
+impl GlobalBuffer {
+    /// Plan streaming `tiles` tiles through a kernel with the given
+    /// per-tile word counts and schedule.
+    pub fn plan(
+        &self,
+        input_words: i64,
+        output_words: i64,
+        completion: i64,
+        coarse_ii: i64,
+        tiles: i64,
+    ) -> StreamPlan {
+        let fill = (input_words as f64 / self.fill_bandwidth).ceil() as i64;
+        let drain = (output_words as f64 / self.drain_bandwidth).ceil() as i64;
+        let interval = coarse_ii.max(fill).max(drain);
+        let total = fill + completion + (tiles - 1).max(0) * interval + drain;
+        StreamPlan {
+            fill_cycles: fill,
+            drain_cycles: drain,
+            interval,
+            total_cycles: total,
+            compute_bound: coarse_ii >= fill.max(drain),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_bound_stencil() {
+        // 64x64 input tile (4096 words) at 4 words/cycle = 1024 fill
+        // cycles; a 4102-cycle stencil is compute-bound.
+        let gb = GlobalBuffer::default();
+        let plan = gb.plan(4096, 3844, 4102, 4102, 8);
+        assert_eq!(plan.fill_cycles, 1024);
+        assert!(plan.compute_bound);
+        assert_eq!(plan.interval, 4102);
+        assert_eq!(plan.total_cycles, 1024 + 4102 + 7 * 4102 + 961);
+    }
+
+    #[test]
+    fn memory_bound_when_compute_is_tiny() {
+        let gb = GlobalBuffer { fill_bandwidth: 1.0, drain_bandwidth: 1.0 };
+        let plan = gb.plan(4096, 4096, 100, 100, 4);
+        assert!(!plan.compute_bound);
+        assert_eq!(plan.interval, 4096);
+    }
+
+    #[test]
+    fn single_tile_has_no_interval_term() {
+        let gb = GlobalBuffer::default();
+        let plan = gb.plan(400, 400, 500, 500, 1);
+        assert_eq!(plan.total_cycles, 100 + 500 + 100);
+    }
+}

@@ -1,0 +1,18 @@
+//! The Layer-3 coordinator: process lifecycle, tile streaming through
+//! the global buffer, validation against the XLA golden models, report
+//! generation, and the request-serving loop.
+//!
+//! Python never appears here — the HLO artifacts were lowered once at
+//! build time (`make artifacts`) and are loaded through the PJRT C API
+//! ([`crate::runtime`]).
+
+pub mod driver;
+pub mod globalbuf;
+pub mod report;
+pub mod serve;
+pub mod validate;
+
+pub use driver::{compile, gen_inputs, Compiled};
+pub use globalbuf::GlobalBuffer;
+pub use report::{report_app, sequential_comparison, AppReport, SequentialComparison};
+pub use validate::{validate, Validation};

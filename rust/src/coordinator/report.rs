@@ -1,0 +1,149 @@
+//! Report generation: the per-app numbers behind Tables IV-VII and
+//! Figs 13/14.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::driver::{compile, gen_inputs, Compiled};
+use super::validate::validate;
+use crate::cgra::{simulate, SimStats};
+use crate::cost::{energy_per_op_pj, estimate_fpga, FpgaReport, CGRA_CLOCK_HZ};
+use crate::extraction::extract;
+use crate::halide::{lower, Program};
+use crate::runtime::Runtime;
+use crate::sched::{self, PipelineKind};
+
+/// One row of the evaluation tables.
+pub struct AppReport {
+    pub name: String,
+    pub kind: PipelineKind,
+    pub completion: i64,
+    pub coarse_ii: i64,
+    pub pes: usize,
+    pub mems: usize,
+    pub sram_words: i64,
+    pub sr_words: i64,
+    pub pixels_per_cycle: f64,
+    pub fits: bool,
+    pub wirelength: Option<usize>,
+    pub cgra_runtime_s: f64,
+    pub cgra_energy_per_op_pj: f64,
+    pub fpga: FpgaReport,
+    /// XLA wall-clock (the CPU baseline), when an artifact was given.
+    pub cpu_time_s: Option<f64>,
+    pub validated: Option<bool>,
+    pub stats: SimStats,
+}
+
+/// Compile, simulate, cost-model, and (optionally) validate one app.
+pub fn report_app(
+    program: &Program,
+    artifact: Option<&Path>,
+    rt: Option<&Runtime>,
+) -> Result<AppReport> {
+    let c: Compiled = compile(program)?;
+    let inputs = gen_inputs(&c.lp);
+    let res = simulate(&c.design, &c.graph, &inputs).context("simulation")?;
+
+    let (cpu_time_s, validated) = match (artifact, rt) {
+        (Some(a), Some(rt)) if a.exists() => {
+            let v = validate(&c, a, rt)?;
+            (Some(v.cpu_time_s), Some(v.matched))
+        }
+        _ => (None, None),
+    };
+
+    Ok(AppReport {
+        name: program.name.clone(),
+        kind: c.schedule.kind,
+        completion: c.graph.completion,
+        coarse_ii: c.graph.coarse_ii,
+        pes: c.design.pe_count(),
+        mems: c.design.mem_tiles(),
+        sram_words: c.design.sram_words(),
+        sr_words: c.design.sr_words(),
+        pixels_per_cycle: c.graph.output_pixels_per_cycle(),
+        fits: c.fits(),
+        wirelength: c.routing.as_ref().map(|r| r.total_wirelength),
+        cgra_runtime_s: c.graph.completion as f64 / CGRA_CLOCK_HZ,
+        cgra_energy_per_op_pj: energy_per_op_pj(&c.design, &res.stats),
+        fpga: estimate_fpga(&c.design, &res.stats),
+        cpu_time_s,
+        validated,
+        stats: res.stats,
+    })
+}
+
+/// Table VI/VII: optimized pipeline schedule vs the naïve sequential
+/// baseline, in completion cycles and live SRAM words.
+pub struct SequentialComparison {
+    pub name: String,
+    pub seq_completion: i64,
+    pub opt_completion: i64,
+    pub speedup: f64,
+    pub seq_words: i64,
+    pub opt_words: i64,
+    pub memory_reduction: f64,
+}
+
+pub fn sequential_comparison(program: &Program) -> Result<SequentialComparison> {
+    let lp = lower::lower(program)?;
+    let opt = sched::schedule(&lp)?;
+    let seq = sched::sequential::schedule(&lp)?;
+    let g_opt = extract(&lp, &opt)?;
+    let g_seq = extract(&lp, &seq)?;
+    let opt_words = g_opt.total_live_words()?;
+    let seq_words = g_seq.total_live_words()?;
+    Ok(SequentialComparison {
+        name: program.name.clone(),
+        seq_completion: seq.completion,
+        opt_completion: opt.completion,
+        speedup: seq.completion as f64 / opt.completion as f64,
+        seq_words,
+        opt_words,
+        memory_reduction: seq_words as f64 / opt_words.max(1) as f64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+
+    #[test]
+    fn stencil_speedup_shape_table6() {
+        // Table VI: gaussian ~6.6x, multi-stage stencils 10-22x.
+        let g = sequential_comparison(&apps::gaussian::build(30)).unwrap();
+        assert!(g.speedup > 3.0, "gaussian speedup {}", g.speedup);
+        let h = sequential_comparison(&apps::harris::build(
+            24,
+            apps::harris::Schedule::NoRecompute,
+        ))
+        .unwrap();
+        assert!(h.speedup > g.speedup, "harris {} vs gaussian {}", h.speedup, g.speedup);
+    }
+
+    #[test]
+    fn memory_reduction_shape_table7() {
+        // Stencils see large reductions; resnet sees none (ratio ~1).
+        let g = sequential_comparison(&apps::gaussian::build(30)).unwrap();
+        assert!(g.memory_reduction > 5.0, "gaussian reduction {}", g.memory_reduction);
+        let r = sequential_comparison(&apps::resnet::build(
+            apps::resnet::Size::small(),
+        ))
+        .unwrap();
+        assert!(r.memory_reduction < 2.0, "resnet reduction {}", r.memory_reduction);
+    }
+
+    #[test]
+    fn report_without_artifact() {
+        let (p, _) = apps::by_name("gaussian").unwrap();
+        let r = report_app(&p, None, None).unwrap();
+        assert!(r.pes > 0 && r.mems > 0);
+        assert!(r.fits);
+        assert!(r.cgra_runtime_s > 0.0);
+        assert!(r.fpga.runtime_s > r.cgra_runtime_s);
+        assert!(r.validated.is_none());
+    }
+}

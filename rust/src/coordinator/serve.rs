@@ -1,0 +1,183 @@
+//! Tile-serving loop: a minimal framed TCP protocol that streams image
+//! tiles through the (simulated) accelerator — the deployment shape of
+//! Fig 12, with the global buffer fed over the wire. Implemented on
+//! std::net + threads (this image vendors no async runtime; see
+//! DESIGN.md §2).
+//!
+//! Frame format (little-endian):
+//!   request:  u32 magic (0x50554222) | u32 n_inputs |
+//!             per input: u32 word_count | i32 words...
+//!   response: u32 magic | u32 status (0=ok) | u32 word_count |
+//!             i32 words... | u64 sim_cycles | u64 micros
+//!
+//! Input word counts must match the app's declared input boxes
+//! (row-major).
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::driver::Compiled;
+use crate::cgra::simulate;
+use crate::tensor::Tensor;
+
+pub const MAGIC: u32 = 0x5055_4222; // "PUB\"" — push-memory unified buffer
+
+fn read_u32(s: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    s.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_words(s: &mut impl Read, n: usize) -> Result<Vec<i32>> {
+    let mut buf = vec![0u8; n * 4];
+    s.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Handle one client connection (public so drivers can embed the
+/// server with their own accept loop).
+pub fn handle_connection(c: &Compiled, stream: &mut TcpStream) -> Result<()> {
+    loop {
+        let magic = match read_u32(stream) {
+            Ok(m) => m,
+            Err(_) => return Ok(()), // connection closed
+        };
+        if magic != MAGIC {
+            bail!("bad magic {magic:#x}");
+        }
+        let n_inputs = read_u32(stream)? as usize;
+        anyhow::ensure!(
+            n_inputs == c.lp.inputs.len(),
+            "expected {} inputs, got {n_inputs}",
+            c.lp.inputs.len()
+        );
+        let mut inputs = std::collections::BTreeMap::new();
+        for name in &c.lp.inputs {
+            let words = read_u32(stream)? as usize;
+            let shape = c.lp.buffers[name].clone();
+            anyhow::ensure!(
+                words as i64 == shape.cardinality(),
+                "input {name}: {words} words != box {}",
+                shape.cardinality()
+            );
+            let data = read_words(stream, words)?;
+            inputs.insert(name.clone(), Tensor::from_data(shape, data));
+        }
+        let t0 = Instant::now();
+        let res = simulate(&c.design, &c.graph, &inputs).context("simulation")?;
+        let micros = t0.elapsed().as_micros() as u64;
+
+        // One buffered frame (word-at-a-time writes are syscall-bound).
+        let mut frame = Vec::with_capacity(20 + 4 * res.output.data.len());
+        frame.extend_from_slice(&MAGIC.to_le_bytes());
+        frame.extend_from_slice(&0u32.to_le_bytes());
+        frame.extend_from_slice(&(res.output.data.len() as u32).to_le_bytes());
+        for w in &res.output.data {
+            frame.extend_from_slice(&w.to_le_bytes());
+        }
+        frame.extend_from_slice(&(res.stats.cycles as u64).to_le_bytes());
+        frame.extend_from_slice(&micros.to_le_bytes());
+        stream.write_all(&frame)?;
+        stream.flush()?;
+    }
+}
+
+/// Serve tiles forever (one thread per connection).
+pub fn serve(c: Compiled, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    eprintln!(
+        "serving {} on {addr} ({} PEs, {} MEM tiles, {} cycles/tile)",
+        c.program.name,
+        c.design.pe_count(),
+        c.design.mem_tiles(),
+        c.graph.completion
+    );
+    let shared = Arc::new(c);
+    for stream in listener.incoming() {
+        let mut stream = stream?;
+        let c = Arc::clone(&shared);
+        std::thread::spawn(move || {
+            if let Err(e) = handle_connection(&c, &mut stream) {
+                eprintln!("connection error: {e:#}");
+            }
+        });
+    }
+    Ok(())
+}
+
+/// Client helper: send one request, get `(output words, cycles, µs)`.
+pub fn request(
+    stream: &mut TcpStream,
+    inputs: &[&Tensor],
+) -> Result<(Vec<i32>, u64, u64)> {
+    let total: usize = inputs.iter().map(|t| t.data.len()).sum();
+    let mut frame = Vec::with_capacity(8 + 4 * inputs.len() + 4 * total);
+    frame.extend_from_slice(&MAGIC.to_le_bytes());
+    frame.extend_from_slice(&(inputs.len() as u32).to_le_bytes());
+    for t in inputs {
+        frame.extend_from_slice(&(t.data.len() as u32).to_le_bytes());
+        for w in &t.data {
+            frame.extend_from_slice(&w.to_le_bytes());
+        }
+    }
+    stream.write_all(&frame)?;
+    stream.flush()?;
+    let magic = read_u32(stream)?;
+    anyhow::ensure!(magic == MAGIC, "bad response magic");
+    let status = read_u32(stream)?;
+    anyhow::ensure!(status == 0, "server error status {status}");
+    let n = read_u32(stream)? as usize;
+    let words = read_words(stream, n)?;
+    let mut b = [0u8; 8];
+    stream.read_exact(&mut b)?;
+    let cycles = u64::from_le_bytes(b);
+    stream.read_exact(&mut b)?;
+    let micros = u64::from_le_bytes(b);
+    Ok((words, cycles, micros))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::coordinator::driver::{compile, gen_inputs};
+
+    #[test]
+    fn serve_roundtrip_over_localhost() {
+        let prog = apps::gaussian::build(14);
+        let c = compile(&prog).unwrap();
+        let inputs = gen_inputs(&c.lp);
+        let expect = simulate_expect(&c, &inputs);
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let shared = Arc::new(c);
+        let c2 = Arc::clone(&shared);
+        std::thread::spawn(move || {
+            if let Ok((mut s, _)) = listener.accept() {
+                let _ = handle_connection(&c2, &mut s);
+            }
+        });
+
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let ordered: Vec<&Tensor> =
+            shared.lp.inputs.iter().map(|n| &inputs[n]).collect();
+        let (words, cycles, _) = request(&mut stream, &ordered).unwrap();
+        assert_eq!(words, expect);
+        assert!(cycles > 0);
+    }
+
+    fn simulate_expect(
+        c: &Compiled,
+        inputs: &std::collections::BTreeMap<String, Tensor>,
+    ) -> Vec<i32> {
+        simulate(&c.design, &c.graph, inputs).unwrap().output.data
+    }
+}

@@ -1,0 +1,158 @@
+//! End-to-end validation: run the cycle-accurate CGRA simulation and
+//! the AOT-compiled XLA golden model on identical inputs and compare
+//! the output images pixel-exactly (§VI-B), evaluating any host-side
+//! stages (sch6-style) on the simulator's output first.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::driver::{gen_inputs, Compiled};
+use crate::cgra::{simulate, SimStats};
+use crate::halide::Func;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+pub struct Validation {
+    pub app: String,
+    pub words_compared: usize,
+    pub matched: bool,
+    /// Wall-clock of the XLA execution — the Fig 14 CPU point.
+    pub cpu_time_s: f64,
+    pub stats: SimStats,
+}
+
+/// Evaluate host-scheduled funcs (pointwise stages moved off the
+/// accelerator) over the accelerator output.
+pub fn eval_host_funcs(
+    host: &[Func],
+    accel_out: &str,
+    bufs: &mut BTreeMap<String, Tensor>,
+) -> Result<String> {
+    let mut last = accel_out.to_string();
+    for f in host {
+        let src_box = bufs[&last].shape.clone();
+        let names: Vec<String> = f.vars.clone();
+        let mut out = Tensor::zeros(src_box.clone());
+        for p in src_box.points() {
+            let env: BTreeMap<String, i64> =
+                names.iter().cloned().zip(p.iter().cloned()).collect();
+            let mut load = |buf: &str, pt: &[i64]| bufs[buf].get(pt);
+            let v = f.body.eval(&env, &mut load);
+            out.set(&p, v);
+        }
+        bufs.insert(f.name.clone(), out);
+        last = f.name.clone();
+    }
+    Ok(last)
+}
+
+/// Validate one compiled app against a golden HLO artifact.
+pub fn validate(c: &Compiled, artifact: &Path, rt: &Runtime) -> Result<Validation> {
+    let inputs = gen_inputs(&c.lp);
+    let res = simulate(&c.design, &c.graph, &inputs).context("CGRA simulation")?;
+
+    // Host stages (if any) run on the simulator output.
+    let mut bufs: BTreeMap<String, Tensor> = inputs.clone();
+    bufs.insert(c.lp.output.clone(), res.output.clone());
+    let final_name = eval_host_funcs(&c.lp.host_funcs, &c.lp.output, &mut bufs)?;
+    let final_out = &bufs[&final_name];
+
+    // Golden: XLA executes the artifact on the same inputs, in the
+    // program's declared input order.
+    let model = rt.load(artifact)?;
+    let ordered: Vec<&Tensor> = c.lp.inputs.iter().map(|n| &inputs[n]).collect();
+    let (golden, cpu_time_s) = model.run(&ordered)?;
+
+    // Compare row-major over the golden's length: the simulator's box
+    // may be halo-rounded larger; the golden shape is the reference.
+    anyhow::ensure!(
+        golden.len() <= final_out.len(),
+        "golden output larger than simulated ({} vs {})",
+        golden.len(),
+        final_out.len()
+    );
+    let mut matched = true;
+    if golden.len() == final_out.len() {
+        matched = golden == final_out.data;
+    } else {
+        // Rounded realization: compare point-by-point over the golden
+        // box (leading sub-box of each dimension).
+        let mut gshape = final_out.shape.clone();
+        // Infer the golden box by shrinking the rounded dims.
+        let total: i64 = golden.len() as i64;
+        let mut prod: i64 = gshape.dims.iter().map(|d| d.extent).product();
+        for k in (0..gshape.rank()).rev() {
+            while prod > total && gshape.dims[k].extent > 1 {
+                let e = gshape.dims[k].extent;
+                gshape.dims[k] = crate::poly::set::Dim::new(
+                    gshape.dims[k].name.clone(),
+                    gshape.dims[k].min,
+                    e - 1,
+                );
+                prod = gshape.dims.iter().map(|d| d.extent).product();
+            }
+        }
+        anyhow::ensure!(prod == total, "cannot infer golden box");
+        let gt = Tensor::from_data(gshape.clone(), golden.clone());
+        for p in gshape.points() {
+            if gt.get(&p) != final_out.get(&p) {
+                matched = false;
+                break;
+            }
+        }
+    }
+
+    Ok(Validation {
+        app: c.program.name.clone(),
+        words_compared: golden.len(),
+        matched,
+        cpu_time_s,
+        stats: res.stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::coordinator::driver::compile;
+
+    fn artifact(name: &str) -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts")
+            .join(format!("{name}.hlo.txt"))
+    }
+
+    #[test]
+    fn gaussian_sim_matches_xla_golden() {
+        let path = artifact("gaussian");
+        if !path.exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let (p, _) = apps::by_name("gaussian").unwrap();
+        let c = compile(&p).unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let v = validate(&c, &path, &rt).unwrap();
+        assert!(v.matched, "CGRA simulation diverges from XLA golden");
+        assert_eq!(v.words_compared, 62 * 62);
+        assert!(v.cpu_time_s > 0.0);
+    }
+
+    #[test]
+    fn host_stage_validation_sch6() {
+        let path = artifact("harris");
+        if !path.exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let (p, _) = apps::by_name("harris_sch6").unwrap();
+        let c = compile(&p).unwrap();
+        assert_eq!(c.lp.host_funcs.len(), 1);
+        let rt = Runtime::cpu().unwrap();
+        let v = validate(&c, &path, &rt).unwrap();
+        assert!(v.matched, "host-stage pipeline diverges from golden");
+    }
+}

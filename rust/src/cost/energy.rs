@@ -1,0 +1,108 @@
+//! Energy model (pJ), calibrated to Table II's per-access column and
+//! standard 16-nm dynamic-energy figures, consumed with the activity
+//! counts the cycle-accurate simulator reports.
+
+use crate::cgra::SimStats;
+use crate::mapping::MappedDesign;
+
+/// Dual-port SRAM word access.
+pub const DP_ACCESS_PJ: f64 = 3.2;
+/// Single-port wide-fetch SRAM, amortized per word (wide fetches are
+/// cheaper per byte, §IV-A).
+pub const SP_WORD_PJ: f64 = 1.7;
+/// AGG/TB register-file traffic per word.
+pub const AGG_TB_PJ: f64 = 0.4;
+/// Integrated controller (ID+AG+SG delta recurrence) per operation.
+pub const CTL_PJ: f64 = 0.4;
+/// Addressing done on general PEs (baseline variant) per access.
+pub const PE_ADDR_PJ: f64 = 1.6;
+/// One 16-bit PE ALU operation.
+pub const PE_OP_PJ: f64 = 0.5;
+/// One shift-register word shift.
+pub const SR_SHIFT_PJ: f64 = 0.05;
+
+/// FPGA-side constants (Figs 13/14): LUT-mapped 16-bit logic and BRAM
+/// accesses cost several times their ASIC counterparts.
+pub const FPGA_OP_PJ: f64 = 2.6;
+pub const FPGA_BRAM_WORD_PJ: f64 = 5.5;
+pub const FPGA_REG_PJ: f64 = 0.25;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EnergyBreakdown {
+    pub sram_pj: f64,
+    pub ctl_pj: f64,
+    pub pe_pj: f64,
+    pub sr_pj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_pj(&self) -> f64 {
+        self.sram_pj + self.ctl_pj + self.pe_pj + self.sr_pj
+    }
+}
+
+/// Total CGRA energy of one simulated run.
+pub fn design_energy(d: &MappedDesign, stats: &SimStats) -> EnergyBreakdown {
+    // Wide accesses move fetch_width words each.
+    let fw = d.fetch_width as f64;
+    let sram_words = (stats.sram_reads + stats.sram_writes) as f64 * fw;
+    EnergyBreakdown {
+        sram_pj: sram_words * SP_WORD_PJ + sram_words * AGG_TB_PJ,
+        ctl_pj: (stats.sram_reads + stats.sram_writes) as f64 * CTL_PJ * 2.0
+            + (stats.words_in + stats.words_out) as f64 * CTL_PJ,
+        pe_pj: stats.pe_ops as f64 * PE_OP_PJ,
+        sr_pj: stats.sr_shifts as f64 * SR_SHIFT_PJ,
+    }
+}
+
+/// Energy per compute operation (the Fig 13 metric).
+pub fn energy_per_op_pj(d: &MappedDesign, stats: &SimStats) -> f64 {
+    design_energy(d, stats).total_pj() / stats.pe_ops.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats() -> SimStats {
+        SimStats {
+            cycles: 4096,
+            sram_reads: 1000,
+            sram_writes: 1000,
+            pe_ops: 40_000,
+            sr_shifts: 16_000,
+            words_in: 4096,
+            words_out: 4096,
+        }
+    }
+
+    #[test]
+    fn breakdown_sums() {
+        let d = dummy_design();
+        let e = design_energy(&d, &stats());
+        let t = e.total_pj();
+        assert!(t > 0.0);
+        assert!((e.sram_pj + e.ctl_pj + e.pe_pj + e.sr_pj - t).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_access_magnitude_matches_table2() {
+        // SP word + AGG/TB + controller ≈ 2.5 pJ (Table II row 3).
+        let per_access = SP_WORD_PJ + AGG_TB_PJ + CTL_PJ;
+        assert!((per_access - 2.5).abs() < 0.15, "{per_access}");
+        // DP + AG ≈ 3.6; DP + PEs ≈ 4.8.
+        assert!((DP_ACCESS_PJ + CTL_PJ - 3.6).abs() < 0.1);
+        assert!((DP_ACCESS_PJ + PE_ADDR_PJ - 4.8).abs() < 0.1);
+    }
+
+    fn dummy_design() -> MappedDesign {
+        MappedDesign {
+            name: "t".into(),
+            buffers: Default::default(),
+            kernels: vec![],
+            completion: 4096,
+            coarse_ii: 4096,
+            fetch_width: 4,
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! FPGA baseline model (Zynq UltraScale+ 7EV through Vivado HLS).
+//!
+//! The paper's FPGA path emits synthesizable C that Vivado schedules at
+//! II=1 and 200 MHz (§VI). The *cycle count* of an II=1 pipelined design
+//! equals the CGRA's static schedule; runtime differs by the clock
+//! ratio, and resources/energy by the LUT/BRAM fabric costs. This
+//! module estimates Table IV's BRAM/DSP/FF/LUT columns and the Fig
+//! 13/14 energy and runtime series from the same mapped design.
+
+use super::energy::{FPGA_BRAM_WORD_PJ, FPGA_OP_PJ, FPGA_REG_PJ};
+use super::FPGA_CLOCK_HZ;
+use crate::cgra::SimStats;
+use crate::halide::expr::BinOp;
+use crate::hw::PeOp;
+use crate::mapping::{MappedDesign, OperandSrc};
+
+/// One BRAM18 holds 1024 16-bit words; buffers at or below half that
+/// are placed in distributed LUTRAM/FF instead (Vivado's default).
+const BRAM_WORDS: i64 = 1024;
+const BRAM_THRESHOLD: i64 = 512;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FpgaReport {
+    pub bram: usize,
+    pub dsp: usize,
+    pub ff: usize,
+    pub lut: usize,
+    pub runtime_s: f64,
+    pub energy_per_op_pj: f64,
+}
+
+pub fn estimate_fpga(d: &MappedDesign, stats: &SimStats) -> FpgaReport {
+    let mut bram = 0usize;
+    let mut dist_words = 0i64;
+    for b in d.buffers.values() {
+        for bank in &b.banks {
+            if bank.capacity_words > BRAM_THRESHOLD {
+                bram += ((bank.capacity_words + BRAM_WORDS - 1) / BRAM_WORDS) as usize;
+            } else {
+                dist_words += bank.capacity_words;
+            }
+        }
+        dist_words += b.sr_words;
+    }
+
+    // DSPs: general multiplies map to DSP48s; constant multiplies are
+    // strength-reduced into LUT shift-add trees, packed 8-to-a-DSP by
+    // Vivado's resource sharing when any remain.
+    let mut dyn_mul = 0usize;
+    let mut const_mul = 0usize;
+    for k in &d.kernels {
+        for n in &k.nodes {
+            let is_mul = matches!(n.cfg.op, PeOp::Bin(BinOp::Mul))
+                || matches!(n.cfg.op, PeOp::Acc { op: BinOp::Mul, .. });
+            if is_mul {
+                let has_const = n.cfg.consts.iter().any(|c| c.is_some());
+                let dynamic_srcs = n
+                    .srcs
+                    .iter()
+                    .filter(|s| !matches!(s, OperandSrc::None))
+                    .count();
+                if has_const || dynamic_srcs < 2 {
+                    const_mul += 1;
+                } else {
+                    dyn_mul += 1;
+                }
+            }
+        }
+    }
+    let dsp = dyn_mul + const_mul.div_ceil(8).max(usize::from(const_mul > 0));
+
+    // FFs: pipeline registers per op stage, operand retiming, SR words,
+    // and the HLS loop counters per buffer port.
+    let pe_ops = d.pe_count();
+    let ctl_regs: usize = d
+        .buffers
+        .values()
+        .map(|b| b.banks.len() * 3 * 16 + (b.sr_words as usize) * 16)
+        .sum();
+    let ff = pe_ops * 18 + ctl_regs + dist_words as usize * 16 / 4;
+
+    // LUTs: ~2 LUT6 per 16-bit adder bit-pair plus control and muxing.
+    let lut = pe_ops * 34 + d.mem_tiles() * 160 + dist_words as usize * 2;
+
+    // Runtime: same II=1 cycle count at the FPGA clock.
+    let runtime_s = d.completion as f64 / FPGA_CLOCK_HZ;
+
+    // Energy/op: LUT-fabric op energy plus BRAM traffic amortized over
+    // compute ops.
+    let fw = d.fetch_width as f64;
+    let mem_words = (stats.sram_reads + stats.sram_writes) as f64 * fw;
+    let e_mem = mem_words * FPGA_BRAM_WORD_PJ;
+    let e_ops = stats.pe_ops as f64 * FPGA_OP_PJ;
+    let e_reg = stats.sr_shifts as f64 * FPGA_REG_PJ;
+    let energy_per_op_pj = (e_mem + e_ops + e_reg) / stats.pe_ops.max(1) as f64;
+
+    FpgaReport { bram, dsp, ff, lut, runtime_s, energy_per_op_pj }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::energy::energy_per_op_pj;
+    use crate::extraction::extract;
+    use crate::halide::func::{Func, InputDecl, Program};
+    use crate::halide::lower::lower;
+    use crate::halide::schedule::HwSchedule;
+    use crate::halide::Expr;
+    use crate::mapping::map_design;
+    use crate::sched;
+    use crate::tensor::Tensor;
+    use std::collections::BTreeMap;
+
+    fn small_stencil() -> (MappedDesign, SimStats) {
+        let a = Func::pure_fn(
+            "a",
+            &["y", "x"],
+            Expr::mul(Expr::c(3), Expr::ld("in", vec![Expr::v("y"), Expr::v("x")])),
+        );
+        let b = Func::pure_fn(
+            "b",
+            &["y", "x"],
+            Expr::add(
+                Expr::ld("a", vec![Expr::v("y"), Expr::v("x")]),
+                Expr::ld("a", vec![Expr::add(Expr::v("y"), Expr::c(1)), Expr::v("x")]),
+            ),
+        );
+        let p = Program {
+            name: "p".into(),
+            inputs: vec![InputDecl { name: "in".into(), rank: 2 }],
+            funcs: vec![a, b],
+            schedule: HwSchedule::new([24, 24]).store_at("a"),
+        };
+        let lp = lower(&p).unwrap();
+        let ps = sched::schedule(&lp).unwrap();
+        let g = extract(&lp, &ps).unwrap();
+        let d = map_design(&g).unwrap();
+        let input = Tensor::from_fn(lp.buffers["in"].clone(), |pt| (pt[0] + pt[1]) as i32);
+        let mut ins = BTreeMap::new();
+        ins.insert("in".to_string(), input);
+        let res = crate::cgra::simulate(&d, &g, &ins).unwrap();
+        (d, res.stats)
+    }
+
+    #[test]
+    fn small_buffers_avoid_bram() {
+        let (d, stats) = small_stencil();
+        let r = estimate_fpga(&d, &stats);
+        // A one-line buffer lives in distributed RAM (Table IV gaussian
+        // row: 0 BRAM).
+        assert_eq!(r.bram, 0);
+        assert!(r.ff > 0);
+        assert!(r.lut > 0);
+    }
+
+    #[test]
+    fn fpga_slower_and_hungrier_than_cgra(){
+        let (d, stats) = small_stencil();
+        let r = estimate_fpga(&d, &stats);
+        let cgra_runtime = d.completion as f64 / crate::cost::CGRA_CLOCK_HZ;
+        let ratio = r.runtime_s / cgra_runtime;
+        assert!((4.0..5.0).contains(&ratio), "runtime ratio {ratio}");
+        let cgra_e = energy_per_op_pj(&d, &stats);
+        let eratio = r.energy_per_op_pj / cgra_e;
+        assert!(eratio > 2.0, "energy ratio {eratio}");
+    }
+}

@@ -1,0 +1,22 @@
+//! Area, energy, and baseline cost models (§VI).
+//!
+//! The paper's numbers come from a TSMC-16nm Genus/Innovus flow; we
+//! cannot tape out here, so [`area`] and [`energy`] are analytical
+//! models **calibrated to the paper's own Table II** (the three
+//! physical-unified-buffer variants) and standard 16-nm energy/op
+//! figures. [`fpga`] estimates the Zynq UltraScale+ resources and
+//! timing of the synthesizable-C path (Table IV, Figs 13/14): II=1
+//! pipelined designs at 200 MHz vs the CGRA's 900 MHz.
+
+pub mod area;
+pub mod energy;
+pub mod fpga;
+
+pub use area::{design_area_um2, table2_variants, PubVariant, VariantCost};
+pub use energy::{design_energy, energy_per_op_pj, EnergyBreakdown};
+pub use fpga::{estimate_fpga, FpgaReport};
+
+/// Clock frequencies (§VI-B): the CGRA dominates the FPGA "due to its
+/// higher clock frequency (900 MHz)" vs Vivado's 200 MHz closure.
+pub const CGRA_CLOCK_HZ: f64 = 900.0e6;
+pub const FPGA_CLOCK_HZ: f64 = 200.0e6;

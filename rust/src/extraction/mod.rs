@@ -1,0 +1,12 @@
+//! Unified buffer extraction (§V-B, Fig 1 third stage).
+//!
+//! Converts every materialized Halide buffer of a scheduled
+//! [`crate::halide::LoweredPipeline`] into a [`crate::ub::UnifiedBuffer`]:
+//! each memory reference becomes a dedicated port carrying its iteration
+//! domain, access map, and cycle-accurate schedule. Compute kernels are
+//! separated from the memory IR as [`crate::ub::KernelNode`]s, to be
+//! mapped to PEs later.
+
+pub mod extract;
+
+pub use extract::extract;

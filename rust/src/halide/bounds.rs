@@ -1,0 +1,230 @@
+//! Halide-style interval bounds inference.
+//!
+//! Given the accelerator output tile, walk the (post-inlining) stage
+//! graph consumer-to-producer and compute the realization box required of
+//! every materialized buffer and every streamed input. Because all
+//! accesses are affine over box domains, interval analysis is exact here.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::expr::Expr;
+use crate::poly::set::{BoxSet, Dim};
+
+/// A func after inlining: pure iterators + optional reduction iterators
+/// and the final kernel expression (self-accumulator loads removed).
+#[derive(Clone, Debug)]
+pub struct StageDef {
+    pub name: String,
+    pub vars: Vec<String>,
+    pub rdom: Vec<(String, i64, i64)>,
+    pub kernel: Expr,
+}
+
+impl StageDef {
+    /// All iterator names, outermost-first: pure then reduction.
+    pub fn all_dims(&self) -> Vec<String> {
+        let mut d = self.vars.clone();
+        d.extend(self.rdom.iter().map(|(n, _, _)| n.clone()));
+        d
+    }
+}
+
+/// `(min, max)` inclusive interval per dimension.
+pub type Intervals = Vec<(i64, i64)>;
+
+/// Infer realization intervals for every buffer referenced by `stages`
+/// (which are in topological order; the last is the accelerator output
+/// realized over `tile`). Returns `buffer name -> intervals`, including
+/// entries for external inputs.
+///
+/// `rounding` maps a stage to `(var, factor)` pairs whose realized
+/// extent must be a multiple of `factor` (Halide-style round-up for
+/// unrolled loops); the growth propagates to producer halos because it
+/// is applied before the stage's loads are ranged.
+pub fn infer(
+    stages: &[StageDef],
+    tile: &[i64],
+    rounding: &BTreeMap<String, Vec<(String, i64)>>,
+) -> Result<BTreeMap<String, Intervals>> {
+    let mut required: BTreeMap<String, Intervals> = BTreeMap::new();
+    let output = stages.last().context("no stages")?;
+    anyhow::ensure!(
+        tile.len() == output.vars.len(),
+        "tile rank {} != output rank {}",
+        tile.len(),
+        output.vars.len()
+    );
+    required.insert(
+        output.name.clone(),
+        tile.iter().map(|&e| (0, e - 1)).collect(),
+    );
+
+    for stage in stages.iter().rev() {
+        // Round up unrolled dims before ranging this stage's loads.
+        if let Some(rounds) = rounding.get(&stage.name) {
+            let req = required.get_mut(&stage.name).unwrap();
+            for (var, factor) in rounds {
+                let k = stage
+                    .vars
+                    .iter()
+                    .position(|v| v == var)
+                    .with_context(|| format!("unroll of unknown var {var} in {}", stage.name))?;
+                let extent = req[k].1 - req[k].0 + 1;
+                req[k].1 = req[k].0 + (extent + *factor - 1) / *factor * factor - 1;
+            }
+        }
+        let req = match required.get(&stage.name) {
+            Some(r) => r.clone(),
+            None => bail!("stage {} is never consumed", stage.name),
+        };
+        // The stage's compute domain: required pure box x reduction box.
+        let mut dim_bounds: Intervals = req.clone();
+        for (_, min, extent) in &stage.rdom {
+            dim_bounds.push((*min, *min + *extent - 1));
+        }
+        let dims = stage.all_dims();
+        for (buf, idx) in stage.kernel.loads() {
+            if buf == stage.name {
+                continue; // accumulator self-reference
+            }
+            let map = Expr::load_affine_map(&idx, &dims).with_context(|| {
+                format!("non-affine access to {buf} in stage {}", stage.name)
+            })?;
+            let ranges: Intervals =
+                map.outputs.iter().map(|o| o.bounds(&dim_bounds)).collect();
+            match required.get_mut(&buf) {
+                Some(cur) => {
+                    anyhow::ensure!(
+                        cur.len() == ranges.len(),
+                        "rank mismatch for buffer {buf}"
+                    );
+                    for (c, r) in cur.iter_mut().zip(&ranges) {
+                        c.0 = c.0.min(r.0);
+                        c.1 = c.1.max(r.1);
+                    }
+                }
+                None => {
+                    required.insert(buf.clone(), ranges);
+                }
+            }
+        }
+    }
+    Ok(required)
+}
+
+/// Convert inferred intervals into a [`BoxSet`] with the given dim names.
+pub fn intervals_to_box(names: &[String], iv: &Intervals) -> BoxSet {
+    assert_eq!(names.len(), iv.len());
+    BoxSet::new(
+        names
+            .iter()
+            .zip(iv)
+            .map(|(n, &(lo, hi))| Dim::new(n.clone(), lo, hi - lo + 1))
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stage(name: &str, vars: &[&str], kernel: Expr) -> StageDef {
+        StageDef {
+            name: name.into(),
+            vars: vars.iter().map(|s| s.to_string()).collect(),
+            rdom: vec![],
+            kernel,
+        }
+    }
+
+    #[test]
+    fn brighten_blur_halo() {
+        // blur reads brighten at (y..y+1, x..x+1); brighten reads input
+        // pointwise. 64x64 output tile => brighten/input need 65x65.
+        let brighten = stage(
+            "brighten",
+            &["y", "x"],
+            Expr::mul(Expr::c(2), Expr::ld("input", vec![Expr::v("y"), Expr::v("x")])),
+        );
+        let blur = stage(
+            "blur",
+            &["y", "x"],
+            Expr::sum(vec![
+                Expr::ld("brighten", vec![Expr::v("y"), Expr::v("x")]),
+                Expr::ld(
+                    "brighten",
+                    vec![Expr::v("y"), Expr::add(Expr::v("x"), Expr::c(1))],
+                ),
+                Expr::ld(
+                    "brighten",
+                    vec![Expr::add(Expr::v("y"), Expr::c(1)), Expr::v("x")],
+                ),
+                Expr::ld(
+                    "brighten",
+                    vec![
+                        Expr::add(Expr::v("y"), Expr::c(1)),
+                        Expr::add(Expr::v("x"), Expr::c(1)),
+                    ],
+                ),
+            ]),
+        );
+        let req = infer(&[brighten, blur], &[64, 64], &BTreeMap::new()).unwrap();
+        assert_eq!(req["blur"], vec![(0, 63), (0, 63)]);
+        assert_eq!(req["brighten"], vec![(0, 64), (0, 64)]);
+        assert_eq!(req["input"], vec![(0, 64), (0, 64)]);
+    }
+
+    #[test]
+    fn negative_halo() {
+        // sobel-style: reads x-1..x+1.
+        let s = stage(
+            "g",
+            &["x"],
+            Expr::add(
+                Expr::ld("in", vec![Expr::sub(Expr::v("x"), Expr::c(1))]),
+                Expr::ld("in", vec![Expr::add(Expr::v("x"), Expr::c(1))]),
+            ),
+        );
+        let req = infer(&[s], &[16], &BTreeMap::new()).unwrap();
+        assert_eq!(req["in"], vec![(-1, 16)]);
+    }
+
+    #[test]
+    fn reduction_dims_extend_domain() {
+        let conv = StageDef {
+            name: "conv".into(),
+            vars: vec!["y".into(), "x".into()],
+            rdom: vec![("ry".into(), 0, 3), ("rx".into(), 0, 3)],
+            kernel: Expr::mul(
+                Expr::ld(
+                    "in",
+                    vec![
+                        Expr::add(Expr::v("y"), Expr::v("ry")),
+                        Expr::add(Expr::v("x"), Expr::v("rx")),
+                    ],
+                ),
+                Expr::ld("w", vec![Expr::v("ry"), Expr::v("rx")]),
+            ),
+        };
+        let req = infer(&[conv], &[8, 8], &BTreeMap::new()).unwrap();
+        assert_eq!(req["in"], vec![(0, 9), (0, 9)]);
+        assert_eq!(req["w"], vec![(0, 2), (0, 2)]);
+    }
+
+    #[test]
+    fn unconsumed_stage_rejected() {
+        let a = stage("a", &["x"], Expr::ld("in", vec![Expr::v("x")]));
+        let b = stage("b", &["x"], Expr::ld("in", vec![Expr::v("x")]));
+        assert!(infer(&[a, b], &[8], &BTreeMap::new()).is_err());
+    }
+
+    #[test]
+    fn intervals_to_box_roundtrip() {
+        let b = intervals_to_box(&["y".into(), "x".into()], &vec![(-1, 62), (0, 64)]);
+        assert_eq!(b.dims[0].min, -1);
+        assert_eq!(b.dims[0].extent, 64);
+        assert_eq!(b.dims[1].extent, 65);
+    }
+}

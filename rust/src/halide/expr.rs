@@ -1,0 +1,466 @@
+//! Integer expressions for compute kernels.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::poly::{Affine, AffineMap};
+
+/// Binary operators available on the CGRA's ALU-based processing
+/// elements. Comparison operators produce 0/1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    Min,
+    Max,
+    Shl,
+    Shr,
+    And,
+    Or,
+    Xor,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+}
+
+/// Unary operators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum UnOp {
+    Neg,
+    Abs,
+}
+
+/// A compute-kernel expression. Loads reference either an input image or
+/// another Func's buffer by name; loop iterators appear as [`Expr::Var`].
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum Expr {
+    Const(i32),
+    Var(String),
+    /// `Load(buffer, indices)` — indices listed **outermost-first**, to
+    /// match [`crate::poly::BoxSet`] dim order.
+    Load(String, Vec<Expr>),
+    Binary(BinOp, Box<Expr>, Box<Expr>),
+    Unary(UnOp, Box<Expr>),
+    /// `Select(cond, then, else)` — cond is any expression, nonzero = true.
+    Select(Box<Expr>, Box<Expr>, Box<Expr>),
+}
+
+/// Shorthand constructors used by the app definitions.
+impl Expr {
+    pub fn c(v: i32) -> Expr {
+        Expr::Const(v)
+    }
+    pub fn v(name: impl Into<String>) -> Expr {
+        Expr::Var(name.into())
+    }
+    pub fn ld(buf: impl Into<String>, idx: Vec<Expr>) -> Expr {
+        Expr::Load(buf.into(), idx)
+    }
+    pub fn bin(op: BinOp, a: Expr, b: Expr) -> Expr {
+        Expr::Binary(op, Box::new(a), Box::new(b))
+    }
+    pub fn add(a: Expr, b: Expr) -> Expr {
+        Expr::bin(BinOp::Add, a, b)
+    }
+    pub fn sub(a: Expr, b: Expr) -> Expr {
+        Expr::bin(BinOp::Sub, a, b)
+    }
+    pub fn mul(a: Expr, b: Expr) -> Expr {
+        Expr::bin(BinOp::Mul, a, b)
+    }
+    pub fn min(a: Expr, b: Expr) -> Expr {
+        Expr::bin(BinOp::Min, a, b)
+    }
+    pub fn max(a: Expr, b: Expr) -> Expr {
+        Expr::bin(BinOp::Max, a, b)
+    }
+    /// Arithmetic shift right (used for power-of-two normalization so the
+    /// golden models stay division-free).
+    pub fn shr(a: Expr, k: i32) -> Expr {
+        Expr::bin(BinOp::Shr, a, Expr::c(k))
+    }
+    pub fn abs(a: Expr) -> Expr {
+        Expr::Unary(UnOp::Abs, Box::new(a))
+    }
+    pub fn neg(a: Expr) -> Expr {
+        Expr::Unary(UnOp::Neg, Box::new(a))
+    }
+    pub fn select(c: Expr, t: Expr, e: Expr) -> Expr {
+        Expr::Select(Box::new(c), Box::new(t), Box::new(e))
+    }
+    pub fn clamp(a: Expr, lo: i32, hi: i32) -> Expr {
+        Expr::min(Expr::max(a, Expr::c(lo)), Expr::c(hi))
+    }
+    /// Sum of a non-empty list of terms (left-assoc).
+    pub fn sum(terms: Vec<Expr>) -> Expr {
+        let mut it = terms.into_iter();
+        let first = it.next().expect("sum of empty list");
+        it.fold(first, Expr::add)
+    }
+}
+
+pub fn eval_binop(op: BinOp, a: i32, b: i32) -> i32 {
+    match op {
+        BinOp::Add => a.wrapping_add(b),
+        BinOp::Sub => a.wrapping_sub(b),
+        BinOp::Mul => a.wrapping_mul(b),
+        BinOp::Div => {
+            // Halide/JAX-style round-toward-negative-infinity division so
+            // the golden XLA models (lax.div is trunc; we avoid Div in
+            // accelerated kernels anyway) and the simulator agree.
+            if b == 0 {
+                0
+            } else {
+                a.div_euclid(b)
+            }
+        }
+        BinOp::Mod => {
+            if b == 0 {
+                0
+            } else {
+                a.rem_euclid(b)
+            }
+        }
+        BinOp::Min => a.min(b),
+        BinOp::Max => a.max(b),
+        BinOp::Shl => a.wrapping_shl(b as u32),
+        BinOp::Shr => a.wrapping_shr(b as u32),
+        BinOp::And => a & b,
+        BinOp::Or => a | b,
+        BinOp::Xor => a ^ b,
+        BinOp::Lt => (a < b) as i32,
+        BinOp::Le => (a <= b) as i32,
+        BinOp::Gt => (a > b) as i32,
+        BinOp::Ge => (a >= b) as i32,
+        BinOp::Eq => (a == b) as i32,
+        BinOp::Ne => (a != b) as i32,
+    }
+}
+
+impl Expr {
+    /// Evaluate with loop-iterator bindings and a load callback.
+    pub fn eval(
+        &self,
+        vars: &BTreeMap<String, i64>,
+        load: &mut dyn FnMut(&str, &[i64]) -> i32,
+    ) -> i32 {
+        match self {
+            Expr::Const(v) => *v,
+            Expr::Var(n) => *vars
+                .get(n)
+                .unwrap_or_else(|| panic!("unbound iterator {n}"))
+                as i32,
+            Expr::Load(buf, idx) => {
+                let pt: Vec<i64> = idx.iter().map(|e| e.eval(vars, load) as i64).collect();
+                load(buf, &pt)
+            }
+            Expr::Binary(op, a, b) => eval_binop(*op, a.eval(vars, load), b.eval(vars, load)),
+            Expr::Unary(op, a) => {
+                let v = a.eval(vars, load);
+                match op {
+                    UnOp::Neg => v.wrapping_neg(),
+                    UnOp::Abs => v.wrapping_abs(),
+                }
+            }
+            Expr::Select(c, t, e) => {
+                if c.eval(vars, load) != 0 {
+                    t.eval(vars, load)
+                } else {
+                    e.eval(vars, load)
+                }
+            }
+        }
+    }
+
+    /// Substitute loop variables with expressions (used by unrolling and
+    /// inlining). Variables not in `subst` are left untouched.
+    pub fn substitute(&self, subst: &BTreeMap<String, Expr>) -> Expr {
+        match self {
+            Expr::Const(_) => self.clone(),
+            Expr::Var(n) => subst.get(n).cloned().unwrap_or_else(|| self.clone()),
+            Expr::Load(buf, idx) => Expr::Load(
+                buf.clone(),
+                idx.iter().map(|e| e.substitute(subst)).collect(),
+            ),
+            Expr::Binary(op, a, b) => {
+                Expr::bin(*op, a.substitute(subst), b.substitute(subst))
+            }
+            Expr::Unary(op, a) => Expr::Unary(*op, Box::new(a.substitute(subst))),
+            Expr::Select(c, t, e) => Expr::select(
+                c.substitute(subst),
+                t.substitute(subst),
+                e.substitute(subst),
+            ),
+        }
+    }
+
+    /// Replace every `Load(buf, idx)` where `buf == name` with
+    /// `body[vars := idx]` — functional inlining (recompute-at-use).
+    pub fn inline_calls(&self, name: &str, vars: &[String], body: &Expr) -> Expr {
+        match self {
+            Expr::Const(_) | Expr::Var(_) => self.clone(),
+            Expr::Load(buf, idx) => {
+                let idx: Vec<Expr> =
+                    idx.iter().map(|e| e.inline_calls(name, vars, body)).collect();
+                if buf == name {
+                    assert_eq!(idx.len(), vars.len(), "inline arity mismatch for {name}");
+                    let subst: BTreeMap<String, Expr> =
+                        vars.iter().cloned().zip(idx).collect();
+                    body.substitute(&subst)
+                } else {
+                    Expr::Load(buf.clone(), idx)
+                }
+            }
+            Expr::Binary(op, a, b) => Expr::bin(
+                *op,
+                a.inline_calls(name, vars, body),
+                b.inline_calls(name, vars, body),
+            ),
+            Expr::Unary(op, a) => Expr::Unary(*op, Box::new(a.inline_calls(name, vars, body))),
+            Expr::Select(c, t, e) => Expr::select(
+                c.inline_calls(name, vars, body),
+                t.inline_calls(name, vars, body),
+                e.inline_calls(name, vars, body),
+            ),
+        }
+    }
+
+    /// Collect `(buffer, indices)` of every load, in evaluation order.
+    pub fn loads(&self) -> Vec<(String, Vec<Expr>)> {
+        let mut out = Vec::new();
+        self.visit(&mut |e| {
+            if let Expr::Load(buf, idx) = e {
+                out.push((buf.clone(), idx.clone()));
+            }
+        });
+        out
+    }
+
+    fn visit(&self, f: &mut dyn FnMut(&Expr)) {
+        f(self);
+        match self {
+            Expr::Const(_) | Expr::Var(_) => {}
+            Expr::Load(_, idx) => idx.iter().for_each(|e| e.visit(f)),
+            Expr::Binary(_, a, b) => {
+                a.visit(f);
+                b.visit(f);
+            }
+            Expr::Unary(_, a) => a.visit(f),
+            Expr::Select(c, t, e) => {
+                c.visit(f);
+                t.visit(f);
+                e.visit(f);
+            }
+        }
+    }
+
+    /// Number of ALU operations (binary + unary + select nodes),
+    /// excluding address arithmetic inside load indices (which maps to
+    /// the memory tiles' address generators). This is the PE-count
+    /// estimate: each op maps to one 16-bit ALU PE (§VI).
+    pub fn op_count(&self) -> usize {
+        match self {
+            Expr::Const(_) | Expr::Var(_) | Expr::Load(_, _) => 0,
+            Expr::Binary(_, a, b) => 1 + a.op_count() + b.op_count(),
+            Expr::Unary(_, a) => 1 + a.op_count(),
+            Expr::Select(c, t, e) => 1 + c.op_count() + t.op_count() + e.op_count(),
+        }
+    }
+
+    /// Depth of the ALU-op tree on the critical path: the pipeline
+    /// latency (in cycles) of the kernel when each op takes one cycle.
+    /// Leaves (constants, vars, loads) contribute 0.
+    pub fn depth(&self) -> i64 {
+        match self {
+            Expr::Const(_) | Expr::Var(_) => 0,
+            // Index arithmetic is address generation (the AGs), not the
+            // PE datapath: a load is a leaf.
+            Expr::Load(_, _) => 0,
+            Expr::Binary(_, a, b) => 1 + a.depth().max(b.depth()),
+            Expr::Unary(_, a) => 1 + a.depth(),
+            Expr::Select(c, t, e) => 1 + c.depth().max(t.depth()).max(e.depth()),
+        }
+    }
+
+    /// Extract this index expression as an [`Affine`] over the loop
+    /// iterators `dims` (outermost-first). Returns `None` for non-affine
+    /// indices — which the physical address generators cannot implement,
+    /// so lowering rejects them.
+    pub fn as_affine(&self, dims: &[String]) -> Option<Affine> {
+        let rank = dims.len();
+        match self {
+            Expr::Const(v) => Some(Affine::constant(rank, *v as i64)),
+            Expr::Var(n) => dims
+                .iter()
+                .position(|d| d == n)
+                .map(|k| Affine::var(rank, k)),
+            Expr::Binary(BinOp::Add, a, b) => {
+                Some(a.as_affine(dims)?.add(&b.as_affine(dims)?))
+            }
+            Expr::Binary(BinOp::Sub, a, b) => {
+                Some(a.as_affine(dims)?.sub(&b.as_affine(dims)?))
+            }
+            Expr::Binary(BinOp::Mul, a, b) => {
+                let (fa, fb) = (a.as_affine(dims)?, b.as_affine(dims)?);
+                if fa.is_constant() {
+                    Some(fb.scale(fa.offset))
+                } else if fb.is_constant() {
+                    Some(fa.scale(fb.offset))
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        }
+    }
+
+    /// Extract a full access map from `Load` indices.
+    pub fn load_affine_map(idx: &[Expr], dims: &[String]) -> Option<AffineMap> {
+        let outs: Option<Vec<Affine>> = idx.iter().map(|e| e.as_affine(dims)).collect();
+        Some(AffineMap::new(dims.len(), outs?))
+    }
+}
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Expr::Const(v) => write!(f, "{v}"),
+            Expr::Var(n) => write!(f, "{n}"),
+            Expr::Load(b, idx) => {
+                write!(f, "{b}(")?;
+                for (k, e) in idx.iter().enumerate() {
+                    if k > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{e}")?;
+                }
+                write!(f, ")")
+            }
+            Expr::Binary(op, a, b) => write!(f, "({a} {op:?} {b})"),
+            Expr::Unary(op, a) => write!(f, "{op:?}({a})"),
+            Expr::Select(c, t, e) => write!(f, "select({c}, {t}, {e})"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vars(pairs: &[(&str, i64)]) -> BTreeMap<String, i64> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn eval_arith() {
+        // brighten(x, y) = min(2 * input(x, y), 255)
+        let e = Expr::min(
+            Expr::mul(Expr::c(2), Expr::ld("input", vec![Expr::v("y"), Expr::v("x")])),
+            Expr::c(255),
+        );
+        let mut load = |_: &str, p: &[i64]| (p[0] * 10 + p[1]) as i32;
+        assert_eq!(e.eval(&vars(&[("x", 3), ("y", 2)]), &mut load), 46);
+        assert_eq!(e.eval(&vars(&[("x", 9), ("y", 20)]), &mut load), 255);
+    }
+
+    #[test]
+    fn eval_select_and_unary() {
+        let e = Expr::select(
+            Expr::bin(BinOp::Lt, Expr::v("x"), Expr::c(0)),
+            Expr::neg(Expr::v("x")),
+            Expr::abs(Expr::sub(Expr::v("x"), Expr::c(10))),
+        );
+        let mut no_load = |_: &str, _: &[i64]| 0;
+        assert_eq!(e.eval(&vars(&[("x", -4)]), &mut no_load), 4);
+        assert_eq!(e.eval(&vars(&[("x", 3)]), &mut no_load), 7);
+    }
+
+    #[test]
+    fn floor_division_semantics() {
+        assert_eq!(eval_binop(BinOp::Div, -3, 2), -2);
+        assert_eq!(eval_binop(BinOp::Mod, -3, 2), 1);
+        assert_eq!(eval_binop(BinOp::Div, 7, 2), 3);
+    }
+
+    #[test]
+    fn substitute_unroll_style() {
+        // x -> 2*xo + 1 (the odd unrolled copy).
+        let e = Expr::ld("f", vec![Expr::v("y"), Expr::add(Expr::v("x"), Expr::c(1))]);
+        let subst: BTreeMap<String, Expr> = [(
+            "x".to_string(),
+            Expr::add(Expr::mul(Expr::c(2), Expr::v("xo")), Expr::c(1)),
+        )]
+        .into();
+        let e2 = e.substitute(&subst);
+        let mut last = Vec::new();
+        let mut load = |_: &str, p: &[i64]| {
+            last = p.to_vec();
+            0
+        };
+        e2.eval(&vars(&[("xo", 5), ("y", 0)]), &mut load);
+        assert_eq!(last, vec![0, 12]);
+    }
+
+    #[test]
+    fn inline_recompute() {
+        // g(x) = f(x) + f(x+1) with f(x) = 2*in(x) inlined:
+        // g(x) = 2*in(x) + 2*in(x+1).
+        let f_body = Expr::mul(Expr::c(2), Expr::ld("in", vec![Expr::v("x")]));
+        let g = Expr::add(
+            Expr::ld("f", vec![Expr::v("x")]),
+            Expr::ld("f", vec![Expr::add(Expr::v("x"), Expr::c(1))]),
+        );
+        let inlined = g.inline_calls("f", &["x".to_string()], &f_body);
+        let mut load = |_: &str, p: &[i64]| p[0] as i32;
+        assert_eq!(inlined.eval(&vars(&[("x", 10)]), &mut load), 2 * 10 + 2 * 11);
+        // No f loads remain.
+        assert!(inlined.loads().iter().all(|(b, _)| b == "in"));
+    }
+
+    #[test]
+    fn op_count_counts_alus() {
+        let e = Expr::min(
+            Expr::mul(Expr::c(2), Expr::ld("i", vec![Expr::v("x")])),
+            Expr::c(255),
+        );
+        assert_eq!(e.op_count(), 2); // mul + min
+    }
+
+    #[test]
+    fn affine_extraction() {
+        let dims = vec!["y".to_string(), "x".to_string()];
+        // x + 1 over (y, x).
+        let e = Expr::add(Expr::v("x"), Expr::c(1));
+        assert_eq!(e.as_affine(&dims), Some(Affine::new(vec![0, 1], 1)));
+        // 2*y - x.
+        let e = Expr::sub(Expr::mul(Expr::c(2), Expr::v("y")), Expr::v("x"));
+        assert_eq!(e.as_affine(&dims), Some(Affine::new(vec![2, -1], 0)));
+        // x*y is not affine.
+        let e = Expr::mul(Expr::v("x"), Expr::v("y"));
+        assert_eq!(e.as_affine(&dims), None);
+        // An unknown var is not affine over these dims.
+        assert_eq!(Expr::v("z").as_affine(&dims), None);
+    }
+
+    #[test]
+    fn load_affine_map_extraction() {
+        let dims = vec!["y".to_string(), "x".to_string()];
+        let idx = vec![Expr::v("y"), Expr::add(Expr::v("x"), Expr::c(1))];
+        let m = Expr::load_affine_map(&idx, &dims).unwrap();
+        assert_eq!(m.apply(&[3, 7]), vec![3, 8]);
+    }
+
+    #[test]
+    fn sum_builder() {
+        let e = Expr::sum(vec![Expr::c(1), Expr::c(2), Expr::c(3)]);
+        let mut no_load = |_: &str, _: &[i64]| 0;
+        assert_eq!(e.eval(&BTreeMap::new(), &mut no_load), 6);
+        assert_eq!(e.op_count(), 2);
+    }
+}

@@ -1,0 +1,229 @@
+//! Funcs (pipeline stages) and whole programs.
+
+use super::expr::Expr;
+use super::schedule::HwSchedule;
+
+/// An optional reduction update over a reduction domain (Halide RDom).
+///
+/// `update` may reference the func itself (the running accumulator) plus
+/// the reduction iterators. When a reduction loop is *not* fully unrolled
+/// the scheduler classifies the pipeline as DNN-style (§V-B).
+#[derive(Clone, Debug)]
+pub struct Reduction {
+    /// Reduction iterators, outermost-first: `(name, min, extent)`.
+    pub rdom: Vec<(String, i64, i64)>,
+    /// Initial value of the accumulator (usually 0).
+    pub init: Expr,
+    /// One reduction step; `Load(self_name, pure_vars)` denotes the
+    /// running accumulator.
+    pub update: Expr,
+}
+
+/// A Halide Func: a named stage defined over pure iterators
+/// (**outermost-first**, so `vars = ["y", "x"]` means y is the outer
+/// loop), with either a pure body or a reduction.
+#[derive(Clone, Debug)]
+pub struct Func {
+    pub name: String,
+    pub vars: Vec<String>,
+    /// Pure body (for non-reduction funcs), referencing inputs and
+    /// earlier funcs through `Expr::Load`.
+    pub body: Expr,
+    pub reduction: Option<Reduction>,
+}
+
+impl Func {
+    pub fn pure_fn(name: impl Into<String>, vars: &[&str], body: Expr) -> Func {
+        Func {
+            name: name.into(),
+            vars: vars.iter().map(|s| s.to_string()).collect(),
+            body,
+            reduction: None,
+        }
+    }
+
+    pub fn reduce_fn(
+        name: impl Into<String>,
+        vars: &[&str],
+        init: Expr,
+        rdom: &[(&str, i64, i64)],
+        update: Expr,
+    ) -> Func {
+        Func {
+            name: name.into(),
+            vars: vars.iter().map(|s| s.to_string()).collect(),
+            body: init.clone(),
+            reduction: Some(Reduction {
+                rdom: rdom.iter().map(|(n, m, e)| (n.to_string(), *m, *e)).collect(),
+                init,
+                update,
+            }),
+        }
+    }
+}
+
+/// An external input image streamed to the accelerator
+/// (`stream_to_accelerator` in the paper's scheduling language).
+#[derive(Clone, Debug)]
+pub struct InputDecl {
+    pub name: String,
+    /// Rank only; concrete extents come from bounds inference against the
+    /// output tile.
+    pub rank: usize,
+}
+
+/// A whole Halide pipeline: inputs, funcs in producer-to-consumer
+/// (topological) order — the last func is the pipeline output — and the
+/// hardware schedule.
+#[derive(Clone, Debug)]
+pub struct Program {
+    pub name: String,
+    pub inputs: Vec<InputDecl>,
+    pub funcs: Vec<Func>,
+    pub schedule: HwSchedule,
+}
+
+impl Program {
+    pub fn func(&self, name: &str) -> Option<&Func> {
+        self.funcs.iter().find(|f| f.name == name)
+    }
+
+    pub fn is_input(&self, name: &str) -> bool {
+        self.inputs.iter().any(|i| i.name == name)
+    }
+
+    /// The accelerator output func (the last one not scheduled onto the
+    /// host, §VI-C sch6).
+    pub fn accel_output(&self) -> &Func {
+        self.funcs
+            .iter()
+            .rev()
+            .find(|f| !self.schedule.host_stages.contains(&f.name))
+            .expect("no accelerator funcs")
+    }
+
+    /// Sanity checks: topological producer order, known loads, reduction
+    /// self-references well-formed.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let mut defined: Vec<&str> = self.inputs.iter().map(|i| i.name.as_str()).collect();
+        for f in &self.funcs {
+            let check = |e: &Expr, selfok: bool| -> anyhow::Result<()> {
+                for (buf, idx) in e.loads() {
+                    let known = defined.contains(&buf.as_str()) || (selfok && buf == f.name);
+                    anyhow::ensure!(
+                        known,
+                        "{}: load of undefined buffer {buf} in func {}",
+                        self.name,
+                        f.name
+                    );
+                    if buf == f.name {
+                        anyhow::ensure!(
+                            idx.len() == f.vars.len(),
+                            "self-reference arity mismatch in {}",
+                            f.name
+                        );
+                    }
+                }
+                Ok(())
+            };
+            check(&f.body, false)?;
+            if let Some(r) = &f.reduction {
+                check(&r.init, false)?;
+                check(&r.update, true)?;
+            }
+            defined.push(&f.name);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn brighten_blur() -> Program {
+        // The paper's running example (Fig 1): brighten then 2x2 blur.
+        let brighten = Func::pure_fn(
+            "brighten",
+            &["y", "x"],
+            Expr::mul(Expr::c(2), Expr::ld("input", vec![Expr::v("y"), Expr::v("x")])),
+        );
+        let blur = Func::pure_fn(
+            "blur",
+            &["y", "x"],
+            Expr::shr(
+                Expr::sum(vec![
+                    Expr::ld("brighten", vec![Expr::v("y"), Expr::v("x")]),
+                    Expr::ld(
+                        "brighten",
+                        vec![Expr::v("y"), Expr::add(Expr::v("x"), Expr::c(1))],
+                    ),
+                    Expr::ld(
+                        "brighten",
+                        vec![Expr::add(Expr::v("y"), Expr::c(1)), Expr::v("x")],
+                    ),
+                    Expr::ld(
+                        "brighten",
+                        vec![
+                            Expr::add(Expr::v("y"), Expr::c(1)),
+                            Expr::add(Expr::v("x"), Expr::c(1)),
+                        ],
+                    ),
+                ]),
+                2,
+            ),
+        );
+        Program {
+            name: "brighten_blur".into(),
+            inputs: vec![InputDecl { name: "input".into(), rank: 2 }],
+            funcs: vec![brighten, blur],
+            schedule: HwSchedule::new([63, 63]).store_at("brighten"),
+        }
+    }
+
+    #[test]
+    fn validate_ok() {
+        brighten_blur().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_undefined_buffer() {
+        let mut p = brighten_blur();
+        p.funcs[1].body = Expr::ld("nonexistent", vec![Expr::v("y"), Expr::v("x")]);
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn accel_output_respects_host_stages() {
+        let mut p = brighten_blur();
+        assert_eq!(p.accel_output().name, "blur");
+        p.schedule.host_stages.push("blur".into());
+        assert_eq!(p.accel_output().name, "brighten");
+    }
+
+    #[test]
+    fn reduce_fn_shape() {
+        let f = Func::reduce_fn(
+            "conv",
+            &["y", "x"],
+            Expr::c(0),
+            &[("ry", 0, 3), ("rx", 0, 3)],
+            Expr::add(
+                Expr::ld("conv", vec![Expr::v("y"), Expr::v("x")]),
+                Expr::mul(
+                    Expr::ld(
+                        "in",
+                        vec![
+                            Expr::add(Expr::v("y"), Expr::v("ry")),
+                            Expr::add(Expr::v("x"), Expr::v("rx")),
+                        ],
+                    ),
+                    Expr::ld("w", vec![Expr::v("ry"), Expr::v("rx")]),
+                ),
+            ),
+        );
+        let r = f.reduction.as_ref().unwrap();
+        assert_eq!(r.rdom.len(), 2);
+        assert_eq!(r.rdom[0], ("ry".to_string(), 0, 3));
+    }
+}

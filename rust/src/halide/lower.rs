@@ -1,0 +1,569 @@
+//! Lowering: inlining, reduction unrolling, spatial unrolling, and
+//! production of the scheduled loop IR that buffer extraction consumes.
+//!
+//! This is the "scheduling" step of Fig 1: after it, every materialized
+//! func is a [`LoweredStage`] — a loop nest with affine store/load access
+//! maps and a compute-kernel expression — and every non-materialized func
+//! has been inlined into its consumers (recomputed per use).
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use super::bounds::{self, StageDef};
+use super::expr::Expr;
+use super::func::{Func, Program};
+use crate::poly::set::{BoxSet, Dim};
+use crate::poly::AffineMap;
+use crate::tensor::Tensor;
+
+/// One spatial copy of a stage's compute kernel. Unrolling a loop by `u`
+/// yields `u` instances issuing in the same cycle; each instance carries
+/// its own store map and load ports (§V-A `unroll`).
+#[derive(Clone, Debug)]
+pub struct StageInstance {
+    /// Buffer coordinates written, as an affine map over the stage's
+    /// full (pure x reduction) domain.
+    pub store: AffineMap,
+    /// Distinct `(buffer, access map)` load ports over the full domain.
+    pub loads: Vec<(String, AffineMap)>,
+    /// The kernel expression (loads still symbolic).
+    pub kernel: Expr,
+}
+
+/// A materialized func lowered to a loop nest.
+#[derive(Clone, Debug)]
+pub struct LoweredStage {
+    pub name: String,
+    /// Pure loop domain (absolute coordinates, outermost-first).
+    pub pure_domain: BoxSet,
+    /// Reduction loop domain, iterated innermost of the pure loops;
+    /// empty rank for non-reduction stages.
+    pub rdom: BoxSet,
+    pub instances: Vec<StageInstance>,
+}
+
+impl LoweredStage {
+    /// The full compute domain: pure dims then reduction dims.
+    pub fn full_domain(&self) -> BoxSet {
+        self.pure_domain.product(&self.rdom)
+    }
+
+    pub fn is_reduction(&self) -> bool {
+        self.rdom.rank() > 0
+    }
+
+    /// ALU-op estimate: each arithmetic node of every instance maps to
+    /// one PE (§VI, Table IV/V PE counts).
+    pub fn alu_ops(&self) -> usize {
+        self.instances.iter().map(|i| i.kernel.op_count()).sum()
+    }
+}
+
+/// The whole pipeline after lowering.
+#[derive(Clone, Debug)]
+pub struct LoweredPipeline {
+    pub name: String,
+    /// Topological order; the last stage produces the accelerator output.
+    pub stages: Vec<LoweredStage>,
+    /// Realization box of every materialized buffer and streamed input.
+    pub buffers: BTreeMap<String, BoxSet>,
+    pub inputs: Vec<String>,
+    pub output: String,
+    pub tile: Vec<i64>,
+    /// Funcs scheduled on the host CPU (evaluated by the coordinator).
+    pub host_funcs: Vec<Func>,
+}
+
+/// Fully unroll a reduction func into a pure expression: repeatedly
+/// substitute the reduction step, replacing the accumulator reference
+/// with the running expression and reduction iterators with constants.
+fn unroll_reduction(f: &Func) -> Result<Expr> {
+    let r = f.reduction.as_ref().context("not a reduction")?;
+    let rdom_box = BoxSet::new(
+        r.rdom
+            .iter()
+            .map(|(n, m, e)| Dim::new(n.clone(), *m, *e))
+            .collect(),
+    );
+    let mut acc = r.init.clone();
+    for pt in rdom_box.points() {
+        let mut subst: BTreeMap<String, Expr> = r
+            .rdom
+            .iter()
+            .zip(&pt)
+            .map(|((n, _, _), &v)| (n.clone(), Expr::c(v as i32)))
+            .collect();
+        // Accumulator: self-load at the pure vars.
+        let step = r.update.substitute(&subst);
+        subst.clear();
+        acc = step.inline_calls(&f.name, &f.vars, &acc);
+    }
+    Ok(acc)
+}
+
+/// Extract the distinct load ports of `kernel` over `dims`
+/// (outermost-first), skipping accumulator self-references.
+fn extract_loads(kernel: &Expr, dims: &[String], self_name: &str) -> Result<Vec<(String, AffineMap)>> {
+    let mut out: Vec<(String, AffineMap)> = Vec::new();
+    for (buf, idx) in kernel.loads() {
+        if buf == self_name {
+            continue;
+        }
+        let map = Expr::load_affine_map(&idx, dims)
+            .with_context(|| format!("non-affine access to {buf} in {self_name}"))?;
+        if !out.iter().any(|(b, m)| *b == buf && *m == map) {
+            out.push((buf, map));
+        }
+    }
+    Ok(out)
+}
+
+/// Lower a program to stages (Fig 1 "scheduling" output).
+pub fn lower(program: &Program) -> Result<LoweredPipeline> {
+    program.validate()?;
+    let sched = &program.schedule;
+
+    // Partition host stages off the accelerator (sch6 of Table V).
+    let host_funcs: Vec<Func> = program
+        .funcs
+        .iter()
+        .filter(|f| sched.host_stages.contains(&f.name))
+        .cloned()
+        .collect();
+    let accel_funcs: Vec<&Func> = program
+        .funcs
+        .iter()
+        .filter(|f| !sched.host_stages.contains(&f.name))
+        .collect();
+    let output = accel_funcs.last().context("no accelerator funcs")?.name.clone();
+
+    // A func is materialized (gets a unified buffer) iff store_at'd, is
+    // the output, or carries a non-unrolled reduction (which cannot be
+    // recomputed per use).
+    let materialized = |f: &Func| -> bool {
+        sched.is_memory(&f.name)
+            || f.name == output
+            || (f.reduction.is_some() && !sched.is_reduction_unrolled(&f.name))
+    };
+
+    // Inline pass: walk in topological order, keeping the current
+    // (already fully inlined) body of every non-materialized func and
+    // substituting it into each later consumer.
+    let mut inlined_bodies: Vec<(String, Vec<String>, Expr)> = Vec::new();
+    let mut stage_defs: Vec<StageDef> = Vec::new();
+    for f in &accel_funcs {
+        // Resolve this func's kernel expression.
+        let mut kernel = if let Some(r) = &f.reduction {
+            if sched.is_reduction_unrolled(&f.name) {
+                unroll_reduction(f)?
+            } else {
+                r.update.clone()
+            }
+        } else {
+            f.body.clone()
+        };
+        // Substitute all previously inlined producers (repeat until no
+        // producer loads remain — inlined bodies may reference other
+        // inlined funcs).
+        loop {
+            let mut changed = false;
+            for (name, vars, body) in &inlined_bodies {
+                if kernel.loads().iter().any(|(b, _)| b == name) {
+                    kernel = kernel.inline_calls(name, vars, body);
+                    changed = true;
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        if materialized(f) {
+            let rdom = if f.reduction.is_some() && !sched.is_reduction_unrolled(&f.name) {
+                f.reduction.as_ref().unwrap().rdom.clone()
+            } else {
+                vec![]
+            };
+            stage_defs.push(StageDef {
+                name: f.name.clone(),
+                vars: f.vars.clone(),
+                rdom,
+                kernel,
+            });
+        } else {
+            inlined_bodies.push((f.name.clone(), f.vars.clone(), kernel));
+        }
+    }
+
+    // Bounds inference over the materialized graph (unrolled dims are
+    // rounded up to a factor multiple, growing producer halos).
+    let required = bounds::infer(&stage_defs, &sched.tile, &sched.unroll)?;
+    let mut buffers: BTreeMap<String, BoxSet> = BTreeMap::new();
+    for s in &stage_defs {
+        buffers.insert(
+            s.name.clone(),
+            bounds::intervals_to_box(&s.vars, &required[&s.name]),
+        );
+    }
+    let mut inputs = Vec::new();
+    for inp in &program.inputs {
+        if let Some(iv) = required.get(&inp.name) {
+            anyhow::ensure!(iv.len() == inp.rank, "input {} rank mismatch", inp.name);
+            let names: Vec<String> = (0..inp.rank).map(|k| format!("i{k}")).collect();
+            buffers.insert(inp.name.clone(), bounds::intervals_to_box(&names, iv));
+            inputs.push(inp.name.clone());
+        }
+    }
+
+    // Emit lowered stages, applying spatial unrolling.
+    let mut stages = Vec::new();
+    for def in &stage_defs {
+        let mut pure_domain = buffers[&def.name].clone();
+        let rdom = BoxSet::new(
+            def.rdom
+                .iter()
+                .map(|(n, m, e)| Dim::new(n.clone(), *m, *e))
+                .collect(),
+        );
+        // Base instance: identity store over pure dims.
+        let all_dims: Vec<String> = pure_domain
+            .dims
+            .iter()
+            .map(|d| d.name.clone())
+            .chain(rdom.dims.iter().map(|d| d.name.clone()))
+            .collect();
+        let store_idx: Vec<Expr> = def.vars.iter().map(Expr::v).collect();
+        let mut insts: Vec<(Vec<Expr>, Expr)> = vec![(store_idx, def.kernel.clone())];
+
+        // Apply each unroll directive: split var v by factor u.
+        for (var, factor) in sched.unroll_factors(&def.name) {
+            let k = pure_domain
+                .dim_index(var)
+                .with_context(|| format!("unroll of unknown var {var} in {}", def.name))?;
+            let d = &pure_domain.dims[k];
+            anyhow::ensure!(
+                d.min == 0,
+                "unroll({}, {var}, {factor}): dim must start at 0, starts at {}",
+                def.name,
+                d.min
+            );
+            // Bounds inference already rounded the extent up.
+            anyhow::ensure!(d.extent % factor == 0, "internal: extent not rounded");
+            pure_domain.dims[k] = Dim::new(var.clone(), 0, d.extent / factor);
+            let mut next = Vec::with_capacity(insts.len() * *factor as usize);
+            for (sidx, kern) in &insts {
+                for lane in 0..*factor {
+                    let subst: BTreeMap<String, Expr> = [(
+                        var.clone(),
+                        Expr::add(
+                            Expr::mul(Expr::c(*factor as i32), Expr::v(var.clone())),
+                            Expr::c(lane as i32),
+                        ),
+                    )]
+                    .into();
+                    next.push((
+                        sidx.iter().map(|e| e.substitute(&subst)).collect(),
+                        kern.substitute(&subst),
+                    ));
+                }
+            }
+            insts = next;
+        }
+
+        let instances: Result<Vec<StageInstance>> = insts
+            .into_iter()
+            .map(|(sidx, kern)| {
+                let store = Expr::load_affine_map(&sidx, &all_dims)
+                    .context("non-affine store index")?
+                    // Store coords ignore reduction dims (write-once per
+                    // pure point at the final reduction iteration).
+                    ;
+                let loads = extract_loads(&kern, &all_dims, &def.name)?;
+                Ok(StageInstance { store, loads, kernel: kern })
+            })
+            .collect();
+
+        stages.push(LoweredStage {
+            name: def.name.clone(),
+            pure_domain,
+            rdom,
+            instances: instances?,
+        });
+    }
+
+    Ok(LoweredPipeline {
+        name: program.name.clone(),
+        stages,
+        buffers,
+        inputs,
+        output,
+        tile: sched.tile.clone(),
+        host_funcs,
+    })
+}
+
+impl LoweredPipeline {
+    /// Reference (functional) execution: evaluate every stage over its
+    /// domain in program order. This is the semantics the cycle-accurate
+    /// schedule and the CGRA simulator must preserve.
+    pub fn execute(&self, inputs: &BTreeMap<String, Tensor>) -> Result<BTreeMap<String, Tensor>> {
+        let mut bufs: BTreeMap<String, Tensor> = BTreeMap::new();
+        for name in &self.inputs {
+            let t = inputs
+                .get(name)
+                .with_context(|| format!("missing input {name}"))?;
+            anyhow::ensure!(
+                t.shape == self.buffers[name],
+                "input {name} shape {} != required {}",
+                t.shape,
+                self.buffers[name]
+            );
+            bufs.insert(name.clone(), t.clone());
+        }
+        for stage in &self.stages {
+            let mut out = Tensor::zeros(self.buffers[&stage.name].clone());
+            let pure_names: Vec<String> =
+                stage.pure_domain.dims.iter().map(|d| d.name.clone()).collect();
+            let rdom_names: Vec<String> =
+                stage.rdom.dims.iter().map(|d| d.name.clone()).collect();
+            for p in stage.pure_domain.points() {
+                for inst in &stage.instances {
+                    let mut env: BTreeMap<String, i64> =
+                        pure_names.iter().cloned().zip(p.iter().cloned()).collect();
+                    let mut acc: i32 = 0;
+                    if stage.is_reduction() {
+                        for rp in stage.rdom.points() {
+                            for (n, v) in rdom_names.iter().zip(&rp) {
+                                env.insert(n.clone(), *v);
+                            }
+                            let acc_in = acc;
+                            let mut load = |buf: &str, pt: &[i64]| -> i32 {
+                                if buf == stage.name {
+                                    acc_in
+                                } else {
+                                    bufs[buf].get(pt)
+                                }
+                            };
+                            acc = inst.kernel.eval(&env, &mut load);
+                        }
+                    } else {
+                        let mut load = |buf: &str, pt: &[i64]| bufs[buf].get(pt);
+                        acc = inst.kernel.eval(&env, &mut load);
+                    }
+                    // Store at the instance's (possibly unrolled) coords.
+                    let full_pt: Vec<i64> = p
+                        .iter()
+                        .cloned()
+                        .chain(stage.rdom.dims.iter().map(|d| d.min + d.extent - 1))
+                        .collect();
+                    let coords = inst.store.apply(&full_pt);
+                    out.set(&coords, acc);
+                }
+            }
+            bufs.insert(stage.name.clone(), out);
+        }
+        Ok(bufs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::halide::func::InputDecl;
+    use crate::halide::schedule::HwSchedule;
+
+    fn brighten_blur(tile: i64) -> Program {
+        let brighten = Func::pure_fn(
+            "brighten",
+            &["y", "x"],
+            Expr::mul(Expr::c(2), Expr::ld("input", vec![Expr::v("y"), Expr::v("x")])),
+        );
+        let blur = Func::pure_fn(
+            "blur",
+            &["y", "x"],
+            Expr::shr(
+                Expr::sum(vec![
+                    Expr::ld("brighten", vec![Expr::v("y"), Expr::v("x")]),
+                    Expr::ld(
+                        "brighten",
+                        vec![Expr::v("y"), Expr::add(Expr::v("x"), Expr::c(1))],
+                    ),
+                    Expr::ld(
+                        "brighten",
+                        vec![Expr::add(Expr::v("y"), Expr::c(1)), Expr::v("x")],
+                    ),
+                    Expr::ld(
+                        "brighten",
+                        vec![
+                            Expr::add(Expr::v("y"), Expr::c(1)),
+                            Expr::add(Expr::v("x"), Expr::c(1)),
+                        ],
+                    ),
+                ]),
+                2,
+            ),
+        );
+        Program {
+            name: "brighten_blur".into(),
+            inputs: vec![InputDecl { name: "input".into(), rank: 2 }],
+            funcs: vec![brighten, blur],
+            schedule: HwSchedule::new([tile, tile]).store_at("brighten"),
+        }
+    }
+
+    #[test]
+    fn lower_brighten_blur_structure() {
+        let lp = lower(&brighten_blur(64)).unwrap();
+        assert_eq!(lp.stages.len(), 2);
+        assert_eq!(lp.stages[0].name, "brighten");
+        assert_eq!(lp.stages[1].name, "blur");
+        // brighten realization is 65x65 (blur halo).
+        assert_eq!(lp.buffers["brighten"].dims[0].extent, 65);
+        // blur has 4 loads of brighten (the 2x2 window, Fig 2).
+        assert_eq!(lp.stages[1].instances[0].loads.len(), 4);
+        assert_eq!(lp.output, "blur");
+    }
+
+    #[test]
+    fn inlining_recomputes() {
+        // Without store_at, brighten is inlined into blur: 1 stage, and
+        // the 4 loads go straight to input with brighten's mul recomputed
+        // 4 times (more PEs, fewer memories — Table V sch1 vs sch3).
+        let mut p = brighten_blur(64);
+        p.schedule = HwSchedule::new([64, 64]);
+        let lp = lower(&p).unwrap();
+        assert_eq!(lp.stages.len(), 1);
+        let inst = &lp.stages[0].instances[0];
+        assert!(inst.loads.iter().all(|(b, _)| b == "input"));
+        assert_eq!(inst.loads.len(), 4);
+        // Recompute has more ALU ops than the buffered version's blur.
+        let buffered = lower(&brighten_blur(64)).unwrap();
+        assert!(lp.stages[0].alu_ops() > buffered.stages[1].alu_ops());
+    }
+
+    #[test]
+    fn execute_matches_scalar_reference() {
+        let lp = lower(&brighten_blur(8)).unwrap();
+        let in_box = lp.buffers["input"].clone();
+        let input = Tensor::from_fn(in_box, |p| (p[0] * 9 + p[1]) as i32);
+        let mut ins = BTreeMap::new();
+        ins.insert("input".to_string(), input.clone());
+        let out = &lp.execute(&ins).unwrap()["blur"];
+        for y in 0..8 {
+            for x in 0..8 {
+                let b = |yy: i64, xx: i64| 2 * input.get(&[yy, xx]);
+                let expect = (b(y, x) + b(y, x + 1) + b(y + 1, x) + b(y + 1, x + 1)) >> 2;
+                assert_eq!(out.get(&[y, x]), expect, "at ({y},{x})");
+            }
+        }
+    }
+
+    #[test]
+    fn unroll_creates_instances() {
+        let mut p = brighten_blur(8);
+        p.schedule = HwSchedule::new([8, 8]).store_at("brighten").unroll("blur", "x", 2);
+        let lp = lower(&p).unwrap();
+        let blur = &lp.stages[1];
+        assert_eq!(blur.instances.len(), 2);
+        assert_eq!(blur.pure_domain.dims[1].extent, 4);
+        // Lane 1 stores to 2x+1.
+        assert_eq!(blur.instances[1].store.apply(&[3, 2]), vec![3, 5]);
+        // Execution still matches.
+        let input = Tensor::from_fn(lp.buffers["input"].clone(), |p| (p[0] + 2 * p[1]) as i32);
+        let mut ins = BTreeMap::new();
+        ins.insert("input".to_string(), input.clone());
+        let out = &lp.execute(&ins).unwrap()["blur"];
+        let b = |yy: i64, xx: i64| 2 * input.get(&[yy, xx]);
+        for y in 0..8 {
+            for x in 0..8 {
+                let expect = (b(y, x) + b(y, x + 1) + b(y + 1, x) + b(y + 1, x + 1)) >> 2;
+                assert_eq!(out.get(&[y, x]), expect);
+            }
+        }
+    }
+
+    #[test]
+    fn reduction_lowers_and_executes() {
+        // 3x3 box filter as a non-unrolled reduction (DNN-style stage).
+        let conv = Func::reduce_fn(
+            "conv",
+            &["y", "x"],
+            Expr::c(0),
+            &[("ry", 0, 3), ("rx", 0, 3)],
+            Expr::add(
+                Expr::ld("conv", vec![Expr::v("y"), Expr::v("x")]),
+                Expr::ld(
+                    "in",
+                    vec![
+                        Expr::add(Expr::v("y"), Expr::v("ry")),
+                        Expr::add(Expr::v("x"), Expr::v("rx")),
+                    ],
+                ),
+            ),
+        );
+        let p = Program {
+            name: "boxf".into(),
+            inputs: vec![InputDecl { name: "in".into(), rank: 2 }],
+            funcs: vec![conv],
+            schedule: HwSchedule::new([4, 4]),
+        };
+        let lp = lower(&p).unwrap();
+        assert!(lp.stages[0].is_reduction());
+        assert_eq!(lp.stages[0].full_domain().rank(), 4);
+        let input = Tensor::from_fn(lp.buffers["in"].clone(), |p| (p[0] * 6 + p[1]) as i32);
+        let mut ins = BTreeMap::new();
+        ins.insert("in".to_string(), input.clone());
+        let out = &lp.execute(&ins).unwrap()["conv"];
+        for y in 0..4 {
+            for x in 0..4 {
+                let mut s = 0;
+                for ry in 0..3 {
+                    for rx in 0..3 {
+                        s += input.get(&[y + ry, x + rx]);
+                    }
+                }
+                assert_eq!(out.get(&[y, x]), s);
+            }
+        }
+    }
+
+    #[test]
+    fn unrolled_reduction_becomes_pure() {
+        let conv = Func::reduce_fn(
+            "conv",
+            &["y", "x"],
+            Expr::c(0),
+            &[("ry", 0, 2), ("rx", 0, 2)],
+            Expr::add(
+                Expr::ld("conv", vec![Expr::v("y"), Expr::v("x")]),
+                Expr::ld(
+                    "in",
+                    vec![
+                        Expr::add(Expr::v("y"), Expr::v("ry")),
+                        Expr::add(Expr::v("x"), Expr::v("rx")),
+                    ],
+                ),
+            ),
+        );
+        let p = Program {
+            name: "boxf2".into(),
+            inputs: vec![InputDecl { name: "in".into(), rank: 2 }],
+            funcs: vec![conv],
+            schedule: HwSchedule::new([4, 4]).unroll_reduction("conv"),
+        };
+        let lp = lower(&p).unwrap();
+        assert!(!lp.stages[0].is_reduction());
+        // 4 loads (the 2x2 window), all of `in`.
+        assert_eq!(lp.stages[0].instances[0].loads.len(), 4);
+    }
+
+    #[test]
+    fn host_stage_excluded() {
+        let mut p = brighten_blur(8);
+        p.schedule = p.schedule.on_host("blur");
+        let lp = lower(&p).unwrap();
+        assert_eq!(lp.output, "brighten");
+        assert_eq!(lp.host_funcs.len(), 1);
+        assert_eq!(lp.host_funcs[0].name, "blur");
+    }
+}

@@ -1,0 +1,32 @@
+//! A mini-Halide frontend.
+//!
+//! The paper's compiler consumes *scheduled Halide IR* — loop nests after
+//! Halide's scheduling directives (`tile`, `unroll`, `compute_at`,
+//! `store_at`) plus the paper's accelerator extensions (`hw_accelerate`,
+//! `stream_to_accelerator`) have been applied (§II, §V-A). This module is
+//! a from-scratch embedded DSL producing exactly that IR:
+//!
+//! * [`expr::Expr`] — 32-bit integer expressions (the CGRA models 16-bit
+//!   ALUs for cost purposes; we compute in i32 so the golden JAX models
+//!   match bit-exactly without incidental overflow differences).
+//! * [`func::Func`] / [`func::Program`] — pure and reduction stages.
+//! * [`schedule::HwSchedule`] — the paper's scheduling directives.
+//! * [`bounds`] — Halide-style interval bounds inference.
+//! * [`lower`] — inlining (recompute), unrolling, and lowering to
+//!   [`lower::LoweredStage`]s that buffer extraction consumes.
+//!
+//! Quasi-affine accesses (upsample's `x/2`, demosaic's `x%2`) are written
+//! in pre-strip-mined form (e.g. iterate `(xo, xi)` with `x = 2*xo + xi`)
+//! so every access map stays strictly affine, as the physical address
+//! generators require (§IV-A).
+
+pub mod bounds;
+pub mod expr;
+pub mod func;
+pub mod lower;
+pub mod schedule;
+
+pub use expr::{BinOp, Expr, UnOp};
+pub use func::{Func, InputDecl, Program, Reduction};
+pub use lower::{LoweredPipeline, LoweredStage, StageInstance};
+pub use schedule::HwSchedule;

@@ -1,0 +1,126 @@
+//! The paper's hardware scheduling directives (§V-A).
+//!
+//! Halide separates algorithm from schedule; the paper extends the
+//! scheduling language with `hw_accelerate` / `stream_to_accelerator`
+//! and reuses `tile`, `store_at`/`compute_at` and `unroll` to control
+//! what becomes a push memory versus what is fused (recomputed), and
+//! which loops are parallelized in space.
+
+use std::collections::BTreeMap;
+
+/// The scheduling decisions for one program, mirroring the directives in
+/// Fig 1 and §VI-C of the paper:
+///
+/// * `tile`        — the accelerator output-tile extents (`hw_accelerate`
+///   operates on one tile; the global buffer streams tiles, Fig 12).
+/// * `store_at`    — funcs materialized as unified buffers; every other
+///   intermediate func is **inlined** into its consumers (recomputed),
+///   which is how sch1 "recompute all" vs sch3 "no recompute" of
+///   Table V arise.
+/// * `unroll`      — spatial unrolling of a pure loop by a factor
+///   (sch4 "unroll by 2": two output pixels per cycle).
+/// * `unroll_reduction` — fully unroll a func's reduction loops; if every
+///   reduction is fully unrolled the scheduler uses the *stencil* policy,
+///   otherwise the *DNN* policy (§V-B).
+/// * `host_stages` — funcs excluded from the accelerator and run on the
+///   host CPU (sch6 "last stage on CPU").
+#[derive(Clone, Debug, Default)]
+pub struct HwSchedule {
+    /// Output tile extents, outermost-first, matching the output func's
+    /// pure vars.
+    pub tile: Vec<i64>,
+    /// Funcs given dedicated storage (`store_at` the tile loop).
+    pub memories: Vec<String>,
+    /// `func -> [(var, factor)]` spatial unrolling.
+    pub unroll: BTreeMap<String, Vec<(String, i64)>>,
+    /// Funcs whose reduction domain is fully unrolled in space.
+    pub unroll_reductions: Vec<String>,
+    /// Funcs computed on the host instead of the accelerator.
+    pub host_stages: Vec<String>,
+}
+
+impl HwSchedule {
+    pub fn new(tile: impl Into<Vec<i64>>) -> Self {
+        HwSchedule { tile: tile.into(), ..Default::default() }
+    }
+
+    /// `f.store_at(output, tile_loop)` — materialize `f` as a unified
+    /// buffer rather than recomputing it at each use.
+    pub fn store_at(mut self, func: &str) -> Self {
+        if !self.memories.iter().any(|m| m == func) {
+            self.memories.push(func.to_string());
+        }
+        self
+    }
+
+    /// `f.unroll(var, factor)` — compute `factor` instances of `var`'s
+    /// loop body in parallel each cycle.
+    pub fn unroll(mut self, func: &str, var: &str, factor: i64) -> Self {
+        assert!(factor >= 2, "unroll factor must be >= 2");
+        self.unroll
+            .entry(func.to_string())
+            .or_default()
+            .push((var.to_string(), factor));
+        self
+    }
+
+    /// Fully unroll `func`'s reduction loops (stencil-style conv).
+    pub fn unroll_reduction(mut self, func: &str) -> Self {
+        if !self.unroll_reductions.iter().any(|m| m == func) {
+            self.unroll_reductions.push(func.to_string());
+        }
+        self
+    }
+
+    /// Run `func` on the host processor (outside `hw_accelerate`).
+    pub fn on_host(mut self, func: &str) -> Self {
+        if !self.host_stages.iter().any(|m| m == func) {
+            self.host_stages.push(func.to_string());
+        }
+        self
+    }
+
+    pub fn is_memory(&self, func: &str) -> bool {
+        self.memories.iter().any(|m| m == func)
+    }
+
+    pub fn is_reduction_unrolled(&self, func: &str) -> bool {
+        self.unroll_reductions.iter().any(|m| m == func)
+    }
+
+    pub fn unroll_factors(&self, func: &str) -> &[(String, i64)] {
+        self.unroll.get(func).map(Vec::as_slice).unwrap_or(&[])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chains() {
+        let s = HwSchedule::new([64, 64])
+            .store_at("brighten")
+            .unroll("blur", "x", 2)
+            .unroll_reduction("conv")
+            .on_host("final");
+        assert_eq!(s.tile, vec![64, 64]);
+        assert!(s.is_memory("brighten"));
+        assert!(!s.is_memory("blur"));
+        assert_eq!(s.unroll_factors("blur"), &[("x".to_string(), 2)]);
+        assert!(s.is_reduction_unrolled("conv"));
+        assert!(s.host_stages.contains(&"final".to_string()));
+    }
+
+    #[test]
+    fn store_at_idempotent() {
+        let s = HwSchedule::new([8]).store_at("f").store_at("f");
+        assert_eq!(s.memories.len(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn unroll_factor_one_rejected() {
+        let _ = HwSchedule::new([8]).unroll("f", "x", 1);
+    }
+}

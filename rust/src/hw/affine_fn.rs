@@ -1,0 +1,268 @@
+//! The three affine-function hardware implementations of Fig 5.
+//!
+//! An address/schedule generator computes `Σ s_k·i_k + offset` as the
+//! iteration domain steps. The paper optimizes the implementation in two
+//! steps: replace multipliers with per-dimension stride accumulators
+//! (Fig 5b), then collapse to a single adder using the delta recurrence
+//! (Fig 5c):
+//!
+//! ```text
+//! d_outer = s_outer − Σ_{i inner} s_i · (r_i − 1)
+//! ```
+//!
+//! All three are bit-equivalent; the tests sweep full domains to prove
+//! it. Each reports its resource usage for the Table II cost model.
+
+/// Configuration of an affine function over an iteration domain:
+/// strides are listed **outermost-first**, matching
+/// [`crate::poly::Affine`] coefficients.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AffineConfig {
+    pub strides: Vec<i64>,
+    pub offset: i64,
+}
+
+impl AffineConfig {
+    pub fn from_affine(a: &crate::poly::Affine) -> Self {
+        AffineConfig { strides: a.coeffs.clone(), offset: a.offset }
+    }
+
+    /// Loop-boundary deltas for the Fig 5c recurrence, given the domain
+    /// extents (`r_k`): `d_k = s_k − Σ_{i>k} s_i (r_i − 1)` (dims inner
+    /// to `k` rewind to their start when `k` increments).
+    pub fn deltas(&self, extents: &[i64]) -> Vec<i64> {
+        assert_eq!(self.strides.len(), extents.len());
+        let n = self.strides.len();
+        (0..n)
+            .map(|k| {
+                let rewind: i64 = (k + 1..n)
+                    .map(|i| self.strides[i] * (extents[i] - 1))
+                    .sum();
+                self.strides[k] - rewind
+            })
+            .collect()
+    }
+}
+
+/// Hardware resource usage of an affine-function implementation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AffineCost {
+    pub multipliers: usize,
+    pub adders: usize,
+    pub registers: usize,
+}
+
+/// Step events from the iteration domain: which dims incremented and
+/// which wrapped (cleared) this step. At most one dim increments without
+/// wrapping; all dims inner to it wrap.
+pub trait AffineHw {
+    fn reset(&mut self);
+    /// Current function value (combinational output).
+    fn value(&self) -> i64;
+    /// Advance after the ID steps: `inc[k]`/`clr[k]` as in Fig 5b.
+    fn step(&mut self, inc: &[bool], clr: &[bool]);
+    fn cost(&self) -> AffineCost;
+}
+
+/// Fig 5a: explicit multipliers over the raw counter values.
+#[derive(Clone, Debug)]
+pub struct MultImpl {
+    cfg: AffineConfig,
+    counters: Vec<i64>,
+}
+
+impl MultImpl {
+    pub fn new(cfg: AffineConfig) -> Self {
+        let n = cfg.strides.len();
+        MultImpl { cfg, counters: vec![0; n] }
+    }
+}
+
+impl AffineHw for MultImpl {
+    fn reset(&mut self) {
+        self.counters.iter_mut().for_each(|c| *c = 0);
+    }
+
+    fn value(&self) -> i64 {
+        self.cfg
+            .strides
+            .iter()
+            .zip(&self.counters)
+            .map(|(s, c)| s * c)
+            .sum::<i64>()
+            + self.cfg.offset
+    }
+
+    fn step(&mut self, inc: &[bool], clr: &[bool]) {
+        for k in 0..self.counters.len() {
+            if clr[k] {
+                self.counters[k] = 0;
+            } else if inc[k] {
+                self.counters[k] += 1;
+            }
+        }
+    }
+
+    fn cost(&self) -> AffineCost {
+        let n = self.cfg.strides.len();
+        // n multipliers, n adders (the reduction tree + offset), n counters.
+        AffineCost { multipliers: n, adders: n, registers: n }
+    }
+}
+
+/// Fig 5b: one stride accumulator per dimension — no multipliers.
+#[derive(Clone, Debug)]
+pub struct IncrImpl {
+    cfg: AffineConfig,
+    partial: Vec<i64>,
+}
+
+impl IncrImpl {
+    pub fn new(cfg: AffineConfig) -> Self {
+        let n = cfg.strides.len();
+        IncrImpl { cfg, partial: vec![0; n] }
+    }
+}
+
+impl AffineHw for IncrImpl {
+    fn reset(&mut self) {
+        self.partial.iter_mut().for_each(|c| *c = 0);
+    }
+
+    fn value(&self) -> i64 {
+        self.partial.iter().sum::<i64>() + self.cfg.offset
+    }
+
+    fn step(&mut self, inc: &[bool], clr: &[bool]) {
+        for k in 0..self.partial.len() {
+            if clr[k] {
+                self.partial[k] = 0;
+            } else if inc[k] {
+                self.partial[k] += self.cfg.strides[k];
+            }
+        }
+    }
+
+    fn cost(&self) -> AffineCost {
+        let n = self.cfg.strides.len();
+        // One increment adder per dim plus the summation tree.
+        AffineCost { multipliers: 0, adders: 2 * n, registers: n }
+    }
+}
+
+/// Fig 5c: single running register + one adder; the increment is the
+/// delta of the outermost dimension that stepped.
+#[derive(Clone, Debug)]
+pub struct DeltaImpl {
+    deltas: Vec<i64>,
+    offset: i64,
+    value: i64,
+}
+
+impl DeltaImpl {
+    pub fn new(cfg: &AffineConfig, extents: &[i64]) -> Self {
+        DeltaImpl { deltas: cfg.deltas(extents), offset: cfg.offset, value: cfg.offset }
+    }
+}
+
+impl AffineHw for DeltaImpl {
+    fn reset(&mut self) {
+        self.value = self.offset;
+    }
+
+    fn value(&self) -> i64 {
+        self.value
+    }
+
+    fn step(&mut self, inc: &[bool], clr: &[bool]) {
+        // The outermost dim that incremented (not wrapped) owns the step.
+        for k in 0..self.deltas.len() {
+            if inc[k] && !clr[k] {
+                self.value += self.deltas[k];
+                return;
+            }
+        }
+        // Full wrap of every dim: the ID finished; value is stale.
+    }
+
+    fn cost(&self) -> AffineCost {
+        AffineCost { multipliers: 0, adders: 1, registers: 1 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::id::IterationDomain;
+    use crate::poly::Affine;
+
+    /// Sweep a full iteration domain and check an implementation tracks
+    /// the explicit affine function exactly.
+    fn check_impl(mut hw: impl AffineHw, expr: &Affine, extents: &[i64]) {
+        let mut id = IterationDomain::new(extents.to_vec());
+        loop {
+            let pt = id.point().to_vec();
+            assert_eq!(
+                hw.value(),
+                expr.eval(&pt),
+                "mismatch at {pt:?} for extents {extents:?}"
+            );
+            let Some((inc, clr)) = id.step() else { break };
+            hw.step(&inc, &clr);
+        }
+    }
+
+    fn downsample2_cfg() -> (AffineConfig, Affine, Vec<i64>) {
+        // Fig 6: downsample-by-2 of an 8x8 image: addr = 16y + 2x over
+        // a 4x4 iteration domain.
+        let a = Affine::new(vec![16, 2], 0);
+        (AffineConfig::from_affine(&a), a, vec![4, 4])
+    }
+
+    #[test]
+    fn deltas_match_fig6() {
+        // Fig 6: d_x = 2, d_y = 16 - 2*(4-1) = 10.
+        let (cfg, _, ext) = downsample2_cfg();
+        assert_eq!(cfg.deltas(&ext), vec![10, 2]);
+    }
+
+    #[test]
+    fn all_three_impls_agree_fig6() {
+        let (cfg, a, ext) = downsample2_cfg();
+        check_impl(MultImpl::new(cfg.clone()), &a, &ext);
+        check_impl(IncrImpl::new(cfg.clone()), &a, &ext);
+        check_impl(DeltaImpl::new(&cfg, &ext), &a, &ext);
+    }
+
+    #[test]
+    fn impls_agree_on_3d_with_offset_and_negative_strides() {
+        let a = Affine::new(vec![-7, 5, 3], 100);
+        let cfg = AffineConfig::from_affine(&a);
+        let ext = vec![3, 4, 5];
+        check_impl(MultImpl::new(cfg.clone()), &a, &ext);
+        check_impl(IncrImpl::new(cfg.clone()), &a, &ext);
+        check_impl(DeltaImpl::new(&cfg, &ext), &a, &ext);
+    }
+
+    #[test]
+    fn impls_agree_on_1d() {
+        let a = Affine::new(vec![4], -3);
+        let cfg = AffineConfig::from_affine(&a);
+        check_impl(DeltaImpl::new(&cfg, &[17]), &a, &[17]);
+        check_impl(IncrImpl::new(cfg.clone()), &a, &[17]);
+        check_impl(MultImpl::new(cfg), &a, &[17]);
+    }
+
+    #[test]
+    fn cost_ordering_matches_paper() {
+        let (cfg, _, ext) = downsample2_cfg();
+        let m = MultImpl::new(cfg.clone()).cost();
+        let i = IncrImpl::new(cfg.clone()).cost();
+        let d = DeltaImpl::new(&cfg, &ext).cost();
+        assert!(m.multipliers > 0);
+        assert_eq!(i.multipliers, 0);
+        assert_eq!(d.multipliers, 0);
+        assert_eq!(d.adders, 1);
+        assert!(d.registers < i.registers || i.registers == 1);
+    }
+}

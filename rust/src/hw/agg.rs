@@ -1,0 +1,65 @@
+//! The aggregator (AGG): a fetch-width register file that converts the
+//! serial input stream into SRAM-wide vectors (§IV-B). Slot addressing
+//! comes from the port controller's AG (the `x mod FW` dimension the
+//! vectorization transform introduces, Eq. 2).
+
+#[derive(Clone, Debug)]
+pub struct Aggregator {
+    regs: Vec<i64>,
+    pub writes: u64,
+}
+
+impl Aggregator {
+    pub fn new(fetch_width: usize) -> Self {
+        Aggregator { regs: vec![0; fetch_width], writes: 0 }
+    }
+
+    pub fn fetch_width(&self) -> usize {
+        self.regs.len()
+    }
+
+    /// Serial write into one slot.
+    pub fn write(&mut self, slot: i64, word: i64) {
+        assert!(
+            (0..self.regs.len() as i64).contains(&slot),
+            "AGG slot {slot} out of range"
+        );
+        self.regs[slot as usize] = word;
+        self.writes += 1;
+    }
+
+    /// Parallel read of the whole vector (the SRAM-write side).
+    pub fn read_all(&self) -> Vec<i64> {
+        self.regs.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_a_vector() {
+        let mut a = Aggregator::new(4);
+        for k in 0..4 {
+            a.write(k, 10 + k);
+        }
+        assert_eq!(a.read_all(), vec![10, 11, 12, 13]);
+        assert_eq!(a.writes, 4);
+    }
+
+    #[test]
+    fn partial_overwrite() {
+        let mut a = Aggregator::new(2);
+        a.write(0, 5);
+        a.write(1, 6);
+        a.write(0, 7);
+        assert_eq!(a.read_all(), vec![7, 6]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn oob_slot_panics() {
+        Aggregator::new(2).write(2, 0);
+    }
+}

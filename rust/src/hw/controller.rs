@@ -1,0 +1,112 @@
+//! A port controller: IterationDomain + AddressGenerator +
+//! ScheduleGenerator (the ID/AG/SG triple at every port of Fig 3/4).
+//!
+//! Each cycle the SG's current value is compared against the global
+//! cycle counter; on a match the port *fires*, the AG's current value is
+//! the address, and all three recurrences advance. Both AG and SG use
+//! the optimized single-adder delta implementation (Fig 5c).
+
+use super::affine_fn::{AffineConfig, AffineHw, DeltaImpl};
+use super::id::IterationDomain;
+
+#[derive(Clone, Debug)]
+pub struct PortController {
+    id: IterationDomain,
+    ag: DeltaImpl,
+    sg: DeltaImpl,
+    fired: i64,
+}
+
+impl PortController {
+    /// `extents` — iteration domain (outermost-first); `addr`/`sched` —
+    /// affine configs over that domain (schedule must be monotone
+    /// increasing in iteration order).
+    pub fn new(extents: Vec<i64>, addr: &AffineConfig, sched: &AffineConfig) -> Self {
+        let ag = DeltaImpl::new(addr, &extents);
+        let sg = DeltaImpl::new(sched, &extents);
+        PortController { id: IterationDomain::new(extents), ag, sg, fired: 0 }
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.id.is_done()
+    }
+
+    /// Cycle the SG will fire next (meaningless once done).
+    pub fn next_fire(&self) -> i64 {
+        self.sg.value()
+    }
+
+    pub fn ops_fired(&self) -> i64 {
+        self.fired
+    }
+
+    /// Advance one global cycle; returns the address if the port fires.
+    pub fn tick(&mut self, cycle: i64) -> Option<i64> {
+        if self.id.is_done() || cycle != self.sg.value() {
+            return None;
+        }
+        debug_assert!(cycle == self.sg.value());
+        let addr = self.ag.value();
+        self.fired += 1;
+        if let Some((inc, clr)) = self.id.step() {
+            self.ag.step(&inc, &clr);
+            self.sg.step(&inc, &clr);
+        }
+        Some(addr)
+    }
+
+    pub fn reset(&mut self) {
+        self.id.reset();
+        self.ag.reset();
+        self.sg.reset();
+        self.fired = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::poly::Affine;
+
+    fn cfg(coeffs: Vec<i64>, offset: i64) -> AffineConfig {
+        AffineConfig::from_affine(&Affine::new(coeffs, offset))
+    }
+
+    #[test]
+    fn fires_per_schedule_with_addresses() {
+        // 2x3 domain; schedule t = 4y + x + 2 (gaps in each row);
+        // address a = 3y + x (row-major linear).
+        let mut pc = PortController::new(vec![2, 3], &cfg(vec![3, 1], 0), &cfg(vec![4, 1], 2));
+        let mut fires = Vec::new();
+        for cycle in 0..12 {
+            if let Some(addr) = pc.tick(cycle) {
+                fires.push((cycle, addr));
+            }
+        }
+        assert_eq!(
+            fires,
+            vec![(2, 0), (3, 1), (4, 2), (6, 3), (7, 4), (8, 5)]
+        );
+        assert!(pc.is_done());
+        assert_eq!(pc.ops_fired(), 6);
+    }
+
+    #[test]
+    fn no_fire_before_offset_or_after_done() {
+        let mut pc = PortController::new(vec![2], &cfg(vec![1], 0), &cfg(vec![1], 5));
+        assert_eq!(pc.tick(4), None);
+        assert_eq!(pc.tick(5), Some(0));
+        assert_eq!(pc.tick(6), Some(1));
+        assert_eq!(pc.tick(7), None);
+        assert!(pc.is_done());
+    }
+
+    #[test]
+    fn reset_replays() {
+        let mut pc = PortController::new(vec![2], &cfg(vec![2], 7), &cfg(vec![1], 0));
+        assert_eq!(pc.tick(0), Some(7));
+        assert_eq!(pc.tick(1), Some(9));
+        pc.reset();
+        assert_eq!(pc.tick(0), Some(7));
+    }
+}

@@ -1,0 +1,116 @@
+//! The IterationDomain module: a chain of loop counters (Fig 3).
+
+/// Nested loop counters, outermost-first, each running `0..extent`.
+/// Stepping advances the innermost counter with carry, producing the
+/// `inc`/`clr` event flags the affine-function hardware consumes.
+#[derive(Clone, Debug)]
+pub struct IterationDomain {
+    extents: Vec<i64>,
+    counters: Vec<i64>,
+    done: bool,
+}
+
+impl IterationDomain {
+    pub fn new(extents: Vec<i64>) -> Self {
+        assert!(extents.iter().all(|&e| e > 0), "empty iteration domain");
+        let n = extents.len();
+        IterationDomain { extents, counters: vec![0; n], done: false }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.extents.len()
+    }
+
+    /// Current point (zero-based; callers add domain mins).
+    pub fn point(&self) -> &[i64] {
+        &self.counters
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Total number of points.
+    pub fn trip_count(&self) -> i64 {
+        self.extents.iter().product()
+    }
+
+    pub fn reset(&mut self) {
+        self.counters.iter_mut().for_each(|c| *c = 0);
+        self.done = false;
+    }
+
+    /// Advance one step. Returns the `(inc, clr)` flag vectors, or `None`
+    /// when the domain is exhausted (all counters wrapped).
+    pub fn step(&mut self) -> Option<(Vec<bool>, Vec<bool>)> {
+        if self.done {
+            return None;
+        }
+        let n = self.rank();
+        let mut inc = vec![false; n];
+        let mut clr = vec![false; n];
+        for k in (0..n).rev() {
+            inc[k] = true;
+            self.counters[k] += 1;
+            if self.counters[k] < self.extents[k] {
+                return Some((inc, clr));
+            }
+            self.counters[k] = 0;
+            clr[k] = true;
+        }
+        self.done = true;
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn visits_all_points_in_order() {
+        let mut id = IterationDomain::new(vec![2, 3]);
+        let mut seen = vec![id.point().to_vec()];
+        while id.step().is_some() {
+            seen.push(id.point().to_vec());
+        }
+        assert_eq!(
+            seen,
+            vec![
+                vec![0, 0],
+                vec![0, 1],
+                vec![0, 2],
+                vec![1, 0],
+                vec![1, 1],
+                vec![1, 2]
+            ]
+        );
+        assert!(id.is_done());
+        assert!(id.step().is_none());
+    }
+
+    #[test]
+    fn inc_clr_flags() {
+        let mut id = IterationDomain::new(vec![2, 2]);
+        // (0,0) -> (0,1): inner inc only.
+        let (inc, clr) = id.step().unwrap();
+        assert_eq!((inc, clr), (vec![false, true], vec![false, false]));
+        // (0,1) -> (1,0): inner wraps (inc+clr), outer incs.
+        let (inc, clr) = id.step().unwrap();
+        assert_eq!((inc, clr), (vec![true, true], vec![false, true]));
+    }
+
+    #[test]
+    fn trip_count_and_reset() {
+        let mut id = IterationDomain::new(vec![3, 4]);
+        assert_eq!(id.trip_count(), 12);
+        let mut n = 1;
+        while id.step().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 12);
+        id.reset();
+        assert_eq!(id.point(), &[0, 0]);
+        assert!(!id.is_done());
+    }
+}

@@ -1,0 +1,371 @@
+//! The complete physical unified buffer memory tile (Fig 4 / Fig 11).
+//!
+//! Per input port: a serial-in controller filling an aggregator, and an
+//! AGG→SRAM flush controller issuing wide writes. Per output port: an
+//! SRAM→TB controller issuing wide reads (1-cycle latency), and a
+//! TB→out controller serializing words onto the port. One wide-fetch
+//! single-port SRAM is shared by all flush/read controllers — the
+//! scheduler must avoid conflicts, and the model faults on any.
+//!
+//! Shift-register chains ([`DelayLine`]) implement the ports the mapper
+//! converted away from memory (Fig 8a).
+
+use std::collections::VecDeque;
+
+use anyhow::{Context, Result};
+
+use super::affine_fn::AffineConfig;
+use super::agg::Aggregator;
+use super::controller::PortController;
+use super::sram::WideSram;
+use super::tb::TransposeBuffer;
+
+/// Configuration of one port controller (ID extents + AG + SG).
+/// `modulus` wraps the generated address — the circular-buffer layout of
+/// the paper's address linearization (§V-C, `{1,64} mod 64 = {1,0}`
+/// example generalized to a hardware wrap).
+#[derive(Clone, Debug)]
+pub struct PortCtlConfig {
+    pub extents: Vec<i64>,
+    pub addr: AffineConfig,
+    pub sched: AffineConfig,
+    pub modulus: Option<i64>,
+}
+
+impl PortCtlConfig {
+    pub fn new(extents: Vec<i64>, addr: AffineConfig, sched: AffineConfig) -> Self {
+        PortCtlConfig { extents, addr, sched, modulus: None }
+    }
+
+    pub fn with_modulus(mut self, m: i64) -> Self {
+        self.modulus = Some(m);
+        self
+    }
+
+    pub fn controller(&self) -> PortController {
+        PortController::new(self.extents.clone(), &self.addr, &self.sched)
+    }
+
+    fn wrap(&self, addr: i64) -> i64 {
+        match self.modulus {
+            Some(m) => addr.rem_euclid(m),
+            None => addr,
+        }
+    }
+}
+
+/// Full memory-tile configuration (the "configuration bits" the
+/// compiler produces for a MEM tile, §V-C).
+#[derive(Clone, Debug)]
+pub struct MemTileConfig {
+    pub fetch_width: usize,
+    /// SRAM capacity in words.
+    pub capacity: usize,
+    /// Serial input controllers; `addr` selects the AGG slot.
+    pub serial_in: Vec<PortCtlConfig>,
+    /// Which aggregator each serial input fills (unrolled write lanes
+    /// interleave into a shared AGG).
+    pub serial_in_agg: Vec<usize>,
+    /// AGG→SRAM flush controllers (one per aggregator); `addr` is the
+    /// SRAM *vector* address.
+    pub agg_flush: Vec<PortCtlConfig>,
+    /// SRAM→TB read controllers (one per output port); vector address.
+    pub sram_read: Vec<PortCtlConfig>,
+    /// TB→out serializers; `addr` selects the TB slot.
+    pub tb_out: Vec<PortCtlConfig>,
+}
+
+/// Behavioral model of a configured memory tile.
+#[derive(Clone, Debug)]
+pub struct MemTile {
+    pub cfg: MemTileConfig,
+    aggs: Vec<Aggregator>,
+    tbs: Vec<TransposeBuffer>,
+    pub sram: WideSram,
+    ctl_in: Vec<PortController>,
+    ctl_flush: Vec<PortController>,
+    ctl_read: Vec<PortController>,
+    ctl_out: Vec<PortController>,
+    /// Which TB (and which ping-pong half) the in-flight read targets.
+    inflight: Option<(usize, usize)>,
+}
+
+impl MemTile {
+    pub fn new(cfg: MemTileConfig) -> Self {
+        assert_eq!(cfg.serial_in.len(), cfg.serial_in_agg.len());
+        assert_eq!(cfg.sram_read.len(), cfg.tb_out.len());
+        assert!(cfg.serial_in_agg.iter().all(|&a| a < cfg.agg_flush.len()));
+        MemTile {
+            aggs: cfg.agg_flush.iter().map(|_| Aggregator::new(cfg.fetch_width)).collect(),
+            tbs: cfg.sram_read.iter().map(|_| TransposeBuffer::new(cfg.fetch_width)).collect(),
+            sram: WideSram::new(cfg.capacity, cfg.fetch_width),
+            ctl_in: cfg.serial_in.iter().map(|c| c.controller()).collect(),
+            ctl_flush: cfg.agg_flush.iter().map(|c| c.controller()).collect(),
+            ctl_read: cfg.sram_read.iter().map(|c| c.controller()).collect(),
+            ctl_out: cfg.tb_out.iter().map(|c| c.controller()).collect(),
+            inflight: None,
+            cfg,
+        }
+    }
+
+    pub fn n_inputs(&self) -> usize {
+        self.ctl_in.len()
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        self.ctl_out.len()
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.ctl_out.iter().all(|c| c.is_done())
+    }
+
+    /// Advance one cycle. `inputs[i]` must carry a word whenever input
+    /// port `i`'s schedule fires. Returns one optional word per output
+    /// port.
+    pub fn tick(&mut self, cycle: i64, inputs: &[Option<i64>]) -> Result<Vec<Option<i64>>> {
+        assert_eq!(inputs.len(), self.ctl_in.len(), "input arity mismatch");
+
+        // 1. Serial input -> aggregator slots.
+        for (i, ctl) in self.ctl_in.iter_mut().enumerate() {
+            if let Some(slot) = ctl.tick(cycle) {
+                let slot = self.cfg.serial_in[i].wrap(slot);
+                let word = inputs[i]
+                    .with_context(|| format!("input port {i} fired at {cycle} with no data"))?;
+                self.aggs[self.cfg.serial_in_agg[i]].write(slot, word);
+            }
+        }
+
+        // 2. Aggregator flush -> wide SRAM write.
+        for (i, ctl) in self.ctl_flush.iter_mut().enumerate() {
+            if let Some(vaddr) = ctl.tick(cycle) {
+                let vaddr = self.cfg.agg_flush[i].wrap(vaddr);
+                let vec = self.aggs[i].read_all();
+                self.sram
+                    .write_vec(vaddr, &vec)
+                    .with_context(|| format!("flush {i} at cycle {cycle}"))?;
+            }
+        }
+
+        // 3. Serialize TB slots onto the output ports (the TB register
+        // file still holds last cycle's contents — loads land below).
+        let mut out = vec![None; self.ctl_out.len()];
+        for (o, ctl) in self.ctl_out.iter_mut().enumerate() {
+            if let Some(slot) = ctl.tick(cycle) {
+                out[o] = Some(self.tbs[o].read(self.cfg.tb_out[o].wrap(slot)));
+            }
+        }
+
+        // 4. Land the read issued last cycle into its transpose buffer
+        // half (ping-pong selected by vector-address parity; registers
+        // latch at end of cycle: data issued at cycle t is readable from
+        // t+2).
+        if let Some((tbi, half)) = self.inflight.take() {
+            let data = self.sram.take_read().context("SRAM read did not complete")?;
+            self.tbs[tbi].load(half, &data);
+        }
+
+        // 5. Issue this cycle's wide SRAM read.
+        for (o, ctl) in self.ctl_read.iter_mut().enumerate() {
+            if let Some(vaddr) = ctl.tick(cycle) {
+                let vaddr = self.cfg.sram_read[o].wrap(vaddr);
+                self.sram
+                    .read_vec(vaddr)
+                    .with_context(|| format!("read {o} at cycle {cycle}"))?;
+                anyhow::ensure!(self.inflight.is_none(), "two SRAM reads in flight");
+                self.inflight = Some((o, (vaddr & 1) as usize));
+            }
+        }
+
+        self.sram.end_cycle();
+        Ok(out)
+    }
+}
+
+/// Configuration of a dual-port (1R + 1W per cycle) word-granular
+/// memory tile — the Fig 3 baseline variant. The mapper falls back to
+/// it for ports whose access pattern cannot be vectorized onto the
+/// wide-fetch single-port SRAM (e.g. a DNN ifmap read that walks
+/// channels and windows); it costs more area/energy (Table II row 2).
+#[derive(Clone, Debug)]
+pub struct DpTileConfig {
+    pub capacity: usize,
+    /// Serial write controllers (addr = linear address, mod capacity).
+    pub writes: Vec<PortCtlConfig>,
+    /// Read controller (at most one): `sched` is the cycle the word must
+    /// appear on the output port; the SRAM read issues one cycle prior.
+    pub reads: Vec<PortCtlConfig>,
+}
+
+/// Behavioral model of a configured dual-port memory tile.
+#[derive(Clone, Debug)]
+pub struct DpMemTile {
+    pub cfg: DpTileConfig,
+    sram: super::sram::DualPortSram,
+    ctl_w: Vec<PortController>,
+    ctl_r: Vec<PortController>,
+    pending_port: Option<usize>,
+}
+
+impl DpMemTile {
+    pub fn new(cfg: DpTileConfig) -> Self {
+        assert!(cfg.reads.len() <= 1, "dual-port tile has one read port");
+        DpMemTile {
+            sram: super::sram::DualPortSram::new(cfg.capacity),
+            ctl_w: cfg.writes.iter().map(|c| c.controller()).collect(),
+            ctl_r: cfg
+                .reads
+                .iter()
+                .map(|c| {
+                    // Issue one cycle before the scheduled output.
+                    let mut early = c.clone();
+                    early.sched.offset -= 1;
+                    early.controller()
+                })
+                .collect(),
+            pending_port: None,
+            cfg,
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.ctl_r.iter().all(|c| c.is_done())
+    }
+
+    pub fn tick(&mut self, cycle: i64, inputs: &[Option<i64>]) -> Result<Vec<Option<i64>>> {
+        assert_eq!(inputs.len(), self.ctl_w.len());
+        // 1. Data from last cycle's read issue appears on the port.
+        let mut out = vec![None; self.ctl_r.len()];
+        if let Some(o) = self.pending_port.take() {
+            out[o] = Some(self.sram.take_read().context("DP read did not complete")?);
+        }
+        // 2. Writes (commit at end of cycle).
+        for (i, ctl) in self.ctl_w.iter_mut().enumerate() {
+            if let Some(addr) = ctl.tick(cycle) {
+                let addr = self.cfg.writes[i].wrap(addr);
+                let w = inputs[i]
+                    .with_context(|| format!("DP write port {i} fired at {cycle} with no data"))?;
+                self.sram.write(addr, w)?;
+            }
+        }
+        // 3. Issue reads for next cycle's output.
+        for (o, ctl) in self.ctl_r.iter_mut().enumerate() {
+            if let Some(addr) = ctl.tick(cycle) {
+                let addr = self.cfg.reads[o].wrap(addr);
+                self.sram.read(addr)?;
+                self.pending_port = Some(o);
+            }
+        }
+        self.sram.end_cycle();
+        Ok(out)
+    }
+}
+
+/// A shift-register delay line of fixed depth: the hardware for ports
+/// the mapper peeled off as constant-distance dependences (Fig 8a).
+/// Depth 0 is a wire.
+#[derive(Clone, Debug)]
+pub struct DelayLine {
+    buf: VecDeque<i64>,
+    depth: usize,
+}
+
+impl DelayLine {
+    pub fn new(depth: usize) -> Self {
+        DelayLine { buf: VecDeque::from(vec![0; depth]), depth }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Push a word, pop the word from `depth` cycles ago.
+    pub fn push(&mut self, v: i64) -> i64 {
+        if self.depth == 0 {
+            return v;
+        }
+        self.buf.push_back(v);
+        self.buf.pop_front().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::poly::Affine;
+
+    fn cfg(coeffs: Vec<i64>, offset: i64) -> AffineConfig {
+        AffineConfig::from_affine(&Affine::new(coeffs, offset))
+    }
+
+    /// The Fig 9 vectorized delay buffer: 16 words through a FW=4
+    /// single-port SRAM, output delayed 8 cycles after input.
+    fn delay8_tile() -> MemTile {
+        MemTile::new(MemTileConfig {
+            fetch_width: 4,
+            capacity: 16,
+            serial_in: vec![PortCtlConfig::new(
+                vec![4, 4],               // (xo, xi)
+                cfg(vec![0, 1], 0),       // AGG slot = xi
+                cfg(vec![4, 1], 0),       // t = x
+            )],
+            serial_in_agg: vec![0],
+            agg_flush: vec![PortCtlConfig::new(
+                vec![4],
+                cfg(vec![1], 0),          // vector addr = xo
+                cfg(vec![4], 3),          // as the 4th word lands
+            )],
+            sram_read: vec![PortCtlConfig::new(
+                vec![4],
+                cfg(vec![1], 0),
+                cfg(vec![4], 6),          // lands at t+7, first use t+8
+            )],
+            tb_out: vec![PortCtlConfig::new(
+                vec![4, 4],
+                cfg(vec![4, 1], 0),       // slot = x mod 8 (ping-pong)
+                cfg(vec![4, 1], 8),       // t = x + 8
+            )
+            .with_modulus(8)],
+        })
+    }
+
+    #[test]
+    fn delay_buffer_delays_by_8() {
+        let mut tile = delay8_tile();
+        let mut outs: Vec<(i64, i64)> = Vec::new();
+        for cycle in 0..30 {
+            let inw = if cycle < 16 { Some(100 + cycle) } else { None };
+            let out = tile.tick(cycle, &[inw]).unwrap();
+            if let Some(v) = out[0] {
+                outs.push((cycle, v));
+            }
+        }
+        assert_eq!(outs.len(), 16);
+        for (t, v) in outs {
+            assert_eq!(v, 100 + (t - 8), "wrong word at cycle {t}");
+        }
+        assert!(tile.is_done());
+        // SRAM saw 4 wide writes + 4 wide reads, no conflicts.
+        assert_eq!(tile.sram.stats.writes, 4);
+        assert_eq!(tile.sram.stats.reads, 4);
+        assert_eq!(tile.sram.stats.conflicts, 0);
+    }
+
+    #[test]
+    fn missing_input_word_faults() {
+        let mut tile = delay8_tile();
+        assert!(tile.tick(0, &[None]).is_err());
+    }
+
+    #[test]
+    fn delay_line_behaviour() {
+        let mut d = DelayLine::new(3);
+        let mut outs = Vec::new();
+        for k in 0..6 {
+            outs.push(d.push(k));
+        }
+        assert_eq!(outs, vec![0, 0, 0, 0, 1, 2]);
+        let mut wire = DelayLine::new(0);
+        assert_eq!(wire.push(7), 7);
+    }
+}

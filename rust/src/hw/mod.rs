@@ -1,0 +1,35 @@
+//! Physical unified buffer hardware models (§IV).
+//!
+//! Cycle-level behavioral models of the hardware primitives the mapper
+//! configures, mirroring the paper's generator:
+//!
+//! * [`affine_fn`] — the three affine-function implementations of Fig 5:
+//!   (a) explicit multipliers, (b) per-dimension stride accumulators,
+//!   (c) the single-adder delta recurrence. All are bit-equivalent; (c)
+//!   is what ships in the memory tile.
+//! * [`id`] — the IterationDomain counter module.
+//! * [`controller`] — an ID + AddressGenerator + ScheduleGenerator
+//!   triple: fires at scheduled cycles, producing addresses (Fig 3/4).
+//! * [`agg`] / [`tb`] / [`sram`] — aggregator (serial→parallel),
+//!   transpose buffer (parallel→serial), and single/dual-port SRAM
+//!   macros with wide fetch.
+//! * [`memtile`] — the complete physical unified buffer: AGG + wide
+//!   single-port SRAM + TB with shared-schedule optimizations (Fig 11),
+//!   plus shift-register chains and chaining support (Fig 10).
+//! * [`petile`] — the CGRA processing element: one 16-bit ALU op with
+//!   programmable operand delays and an accumulate mode.
+
+pub mod affine_fn;
+pub mod agg;
+pub mod controller;
+pub mod id;
+pub mod memtile;
+pub mod petile;
+pub mod sram;
+pub mod tb;
+
+pub use affine_fn::{AffineConfig, AffineHw, DeltaImpl, IncrImpl, MultImpl};
+pub use controller::PortController;
+pub use id::IterationDomain;
+pub use memtile::{DpMemTile, DpTileConfig, MemTile, MemTileConfig, PortCtlConfig};
+pub use petile::{PeConfig, PeOp, PeTile};

@@ -1,0 +1,178 @@
+//! The CGRA processing element tile: one 16-bit integer ALU operation
+//! with a registered output (latency 1), programmable operand delay
+//! lines (retiming of unbalanced expression trees), optional constant
+//! operands, and an accumulate mode for reduction loops (§VI, Fig 11).
+
+use crate::halide::expr::{eval_binop, BinOp, UnOp};
+
+use super::memtile::DelayLine;
+
+/// The operation a PE performs each cycle.
+#[derive(Clone, Debug)]
+pub enum PeOp {
+    Bin(BinOp),
+    Un(UnOp),
+    /// `out = c != 0 ? a : b` (three operands).
+    Select,
+    /// `acc = op(acc, a)`, with `acc` cleared to `init` every `period`
+    /// firings (the reduction-loop accumulator).
+    Acc { op: BinOp, init: i32, period: i64 },
+}
+
+/// PE configuration: the op plus per-operand constant/delay settings.
+#[derive(Clone, Debug)]
+pub struct PeConfig {
+    pub op: PeOp,
+    /// Constant operand values; `None` means the operand comes from the
+    /// routed input.
+    pub consts: [Option<i32>; 3],
+    /// Retiming delay (cycles) on each routed operand.
+    pub delays: [usize; 3],
+}
+
+impl PeConfig {
+    pub fn bin(op: BinOp) -> Self {
+        PeConfig { op: PeOp::Bin(op), consts: [None; 3], delays: [0; 3] }
+    }
+
+    pub fn with_const(mut self, k: usize, v: i32) -> Self {
+        self.consts[k] = Some(v);
+        self
+    }
+
+    pub fn with_delay(mut self, k: usize, d: usize) -> Self {
+        self.delays[k] = d;
+        self
+    }
+}
+
+/// Behavioral PE model.
+#[derive(Clone, Debug)]
+pub struct PeTile {
+    cfg: PeConfig,
+    delay_lines: [DelayLine; 3],
+    out_reg: i32,
+    acc: i32,
+    fire_count: i64,
+    pub ops_executed: u64,
+}
+
+impl PeTile {
+    pub fn new(cfg: PeConfig) -> Self {
+        let delay_lines = [
+            DelayLine::new(cfg.delays[0]),
+            DelayLine::new(cfg.delays[1]),
+            DelayLine::new(cfg.delays[2]),
+        ];
+        let acc = match cfg.op {
+            PeOp::Acc { init, .. } => init,
+            _ => 0,
+        };
+        PeTile { cfg, delay_lines, out_reg: 0, acc, fire_count: 0, ops_executed: 0 }
+    }
+
+    /// Registered output from the previous cycle's computation.
+    pub fn output(&self) -> i32 {
+        self.out_reg
+    }
+
+    /// Compute one cycle with routed operand values (ignored where a
+    /// constant is configured). The result appears on
+    /// [`PeTile::output`] after this call (1-cycle latency).
+    pub fn tick(&mut self, inputs: [i32; 3]) {
+        let mut ops = [0i32; 3];
+        for k in 0..3 {
+            let routed = self.delay_lines[k].push(inputs[k] as i64) as i32;
+            ops[k] = self.cfg.consts[k].unwrap_or(routed);
+        }
+        self.ops_executed += 1;
+        self.out_reg = match &self.cfg.op {
+            PeOp::Bin(op) => eval_binop(*op, ops[0], ops[1]),
+            PeOp::Un(op) => match op {
+                UnOp::Neg => ops[0].wrapping_neg(),
+                UnOp::Abs => ops[0].wrapping_abs(),
+            },
+            PeOp::Select => {
+                if ops[0] != 0 {
+                    ops[1]
+                } else {
+                    ops[2]
+                }
+            }
+            PeOp::Acc { op, init, period } => {
+                if self.fire_count % period == 0 {
+                    self.acc = *init;
+                }
+                self.fire_count += 1;
+                self.acc = eval_binop(*op, self.acc, ops[0]);
+                self.acc
+            }
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_with_const() {
+        let mut pe = PeTile::new(PeConfig::bin(BinOp::Mul).with_const(1, 2));
+        pe.tick([21, 0, 0]);
+        assert_eq!(pe.output(), 42);
+    }
+
+    #[test]
+    fn latency_is_one_cycle() {
+        let mut pe = PeTile::new(PeConfig::bin(BinOp::Add));
+        assert_eq!(pe.output(), 0);
+        pe.tick([3, 4, 0]);
+        assert_eq!(pe.output(), 7);
+        pe.tick([10, 20, 0]);
+        assert_eq!(pe.output(), 30);
+    }
+
+    #[test]
+    fn operand_delay_retimes() {
+        // Operand 0 delayed 2 cycles: out(t) = in0(t-2) + in1(t).
+        let mut pe = PeTile::new(PeConfig::bin(BinOp::Add).with_delay(0, 2));
+        let a = [1, 2, 3, 4, 5];
+        let b = [10, 20, 30, 40, 50];
+        let mut outs = Vec::new();
+        for k in 0..5 {
+            pe.tick([a[k], b[k], 0]);
+            outs.push(pe.output());
+        }
+        assert_eq!(outs, vec![10, 20, 31, 42, 53]);
+    }
+
+    #[test]
+    fn accumulator_clears_each_period() {
+        // Sum groups of 3.
+        let mut pe = PeTile::new(PeConfig {
+            op: PeOp::Acc { op: BinOp::Add, init: 0, period: 3 },
+            consts: [None; 3],
+            delays: [0; 3],
+        });
+        let vals = [1, 2, 3, 10, 20, 30];
+        let mut outs = Vec::new();
+        for v in vals {
+            pe.tick([v, 0, 0]);
+            outs.push(pe.output());
+        }
+        assert_eq!(outs, vec![1, 3, 6, 10, 30, 60]);
+    }
+
+    #[test]
+    fn select_op() {
+        let mut pe = PeTile::new(PeConfig {
+            op: PeOp::Select,
+            consts: [None; 3],
+            delays: [0; 3],
+        });
+        pe.tick([1, 42, 7]);
+        assert_eq!(pe.output(), 42);
+        pe.tick([0, 42, 7]);
+        assert_eq!(pe.output(), 7);
+    }
+}

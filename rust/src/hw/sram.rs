@@ -1,0 +1,219 @@
+//! SRAM macro models: wide-fetch single-port (the shipped design) and
+//! dual-port word-granular (the Table II baseline).
+
+use anyhow::{bail, Result};
+
+/// Access statistics, consumed by the energy model (§VI-A).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SramStats {
+    pub reads: u64,
+    pub writes: u64,
+    pub conflicts: u64,
+}
+
+/// A single-port SRAM fetching `fetch_width` words per access, with a
+/// one-cycle read latency. At most one access (read *or* write) per
+/// cycle; concurrent requests are conflicts (the mapper must schedule
+/// port sharing, §IV-B).
+#[derive(Clone, Debug)]
+pub struct WideSram {
+    pub fetch_width: usize,
+    /// Capacity in *words*.
+    pub capacity: usize,
+    data: Vec<i64>,
+    accessed_this_cycle: bool,
+    pending_read: Option<Vec<i64>>,
+    ready_read: Option<Vec<i64>>,
+    pub stats: SramStats,
+}
+
+impl WideSram {
+    pub fn new(capacity: usize, fetch_width: usize) -> Self {
+        assert!(capacity % fetch_width == 0, "capacity not a vector multiple");
+        WideSram {
+            fetch_width,
+            capacity,
+            data: vec![0; capacity],
+            accessed_this_cycle: false,
+            pending_read: None,
+            ready_read: None,
+            stats: SramStats::default(),
+        }
+    }
+
+    pub fn vector_count(&self) -> usize {
+        self.capacity / self.fetch_width
+    }
+
+    fn claim_port(&mut self) -> Result<()> {
+        if self.accessed_this_cycle {
+            self.stats.conflicts += 1;
+            bail!("single-port SRAM access conflict");
+        }
+        self.accessed_this_cycle = true;
+        Ok(())
+    }
+
+    /// Write one vector at vector-address `vaddr`.
+    pub fn write_vec(&mut self, vaddr: i64, words: &[i64]) -> Result<()> {
+        assert_eq!(words.len(), self.fetch_width);
+        self.claim_port()?;
+        let base = self.word_base(vaddr)?;
+        self.data[base..base + self.fetch_width].copy_from_slice(words);
+        self.stats.writes += 1;
+        Ok(())
+    }
+
+    /// Issue a vector read; data is available via [`WideSram::take_read`]
+    /// after the next [`WideSram::end_cycle`].
+    pub fn read_vec(&mut self, vaddr: i64) -> Result<()> {
+        self.claim_port()?;
+        let base = self.word_base(vaddr)?;
+        self.pending_read = Some(self.data[base..base + self.fetch_width].to_vec());
+        self.stats.reads += 1;
+        Ok(())
+    }
+
+    fn word_base(&self, vaddr: i64) -> Result<usize> {
+        let n = self.vector_count() as i64;
+        if vaddr < 0 || vaddr >= n {
+            bail!("vector address {vaddr} out of range 0..{n}");
+        }
+        Ok(vaddr as usize * self.fetch_width)
+    }
+
+    /// Retire the cycle: pending read data becomes ready.
+    pub fn end_cycle(&mut self) {
+        self.ready_read = self.pending_read.take();
+        self.accessed_this_cycle = false;
+    }
+
+    /// Data from the read issued last cycle.
+    pub fn take_read(&mut self) -> Option<Vec<i64>> {
+        self.ready_read.take()
+    }
+}
+
+/// A dual-port word-granular SRAM (one read port + one write port per
+/// cycle), the naïve Fig 3 implementation.
+#[derive(Clone, Debug)]
+pub struct DualPortSram {
+    pub capacity: usize,
+    data: Vec<i64>,
+    pending_write: Option<(usize, i64)>,
+    read_this_cycle: bool,
+    pending_read: Option<i64>,
+    ready_read: Option<i64>,
+    pub stats: SramStats,
+}
+
+impl DualPortSram {
+    pub fn new(capacity: usize) -> Self {
+        DualPortSram {
+            capacity,
+            data: vec![0; capacity],
+            pending_write: None,
+            read_this_cycle: false,
+            pending_read: None,
+            ready_read: None,
+            stats: SramStats::default(),
+        }
+    }
+
+    /// Write commits at end of cycle: a same-cycle read of the same
+    /// address returns the old data.
+    pub fn write(&mut self, addr: i64, word: i64) -> Result<()> {
+        if self.pending_write.is_some() {
+            self.stats.conflicts += 1;
+            bail!("dual-port SRAM: second write in one cycle");
+        }
+        if addr < 0 || addr as usize >= self.capacity {
+            bail!("address {addr} out of range");
+        }
+        self.pending_write = Some((addr as usize, word));
+        self.stats.writes += 1;
+        Ok(())
+    }
+
+    pub fn read(&mut self, addr: i64) -> Result<()> {
+        if self.read_this_cycle {
+            self.stats.conflicts += 1;
+            bail!("dual-port SRAM: second read in one cycle");
+        }
+        if addr < 0 || addr as usize >= self.capacity {
+            bail!("address {addr} out of range");
+        }
+        self.read_this_cycle = true;
+        self.pending_read = Some(self.data[addr as usize]);
+        self.stats.reads += 1;
+        Ok(())
+    }
+
+    pub fn end_cycle(&mut self) {
+        self.ready_read = self.pending_read.take();
+        if let Some((addr, word)) = self.pending_write.take() {
+            self.data[addr] = word;
+        }
+        self.read_this_cycle = false;
+    }
+
+    pub fn take_read(&mut self) -> Option<i64> {
+        self.ready_read.take()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wide_write_then_read_with_latency() {
+        let mut s = WideSram::new(32, 4);
+        s.write_vec(2, &[10, 11, 12, 13]).unwrap();
+        s.end_cycle();
+        s.read_vec(2).unwrap();
+        assert_eq!(s.take_read(), None, "read data not ready same cycle");
+        s.end_cycle();
+        assert_eq!(s.take_read(), Some(vec![10, 11, 12, 13]));
+        assert_eq!(s.stats.reads, 1);
+        assert_eq!(s.stats.writes, 1);
+    }
+
+    #[test]
+    fn single_port_conflict_detected() {
+        let mut s = WideSram::new(16, 4);
+        s.write_vec(0, &[1, 2, 3, 4]).unwrap();
+        assert!(s.read_vec(1).is_err());
+        assert_eq!(s.stats.conflicts, 1);
+        s.end_cycle();
+        s.read_vec(0).unwrap(); // fine next cycle
+    }
+
+    #[test]
+    fn wide_oob_rejected() {
+        let mut s = WideSram::new(16, 4);
+        assert!(s.write_vec(4, &[0; 4]).is_err());
+        assert!(s.write_vec(-1, &[0; 4]).is_err());
+    }
+
+    #[test]
+    fn dual_port_parallel_read_write() {
+        let mut s = DualPortSram::new(8);
+        s.write(3, 42).unwrap();
+        s.read(3).unwrap(); // old value, same cycle: reads 0
+        s.end_cycle();
+        assert_eq!(s.take_read(), Some(0));
+        s.read(3).unwrap();
+        s.end_cycle();
+        assert_eq!(s.take_read(), Some(42));
+    }
+
+    #[test]
+    fn dual_port_double_access_conflicts() {
+        let mut s = DualPortSram::new(8);
+        s.read(0).unwrap();
+        assert!(s.read(1).is_err());
+        s.write(0, 1).unwrap();
+        assert!(s.write(1, 2).is_err());
+    }
+}

@@ -1,0 +1,67 @@
+//! The transpose buffer (TB): a **double-buffered** (two-vector,
+//! "four to eight words per port", §IV-B) register file that receives
+//! SRAM vectors and serializes them onto the output port. The ping-pong
+//! halves let the next vector land while the previous one is still
+//! being drained — without it, delayed streams whose distance is
+//! ≡ 1 (mod fetch width) could never share the single SRAM port.
+//! Named for the iteration-space transpose between the vector dimension
+//! and the serial output order.
+
+#[derive(Clone, Debug)]
+pub struct TransposeBuffer {
+    regs: Vec<i64>,
+    fetch_width: usize,
+    pub loads: u64,
+}
+
+impl TransposeBuffer {
+    pub fn new(fetch_width: usize) -> Self {
+        TransposeBuffer { regs: vec![0; 2 * fetch_width], fetch_width, loads: 0 }
+    }
+
+    pub fn fetch_width(&self) -> usize {
+        self.fetch_width
+    }
+
+    /// Parallel load of one vector into half 0 or 1.
+    pub fn load(&mut self, half: usize, words: &[i64]) {
+        assert_eq!(words.len(), self.fetch_width, "TB width mismatch");
+        assert!(half < 2);
+        let base = half * self.fetch_width;
+        self.regs[base..base + self.fetch_width].copy_from_slice(words);
+        self.loads += 1;
+    }
+
+    /// Serial read of one slot (0..2*fetch_width).
+    pub fn read(&self, slot: i64) -> i64 {
+        assert!(
+            (0..self.regs.len() as i64).contains(&slot),
+            "TB slot {slot} out of range"
+        );
+        self.regs[slot as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_then_serialize_both_halves() {
+        let mut tb = TransposeBuffer::new(4);
+        tb.load(0, &[1, 2, 3, 4]);
+        tb.load(1, &[5, 6, 7, 8]);
+        assert_eq!((0..8).map(|k| tb.read(k)).collect::<Vec<_>>(), vec![1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(tb.loads, 2);
+        // Reloading one half leaves the other intact.
+        tb.load(0, &[9, 9, 9, 9]);
+        assert_eq!(tb.read(5), 6);
+        assert_eq!(tb.read(0), 9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_mismatch_panics() {
+        TransposeBuffer::new(4).load(0, &[1, 2]);
+    }
+}

@@ -1,0 +1,33 @@
+//! # pushmem — compiling Halide programs to push-memory accelerators
+//!
+//! A from-scratch reproduction of *"Compiling Halide Programs to
+//! Push-Memory Accelerators"* (Liu et al., 2021): a compiler from a
+//! mini-Halide DSL to configurations of *physical unified buffers* on a
+//! CGRA, plus the cycle-accurate CGRA simulator, FPGA/CPU baselines, and
+//! area/energy models used to regenerate every table and figure in the
+//! paper's evaluation.
+//!
+//! Pipeline (Fig 1 of the paper):
+//!
+//! ```text
+//! halide::*  --lower-->  scheduled loop IR
+//!   --extraction-->      unified buffer graph (ub::*)
+//!   --sched-->           cycle-accurate schedules (stencil | dnn)
+//!   --mapping-->         physical unified buffer configs (hw::*)
+//!   --cgra-->            place & route -> bitstream -> simulate
+//!   --coordinator-->     validate vs XLA golden model (runtime::*)
+//! ```
+
+pub mod apps;
+pub mod cgra;
+pub mod coordinator;
+pub mod cost;
+pub mod extraction;
+pub mod halide;
+pub mod hw;
+pub mod mapping;
+pub mod poly;
+pub mod runtime;
+pub mod sched;
+pub mod tensor;
+pub mod ub;

@@ -1,0 +1,223 @@
+//! `pushmem` — CLI for the push-memory accelerator compiler.
+//!
+//! Subcommands (hand-rolled arg parsing; no clap in this offline image):
+//!
+//! ```text
+//! pushmem list                       show registered applications
+//! pushmem compile <app>              compile and print the design report
+//! pushmem run <app> [--artifacts D]  simulate; validate vs XLA golden
+//! pushmem report [--artifacts D]     all apps: Table IV + Fig 13/14 rows
+//! pushmem tables                     Tables V, VI, VII reproductions
+//! pushmem serve <app> [--addr A]     serve tiles over TCP (Fig 12 shape)
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use pushmem::apps;
+use pushmem::coordinator::{compile, report_app, sequential_comparison, validate};
+use pushmem::coordinator::serve;
+use pushmem::cost::CGRA_CLOCK_HZ;
+use pushmem::runtime::Runtime;
+
+fn artifact_path(dir: &str, name: &str) -> PathBuf {
+    PathBuf::from(dir).join(format!("{name}.hlo.txt"))
+}
+
+fn flag_value(args: &[String], flag: &str, default: &str) -> String {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn cmd_list() {
+    println!("registered applications:");
+    for n in apps::NAMES {
+        println!("  {n}");
+    }
+}
+
+fn cmd_compile(name: &str) -> Result<()> {
+    let (program, _) = apps::by_name(name).with_context(|| format!("unknown app {name}"))?;
+    let c = compile(&program)?;
+    println!("app               {}", program.name);
+    println!("policy            {:?}", c.schedule.kind);
+    println!("stages            {}", c.lp.stages.len());
+    println!("buffers           {}", c.graph.buffers.len());
+    println!("PEs               {}", c.design.pe_count());
+    println!("MEM tiles         {}", c.design.mem_tiles());
+    println!("SRAM words        {}", c.design.sram_words());
+    println!("SR words          {}", c.design.sr_words());
+    println!("completion        {} cycles/tile", c.graph.completion);
+    println!("coarse II         {} cycles", c.graph.coarse_ii);
+    println!("pixels/cycle      {:.2}", c.graph.output_pixels_per_cycle());
+    match (&c.placement, &c.routing) {
+        (Some(p), Some(r)) => {
+            println!(
+                "place & route     fits: {:.1}% utilization, wirelength {}, max channel {}",
+                100.0 * p.utilization(),
+                r.total_wirelength,
+                r.max_edge_occupancy
+            );
+        }
+        _ => println!("place & route     DOES NOT FIT the 16x32 array (simulation only)"),
+    }
+    let bs = pushmem::cgra::bitstream::assemble(&c.design);
+    println!(
+        "bitstream         {} tile configs, {} bytes",
+        bs.len(),
+        pushmem::cgra::bitstream::size_bytes(&bs)
+    );
+    Ok(())
+}
+
+fn cmd_run(name: &str, artifacts: &str) -> Result<()> {
+    let (program, artifact) =
+        apps::by_name(name).with_context(|| format!("unknown app {name}"))?;
+    let c = compile(&program)?;
+    let path = artifact_path(artifacts, artifact);
+    if !path.exists() {
+        bail!("artifact {} missing — run `make artifacts`", path.display());
+    }
+    let rt = Runtime::cpu()?;
+    println!("platform          {}", rt.platform());
+    let v = validate(&c, &path, &rt)?;
+    println!("app               {}", v.app);
+    println!("simulated         {} cycles", v.stats.cycles);
+    println!("words compared    {}", v.words_compared);
+    println!(
+        "CGRA vs XLA       {}",
+        if v.matched { "MATCH (bit-exact)" } else { "MISMATCH" }
+    );
+    println!("CPU (XLA) time    {:.3} ms", v.cpu_time_s * 1e3);
+    println!(
+        "CGRA time         {:.3} ms @ 900 MHz",
+        v.stats.cycles as f64 / CGRA_CLOCK_HZ * 1e3
+    );
+    if !v.matched {
+        bail!("validation failed");
+    }
+    Ok(())
+}
+
+fn cmd_report(artifacts: &str) -> Result<()> {
+    let rt = Runtime::cpu().ok();
+    println!(
+        "{:<14} {:>7} {:>5} {:>5} {:>9} {:>6} {:>5} {:>7} {:>7} {:>10} {:>10} {:>9} {:>6}",
+        "app", "cycles", "PEs", "MEMs", "SRAMwords", "px/cyc", "BRAM", "FF", "LUT",
+        "CGRA pJ/op", "FPGA pJ/op", "CPU ms", "valid"
+    );
+    for name in [
+        "gaussian", "harris", "upsample", "unsharp", "camera", "resnet", "mobilenet",
+    ] {
+        let (program, artifact) = apps::by_name(name).unwrap();
+        let path = artifact_path(artifacts, artifact);
+        let r = report_app(
+            &program,
+            if path.exists() { Some(path.as_path()) } else { None },
+            rt.as_ref(),
+        )
+        .with_context(|| format!("reporting {name}"))?;
+        println!(
+            "{:<14} {:>7} {:>5} {:>5} {:>9} {:>6.2} {:>5} {:>7} {:>7} {:>10.2} {:>10.2} {:>9} {:>6}",
+            r.name,
+            r.completion,
+            r.pes,
+            r.mems,
+            r.sram_words,
+            r.pixels_per_cycle,
+            r.fpga.bram,
+            r.fpga.ff,
+            r.fpga.lut,
+            r.cgra_energy_per_op_pj,
+            r.fpga.energy_per_op_pj,
+            r.cpu_time_s
+                .map(|t| format!("{:.3}", t * 1e3))
+                .unwrap_or_else(|| "-".into()),
+            r.validated
+                .map(|v| if v { "yes" } else { "NO" }.to_string())
+                .unwrap_or_else(|| "-".into()),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_tables() -> Result<()> {
+    println!("== Table V: Harris schedules ==");
+    println!("{:<22} {:>8} {:>6} {:>6} {:>9}", "schedule", "px/cyc", "PEs", "MEMs", "cycles");
+    for (label, name) in [
+        ("sch1: recompute all", "harris_sch1"),
+        ("sch2: recompute some", "harris_sch2"),
+        ("sch3: no recompute", "harris"),
+        ("sch4: unroll by 2", "harris_sch4"),
+        ("sch5: 4x larger tile", "harris_sch5"),
+        ("sch6: last on host", "harris_sch6"),
+    ] {
+        let (program, _) = apps::by_name(name).unwrap();
+        let r = report_app(&program, None, None)?;
+        println!(
+            "{:<22} {:>8.2} {:>6} {:>6} {:>9}",
+            label, r.pixels_per_cycle, r.pes, r.mems, r.completion
+        );
+    }
+
+    println!("\n== Tables VI & VII: optimized vs sequential ==");
+    println!(
+        "{:<12} {:>10} {:>10} {:>8} {:>10} {:>9} {:>8}",
+        "app", "seq cyc", "opt cyc", "speedup", "seq words", "opt words", "mem red"
+    );
+    for p in apps::all() {
+        let s = sequential_comparison(&p)?;
+        println!(
+            "{:<12} {:>10} {:>10} {:>8.2} {:>10} {:>9} {:>8.2}",
+            s.name,
+            s.seq_completion,
+            s.opt_completion,
+            s.speedup,
+            s.seq_words,
+            s.opt_words,
+            s.memory_reduction
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(name: &str, addr: &str) -> Result<()> {
+    let (program, _) = apps::by_name(name).with_context(|| format!("unknown app {name}"))?;
+    let c = compile(&program)?;
+    serve::serve(c, addr)
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("list") => {
+            cmd_list();
+            Ok(())
+        }
+        Some("compile") => {
+            let name = args.get(1).context("usage: pushmem compile <app>")?;
+            cmd_compile(name)
+        }
+        Some("run") => {
+            let name = args.get(1).context("usage: pushmem run <app>")?;
+            cmd_run(name, &flag_value(&args, "--artifacts", "artifacts"))
+        }
+        Some("report") => cmd_report(&flag_value(&args, "--artifacts", "artifacts")),
+        Some("tables") => cmd_tables(),
+        Some("serve") => {
+            let name = args.get(1).context("usage: pushmem serve <app>")?;
+            cmd_serve(name, &flag_value(&args, "--addr", "127.0.0.1:7411"))
+        }
+        _ => {
+            eprintln!(
+                "usage: pushmem <list|compile|run|report|tables|serve> [args]\n\
+                 see `pushmem list` for applications"
+            );
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,62 @@
+//! Banking (§V-C "Shift Register Optimization and Banking").
+//!
+//! A single wide-fetch single-port SRAM sustains `fetch_width` memory
+//! operations per cycle in steady state (each serial port consumes one
+//! SRAM access per `fetch_width` cycles). Memory-served ports beyond
+//! that budget are split across banks; every bank receives a copy of
+//! the full write stream (read duplication — the simplified version of
+//! the optimal stencil banking of [7], always legal because the write
+//! bandwidth is already provisioned).
+
+use anyhow::{ensure, Result};
+
+/// Assign memory-served output ports to banks. Returns one `Vec` of
+/// output-port indices per bank.
+pub fn assign(
+    n_inputs: usize,
+    mem_out_ports: &[usize],
+    fetch_width: usize,
+) -> Result<Vec<Vec<usize>>> {
+    ensure!(
+        n_inputs < fetch_width,
+        "write ports ({n_inputs}) saturate the SRAM bandwidth ({fetch_width})"
+    );
+    if mem_out_ports.is_empty() {
+        return Ok(vec![]);
+    }
+    let per_bank = fetch_width - n_inputs;
+    Ok(mem_out_ports
+        .chunks(per_bank)
+        .map(|c| c.to_vec())
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_in_one_bank() {
+        let banks = assign(1, &[0, 2], 4).unwrap();
+        assert_eq!(banks, vec![vec![0, 2]]);
+    }
+
+    #[test]
+    fn splits_when_over_budget() {
+        // 1 write + 5 reads at FW=4: 3 reads per bank -> 2 banks.
+        let banks = assign(1, &[0, 1, 2, 3, 4], 4).unwrap();
+        assert_eq!(banks.len(), 2);
+        assert_eq!(banks[0], vec![0, 1, 2]);
+        assert_eq!(banks[1], vec![3, 4]);
+    }
+
+    #[test]
+    fn no_mem_ports_no_banks() {
+        assert!(assign(1, &[], 4).unwrap().is_empty());
+    }
+
+    #[test]
+    fn saturated_writes_rejected() {
+        assert!(assign(4, &[0], 4).is_err());
+    }
+}

@@ -1,0 +1,47 @@
+//! Chaining (§V-C "Chaining", Eq 5/6, Fig 10).
+//!
+//! A logical buffer whose circular capacity exceeds one memory tile is
+//! spread across several chained tiles: logical address `a` lives in
+//! tile `floor(a / C)` at physical address `a mod C` (C = per-tile
+//! capacity). The behavioral model treats the chain as one larger
+//! single-port memory (each tile's mux forwards non-matching accesses,
+//! Fig 10), so only the tile *count* and the address split are modeled.
+
+/// Number of physical tiles needed for `capacity_words`.
+pub fn tiles_needed(capacity_words: i64, tile_capacity: usize) -> usize {
+    let t = tile_capacity as i64;
+    (((capacity_words + t - 1) / t).max(1)) as usize
+}
+
+/// Eq 5: which tile a logical address lives in.
+pub fn tile_id(addr: i64, tile_capacity: usize) -> i64 {
+    addr.div_euclid(tile_capacity as i64)
+}
+
+/// Eq 6: the physical address within that tile.
+pub fn physical_addr(addr: i64, tile_capacity: usize) -> i64 {
+    addr.rem_euclid(tile_capacity as i64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example() {
+        // §V-C: a 32-word macro, 64-word delay buffer -> 2 tiles;
+        // TileID(x) = floor(x/32), phys = x mod 32.
+        assert_eq!(tiles_needed(64, 32), 2);
+        assert_eq!(tile_id(0, 32), 0);
+        assert_eq!(tile_id(33, 32), 1);
+        assert_eq!(physical_addr(33, 32), 1);
+    }
+
+    #[test]
+    fn single_tile_cases() {
+        assert_eq!(tiles_needed(1, 2048), 1);
+        assert_eq!(tiles_needed(2048, 2048), 1);
+        assert_eq!(tiles_needed(2049, 2048), 2);
+        assert_eq!(tiles_needed(0, 2048), 1);
+    }
+}

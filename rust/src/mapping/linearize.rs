@@ -1,0 +1,233 @@
+//! Address linearization (§V-C "Address Linearization", Eq 4).
+//!
+//! N-dimensional buffer coordinates are flattened with an offset-vector
+//! inner product (row-major strides over the realization box), then
+//! wrapped into a circular buffer of capacity `C`: the paper's
+//! `{1,64} mod 64 = {1,0}` example is the special case where the mod
+//! folds into the offset vector. `C` is the smallest fetch-width
+//! multiple ≥ the live-value bound that produces no lifetime collisions,
+//! verified exactly against the port event lists.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+use crate::poly::Affine;
+use crate::ub::UnifiedBuffer;
+
+/// A linear, circular memory layout.
+#[derive(Clone, Debug)]
+pub struct Layout {
+    /// Row-major flattening over the data box (absolute coords).
+    pub linear: Affine,
+    /// Circular capacity in words (`None` while being searched).
+    pub capacity: i64,
+}
+
+impl Layout {
+    /// Flat (pre-wrap) address of a coordinate.
+    pub fn flat(&self, coords: &[i64]) -> i64 {
+        self.linear.eval(coords)
+    }
+
+    /// Physical circular address.
+    pub fn address(&self, coords: &[i64]) -> i64 {
+        self.flat(coords).rem_euclid(self.capacity)
+    }
+}
+
+/// Row-major flattening of the buffer's data box.
+pub fn row_major_linear(ub: &UnifiedBuffer) -> Affine {
+    padded_linear(ub, 1)
+}
+
+/// Row-major flattening with the innermost *pitch* rounded up to
+/// `row_pad` (the fetch width): rows then start on generation
+/// boundaries, so the vectorized flush/read schedules stay affine even
+/// when the image width is not a fetch-width multiple. The padded slots
+/// are never written or read.
+pub fn padded_linear(ub: &UnifiedBuffer, row_pad: i64) -> Affine {
+    let dims = &ub.data_box.dims;
+    let rank = dims.len();
+    let mut coeffs = vec![0i64; rank];
+    let mut stride = 1i64;
+    for k in (0..rank).rev() {
+        coeffs[k] = stride;
+        let mut e = dims[k].extent;
+        if k == rank - 1 {
+            e = (e + row_pad - 1) / row_pad * row_pad;
+        }
+        stride *= e;
+    }
+    // Shift so the box minimum maps to flat address 0.
+    let mins: Vec<i64> = dims.iter().map(|d| d.min).collect();
+    let a = Affine::new(coeffs, 0);
+    let off = -a.eval(&mins);
+    a.shift(off)
+}
+
+/// Find the smallest circular capacity (a `fetch_width` multiple, at
+/// least `min_live`) with no lifetime collisions: two values whose flat
+/// addresses alias mod `C` must have disjoint live ranges, with the
+/// later write landing strictly after the earlier value's last read.
+pub fn choose_capacity(ub: &UnifiedBuffer, fetch_width: i64) -> Result<Layout> {
+    choose_capacity_aligned(ub, fetch_width, 0)
+}
+
+/// [`choose_capacity`] with the flat addresses shifted by `shift`
+/// (used by the mapper to vector-align a bank to its primary read
+/// port's constant access offset, so stencil taps like `x+1` land on
+/// generation boundaries) and the row pitch padded to `row_pad`.
+pub fn choose_capacity_aligned(
+    ub: &UnifiedBuffer,
+    fetch_width: i64,
+    shift: i64,
+) -> Result<Layout> {
+    choose_capacity_padded(ub, fetch_width, shift, fetch_width.max(1) / 2)
+}
+
+/// Fully-parameterized capacity search: `quantum` is the capacity
+/// rounding (2x fetch width for ping-pong TBs), `row_pad` the pitch
+/// alignment (the fetch width; 1 for word-granular dual-port banks).
+pub fn choose_capacity_padded(
+    ub: &UnifiedBuffer,
+    quantum: i64,
+    shift: i64,
+    row_pad: i64,
+) -> Result<Layout> {
+    let linear = padded_linear(ub, row_pad.max(1)).shift(shift);
+    let fetch_width = quantum;
+    let min_live = ub.max_live()?.max(1);
+    // Full (non-circular) padded size: the largest flat address + 1.
+    let maxs: Vec<i64> = ub.data_box.dims.iter().map(|d| d.max()).collect();
+    let full = linear.eval(&maxs) + 1 - shift.min(0);
+
+    // Write time and last-read time per flat address.
+    let mut writes: Vec<(i64, i64)> = Vec::new(); // (flat, write cycle)
+    for p in &ub.inputs {
+        for (t, coords) in p.events() {
+            writes.push((linear.eval(&coords), t));
+        }
+    }
+    let mut last_read: HashMap<i64, i64> = HashMap::new();
+    for p in &ub.outputs {
+        for (t, coords) in p.events() {
+            let e = last_read.entry(linear.eval(&coords)).or_insert(t);
+            *e = (*e).max(t);
+        }
+    }
+
+    let round = |v: i64| (v + fetch_width - 1) / fetch_width * fetch_width;
+    let mut cap = round(min_live);
+    'outer: while cap < full {
+        // Check collisions: group by flat mod cap; within each group,
+        // sorted by write time, each value must die (last read) before
+        // the next aliasing write lands.
+        let mut groups: HashMap<i64, Vec<(i64, i64)>> = HashMap::new();
+        for &(flat, w) in &writes {
+            groups.entry(flat.rem_euclid(cap)).or_default().push((w, flat));
+        }
+        for g in groups.values_mut() {
+            g.sort();
+            for w in g.windows(2) {
+                let (_, flat_a) = w[0];
+                let (wb, _) = w[1];
+                if let Some(&r) = last_read.get(&flat_a) {
+                    if wb <= r {
+                        cap = round(cap + fetch_width);
+                        continue 'outer;
+                    }
+                }
+            }
+        }
+        return Ok(Layout { linear, capacity: cap });
+    }
+    // Fall back to the full (non-circular) box.
+    let cap = round(full.max(1));
+    if cap >= full {
+        return Ok(Layout { linear, capacity: cap });
+    }
+    bail!("no collision-free circular capacity for buffer {}", ub.name);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::poly::{AffineMap, BoxSet, CycleSchedule};
+    use crate::ub::{Port, PortDir};
+
+    /// Line-buffer-like UB: writes row-major 8x8, one read port delayed
+    /// by one row + one pixel (distance 9).
+    fn line_buffer(delay: i64) -> UnifiedBuffer {
+        let mut ub = UnifiedBuffer::new("lb", BoxSet::from_extents(&[8, 8]));
+        ub.add_input(Port::new(
+            "w",
+            PortDir::In,
+            BoxSet::from_extents(&[8, 8]),
+            AffineMap::identity(2),
+            CycleSchedule::row_major(&[8, 8], 1, 0),
+        ));
+        ub.add_output(Port::new(
+            "r",
+            PortDir::Out,
+            BoxSet::from_extents(&[8, 8]),
+            AffineMap::identity(2),
+            CycleSchedule::row_major(&[8, 8], 1, delay),
+        ));
+        ub
+    }
+
+    #[test]
+    fn row_major_flattening() {
+        let ub = line_buffer(9);
+        let lin = row_major_linear(&ub);
+        assert_eq!(lin.eval(&[0, 0]), 0);
+        assert_eq!(lin.eval(&[0, 7]), 7);
+        assert_eq!(lin.eval(&[1, 0]), 8);
+        assert_eq!(lin.eval(&[7, 7]), 63);
+    }
+
+    #[test]
+    fn capacity_is_live_window_not_full_box() {
+        // Delay 9 => ~10 live values => capacity 12 (FW multiple), far
+        // below the 64-word box (the paper's storage minimization).
+        let ub = line_buffer(9);
+        let layout = choose_capacity(&ub, 4).unwrap();
+        assert!(layout.capacity >= 10, "capacity {}", layout.capacity);
+        assert!(layout.capacity <= 16, "capacity {}", layout.capacity);
+        assert_eq!(layout.capacity % 4, 0);
+    }
+
+    #[test]
+    fn sequential_reads_need_full_box() {
+        // Read starts only after all writes: everything live at once.
+        let ub = line_buffer(64);
+        let layout = choose_capacity(&ub, 4).unwrap();
+        assert_eq!(layout.capacity, 64);
+    }
+
+    #[test]
+    fn addresses_wrap() {
+        let ub = line_buffer(9);
+        let layout = choose_capacity(&ub, 4).unwrap();
+        let c = layout.capacity;
+        assert_eq!(layout.address(&[0, 0]), 0);
+        // Row 2 wraps around the circular buffer.
+        assert_eq!(layout.address(&[2, 0]), 16 % c);
+        assert!(layout.address(&[7, 7]) < c);
+    }
+
+    #[test]
+    fn collision_search_increases_capacity() {
+        // Two read ports, the second much later: live window is larger.
+        let mut ub = line_buffer(9);
+        ub.add_output(Port::new(
+            "r2",
+            PortDir::Out,
+            BoxSet::from_extents(&[8, 8]),
+            AffineMap::identity(2),
+            CycleSchedule::row_major(&[8, 8], 1, 25),
+        ));
+        let layout = choose_capacity(&ub, 4).unwrap();
+        assert!(layout.capacity >= 26, "capacity {}", layout.capacity);
+    }
+}

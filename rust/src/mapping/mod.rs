@@ -1,0 +1,195 @@
+//! Unified buffer mapping (§V-C): abstract unified buffers → physical
+//! unified buffer configurations.
+//!
+//! The pipeline per buffer (Fig 8):
+//!
+//! 1. **Shift-register introduction** ([`shiftreg`]) — output ports at a
+//!    constant cycle distance from a source are peeled off into register
+//!    chains (short gaps) or chained off a memory-served port (Fig 8a).
+//! 2. **Banking** ([`banking`]) — remaining memory ports are packed into
+//!    banks of at most `fetch_width` total ports (the single-port SRAM's
+//!    steady-state bandwidth); reads beyond that duplicate the write
+//!    stream into additional banks (read-duplication, a simplified [7]).
+//! 3. **Address linearization** ([`linearize`]) — N-d coordinates →
+//!    1-d addresses via an offset-vector inner product, wrapped mod a
+//!    circular capacity found by collision-checked search (Eq 4).
+//! 4. **Vectorization** ([`vectorize`]) — strip-mine port schedules by
+//!    the SRAM fetch width into AGG/SRAM/TB controller configurations
+//!    (Eq 2/3, Fig 9), fitting exact event lists to affine AG/SG
+//!    hardware and resolving single-port access conflicts.
+//! 5. **Chaining** ([`chain`]) — capacities beyond one memory tile span
+//!    several chained tiles (Eq 5/6, Fig 10).
+//!
+//! Compute kernels are mapped to PE configurations (one ALU op per PE,
+//! operand retiming delays, accumulate mode for reduction loops) by
+//! [`mapper`], which also orchestrates the buffer pipeline and emits the
+//! final [`MappedDesign`].
+
+pub mod banking;
+pub mod chain;
+pub mod linearize;
+pub mod mapper;
+pub mod shiftreg;
+pub mod vectorize;
+
+use std::collections::BTreeMap;
+
+use crate::hw::{MemTileConfig, PeConfig};
+use crate::poly::{BoxSet, CycleSchedule};
+
+/// Default physical parameters of a memory tile (§VI: 512x64-bit
+/// single-port SRAM macro = 2048 16-bit words, fetch width 4).
+pub const FETCH_WIDTH: usize = 4;
+pub const TILE_CAPACITY_WORDS: usize = 2048;
+/// Constant-distance gaps up to this many cycles are implemented as
+/// shift registers; larger gaps go through a memory (Fig 8a).
+pub const SR_MAX_GAP: i64 = 16;
+
+/// Where a shift-register tap draws its data from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SrSource {
+    /// A buffer input port (the write stream).
+    Input(usize),
+    /// Another output port of the same buffer (chaining off a
+    /// memory-served tap, Fig 8a).
+    Output(usize),
+}
+
+/// How one UB output port is implemented.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PortImpl {
+    /// Register chain: `depth` cycles behind `src`.
+    Shift { src: SrSource, depth: i64 },
+    /// Served by memory bank `bank`, TB output `out_idx`.
+    Mem { bank: usize, out_idx: usize },
+}
+
+/// The hardware flavor of a bank: the optimized wide-fetch single-port
+/// tile (§IV-B), or the dual-port fallback (Fig 3) for access patterns
+/// the vectorizer cannot serve.
+#[derive(Clone, Debug)]
+pub enum BankConfig {
+    Wide(MemTileConfig),
+    Dual(crate::hw::DpTileConfig),
+}
+
+/// One configured physical-unified-buffer bank.
+#[derive(Clone, Debug)]
+pub struct MemBank {
+    pub config: BankConfig,
+    /// UB input port indices, in serial-in order.
+    pub in_ports: Vec<usize>,
+    /// UB output port indices, in output order.
+    pub out_ports: Vec<usize>,
+    /// Logical circular capacity in words.
+    pub capacity_words: i64,
+    /// Physical memory tiles after chaining.
+    pub tiles: usize,
+}
+
+impl MemBank {
+    pub fn is_dual_port(&self) -> bool {
+        matches!(self.config, BankConfig::Dual(_))
+    }
+}
+
+/// A fully mapped unified buffer.
+#[derive(Clone, Debug)]
+pub struct MappedBuffer {
+    pub name: String,
+    pub banks: Vec<MemBank>,
+    /// Implementation of each UB output port (same indexing).
+    pub port_impls: Vec<PortImpl>,
+    /// Total shift-register words.
+    pub sr_words: i64,
+}
+
+impl MappedBuffer {
+    pub fn mem_tiles(&self) -> usize {
+        self.banks.iter().map(|b| b.tiles).sum()
+    }
+}
+
+/// Where a PE operand comes from.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OperandSrc {
+    /// Kernel load index (a buffer output port / SR tap).
+    Load(usize),
+    /// Another PE node of this kernel.
+    Node(usize),
+    /// The value of iteration dim `k` at issue time (a counter PE).
+    Iter(usize),
+    /// Constant folded into the PE config.
+    None,
+}
+
+/// One mapped PE.
+#[derive(Clone, Debug)]
+pub struct MappedPe {
+    pub cfg: PeConfig,
+    pub srcs: [OperandSrc; 3],
+    /// Result available this many cycles after kernel issue.
+    pub depth: i64,
+}
+
+/// A compute kernel mapped onto PEs.
+#[derive(Clone, Debug)]
+pub struct MappedKernel {
+    pub stage: String,
+    pub lane: usize,
+    /// Topological order; the last node is the root (stored value).
+    pub nodes: Vec<MappedPe>,
+    pub loads: Vec<(String, usize)>,
+    pub store: (String, usize),
+    pub domain: BoxSet,
+    pub schedule: CycleSchedule,
+    pub latency: i64,
+    /// Reduction accumulator period (1 for pure kernels).
+    pub acc_period: i64,
+}
+
+impl MappedKernel {
+    pub fn pe_count(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+/// The complete mapped design: the compiler's final output before place
+/// and route.
+#[derive(Clone, Debug)]
+pub struct MappedDesign {
+    pub name: String,
+    pub buffers: BTreeMap<String, MappedBuffer>,
+    pub kernels: Vec<MappedKernel>,
+    pub completion: i64,
+    pub coarse_ii: i64,
+    pub fetch_width: usize,
+}
+
+impl MappedDesign {
+    /// MEM tile count (Table IV/V column).
+    pub fn mem_tiles(&self) -> usize {
+        self.buffers.values().map(|b| b.mem_tiles()).sum()
+    }
+
+    /// PE count (Table IV/V column).
+    pub fn pe_count(&self) -> usize {
+        self.kernels.iter().map(|k| k.pe_count()).sum()
+    }
+
+    /// Total SRAM words actually allocated (Table VII column).
+    pub fn sram_words(&self) -> i64 {
+        self.buffers
+            .values()
+            .flat_map(|b| b.banks.iter().map(|bk| bk.capacity_words))
+            .sum()
+    }
+
+    /// Total shift-register words.
+    pub fn sr_words(&self) -> i64 {
+        self.buffers.values().map(|b| b.sr_words).sum()
+    }
+}
+
+/// Re-exported entry point.
+pub use mapper::map_design;

@@ -1,0 +1,206 @@
+//! Shift-register introduction (§V-C, Fig 8a).
+//!
+//! An output port can be served by a register chain when there is a
+//! constant cycle distance between it and a source whose value stream is
+//! a superset of what the port needs. The planner sorts convertible
+//! ports by distance and walks the chain greedily: short gaps become
+//! registers; a long gap makes the port memory-served, and later ports
+//! may chain *off that port's output* — reproducing the paper's
+//! "two shift registers and a memory that delays by 64" structure.
+
+use super::{PortImpl, SrSource, SR_MAX_GAP};
+use crate::ub::UnifiedBuffer;
+
+/// The shift-register plan for one buffer: a tentative [`PortImpl`] per
+/// output port where `Mem.bank/out_idx` are placeholders (banking
+/// assigns them later), plus the register word count.
+///
+/// `dist[k]` records the constant `(input port, cycle distance)` of
+/// output port `k` from the write stream, when one exists. Mem-class
+/// ports *with* a constant distance are implemented as **delay banks**
+/// (a memory replaying the full write stream `d` cycles later — the
+/// "memory that delays by 64" of Fig 8a) so that chained taps see every
+/// value, including ones the port itself never samples; ports without
+/// a constant distance get addressed banks.
+#[derive(Clone, Debug)]
+pub struct SrPlan {
+    pub impls: Vec<PortImpl>,
+    pub sr_words: i64,
+    pub dist: Vec<Option<(usize, i64)>>,
+}
+
+pub fn plan(ub: &UnifiedBuffer) -> SrPlan {
+    // Distance of each output port from each input port (if constant).
+    // The per-input write map is built once and probed for every output
+    // port (§Perf).
+    let write_maps: Vec<_> = ub
+        .inputs
+        .iter()
+        .map(|p| ub.event_time_map(p))
+        .collect();
+    let mut dist: Vec<Option<(usize, i64)>> = Vec::with_capacity(ub.outputs.len());
+    for out in &ub.outputs {
+        let mut found = None;
+        for (i, wt) in write_maps.iter().enumerate() {
+            if let Some(d) = ub.distance_against(wt, out) {
+                found = Some((i, d));
+                break;
+            }
+        }
+        dist.push(found);
+    }
+
+    // Sort convertible ports by distance; walk the chain.
+    let mut order: Vec<usize> = (0..ub.outputs.len())
+        .filter(|&k| dist[k].is_some())
+        .collect();
+    order.sort_by_key(|&k| dist[k].unwrap());
+
+    let mut impls: Vec<PortImpl> = (0..ub.outputs.len())
+        .map(|_| PortImpl::Mem { bank: usize::MAX, out_idx: usize::MAX })
+        .collect();
+    let mut sr_words = 0i64;
+
+    // Cursor per source input port: (SrSource, depth reached).
+    let mut cursors: Vec<(SrSource, i64)> = Vec::new();
+    for &k in &order {
+        let (src_in, d) = dist[k].unwrap();
+        // Find the deepest cursor on this input's chain not past d.
+        let cursor = cursors
+            .iter()
+            .enumerate()
+            .filter(|(_, (s, depth))| {
+                *depth <= d
+                    && match s {
+                        SrSource::Input(i) => *i == src_in,
+                        SrSource::Output(o) => {
+                            matches!(dist[*o], Some((i, _)) if i == src_in)
+                        }
+                    }
+            })
+            .max_by_key(|(_, (_, depth))| *depth)
+            .map(|(ci, c)| (ci, *c));
+        let (base_src, base_depth) = match cursor {
+            Some((_, c)) => c,
+            None => (SrSource::Input(src_in), 0),
+        };
+        let gap = d - base_depth;
+        if gap <= SR_MAX_GAP {
+            impls[k] = PortImpl::Shift { src: base_src, depth: gap };
+            sr_words += gap;
+            cursors.push((SrSource::Output(k), d));
+        } else {
+            // Memory-served; later ports can chain off this output.
+            impls[k] = PortImpl::Mem { bank: usize::MAX, out_idx: usize::MAX };
+            cursors.push((SrSource::Output(k), d));
+        }
+    }
+
+    SrPlan { impls, sr_words, dist }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::poly::{Affine, AffineMap, BoxSet, CycleSchedule};
+    use crate::ub::{Port, PortDir};
+
+    /// The Fig 2/8a brighten buffer: write port + four 2x2-stencil read
+    /// ports over 65-wide rows.
+    fn brighten() -> UnifiedBuffer {
+        let mut ub = UnifiedBuffer::new("brighten", BoxSet::from_extents(&[65, 65]));
+        ub.add_input(Port::new(
+            "w",
+            PortDir::In,
+            BoxSet::from_extents(&[65, 65]),
+            AffineMap::identity(2),
+            CycleSchedule::row_major(&[65, 65], 1, 0),
+        ));
+        for (k, (dy, dx)) in [(1i64, 1i64), (1, 0), (0, 1), (0, 0)].iter().enumerate() {
+            ub.add_output(Port::new(
+                format!("r{k}"),
+                PortDir::Out,
+                BoxSet::from_extents(&[64, 64]),
+                AffineMap::new(
+                    2,
+                    vec![Affine::new(vec![1, 0], *dy), Affine::new(vec![0, 1], *dx)],
+                ),
+                CycleSchedule::new(Affine::new(vec![65, 1], 70)),
+            ));
+        }
+        ub
+    }
+
+    #[test]
+    fn fig8a_structure() {
+        // Distances: port0 (y+1,x+1) newest: d = 70-66 = 4; port1 = 5;
+        // port2 = 69; port3 = 70. Expect: SRs at 4 and +1, a memory for
+        // the 64-gap, then +1 SR off the memory port.
+        let ub = brighten();
+        let plan = plan(&ub);
+        assert_eq!(
+            plan.impls[0],
+            PortImpl::Shift { src: SrSource::Input(0), depth: 4 }
+        );
+        assert_eq!(
+            plan.impls[1],
+            PortImpl::Shift { src: SrSource::Output(0), depth: 1 }
+        );
+        // Port 2 (d=69): 64 gap from port1 -> memory.
+        assert!(matches!(plan.impls[2], PortImpl::Mem { .. }));
+        // Port 3 (d=70): 1 past the memory tap -> SR off output 2.
+        assert_eq!(
+            plan.impls[3],
+            PortImpl::Shift { src: SrSource::Output(2), depth: 1 }
+        );
+        assert_eq!(plan.sr_words, 6);
+    }
+
+    #[test]
+    fn non_constant_distance_stays_memory() {
+        let mut ub = UnifiedBuffer::new("t", BoxSet::from_extents(&[8, 8]));
+        ub.add_input(Port::new(
+            "w",
+            PortDir::In,
+            BoxSet::from_extents(&[8, 8]),
+            AffineMap::identity(2),
+            CycleSchedule::row_major(&[8, 8], 1, 0),
+        ));
+        // Transposed read: no constant distance.
+        ub.add_output(Port::new(
+            "r",
+            PortDir::Out,
+            BoxSet::from_extents(&[8, 8]),
+            AffineMap::new(2, vec![Affine::var(2, 1), Affine::var(2, 0)]),
+            CycleSchedule::row_major(&[8, 8], 1, 64),
+        ));
+        let plan = plan(&ub);
+        assert!(matches!(plan.impls[0], PortImpl::Mem { .. }));
+        assert_eq!(plan.sr_words, 0);
+    }
+
+    #[test]
+    fn tight_wire_is_zero_depth_possible() {
+        // Read exactly MEM_READ_MARGIN after write: small SR.
+        let mut ub = UnifiedBuffer::new("w", BoxSet::from_extents(&[16]));
+        ub.add_input(Port::new(
+            "w",
+            PortDir::In,
+            BoxSet::from_extents(&[16]),
+            AffineMap::identity(1),
+            CycleSchedule::row_major(&[16], 1, 0),
+        ));
+        ub.add_output(Port::new(
+            "r",
+            PortDir::Out,
+            BoxSet::from_extents(&[16]),
+            AffineMap::identity(1),
+            CycleSchedule::row_major(&[16], 1, 4),
+        ));
+        let plan = plan(&ub);
+        assert_eq!(
+            plan.impls[0],
+            PortImpl::Shift { src: SrSource::Input(0), depth: 4 }
+        );
+    }
+}

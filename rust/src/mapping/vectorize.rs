@@ -1,0 +1,739 @@
+//! Vectorization (§V-C "Vectorization", Eq 2/3, Fig 9): derive the
+//! AGG / wide-SRAM / TB controller configurations for one memory bank.
+//!
+//! The external serial ports keep their (already affine) UB schedules;
+//! their AGG/TB slot addresses are the linear layout address wrapped
+//! `mod fetch_width` — expressible directly in the AG hardware's
+//! modulus wrap, so no re-fitting is needed. The internal AGG→SRAM and
+//! SRAM→TB controllers are derived from exact event lists (grouping the
+//! write stream into fetch-width generations; deduplicating consecutive
+//! vector uses of each read stream), fitted back to affine AG/SG
+//! configurations, conflict-resolved on the single SRAM port, and
+//! finally re-verified event-by-event.
+
+use anyhow::{bail, Context, Result};
+use std::collections::{HashMap, HashSet};
+
+use super::linearize::Layout;
+use crate::hw::{AffineConfig, MemTileConfig, PortCtlConfig};
+use crate::poly::{fit_affine, Affine, BoxSet};
+use crate::ub::{Port, UnifiedBuffer};
+
+/// Fit `(time, addr)` event sequences to an affine controller over some
+/// reshape of the sequence index. Candidate shapes: 1-D, plus 2-D splits
+/// by each divisor prefix from `hint_extents` (the port's loop
+/// structure, so row-gap schedules fit as (row, group) domains).
+fn fit_events(
+    events: &[(i64, i64)],
+    hint_extents: &[i64],
+) -> Option<(Vec<i64>, Affine, Affine)> {
+    let n = events.len() as i64;
+    if n == 0 {
+        return None;
+    }
+    let mut shapes: Vec<Vec<i64>> = vec![vec![n]];
+    let mut prefix = 1i64;
+    for &e in &hint_extents[..hint_extents.len().saturating_sub(1)] {
+        prefix *= e;
+        if prefix > 1 && prefix < n && n % prefix == 0 {
+            shapes.push(vec![prefix, n / prefix]);
+        }
+    }
+    for shape in shapes {
+        let dom = BoxSet::from_extents(&shape);
+        let lex = |p: &[i64]| -> usize {
+            let mut idx = 0i64;
+            for (k, v) in p.iter().enumerate() {
+                idx = idx * shape[k] + v;
+            }
+            idx as usize
+        };
+        let t = fit_affine(&dom, &mut |p| Some(events[lex(p)].0));
+        let a = fit_affine(&dom, &mut |p| Some(events[lex(p)].1));
+        if let (Some(t), Some(a)) = (t, a) {
+            return Some((shape, t, a));
+        }
+    }
+    None
+}
+
+/// The write stream of a bank, merged across input ports and sorted by
+/// flat address (generation order). Returns `(flush_time, generation)`
+/// per fetch-width group, plus per-generation flush times for checks.
+fn flush_events(
+    ub: &UnifiedBuffer,
+    in_ports: &[usize],
+    layout: &Layout,
+    fw: i64,
+) -> Result<Vec<(i64, i64)>> {
+    let mut writes: Vec<(i64, i64)> = Vec::new(); // (flat, t)
+    for &i in in_ports {
+        for (t, coords) in ub.inputs[i].events() {
+            writes.push((layout.flat(&coords), t));
+        }
+    }
+    writes.sort();
+    // Writes must be contiguous *within each generation* (row-pitch
+    // padding leaves unwritten slots only at generation tails, which
+    // are never read). Check: consecutive flats either increment by 1
+    // or jump to the start of a later generation.
+    for w in writes.windows(2) {
+        let (a, b) = (w[0].0, w[1].0);
+        let ok = b == a + 1 || (b > a && b % fw == 0);
+        anyhow::ensure!(
+            ok,
+            "buffer {}: write stream not generation-contiguous ({a} -> {b})",
+            ub.name
+        );
+    }
+    // Group by generation = floor(flat / fw) and flush when the last
+    // slot *would* land if the generation were dense: tail-missing
+    // generations (row-pitch padding, final partials) flush padded by
+    // their missing-slot count, keeping the SG affine — but never at or
+    // after the next generation's first write, which starts overwriting
+    // the shared aggregator slots (the pitch wrap aliases slot indices).
+    struct Gen {
+        gen: i64,
+        last_flat: i64,
+        first_t: i64,
+        last_t: i64,
+    }
+    let mut gens: Vec<Gen> = Vec::new();
+    for &(flat, t) in &writes {
+        let g = flat.div_euclid(fw);
+        match gens.last_mut() {
+            Some(cur) if cur.gen == g => {
+                cur.last_t = cur.last_t.max(t);
+                cur.last_flat = flat;
+            }
+            _ => gens.push(Gen { gen: g, last_flat: flat, first_t: t, last_t: t }),
+        }
+    }
+    let lanes = in_ports.len().max(1) as i64;
+    let mut out: Vec<(i64, i64)> = Vec::new();
+    for (k, gi) in gens.iter().enumerate() {
+        let missing_tail = (gi.gen + 1) * fw - 1 - gi.last_flat;
+        // Pad in *cycles*: `lanes` slots land per cycle.
+        let mut t = gi.last_t + (missing_tail + lanes - 1) / lanes;
+        if let Some(next) = gens.get(k + 1) {
+            t = t.min(next.first_t - 1).max(gi.last_t);
+        }
+        out.push((t, gi.gen));
+    }
+    // Flush times must follow generation order for the SG recurrence.
+    for w in out.windows(2) {
+        anyhow::ensure!(
+            w[0].0 < w[1].0,
+            "buffer {}: flush times not increasing",
+            ub.name
+        );
+    }
+    Ok(out)
+}
+
+/// Vector-use runs of one output port: `(first_use, gen)` per maximal
+/// run of consecutive uses of the same generation.
+fn use_runs(port: &Port, layout: &Layout, fw: i64) -> Vec<(i64, i64)> {
+    let mut out: Vec<(i64, i64)> = Vec::new();
+    for (t, coords) in port.events() {
+        let gen = layout.flat(&coords).div_euclid(fw);
+        match out.last() {
+            Some(&(_, g)) if g == gen => {}
+            _ => out.push((t, gen)),
+        }
+    }
+    out
+}
+
+/// Read plan: issue each vector read at `first_use - 2 - extra_lead`.
+fn read_events_from(runs: &[(i64, i64)], extra_lead: i64) -> Vec<(i64, i64)> {
+    runs.iter().map(|&(t, g)| (t - 2 - extra_lead, g)).collect()
+}
+
+/// Regular-cadence fallbacks for ports whose vector uses straddle
+/// generation boundaries (offset accesses): issue reads on an even II,
+/// starting as late as every per-run deadline allows. Several candidate
+/// IIs are produced (observed run gaps plus the fetch width); the
+/// caller's event-level verifier decides which (if any) is hazard-free.
+/// Returns nothing when the generation sequence itself is not affine in
+/// the run index.
+fn regular_read_events(
+    runs: &[(i64, i64)],
+    fw: i64,
+    extra_lead: i64,
+) -> Vec<Vec<(i64, i64)>> {
+    let n = runs.len() as i64;
+    if n == 0 {
+        return vec![];
+    }
+    if n == 1 {
+        return vec![vec![(runs[0].0 - 2 - extra_lead, runs[0].1)]];
+    }
+    let gstep = runs[1].1 - runs[0].1;
+    if runs
+        .iter()
+        .enumerate()
+        .any(|(i, &(_, g))| g != runs[0].1 + gstep * i as i64)
+    {
+        return vec![];
+    }
+    // Candidate IIs: distinct consecutive run gaps, the fetch width,
+    // and the tightest deadline slope.
+    let mut iis: Vec<i64> = runs.windows(2).map(|w| w[1].0 - w[0].0).collect();
+    iis.push(fw);
+    iis.push(
+        (1..n)
+            .map(|i| (runs[i as usize].0 - runs[0].0) / i)
+            .min()
+            .unwrap()
+            .max(1),
+    );
+    iis.sort();
+    iis.dedup();
+    iis.retain(|&ii| ii >= 1);
+    iis.iter()
+        .map(|&ii| {
+            let t0 = (0..n)
+                .map(|i| runs[i as usize].0 - 2 - ii * i)
+                .min()
+                .unwrap()
+                - extra_lead;
+            (0..n)
+                .map(|i| (t0 + ii * i, runs[0].1 + gstep * i))
+                .collect()
+        })
+        .collect()
+}
+
+/// Exact event-level verification of a bank: every serialized output
+/// word must come from a vector that was flushed, read after its flush,
+/// landed before first use, not overwritten in SRAM before its read,
+/// and not clobbered in the TB before its last use.
+fn verify_bank(
+    ub: &UnifiedBuffer,
+    out_ports: &[usize],
+    layout: &Layout,
+    fw: i64,
+    flushes: &[(i64, i64)],
+    reads: &[Vec<(i64, i64)>],
+    port_uses: &[Vec<(i64, i64)>], // per out port: (t_use, gen), precomputed
+) -> Result<()> {
+    let vecs = layout.capacity / fw;
+    let flush_t: HashMap<i64, i64> = flushes.iter().map(|&(t, g)| (g, t)).collect();
+    // Next flush to the same vector address (staleness horizon).
+    let mut next_alias: HashMap<i64, i64> = HashMap::new();
+    for &(t, g) in flushes.iter().rev() {
+        let v = g.rem_euclid(vecs);
+        if let Some(&nt) = next_alias.get(&v) {
+            anyhow::ensure!(t < nt, "flush order violation");
+        }
+        next_alias.insert(v, t);
+    }
+    // Rebuild per-vaddr alias chains for staleness checks.
+    let mut alias_chains: HashMap<i64, Vec<(i64, i64)>> = HashMap::new(); // vaddr -> [(flush_t, gen)]
+    for &(t, g) in flushes {
+        alias_chains.entry(g.rem_euclid(vecs)).or_default().push((t, g));
+    }
+
+    for (k, &o) in out_ports.iter().enumerate() {
+        let port = &ub.outputs[o];
+        let rd = &reads[k];
+        for w in rd.windows(2) {
+            anyhow::ensure!(w[0].0 < w[1].0, "port {}: read times not increasing", port.name);
+        }
+        for &(t_use, gen) in &port_uses[k] {
+            // The read whose data occupies this value's ping-pong half
+            // during t_use's output phase: loads land *after* the output
+            // phase of issue+1, so data issued at ti is visible from
+            // ti+2 (and the previous occupant of the half through
+            // ti+1). Halves alternate with generation parity (even
+            // vector count).
+            let occ = rd
+                .iter()
+                .rev()
+                .find(|&&(ti, g)| ti + 2 <= t_use && (g - gen).rem_euclid(2) == 0)
+                .with_context(|| format!("port {}: no read lands by {t_use}", port.name))?;
+            anyhow::ensure!(
+                occ.1 == gen,
+                "port {}: TB half holds gen {} at cycle {t_use}, value needs gen {gen}",
+                port.name,
+                occ.1
+            );
+            let tf = *flush_t
+                .get(&gen)
+                .with_context(|| format!("gen {gen} never flushed"))?;
+            anyhow::ensure!(
+                occ.0 > tf,
+                "port {}: read of gen {gen} at {} before flush at {tf}",
+                port.name,
+                occ.0
+            );
+            // The vector must not be overwritten in SRAM before the read.
+            let chain = &alias_chains[&gen.rem_euclid(vecs)];
+            if let Some(&(nt, _)) = chain.iter().find(|&&(t, g)| g > gen && t <= occ.0) {
+                bail!(
+                    "port {}: gen {gen} overwritten at {nt} before read at {}",
+                    port.name,
+                    occ.0
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// SRAM single-port conflict scan across flush + read controllers.
+fn conflicts(flushes: &[(i64, i64)], reads: &[Vec<(i64, i64)>]) -> HashSet<i64> {
+    let mut used: HashSet<i64> = HashSet::new();
+    let mut bad = HashSet::new();
+    for &(t, _) in flushes {
+        if !used.insert(t) {
+            bad.insert(t);
+        }
+    }
+    for rd in reads {
+        for &(t, _) in rd {
+            if !used.insert(t) {
+                bad.insert(t);
+            }
+        }
+    }
+    bad
+}
+
+/// Build the memory-tile configuration for one bank.
+pub fn build_bank(
+    ub: &UnifiedBuffer,
+    layout: &Layout,
+    in_ports: &[usize],
+    out_ports: &[usize],
+    fw: usize,
+) -> Result<MemTileConfig> {
+    let fwi = fw as i64;
+    anyhow::ensure!(layout.capacity % fwi == 0, "capacity not a vector multiple");
+    let vecs = layout.capacity / fwi;
+
+    // External serial controllers: UB schedules + layout addresses with
+    // a fetch-width modulus (slot) — affine by construction.
+    let mut serial_in = Vec::new();
+    for &i in in_ports {
+        let p = &ub.inputs[i];
+        let flat = layout.linear.compose(&p.access.outputs);
+        serial_in.push(
+            PortCtlConfig::new(
+                p.domain.dims.iter().map(|d| d.extent).collect(),
+                AffineConfig::from_affine(&zero_base(&flat, &p.domain)),
+                AffineConfig::from_affine(&zero_base(&p.schedule.expr, &p.domain)),
+            )
+            .with_modulus(fwi),
+        );
+    }
+    // TB slots span two ping-pong vectors: slot = flat mod 2*fw, with
+    // the landing half chosen by vector-address parity (requires an
+    // even vector count, i.e. capacity a multiple of 2*fw).
+    anyhow::ensure!(vecs % 2 == 0, "capacity {} gives odd vector count", layout.capacity);
+    let mut tb_out = Vec::new();
+    for &o in out_ports {
+        let p = &ub.outputs[o];
+        let flat = layout.linear.compose(&p.access.outputs);
+        tb_out.push(
+            PortCtlConfig::new(
+                p.domain.dims.iter().map(|d| d.extent).collect(),
+                AffineConfig::from_affine(&zero_base(&flat, &p.domain)),
+                AffineConfig::from_affine(&zero_base(&p.schedule.expr, &p.domain)),
+            )
+            .with_modulus(2 * fwi),
+        );
+    }
+
+    // AGG flush controller (one shared AGG across write lanes).
+    let fl_events = flush_events(ub, in_ports, layout, fwi)?;
+    let hint: Vec<i64> = in_ports
+        .first()
+        .map(|&i| ub.inputs[i].domain.dims.iter().map(|d| d.extent).collect())
+        .unwrap_or_default();
+
+    // Read controllers: per-port candidate plans (run-based with
+    // increasing leads, then regular-cadence fallbacks), searched
+    // greedily for a combination that is conflict-free, hazard-free,
+    // and affine-fittable.
+    let out_hints: Vec<Vec<i64>> = out_ports
+        .iter()
+        .map(|&o| ub.outputs[o].domain.dims.iter().map(|d| d.extent).collect())
+        .collect();
+    // Precompute each port's (use time, generation) stream once — the
+    // verifier runs inside the candidate product search (§Perf).
+    let port_uses: Vec<Vec<(i64, i64)>> = out_ports
+        .iter()
+        .map(|&o| {
+            ub.outputs[o]
+                .events()
+                .into_iter()
+                .map(|(t, coords)| (t, layout.flat(&coords).div_euclid(fwi)))
+                .collect()
+        })
+        .collect();
+    let candidates: Vec<Vec<Vec<(i64, i64)>>> = out_ports
+        .iter()
+        .enumerate()
+        .map(|(k, &o)| {
+            // The vector-use runs are computed once; every lead variant
+            // is a constant time shift, and affinity is shift-invariant,
+            // so each candidate family is fitted exactly once (§Perf).
+            let runs = use_runs(&ub.outputs[o], layout, fwi);
+            let mut c = Vec::new();
+            let base = read_events_from(&runs, 0);
+            // Only keep plans the AG/SG hardware can hold.
+            if fit_events(&base, &out_hints[k]).is_some() {
+                c.push(base);
+                for lead in 1..2 * fwi {
+                    c.push(read_events_from(&runs, lead));
+                }
+            }
+            for ev0 in regular_read_events(&runs, fwi, 0) {
+                if fit_events(&ev0, &out_hints[k]).is_some() {
+                    for lead in 1..2 * fwi {
+                        c.push(ev0.iter().map(|&(t, g)| (t - lead, g)).collect());
+                    }
+                    c.push(ev0);
+                }
+            }
+            c
+        })
+        .collect();
+    for (k, c) in candidates.iter().enumerate() {
+        anyhow::ensure!(
+            !c.is_empty(),
+            "buffer {}: no affine read schedule for port {}",
+            ub.name,
+            out_ports[k]
+        );
+    }
+    // Exhaustive (bounded) product search over per-port candidates: the
+    // space is tiny (≤ 3 ports × ~16 candidates) and the event-level
+    // verifier is the only trustworthy judge.
+    let mut pick = vec![0usize; out_ports.len()];
+    let mut found: Option<Vec<Vec<(i64, i64)>>> = None;
+    let mut budget = 50_000usize;
+    'product: loop {
+        let reads: Vec<Vec<(i64, i64)>> = pick
+            .iter()
+            .enumerate()
+            .map(|(k, &c)| candidates[k][c].clone())
+            .collect();
+        if conflicts(&fl_events, &reads).is_empty()
+            && verify_bank(ub, out_ports, layout, fwi, &fl_events, &reads, &port_uses).is_ok()
+        {
+            found = Some(reads);
+            break 'product;
+        }
+        budget -= 1;
+        if budget == 0 {
+            break 'product;
+        }
+        // Odometer increment.
+        let mut k = 0;
+        loop {
+            if k == pick.len() {
+                break 'product;
+            }
+            pick[k] += 1;
+            if pick[k] < candidates[k].len() {
+                break;
+            }
+            pick[k] = 0;
+            k += 1;
+        }
+    }
+    if found.is_none() && std::env::var("PUSHMEM_DEBUG_MAP").is_ok() {
+        eprintln!(
+            "[map] {}: flushes {:?}...",
+            ub.name,
+            &fl_events[..fl_events.len().min(6)]
+        );
+        for (k, c) in candidates.iter().enumerate() {
+            eprintln!("[map] port {} has {} candidates", out_ports[k], c.len());
+            if let Some(first) = c.first() {
+                eprintln!("[map]   first: {:?}...", &first[..first.len().min(6)]);
+                let bad = conflicts(&fl_events, &[first.clone()]);
+                eprintln!(
+                    "[map]   conflicts {:?} verify {:?}",
+                    bad.iter().take(4).collect::<Vec<_>>(),
+                    verify_bank(ub, &out_ports[k..=k], layout, fwi, &fl_events, &[first.clone()], &port_uses[k..=k])
+                        .err()
+                        .map(|e| e.to_string())
+                );
+            }
+        }
+    }
+    let reads = found.with_context(|| {
+        format!("buffer {}: cannot find conflict-free vectorized schedule", ub.name)
+    })?;
+
+    // Fit the internal controllers to affine hardware.
+    let (fsh, ft, fa) = fit_events(&fl_events, &hint)
+        .with_context(|| format!("buffer {}: flush schedule not affine", ub.name))?;
+    let agg_flush = vec![PortCtlConfig::new(
+        fsh,
+        AffineConfig::from_affine(&fa),
+        AffineConfig::from_affine(&ft),
+    )
+    .with_modulus(vecs)];
+
+    let mut sram_read = Vec::new();
+    for (k, rd) in reads.iter().enumerate() {
+        let (rsh, rt, ra) = fit_events(rd, &out_hints[k]).with_context(|| {
+            format!(
+                "buffer {}: read schedule for port {} not affine",
+                ub.name, out_ports[k]
+            )
+        })?;
+        sram_read.push(
+            PortCtlConfig::new(
+                rsh,
+                AffineConfig::from_affine(&ra),
+                AffineConfig::from_affine(&rt),
+            )
+            .with_modulus(vecs),
+        );
+    }
+
+    Ok(MemTileConfig {
+        fetch_width: fw,
+        capacity: layout.capacity as usize,
+        serial_in_agg: vec![0; serial_in.len()],
+        serial_in,
+        agg_flush,
+        sram_read,
+        tb_out,
+    })
+}
+
+/// Build a dual-port fallback bank: word-granular, always affine
+/// (address = linear layout mod capacity, schedule = the UB port
+/// schedule itself), for ports the wide-fetch path cannot serve.
+/// Verifies write/read port conflicts and read-after-write timing.
+pub fn build_dp_bank(
+    ub: &UnifiedBuffer,
+    layout: &Layout,
+    in_ports: &[usize],
+    out_ports: &[usize],
+) -> Result<crate::hw::DpTileConfig> {
+    anyhow::ensure!(out_ports.len() <= 1, "dual-port bank has one read port");
+    let cap = layout.capacity;
+
+    // Event-level verification.
+    let mut wt: HashMap<i64, Vec<(i64, i64)>> = HashMap::new(); // addr -> [(t, flat)]
+    let mut wcycles: HashSet<i64> = HashSet::new();
+    for &i in in_ports {
+        for (t, coords) in ub.inputs[i].events() {
+            anyhow::ensure!(
+                wcycles.insert(t),
+                "buffer {}: two DP writes in cycle {t}",
+                ub.name
+            );
+            let flat = layout.flat(&coords);
+            wt.entry(flat.rem_euclid(cap)).or_default().push((t, flat));
+        }
+    }
+    for v in wt.values_mut() {
+        v.sort();
+    }
+    for &o in out_ports {
+        let mut rcycles: HashSet<i64> = HashSet::new();
+        for (t, coords) in ub.outputs[o].events() {
+            anyhow::ensure!(
+                rcycles.insert(t - 1),
+                "buffer {}: two DP reads in cycle {}",
+                ub.name,
+                t - 1
+            );
+            let flat = layout.flat(&coords);
+            let chain = wt
+                .get(&flat.rem_euclid(cap))
+                .with_context(|| format!("buffer {}: read of unwritten {flat}", ub.name))?;
+            // Write must commit (end of its cycle) before the read
+            // issues at t-1: w <= t-2; and no aliasing overwrite before.
+            let w = chain
+                .iter()
+                .find(|&&(_, f)| f == flat)
+                .with_context(|| format!("buffer {}: flat {flat} never written", ub.name))?;
+            anyhow::ensure!(
+                w.0 <= t - 2,
+                "buffer {}: DP read at {t} too soon after write at {}",
+                ub.name,
+                w.0
+            );
+            if let Some(ov) = chain.iter().find(|&&(tw, f)| f > flat && tw <= t - 1) {
+                bail!(
+                    "buffer {}: flat {flat} overwritten at {} before read at {t}",
+                    ub.name,
+                    ov.0
+                );
+            }
+        }
+    }
+
+    let mk = |p: &Port| -> PortCtlConfig {
+        let flat = layout.linear.compose(&p.access.outputs);
+        PortCtlConfig::new(
+            p.domain.dims.iter().map(|d| d.extent).collect(),
+            AffineConfig::from_affine(&zero_base(&flat, &p.domain)),
+            AffineConfig::from_affine(&zero_base(&p.schedule.expr, &p.domain)),
+        )
+        .with_modulus(cap)
+    };
+    Ok(crate::hw::DpTileConfig {
+        capacity: cap as usize,
+        writes: in_ports.iter().map(|&i| mk(&ub.inputs[i])).collect(),
+        reads: out_ports.iter().map(|&o| mk(&ub.outputs[o])).collect(),
+    })
+}
+
+/// Rebase an affine expression onto the hardware ID's zero-based
+/// counters: `new(c) = a(c + mins)`.
+fn zero_base(a: &Affine, domain: &BoxSet) -> Affine {
+    let mins: Vec<i64> = domain.dims.iter().map(|d| d.min).collect();
+    let delta: i64 = a.coeffs.iter().zip(&mins).map(|(c, m)| c * m).sum();
+    a.shift(delta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::MemTile;
+    use crate::mapping::linearize;
+    use crate::poly::{AffineMap, CycleSchedule};
+    use crate::ub::PortDir;
+
+    /// 1-D delay buffer: 32 words written densely at t = x, read
+    /// identically at t = x + 12.
+    fn delay_ub(delay: i64) -> UnifiedBuffer {
+        let mut ub = UnifiedBuffer::new("d", BoxSet::from_extents(&[32]));
+        ub.add_input(Port::new(
+            "w",
+            PortDir::In,
+            BoxSet::from_extents(&[32]),
+            AffineMap::identity(1),
+            CycleSchedule::row_major(&[32], 1, 0),
+        ));
+        ub.add_output(Port::new(
+            "r",
+            PortDir::Out,
+            BoxSet::from_extents(&[32]),
+            AffineMap::identity(1),
+            CycleSchedule::row_major(&[32], 1, delay),
+        ));
+        ub
+    }
+
+    /// Run a configured tile against the UB's port events and check the
+    /// output stream bit-exactly.
+    fn run_and_check(ub: &UnifiedBuffer, cfg: MemTileConfig, horizon: i64) {
+        let mut tile = MemTile::new(cfg);
+        // Input data: value = 1000 + flat index, delivered per schedule.
+        let mut in_events: HashMap<i64, Vec<Option<i64>>> = HashMap::new();
+        let layout = linearize::choose_capacity(ub, 4).unwrap();
+        for (i, p) in ub.inputs.iter().enumerate() {
+            for (t, coords) in p.events() {
+                in_events.entry(t).or_insert_with(|| vec![None; ub.inputs.len()])[i] =
+                    Some(1000 + layout.flat(&coords));
+            }
+        }
+        let mut expected: HashMap<(i64, usize), i64> = HashMap::new();
+        for (o, p) in ub.outputs.iter().enumerate() {
+            for (t, coords) in p.events() {
+                expected.insert((t, o), 1000 + layout.flat(&coords));
+            }
+        }
+        let none = vec![None; ub.inputs.len()];
+        let mut seen = 0usize;
+        for cycle in 0..horizon {
+            let ins = in_events.get(&cycle).unwrap_or(&none);
+            let outs = tile.tick(cycle, ins).unwrap();
+            for (o, w) in outs.iter().enumerate() {
+                if let Some(v) = w {
+                    let exp = expected
+                        .get(&(cycle, o))
+                        .unwrap_or_else(|| panic!("unexpected output at {cycle} port {o}"));
+                    assert_eq!(v, exp, "wrong word at cycle {cycle} port {o}");
+                    seen += 1;
+                }
+            }
+        }
+        assert_eq!(seen, expected.len(), "missing output words");
+    }
+
+    #[test]
+    fn delay_buffer_vectorizes_and_runs() {
+        let ub = delay_ub(12);
+        let layout = linearize::choose_capacity(&ub, 8).unwrap();
+        let cfg = build_bank(&ub, &layout, &[0], &[0], 4).unwrap();
+        assert_eq!(cfg.serial_in.len(), 1);
+        assert_eq!(cfg.agg_flush.len(), 1);
+        run_and_check(&ub, cfg, 60);
+    }
+
+    #[test]
+    fn line_buffer_with_row_gaps() {
+        // 8x8 writes on 9-stride rows (virtual row idling), read one row
+        // later: flush/read schedules must fit as (row, group) domains.
+        let mut ub = UnifiedBuffer::new("lb", BoxSet::from_extents(&[8, 8]));
+        ub.add_input(Port::new(
+            "w",
+            PortDir::In,
+            BoxSet::from_extents(&[8, 8]),
+            AffineMap::identity(2),
+            CycleSchedule::new(Affine::new(vec![9, 1], 0)),
+        ));
+        ub.add_output(Port::new(
+            "r",
+            PortDir::Out,
+            BoxSet::from_extents(&[8, 8]),
+            AffineMap::identity(2),
+            CycleSchedule::new(Affine::new(vec![9, 1], 20)),
+        ));
+        let layout = linearize::choose_capacity(&ub, 8).unwrap();
+        let cfg = build_bank(&ub, &layout, &[0], &[0], 4).unwrap();
+        run_and_check(&ub, cfg, 120);
+    }
+
+    #[test]
+    fn offset_read_port_spans_generations() {
+        // Read port accesses x+1: its vector uses straddle generation
+        // boundaries; the regular-read fallback must still verify.
+        let mut ub = UnifiedBuffer::new("off", BoxSet::from_extents(&[33]));
+        ub.add_input(Port::new(
+            "w",
+            PortDir::In,
+            BoxSet::from_extents(&[33]),
+            AffineMap::identity(1),
+            CycleSchedule::row_major(&[33], 1, 0),
+        ));
+        ub.add_output(Port::new(
+            "r",
+            PortDir::Out,
+            BoxSet::from_extents(&[32]),
+            AffineMap::new(1, vec![Affine::new(vec![1], 1)]),
+            CycleSchedule::row_major(&[32], 1, 12),
+        ));
+        let layout = linearize::choose_capacity(&ub, 8).unwrap();
+        let cfg = build_bank(&ub, &layout, &[0], &[0], 4);
+        match cfg {
+            Ok(cfg) => run_and_check(&ub, cfg, 80),
+            Err(e) => panic!("offset port failed to map: {e:#}"),
+        }
+    }
+
+    #[test]
+    fn circular_capacity_buffer_runs() {
+        // Delay 12 over 32 words: capacity 16 (not 32) — circular reuse.
+        let ub = delay_ub(12);
+        let layout = linearize::choose_capacity(&ub, 8).unwrap();
+        assert!(layout.capacity < 32);
+        let cfg = build_bank(&ub, &layout, &[0], &[0], 4).unwrap();
+        assert_eq!(cfg.capacity as i64, layout.capacity);
+        run_and_check(&ub, cfg, 60);
+    }
+}
+

@@ -1,0 +1,277 @@
+//! Affine expressions over named loop iterators.
+
+use std::fmt;
+
+/// An affine expression `coeffs[0]*i0 + ... + coeffs[n-1]*i(n-1) + offset`
+/// over `n` integer input dimensions.
+///
+/// This is the only expression form the paper's unified buffers allow for
+/// access maps and schedules ("we limit address maps and schedules to
+/// affine functions in keeping with the polyhedral model", §IV-A).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Affine {
+    pub coeffs: Vec<i64>,
+    pub offset: i64,
+}
+
+impl Affine {
+    /// The zero expression over `rank` dims.
+    pub fn zero(rank: usize) -> Self {
+        Affine { coeffs: vec![0; rank], offset: 0 }
+    }
+
+    /// A constant expression over `rank` dims.
+    pub fn constant(rank: usize, c: i64) -> Self {
+        Affine { coeffs: vec![0; rank], offset: c }
+    }
+
+    /// The expression selecting input dimension `dim`.
+    pub fn var(rank: usize, dim: usize) -> Self {
+        assert!(dim < rank, "var {dim} out of rank {rank}");
+        let mut coeffs = vec![0; rank];
+        coeffs[dim] = 1;
+        Affine { coeffs, offset: 0 }
+    }
+
+    /// Build from explicit coefficients.
+    pub fn new(coeffs: Vec<i64>, offset: i64) -> Self {
+        Affine { coeffs, offset }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.coeffs.len()
+    }
+
+    /// Evaluate at an integer point.
+    pub fn eval(&self, point: &[i64]) -> i64 {
+        assert_eq!(point.len(), self.rank(), "point rank mismatch");
+        self.coeffs.iter().zip(point).map(|(c, p)| c * p).sum::<i64>() + self.offset
+    }
+
+    pub fn add(&self, other: &Affine) -> Affine {
+        assert_eq!(self.rank(), other.rank());
+        Affine {
+            coeffs: self.coeffs.iter().zip(&other.coeffs).map(|(a, b)| a + b).collect(),
+            offset: self.offset + other.offset,
+        }
+    }
+
+    pub fn sub(&self, other: &Affine) -> Affine {
+        assert_eq!(self.rank(), other.rank());
+        Affine {
+            coeffs: self.coeffs.iter().zip(&other.coeffs).map(|(a, b)| a - b).collect(),
+            offset: self.offset - other.offset,
+        }
+    }
+
+    pub fn scale(&self, s: i64) -> Affine {
+        Affine {
+            coeffs: self.coeffs.iter().map(|c| c * s).collect(),
+            offset: self.offset * s,
+        }
+    }
+
+    /// Add a constant to the offset.
+    pub fn shift(&self, delta: i64) -> Affine {
+        Affine { coeffs: self.coeffs.clone(), offset: self.offset + delta }
+    }
+
+    /// Substitute each input dimension `k` with the affine expression
+    /// `inner[k]` (all over a common inner rank), yielding `self ∘ inner`.
+    pub fn compose(&self, inner: &[Affine]) -> Affine {
+        assert_eq!(inner.len(), self.rank(), "compose rank mismatch");
+        let inner_rank = inner.first().map_or(0, |a| a.rank());
+        let mut out = Affine::constant(inner_rank, self.offset);
+        for (c, expr) in self.coeffs.iter().zip(inner) {
+            assert_eq!(expr.rank(), inner_rank);
+            out = out.add(&expr.scale(*c));
+        }
+        out
+    }
+
+    /// True if no input dimension contributes.
+    pub fn is_constant(&self) -> bool {
+        self.coeffs.iter().all(|&c| c == 0)
+    }
+
+    /// Interval of values over a box `[lo_k, hi_k]` per dim (inclusive).
+    pub fn bounds(&self, dims: &[(i64, i64)]) -> (i64, i64) {
+        assert_eq!(dims.len(), self.rank());
+        let mut lo = self.offset;
+        let mut hi = self.offset;
+        for (&c, &(dlo, dhi)) in self.coeffs.iter().zip(dims) {
+            assert!(dlo <= dhi, "empty dim in bounds");
+            if c >= 0 {
+                lo += c * dlo;
+                hi += c * dhi;
+            } else {
+                lo += c * dhi;
+                hi += c * dlo;
+            }
+        }
+        (lo, hi)
+    }
+
+    /// Bind the trailing `values.len()` input dims to constants,
+    /// yielding an expression over the leading dims (used to turn a
+    /// full-domain schedule into a per-pure-point write schedule by
+    /// fixing the reduction iterators at their final values).
+    pub fn bind_tail(&self, values: &[i64]) -> Affine {
+        assert!(values.len() <= self.rank());
+        let keep = self.rank() - values.len();
+        let mut offset = self.offset;
+        for (c, v) in self.coeffs[keep..].iter().zip(values) {
+            offset += c * v;
+        }
+        Affine { coeffs: self.coeffs[..keep].to_vec(), offset }
+    }
+
+    /// Insert `count` new zero-coefficient dims at position `at`
+    /// (used when strip-mining adds an iteration dimension).
+    pub fn insert_dims(&self, at: usize, count: usize) -> Affine {
+        assert!(at <= self.rank());
+        let mut coeffs = self.coeffs.clone();
+        for _ in 0..count {
+            coeffs.insert(at, 0);
+        }
+        Affine { coeffs, offset: self.offset }
+    }
+}
+
+/// Fit an affine function to `f` over `domain`, exactly: coefficients
+/// from unit steps at the domain origin, then verified at every point.
+/// Returns `None` if `f` is not affine on the domain (or `f` returns
+/// `None` anywhere). Used by the mapper to turn exact event lists into
+/// AG/SG hardware configurations.
+pub fn fit_affine(
+    domain: &crate::poly::BoxSet,
+    f: &mut dyn FnMut(&[i64]) -> Option<i64>,
+) -> Option<Affine> {
+    let rank = domain.rank();
+    if domain.is_empty() {
+        return Some(Affine::zero(rank));
+    }
+    let mins: Vec<i64> = domain.dims.iter().map(|d| d.min).collect();
+    let base = f(&mins)?;
+    let mut coeffs = vec![0i64; rank];
+    for k in 0..rank {
+        if domain.dims[k].extent > 1 {
+            let mut p = mins.clone();
+            p[k] += 1;
+            coeffs[k] = f(&p)? - base;
+        }
+    }
+    let cand = Affine::new(coeffs, 0);
+    let offset = base - cand.eval(&mins);
+    let cand = cand.shift(offset);
+    for p in domain.points() {
+        if f(&p)? != cand.eval(&p) {
+            return None;
+        }
+    }
+    Some(cand)
+}
+
+impl fmt::Display for Affine {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut first = true;
+        for (k, &c) in self.coeffs.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if !first {
+                write!(f, " {} ", if c < 0 { "-" } else { "+" })?;
+            } else if c < 0 {
+                write!(f, "-")?;
+            }
+            let a = c.abs();
+            if a == 1 {
+                write!(f, "i{k}")?;
+            } else {
+                write!(f, "{a}*i{k}")?;
+            }
+            first = false;
+        }
+        if first {
+            write!(f, "{}", self.offset)?;
+        } else if self.offset != 0 {
+            write!(
+                f,
+                " {} {}",
+                if self.offset < 0 { "-" } else { "+" },
+                self.offset.abs()
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_basic() {
+        // 64y + x over (y, x) — the paper's Eq. 1 schedule (outermost first).
+        let sched = Affine::new(vec![64, 1], 0);
+        assert_eq!(sched.eval(&[0, 0]), 0);
+        assert_eq!(sched.eval(&[0, 1]), 1);
+        assert_eq!(sched.eval(&[1, 0]), 64);
+        assert_eq!(sched.eval(&[2, 5]), 133);
+    }
+
+    #[test]
+    fn arith_ops() {
+        let a = Affine::new(vec![2, 3], 1);
+        let b = Affine::new(vec![1, -1], 4);
+        assert_eq!(a.add(&b), Affine::new(vec![3, 2], 5));
+        assert_eq!(a.sub(&b), Affine::new(vec![1, 4], -3));
+        assert_eq!(a.scale(-2), Affine::new(vec![-4, -6], -2));
+        assert_eq!(a.shift(7), Affine::new(vec![2, 3], 8));
+    }
+
+    #[test]
+    fn compose_substitutes() {
+        // f(u, v) = 3u + 2v + 1; u = x + 1, v = 2x + y.
+        let f = Affine::new(vec![3, 2], 1);
+        let u = Affine::new(vec![1, 0], 1);
+        let v = Affine::new(vec![2, 1], 0);
+        let g = f.compose(&[u, v]);
+        // g(x, y) = 3(x+1) + 2(2x+y) + 1 = 7x + 2y + 4
+        assert_eq!(g, Affine::new(vec![7, 2], 4));
+        for x in -3..3 {
+            for y in -3..3 {
+                assert_eq!(g.eval(&[x, y]), f.eval(&[x + 1, 2 * x + y]));
+            }
+        }
+    }
+
+    #[test]
+    fn bounds_interval() {
+        let a = Affine::new(vec![2, -3], 5);
+        let (lo, hi) = a.bounds(&[(0, 4), (1, 3)]);
+        assert_eq!(lo, 2 * 0 - 3 * 3 + 5);
+        assert_eq!(hi, 2 * 4 - 3 * 1 + 5);
+    }
+
+    #[test]
+    fn constant_detection() {
+        assert!(Affine::constant(3, 9).is_constant());
+        assert!(!Affine::var(3, 1).is_constant());
+    }
+
+    #[test]
+    fn insert_dims_keeps_semantics() {
+        let a = Affine::new(vec![4, 7], 2);
+        let b = a.insert_dims(1, 1);
+        assert_eq!(b.rank(), 3);
+        assert_eq!(b.eval(&[3, 99, 5]), a.eval(&[3, 5]));
+    }
+
+    #[test]
+    fn display_pretty() {
+        assert_eq!(Affine::new(vec![64, 1], 0).to_string(), "64*i0 + i1");
+        assert_eq!(Affine::new(vec![0, 0], 7).to_string(), "7");
+        assert_eq!(Affine::new(vec![-1, 2], -3).to_string(), "-i0 + 2*i1 - 3");
+    }
+}

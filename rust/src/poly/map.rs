@@ -1,0 +1,211 @@
+//! Multi-output affine maps (access maps).
+
+use std::fmt;
+
+use super::{Affine, BoxSet};
+
+/// An affine map `Z^in_rank -> Z^out_rank`, one [`Affine`] per output.
+///
+/// Unified-buffer access maps — `(x, y) -> brighten(x+1, y)` and friends —
+/// are exactly this shape (§III).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct AffineMap {
+    pub in_rank: usize,
+    pub outputs: Vec<Affine>,
+}
+
+impl AffineMap {
+    pub fn new(in_rank: usize, outputs: Vec<Affine>) -> Self {
+        for o in &outputs {
+            assert_eq!(o.rank(), in_rank, "output rank mismatch");
+        }
+        AffineMap { in_rank, outputs }
+    }
+
+    /// The identity map on `rank` dims.
+    pub fn identity(rank: usize) -> Self {
+        AffineMap {
+            in_rank: rank,
+            outputs: (0..rank).map(|k| Affine::var(rank, k)).collect(),
+        }
+    }
+
+    /// A map whose every output is constant (rank-0 style access).
+    pub fn constant(in_rank: usize, values: &[i64]) -> Self {
+        AffineMap {
+            in_rank,
+            outputs: values.iter().map(|&v| Affine::constant(in_rank, v)).collect(),
+        }
+    }
+
+    pub fn out_rank(&self) -> usize {
+        self.outputs.len()
+    }
+
+    pub fn apply(&self, point: &[i64]) -> Vec<i64> {
+        self.outputs.iter().map(|o| o.eval(point)).collect()
+    }
+
+    /// `self ∘ inner`: first apply `inner`, then `self`.
+    pub fn compose(&self, inner: &AffineMap) -> AffineMap {
+        assert_eq!(self.in_rank, inner.out_rank(), "compose rank mismatch");
+        AffineMap {
+            in_rank: inner.in_rank,
+            outputs: self.outputs.iter().map(|o| o.compose(&inner.outputs)).collect(),
+        }
+    }
+
+    /// If `self - other` is a constant vector, return it.
+    ///
+    /// This is the shift-register legality test (§V-C): output port B can
+    /// be a shift register fed from port A when their access maps differ
+    /// by a constant offset on a common iteration space.
+    pub fn constant_difference(&self, other: &AffineMap) -> Option<Vec<i64>> {
+        if self.in_rank != other.in_rank || self.out_rank() != other.out_rank() {
+            return None;
+        }
+        let mut diff = Vec::with_capacity(self.out_rank());
+        for (a, b) in self.outputs.iter().zip(&other.outputs) {
+            let d = a.sub(b);
+            if !d.is_constant() {
+                return None;
+            }
+            diff.push(d.offset);
+        }
+        Some(diff)
+    }
+
+    /// Inclusive `(min, max)` bounds of each output over `domain`.
+    pub fn range_bounds(&self, domain: &BoxSet) -> Vec<(i64, i64)> {
+        assert_eq!(domain.rank(), self.in_rank);
+        let b = domain.bounds();
+        self.outputs.iter().map(|o| o.bounds(&b)).collect()
+    }
+
+    /// Exact injectivity check on a (small) domain by enumeration.
+    pub fn is_injective_on(&self, domain: &BoxSet) -> bool {
+        let mut seen = std::collections::HashSet::new();
+        for p in domain.points() {
+            if !seen.insert(self.apply(&p)) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Bind the trailing `values.len()` input dims to constants.
+    pub fn bind_tail(&self, values: &[i64]) -> AffineMap {
+        AffineMap {
+            in_rank: self.in_rank - values.len(),
+            outputs: self.outputs.iter().map(|o| o.bind_tail(values)).collect(),
+        }
+    }
+
+    /// Insert `count` unused input dims at `at` (strip-mining support).
+    pub fn insert_in_dims(&self, at: usize, count: usize) -> AffineMap {
+        AffineMap {
+            in_rank: self.in_rank + count,
+            outputs: self.outputs.iter().map(|o| o.insert_dims(at, count)).collect(),
+        }
+    }
+}
+
+impl fmt::Display for AffineMap {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "(")?;
+        for (k, o) in self.outputs.iter().enumerate() {
+            if k > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{o}")?;
+        }
+        write!(f, ")")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::poly::set::Dim;
+
+    /// The paper's Fig 2 access maps over (y, x) — y outermost.
+    fn stencil_port(dy: i64, dx: i64) -> AffineMap {
+        AffineMap::new(
+            2,
+            vec![Affine::new(vec![1, 0], dy), Affine::new(vec![0, 1], dx)],
+        )
+    }
+
+    #[test]
+    fn apply_access_map() {
+        // (x,y) -> brighten(x+1, y): stored (y, x) order.
+        let m = stencil_port(0, 1);
+        assert_eq!(m.apply(&[3, 5]), vec![3, 6]);
+    }
+
+    #[test]
+    fn identity_map() {
+        let id = AffineMap::identity(3);
+        assert_eq!(id.apply(&[7, -2, 4]), vec![7, -2, 4]);
+    }
+
+    #[test]
+    fn compose_order() {
+        // f(y, x) = (y, x + 1); g(t) = (t, 2t). (f ∘ g)(t) = (t, 2t + 1).
+        let f = stencil_port(0, 1);
+        let g = AffineMap::new(1, vec![Affine::var(1, 0), Affine::new(vec![2], 0)]);
+        let fg = f.compose(&g);
+        assert_eq!(fg.apply(&[5]), vec![5, 11]);
+    }
+
+    #[test]
+    fn constant_difference_detects_shift_register() {
+        // Fig 2 / Fig 8a: the 2x2 stencil ports differ from the write port
+        // by constant offsets (0,0), (0,1), (1,0), (1,1).
+        let write = stencil_port(0, 0);
+        for (dy, dx) in [(0, 0), (0, 1), (1, 0), (1, 1)] {
+            let read = stencil_port(dy, dx);
+            assert_eq!(read.constant_difference(&write), Some(vec![dy, dx]));
+        }
+        // A transposed access is not a constant shift.
+        let transpose = AffineMap::new(2, vec![Affine::var(2, 1), Affine::var(2, 0)]);
+        assert_eq!(transpose.constant_difference(&write), None);
+    }
+
+    #[test]
+    fn range_bounds_interval() {
+        let dom = BoxSet::new(vec![Dim::new("y", 0, 8), Dim::new("x", 0, 8)]);
+        // Downsample-by-2 access (Fig 6): (y, x) -> (2y, 2x).
+        let m = AffineMap::new(2, vec![Affine::new(vec![2, 0], 0), Affine::new(vec![0, 2], 0)]);
+        assert_eq!(m.range_bounds(&dom), vec![(0, 14), (0, 14)]);
+    }
+
+    #[test]
+    fn injectivity() {
+        let dom = BoxSet::from_extents(&[4, 4]);
+        assert!(AffineMap::identity(2).is_injective_on(&dom));
+        // Project to one output dim: not injective.
+        let proj = AffineMap::new(2, vec![Affine::var(2, 0)]);
+        assert!(!proj.is_injective_on(&dom));
+        // Linearized (4y + x) is injective on a 4-wide box...
+        let lin = AffineMap::new(2, vec![Affine::new(vec![4, 1], 0)]);
+        assert!(lin.is_injective_on(&dom));
+        // ...but not on a wider one.
+        let dom8 = BoxSet::from_extents(&[4, 8]);
+        assert!(!lin.is_injective_on(&dom8));
+    }
+
+    #[test]
+    fn insert_in_dims_preserves() {
+        let m = stencil_port(1, 1);
+        let m2 = m.insert_in_dims(1, 1);
+        assert_eq!(m2.in_rank, 3);
+        assert_eq!(m2.apply(&[3, 42, 5]), m.apply(&[3, 5]));
+    }
+
+    #[test]
+    fn display() {
+        let m = stencil_port(0, 1);
+        assert_eq!(m.to_string(), "(i0, i1 + 1)");
+    }
+}

@@ -1,0 +1,28 @@
+//! ISL-lite polyhedral substrate.
+//!
+//! The paper uses ISL [Verdoolaege 2010] to represent iteration domains,
+//! access maps and cycle-accurate schedules. All maps and schedules it
+//! actually constructs are *affine functions over rectangular (hyper-box)
+//! Halide loop domains* (§III, §V-B), so this module implements exactly
+//! that fragment from scratch:
+//!
+//! * [`Affine`] — an affine expression `c0*i0 + ... + ck*ik + offset`.
+//! * [`BoxSet`] — a dense hyper-rectangular integer set (an iteration
+//!   domain); dimension 0 is the *outermost* loop.
+//! * [`AffineMap`] — a multi-output affine function (an access map).
+//! * [`CycleSchedule`] — a one-dimensional affine schedule mapping
+//!   iteration points to cycles-after-reset (Eq. 1 in the paper).
+//!
+//! Everything is exact: where a closed form is awkward (e.g. injectivity
+//! on a domain, live-value counting) we enumerate the domain, which is
+//! cheap for the tile-sized domains the accelerator operates on.
+
+pub mod affine;
+pub mod map;
+pub mod set;
+pub mod schedule;
+
+pub use affine::{fit_affine, Affine};
+pub use map::AffineMap;
+pub use set::BoxSet;
+pub use schedule::CycleSchedule;

@@ -1,0 +1,132 @@
+//! One-dimensional cycle-accurate affine schedules.
+
+use std::fmt;
+
+use super::{Affine, BoxSet};
+
+/// A cycle-accurate schedule: an affine function from an iteration domain
+/// to *cycles after reset* (Eq. 1 in the paper, e.g. `(x,y) -> 64y + x`).
+///
+/// Unlike classical multidimensional polyhedral schedules (Feautrier,
+/// PLUTO), these map loop nests directly to scalar hardware time; several
+/// operations may share a timestamp only across *different* ports (the
+/// design is pipelined), but a single port issues at most one operation
+/// per cycle — checked by [`CycleSchedule::is_injective_on`].
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct CycleSchedule {
+    pub expr: Affine,
+}
+
+impl CycleSchedule {
+    pub fn new(expr: Affine) -> Self {
+        CycleSchedule { expr }
+    }
+
+    /// The canonical dense row-major schedule of a loop nest with the
+    /// given extents and initiation interval `ii`, starting at `offset`:
+    /// innermost dim advances by `ii` each iteration.
+    pub fn row_major(extents: &[i64], ii: i64, offset: i64) -> Self {
+        let rank = extents.len();
+        let mut coeffs = vec![0i64; rank];
+        let mut stride = ii;
+        for k in (0..rank).rev() {
+            coeffs[k] = stride;
+            stride *= extents[k];
+        }
+        CycleSchedule { expr: Affine::new(coeffs, offset) }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.expr.rank()
+    }
+
+    /// Cycle at which the operation at `point` begins.
+    pub fn cycle(&self, point: &[i64]) -> i64 {
+        self.expr.eval(point)
+    }
+
+    /// Shift the whole schedule later by `delay` cycles.
+    pub fn delayed(&self, delay: i64) -> CycleSchedule {
+        CycleSchedule { expr: self.expr.shift(delay) }
+    }
+
+    /// Earliest and latest issue cycle over `domain` (inclusive).
+    pub fn span(&self, domain: &BoxSet) -> (i64, i64) {
+        self.expr.bounds(&domain.bounds())
+    }
+
+    /// One operation per cycle per port: exact check by enumeration.
+    pub fn is_injective_on(&self, domain: &BoxSet) -> bool {
+        let mut seen = std::collections::HashSet::new();
+        domain.points().all(|p| seen.insert(self.cycle(&p)))
+    }
+
+    /// True if the schedule visits `domain` in lexicographic program
+    /// order (monotone over the point iterator). Row-major schedules
+    /// with positive II always satisfy this.
+    pub fn is_monotone_on(&self, domain: &BoxSet) -> bool {
+        let mut last = i64::MIN;
+        for p in domain.points() {
+            let c = self.cycle(&p);
+            if c < last {
+                return false;
+            }
+            last = c;
+        }
+        true
+    }
+}
+
+impl fmt::Display for CycleSchedule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "t = {}", self.expr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_major_matches_paper_eq1() {
+        // 64x64 tile, II=1: (y, x) -> 64y + x.
+        let s = CycleSchedule::row_major(&[64, 64], 1, 0);
+        assert_eq!(s.expr, Affine::new(vec![64, 1], 0));
+        assert_eq!(s.cycle(&[0, 0]), 0);
+        assert_eq!(s.cycle(&[0, 1]), 1);
+        assert_eq!(s.cycle(&[1, 0]), 64);
+    }
+
+    #[test]
+    fn row_major_with_ii() {
+        let s = CycleSchedule::row_major(&[4, 8], 2, 10);
+        assert_eq!(s.cycle(&[0, 0]), 10);
+        assert_eq!(s.cycle(&[0, 1]), 12);
+        assert_eq!(s.cycle(&[1, 0]), 10 + 16);
+    }
+
+    #[test]
+    fn delayed_shifts_offset() {
+        // Paper: output ports emit first value after 65 cycles.
+        let s = CycleSchedule::row_major(&[64, 64], 1, 0).delayed(65);
+        assert_eq!(s.cycle(&[0, 0]), 65);
+    }
+
+    #[test]
+    fn span_over_domain() {
+        let dom = BoxSet::from_extents(&[64, 64]);
+        let s = CycleSchedule::row_major(&[64, 64], 1, 0);
+        assert_eq!(s.span(&dom), (0, 4095));
+    }
+
+    #[test]
+    fn injective_and_monotone() {
+        let dom = BoxSet::from_extents(&[8, 8]);
+        let s = CycleSchedule::row_major(&[8, 8], 1, 0);
+        assert!(s.is_injective_on(&dom));
+        assert!(s.is_monotone_on(&dom));
+        // A schedule ignoring x is not injective per-port.
+        let bad = CycleSchedule::new(Affine::new(vec![8, 0], 0));
+        assert!(!bad.is_injective_on(&dom));
+    }
+}

@@ -1,0 +1,291 @@
+//! Dense hyper-rectangular integer sets (iteration domains).
+
+use std::fmt;
+
+/// One dimension of a [`BoxSet`]: a named loop iterator with an inclusive
+/// integer range `[min, min + extent)`.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Dim {
+    pub name: String,
+    pub min: i64,
+    pub extent: i64,
+}
+
+impl Dim {
+    pub fn new(name: impl Into<String>, min: i64, extent: i64) -> Self {
+        assert!(extent >= 0, "negative extent");
+        Dim { name: name.into(), min, extent }
+    }
+
+    /// Inclusive upper bound (`min + extent - 1`). Panics on empty dims.
+    pub fn max(&self) -> i64 {
+        assert!(self.extent > 0, "max() of empty dim {}", self.name);
+        self.min + self.extent - 1
+    }
+}
+
+/// A dense box iteration domain. `dims[0]` is the **outermost** loop;
+/// `dims.last()` is the innermost. Points are vectors in the same order,
+/// and [`BoxSet::points`] yields them in lexicographic (= program) order.
+///
+/// Halide loop nests over rectangular bounds lower exactly to this shape,
+/// which is why the paper's polyhedral fragment never needs general
+/// Presburger sets (§V-B: "The iteration domain is the Cartesian product
+/// of the bounds of the loops surrounding the memory reference").
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct BoxSet {
+    pub dims: Vec<Dim>,
+}
+
+impl BoxSet {
+    pub fn new(dims: Vec<Dim>) -> Self {
+        BoxSet { dims }
+    }
+
+    /// Zero-based box from extents only, with synthesized names `d0..`.
+    pub fn from_extents(extents: &[i64]) -> Self {
+        BoxSet {
+            dims: extents
+                .iter()
+                .enumerate()
+                .map(|(k, &e)| Dim::new(format!("d{k}"), 0, e))
+                .collect(),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.dims.iter().any(|d| d.extent == 0)
+    }
+
+    /// Number of integer points.
+    pub fn cardinality(&self) -> i64 {
+        self.dims.iter().map(|d| d.extent).product()
+    }
+
+    pub fn contains(&self, point: &[i64]) -> bool {
+        point.len() == self.rank()
+            && self
+                .dims
+                .iter()
+                .zip(point)
+                .all(|(d, &p)| p >= d.min && p < d.min + d.extent)
+    }
+
+    /// `(min, max)` inclusive bounds per dim, for interval arithmetic.
+    pub fn bounds(&self) -> Vec<(i64, i64)> {
+        self.dims.iter().map(|d| (d.min, d.max())).collect()
+    }
+
+    /// Visit all points in lexicographic order without allocating a
+    /// vector per point (§Perf hot path for event enumeration).
+    pub fn for_each_point(&self, mut f: impl FnMut(&[i64])) {
+        if self.is_empty() {
+            return;
+        }
+        let mut p: Vec<i64> = self.dims.iter().map(|d| d.min).collect();
+        loop {
+            f(&p);
+            let mut k = self.rank();
+            loop {
+                if k == 0 {
+                    return;
+                }
+                k -= 1;
+                p[k] += 1;
+                if p[k] <= self.dims[k].max() {
+                    break;
+                }
+                p[k] = self.dims[k].min;
+            }
+        }
+    }
+
+    /// Iterate all points in lexicographic order (outermost dim slowest).
+    pub fn points(&self) -> PointIter<'_> {
+        PointIter {
+            set: self,
+            cur: if self.is_empty() {
+                None
+            } else {
+                Some(self.dims.iter().map(|d| d.min).collect())
+            },
+        }
+    }
+
+    /// Cartesian product `self × other` (other's dims become innermost).
+    pub fn product(&self, other: &BoxSet) -> BoxSet {
+        let mut dims = self.dims.clone();
+        dims.extend(other.dims.iter().cloned());
+        BoxSet { dims }
+    }
+
+    /// Drop dimension `at`.
+    pub fn project_out(&self, at: usize) -> BoxSet {
+        let mut dims = self.dims.clone();
+        dims.remove(at);
+        BoxSet { dims }
+    }
+
+    /// Insert a dim at position `at`.
+    pub fn insert_dim(&self, at: usize, dim: Dim) -> BoxSet {
+        let mut dims = self.dims.clone();
+        dims.insert(at, dim);
+        BoxSet { dims }
+    }
+
+    /// Index of a named dim.
+    pub fn dim_index(&self, name: &str) -> Option<usize> {
+        self.dims.iter().position(|d| d.name == name)
+    }
+}
+
+/// Lexicographic point iterator over a [`BoxSet`].
+pub struct PointIter<'a> {
+    set: &'a BoxSet,
+    cur: Option<Vec<i64>>,
+}
+
+impl Iterator for PointIter<'_> {
+    type Item = Vec<i64>;
+
+    fn next(&mut self) -> Option<Vec<i64>> {
+        let cur = self.cur.take()?;
+        let mut next = cur.clone();
+        // Increment innermost-first with carry.
+        let mut k = self.set.rank();
+        loop {
+            if k == 0 {
+                // Full carry-out: iteration finished.
+                self.cur = None;
+                break;
+            }
+            k -= 1;
+            next[k] += 1;
+            if next[k] <= self.set.dims[k].max() {
+                self.cur = Some(next);
+                break;
+            }
+            next[k] = self.set.dims[k].min;
+        }
+        Some(cur)
+    }
+}
+
+impl fmt::Display for BoxSet {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{{ (")?;
+        for (k, d) in self.dims.iter().enumerate() {
+            if k > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{}", d.name)?;
+        }
+        write!(f, ") | ")?;
+        for (k, d) in self.dims.iter().enumerate() {
+            if k > 0 {
+                write!(f, " and ")?;
+            }
+            if d.extent == 0 {
+                write!(f, "{} in empty", d.name)?;
+            } else {
+                write!(f, "{} <= {} <= {}", d.min, d.name, d.max())?;
+            }
+        }
+        write!(f, " }}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xy64() -> BoxSet {
+        // Paper §III input-port domain: 0 <= x,y <= 63, y outermost.
+        BoxSet::new(vec![Dim::new("y", 0, 64), Dim::new("x", 0, 64)])
+    }
+
+    #[test]
+    fn cardinality_and_contains() {
+        let s = xy64();
+        assert_eq!(s.cardinality(), 4096);
+        assert!(s.contains(&[0, 0]));
+        assert!(s.contains(&[63, 63]));
+        assert!(!s.contains(&[64, 0]));
+        assert!(!s.contains(&[0, -1]));
+    }
+
+    #[test]
+    fn points_lexicographic() {
+        let s = BoxSet::from_extents(&[2, 3]);
+        let pts: Vec<_> = s.points().collect();
+        assert_eq!(
+            pts,
+            vec![
+                vec![0, 0],
+                vec![0, 1],
+                vec![0, 2],
+                vec![1, 0],
+                vec![1, 1],
+                vec![1, 2]
+            ]
+        );
+    }
+
+    #[test]
+    fn points_count_matches_cardinality() {
+        let s = BoxSet::from_extents(&[3, 4, 5]);
+        assert_eq!(s.points().count() as i64, s.cardinality());
+    }
+
+    #[test]
+    fn empty_set() {
+        let s = BoxSet::from_extents(&[4, 0]);
+        assert!(s.is_empty());
+        assert_eq!(s.cardinality(), 0);
+        assert_eq!(s.points().count(), 0);
+    }
+
+    #[test]
+    fn nonzero_min() {
+        let s = BoxSet::new(vec![Dim::new("i", -2, 3)]);
+        let pts: Vec<_> = s.points().collect();
+        assert_eq!(pts, vec![vec![-2], vec![-1], vec![0]]);
+    }
+
+    #[test]
+    fn product_and_project() {
+        let a = BoxSet::from_extents(&[2]);
+        let b = BoxSet::from_extents(&[3]);
+        let p = a.product(&b);
+        assert_eq!(p.rank(), 2);
+        assert_eq!(p.cardinality(), 6);
+        assert_eq!(p.project_out(0), BoxSet::from_extents(&[3]));
+    }
+
+    #[test]
+    fn insert_dim_for_stripmine() {
+        // (x, y) -> (x mod FW, x/FW, y): vectorization adds a dim (Eq. 2).
+        let s = BoxSet::new(vec![Dim::new("y", 0, 8), Dim::new("x", 0, 16)]);
+        let v = s.insert_dim(2, Dim::new("xv", 0, 4));
+        assert_eq!(v.rank(), 3);
+        assert_eq!(v.dims[2].extent, 4);
+    }
+
+    #[test]
+    fn dim_index_lookup() {
+        let s = xy64();
+        assert_eq!(s.dim_index("y"), Some(0));
+        assert_eq!(s.dim_index("x"), Some(1));
+        assert_eq!(s.dim_index("z"), None);
+    }
+
+    #[test]
+    fn display_matches_paper_notation() {
+        let s = xy64();
+        assert_eq!(s.to_string(), "{ (y, x) | 0 <= y <= 63 and 0 <= x <= 63 }");
+    }
+}

@@ -1,0 +1,128 @@
+//! PJRT golden-model runtime: load the AOT-lowered HLO artifacts and
+//! execute them on the CPU client. This is both the validation oracle
+//! (§VI-B "we validate the output images against each other") and the
+//! CPU baseline of Fig 14 (the same XLA executable *is* the optimized
+//! CPU implementation of the app).
+//!
+//! HLO **text** is the interchange format — see gen_hlo notes in
+//! /opt/xla-example: jax ≥ 0.5 emits 64-bit instruction ids that this
+//! xla_extension rejects in proto form; the text parser reassigns ids.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::tensor::Tensor;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+pub struct GoldenModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile one HLO-text artifact.
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<GoldenModel> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("path utf8")?)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(GoldenModel {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// Convert a [`Tensor`] to an XLA literal (row-major over its box).
+fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.dims.iter().map(|d| d.extent).collect();
+    xla::Literal::vec1(&t.data)
+        .reshape(&dims)
+        .context("reshaping input literal")
+}
+
+impl GoldenModel {
+    /// Execute with the inputs in artifact parameter order; returns the
+    /// flattened row-major output and the wall-clock execute time (the
+    /// Fig 14 CPU measurement).
+    pub fn run(&self, inputs: &[&Tensor]) -> Result<(Vec<i32>, f64)> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| to_literal(t))
+            .collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let dt = t0.elapsed().as_secs_f64();
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        Ok((out.to_vec::<i32>().context("reading output literal")?, dt))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::poly::BoxSet;
+
+    fn artifact(name: &str) -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts")
+            .join(format!("{name}.hlo.txt"))
+    }
+
+    #[test]
+    fn gaussian_artifact_roundtrip() {
+        let path = artifact("gaussian");
+        if !path.exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let m = rt.load(&path).unwrap();
+        // Constant image: binomial blur is the identity.
+        let img = Tensor::from_fn(BoxSet::from_extents(&[64, 64]), |_| 100);
+        let (out, dt) = m.run(&[&img]).unwrap();
+        assert_eq!(out.len(), 62 * 62);
+        assert!(out.iter().all(|&v| v == 100));
+        assert!(dt > 0.0);
+    }
+
+    #[test]
+    fn upsample_artifact_roundtrip() {
+        let path = artifact("upsample");
+        if !path.exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let m = rt.load(&path).unwrap();
+        let img = Tensor::from_fn(BoxSet::from_extents(&[64, 64]), |p| (p[0] * 64 + p[1]) as i32);
+        let (out, _) = m.run(&[&img]).unwrap();
+        assert_eq!(out.len(), 64 * 2 * 64 * 2);
+        // out[yo,yi,xo,xi] = in[yo,xo]; check a few.
+        let idx = |yo: usize, yi: usize, xo: usize, xi: usize| ((yo * 2 + yi) * 64 + xo) * 2 + xi;
+        assert_eq!(out[idx(3, 0, 5, 1)], (3 * 64 + 5) as i32);
+        assert_eq!(out[idx(3, 1, 5, 0)], (3 * 64 + 5) as i32);
+    }
+}

@@ -1,0 +1,190 @@
+//! DNN-pipeline scheduling (§V-B "DNN Pipeline").
+//!
+//! Used when some reduction loop is not fully unrolled. Each pipeline
+//! stage is internally pipelined at II = 1 over its own loop nest (the
+//! standard HLS loop schedule of [40]); stages are laid out with the
+//! minimal start offsets that respect data dependencies (exact, via the
+//! shared dependence engine — producer/consumer orders that cannot be
+//! aligned, like resnet's channel-major reuse, naturally degrade to
+//! buffer-everything offsets). Successive *tiles* are overlapped by
+//! double buffering: the coarse-grained initiation interval is found by
+//! binary search, converging on the busy span of the largest stage —
+//! 100% utilization of the dominant compute unit.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+
+use super::core;
+use super::{InputArrival, PipelineKind, PipelineSchedule, StageSchedule};
+use crate::halide::LoweredPipeline;
+use crate::poly::{AffineMap, CycleSchedule};
+
+/// Row-major zero-delay schedule over a stage's own full domain, first
+/// point at cycle 0.
+fn own_t0(domain: &crate::poly::BoxSet, ii: i64) -> CycleSchedule {
+    let extents: Vec<i64> = domain.dims.iter().map(|d| d.extent).collect();
+    let s = CycleSchedule::row_major(&extents, ii, 0);
+    let mins: Vec<i64> = domain.dims.iter().map(|d| d.min).collect();
+    let off = s.cycle(&mins);
+    s.delayed(-off)
+}
+
+/// Binary-search the minimal feasible coarse II for double-buffered tile
+/// overlap: tile `n+1`'s stage `s` starts at `start_s + n * II`; this is
+/// feasible iff no stage is still busy with the previous tile when its
+/// next activation arrives, i.e. `II >= max_s busy_span(s)` (each stage's
+/// resources are double-buffered, so only self-overlap constrains II).
+fn search_coarse_ii(spans: &[(i64, i64)], completion: i64) -> i64 {
+    let feasible = |ii: i64| -> bool {
+        spans.iter().all(|&(a, b)| b - a + 1 <= ii)
+    };
+    let (mut lo, mut hi) = (1i64, completion.max(1));
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if feasible(mid) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    lo
+}
+
+pub fn schedule(lp: &LoweredPipeline) -> Result<PipelineSchedule> {
+    ensure!(!lp.stages.is_empty(), "empty pipeline");
+
+    // Inputs stream row-major at full rate (one lane — DNN bandwidth is
+    // dominated by the reduction, not the input stream).
+    let mut arrivals = BTreeMap::new();
+    for name in &lp.inputs {
+        let b = lp.buffers[name].clone();
+        arrivals.insert(
+            name.clone(),
+            InputArrival {
+                domain: b.clone(),
+                lane_maps: vec![AffineMap::identity(b.rank())],
+                schedule: own_t0(&b, 1),
+            },
+        );
+    }
+
+    let t0: Vec<CycleSchedule> = lp
+        .stages
+        .iter()
+        .map(|s| own_t0(&s.full_domain(), 1))
+        .collect();
+    let latency: Vec<i64> = lp
+        .stages
+        .iter()
+        .map(|s| s.instances.iter().map(|i| i.kernel.depth()).max().unwrap_or(0).max(1))
+        .collect();
+
+    let solved = core::solve(lp, &t0, &latency, &arrivals, false)?;
+    // Input streams are busy too: their span bounds the coarse II.
+    let mut spans = solved.spans.clone();
+    for arr in arrivals.values() {
+        let (a, b) = arr.schedule.span(&arr.domain);
+        spans.push((a, b));
+    }
+    let coarse_ii = search_coarse_ii(&spans, solved.completion);
+
+    let stages = lp
+        .stages
+        .iter()
+        .zip(&t0)
+        .zip(&latency)
+        .zip(&solved.delays)
+        .map(|(((s, t), &lat), &d)| StageSchedule {
+            stage: s.name.clone(),
+            issue: t.delayed(d),
+            latency: lat,
+        })
+        .collect();
+
+    Ok(PipelineSchedule {
+        kind: PipelineKind::Dnn,
+        stages,
+        arrivals,
+        completion: solved.completion,
+        coarse_ii,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::halide::func::{Func, InputDecl, Program};
+    use crate::halide::lower::lower;
+    use crate::halide::schedule::HwSchedule;
+    use crate::halide::Expr;
+    use crate::sched::classify;
+
+    /// A small conv layer: 4 output channels, 3x3 window, 4 input
+    /// channels, over an 8x8 output — reduction not unrolled.
+    fn conv_layer() -> LoweredPipeline {
+        let conv = Func::reduce_fn(
+            "conv",
+            &["co", "y", "x"],
+            Expr::c(0),
+            &[("ci", 0, 4), ("ry", 0, 3), ("rx", 0, 3)],
+            Expr::add(
+                Expr::ld("conv", vec![Expr::v("co"), Expr::v("y"), Expr::v("x")]),
+                Expr::mul(
+                    Expr::ld(
+                        "ifmap",
+                        vec![
+                            Expr::v("ci"),
+                            Expr::add(Expr::v("y"), Expr::v("ry")),
+                            Expr::add(Expr::v("x"), Expr::v("rx")),
+                        ],
+                    ),
+                    Expr::ld(
+                        "weights",
+                        vec![Expr::v("co"), Expr::v("ci"), Expr::v("ry"), Expr::v("rx")],
+                    ),
+                ),
+            ),
+        );
+        let p = Program {
+            name: "conv".into(),
+            inputs: vec![
+                InputDecl { name: "ifmap".into(), rank: 3 },
+                InputDecl { name: "weights".into(), rank: 4 },
+            ],
+            funcs: vec![conv],
+            schedule: HwSchedule::new([4, 8, 8]),
+        };
+        lower(&p).unwrap()
+    }
+
+    #[test]
+    fn classified_as_dnn() {
+        let lp = conv_layer();
+        assert_eq!(classify(&lp), PipelineKind::Dnn);
+    }
+
+    #[test]
+    fn conv_layer_schedules() {
+        let lp = conv_layer();
+        let ps = schedule(&lp).unwrap();
+        assert_eq!(ps.kind, PipelineKind::Dnn);
+        // 4*8*8 outputs x 36 MACs each = 9216 issue slots at II=1.
+        let conv = ps.stage("conv").unwrap();
+        let full = lp.stages[0].full_domain();
+        let (a, b) = conv.issue.span(&full);
+        assert_eq!(b - a + 1, 9216);
+        // Completion covers the whole reduction.
+        assert!(ps.completion >= 9216);
+        // Double buffering: coarse II is the dominant busy span, less
+        // than serial completion (input streaming overlaps compute).
+        assert!(ps.coarse_ii <= ps.completion);
+        assert!(ps.coarse_ii >= 9216);
+    }
+
+    #[test]
+    fn coarse_ii_search_converges() {
+        assert_eq!(search_coarse_ii(&[(0, 9), (5, 24)], 100), 20);
+        assert_eq!(search_coarse_ii(&[(0, 0)], 50), 1);
+    }
+}

@@ -1,0 +1,146 @@
+//! The naïve sequential baseline of Tables VI and VII: every loop nest
+//! runs to completion before the next starts, and no loop is pipelined —
+//! each iteration occupies the kernel for its full latency (II = kernel
+//! depth). Inter-stage buffers must therefore hold entire intermediate
+//! images, which is what drives the SRAM-capacity column of Table VII.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+
+use super::core;
+use super::{InputArrival, PipelineKind, PipelineSchedule, StageSchedule};
+use crate::halide::LoweredPipeline;
+use crate::poly::{AffineMap, CycleSchedule};
+
+fn own_t0(domain: &crate::poly::BoxSet, ii: i64) -> CycleSchedule {
+    let extents: Vec<i64> = domain.dims.iter().map(|d| d.extent).collect();
+    let s = CycleSchedule::row_major(&extents, ii, 0);
+    let mins: Vec<i64> = domain.dims.iter().map(|d| d.min).collect();
+    let off = s.cycle(&mins);
+    s.delayed(-off)
+}
+
+pub fn schedule(lp: &LoweredPipeline) -> Result<PipelineSchedule> {
+    ensure!(!lp.stages.is_empty(), "empty pipeline");
+
+    let mut arrivals = BTreeMap::new();
+    for name in &lp.inputs {
+        let b = lp.buffers[name].clone();
+        arrivals.insert(
+            name.clone(),
+            InputArrival {
+                domain: b.clone(),
+                lane_maps: vec![AffineMap::identity(b.rank())],
+                schedule: own_t0(&b, 1),
+            },
+        );
+    }
+
+    // No loop pipelining: each iteration waits out the kernel latency.
+    let latency: Vec<i64> = lp
+        .stages
+        .iter()
+        .map(|s| s.instances.iter().map(|i| i.kernel.depth()).max().unwrap_or(0).max(1))
+        .collect();
+    let t0: Vec<CycleSchedule> = lp
+        .stages
+        .iter()
+        .zip(&latency)
+        .map(|(s, &lat)| own_t0(&s.full_domain(), lat.max(1)))
+        .collect();
+
+    let solved = core::solve(lp, &t0, &latency, &arrivals, true)?;
+
+    let stages = lp
+        .stages
+        .iter()
+        .zip(&t0)
+        .zip(&latency)
+        .zip(&solved.delays)
+        .map(|(((s, t), &lat), &d)| StageSchedule {
+            stage: s.name.clone(),
+            issue: t.delayed(d),
+            latency: lat,
+        })
+        .collect();
+
+    Ok(PipelineSchedule {
+        kind: PipelineKind::Sequential,
+        stages,
+        arrivals,
+        completion: solved.completion,
+        coarse_ii: solved.completion,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::halide::func::{Func, InputDecl, Program};
+    use crate::halide::lower::lower;
+    use crate::halide::schedule::HwSchedule;
+    use crate::halide::Expr;
+    use crate::sched::stencil;
+
+    fn gauss_like(tile: i64) -> LoweredPipeline {
+        // Two chained 2x2 box filters, fully unrolled: a stencil app.
+        let mk = |name: &str, src: &str| {
+            Func::pure_fn(
+                name,
+                &["y", "x"],
+                Expr::shr(
+                    Expr::sum(vec![
+                        Expr::ld(src, vec![Expr::v("y"), Expr::v("x")]),
+                        Expr::ld(src, vec![Expr::v("y"), Expr::add(Expr::v("x"), Expr::c(1))]),
+                        Expr::ld(src, vec![Expr::add(Expr::v("y"), Expr::c(1)), Expr::v("x")]),
+                        Expr::ld(
+                            src,
+                            vec![
+                                Expr::add(Expr::v("y"), Expr::c(1)),
+                                Expr::add(Expr::v("x"), Expr::c(1)),
+                            ],
+                        ),
+                    ]),
+                    2,
+                ),
+            )
+        };
+        let p = Program {
+            name: "gg".into(),
+            inputs: vec![InputDecl { name: "in".into(), rank: 2 }],
+            funcs: vec![mk("a", "in"), mk("b", "a")],
+            schedule: HwSchedule::new([tile, tile]).store_at("a"),
+        };
+        lower(&p).unwrap()
+    }
+
+    #[test]
+    fn sequential_much_slower_than_pipelined() {
+        let lp = gauss_like(30);
+        let seq = schedule(&lp).unwrap();
+        let opt = stencil::schedule(&lp).unwrap();
+        assert_eq!(seq.kind, PipelineKind::Sequential);
+        // Table VI shape: multi-x speedup for stencils.
+        let speedup = seq.completion as f64 / opt.completion as f64;
+        assert!(speedup > 3.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn stages_do_not_overlap() {
+        let lp = gauss_like(16);
+        let ps = schedule(&lp).unwrap();
+        let spans: Vec<(i64, i64)> = lp
+            .stages
+            .iter()
+            .zip(&ps.stages)
+            .map(|(s, ss)| {
+                let (a, b) = ss.issue.span(&s.full_domain());
+                (a, b + ss.latency)
+            })
+            .collect();
+        for w in spans.windows(2) {
+            assert!(w[1].0 > w[0].1, "stages overlap: {spans:?}");
+        }
+    }
+}

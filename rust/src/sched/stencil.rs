@@ -1,0 +1,236 @@
+//! Stencil-pipeline scheduling (§V-B "Stencil Pipeline").
+//!
+//! Used when every reduction loop is fully unrolled. All loop nests are
+//! fused into one aligned, fully-pipelined iteration (II = 1) in the
+//! style of Clockwork [12]: every stage advances through a *common
+//! virtual loop nest* whose per-dimension extents are the maxima over
+//! all stage domains, so rates match and dependence distances are
+//! constant. Per-stage delays then come from the exact dependence engine
+//! — the analogue of Clockwork's SDF constraint problem.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+
+use super::core;
+use super::{InputArrival, PipelineKind, PipelineSchedule, StageSchedule};
+use crate::halide::LoweredPipeline;
+use crate::poly::{Affine, AffineMap, BoxSet, CycleSchedule};
+
+/// Zero-delay schedule of a box under common virtual strides: the
+/// stage's first point issues at cycle 0, subsequent points advance
+/// row-major with the *virtual* strides (which may exceed the stage's
+/// own extents, idling the tail of each virtual row).
+fn aligned_t0(domain: &BoxSet, strides: &[i64]) -> CycleSchedule {
+    assert_eq!(domain.rank(), strides.len());
+    let expr = Affine::new(strides.to_vec(), 0);
+    let mins: Vec<i64> = domain.dims.iter().map(|d| d.min).collect();
+    let offset = -expr.eval(&mins);
+    CycleSchedule::new(expr.shift(offset))
+}
+
+/// Input lane count: inputs must arrive as fast as the widest stage
+/// consumes, so they get one stream lane per unroll instance of the
+/// output stage (innermost-dim unrolling, `stream_to_accelerator`).
+fn input_lanes(lp: &LoweredPipeline) -> i64 {
+    lp.stages.last().map(|s| s.instances.len() as i64).unwrap_or(1)
+}
+
+pub fn schedule(lp: &LoweredPipeline) -> Result<PipelineSchedule> {
+    let rank = lp
+        .stages
+        .last()
+        .map(|s| s.pure_domain.rank())
+        .unwrap_or(0);
+    ensure!(rank > 0, "empty pipeline");
+    for s in &lp.stages {
+        ensure!(
+            !s.is_reduction() && s.pure_domain.rank() == rank,
+            "stencil scheduling requires fused-rank pure stages; {} violates",
+            s.name
+        );
+    }
+    let lanes = input_lanes(lp);
+
+    // Common virtual extents: max per dim over stage domains and
+    // (lane-divided) input boxes.
+    let mut virt = vec![1i64; rank];
+    for s in &lp.stages {
+        for (k, d) in s.pure_domain.dims.iter().enumerate() {
+            virt[k] = virt[k].max(d.extent);
+        }
+    }
+    for name in &lp.inputs {
+        let b = &lp.buffers[name];
+        ensure!(b.rank() == rank, "input {name} rank mismatch for stencil fusion");
+        for (k, d) in b.dims.iter().enumerate() {
+            // Innermost dim is divided across lanes (ceil: a partial
+            // final iteration is fine — out-of-box lane coordinates are
+            // clipped by the dependence engine and extraction).
+            let e = if k == rank - 1 { (d.extent + lanes - 1) / lanes } else { d.extent };
+            virt[k] = virt[k].max(e);
+        }
+    }
+    // Row-major strides over the virtual extents (II = 1 innermost).
+    let mut strides = vec![1i64; rank];
+    for k in (0..rank.saturating_sub(1)).rev() {
+        strides[k] = strides[k + 1] * virt[k + 1];
+    }
+
+    // Input arrival: `lanes` values per cycle, row-major over the
+    // lane-divided box, aligned to the virtual strides.
+    let mut arrivals = BTreeMap::new();
+    for name in &lp.inputs {
+        let b = lp.buffers[name].clone();
+        let mut dom = b.clone();
+        let last = rank - 1;
+        dom.dims[last].extent = (dom.dims[last].extent + lanes - 1) / lanes;
+        let lane_maps: Vec<AffineMap> = (0..lanes)
+            .map(|k| {
+                let mut outs: Vec<Affine> =
+                    (0..rank).map(|d| Affine::var(rank, d)).collect();
+                // innermost coordinate = lanes * i + k + min adjustment
+                outs[last] = Affine::var(rank, last)
+                    .scale(lanes)
+                    .shift(k - (lanes - 1) * b.dims[last].min);
+                AffineMap::new(rank, outs)
+            })
+            .collect();
+        let schedule = aligned_t0(&dom, &strides);
+        arrivals.insert(name.clone(), InputArrival { domain: dom, lane_maps, schedule });
+    }
+
+    // Zero-delay schedules and kernel latencies.
+    let t0: Vec<CycleSchedule> = lp
+        .stages
+        .iter()
+        .map(|s| aligned_t0(&s.pure_domain, &strides))
+        .collect();
+    let latency: Vec<i64> = lp
+        .stages
+        .iter()
+        .map(|s| s.instances.iter().map(|i| i.kernel.depth()).max().unwrap_or(0).max(1))
+        .collect();
+
+    let solved = core::solve(lp, &t0, &latency, &arrivals, false)?;
+
+    let stages = lp
+        .stages
+        .iter()
+        .zip(&t0)
+        .zip(&latency)
+        .zip(&solved.delays)
+        .map(|(((s, t), &lat), &d)| StageSchedule {
+            stage: s.name.clone(),
+            issue: t.delayed(d),
+            latency: lat,
+        })
+        .collect();
+
+    Ok(PipelineSchedule {
+        kind: PipelineKind::Stencil,
+        stages,
+        arrivals,
+        completion: solved.completion,
+        coarse_ii: solved.completion,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::halide::func::{Func, InputDecl, Program};
+    use crate::halide::lower::lower;
+    use crate::halide::schedule::HwSchedule;
+    use crate::halide::Expr;
+
+    fn blur_pipeline(tile: i64, unroll: Option<i64>) -> LoweredPipeline {
+        let brighten = Func::pure_fn(
+            "brighten",
+            &["y", "x"],
+            Expr::mul(Expr::c(2), Expr::ld("input", vec![Expr::v("y"), Expr::v("x")])),
+        );
+        let blur = Func::pure_fn(
+            "blur",
+            &["y", "x"],
+            Expr::shr(
+                Expr::sum(vec![
+                    Expr::ld("brighten", vec![Expr::v("y"), Expr::v("x")]),
+                    Expr::ld(
+                        "brighten",
+                        vec![Expr::v("y"), Expr::add(Expr::v("x"), Expr::c(1))],
+                    ),
+                    Expr::ld(
+                        "brighten",
+                        vec![Expr::add(Expr::v("y"), Expr::c(1)), Expr::v("x")],
+                    ),
+                    Expr::ld(
+                        "brighten",
+                        vec![
+                            Expr::add(Expr::v("y"), Expr::c(1)),
+                            Expr::add(Expr::v("x"), Expr::c(1)),
+                        ],
+                    ),
+                ]),
+                2,
+            ),
+        );
+        let mut schedule = HwSchedule::new([tile, tile]).store_at("brighten");
+        if let Some(u) = unroll {
+            schedule = schedule.unroll("brighten", "x", u).unroll("blur", "x", u);
+        }
+        let p = Program {
+            name: "bb".into(),
+            inputs: vec![InputDecl { name: "input".into(), rank: 2 }],
+            funcs: vec![brighten, blur],
+            schedule,
+        };
+        lower(&p).unwrap()
+    }
+
+    #[test]
+    fn completion_is_one_tile_pass() {
+        // 63x63 output, 64x64 input: completion should be about
+        // 64*64 = 4096 cycles plus small startup (the paper's Table VI
+        // "optimized" numbers are 4102-4146 for 64x64-input stencils).
+        let lp = blur_pipeline(63, None);
+        let ps = schedule(&lp).unwrap();
+        assert_eq!(ps.kind, PipelineKind::Stencil);
+        assert!(
+            (4096..4300).contains(&ps.completion),
+            "completion {}",
+            ps.completion
+        );
+    }
+
+    #[test]
+    fn blur_delay_is_about_one_row() {
+        let lp = blur_pipeline(63, None);
+        let ps = schedule(&lp).unwrap();
+        let b0 = ps.stage("brighten").unwrap().issue.cycle(&[0, 0]);
+        let bl = ps.stage("blur").unwrap().issue.cycle(&[0, 0]);
+        // blur waits for brighten(1, 1): ~one 64-wide virtual row.
+        assert!((64..140).contains(&(bl - b0)), "lead {}", bl - b0);
+    }
+
+    #[test]
+    fn unrolled_pipeline_halves_completion() {
+        let base = schedule(&blur_pipeline(63, None)).unwrap();
+        // unroll 63 isn't divisible by 2; use a 62x62 tile for the
+        // unrolled variant (input 63x63... still odd) — use 64-tile.
+        let lp2 = blur_pipeline(62, Some(2));
+        let ps2 = schedule(&lp2).unwrap();
+        // Roughly half the cycles (Table V sch4: 4097 -> 2154).
+        let ratio = base.completion as f64 / ps2.completion as f64;
+        assert!(ratio > 1.6, "ratio {ratio}");
+    }
+
+    #[test]
+    fn schedules_injective_per_stage() {
+        let lp = blur_pipeline(31, None);
+        let ps = schedule(&lp).unwrap();
+        for (s, ss) in lp.stages.iter().zip(&ps.stages) {
+            assert!(ss.issue.is_injective_on(&s.pure_domain), "{}", s.name);
+        }
+    }
+}

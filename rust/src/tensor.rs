@@ -1,0 +1,128 @@
+//! Dense integer tensors over [`BoxSet`] coordinate boxes.
+//!
+//! Used for host-side reference execution, the CGRA simulator's buffer
+//! state, and golden-model comparison. Coordinates are *absolute* (a box
+//! may start at a negative min, e.g. a stencil halo).
+
+use crate::poly::set::BoxSet;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: BoxSet,
+    strides: Vec<i64>,
+    pub data: Vec<i32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor over `shape`.
+    pub fn zeros(shape: BoxSet) -> Tensor {
+        let mut strides = vec![0i64; shape.rank()];
+        let mut s = 1i64;
+        for k in (0..shape.rank()).rev() {
+            strides[k] = s;
+            s *= shape.dims[k].extent;
+        }
+        Tensor { data: vec![0; s as usize], strides, shape }
+    }
+
+    /// Build from row-major data in the box's lexicographic point order.
+    pub fn from_data(shape: BoxSet, data: Vec<i32>) -> Tensor {
+        let t = Tensor::zeros(shape);
+        assert_eq!(data.len(), t.data.len(), "data length mismatch");
+        Tensor { data, ..t }
+    }
+
+    /// Fill from a coordinate function.
+    pub fn from_fn(shape: BoxSet, mut f: impl FnMut(&[i64]) -> i32) -> Tensor {
+        let mut t = Tensor::zeros(shape.clone());
+        for p in shape.points() {
+            let v = f(&p);
+            t.set(&p, v);
+        }
+        t
+    }
+
+    fn offset(&self, point: &[i64]) -> usize {
+        debug_assert!(
+            self.shape.contains(point),
+            "point {point:?} outside {}",
+            self.shape
+        );
+        self.shape
+            .dims
+            .iter()
+            .zip(point)
+            .zip(&self.strides)
+            .map(|((d, &p), &s)| (p - d.min) * s)
+            .sum::<i64>() as usize
+    }
+
+    pub fn get(&self, point: &[i64]) -> i32 {
+        self.data[self.offset(point)]
+    }
+
+    pub fn set(&mut self, point: &[i64], v: i32) {
+        let o = self.offset(point);
+        self.data[o] = v;
+    }
+
+    /// Clamp-to-edge read (used when host code samples outside the halo).
+    pub fn get_clamped(&self, point: &[i64]) -> i32 {
+        let p: Vec<i64> = self
+            .shape
+            .dims
+            .iter()
+            .zip(point)
+            .map(|(d, &v)| v.clamp(d.min, d.max()))
+            .collect();
+        self.get(&p)
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::poly::set::Dim;
+
+    #[test]
+    fn roundtrip_get_set() {
+        let mut t = Tensor::zeros(BoxSet::from_extents(&[3, 4]));
+        t.set(&[2, 3], 42);
+        t.set(&[0, 0], -1);
+        assert_eq!(t.get(&[2, 3]), 42);
+        assert_eq!(t.get(&[0, 0]), -1);
+        assert_eq!(t.get(&[1, 1]), 0);
+    }
+
+    #[test]
+    fn negative_min_box() {
+        let b = BoxSet::new(vec![Dim::new("y", -1, 4), Dim::new("x", -1, 4)]);
+        let t = Tensor::from_fn(b, |p| (10 * p[0] + p[1]) as i32);
+        assert_eq!(t.get(&[-1, -1]), -11);
+        assert_eq!(t.get(&[2, 0]), 20);
+    }
+
+    #[test]
+    fn from_data_lexicographic() {
+        let t = Tensor::from_data(BoxSet::from_extents(&[2, 2]), vec![1, 2, 3, 4]);
+        assert_eq!(t.get(&[0, 0]), 1);
+        assert_eq!(t.get(&[0, 1]), 2);
+        assert_eq!(t.get(&[1, 0]), 3);
+        assert_eq!(t.get(&[1, 1]), 4);
+    }
+
+    #[test]
+    fn clamped_reads() {
+        let t = Tensor::from_data(BoxSet::from_extents(&[2, 2]), vec![1, 2, 3, 4]);
+        assert_eq!(t.get_clamped(&[-5, 0]), 1);
+        assert_eq!(t.get_clamped(&[1, 99]), 4);
+    }
+}

@@ -1,0 +1,385 @@
+//! The unified buffer: a bundle of ports plus derived analyses
+//! (causality verification, storage minimization, dependence distances).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use super::port::{Port, PortDir};
+use crate::poly::BoxSet;
+
+/// A unified buffer for one logical array (one materialized Halide
+/// buffer). `data_box` is the realization box; it bounds the coordinate
+/// space but — per the abstraction — implies nothing about physical
+/// capacity, which comes from [`UnifiedBuffer::max_live`].
+#[derive(Clone, Debug)]
+pub struct UnifiedBuffer {
+    pub name: String,
+    pub data_box: BoxSet,
+    pub inputs: Vec<Port>,
+    pub outputs: Vec<Port>,
+}
+
+impl UnifiedBuffer {
+    pub fn new(name: impl Into<String>, data_box: BoxSet) -> Self {
+        UnifiedBuffer { name: name.into(), data_box, inputs: vec![], outputs: vec![] }
+    }
+
+    pub fn add_input(&mut self, p: Port) {
+        assert_eq!(p.dir, PortDir::In);
+        self.inputs.push(p);
+    }
+
+    pub fn add_output(&mut self, p: Port) {
+        assert_eq!(p.dir, PortDir::Out);
+        self.outputs.push(p);
+    }
+
+    /// Total ports — memory operations per cycle in steady state if all
+    /// ports are concurrently active (the bandwidth the mapper must
+    /// service, §V-C).
+    pub fn port_count(&self) -> usize {
+        self.inputs.len() + self.outputs.len()
+    }
+
+    /// Row-major flattener over the data box (flat i64 hash keys are
+    /// far cheaper than Vec<i64> keys on these hot analyses, §Perf).
+    fn flat_key(&self) -> impl Fn(&[i64]) -> i64 + '_ {
+        let dims = &self.data_box.dims;
+        let rank = dims.len();
+        let mut strides = vec![1i64; rank];
+        for k in (0..rank.saturating_sub(1)).rev() {
+            strides[k] = strides[k + 1] * dims[k + 1].extent;
+        }
+        move |coords: &[i64]| {
+            coords
+                .iter()
+                .zip(dims)
+                .zip(&strides)
+                .map(|((&c, d), &s)| (c - d.min) * s)
+                .sum()
+        }
+    }
+
+    /// Map buffer coordinates (flattened) -> cycle of the (unique) write.
+    fn write_times(&self) -> Result<HashMap<i64, i64>> {
+        let key = self.flat_key();
+        let mut wt: HashMap<i64, i64> = HashMap::new();
+        let mut dup: Option<(i64, i64)> = None;
+        for p in &self.inputs {
+            p.visit_events(|t, coords| {
+                if let Some(prev) = wt.insert(key(coords), t) {
+                    dup.get_or_insert((prev, t));
+                }
+            });
+        }
+        if let Some((prev, t)) = dup {
+            bail!(
+                "buffer {}: a coordinate is written twice (cycles {prev} and {t})",
+                self.name
+            );
+        }
+        Ok(wt)
+    }
+
+    /// Verify the port specification is realizable:
+    /// * every port schedule issues at most one op per cycle,
+    /// * every read is of a coordinate previously written (causality,
+    ///   with `min_latency` cycles between a write and the earliest
+    ///   dependent read — the time a value needs to travel through the
+    ///   buffer, cf. the 65-cycle startup delay in Fig 2),
+    /// * no coordinate is written twice (SSA per tile).
+    pub fn verify(&self, min_latency: i64) -> Result<()> {
+        for p in self.inputs.iter().chain(&self.outputs) {
+            if !p.schedule_is_valid() {
+                bail!("buffer {}: port {} issues >1 op per cycle", self.name, p.name);
+            }
+            for (_, coords) in p.events() {
+                if !self.data_box.contains(&coords) {
+                    bail!(
+                        "buffer {}: port {} accesses {coords:?} outside {}",
+                        self.name,
+                        p.name,
+                        self.data_box
+                    );
+                }
+            }
+        }
+        let wt = self.write_times()?;
+        let key = self.flat_key();
+        for p in &self.outputs {
+            let mut bad: Option<String> = None;
+            p.visit_events(|t, coords| {
+                if bad.is_some() {
+                    return;
+                }
+                match wt.get(&key(coords)) {
+                    None => {
+                        bad = Some(format!(
+                            "buffer {}: port {} reads never-written {coords:?}",
+                            self.name, p.name
+                        ))
+                    }
+                    Some(&w) if t < w + min_latency => {
+                        bad = Some(format!(
+                            "buffer {}: port {} reads {coords:?} at {t}, written at {w} \
+                             (needs {min_latency} cycles)",
+                            self.name, p.name
+                        ))
+                    }
+                    _ => {}
+                }
+            });
+            if let Some(msg) = bad {
+                bail!(msg);
+            }
+        }
+        Ok(())
+    }
+
+    /// Storage minimization (§V-C "Address Linearization" example): the
+    /// maximum number of simultaneously-live values. A value is live from
+    /// its write until its last read; values never read die immediately.
+    ///
+    /// This is the capacity an optimal circular-buffer implementation
+    /// needs (the paper's "maximum of 64 live pixels" for the brighten
+    /// buffer).
+    pub fn max_live(&self) -> Result<i64> {
+        let wt = self.write_times()?;
+        let key = self.flat_key();
+        let mut last_read: HashMap<i64, i64> = HashMap::new();
+        for p in &self.outputs {
+            p.visit_events(|t, coords| {
+                let e = last_read.entry(key(coords)).or_insert(t);
+                *e = (*e).max(t);
+            });
+        }
+        // Sweep events: +1 at write, -1 after last read.
+        let mut events: Vec<(i64, i64)> = Vec::with_capacity(2 * wt.len());
+        for (coords, &w) in &wt {
+            if let Some(&r) = last_read.get(coords) {
+                events.push((w, 1));
+                events.push((r + 1, -1));
+            }
+        }
+        // At equal cycle, process frees before allocations? A value read
+        // in the same cycle another is written must coexist (the write
+        // lands while the old value is still being drained), so process
+        // allocations first: sort by (cycle, delta descending).
+        events.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
+        let mut live = 0i64;
+        let mut max = 0i64;
+        for (_, d) in events {
+            live += d;
+            max = max.max(live);
+        }
+        Ok(max)
+    }
+
+    /// Constant dependence distance in *cycles* from input port `inp` to
+    /// output port `out`, if one exists: the shift-register legality test
+    /// (§V-C). Returns `Some(d)` iff every value emitted by `out` was
+    /// written by `inp` exactly `d` cycles earlier.
+    pub fn dependence_distance(&self, inp: &Port, out: &Port) -> Option<i64> {
+        let wt = self.event_time_map(inp);
+        self.distance_against(&wt, out)
+    }
+
+    /// Coordinate -> event-time map for one port (flat-keyed against
+    /// this buffer's box; built once per source, probed per port, §Perf).
+    pub fn event_time_map(&self, port: &Port) -> HashMap<i64, i64> {
+        let key = self.flat_key();
+        let mut wt: HashMap<i64, i64> = HashMap::new();
+        port.visit_events(|t, coords| {
+            wt.insert(key(coords), t);
+        });
+        wt
+    }
+
+    /// [`UnifiedBuffer::dependence_distance`] against a prebuilt map.
+    pub fn distance_against(&self, wt: &HashMap<i64, i64>, out: &Port) -> Option<i64> {
+        let key = self.flat_key();
+        let mut dist: Option<i64> = None;
+        let mut bad = false;
+        out.visit_events(|t, coords| {
+            if bad {
+                return;
+            }
+            match wt.get(&key(coords)) {
+                None => bad = true,
+                Some(&w) => {
+                    let d = t - w;
+                    match dist {
+                        None => dist = Some(d),
+                        Some(prev) if prev != d => bad = true,
+                        _ => {}
+                    }
+                }
+            }
+        });
+        if bad {
+            None
+        } else {
+            dist
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::poly::{Affine, AffineMap, CycleSchedule};
+
+    /// Build the paper's Fig 2 brighten buffer: one write port (identity,
+    /// t = 64y + x) and four read ports for the 2x2 blur stencil
+    /// ((y+dy, x+dx), t = 64y + x + 66), over a 64x64 read domain.
+    ///
+    /// The read schedule offset 66 makes the tightest read — of
+    /// brighten(y+1, x+1), written at 64(y+1) + (x+1) = t_w — happen at
+    /// 64y + x + 66 = t_w + 1, i.e. one cycle after its write.
+    fn brighten_buffer() -> UnifiedBuffer {
+        let mut ub = UnifiedBuffer::new(
+            "brighten",
+            BoxSet::from_extents(&[65, 65]),
+        );
+        ub.add_input(Port::new(
+            "w0",
+            PortDir::In,
+            BoxSet::from_extents(&[65, 65]),
+            AffineMap::identity(2),
+            CycleSchedule::row_major(&[65, 65], 1, 0),
+        ));
+        for (k, (dy, dx)) in [(0i64, 0i64), (0, 1), (1, 0), (1, 1)].iter().enumerate() {
+            ub.add_output(Port::new(
+                format!("r{k}"),
+                PortDir::Out,
+                BoxSet::from_extents(&[64, 64]),
+                AffineMap::new(
+                    2,
+                    vec![Affine::new(vec![1, 0], *dy), Affine::new(vec![0, 1], *dx)],
+                ),
+                // Writer traverses 65-wide rows: row stride is 65.
+                CycleSchedule::new(Affine::new(vec![65, 1], 67)),
+            ));
+        }
+        ub
+    }
+
+    #[test]
+    fn verify_passes_for_fig2() {
+        let ub = brighten_buffer();
+        ub.verify(1).unwrap();
+        assert_eq!(ub.port_count(), 5);
+    }
+
+    #[test]
+    fn verify_catches_too_early_read() {
+        let mut ub = brighten_buffer();
+        // Shift reads 80 cycles earlier: now reads precede writes.
+        for p in &mut ub.outputs {
+            p.schedule = p.schedule.delayed(-80);
+        }
+        assert!(ub.verify(1).is_err());
+    }
+
+    #[test]
+    fn verify_catches_out_of_box() {
+        let mut ub = brighten_buffer();
+        ub.data_box = BoxSet::from_extents(&[64, 64]); // too small for halo
+        assert!(ub.verify(1).is_err());
+    }
+
+    #[test]
+    fn max_live_is_one_line_plus_window() {
+        let ub = brighten_buffer();
+        // A 2x2 stencil over 65-wide rows keeps ~one row + a bit live.
+        // Paper §V-C: "polyhedral analysis identifies that there are a
+        // maximum of 64 live pixels" for the delay-64 part; with the
+        // 2 extra shift-register values the full buffer holds ~66-67.
+        let live = ub.max_live().unwrap();
+        assert!(
+            (64..=70).contains(&live),
+            "expected about one row live, got {live}"
+        );
+    }
+
+    #[test]
+    fn dependence_distances_match_fig8a() {
+        let ub = brighten_buffer();
+        // Fig 8a: the four read ports' distances from the write port
+        // differ by the spatial offsets 0/1/65/66 (rows are 65 wide
+        // here). The port reading the *newest* value, (y+1, x+1), has the
+        // smallest distance; the (y, x) port the largest.
+        let d: Vec<i64> = ub
+            .outputs
+            .iter()
+            .map(|o| ub.dependence_distance(&ub.inputs[0], o).unwrap())
+            .collect();
+        assert_eq!(d[0] - d[1], 1);
+        assert_eq!(d[0] - d[2], 65);
+        assert_eq!(d[0] - d[3], 66);
+        assert!(d[3] >= 1, "tightest dependence must be causal");
+    }
+
+    #[test]
+    fn dependence_distance_none_for_transpose() {
+        // A transposed read has no constant cycle distance.
+        let mut ub = UnifiedBuffer::new("t", BoxSet::from_extents(&[8, 8]));
+        ub.add_input(Port::new(
+            "w",
+            PortDir::In,
+            BoxSet::from_extents(&[8, 8]),
+            AffineMap::identity(2),
+            CycleSchedule::row_major(&[8, 8], 1, 0),
+        ));
+        let transpose = AffineMap::new(2, vec![Affine::var(2, 1), Affine::var(2, 0)]);
+        ub.add_output(Port::new(
+            "r",
+            PortDir::Out,
+            BoxSet::from_extents(&[8, 8]),
+            transpose,
+            CycleSchedule::row_major(&[8, 8], 1, 64),
+        ));
+        assert_eq!(ub.dependence_distance(&ub.inputs[0], &ub.outputs[0]), None);
+        // But it still verifies (all reads after writes).
+        ub.verify(1).unwrap();
+    }
+
+    #[test]
+    fn max_live_full_buffer_when_sequential() {
+        // Sequential schedules (consumer starts after producer finishes)
+        // keep the whole 8x8 buffer live — the Table VII effect.
+        let mut ub = UnifiedBuffer::new("s", BoxSet::from_extents(&[8, 8]));
+        ub.add_input(Port::new(
+            "w",
+            PortDir::In,
+            BoxSet::from_extents(&[8, 8]),
+            AffineMap::identity(2),
+            CycleSchedule::row_major(&[8, 8], 1, 0),
+        ));
+        ub.add_output(Port::new(
+            "r",
+            PortDir::Out,
+            BoxSet::from_extents(&[8, 8]),
+            AffineMap::identity(2),
+            CycleSchedule::row_major(&[8, 8], 1, 64),
+        ));
+        assert_eq!(ub.max_live().unwrap(), 64);
+    }
+
+    #[test]
+    fn double_write_rejected() {
+        let mut ub = UnifiedBuffer::new("d", BoxSet::from_extents(&[4]));
+        for k in 0..2 {
+            ub.add_input(Port::new(
+                format!("w{k}"),
+                PortDir::In,
+                BoxSet::from_extents(&[4]),
+                AffineMap::identity(1),
+                CycleSchedule::row_major(&[4], 1, k * 10),
+            ));
+        }
+        assert!(ub.verify(0).is_err());
+        assert!(ub.max_live().is_err());
+    }
+}

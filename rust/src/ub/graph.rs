@@ -1,0 +1,193 @@
+//! The application graph: unified buffers wired to compute kernels.
+//!
+//! This is the output of buffer extraction (Fig 1, third stage): every
+//! materialized Halide buffer has become a [`UnifiedBuffer`], every stage
+//! instance a [`KernelNode`], and the tile boundary I/O is expressed as
+//! stream endpoints fed/drained by the global buffer (Fig 12).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::buffer::UnifiedBuffer;
+use crate::halide::Expr;
+use crate::poly::{BoxSet, CycleSchedule};
+
+/// One spatial compute kernel (a stage instance): reads from buffer
+/// output ports, computes, writes one buffer input port.
+#[derive(Clone, Debug)]
+pub struct KernelNode {
+    pub stage: String,
+    /// Unroll lane index within the stage.
+    pub lane: usize,
+    pub kernel: Expr,
+    /// `(buffer, output-port index)` feeding each load, in the order the
+    /// loads appear in `kernel`.
+    pub loads: Vec<(String, usize)>,
+    /// `(buffer, input-port index)` receiving the result.
+    pub store: (String, usize),
+    /// Full compute domain (pure x reduction dims).
+    pub domain: BoxSet,
+    /// Issue schedule over `domain`.
+    pub schedule: CycleSchedule,
+    /// Pipeline latency from operand arrival to result write.
+    pub latency: i64,
+    pub is_reduction: bool,
+}
+
+/// External stream endpoint: which buffer port the global buffer feeds
+/// (input images) or drains (the output).
+#[derive(Clone, Debug)]
+pub struct StreamEndpoint {
+    pub buffer: String,
+    pub port: usize,
+}
+
+/// The full extracted application.
+#[derive(Clone, Debug)]
+pub struct UbGraph {
+    pub name: String,
+    pub buffers: BTreeMap<String, UnifiedBuffer>,
+    pub kernels: Vec<KernelNode>,
+    pub input_streams: Vec<StreamEndpoint>,
+    /// One endpoint per output lane (unrolled outputs drain several
+    /// pixels per cycle).
+    pub output_streams: Vec<StreamEndpoint>,
+    /// Cycles to complete one tile (last output-stream event + 1).
+    pub completion: i64,
+    /// Coarse-grained initiation interval between successive tiles
+    /// (= `completion` when not double-buffered).
+    pub coarse_ii: i64,
+}
+
+impl UbGraph {
+    /// Verify every unified buffer's port specification (causality with
+    /// at least `min_latency` cycles write-to-read).
+    pub fn verify(&self, min_latency: i64) -> Result<()> {
+        for ub in self.buffers.values() {
+            ub.verify(min_latency)?;
+        }
+        Ok(())
+    }
+
+    /// Total storage requirement in words across all buffers after
+    /// storage minimization — the "SRAM Words" column of Table VII.
+    pub fn total_live_words(&self) -> Result<i64> {
+        let mut total = 0;
+        for ub in self.buffers.values() {
+            total += ub.max_live()?;
+        }
+        Ok(total)
+    }
+
+    /// Total ALU operation count across kernels — the PE estimate.
+    pub fn total_alu_ops(&self) -> usize {
+        self.kernels.iter().map(|k| k.kernel.op_count()).sum()
+    }
+
+    /// Output pixels produced per steady-state cycle (Table V column):
+    /// output-writing kernel instances divided by their issue II.
+    pub fn output_pixels_per_cycle(&self) -> f64 {
+        let out_buf = &self.output_streams[0].buffer;
+        let writers: Vec<&KernelNode> =
+            self.kernels.iter().filter(|k| k.store.0 == *out_buf).collect();
+        if writers.is_empty() {
+            return 0.0;
+        }
+        // II of a row-major schedule = innermost coefficient.
+        let ii = writers[0]
+            .schedule
+            .expr
+            .coeffs
+            .last()
+            .copied()
+            .unwrap_or(1)
+            .max(1);
+        writers.len() as f64 / ii as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::poly::{Affine, AffineMap};
+    use crate::ub::port::{Port, PortDir};
+
+    fn tiny_graph() -> UbGraph {
+        // input --(brighten kernel)--> bbuf --(blur kernel)--> out
+        let mut input = UnifiedBuffer::new("input", BoxSet::from_extents(&[4, 4]));
+        input.add_input(Port::new(
+            "w",
+            PortDir::In,
+            BoxSet::from_extents(&[4, 4]),
+            AffineMap::identity(2),
+            CycleSchedule::row_major(&[4, 4], 1, 0),
+        ));
+        input.add_output(Port::new(
+            "r",
+            PortDir::Out,
+            BoxSet::from_extents(&[4, 4]),
+            AffineMap::identity(2),
+            CycleSchedule::row_major(&[4, 4], 1, 1),
+        ));
+        let mut out = UnifiedBuffer::new("out", BoxSet::from_extents(&[4, 4]));
+        out.add_input(Port::new(
+            "w",
+            PortDir::In,
+            BoxSet::from_extents(&[4, 4]),
+            AffineMap::identity(2),
+            CycleSchedule::row_major(&[4, 4], 1, 3),
+        ));
+        out.add_output(Port::new(
+            "r",
+            PortDir::Out,
+            BoxSet::from_extents(&[4, 4]),
+            AffineMap::identity(2),
+            CycleSchedule::row_major(&[4, 4], 1, 4),
+        ));
+        let kern = KernelNode {
+            stage: "bright".into(),
+            lane: 0,
+            kernel: Expr::mul(Expr::c(2), Expr::ld("input", vec![Expr::v("y"), Expr::v("x")])),
+            loads: vec![("input".into(), 0)],
+            store: ("out".into(), 0),
+            domain: BoxSet::from_extents(&[4, 4]),
+            schedule: CycleSchedule::row_major(&[4, 4], 1, 1),
+            latency: 2,
+            is_reduction: false,
+        };
+        let mut buffers = BTreeMap::new();
+        buffers.insert("input".to_string(), input);
+        buffers.insert("out".to_string(), out);
+        UbGraph {
+            name: "tiny".into(),
+            buffers,
+            kernels: vec![kern],
+            input_streams: vec![StreamEndpoint { buffer: "input".into(), port: 0 }],
+            output_streams: vec![StreamEndpoint { buffer: "out".into(), port: 0 }],
+            completion: 20,
+            coarse_ii: 20,
+        }
+    }
+
+    #[test]
+    fn graph_verifies() {
+        tiny_graph().verify(1).unwrap();
+    }
+
+    #[test]
+    fn totals() {
+        let g = tiny_graph();
+        assert_eq!(g.total_alu_ops(), 1);
+        assert!(g.total_live_words().unwrap() >= 2);
+        assert!((g.output_pixels_per_cycle() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pixels_per_cycle_with_ii2() {
+        let mut g = tiny_graph();
+        let k = &mut g.kernels[0];
+        k.schedule = CycleSchedule::new(Affine::new(vec![8, 2], 1));
+        assert!((g.output_pixels_per_cycle() - 0.5).abs() < 1e-9);
+    }
+}

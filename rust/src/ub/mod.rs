@@ -1,0 +1,22 @@
+//! The unified buffer abstraction (§III).
+//!
+//! A unified buffer is a push memory described *only* by its ports. Each
+//! port carries three pieces of polyhedral information:
+//!
+//! 1. the **iteration domain** of the operations using the port,
+//! 2. the **access map** from iteration points to buffer coordinates,
+//! 3. the cycle-accurate **schedule** mapping iteration points to the
+//!    cycle (after reset) when the operation occurs.
+//!
+//! Physical capacity and data placement are deliberately *not* part of
+//! the abstraction — they are derived by buffer mapping (§V-C), which
+//! gives the hardware side freedom to implement the interface with shift
+//! registers, banked wide-fetch SRAMs, or chains thereof.
+
+pub mod buffer;
+pub mod graph;
+pub mod port;
+
+pub use buffer::UnifiedBuffer;
+pub use graph::{KernelNode, StreamEndpoint, UbGraph};
+pub use port::{Port, PortDir};

@@ -1,0 +1,144 @@
+//! Unified buffer ports.
+
+use std::fmt;
+
+use crate::poly::{AffineMap, BoxSet, CycleSchedule};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PortDir {
+    /// Data flows *into* the buffer (a producer writes here).
+    In,
+    /// Data is *pushed out* of the buffer to a consumer.
+    Out,
+}
+
+/// One port of a unified buffer: the polyhedral triple from Fig 2.
+#[derive(Clone, Debug)]
+pub struct Port {
+    pub name: String,
+    pub dir: PortDir,
+    /// Iteration domain of the operations using this port.
+    pub domain: BoxSet,
+    /// Access map: iteration point -> buffer coordinates.
+    pub access: AffineMap,
+    /// Cycle-accurate schedule: iteration point -> cycles after reset.
+    pub schedule: CycleSchedule,
+}
+
+impl Port {
+    pub fn new(
+        name: impl Into<String>,
+        dir: PortDir,
+        domain: BoxSet,
+        access: AffineMap,
+        schedule: CycleSchedule,
+    ) -> Self {
+        let p = Port { name: name.into(), dir, domain, access, schedule };
+        assert_eq!(p.access.in_rank, p.domain.rank(), "access rank mismatch on {}", p.name);
+        assert_eq!(p.schedule.rank(), p.domain.rank(), "schedule rank mismatch on {}", p.name);
+        p
+    }
+
+    /// Number of operations this port performs.
+    pub fn op_count(&self) -> i64 {
+        self.domain.cardinality()
+    }
+
+    /// First and last cycle the port is active (inclusive).
+    pub fn active_span(&self) -> (i64, i64) {
+        self.schedule.span(&self.domain)
+    }
+
+    /// A port must not issue two operations in the same cycle.
+    pub fn schedule_is_valid(&self) -> bool {
+        self.schedule.is_injective_on(&self.domain)
+    }
+
+    /// Visit `(cycle, coordinates)` events in iteration order without
+    /// allocating per event (schedules are monotone on row-major
+    /// domains, so iteration order is schedule order for all ports the
+    /// compiler builds).
+    pub fn visit_events(&self, mut f: impl FnMut(i64, &[i64])) {
+        let mut coords: Vec<i64> = vec![0; self.access.out_rank()];
+        self.domain.for_each_point(|p| {
+            for (c, o) in coords.iter_mut().zip(&self.access.outputs) {
+                *c = o.eval(p);
+            }
+            f(self.schedule.cycle(p), &coords);
+        });
+    }
+
+    /// Enumerate `(cycle, buffer coordinates)` events, in schedule order.
+    pub fn events(&self) -> Vec<(i64, Vec<i64>)> {
+        let mut ev: Vec<(i64, Vec<i64>)> = self
+            .domain
+            .points()
+            .map(|p| (self.schedule.cycle(&p), self.access.apply(&p)))
+            .collect();
+        ev.sort_by_key(|(t, _)| *t);
+        ev
+    }
+}
+
+impl fmt::Display for Port {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} {:?}: dom {} access {} sched {}",
+            self.name, self.dir, self.domain, self.access, self.schedule
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::poly::Affine;
+
+    /// The paper's Fig 2 input port: 64x64 domain, identity access,
+    /// schedule 64y + x.
+    fn fig2_input() -> Port {
+        Port::new(
+            "in0",
+            PortDir::In,
+            BoxSet::from_extents(&[64, 64]),
+            AffineMap::identity(2),
+            CycleSchedule::row_major(&[64, 64], 1, 0),
+        )
+    }
+
+    #[test]
+    fn op_count_and_span() {
+        let p = fig2_input();
+        assert_eq!(p.op_count(), 4096);
+        assert_eq!(p.active_span(), (0, 4095));
+        assert!(p.schedule_is_valid());
+    }
+
+    #[test]
+    fn events_sorted_by_cycle() {
+        let p = fig2_input();
+        let ev = p.events();
+        assert_eq!(ev[0], (0, vec![0, 0]));
+        assert_eq!(ev[1], (1, vec![0, 1]));
+        assert_eq!(ev[64], (64, vec![1, 0]));
+        assert!(ev.windows(2).all(|w| w[0].0 <= w[1].0));
+    }
+
+    #[test]
+    fn output_port_with_offset_access() {
+        // Fig 2 output port 2: access (x+1, y), first emit at cycle 65.
+        let p = Port::new(
+            "out1",
+            PortDir::Out,
+            BoxSet::from_extents(&[64, 64]),
+            AffineMap::new(
+                2,
+                vec![Affine::var(2, 0), Affine::new(vec![0, 1], 1)],
+            ),
+            CycleSchedule::row_major(&[64, 64], 1, 65),
+        );
+        assert_eq!(p.active_span().0, 65);
+        assert_eq!(p.events()[0], (65, vec![0, 1]));
+    }
+}

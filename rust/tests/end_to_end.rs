@@ -1,0 +1,98 @@
+//! Integration tests: every registered application through the whole
+//! compiler — lower, schedule, extract, map, place & route, simulate —
+//! validated bit-exactly against the functional reference, and (when
+//! artifacts exist) against the AOT-compiled XLA golden models.
+
+use std::collections::BTreeMap;
+
+use pushmem::apps;
+use pushmem::cgra::{bitstream, simulate};
+use pushmem::coordinator::{compile, gen_inputs, sequential_comparison, validate};
+use pushmem::runtime::Runtime;
+
+fn artifact(name: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts")
+        .join(format!("{name}.hlo.txt"))
+}
+
+#[test]
+fn all_small_apps_bit_exact() {
+    for p in apps::all_small() {
+        let c = compile(&p).unwrap_or_else(|e| panic!("{}: {e:#}", p.name));
+        let inputs = gen_inputs(&c.lp);
+        let golden = c.lp.execute(&inputs).unwrap();
+        let res = simulate(&c.design, &c.graph, &inputs)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", p.name));
+        let out = &golden[&c.lp.output];
+        for pt in out.shape.points() {
+            assert_eq!(res.output.get(&pt), out.get(&pt), "{}: at {pt:?}", p.name);
+        }
+    }
+}
+
+#[test]
+fn all_harris_schedules_compile() {
+    for name in ["harris_sch1", "harris_sch2", "harris", "harris_sch4", "harris_sch5", "harris_sch6"] {
+        let (p, _) = apps::by_name(name).unwrap();
+        let c = compile(&p).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert!(c.design.pe_count() > 0, "{name}");
+        let bs = bitstream::assemble(&c.design);
+        assert!(!bs.is_empty(), "{name}");
+    }
+}
+
+#[test]
+fn paper_scale_apps_validate_against_xla() {
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(_) => return,
+    };
+    let mut validated = 0;
+    for name in ["gaussian", "unsharp", "upsample", "mobilenet"] {
+        let (p, art) = apps::by_name(name).unwrap();
+        let path = artifact(art);
+        if !path.exists() {
+            eprintln!("skipping {name}: run `make artifacts`");
+            continue;
+        }
+        let c = compile(&p).unwrap();
+        let v = validate(&c, &path, &rt).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert!(v.matched, "{name}: CGRA vs XLA mismatch");
+        validated += 1;
+    }
+    assert!(validated > 0 || !artifact("gaussian").exists());
+}
+
+#[test]
+fn table6_shape_speedups() {
+    // Stencil apps see large pipelining speedups; the DNN layer a
+    // modest one (Table VI's shape).
+    let mut by_name = BTreeMap::new();
+    for p in [
+        apps::gaussian::build(30),
+        apps::harris::build(24, apps::harris::Schedule::NoRecompute),
+        apps::resnet::build(apps::resnet::Size::small()),
+    ] {
+        let s = sequential_comparison(&p).unwrap();
+        by_name.insert(p.name.clone(), s);
+    }
+    let g = &by_name["gaussian"];
+    let h = &by_name["harris_norecompute"];
+    let r = &by_name["resnet"];
+    assert!(g.speedup > 3.0, "gaussian {}", g.speedup);
+    assert!(h.speedup > g.speedup, "harris should beat gaussian");
+    assert!(r.speedup < g.speedup, "resnet pipelines less than stencils");
+    // Table VII shape.
+    assert!(g.memory_reduction > 5.0);
+    assert!(r.memory_reduction < 2.0);
+}
+
+#[test]
+fn camera_is_the_largest_stencil() {
+    let (camera, _) = apps::by_name("camera").unwrap();
+    let (gaussian, _) = apps::by_name("gaussian").unwrap();
+    let cc = compile(&camera).unwrap();
+    let cg = compile(&gaussian).unwrap();
+    assert!(cc.design.pe_count() > 8 * cg.design.pe_count());
+}

@@ -1,0 +1,253 @@
+//! Property-based tests (hand-rolled xorshift generator — proptest is
+//! not vendored in this offline image). Each property runs against many
+//! pseudo-random cases with the failing seed printed on panic.
+//!
+//! The headline property is `random_stencil_pipelines_bit_exact`: the
+//! whole compiler (scheduling, SR extraction, banking, linearization,
+//! vectorization, PE mapping) against randomly-generated stencil
+//! programs, checked cycle-accurately against the functional reference.
+
+use std::collections::BTreeMap;
+
+use pushmem::cgra::simulate;
+use pushmem::coordinator::{compile, gen_inputs};
+use pushmem::halide::{Expr, Func, HwSchedule, InputDecl, Program};
+use pushmem::hw::affine_fn::{AffineConfig, AffineHw, DeltaImpl, IncrImpl, MultImpl};
+use pushmem::hw::IterationDomain;
+use pushmem::poly::set::{BoxSet, Dim};
+use pushmem::poly::{fit_affine, Affine, AffineMap, CycleSchedule};
+use pushmem::ub::{Port, PortDir, UnifiedBuffer};
+
+/// xorshift64* PRNG: deterministic, seed printed on failure.
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Rng {
+        Rng(seed.max(1))
+    }
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+    fn range(&mut self, lo: i64, hi: i64) -> i64 {
+        lo + (self.next() % (hi - lo + 1) as u64) as i64
+    }
+}
+
+#[test]
+fn random_stencil_pipelines_bit_exact() {
+    for seed in 1..=25u64 {
+        let mut rng = Rng::new(seed * 7919);
+        let stages = rng.range(1, 3);
+        let tile = rng.range(8, 18);
+        let mut funcs: Vec<Func> = Vec::new();
+        let mut prev = "input".to_string();
+        let mut schedule = HwSchedule::new([tile, tile]);
+        for s in 0..stages {
+            let name = format!("f{s}");
+            // Random taps: 2-5 offsets in a 3x3 window, random weights.
+            let n_taps = rng.range(2, 5);
+            let mut terms = Vec::new();
+            for _ in 0..n_taps {
+                let (dy, dx) = (rng.range(0, 2), rng.range(0, 2));
+                let w = rng.range(-3, 3).max(1);
+                terms.push(Expr::mul(
+                    Expr::c(w as i32),
+                    Expr::ld(
+                        prev.clone(),
+                        vec![
+                            Expr::add(Expr::v("y"), Expr::c(dy as i32)),
+                            Expr::add(Expr::v("x"), Expr::c(dx as i32)),
+                        ],
+                    ),
+                ));
+            }
+            funcs.push(Func::pure_fn(&name, &["y", "x"], Expr::sum(terms)));
+            // Randomly buffer or recompute intermediate stages.
+            if s + 1 < stages && rng.range(0, 1) == 1 {
+                schedule = schedule.store_at(&name);
+            }
+            prev = name;
+        }
+        let program = Program {
+            name: format!("prop{seed}"),
+            inputs: vec![InputDecl { name: "input".into(), rank: 2 }],
+            funcs,
+            schedule,
+        };
+        let c = compile(&program).unwrap_or_else(|e| panic!("seed {seed}: compile: {e:#}"));
+        let inputs = gen_inputs(&c.lp);
+        let golden = c.lp.execute(&inputs).unwrap();
+        let res = simulate(&c.design, &c.graph, &inputs)
+            .unwrap_or_else(|e| panic!("seed {seed}: simulate: {e:#}"));
+        let out = &golden[&c.lp.output];
+        for pt in out.shape.points() {
+            assert_eq!(
+                res.output.get(&pt),
+                out.get(&pt),
+                "seed {seed}: mismatch at {pt:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn affine_hw_impls_agree_on_random_functions() {
+    for seed in 1..=100u64 {
+        let mut rng = Rng::new(seed);
+        let rank = rng.range(1, 4) as usize;
+        let extents: Vec<i64> = (0..rank).map(|_| rng.range(1, 6)).collect();
+        let coeffs: Vec<i64> = (0..rank).map(|_| rng.range(-20, 20)).collect();
+        let offset = rng.range(-50, 50);
+        let a = Affine::new(coeffs, offset);
+        let cfg = AffineConfig::from_affine(&a);
+        let mut m = MultImpl::new(cfg.clone());
+        let mut i = IncrImpl::new(cfg.clone());
+        let mut d = DeltaImpl::new(&cfg, &extents);
+        let mut id = IterationDomain::new(extents.clone());
+        loop {
+            let pt = id.point().to_vec();
+            let expect = a.eval(&pt);
+            assert_eq!(m.value(), expect, "seed {seed} mult at {pt:?}");
+            assert_eq!(i.value(), expect, "seed {seed} incr at {pt:?}");
+            assert_eq!(d.value(), expect, "seed {seed} delta at {pt:?}");
+            match id.step() {
+                Some((inc, clr)) => {
+                    m.step(&inc, &clr);
+                    i.step(&inc, &clr);
+                    d.step(&inc, &clr);
+                }
+                None => break,
+            }
+        }
+    }
+}
+
+#[test]
+fn fit_affine_recovers_random_affine() {
+    for seed in 1..=100u64 {
+        let mut rng = Rng::new(seed * 31);
+        let rank = rng.range(1, 3) as usize;
+        let dims: Vec<Dim> = (0..rank)
+            .map(|k| Dim::new(format!("d{k}"), rng.range(-3, 3), rng.range(1, 7)))
+            .collect();
+        let dom = BoxSet::new(dims);
+        let a = Affine::new(
+            (0..rank).map(|_| rng.range(-9, 9)).collect(),
+            rng.range(-100, 100),
+        );
+        let got = fit_affine(&dom, &mut |p| Some(a.eval(p))).expect("fit failed");
+        for p in dom.points() {
+            assert_eq!(got.eval(&p), a.eval(&p), "seed {seed}");
+        }
+        // And a non-affine function is rejected (if the domain can
+        // expose the nonlinearity).
+        if dom.cardinality() > 3 && rank >= 1 && dom.dims[0].extent >= 3 {
+            let r = fit_affine(&dom, &mut |p| Some(p[0] * p[0]));
+            assert!(r.is_none(), "seed {seed}: quadratic fitted as affine");
+        }
+    }
+}
+
+#[test]
+fn schedules_row_major_injective_and_monotone() {
+    for seed in 1..=50u64 {
+        let mut rng = Rng::new(seed * 101);
+        let rank = rng.range(1, 3) as usize;
+        let extents: Vec<i64> = (0..rank).map(|_| rng.range(1, 8)).collect();
+        let dom = BoxSet::from_extents(&extents);
+        let ii = rng.range(1, 4);
+        let s = CycleSchedule::row_major(&extents, ii, rng.range(0, 100));
+        assert!(s.is_injective_on(&dom), "seed {seed}");
+        assert!(s.is_monotone_on(&dom), "seed {seed}");
+        // Span length bounds the number of issues.
+        let (lo, hi) = s.span(&dom);
+        assert!(hi - lo + 1 >= dom.cardinality(), "seed {seed}");
+    }
+}
+
+#[test]
+fn circular_layouts_are_collision_free() {
+    use pushmem::mapping::linearize::choose_capacity;
+    for seed in 1..=40u64 {
+        let mut rng = Rng::new(seed * 1237);
+        let h = rng.range(4, 10);
+        let w = rng.range(4, 10);
+        let delay = rng.range(3, (h * w / 2).max(4));
+        let mut ub = UnifiedBuffer::new("p", BoxSet::from_extents(&[h, w]));
+        ub.add_input(Port::new(
+            "w",
+            PortDir::In,
+            BoxSet::from_extents(&[h, w]),
+            AffineMap::identity(2),
+            CycleSchedule::row_major(&[h, w], 1, 0),
+        ));
+        ub.add_output(Port::new(
+            "r",
+            PortDir::Out,
+            BoxSet::from_extents(&[h, w]),
+            AffineMap::identity(2),
+            CycleSchedule::row_major(&[h, w], 1, delay),
+        ));
+        let layout = choose_capacity(&ub, 4).unwrap();
+        // Independent re-verification: for every pair of values that
+        // alias mod capacity, their live ranges must not overlap.
+        let mut cells: BTreeMap<i64, Vec<(i64, i64)>> = BTreeMap::new(); // addr -> [(w, last r)]
+        for p in BoxSet::from_extents(&[h, w]).points() {
+            let wt = CycleSchedule::row_major(&[h, w], 1, 0).cycle(&p);
+            let rt = wt + delay;
+            cells.entry(layout.address(&p)).or_default().push((wt, rt));
+        }
+        for (addr, mut v) in cells {
+            v.sort();
+            for pair in v.windows(2) {
+                assert!(
+                    pair[1].0 > pair[0].1,
+                    "seed {seed}: collision at addr {addr}: {pair:?} (cap {})",
+                    layout.capacity
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn banking_covers_every_port_once() {
+    use pushmem::mapping::banking::assign;
+    for seed in 1..=50u64 {
+        let mut rng = Rng::new(seed * 733);
+        let n_in = rng.range(1, 3) as usize;
+        let n_out = rng.range(0, 9) as usize;
+        let ports: Vec<usize> = (0..n_out).collect();
+        let banks = assign(n_in, &ports, 4).unwrap();
+        let mut seen: Vec<usize> = banks.iter().flatten().copied().collect();
+        seen.sort();
+        assert_eq!(seen, ports, "seed {seed}: ports lost or duplicated");
+        for b in &banks {
+            assert!(n_in + b.len() <= 4, "seed {seed}: bank over budget");
+        }
+    }
+}
+
+#[test]
+fn tensor_roundtrip_random_boxes() {
+    for seed in 1..=50u64 {
+        let mut rng = Rng::new(seed * 31337);
+        let rank = rng.range(1, 4) as usize;
+        let dims: Vec<Dim> = (0..rank)
+            .map(|k| Dim::new(format!("d{k}"), rng.range(-4, 4), rng.range(1, 6)))
+            .collect();
+        let b = BoxSet::new(dims);
+        let t = pushmem::tensor::Tensor::from_fn(b.clone(), |p| {
+            p.iter().fold(7i64, |a, &v| a * 31 + v) as i32
+        });
+        for p in b.points() {
+            let expect = p.iter().fold(7i64, |a, &v| a * 31 + v) as i32;
+            assert_eq!(t.get(&p), expect, "seed {seed} at {p:?}");
+        }
+    }
+}
