@@ -1,0 +1,15 @@
+# `make artifacts` AOT-lowers the JAX golden models to HLO text (the
+# validation oracle + CPU baseline — python is never on the rust
+# request path; see DESIGN.md §1). `make verify` is the tier-1 check.
+
+.PHONY: artifacts verify clean
+
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+verify:
+	cargo build --release && cargo test -q
+
+clean:
+	cargo clean
+	rm -rf artifacts

@@ -1,94 +1,151 @@
-//! End-to-end serving driver (the Fig 12 deployment shape): start the
-//! tile server on the compiled gaussian accelerator, stream a batch of
-//! real image tiles over TCP from a client thread, validate every
-//! response against the XLA golden model, and report
-//! latency/throughput.
+//! End-to-end multi-app serving driver (the Fig 12 deployment shape,
+//! scaled out): start the tile server with a lazy [`CompiledRegistry`]
+//! on an ephemeral port, stream batches of image tiles for TWO
+//! different apps from concurrent client threads over one endpoint
+//! (v2 frames; docs/protocol.md), validate every response bit-exactly
+//! against the local simulator — and against the XLA golden model
+//! when artifacts exist — and report latency/throughput per app.
 //!
 //! Run: `make artifacts && cargo run --release --example serve_images`
 
 use std::net::TcpStream;
+use std::sync::Arc;
 use std::time::Instant;
 
 use pushmem::apps;
-use pushmem::coordinator::{compile, serve};
-use pushmem::poly::BoxSet;
+use pushmem::cgra::simulate;
+use pushmem::coordinator::{serve, CompiledRegistry};
 use pushmem::runtime::Runtime;
 use pushmem::tensor::Tensor;
 
-const TILES: usize = 24;
+const APPS: [&str; 2] = ["gaussian", "unsharp"];
+const TILES: usize = 16;
 
 fn main() -> anyhow::Result<()> {
-    let (program, artifact) = apps::by_name("gaussian").unwrap();
-    let c = compile(&program)?;
-    let completion = c.graph.completion;
-
-    // Server on an ephemeral port, one thread per connection.
+    // Multi-app server on an ephemeral port: bounded worker pool, lazy
+    // compile cache shared with the client threads below.
+    let registry = Arc::new(CompiledRegistry::new());
     let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
-    let compiled = std::sync::Arc::new(c);
     {
-        let compiled = std::sync::Arc::clone(&compiled);
-        std::thread::spawn(move || {
-            for stream in listener.incoming().flatten() {
-                let c = std::sync::Arc::clone(&compiled);
-                let mut s = stream;
-                std::thread::spawn(move || {
-                    let _ = serve::handle_connection(&c, &mut s);
-                });
-            }
-        });
+        let registry = Arc::clone(&registry);
+        std::thread::spawn(move || serve::serve_on(listener, serve::ServeConfig::multi(registry, 4)));
     }
 
-    // Golden model for response validation (CPU baseline too).
-    let golden = Runtime::cpu().ok().and_then(|rt| {
-        let p = std::path::Path::new("artifacts").join(format!("{artifact}.hlo.txt"));
-        p.exists().then(|| (rt, p))
-    });
-    let golden = match golden {
-        Some((rt, p)) => Some(rt.load(&p)?),
-        None => {
-            eprintln!("note: run `make artifacts` for XLA validation; using reference only");
-            None
+    let t_all = Instant::now();
+    let mut reports = Vec::new();
+    std::thread::scope(|s| -> anyhow::Result<()> {
+        let mut handles = Vec::new();
+        for app in APPS {
+            let registry = Arc::clone(&registry);
+            handles.push(s.spawn(move || run_client(app, addr, &registry)));
         }
-    };
+        for h in handles {
+            reports.push(h.join().expect("client thread panicked")?);
+        }
+        Ok(())
+    })?;
+    let wall = t_all.elapsed().as_secs_f64();
 
-    // Client: stream TILES distinct 64x64 tiles.
+    println!("\n== serving report ({} apps over one endpoint) ==", APPS.len());
+    for r in &reports {
+        println!(
+            "{:<10} {} tiles, {} validated vs XLA, p50 {:.2} ms, p99 {:.2} ms, {:.3} ms/tile @ 900 MHz ({} cycles)",
+            r.app,
+            r.tiles,
+            r.validated_xla,
+            r.p50 * 1e3,
+            r.p99 * 1e3,
+            r.completion as f64 / 900.0e6 * 1e3,
+            r.completion,
+        );
+    }
+    let total: usize = reports.iter().map(|r| r.tiles).sum();
+    println!("aggregate           {:.1} tiles/s ({total} tiles in {:.2} s)", total as f64 / wall, wall);
+    Ok(())
+}
+
+struct ClientReport {
+    app: &'static str,
+    tiles: usize,
+    validated_xla: usize,
+    p50: f64,
+    p99: f64,
+    completion: i64,
+}
+
+fn run_client(
+    app: &'static str,
+    addr: std::net::SocketAddr,
+    registry: &CompiledRegistry,
+) -> anyhow::Result<ClientReport> {
+    // The registry is shared with the server: fetching here warms the
+    // design once, and gives this client the input boxes + a local
+    // simulator to validate every response against (the same path
+    // `pushmem run` takes).
+    let c = registry.get(app)?;
+    let (_, artifact) = apps::by_name(app).unwrap();
+
+    // XLA golden model when artifacts are present. No runtime (the
+    // offline stub) degrades to simulator-only validation, but a
+    // present-yet-unloadable artifact is a real failure and propagates.
+    let golden = match Runtime::cpu() {
+        Ok(rt) => {
+            let p = std::path::Path::new("artifacts").join(format!("{artifact}.hlo.txt"));
+            if p.exists() { Some(rt.load(&p)?) } else { None }
+        }
+        Err(_) => None,
+    };
+    if golden.is_none() {
+        eprintln!("note: {app}: run `make artifacts` for XLA validation; simulator check only");
+    }
+
     let mut stream = TcpStream::connect(addr)?;
     let mut latencies = Vec::new();
-    let t0 = Instant::now();
     let mut validated = 0usize;
     for k in 0..TILES {
-        let tile = Tensor::from_fn(BoxSet::from_extents(&[64, 64]), |p| {
-            ((p[0] * 31 + p[1] * 7 + k as i64 * 131) % 251) as i32
-        });
+        // One distinct pseudo-image per tile, per declared input box.
+        let tiles: Vec<Tensor> = c
+            .lp
+            .inputs
+            .iter()
+            .map(|name| {
+                Tensor::from_fn(c.lp.buffers[name].clone(), |p| {
+                    let mut h = k as i64 * 131 + 7;
+                    for &v in p {
+                        h = h.wrapping_mul(31).wrapping_add(v);
+                    }
+                    (h.rem_euclid(251)) as i32
+                })
+            })
+            .collect();
+        let refs: Vec<&Tensor> = tiles.iter().collect();
+
         let t1 = Instant::now();
-        let (words, cycles, sim_us) = serve::request(&mut stream, &[&tile])?;
+        let (words, cycles, _sim_us) = serve::request_app(&mut stream, app, &refs)?;
         latencies.push(t1.elapsed().as_secs_f64());
-        assert_eq!(cycles as i64, completion);
+
+        assert_eq!(cycles as i64, c.graph.completion);
+        let mut inputs = std::collections::BTreeMap::new();
+        for (name, t) in c.lp.inputs.iter().zip(&tiles) {
+            inputs.insert(name.clone(), t.clone());
+        }
+        let expect = simulate(&c.design, &c.graph, &inputs)?.output.data;
+        assert_eq!(words, expect, "{app} tile {k}: server output != local simulation");
         if let Some(m) = &golden {
-            let (expect, _) = m.run(&[&tile])?;
-            assert_eq!(words, expect, "tile {k}: server output != XLA golden");
+            let (xla, _) = m.run(&refs)?;
+            assert_eq!(words, xla, "{app} tile {k}: server output != XLA golden");
             validated += 1;
         }
-        if k == 0 {
-            println!("first tile: {} output words, {} cycles, sim {} µs", words.len(), cycles, sim_us);
-        }
     }
-    let wall = t0.elapsed().as_secs_f64();
 
     latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let p50 = latencies[latencies.len() / 2];
-    let p99 = latencies[(latencies.len() * 99 / 100).min(latencies.len() - 1)];
-    println!("\n== serving report ==");
-    println!("tiles served        {TILES}");
-    println!("validated vs XLA    {validated}");
-    println!("throughput          {:.1} tiles/s", TILES as f64 / wall);
-    println!("latency p50         {:.2} ms", p50 * 1e3);
-    println!("latency p99         {:.2} ms", p99 * 1e3);
-    println!(
-        "accelerator time    {:.3} ms/tile @ 900 MHz ({} cycles)",
-        completion as f64 / 900.0e6 * 1e3,
-        completion
-    );
-    Ok(())
+    Ok(ClientReport {
+        app,
+        tiles: TILES,
+        validated_xla: validated,
+        p50: latencies[latencies.len() / 2],
+        p99: latencies[(latencies.len() * 99 / 100).min(latencies.len() - 1)],
+        completion: c.graph.completion,
+    })
 }

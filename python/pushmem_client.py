@@ -1,0 +1,157 @@
+"""Dependency-free TCP client for the pushmem tile server.
+
+Speaks both request generations of the framed protocol specified in
+docs/protocol.md (constants mirrored from
+rust/src/coordinator/protocol.rs):
+
+* v1 — implicit app, for ``pushmem serve <app>`` endpoints
+* v2 — named app, for ``pushmem serve-all`` endpoints
+
+Only the standard library (socket + struct) is used, so this module
+imports cleanly without jax/numpy — it is the deploy-side counterpart
+of the build-time golden-model code under python/compile/.
+
+Usage::
+
+    from pushmem_client import PushmemClient
+    with PushmemClient(port=7411) as c:
+        words, cycles, micros = c.request([tile_words], app="gaussian")
+"""
+
+from __future__ import annotations
+
+import socket
+import struct
+
+MAGIC = 0x50554222
+VERSION2 = 0xFFFF0002
+
+STATUS_OK = 0
+STATUS_UNKNOWN_APP = 1
+STATUS_BAD_REQUEST = 2
+STATUS_INTERNAL = 3
+
+MAX_INPUTS = 64
+MAX_APP_NAME = 64
+MAX_WORDS = 1 << 24
+MAX_FRAME_WORDS = 1 << 24  # aggregate across all inputs in one frame
+
+_STATUS_NAMES = {
+    STATUS_OK: "ok",
+    STATUS_UNKNOWN_APP: "unknown app",
+    STATUS_BAD_REQUEST: "bad request",
+    STATUS_INTERNAL: "internal server error",
+}
+
+
+class ProtocolError(Exception):
+    """A malformed or unexpected frame."""
+
+
+class ServerError(Exception):
+    """The server answered with a non-OK status frame."""
+
+    def __init__(self, status: int):
+        self.status = status
+        name = _STATUS_NAMES.get(status, "unknown status")
+        super().__init__(f"server error status {status} ({name})")
+
+
+def _pack_inputs(inputs) -> bytes:
+    if len(inputs) > MAX_INPUTS:
+        raise ProtocolError(f"{len(inputs)} inputs exceeds protocol cap {MAX_INPUTS}")
+    total = 0
+    parts = [struct.pack("<I", len(inputs))]
+    for words in inputs:
+        if len(words) > MAX_WORDS:
+            raise ProtocolError(f"{len(words)} words exceeds protocol cap {MAX_WORDS}")
+        total += len(words)
+        if total > MAX_FRAME_WORDS:
+            raise ProtocolError(f"{total} total words exceeds frame cap {MAX_FRAME_WORDS}")
+        parts.append(struct.pack(f"<I{len(words)}i", len(words), *words))
+    return b"".join(parts)
+
+
+def encode_request_v1(inputs) -> bytes:
+    """``magic | n_inputs | (word_count | words)*`` — implicit app."""
+    return struct.pack("<I", MAGIC) + _pack_inputs(inputs)
+
+
+def encode_request_v2(app: str, inputs) -> bytes:
+    """``magic | VERSION2 | name_len | name | n_inputs | (word_count | words)*``."""
+    name = app.encode("utf-8")
+    if len(name) > MAX_APP_NAME:
+        raise ProtocolError(f"app name {len(name)} bytes exceeds cap {MAX_APP_NAME}")
+    return (
+        struct.pack("<III", MAGIC, VERSION2, len(name))
+        + name
+        + _pack_inputs(inputs)
+    )
+
+
+def decode_response(buf: bytes):
+    """Decode one response frame from the front of ``buf``.
+
+    Returns ``(status, words, cycles, micros, consumed)``. Raises
+    ``ProtocolError`` on bad magic or an oversized word count, and
+    ``struct.error`` on a truncated buffer (socket reads should use
+    ``PushmemClient`` which sizes its reads from the header).
+    """
+    magic, status, word_count = struct.unpack_from("<III", buf, 0)
+    if magic != MAGIC:
+        raise ProtocolError(f"bad magic {magic:#010x}")
+    if word_count > MAX_WORDS:
+        raise ProtocolError(f"response word count {word_count} exceeds cap {MAX_WORDS}")
+    words = list(struct.unpack_from(f"<{word_count}i", buf, 12))
+    cycles, micros = struct.unpack_from("<QQ", buf, 12 + 4 * word_count)
+    return status, words, cycles, micros, 28 + 4 * word_count
+
+
+class PushmemClient:
+    """One TCP connection to a pushmem tile server; any number of
+    sequential requests, v1 and v2 freely interleaved."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 7411, timeout: float | None = 30.0):
+        self.sock = socket.create_connection((host, port), timeout=timeout)
+
+    def _recv_exact(self, n: int) -> bytes:
+        chunks = []
+        remaining = n
+        while remaining:
+            chunk = self.sock.recv(remaining)
+            if not chunk:
+                raise ProtocolError(f"server closed mid-frame ({remaining} of {n} bytes missing)")
+            chunks.append(chunk)
+            remaining -= len(chunk)
+        return b"".join(chunks)
+
+    def request(self, inputs, app: str | None = None):
+        """Send one request; returns ``(words, cycles, micros)``.
+
+        ``inputs`` is a list of row-major i32 word lists, one per
+        declared input of the app, in declared order. ``app`` selects
+        v2 framing (required against a ``serve-all`` endpoint);
+        ``None`` sends a v1 frame for the server's default app.
+        """
+        frame = encode_request_v1(inputs) if app is None else encode_request_v2(app, inputs)
+        self.sock.sendall(frame)
+        header = self._recv_exact(12)
+        magic, status, word_count = struct.unpack("<III", header)
+        if magic != MAGIC:
+            raise ProtocolError(f"bad response magic {magic:#010x}")
+        if word_count > MAX_WORDS:
+            raise ProtocolError(f"response word count {word_count} exceeds cap {MAX_WORDS}")
+        body = self._recv_exact(4 * word_count + 16)
+        _, words, cycles, micros, _ = decode_response(header + body)
+        if status != STATUS_OK:
+            raise ServerError(status)
+        return words, cycles, micros
+
+    def close(self) -> None:
+        self.sock.close()
+
+    def __enter__(self) -> "PushmemClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,105 @@
+"""Wire-protocol frame tests for the Python client, pinned against
+literal byte vectors from docs/protocol.md so the Python and Rust
+sides cannot drift apart silently. Stdlib only — no jax/numpy — so
+these run in any environment."""
+
+import struct
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from pushmem_client import (  # noqa: E402
+    MAGIC,
+    MAX_APP_NAME,
+    MAX_INPUTS,
+    VERSION2,
+    ProtocolError,
+    decode_response,
+    encode_request_v1,
+    encode_request_v2,
+)
+
+
+def test_constants_match_spec():
+    # docs/protocol.md — cross-referenced with coordinator/protocol.rs.
+    assert MAGIC == 0x50554222
+    assert VERSION2 == 0xFFFF0002
+    assert VERSION2 > MAX_INPUTS  # the version-detection invariant
+
+
+def test_v1_frame_golden_bytes():
+    frame = encode_request_v1([[1, -2, 3]])
+    expect = struct.pack("<III", MAGIC, 1, 3) + struct.pack("<3i", 1, -2, 3)
+    assert frame == expect
+
+
+def test_v2_frame_golden_bytes():
+    # The worked example from docs/protocol.md.
+    frame = encode_request_v2("gaussian", [[1, -2, 3]])
+    expect = (
+        struct.pack("<III", MAGIC, VERSION2, 8)
+        + b"gaussian"
+        + struct.pack("<II", 1, 3)
+        + struct.pack("<3i", 1, -2, 3)
+    )
+    assert frame == expect
+    assert frame.hex() == (
+        "22425550" "0200ffff" "08000000"
+        + b"gaussian".hex()
+        + "01000000" "03000000" "01000000" "feffffff" "03000000"
+    )
+
+
+def test_v2_multiple_inputs():
+    frame = encode_request_v2("x", [[7], [8, 9]])
+    expect = (
+        struct.pack("<III", MAGIC, VERSION2, 1)
+        + b"x"
+        + struct.pack("<I", 2)
+        + struct.pack("<Ii", 1, 7)
+        + struct.pack("<I2i", 2, 8, 9)
+    )
+    assert frame == expect
+
+
+def test_response_round_trip():
+    body = (
+        struct.pack("<III", MAGIC, 0, 3)
+        + struct.pack("<3i", -7, 0, 2**31 - 1)
+        + struct.pack("<QQ", 1234, 56)
+    )
+    status, words, cycles, micros, consumed = decode_response(body)
+    assert status == 0
+    assert words == [-7, 0, 2**31 - 1]
+    assert (cycles, micros) == (1234, 56)
+    assert consumed == len(body)
+
+
+def test_error_response_28_bytes():
+    body = struct.pack("<III", MAGIC, 1, 0) + struct.pack("<QQ", 0, 0)
+    status, words, _, _, consumed = decode_response(body)
+    assert status == 1
+    assert words == []
+    assert consumed == 28
+
+
+def test_bad_magic_rejected():
+    body = struct.pack("<III", 0xDEADBEEF, 0, 0) + struct.pack("<QQ", 0, 0)
+    with pytest.raises(ProtocolError, match="bad magic"):
+        decode_response(body)
+
+
+def test_truncated_response_raises():
+    body = struct.pack("<III", MAGIC, 0, 5)  # promises 5 words, has none
+    with pytest.raises(struct.error):
+        decode_response(body)
+
+
+def test_caps_enforced_on_encode():
+    with pytest.raises(ProtocolError, match="inputs exceeds"):
+        encode_request_v1([[0]] * (MAX_INPUTS + 1))
+    with pytest.raises(ProtocolError, match="app name"):
+        encode_request_v2("a" * (MAX_APP_NAME + 1), [[0]])

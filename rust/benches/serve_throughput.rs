@@ -1,0 +1,88 @@
+//! Serving throughput baseline: requests/sec for N concurrent clients
+//! against the simulated CGRA through the full TCP + worker-pool
+//! stack. Later scaling PRs (batching, sharding, faster simulation)
+//! measure against these numbers.
+//!
+//! Run: `cargo bench --bench serve_throughput` (it is a plain binary:
+//! criterion is not vendored in this offline image).
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Instant;
+
+use pushmem::coordinator::serve::{self, ServeConfig};
+use pushmem::coordinator::CompiledRegistry;
+use pushmem::tensor::Tensor;
+
+const APP: &str = "gaussian";
+const REQUESTS_PER_CLIENT: usize = 12;
+const WORKERS: usize = 8;
+
+fn main() {
+    harness::rule("serving throughput: N concurrent clients, one endpoint");
+
+    let registry = Arc::new(CompiledRegistry::new());
+    let c = registry.get(APP).expect("compile");
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    {
+        let registry = Arc::clone(&registry);
+        std::thread::spawn(move || serve::serve_on(listener, ServeConfig::multi(registry, WORKERS)));
+    }
+
+    // One deterministic tile reused by every request (we are measuring
+    // the serving stack, not input generation).
+    let tiles: Vec<Tensor> = c
+        .lp
+        .inputs
+        .iter()
+        .map(|name| {
+            Tensor::from_fn(c.lp.buffers[name].clone(), |p| {
+                let mut h = 23i64;
+                for &v in p {
+                    h = h.wrapping_mul(31).wrapping_add(v + 7);
+                }
+                (h.rem_euclid(253)) as i32
+            })
+        })
+        .collect();
+    let tiles = Arc::new(tiles);
+
+    println!(
+        "{:<10} {:>10} {:>12} {:>14}",
+        "clients", "requests", "req/s", "ms/req (avg)"
+    );
+    for clients in [1usize, 2, 4, 8] {
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for _ in 0..clients {
+                let tiles = Arc::clone(&tiles);
+                s.spawn(move || {
+                    let mut stream = TcpStream::connect(addr).unwrap();
+                    let refs: Vec<&Tensor> = tiles.iter().collect();
+                    for _ in 0..REQUESTS_PER_CLIENT {
+                        let (words, _, _) =
+                            serve::request_app(&mut stream, APP, &refs).unwrap();
+                        assert!(!words.is_empty());
+                    }
+                });
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let total = clients * REQUESTS_PER_CLIENT;
+        println!(
+            "{:<10} {:>10} {:>12.1} {:>14.3}",
+            clients,
+            total,
+            total as f64 / wall,
+            wall / total as f64 * 1e3
+        );
+    }
+    println!(
+        "\n(app: {APP}, {} cycles/tile simulated per request, {WORKERS} server workers)",
+        c.graph.completion
+    );
+}

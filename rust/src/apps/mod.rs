@@ -62,6 +62,27 @@ pub fn by_name(name: &str) -> Option<(Program, &'static str)> {
     })
 }
 
+/// The seven Table III evaluation applications — the default
+/// enumeration a multi-app serving registry pre-registers
+/// (`pushmem serve-all`, `pushmem report`). Harris schedule variants
+/// stay servable by explicit name via [`by_name`].
+pub const PRIMARY: &[&str] = &[
+    "gaussian",
+    "harris",
+    "upsample",
+    "unsharp",
+    "camera",
+    "resnet",
+    "mobilenet",
+];
+
+/// True when `name` resolves in [`by_name`] — a pure name check;
+/// nothing is built. (`harris_sch3` is by_name's alias for `harris`
+/// and not listed in [`NAMES`].)
+pub fn is_registered(name: &str) -> bool {
+    NAMES.contains(&name) || name == "harris_sch3"
+}
+
 /// CLI names of everything in [`by_name`].
 pub const NAMES: &[&str] = &[
     "gaussian",

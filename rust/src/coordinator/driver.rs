@@ -2,8 +2,9 @@
 //! intermediate for inspection, simulation, and reporting.
 
 use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::cgra::{place, route, CgraSpec, Placement, RoutingResult};
 use crate::extraction::extract;
@@ -52,6 +53,89 @@ pub fn compile(program: &Program) -> Result<Compiled> {
     })
 }
 
+/// Lazily-compiled, shared cache of [`Compiled`] designs keyed by
+/// registered app name (the names [`crate::apps::by_name`] accepts).
+///
+/// The first `get` for an app runs the full compile exactly once even
+/// under concurrent requests — each app owns a [`OnceLock`] slot, so
+/// racing callers block on the winner instead of recompiling.
+/// Failures are cached too: a bad app name cannot trigger a
+/// recompilation storm. Designs are handed out as `Arc<Compiled>` so
+/// every connection shares one copy (see DESIGN.md §2).
+pub struct CompiledRegistry {
+    slots: Mutex<BTreeMap<String, Arc<OnceLock<Result<Arc<Compiled>, String>>>>>,
+}
+
+impl CompiledRegistry {
+    pub fn new() -> CompiledRegistry {
+        CompiledRegistry { slots: Mutex::new(BTreeMap::new()) }
+    }
+
+    fn slot(&self, name: &str) -> Arc<OnceLock<Result<Arc<Compiled>, String>>> {
+        let mut slots = self.slots.lock().unwrap();
+        slots
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(OnceLock::new()))
+            .clone()
+    }
+
+    /// Fetch the compiled design for `name`, compiling on first use.
+    /// Concurrent first-`get`s for the same app compile once; the
+    /// losers block until the winner's result lands in the slot.
+    pub fn get(&self, name: &str) -> Result<Arc<Compiled>> {
+        let slot = self.slot(name);
+        let entry = slot.get_or_init(|| match crate::apps::by_name(name) {
+            None => Err(format!("unknown app {name:?} (see `pushmem list`)")),
+            Some((program, _)) => {
+                compile(&program).map(Arc::new).map_err(|e| format!("{e:#}"))
+            }
+        });
+        match entry {
+            Ok(c) => Ok(Arc::clone(c)),
+            Err(e) => bail!("{e}"),
+        }
+    }
+
+    /// Seed the cache with an already-compiled design (the
+    /// `pushmem serve <app>` path compiles before binding the port).
+    pub fn insert(&self, name: &str, c: Arc<Compiled>) {
+        let _ = self.slot(name).set(Ok(c));
+    }
+
+    /// Eagerly compile `names` on parallel threads (server warm-up);
+    /// returns how many compiled successfully.
+    pub fn warm(&self, names: &[&str]) -> usize {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = names
+                .iter()
+                .map(|name| s.spawn(move || self.get(name).is_ok()))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap_or(false))
+                .filter(|&ok| ok)
+                .count()
+        })
+    }
+
+    /// Names whose compile finished **successfully** (cached failures
+    /// are not "compiled" — banners must not advertise them).
+    pub fn compiled_names(&self) -> Vec<String> {
+        let slots = self.slots.lock().unwrap();
+        slots
+            .iter()
+            .filter(|(_, slot)| matches!(slot.get(), Some(Ok(_))))
+            .map(|(name, _)| name.clone())
+            .collect()
+    }
+}
+
+impl Default for CompiledRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Deterministic pseudo-random inputs (the same stream the tests use):
 /// identical values feed the CGRA simulator and the XLA golden model.
 pub fn gen_inputs(lp: &LoweredPipeline) -> BTreeMap<String, Tensor> {
@@ -84,6 +168,41 @@ mod tests {
             assert!(c.design.pe_count() > 0, "{}", p.name);
             assert!(c.fits(), "{} should fit at small scale", p.name);
         }
+    }
+
+    #[test]
+    fn registry_compiles_once_and_shares() {
+        let reg = CompiledRegistry::new();
+        // Seed with a small build so the test stays fast; concurrent
+        // gets must all resolve to the very same Arc.
+        let c = Arc::new(compile(&apps::gaussian::build(14)).unwrap());
+        reg.insert("gaussian", Arc::clone(&c));
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| s.spawn(|| reg.get("gaussian").unwrap()))
+                .collect();
+            for h in handles {
+                assert!(Arc::ptr_eq(&h.join().unwrap(), &c));
+            }
+        });
+        assert_eq!(reg.compiled_names(), vec!["gaussian".to_string()]);
+    }
+
+    #[test]
+    fn registry_caches_unknown_app_failure() {
+        let reg = CompiledRegistry::new();
+        assert!(reg.get("no_such_app").is_err());
+        assert!(reg.get("no_such_app").is_err());
+        // Failed slots are cached but never advertised as compiled.
+        assert!(reg.compiled_names().is_empty());
+    }
+
+    #[test]
+    fn registry_warm_reports_successes() {
+        let reg = CompiledRegistry::new();
+        reg.insert("g14", Arc::new(compile(&apps::gaussian::build(14)).unwrap()));
+        let ok = reg.warm(&["g14", "no_such_app"]);
+        assert_eq!(ok, 1);
     }
 
     #[test]

@@ -1,6 +1,9 @@
 //! The Layer-3 coordinator: process lifecycle, tile streaming through
 //! the global buffer, validation against the XLA golden models, report
-//! generation, and the request-serving loop.
+//! generation, and the request-serving subsystem (wire framing in
+//! [`protocol`], lazy compile cache in
+//! [`driver::CompiledRegistry`], bounded worker-pool server in
+//! [`serve`] — see DESIGN.md §2 and docs/protocol.md).
 //!
 //! Python never appears here — the HLO artifacts were lowered once at
 //! build time (`make artifacts`) and are loaded through the PJRT C API
@@ -8,11 +11,12 @@
 
 pub mod driver;
 pub mod globalbuf;
+pub mod protocol;
 pub mod report;
 pub mod serve;
 pub mod validate;
 
-pub use driver::{compile, gen_inputs, Compiled};
+pub use driver::{compile, gen_inputs, Compiled, CompiledRegistry};
 pub use globalbuf::GlobalBuffer;
 pub use report::{report_app, sequential_comparison, AppReport, SequentialComparison};
 pub use validate::{validate, Validation};

@@ -1,0 +1,525 @@
+//! Wire protocol for the tile server: pure frame encode/decode over
+//! byte slices, unit-testable without sockets. The wire format is
+//! specified in docs/protocol.md; the constants here are the Rust
+//! source of truth (the Python client mirrors them in
+//! python/pushmem_client.py).
+//!
+//! Two request generations share one port:
+//!
+//! * **v1** (the original `pushmem serve <app>` shape): the word after
+//!   the magic is the input count, and the target app is implicit (the
+//!   server's default app).
+//! * **v2**: the word after the magic is the [`VERSION2`] sentinel —
+//!   a value no valid v1 input count can reach, since v1 counts are
+//!   capped at [`MAX_INPUTS`] — followed by an app-name field, so one
+//!   endpoint serves every registered app.
+//!
+//! Responses are identical for both generations.
+//!
+//! All decode functions are *total* over `&[u8]`: on a short buffer
+//! they return [`FrameError::Truncated`] carrying the exact number of
+//! bytes the frame needs so far, which is what lets the socket layer
+//! in [`super::serve`] read frames incrementally without duplicating
+//! any parsing logic.
+
+use std::fmt;
+
+/// Frame magic ("PUB\"" — push-memory unified buffer).
+pub const MAGIC: u32 = 0x5055_4222;
+
+/// v2 discriminator: occupies the word where v1 puts `n_inputs`.
+/// Deliberately far above [`MAX_INPUTS`] so the two generations can
+/// never be confused.
+pub const VERSION2: u32 = 0xFFFF_0002;
+
+/// Request handled; payload words follow.
+pub const STATUS_OK: u32 = 0;
+/// v2 app name (or v1 with no default app) did not resolve.
+pub const STATUS_UNKNOWN_APP: u32 = 1;
+/// Structurally or semantically malformed request (bad magic, input
+/// count or word count not matching the app's declared input boxes).
+pub const STATUS_BAD_REQUEST: u32 = 2;
+/// Simulation failed server-side.
+pub const STATUS_INTERNAL: u32 = 3;
+
+/// Caps that keep one malformed length word from allocating
+/// gigabytes. Generous: the paper-scale apps use ≤ 5 inputs and
+/// ≤ 2^17 words per tensor.
+pub const MAX_INPUTS: u32 = 64;
+pub const MAX_APP_NAME: u32 = 64;
+pub const MAX_WORDS: u32 = 1 << 24;
+/// Aggregate cap on payload words in one frame (all inputs summed) —
+/// without it a frame could legally declare `MAX_INPUTS × MAX_WORDS`
+/// (≈ 4 GiB) and OOM a worker before the app's declared boxes ever
+/// reject it.
+pub const MAX_FRAME_WORDS: u32 = 1 << 24;
+
+/// A decoded request frame. `app` is `None` for v1 frames (implicit
+/// default app) and `Some(name)` for v2. Inputs are row-major word
+/// vectors in the app's declared input order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    pub app: Option<String>,
+    pub inputs: Vec<Vec<i32>>,
+}
+
+/// A decoded response frame (shared by v1 and v2).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Response {
+    pub status: u32,
+    pub words: Vec<i32>,
+    pub cycles: u64,
+    pub micros: u64,
+}
+
+/// Structural framing errors. [`FrameError::Truncated`] is
+/// recoverable: `need` is the total frame length known so far, so a
+/// stream reader can fetch exactly the missing bytes and retry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    Truncated { have: usize, need: usize },
+    BadMagic(u32),
+    TooLarge { what: &'static str, got: u32, max: u32 },
+    BadAppName,
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::Truncated { have, need } => {
+                write!(f, "truncated frame: have {have} bytes, need {need}")
+            }
+            FrameError::BadMagic(m) => write!(f, "bad magic {m:#010x}"),
+            FrameError::TooLarge { what, got, max } => {
+                write!(f, "{what} {got} exceeds protocol cap {max}")
+            }
+            FrameError::BadAppName => write!(f, "app name is not valid UTF-8"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Byte-slice cursor; every read reports the exact prefix length the
+/// frame needs when the buffer is short.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Cur<'a> {
+        Cur { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], FrameError> {
+        let need = self.pos + n;
+        if need > self.buf.len() {
+            return Err(FrameError::Truncated { have: self.buf.len(), need });
+        }
+        let s = &self.buf[self.pos..need];
+        self.pos = need;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32, FrameError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, FrameError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8-byte slice")))
+    }
+
+    fn words(&mut self, n: usize) -> Result<Vec<i32>, FrameError> {
+        let b = self.take(n * 4)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_words(out: &mut Vec<u8>, words: &[i32]) {
+    put_u32(out, words.len() as u32);
+    for w in words {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+}
+
+/// Encode a v1 request: `magic | n_inputs | (word_count | words)*`.
+pub fn encode_request_v1(inputs: &[&[i32]]) -> Vec<u8> {
+    let total: usize = inputs.iter().map(|w| w.len()).sum();
+    let mut out = Vec::with_capacity(8 + 4 * inputs.len() + 4 * total);
+    put_u32(&mut out, MAGIC);
+    put_u32(&mut out, inputs.len() as u32);
+    for words in inputs {
+        put_words(&mut out, words);
+    }
+    out
+}
+
+/// Encode a v2 request:
+/// `magic | VERSION2 | name_len | name bytes | n_inputs | (word_count | words)*`.
+pub fn encode_request_v2(app: &str, inputs: &[&[i32]]) -> Vec<u8> {
+    let total: usize = inputs.iter().map(|w| w.len()).sum();
+    let mut out = Vec::with_capacity(16 + app.len() + 4 * inputs.len() + 4 * total);
+    put_u32(&mut out, MAGIC);
+    put_u32(&mut out, VERSION2);
+    put_u32(&mut out, app.len() as u32);
+    out.extend_from_slice(app.as_bytes());
+    put_u32(&mut out, inputs.len() as u32);
+    for words in inputs {
+        put_words(&mut out, words);
+    }
+    out
+}
+
+/// Encode a [`Request`], choosing v1 or v2 framing by `app` presence.
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let refs: Vec<&[i32]> = req.inputs.iter().map(|v| v.as_slice()).collect();
+    match &req.app {
+        Some(name) => encode_request_v2(name, &refs),
+        None => encode_request_v1(&refs),
+    }
+}
+
+/// Decode one request frame from the front of `buf`; returns the
+/// request and the number of bytes consumed.
+pub fn decode_request(buf: &[u8]) -> Result<(Request, usize), FrameError> {
+    let mut c = Cur::new(buf);
+    let magic = c.u32()?;
+    if magic != MAGIC {
+        return Err(FrameError::BadMagic(magic));
+    }
+    let word2 = c.u32()?;
+    let (app, n_inputs) = if word2 == VERSION2 {
+        let name_len = c.u32()?;
+        if name_len > MAX_APP_NAME {
+            return Err(FrameError::TooLarge { what: "app name length", got: name_len, max: MAX_APP_NAME });
+        }
+        let name = std::str::from_utf8(c.take(name_len as usize)?)
+            .map_err(|_| FrameError::BadAppName)?
+            .to_string();
+        (Some(name), c.u32()?)
+    } else {
+        (None, word2)
+    };
+    if n_inputs > MAX_INPUTS {
+        return Err(FrameError::TooLarge { what: "input count", got: n_inputs, max: MAX_INPUTS });
+    }
+    let mut inputs = Vec::with_capacity(n_inputs as usize);
+    let mut total: u64 = 0;
+    for _ in 0..n_inputs {
+        let wc = c.u32()?;
+        if wc > MAX_WORDS {
+            return Err(FrameError::TooLarge { what: "input word count", got: wc, max: MAX_WORDS });
+        }
+        total += wc as u64;
+        if total > MAX_FRAME_WORDS as u64 {
+            return Err(FrameError::TooLarge { what: "frame word total", got: total.min(u32::MAX as u64) as u32, max: MAX_FRAME_WORDS });
+        }
+        inputs.push(c.words(wc as usize)?);
+    }
+    Ok((Request { app, inputs }, c.pos))
+}
+
+/// Total byte length of the request frame at the front of `buf`,
+/// computed from the length fields alone — no payload allocation or
+/// word conversion. Returns `Truncated { need }` while more bytes are
+/// required to know. Stream readers use this to size their reads so
+/// [`decode_request`] runs exactly once per frame (re-decoding after
+/// every partial read would re-convert all completed inputs, an
+/// amplification a hostile client gets for free).
+pub fn request_frame_len(buf: &[u8]) -> Result<usize, FrameError> {
+    let mut c = Cur::new(buf);
+    let magic = c.u32()?;
+    if magic != MAGIC {
+        return Err(FrameError::BadMagic(magic));
+    }
+    let word2 = c.u32()?;
+    let n_inputs = if word2 == VERSION2 {
+        let name_len = c.u32()?;
+        if name_len > MAX_APP_NAME {
+            return Err(FrameError::TooLarge { what: "app name length", got: name_len, max: MAX_APP_NAME });
+        }
+        c.take(name_len as usize)?;
+        c.u32()?
+    } else {
+        word2
+    };
+    if n_inputs > MAX_INPUTS {
+        return Err(FrameError::TooLarge { what: "input count", got: n_inputs, max: MAX_INPUTS });
+    }
+    let mut total: u64 = 0;
+    for _ in 0..n_inputs {
+        let wc = c.u32()?;
+        if wc > MAX_WORDS {
+            return Err(FrameError::TooLarge { what: "input word count", got: wc, max: MAX_WORDS });
+        }
+        total += wc as u64;
+        if total > MAX_FRAME_WORDS as u64 {
+            return Err(FrameError::TooLarge { what: "frame word total", got: total.min(u32::MAX as u64) as u32, max: MAX_FRAME_WORDS });
+        }
+        c.take(wc as usize * 4)?;
+    }
+    Ok(c.pos)
+}
+
+/// Total byte length of the response frame at the front of `buf`
+/// (same contract as [`request_frame_len`]).
+pub fn response_frame_len(buf: &[u8]) -> Result<usize, FrameError> {
+    let mut c = Cur::new(buf);
+    let magic = c.u32()?;
+    if magic != MAGIC {
+        return Err(FrameError::BadMagic(magic));
+    }
+    c.u32()?; // status
+    let wc = c.u32()?;
+    if wc > MAX_WORDS {
+        return Err(FrameError::TooLarge { what: "response word count", got: wc, max: MAX_WORDS });
+    }
+    Ok(28 + 4 * wc as usize)
+}
+
+/// Encode a response frame:
+/// `magic | status | word_count | words | cycles u64 | micros u64`.
+pub fn encode_response(r: &Response) -> Vec<u8> {
+    let mut out = Vec::with_capacity(28 + 4 * r.words.len());
+    put_u32(&mut out, MAGIC);
+    put_u32(&mut out, r.status);
+    put_words(&mut out, &r.words);
+    out.extend_from_slice(&r.cycles.to_le_bytes());
+    out.extend_from_slice(&r.micros.to_le_bytes());
+    out
+}
+
+/// An error response carries no payload words and zeroed timings.
+pub fn encode_error(status: u32) -> Vec<u8> {
+    encode_response(&Response { status, words: Vec::new(), cycles: 0, micros: 0 })
+}
+
+/// Decode one response frame from the front of `buf`; returns the
+/// response and the number of bytes consumed.
+pub fn decode_response(buf: &[u8]) -> Result<(Response, usize), FrameError> {
+    let mut c = Cur::new(buf);
+    let magic = c.u32()?;
+    if magic != MAGIC {
+        return Err(FrameError::BadMagic(magic));
+    }
+    let status = c.u32()?;
+    let wc = c.u32()?;
+    if wc > MAX_WORDS {
+        return Err(FrameError::TooLarge { what: "response word count", got: wc, max: MAX_WORDS });
+    }
+    let words = c.words(wc as usize)?;
+    let cycles = c.u64()?;
+    let micros = c.u64()?;
+    Ok((Response { status, words, cycles, micros }, c.pos))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req_v1() -> Request {
+        Request { app: None, inputs: vec![vec![1, -2, 3], vec![0; 5]] }
+    }
+
+    fn req_v2() -> Request {
+        Request {
+            app: Some("gaussian".to_string()),
+            inputs: vec![vec![i32::MIN, -1, 0, 1, i32::MAX]],
+        }
+    }
+
+    #[test]
+    fn sentinel_cannot_collide_with_v1_counts() {
+        assert!(VERSION2 > MAX_INPUTS);
+    }
+
+    #[test]
+    fn v1_request_round_trip() {
+        let req = req_v1();
+        let bytes = encode_request(&req);
+        let (back, used) = decode_request(&bytes).unwrap();
+        assert_eq!(back, req);
+        assert_eq!(used, bytes.len());
+    }
+
+    #[test]
+    fn v2_request_round_trip() {
+        let req = req_v2();
+        let bytes = encode_request(&req);
+        let (back, used) = decode_request(&bytes).unwrap();
+        assert_eq!(back, req);
+        assert_eq!(used, bytes.len());
+    }
+
+    #[test]
+    fn v2_empty_inputs_round_trip() {
+        let req = Request { app: Some("x".into()), inputs: vec![] };
+        let (back, _) = decode_request(&encode_request(&req)).unwrap();
+        assert_eq!(back, req);
+    }
+
+    /// Every strict prefix must report Truncated with a `need` that
+    /// (a) exceeds the prefix and (b) never overshoots the full frame
+    /// — the invariant the socket reader in serve.rs relies on.
+    #[test]
+    fn request_truncation_sweep() {
+        for req in [req_v1(), req_v2()] {
+            let bytes = encode_request(&req);
+            for cut in 0..bytes.len() {
+                match decode_request(&bytes[..cut]) {
+                    Err(FrameError::Truncated { have, need }) => {
+                        assert_eq!(have, cut);
+                        assert!(need > cut, "need {need} at cut {cut}");
+                        assert!(need <= bytes.len(), "overshoot {need} at cut {cut}");
+                    }
+                    other => panic!("cut {cut}: expected Truncated, got {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn response_truncation_sweep() {
+        let resp = Response { status: 0, words: vec![7, 8, 9], cycles: 42, micros: 17 };
+        let bytes = encode_response(&resp);
+        for cut in 0..bytes.len() {
+            match decode_response(&bytes[..cut]) {
+                Err(FrameError::Truncated { need, .. }) => {
+                    assert!(need > cut && need <= bytes.len());
+                }
+                other => panic!("cut {cut}: expected Truncated, got {other:?}"),
+            }
+        }
+        let (back, used) = decode_response(&bytes).unwrap();
+        assert_eq!(back, resp);
+        assert_eq!(used, bytes.len());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = encode_request(&req_v1());
+        bytes[0] ^= 0xFF;
+        let got = decode_request(&bytes).unwrap_err();
+        assert!(matches!(got, FrameError::BadMagic(_)));
+    }
+
+    #[test]
+    fn oversized_counts_rejected() {
+        // Input count above the cap (and not the v2 sentinel).
+        let mut out = Vec::new();
+        super::put_u32(&mut out, MAGIC);
+        super::put_u32(&mut out, MAX_INPUTS + 1);
+        assert!(matches!(
+            decode_request(&out).unwrap_err(),
+            FrameError::TooLarge { what: "input count", .. }
+        ));
+
+        // Word count above the cap.
+        let mut out = Vec::new();
+        super::put_u32(&mut out, MAGIC);
+        super::put_u32(&mut out, 1);
+        super::put_u32(&mut out, MAX_WORDS + 1);
+        assert!(matches!(
+            decode_request(&out).unwrap_err(),
+            FrameError::TooLarge { what: "input word count", .. }
+        ));
+
+        // Aggregate words above the cap even though each input is
+        // individually legal — caught from the header alone, before
+        // any payload byte would need buffering.
+        let mut out = Vec::new();
+        super::put_u32(&mut out, MAGIC);
+        super::put_u32(&mut out, 3);
+        super::put_u32(&mut out, MAX_WORDS / 2);
+        out.extend_from_slice(&vec![0u8; (MAX_WORDS / 2) as usize * 4]);
+        super::put_u32(&mut out, MAX_WORDS / 2);
+        out.extend_from_slice(&vec![0u8; (MAX_WORDS / 2) as usize * 4]);
+        super::put_u32(&mut out, MAX_WORDS / 2);
+        assert!(matches!(
+            request_frame_len(&out).unwrap_err(),
+            FrameError::TooLarge { what: "frame word total", .. }
+        ));
+        assert!(matches!(
+            decode_request(&out).unwrap_err(),
+            FrameError::TooLarge { what: "frame word total", .. }
+        ));
+
+        // App name above the cap.
+        let mut out = Vec::new();
+        super::put_u32(&mut out, MAGIC);
+        super::put_u32(&mut out, VERSION2);
+        super::put_u32(&mut out, MAX_APP_NAME + 1);
+        assert!(matches!(
+            decode_request(&out).unwrap_err(),
+            FrameError::TooLarge { what: "app name length", .. }
+        ));
+    }
+
+    #[test]
+    fn non_utf8_app_name_rejected() {
+        let mut out = Vec::new();
+        super::put_u32(&mut out, MAGIC);
+        super::put_u32(&mut out, VERSION2);
+        super::put_u32(&mut out, 2);
+        out.extend_from_slice(&[0xFF, 0xFE]);
+        super::put_u32(&mut out, 0);
+        assert_eq!(decode_request(&out).unwrap_err(), FrameError::BadAppName);
+    }
+
+    #[test]
+    fn error_frame_shape() {
+        let bytes = encode_error(STATUS_UNKNOWN_APP);
+        let (resp, used) = decode_response(&bytes).unwrap();
+        assert_eq!(used, 28);
+        assert_eq!(resp.status, STATUS_UNKNOWN_APP);
+        assert!(resp.words.is_empty());
+        assert_eq!((resp.cycles, resp.micros), (0, 0));
+    }
+
+    /// The frame-length pre-scan must agree exactly with the decoder
+    /// (full length on a complete frame, recoverable Truncated on any
+    /// strict prefix, never overshooting the frame).
+    #[test]
+    fn frame_len_matches_decode() {
+        for req in [req_v1(), req_v2()] {
+            let bytes = encode_request(&req);
+            assert_eq!(request_frame_len(&bytes).unwrap(), bytes.len());
+            for cut in 0..bytes.len() {
+                match request_frame_len(&bytes[..cut]) {
+                    Err(FrameError::Truncated { need, .. }) => {
+                        assert!(need > cut && need <= bytes.len(), "cut {cut}");
+                    }
+                    other => panic!("cut {cut}: expected Truncated, got {other:?}"),
+                }
+            }
+        }
+        let resp = Response { status: 0, words: vec![1, 2], cycles: 3, micros: 4 };
+        let bytes = encode_response(&resp);
+        assert_eq!(response_frame_len(&bytes).unwrap(), bytes.len());
+        assert_eq!(response_frame_len(&bytes[..12]).unwrap(), bytes.len());
+    }
+
+    /// Back-to-back frames in one buffer decode independently via the
+    /// consumed-byte count (pipelined clients).
+    #[test]
+    fn consumed_supports_pipelining() {
+        let a = encode_request(&req_v2());
+        let b = encode_request(&req_v1());
+        let mut buf = a.clone();
+        buf.extend_from_slice(&b);
+        let (first, used) = decode_request(&buf).unwrap();
+        assert_eq!(first, req_v2());
+        let (second, used2) = decode_request(&buf[used..]).unwrap();
+        assert_eq!(second, req_v1());
+        assert_eq!(used + used2, buf.len());
+    }
+}

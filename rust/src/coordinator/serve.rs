@@ -1,146 +1,359 @@
-//! Tile-serving loop: a minimal framed TCP protocol that streams image
-//! tiles through the (simulated) accelerator — the deployment shape of
+//! Tile-serving loop: a framed TCP protocol that streams image tiles
+//! through the (simulated) accelerator — the deployment shape of
 //! Fig 12, with the global buffer fed over the wire. Implemented on
-//! std::net + threads (this image vendors no async runtime; see
-//! DESIGN.md §2).
+//! std::net + a bounded worker pool of OS threads (this image vendors
+//! no async runtime; the rationale is DESIGN.md §2).
 //!
-//! Frame format (little-endian):
-//!   request:  u32 magic (0x50554222) | u32 n_inputs |
-//!             per input: u32 word_count | i32 words...
-//!   response: u32 magic | u32 status (0=ok) | u32 word_count |
-//!             i32 words... | u64 sim_cycles | u64 micros
+//! The wire format lives in [`super::protocol`] (spec: docs/protocol.md).
+//! Two generations share one port: v1 frames target the server's
+//! default app (`pushmem serve <app>`), v2 frames carry an app name so
+//! a single endpoint serves every design in the
+//! [`CompiledRegistry`](super::driver::CompiledRegistry)
+//! (`pushmem serve-all`).
 //!
-//! Input word counts must match the app's declared input boxes
-//! (row-major).
+//! This module owns only the socket I/O; framing is pure byte-slice
+//! code in [`super::protocol`], and app-to-design resolution is the
+//! registry's job. That split keeps every layer unit-testable without
+//! the others.
 
+use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use super::driver::Compiled;
+use super::driver::{Compiled, CompiledRegistry};
+use super::protocol::{self, FrameError, Request, Response};
 use crate::cgra::simulate;
 use crate::tensor::Tensor;
 
-pub const MAGIC: u32 = 0x5055_4222; // "PUB\"" — push-memory unified buffer
+pub use super::protocol::MAGIC;
 
-fn read_u32(s: &mut impl Read) -> Result<u32> {
-    let mut b = [0u8; 4];
-    s.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
+/// How connections resolve apps and report, plus the pool size used
+/// by [`serve_on`].
+pub struct ServeConfig {
+    pub registry: Arc<CompiledRegistry>,
+    /// Target of v1 frames (which carry no app name). `None` makes
+    /// v1 frames an error — multi-app endpoints may choose that.
+    pub default_app: Option<Arc<Compiled>>,
+    /// Worker threads handling connections; accepted connections
+    /// beyond this queue on a bounded channel (backpressure instead
+    /// of unbounded thread spawn).
+    pub workers: usize,
+    /// Print one `[req]` line per served request to stderr.
+    pub stats: bool,
 }
 
-fn read_words(s: &mut impl Read, n: usize) -> Result<Vec<i32>> {
-    let mut buf = vec![0u8; n * 4];
-    s.read_exact(&mut buf)?;
-    Ok(buf
-        .chunks_exact(4)
-        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect())
-}
+impl ServeConfig {
+    /// Single-app v1-style serving (`pushmem serve <app>`); v2 frames
+    /// naming other registered apps still work via the registry, and
+    /// the default app is seeded into it **under its CLI name** (which
+    /// differs from `program.name` for the Harris schedule variants)
+    /// so a v2 frame naming it shares the design instead of
+    /// recompiling.
+    pub fn single(cli_name: &str, c: Compiled) -> ServeConfig {
+        let registry = Arc::new(CompiledRegistry::new());
+        let c = Arc::new(c);
+        registry.insert(cli_name, Arc::clone(&c));
+        ServeConfig { registry, default_app: Some(c), workers: 4, stats: false }
+    }
 
-/// Handle one client connection (public so drivers can embed the
-/// server with their own accept loop).
-pub fn handle_connection(c: &Compiled, stream: &mut TcpStream) -> Result<()> {
-    loop {
-        let magic = match read_u32(stream) {
-            Ok(m) => m,
-            Err(_) => return Ok(()), // connection closed
-        };
-        if magic != MAGIC {
-            bail!("bad magic {magic:#x}");
-        }
-        let n_inputs = read_u32(stream)? as usize;
-        anyhow::ensure!(
-            n_inputs == c.lp.inputs.len(),
-            "expected {} inputs, got {n_inputs}",
-            c.lp.inputs.len()
-        );
-        let mut inputs = std::collections::BTreeMap::new();
-        for name in &c.lp.inputs {
-            let words = read_u32(stream)? as usize;
-            let shape = c.lp.buffers[name].clone();
-            anyhow::ensure!(
-                words as i64 == shape.cardinality(),
-                "input {name}: {words} words != box {}",
-                shape.cardinality()
-            );
-            let data = read_words(stream, words)?;
-            inputs.insert(name.clone(), Tensor::from_data(shape, data));
-        }
-        let t0 = Instant::now();
-        let res = simulate(&c.design, &c.graph, &inputs).context("simulation")?;
-        let micros = t0.elapsed().as_micros() as u64;
-
-        // One buffered frame (word-at-a-time writes are syscall-bound).
-        let mut frame = Vec::with_capacity(20 + 4 * res.output.data.len());
-        frame.extend_from_slice(&MAGIC.to_le_bytes());
-        frame.extend_from_slice(&0u32.to_le_bytes());
-        frame.extend_from_slice(&(res.output.data.len() as u32).to_le_bytes());
-        for w in &res.output.data {
-            frame.extend_from_slice(&w.to_le_bytes());
-        }
-        frame.extend_from_slice(&(res.stats.cycles as u64).to_le_bytes());
-        frame.extend_from_slice(&micros.to_le_bytes());
-        stream.write_all(&frame)?;
-        stream.flush()?;
+    /// Multi-app serving over a shared registry (`pushmem serve-all`).
+    /// Stats default off so embedders (benches, examples, tests) get a
+    /// quiet timed path; the CLI opts in.
+    pub fn multi(registry: Arc<CompiledRegistry>, workers: usize) -> ServeConfig {
+        ServeConfig { registry, default_app: None, workers, stats: false }
     }
 }
 
-/// Serve tiles forever (one thread per connection).
-pub fn serve(c: Compiled, addr: &str) -> Result<()> {
+/// Grow `buf` to `need` bytes by reading exactly the missing amount.
+fn fill_to(stream: &mut impl Read, buf: &mut Vec<u8>, need: usize) -> Result<()> {
+    let have = buf.len();
+    buf.resize(need, 0);
+    stream.read_exact(&mut buf[have..]).context("reading frame body")
+}
+
+/// Read one request frame from a stream. `Ok(None)` is a clean
+/// disconnect (EOF between frames). All parsing is delegated to
+/// [`protocol`]: the length pre-scan ([`protocol::request_frame_len`])
+/// sizes the reads, so the full decode — which allocates the input
+/// payloads — runs exactly once per frame.
+pub fn read_request(stream: &mut impl Read) -> Result<Option<Request>> {
+    let mut buf = vec![0u8; 4];
+    match stream.read_exact(&mut buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e).context("reading frame header"),
+    }
+    loop {
+        match protocol::request_frame_len(&buf) {
+            Ok(total) => {
+                if buf.len() < total {
+                    fill_to(stream, &mut buf, total)?;
+                }
+                let (req, _) = protocol::decode_request(&buf)?;
+                return Ok(Some(req));
+            }
+            Err(FrameError::Truncated { need, .. }) => fill_to(stream, &mut buf, need)?,
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// Read one response frame (client side), same single-decode
+/// discipline as [`read_request`].
+pub fn read_response(stream: &mut impl Read) -> Result<Response> {
+    let mut buf = vec![0u8; 4];
+    stream.read_exact(&mut buf).context("reading response header")?;
+    loop {
+        match protocol::response_frame_len(&buf) {
+            Ok(total) => {
+                if buf.len() < total {
+                    fill_to(stream, &mut buf, total)?;
+                }
+                let (resp, _) = protocol::decode_response(&buf)?;
+                return Ok(resp);
+            }
+            Err(FrameError::Truncated { need, .. }) => fill_to(stream, &mut buf, need)?,
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+fn write_error(stream: &mut TcpStream, status: u32) {
+    // Best-effort: the connection is being dropped anyway.
+    let _ = stream.write_all(&protocol::encode_error(status));
+    let _ = stream.flush();
+}
+
+/// Check a request's inputs against the app's declared input boxes
+/// before any tensor is built (`Tensor::from_data` asserts lengths).
+fn check_inputs(c: &Compiled, req: &Request) -> Result<()> {
+    anyhow::ensure!(
+        req.inputs.len() == c.lp.inputs.len(),
+        "expected {} inputs, got {}",
+        c.lp.inputs.len(),
+        req.inputs.len()
+    );
+    for (name, words) in c.lp.inputs.iter().zip(&req.inputs) {
+        let want = c.lp.buffers[name].cardinality();
+        anyhow::ensure!(
+            words.len() as i64 == want,
+            "input {name}: {} words != box {want}",
+            words.len()
+        );
+    }
+    Ok(())
+}
+
+/// Handle one client connection: frames in, simulated tiles out,
+/// until the peer disconnects. Errors are reported to the client as a
+/// status frame before the connection drops (public so drivers can
+/// embed the server with their own accept loop).
+pub fn handle_connection(cfg: &ServeConfig, stream: &mut TcpStream) -> Result<()> {
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "?".to_string());
+    loop {
+        let req = match read_request(stream) {
+            Ok(Some(req)) => req,
+            Ok(None) => return Ok(()),
+            Err(e) => {
+                write_error(stream, protocol::STATUS_BAD_REQUEST);
+                return Err(e.context(format!("client {peer}")));
+            }
+        };
+        let c: Arc<Compiled> = match &req.app {
+            Some(name) => match cfg.registry.get(name) {
+                Ok(c) => c,
+                Err(e) => {
+                    write_error(stream, protocol::STATUS_UNKNOWN_APP);
+                    bail!("client {peer}: {e:#}");
+                }
+            },
+            None => match &cfg.default_app {
+                Some(c) => Arc::clone(c),
+                None => {
+                    write_error(stream, protocol::STATUS_UNKNOWN_APP);
+                    bail!("client {peer}: v1 frame on a server with no default app (send v2 frames with an app name)");
+                }
+            },
+        };
+        if let Err(e) = check_inputs(&c, &req) {
+            write_error(stream, protocol::STATUS_BAD_REQUEST);
+            return Err(e.context(format!("client {peer}, app {}", c.program.name)));
+        }
+        let in_words: usize = req.inputs.iter().map(|w| w.len()).sum();
+        let mut inputs = BTreeMap::new();
+        for (name, words) in c.lp.inputs.iter().zip(req.inputs) {
+            inputs.insert(name.clone(), Tensor::from_data(c.lp.buffers[name].clone(), words));
+        }
+        let t0 = Instant::now();
+        let res = match simulate(&c.design, &c.graph, &inputs) {
+            Ok(res) => res,
+            Err(e) => {
+                write_error(stream, protocol::STATUS_INTERNAL);
+                return Err(e.context(format!("simulating {} for {peer}", c.program.name)));
+            }
+        };
+        let micros = t0.elapsed().as_micros() as u64;
+        let cycles = res.stats.cycles as u64;
+        let words = res.output.data;
+        let out_words = words.len();
+        let frame = protocol::encode_response(&Response {
+            status: protocol::STATUS_OK,
+            words,
+            cycles,
+            micros,
+        });
+        stream.write_all(&frame)?;
+        stream.flush()?;
+        if cfg.stats {
+            eprintln!(
+                "[req] client={peer} app={} in_words={in_words} out_words={out_words} cycles={cycles} sim_us={micros}",
+                c.program.name
+            );
+        }
+    }
+}
+
+/// Run the accept loop on an already-bound listener with a bounded
+/// pool of `cfg.workers` connection-handler threads. Accepted
+/// connections queue on a bounded channel when every worker is busy —
+/// load sheds into the kernel backlog instead of unbounded spawning.
+/// Embeddable: tests and examples bind an ephemeral port themselves.
+pub fn serve_on(listener: TcpListener, cfg: ServeConfig) -> Result<()> {
+    let workers = cfg.workers.max(1);
+    let cfg = Arc::new(cfg);
+    let (tx, rx) = mpsc::sync_channel::<TcpStream>(2 * workers);
+    let rx = Arc::new(Mutex::new(rx));
+    let mut handles = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let rx = Arc::clone(&rx);
+        let cfg = Arc::clone(&cfg);
+        handles.push(std::thread::spawn(move || loop {
+            // The guard is a temporary: the lock is released as soon
+            // as recv returns, before the connection is handled.
+            let next = rx.lock().unwrap().recv();
+            let mut stream = match next {
+                Ok(s) => s,
+                Err(_) => return, // accept loop gone
+            };
+            if let Err(e) = handle_connection(&cfg, &mut stream) {
+                eprintln!("connection error: {e:#}");
+            }
+        }));
+    }
+    for stream in listener.incoming() {
+        match stream {
+            // try_send first so pool saturation is visible to the
+            // operator (a queued client hangs silently otherwise).
+            Ok(s) => match tx.try_send(s) {
+                Ok(()) => {}
+                Err(mpsc::TrySendError::Full(s)) => {
+                    eprintln!(
+                        "all {workers} workers busy and queue full; \
+                         connection waits (raise --workers if this persists)"
+                    );
+                    if tx.send(s).is_err() {
+                        break;
+                    }
+                }
+                Err(mpsc::TrySendError::Disconnected(_)) => break,
+            },
+            Err(e) => {
+                // Persistent accept failures (e.g. EMFILE under fd
+                // exhaustion) must shed load, not busy-spin.
+                eprintln!("accept error: {e}");
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
+        }
+    }
+    drop(tx);
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+/// Serve one pre-compiled app forever (the `pushmem serve <app>`
+/// path; v1 frames hit this app, v2 frames may name any other
+/// registered app). `cli_name` is the `pushmem list` name the design
+/// is cached under; `workers` bounds concurrent connections (a
+/// connection holds its worker until disconnect — DESIGN.md §2).
+pub fn serve(
+    cli_name: &str,
+    c: Compiled,
+    addr: &str,
+    workers: usize,
+    stats: bool,
+) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     eprintln!(
-        "serving {} on {addr} ({} PEs, {} MEM tiles, {} cycles/tile)",
+        "serving {} on {addr} ({} PEs, {} MEM tiles, {} cycles/tile, {workers} workers)",
         c.program.name,
         c.design.pe_count(),
         c.design.mem_tiles(),
         c.graph.completion
     );
-    let shared = Arc::new(c);
-    for stream in listener.incoming() {
-        let mut stream = stream?;
-        let c = Arc::clone(&shared);
-        std::thread::spawn(move || {
-            if let Err(e) = handle_connection(&c, &mut stream) {
-                eprintln!("connection error: {e:#}");
-            }
-        });
-    }
-    Ok(())
+    let mut cfg = ServeConfig::single(cli_name, c);
+    cfg.workers = workers;
+    cfg.stats = stats;
+    serve_on(listener, cfg)
 }
 
-/// Client helper: send one request, get `(output words, cycles, µs)`.
-pub fn request(
+/// Serve every app in `registry` on one endpoint forever (the
+/// `pushmem serve-all` path). Designs compile lazily on first
+/// request unless the registry was warmed. `stats` prints one
+/// `[req]` line per served request.
+pub fn serve_all(
+    registry: Arc<CompiledRegistry>,
+    addr: &str,
+    workers: usize,
+    stats: bool,
+) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    let warmed = registry.compiled_names();
+    eprintln!(
+        "serving all registered apps on {addr} ({workers} workers, {} pre-compiled: {})",
+        warmed.len(),
+        if warmed.is_empty() { "none — lazy".to_string() } else { warmed.join(",") }
+    );
+    let mut cfg = ServeConfig::multi(registry, workers);
+    cfg.stats = stats;
+    serve_on(listener, cfg)
+}
+
+/// Client helper: send one v1 request (implicit default app), get
+/// `(output words, cycles, µs)`.
+pub fn request(stream: &mut TcpStream, inputs: &[&Tensor]) -> Result<(Vec<i32>, u64, u64)> {
+    let refs: Vec<&[i32]> = inputs.iter().map(|t| t.data.as_slice()).collect();
+    roundtrip(stream, protocol::encode_request_v1(&refs))
+}
+
+/// Client helper: send one v2 request naming `app`.
+pub fn request_app(
     stream: &mut TcpStream,
+    app: &str,
     inputs: &[&Tensor],
 ) -> Result<(Vec<i32>, u64, u64)> {
-    let total: usize = inputs.iter().map(|t| t.data.len()).sum();
-    let mut frame = Vec::with_capacity(8 + 4 * inputs.len() + 4 * total);
-    frame.extend_from_slice(&MAGIC.to_le_bytes());
-    frame.extend_from_slice(&(inputs.len() as u32).to_le_bytes());
-    for t in inputs {
-        frame.extend_from_slice(&(t.data.len() as u32).to_le_bytes());
-        for w in &t.data {
-            frame.extend_from_slice(&w.to_le_bytes());
-        }
-    }
+    let refs: Vec<&[i32]> = inputs.iter().map(|t| t.data.as_slice()).collect();
+    roundtrip(stream, protocol::encode_request_v2(app, &refs))
+}
+
+fn roundtrip(stream: &mut TcpStream, frame: Vec<u8>) -> Result<(Vec<i32>, u64, u64)> {
     stream.write_all(&frame)?;
     stream.flush()?;
-    let magic = read_u32(stream)?;
-    anyhow::ensure!(magic == MAGIC, "bad response magic");
-    let status = read_u32(stream)?;
-    anyhow::ensure!(status == 0, "server error status {status}");
-    let n = read_u32(stream)? as usize;
-    let words = read_words(stream, n)?;
-    let mut b = [0u8; 8];
-    stream.read_exact(&mut b)?;
-    let cycles = u64::from_le_bytes(b);
-    stream.read_exact(&mut b)?;
-    let micros = u64::from_le_bytes(b);
-    Ok((words, cycles, micros))
+    let resp = read_response(stream)?;
+    anyhow::ensure!(
+        resp.status == protocol::STATUS_OK,
+        "server error status {}",
+        resp.status
+    );
+    Ok((resp.words, resp.cycles, resp.micros))
 }
 
 #[cfg(test)]
@@ -149,35 +362,92 @@ mod tests {
     use crate::apps;
     use crate::coordinator::driver::{compile, gen_inputs};
 
+    fn spawn_server(cfg: ServeConfig) -> std::net::SocketAddr {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || serve_on(listener, cfg));
+        addr
+    }
+
     #[test]
-    fn serve_roundtrip_over_localhost() {
+    fn serve_roundtrip_over_localhost_v1() {
         let prog = apps::gaussian::build(14);
         let c = compile(&prog).unwrap();
         let inputs = gen_inputs(&c.lp);
-        let expect = simulate_expect(&c, &inputs);
+        let expect = simulate(&c.design, &c.graph, &inputs).unwrap().output.data;
+        let ordered: Vec<Tensor> =
+            c.lp.inputs.iter().map(|n| inputs[n].clone()).collect();
 
-        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap();
-        let shared = Arc::new(c);
-        let c2 = Arc::clone(&shared);
-        std::thread::spawn(move || {
-            if let Ok((mut s, _)) = listener.accept() {
-                let _ = handle_connection(&c2, &mut s);
-            }
-        });
-
+        let addr = spawn_server(ServeConfig::single("g14", c));
         let mut stream = TcpStream::connect(addr).unwrap();
-        let ordered: Vec<&Tensor> =
-            shared.lp.inputs.iter().map(|n| &inputs[n]).collect();
-        let (words, cycles, _) = request(&mut stream, &ordered).unwrap();
-        assert_eq!(words, expect);
-        assert!(cycles > 0);
+        let refs: Vec<&Tensor> = ordered.iter().collect();
+        // Two requests on one connection: the loop must persist.
+        for _ in 0..2 {
+            let (words, cycles, _) = request(&mut stream, &refs).unwrap();
+            assert_eq!(words, expect);
+            assert!(cycles > 0);
+        }
     }
 
-    fn simulate_expect(
-        c: &Compiled,
-        inputs: &std::collections::BTreeMap<String, Tensor>,
-    ) -> Vec<i32> {
-        simulate(&c.design, &c.graph, inputs).unwrap().output.data
+    #[test]
+    fn v2_frame_shares_the_seeded_default_design() {
+        let prog = apps::gaussian::build(14);
+        let c = compile(&prog).unwrap();
+        let inputs = gen_inputs(&c.lp);
+        let expect = simulate(&c.design, &c.graph, &inputs).unwrap().output.data;
+        let ordered: Vec<Tensor> =
+            c.lp.inputs.iter().map(|n| inputs[n].clone()).collect();
+
+        // single() must seed the registry under the CLI name ("g14" is
+        // not a by_name app, so any hit proves it came from the seed,
+        // not a recompile).
+        let cfg = ServeConfig::single("g14", c);
+        let addr = spawn_server(cfg);
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let refs: Vec<&Tensor> = ordered.iter().collect();
+        let (words, _, _) = request_app(&mut stream, "g14", &refs).unwrap();
+        assert_eq!(words, expect);
+    }
+
+    #[test]
+    fn unknown_app_gets_status_frame() {
+        let cfg = ServeConfig::multi(Arc::new(CompiledRegistry::new()), 1);
+        let addr = spawn_server(cfg);
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let t = Tensor::from_data(crate::poly::BoxSet::from_extents(&[1]), vec![0]);
+        let err = request_app(&mut stream, "definitely_not_an_app", &[&t]).unwrap_err();
+        assert!(
+            err.to_string().contains(&format!("status {}", protocol::STATUS_UNKNOWN_APP)),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn word_count_mismatch_gets_bad_request() {
+        let prog = apps::gaussian::build(14);
+        let c = compile(&prog).unwrap();
+        let addr = spawn_server(ServeConfig::single("g14", c));
+        let mut stream = TcpStream::connect(addr).unwrap();
+        // One input with a wrong word count vs the declared box.
+        let t = Tensor::from_data(crate::poly::BoxSet::from_extents(&[3]), vec![1, 2, 3]);
+        let err = request(&mut stream, &[&t]).unwrap_err();
+        assert!(
+            err.to_string().contains(&format!("status {}", protocol::STATUS_BAD_REQUEST)),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn bad_magic_gets_bad_request_then_close() {
+        let prog = apps::gaussian::build(14);
+        let addr = spawn_server(ServeConfig::single("g14", compile(&prog).unwrap()));
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(&0xDEAD_BEEFu32.to_le_bytes()).unwrap();
+        stream.flush().unwrap();
+        let resp = read_response(&mut stream).unwrap();
+        assert_eq!(resp.status, protocol::STATUS_BAD_REQUEST);
+        // Server closed the connection afterwards.
+        let mut rest = Vec::new();
+        assert_eq!(stream.read_to_end(&mut rest).unwrap(), 0);
     }
 }

@@ -1,6 +1,7 @@
 //! `pushmem` — CLI for the push-memory accelerator compiler.
 //!
-//! Subcommands (hand-rolled arg parsing; no clap in this offline image):
+//! Subcommands (hand-rolled arg parsing; no clap in this offline
+//! image). `pushmem <subcommand> --help` documents each one's flags.
 //!
 //! ```text
 //! pushmem list                       show registered applications
@@ -8,16 +9,21 @@
 //! pushmem run <app> [--artifacts D]  simulate; validate vs XLA golden
 //! pushmem report [--artifacts D]     all apps: Table IV + Fig 13/14 rows
 //! pushmem tables                     Tables V, VI, VII reproductions
-//! pushmem serve <app> [--addr A]     serve tiles over TCP (Fig 12 shape)
+//! pushmem serve <app> [--addr A]     serve one app over TCP (Fig 12 shape)
+//! pushmem serve-all [--addr A]       serve every app over one TCP port
 //! ```
+//!
+//! The repo-level README.md walks through every subcommand; the serve
+//! wire format is specified in docs/protocol.md.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use pushmem::apps;
-use pushmem::coordinator::{compile, report_app, sequential_comparison, validate};
 use pushmem::coordinator::serve;
+use pushmem::coordinator::{compile, report_app, sequential_comparison, validate, CompiledRegistry};
 use pushmem::cost::CGRA_CLOCK_HZ;
 use pushmem::runtime::Runtime;
 
@@ -25,12 +31,32 @@ fn artifact_path(dir: &str, name: &str) -> PathBuf {
     PathBuf::from(dir).join(format!("{name}.hlo.txt"))
 }
 
-fn flag_value(args: &[String], flag: &str, default: &str) -> String {
-    args.iter()
-        .position(|a| a == flag)
-        .and_then(|i| args.get(i + 1))
-        .cloned()
-        .unwrap_or_else(|| default.to_string())
+/// Look up `--flag value`. A flag given without a value (end of args,
+/// or immediately followed by another `--flag`) is an error — it used
+/// to fall back to the default silently, which hid typos like
+/// `--addr --workers 4`.
+fn flag_value(args: &[String], flag: &str, default: &str) -> Result<String> {
+    match args.iter().position(|a| a == flag) {
+        None => Ok(default.to_string()),
+        Some(i) => match args.get(i + 1) {
+            Some(v) if !v.starts_with("--") => Ok(v.clone()),
+            _ => bail!("{flag} requires a value (default: {default})"),
+        },
+    }
+}
+
+/// Per-subcommand usage text, also shown by `pushmem <cmd> --help`.
+fn usage(cmd: &str) -> &'static str {
+    match cmd {
+        "list" => "usage: pushmem list\n\nPrint every registered application name (apps + Harris schedule variants).",
+        "compile" => "usage: pushmem compile <app>\n\nCompile one app through the full pipeline and print the design report\n(PEs, MEM tiles, SRAM/SR words, completion, place & route, bitstream).",
+        "run" => "usage: pushmem run <app> [--artifacts D]\n\n  --artifacts D   directory of HLO golden artifacts (default: artifacts)\n\nSimulate one app cycle-accurately and validate bit-exactly against the\nXLA golden model (requires `make artifacts`).",
+        "report" => "usage: pushmem report [--artifacts D]\n\n  --artifacts D   directory of HLO golden artifacts (default: artifacts)\n\nAll seven Table III apps: Table IV resources plus Fig 13/14 rows.",
+        "tables" => "usage: pushmem tables\n\nReproduce Tables V (Harris schedules), VI and VII (optimized vs\nsequential mappings).",
+        "serve" => "usage: pushmem serve <app> [--addr A] [--workers N] [--stats]\n\n  --addr A      listen address (default: 127.0.0.1:7411)\n  --workers N   connection worker threads (default: 4; a connection\n                holds its worker until it disconnects)\n  --stats       print one [req] line per served request\n\nCompile <app> and serve tiles over TCP. v1 frames target <app>; v2\nframes may name any registered app (docs/protocol.md).",
+        "serve-all" => "usage: pushmem serve-all [--addr A] [--workers N] [--apps a,b,c] [--warm]\n\n  --addr A      listen address (default: 127.0.0.1:7411)\n  --workers N   connection worker threads (default: 8)\n  --apps LIST   comma-separated app names to register (default: the\n                seven Table III apps; variants like harris_sch4 allowed)\n  --warm        compile every registered app up front instead of lazily\n                on first request\n\nServe every registered app over one TCP port (v2 frames carry the app\nname; see docs/protocol.md). Designs are compiled once, cached, and\nshared across connections. Prints one [req] stats line per request.",
+        _ => "usage: pushmem <list|compile|run|report|tables|serve|serve-all> [args]\nsee `pushmem list` for applications and `pushmem <cmd> --help` for flags",
+    }
 }
 
 fn cmd_list() {
@@ -110,9 +136,7 @@ fn cmd_report(artifacts: &str) -> Result<()> {
         "app", "cycles", "PEs", "MEMs", "SRAMwords", "px/cyc", "BRAM", "FF", "LUT",
         "CGRA pJ/op", "FPGA pJ/op", "CPU ms", "valid"
     );
-    for name in [
-        "gaussian", "harris", "upsample", "unsharp", "camera", "resnet", "mobilenet",
-    ] {
+    for name in apps::PRIMARY {
         let (program, artifact) = apps::by_name(name).unwrap();
         let path = artifact_path(artifacts, artifact);
         let r = report_app(
@@ -185,15 +209,63 @@ fn cmd_tables() -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(name: &str, addr: &str) -> Result<()> {
+fn workers_flag(args: &[String], default: &str) -> Result<usize> {
+    let workers: usize = flag_value(args, "--workers", default)?
+        .parse()
+        .context("--workers must be a positive integer")?;
+    anyhow::ensure!(workers >= 1, "--workers must be ≥ 1");
+    Ok(workers)
+}
+
+fn cmd_serve(name: &str, args: &[String]) -> Result<()> {
+    let addr = flag_value(args, "--addr", "127.0.0.1:7411")?;
+    let workers = workers_flag(args, "4")?;
+    let stats = args.iter().any(|a| a == "--stats");
     let (program, _) = apps::by_name(name).with_context(|| format!("unknown app {name}"))?;
     let c = compile(&program)?;
-    serve::serve(c, addr)
+    serve::serve(name, c, &addr, workers, stats)
+}
+
+fn cmd_serve_all(args: &[String]) -> Result<()> {
+    let addr = flag_value(args, "--addr", "127.0.0.1:7411")?;
+    let workers = workers_flag(args, "8")?;
+    let apps_arg = flag_value(args, "--apps", "")?;
+    let names: Vec<String> = if apps_arg.is_empty() {
+        apps::PRIMARY.iter().map(|s| s.to_string()).collect()
+    } else {
+        apps_arg.split(',').map(|s| s.trim().to_string()).collect()
+    };
+    for n in &names {
+        if !apps::is_registered(n) {
+            bail!("unknown app {n:?} in --apps (see `pushmem list`)");
+        }
+    }
+    let registry = Arc::new(CompiledRegistry::new());
+    if args.iter().any(|a| a == "--warm") {
+        eprintln!("warming {} apps...", names.len());
+        let refs: Vec<&str> = names.iter().map(String::as_str).collect();
+        let ok = registry.warm(&refs);
+        eprintln!("compiled {ok}/{} apps", names.len());
+    } else {
+        eprintln!(
+            "registered {} apps (lazy compile on first request): {}",
+            names.len(),
+            names.join(",")
+        );
+    }
+    serve::serve_all(registry, &addr, workers, true)
 }
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    match args.first().map(String::as_str) {
+    let cmd = args.first().map(String::as_str);
+    if let Some(cmd) = cmd {
+        if args.iter().any(|a| a == "--help" || a == "-h") {
+            println!("{}", usage(cmd));
+            return Ok(());
+        }
+    }
+    match cmd {
         Some("list") => {
             cmd_list();
             Ok(())
@@ -204,19 +276,21 @@ fn main() -> Result<()> {
         }
         Some("run") => {
             let name = args.get(1).context("usage: pushmem run <app>")?;
-            cmd_run(name, &flag_value(&args, "--artifacts", "artifacts"))
+            cmd_run(name, &flag_value(&args, "--artifacts", "artifacts")?)
         }
-        Some("report") => cmd_report(&flag_value(&args, "--artifacts", "artifacts")),
+        Some("report") => cmd_report(&flag_value(&args, "--artifacts", "artifacts")?),
         Some("tables") => cmd_tables(),
         Some("serve") => {
             let name = args.get(1).context("usage: pushmem serve <app>")?;
-            cmd_serve(name, &flag_value(&args, "--addr", "127.0.0.1:7411"))
+            cmd_serve(name, &args[1..])
+        }
+        Some("serve-all") => cmd_serve_all(&args[1..]),
+        Some("help") => {
+            println!("{}", usage(args.get(1).map(String::as_str).unwrap_or("")));
+            Ok(())
         }
         _ => {
-            eprintln!(
-                "usage: pushmem <list|compile|run|report|tables|serve> [args]\n\
-                 see `pushmem list` for applications"
-            );
+            eprintln!("{}", usage(""));
             Ok(())
         }
     }

@@ -1,0 +1,134 @@
+//! End-to-end loopback tests for the multi-app tile server: spawn the
+//! real server (bounded worker pool, lazy registry) on an ephemeral
+//! port, stream tiles for two different apps from two concurrent
+//! client threads, and require bit-exact agreement with the direct
+//! simulation path (`pushmem run` takes the same `simulate` route).
+//!
+//! Frame-level malformed-input behavior is covered by unit tests in
+//! coordinator/protocol.rs and coordinator/serve.rs; here we exercise
+//! the full socket + worker-pool + registry stack.
+
+use std::collections::BTreeMap;
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use pushmem::cgra::simulate;
+use pushmem::coordinator::serve::{self, ServeConfig};
+use pushmem::coordinator::CompiledRegistry;
+use pushmem::tensor::Tensor;
+
+fn spawn_multi_server(registry: Arc<CompiledRegistry>, workers: usize) -> std::net::SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || serve::serve_on(listener, ServeConfig::multi(registry, workers)));
+    addr
+}
+
+/// Distinct deterministic tile `k` for every input box of `c`.
+fn tiles_for(c: &pushmem::coordinator::Compiled, k: i64) -> Vec<Tensor> {
+    c.lp.inputs
+        .iter()
+        .enumerate()
+        .map(|(i, name)| {
+            Tensor::from_fn(c.lp.buffers[name].clone(), |p| {
+                let mut h = 131 * k + 17 * i as i64 + 3;
+                for &v in p {
+                    h = h.wrapping_mul(31).wrapping_add(v + 7);
+                }
+                (h.rem_euclid(253)) as i32
+            })
+        })
+        .collect()
+}
+
+fn expected(c: &pushmem::coordinator::Compiled, tiles: &[Tensor]) -> Vec<i32> {
+    let mut inputs = BTreeMap::new();
+    for (name, t) in c.lp.inputs.iter().zip(tiles) {
+        inputs.insert(name.clone(), t.clone());
+    }
+    simulate(&c.design, &c.graph, &inputs).unwrap().output.data
+}
+
+/// The acceptance-criteria scenario: one port, two registered apps,
+/// two concurrent clients, every response bit-exact vs `pushmem run`.
+#[test]
+fn two_apps_two_concurrent_clients_bit_exact() {
+    let registry = Arc::new(CompiledRegistry::new());
+    let addr = spawn_multi_server(Arc::clone(&registry), 2);
+
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for app in ["gaussian", "unsharp"] {
+            let registry = Arc::clone(&registry);
+            handles.push(s.spawn(move || {
+                // Lazy path: the first request for each app compiles it
+                // inside the registry (shared with the server).
+                let c = registry.get(app).unwrap();
+                let mut stream = TcpStream::connect(addr).unwrap();
+                for k in 0..3 {
+                    let tiles = tiles_for(&c, k);
+                    let refs: Vec<&Tensor> = tiles.iter().collect();
+                    let (words, cycles, _) =
+                        serve::request_app(&mut stream, app, &refs).unwrap();
+                    assert_eq!(words, expected(&c, &tiles), "{app} tile {k}");
+                    assert_eq!(cycles as i64, c.graph.completion, "{app} tile {k}");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+
+    // Both designs are now cached in the shared registry.
+    let names = registry.compiled_names();
+    assert!(names.contains(&"gaussian".to_string()), "{names:?}");
+    assert!(names.contains(&"unsharp".to_string()), "{names:?}");
+}
+
+/// v1 frames (no app name) must keep working against the
+/// single-app `pushmem serve <app>` configuration.
+#[test]
+fn v1_frames_still_accepted_on_single_app_server() {
+    let (program, _) = pushmem::apps::by_name("gaussian").unwrap();
+    let c = pushmem::coordinator::compile(&program).unwrap();
+    let tiles = tiles_for(&c, 0);
+    let expect = expected(&c, &tiles);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || serve::serve_on(listener, ServeConfig::single("gaussian", c)));
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let refs: Vec<&Tensor> = tiles.iter().collect();
+    let (words, cycles, _) = serve::request(&mut stream, &refs).unwrap();
+    assert_eq!(words, expect);
+    assert!(cycles > 0);
+}
+
+/// One connection may interleave v2 requests for different apps.
+#[test]
+fn one_connection_switches_apps() {
+    let registry = Arc::new(CompiledRegistry::new());
+    let addr = spawn_multi_server(Arc::clone(&registry), 1);
+    let mut stream = TcpStream::connect(addr).unwrap();
+
+    for app in ["gaussian", "unsharp", "gaussian"] {
+        let c = registry.get(app).unwrap();
+        let tiles = tiles_for(&c, 9);
+        let refs: Vec<&Tensor> = tiles.iter().collect();
+        let (words, _, _) = serve::request_app(&mut stream, app, &refs).unwrap();
+        assert_eq!(words, expected(&c, &tiles), "{app}");
+    }
+}
+
+/// Unknown apps get a status frame, not a hang or a silent close.
+#[test]
+fn unknown_app_reports_status() {
+    let registry = Arc::new(CompiledRegistry::new());
+    let addr = spawn_multi_server(registry, 1);
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let t = Tensor::from_data(pushmem::poly::BoxSet::from_extents(&[4]), vec![1, 2, 3, 4]);
+    let err = serve::request_app(&mut stream, "not_an_app", &[&t]).unwrap_err();
+    assert!(err.to_string().contains("status 1"), "{err:#}");
+}

@@ -1,0 +1,121 @@
+//! Offline stub of the `xla` (xla-rs) PJRT binding surface that
+//! [`pushmem::runtime`] uses. This image vendors no `xla_extension`
+//! shared library, so every constructor fails at runtime with a clear
+//! message; callers already degrade gracefully (`Runtime::cpu().ok()`
+//! skips XLA validation, tests early-return). Swapping in the real
+//! bindings is a one-line change to the root Cargo.toml `xla`
+//! dependency — the types and signatures here mirror the real crate's
+//! usage exactly, so no source change is needed. See DESIGN.md §3.
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: xla_extension is not vendored in this image (offline stub; see DESIGN.md §3)"
+    )))
+}
+
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1<T>(_values: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        unavailable("Literal::to_tuple1")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_fail_loudly() {
+        let err = PjRtClient::cpu().err().expect("stub must not pretend to work");
+        assert!(err.to_string().contains("offline stub"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}

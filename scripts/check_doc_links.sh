@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Docs-link check: every repo-relative *.md path referenced from a
+# rustdoc comment (//! or ///) must exist, so source comments can never
+# dangle again (serve.rs once cited a DESIGN.md §2 that did not exist).
+# Absolute paths (e.g. /opt/...) are outside the repo and skipped.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+status=0
+refs=$(grep -rhoE '//[/!].*' --include='*.rs' rust examples 2>/dev/null \
+  | grep -oE '[A-Za-z0-9_./-]*\.md' \
+  | grep -v '^/' \
+  | sed 's#^\./##' \
+  | sort -u)
+
+for ref in $refs; do
+  if [ ! -e "$ref" ]; then
+    echo "dangling doc reference: $ref" >&2
+    grep -rln --include='*.rs' "$ref" rust examples | sed 's/^/  referenced from: /' >&2
+    status=1
+  fi
+done
+
+if [ "$status" -eq 0 ]; then
+  count=$(printf '%s\n' "$refs" | grep -c . || true)
+  echo "doc links ok ($count distinct .md references)"
+fi
+exit $status
