@@ -1,8 +1,9 @@
 # `make artifacts` AOT-lowers the JAX golden models to HLO text (the
 # validation oracle + CPU baseline — python is never on the rust
 # request path; see DESIGN.md §1). `make verify` is the tier-1 check.
+# `make tune-smoke` is the CI smoke run of the DSE tuner (docs/dse.md).
 
-.PHONY: artifacts verify clean
+.PHONY: artifacts verify tune-smoke clean
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -10,6 +11,9 @@ artifacts:
 verify:
 	cargo build --release && cargo test -q
 
+tune-smoke:
+	cargo run --release -- tune gaussian --budget 8 --workers 2
+
 clean:
 	cargo clean
-	rm -rf artifacts
+	rm -rf artifacts dse-cache

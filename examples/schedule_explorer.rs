@@ -40,5 +40,9 @@ fn main() -> anyhow::Result<()> {
          resources; a larger tile\nruns ~4x longer on the same hardware; \
          host offload trims both counts."
     );
+    println!(
+        "\nThis exploration is automated by `pushmem tune harris` \
+         (docs/dse.md),\nwhich searches these axes and more, in parallel."
+    );
     Ok(())
 }

@@ -1,0 +1,81 @@
+//! DSE tuner baseline on the paper's schedule-exploration subject
+//! (§VI-C, Table V): candidates-evaluated/sec and tuned-best vs the
+//! six hand-written Harris schedules, so future PRs can track tuner
+//! throughput and search quality.
+//!
+//! Runs at tile 24 (not the paper's 60) to keep the bench quick; the
+//! paper-scale run is `pushmem tune harris`.
+
+#[path = "harness.rs"]
+mod harness;
+
+use pushmem::apps::harris::{build, Schedule};
+use pushmem::dse::{self, Objective, SpaceConfig, TuneConfig};
+
+fn main() {
+    harness::rule("DSE: Harris schedule auto-tuning (tile 24)");
+
+    // Hand-written Table V baselines, simulated with the same scorer
+    // the tuner uses. Tiles differ across rows (sch5 is 2x per side),
+    // so the comparison metric is cycles per output pixel.
+    println!(
+        "{:<24} {:>10} {:>5} {:>8} {:>6} {:>6}",
+        "hand-written", "cycles", "tile", "cyc/px", "PEs", "MEMs"
+    );
+    let mut hand_best: Option<(f64, &str)> = None;
+    for b in dse::table5_baselines(24) {
+        match b.eval {
+            Ok(e) => {
+                let cpp = dse::cycles_per_pixel(e.cycles, &[b.tile, b.tile]);
+                if hand_best.map_or(true, |(c, _)| cpp < c) {
+                    hand_best = Some((cpp, b.label));
+                }
+                println!(
+                    "{:<24} {:>10} {:>5} {:>8.3} {:>6} {:>6}",
+                    b.label, e.cycles, b.tile, cpp, e.pes, e.mems
+                );
+            }
+            Err(err) => println!("{:<24} failed: {err:#}", b.label),
+        }
+    }
+
+    let cfg = TuneConfig {
+        objective: Objective::Cycles,
+        budget: 24,
+        workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        seed: 1,
+        cache_dir: None,
+        space: SpaceConfig::default(),
+    };
+    let report = dse::tune_program(&build(24, Schedule::NoRecompute), "harris_t24", &cfg)
+        .expect("tuner failed");
+
+    println!(
+        "\ntuner: {} enumerated, {} pruned, {} simulated (+{} failed) in {:.2} s",
+        report.enumerated, report.infeasible, report.evaluated, report.failed,
+        report.eval_seconds
+    );
+    println!(
+        "bench {:<40} {:>10.2} candidates/s",
+        "dse_harris/evaluation_throughput",
+        report.evals_per_sec()
+    );
+    let best = report.best().expect("no valid candidate");
+    let tuned_tile = best.entry.schedule().map(|s| s.tile).unwrap_or_default();
+    let tuned_cpp = dse::cycles_per_pixel(best.entry.cycles, &tuned_tile);
+    println!(
+        "bench {:<40} {:>10.3} cyc/px  (schedule {})",
+        "dse_harris/tuned_best", tuned_cpp, best.entry.encoded
+    );
+    if let Some((cpp, label)) = hand_best {
+        println!(
+            "bench {:<40} {:>10.3} cyc/px  ({label})",
+            "dse_harris/hand_written_best", cpp
+        );
+        println!(
+            "tuned vs hand-written: {:.2}x  ({})",
+            cpp / tuned_cpp,
+            if tuned_cpp <= cpp { "tuner >= hand-written" } else { "hand-written ahead" }
+        );
+    }
+}

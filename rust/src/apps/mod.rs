@@ -26,7 +26,14 @@ pub mod resnet;
 pub mod unsharp;
 pub mod upsample;
 
-use crate::halide::Program;
+use anyhow::{Context, Result};
+
+use crate::cgra::{simulate, SimStats};
+use crate::extraction::extract;
+use crate::halide::{lower, LoweredPipeline, Program};
+use crate::mapping::{map_design, MappedDesign};
+use crate::sched::{self, PipelineSchedule};
+use crate::ub::UbGraph;
 
 /// All seven evaluation applications at paper-scale tiles.
 pub fn all() -> Vec<Program> {
@@ -99,6 +106,50 @@ pub const NAMES: &[&str] = &[
     "mobilenet",
 ];
 
+/// Everything `compile_checked` produced for one program, plus the
+/// cycle-accurate simulation statistics of its validated run.
+pub struct CheckedRun {
+    pub lp: LoweredPipeline,
+    pub schedule: PipelineSchedule,
+    pub graph: UbGraph,
+    pub design: MappedDesign,
+    pub stats: SimStats,
+}
+
+/// Compile `p` end to end (lower → schedule → extract → map), simulate
+/// it cycle-accurately on the deterministic pseudo-random input stream,
+/// and verify the simulated output bit-exact against the functional
+/// reference execution.
+///
+/// Every failure — an infeasible lowering, a scheduling or mapping
+/// error, a simulator fault, or an output mismatch — comes back as
+/// `Err`, never a panic, so callers sweeping many schedules (the
+/// [`crate::dse`] tuner) survive individual bad candidates.
+pub fn compile_checked(p: &Program) -> Result<CheckedRun> {
+    let lp = lower::lower(p).with_context(|| format!("{}: lower", p.name))?;
+    let ps = sched::schedule(&lp).with_context(|| format!("{}: sched", p.name))?;
+    let g = extract(&lp, &ps).with_context(|| format!("{}: extract", p.name))?;
+    let d = map_design(&g).with_context(|| format!("{}: map", p.name))?;
+
+    let ins = crate::coordinator::gen_inputs(&lp);
+    let golden = lp
+        .execute(&ins)
+        .with_context(|| format!("{}: reference exec", p.name))?;
+    let res = simulate(&d, &g, &ins).with_context(|| format!("{}: simulate", p.name))?;
+    let out = &golden[&lp.output];
+    for pt in out.shape.points() {
+        // The simulator's output box may be halo-rounded; compare on
+        // the reference box.
+        let (got, want) = (res.output.get(&pt), out.get(&pt));
+        anyhow::ensure!(
+            got == want,
+            "{}: output mismatch at {pt:?}: simulated {got}, reference {want}",
+            p.name
+        );
+    }
+    Ok(CheckedRun { lp, schedule: ps, graph: g, design: d, stats: res.stats })
+}
+
 /// Small variants for tests.
 pub fn all_small() -> Vec<Program> {
     vec![
@@ -114,54 +165,13 @@ pub fn all_small() -> Vec<Program> {
 
 #[cfg(test)]
 pub(crate) mod testutil {
-    use std::collections::BTreeMap;
+    use crate::halide::{LoweredPipeline, Program};
 
-    use crate::cgra::simulate;
-    use crate::extraction::extract;
-    use crate::halide::{lower, LoweredPipeline, Program};
-    use crate::mapping::map_design;
-    use crate::sched;
-    use crate::tensor::Tensor;
-
-    /// Compile an app end to end, simulate it cycle-accurately on
-    /// pseudo-random inputs, and compare bit-exactly with the
-    /// functional reference execution.
+    /// Test-side wrapper over [`super::compile_checked`]: compile,
+    /// simulate, validate bit-exact, panicking with the full error
+    /// chain on any failure (tests want the loud path).
     pub fn compile_and_validate(p: &Program) -> (LoweredPipeline, crate::cgra::SimStats) {
-        let lp = lower::lower(p).unwrap_or_else(|e| panic!("{}: lower: {e:#}", p.name));
-        let ps = sched::schedule(&lp).unwrap_or_else(|e| panic!("{}: sched: {e:#}", p.name));
-        let g = extract(&lp, &ps).unwrap_or_else(|e| panic!("{}: extract: {e:#}", p.name));
-        let d = map_design(&g).unwrap_or_else(|e| panic!("{}: map: {e:#}", p.name));
-
-        let mut ins: BTreeMap<String, Tensor> = BTreeMap::new();
-        for (i, name) in lp.inputs.iter().enumerate() {
-            let seed = 17 + 11 * i as i64;
-            ins.insert(
-                name.clone(),
-                Tensor::from_fn(lp.buffers[name].clone(), |pt| {
-                    let mut h = seed;
-                    for &v in pt {
-                        h = h.wrapping_mul(31).wrapping_add(v + 7);
-                    }
-                    (h.rem_euclid(253)) as i32
-                }),
-            );
-        }
-        let golden = lp
-            .execute(&ins)
-            .unwrap_or_else(|e| panic!("{}: reference exec: {e:#}", p.name));
-        let res = simulate(&d, &g, &ins)
-            .unwrap_or_else(|e| panic!("{}: simulate: {e:#}", p.name));
-        let out = &golden[&lp.output];
-        for pt in out.shape.points() {
-            // The simulator's output box may be halo-rounded; compare
-            // on the reference box.
-            assert_eq!(
-                res.output.get(&pt),
-                out.get(&pt),
-                "{}: mismatch at {pt:?}",
-                p.name
-            );
-        }
-        (lp, res.stats)
+        let run = super::compile_checked(p).unwrap_or_else(|e| panic!("{e:#}"));
+        (run.lp, run.stats)
     }
 }

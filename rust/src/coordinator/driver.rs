@@ -2,6 +2,7 @@
 //! intermediate for inspection, simulation, and reporting.
 
 use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{bail, Context, Result};
@@ -62,13 +63,29 @@ pub fn compile(program: &Program) -> Result<Compiled> {
 /// Failures are cached too: a bad app name cannot trigger a
 /// recompilation storm. Designs are handed out as `Arc<Compiled>` so
 /// every connection shares one copy (see DESIGN.md §2).
+///
+/// A registry built [`with_tuned_dir`](Self::with_tuned_dir) consults
+/// the [`crate::dse`] result cache before compiling: when the tuner
+/// recorded a best schedule for an app (`<dir>/<app>.best`), that
+/// schedule replaces the hand-written default. A missing, malformed,
+/// or invalid record — or a tuned schedule that fails to compile —
+/// falls back to the hand-written schedule
+/// ([`compile_maybe_tuned`]): tuned serving must never be less
+/// available than untuned serving.
 pub struct CompiledRegistry {
     slots: Mutex<BTreeMap<String, Arc<OnceLock<Result<Arc<Compiled>, String>>>>>,
+    tuned_dir: Option<PathBuf>,
 }
 
 impl CompiledRegistry {
     pub fn new() -> CompiledRegistry {
-        CompiledRegistry { slots: Mutex::new(BTreeMap::new()) }
+        CompiledRegistry { slots: Mutex::new(BTreeMap::new()), tuned_dir: None }
+    }
+
+    /// A registry that serves tuner-recorded schedules from `dir`
+    /// (the `pushmem serve --tuned-dir` path).
+    pub fn with_tuned_dir(dir: impl Into<PathBuf>) -> CompiledRegistry {
+        CompiledRegistry { slots: Mutex::new(BTreeMap::new()), tuned_dir: Some(dir.into()) }
     }
 
     fn slot(&self, name: &str) -> Arc<OnceLock<Result<Arc<Compiled>, String>>> {
@@ -87,7 +104,9 @@ impl CompiledRegistry {
         let entry = slot.get_or_init(|| match crate::apps::by_name(name) {
             None => Err(format!("unknown app {name:?} (see `pushmem list`)")),
             Some((program, _)) => {
-                compile(&program).map(Arc::new).map_err(|e| format!("{e:#}"))
+                compile_maybe_tuned(&program, name, self.tuned_dir.as_deref())
+                    .map(Arc::new)
+                    .map_err(|e| format!("{e:#}"))
             }
         });
         match entry {
@@ -133,6 +152,72 @@ impl CompiledRegistry {
 impl Default for CompiledRegistry {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+/// Compile `program`, preferring the [`crate::dse`] tuner's recorded
+/// schedule from `dir` when one exists — the policy behind
+/// `serve --tuned-dir`, shared by the registry and the CLI. A tuned
+/// schedule that is missing, malformed, fails validation, **or fails
+/// to compile** (e.g. a stale record from before the app changed)
+/// falls back to the hand-written schedule: tuned serving must never
+/// be less available than untuned serving.
+pub fn compile_maybe_tuned(
+    program: &Program,
+    name: &str,
+    tuned_dir: Option<&Path>,
+) -> Result<Compiled> {
+    if let Some(dir) = tuned_dir {
+        let mut tuned = program.clone();
+        if apply_tuned_schedule(&mut tuned, name, dir) {
+            match compile(&tuned) {
+                Ok(c) => return Ok(c),
+                Err(e) => eprintln!(
+                    "[tuned] {name}: tuned schedule failed to compile ({e:#}); \
+                     falling back to the hand-written schedule"
+                ),
+            }
+        }
+    }
+    compile(program)
+}
+
+/// Swap in the tuner's recorded best schedule for `name` when `dir`
+/// holds a structurally valid record; keep the hand-written one
+/// otherwise. Returns whether a tuned schedule was applied. (Compile
+/// failures are the caller's concern — [`compile_maybe_tuned`] adds
+/// that fallback.)
+pub fn apply_tuned_schedule(program: &mut Program, name: &str, dir: &Path) -> bool {
+    match crate::dse::cache::load_best(dir, name) {
+        Some((sched, entry)) => {
+            let funcs: Vec<String> = program.funcs.iter().map(|f| f.name.clone()).collect();
+            match sched.validate(&funcs) {
+                Ok(()) => {
+                    eprintln!(
+                        "[tuned] {name}: schedule {} ({} cycles) from {}",
+                        entry.key,
+                        entry.cycles,
+                        dir.display()
+                    );
+                    program.schedule = sched;
+                    true
+                }
+                Err(e) => {
+                    eprintln!(
+                        "[tuned] {name}: ignoring invalid tuned schedule {}: {e:#}",
+                        entry.key
+                    );
+                    false
+                }
+            }
+        }
+        None => {
+            eprintln!(
+                "[tuned] {name}: no record in {}; using the hand-written schedule",
+                dir.display()
+            );
+            false
+        }
     }
 }
 
@@ -203,6 +288,90 @@ mod tests {
         reg.insert("g14", Arc::new(compile(&apps::gaussian::build(14)).unwrap()));
         let ok = reg.warm(&["g14", "no_such_app"]);
         assert_eq!(ok, 1);
+    }
+
+    #[test]
+    fn registry_applies_tuned_schedule() {
+        use crate::dse::cache::{candidate_key, encode_schedule, CacheEntry, DseCache};
+        use crate::halide::HwSchedule;
+
+        let dir = std::env::temp_dir()
+            .join(format!("pushmem-tuned-registry-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        // Record a "tuned" gaussian schedule with a small tile (fast to
+        // compile) and mark it best.
+        let sched = HwSchedule::new([14, 14]);
+        let entry = CacheEntry {
+            key: candidate_key("gaussian", &sched),
+            cycles: 999,
+            completion: 999,
+            pes: 19,
+            mems: 1,
+            sram_words: 64,
+            energy_per_op_pj: 1.0,
+            pixels_per_cycle: 1.0,
+            area_um2: 1.0,
+            encoded: encode_schedule(&sched),
+        };
+        let key = entry.key.clone();
+        let mut c = DseCache::open(&dir, "gaussian").unwrap();
+        c.record(entry).unwrap();
+        c.write_best(&key).unwrap();
+
+        let reg = CompiledRegistry::with_tuned_dir(&dir);
+        let compiled = reg.get("gaussian").unwrap();
+        assert_eq!(compiled.lp.tile, vec![14, 14], "tuned tile not applied");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn registry_falls_back_on_malformed_tuned_record() {
+        let dir = std::env::temp_dir()
+            .join(format!("pushmem-tuned-bad-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("gaussian.best"), "not a cache line\n").unwrap();
+        // The full get() path must fall back to the hand-written
+        // schedule (tile 62) when the record cannot be parsed.
+        let reg = CompiledRegistry::with_tuned_dir(&dir);
+        let c = reg.get("gaussian").unwrap();
+        assert_eq!(c.lp.tile, vec![62, 62]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn registry_falls_back_when_tuned_schedule_fails_to_compile() {
+        use crate::dse::cache::{candidate_key, encode_schedule, CacheEntry, DseCache};
+        use crate::halide::HwSchedule;
+
+        let dir = std::env::temp_dir()
+            .join(format!("pushmem-tuned-stale-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        // Rank-3 tile: structurally valid (positive extents, no func
+        // names to miss), but lowering rejects it against gaussian's
+        // rank-2 output — the stale-record shape.
+        let sched = HwSchedule::new([14, 14, 14]);
+        let entry = CacheEntry {
+            key: candidate_key("gaussian", &sched),
+            cycles: 1,
+            completion: 1,
+            pes: 1,
+            mems: 1,
+            sram_words: 1,
+            energy_per_op_pj: 1.0,
+            pixels_per_cycle: 1.0,
+            area_um2: 1.0,
+            encoded: encode_schedule(&sched),
+        };
+        let key = entry.key.clone();
+        let mut cache = DseCache::open(&dir, "gaussian").unwrap();
+        cache.record(entry).unwrap();
+        cache.write_best(&key).unwrap();
+
+        let reg = CompiledRegistry::with_tuned_dir(&dir);
+        let c = reg.get("gaussian").unwrap();
+        assert_eq!(c.lp.tile, vec![62, 62], "hand-written fallback not used");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

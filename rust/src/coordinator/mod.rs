@@ -16,7 +16,9 @@ pub mod report;
 pub mod serve;
 pub mod validate;
 
-pub use driver::{compile, gen_inputs, Compiled, CompiledRegistry};
+pub use driver::{
+    apply_tuned_schedule, compile, compile_maybe_tuned, gen_inputs, Compiled, CompiledRegistry,
+};
 pub use globalbuf::GlobalBuffer;
 pub use report::{report_app, sequential_comparison, AppReport, SequentialComparison};
 pub use validate::{validate, Validation};

@@ -1,0 +1,369 @@
+//! Content-addressed result cache for the schedule tuner.
+//!
+//! Every evaluated candidate is keyed by a hash of its *canonical
+//! schedule encoding* (plus the app name), so re-running the tuner —
+//! with a different budget, seed, or objective — never re-simulates a
+//! schedule it has already scored, and `pushmem serve --tuned-dir`
+//! can pick up the winner without recompiling the search.
+//!
+//! On-disk format (specified in docs/dse.md): one TSV file per app,
+//! `<dir>/<app>.tsv`, each line
+//!
+//! ```text
+//! key  cycles  completion  pes  mems  sram_words  energy_per_op_pj \
+//!      pixels_per_cycle  area_um2  schedule-encoding
+//! ```
+//!
+//! plus `<dir>/<app>.best` holding the single winning line. Lines
+//! starting with `#` and lines that fail to parse are skipped on load
+//! (forward compatibility), and a corrupt `.best` simply means "no
+//! tuned schedule" — serving falls back to the hand-written default.
+//!
+//! No serde is vendored in this offline image, so the schedule
+//! encoding is a hand-rolled `field=value|...` string with set-valued
+//! fields sorted, making it canonical: two `HwSchedule`s that differ
+//! only in directive order hash identically.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::halide::HwSchedule;
+
+/// FNV-1a 64-bit: tiny, dependency-free, stable across platforms —
+/// exactly what a content address needs here (not cryptographic; the
+/// cache is a local performance artifact, not a trust boundary).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The cache key of one candidate: hex FNV-1a over app name + the
+/// canonical schedule encoding.
+pub fn candidate_key(app: &str, sched: &HwSchedule) -> String {
+    format!("{:016x}", fnv1a64(format!("{app}\n{}", encode_schedule(sched)).as_bytes()))
+}
+
+fn sorted_join(v: &[String]) -> String {
+    let mut v = v.to_vec();
+    v.sort();
+    v.dedup();
+    v.join(",")
+}
+
+/// Canonical text encoding of a schedule. Set-valued directives
+/// (`mem`, `runroll`, `host`) are sorted and deduped; `unroll` keeps
+/// per-func split order (successive splits of one var are not
+/// commutative) but iterates funcs in `BTreeMap` order. Empty
+/// sections are omitted; `tile` is always present.
+pub fn encode_schedule(s: &HwSchedule) -> String {
+    let tile: Vec<String> = s.tile.iter().map(|e| e.to_string()).collect();
+    let mut parts = vec![format!("tile={}", tile.join("x"))];
+    if !s.memories.is_empty() {
+        parts.push(format!("mem={}", sorted_join(&s.memories)));
+    }
+    if !s.unroll.is_empty() {
+        let entries: Vec<String> = s
+            .unroll
+            .iter()
+            .flat_map(|(f, es)| es.iter().map(move |(v, u)| format!("{f}:{v}:{u}")))
+            .collect();
+        parts.push(format!("unroll={}", entries.join(",")));
+    }
+    if !s.unroll_reductions.is_empty() {
+        parts.push(format!("runroll={}", sorted_join(&s.unroll_reductions)));
+    }
+    if !s.host_stages.is_empty() {
+        parts.push(format!("host={}", sorted_join(&s.host_stages)));
+    }
+    parts.join("|")
+}
+
+fn name_list(v: &str) -> Vec<String> {
+    v.split(',').filter(|s| !s.is_empty()).map(|s| s.to_string()).collect()
+}
+
+/// Inverse of [`encode_schedule`]. The decoded schedule is structural
+/// only — run [`HwSchedule::validate`] against the target program's
+/// funcs before compiling with it.
+pub fn decode_schedule(enc: &str) -> Result<HwSchedule> {
+    let mut s = HwSchedule::default();
+    for part in enc.split('|') {
+        let (k, v) = part
+            .split_once('=')
+            .with_context(|| format!("bad schedule field {part:?}"))?;
+        match k {
+            "tile" => {
+                s.tile = v
+                    .split('x')
+                    .map(|t| t.parse::<i64>().with_context(|| format!("bad tile extent {t:?}")))
+                    .collect::<Result<Vec<i64>>>()?;
+            }
+            "mem" => s.memories = name_list(v),
+            "unroll" => {
+                for e in v.split(',').filter(|e| !e.is_empty()) {
+                    let fields: Vec<&str> = e.split(':').collect();
+                    let &[f, var, u] = fields.as_slice() else {
+                        bail!("bad unroll entry {e:?} (want func:var:factor)");
+                    };
+                    let factor: i64 =
+                        u.parse().with_context(|| format!("bad unroll factor {u:?}"))?;
+                    s.unroll
+                        .entry(f.to_string())
+                        .or_default()
+                        .push((var.to_string(), factor));
+                }
+            }
+            "runroll" => s.unroll_reductions = name_list(v),
+            "host" => s.host_stages = name_list(v),
+            other => bail!("unknown schedule field {other:?}"),
+        }
+    }
+    anyhow::ensure!(!s.tile.is_empty(), "schedule encoding {enc:?} has no tile");
+    Ok(s)
+}
+
+/// One scored candidate as persisted in the cache.
+#[derive(Clone, Debug)]
+pub struct CacheEntry {
+    pub key: String,
+    pub cycles: i64,
+    pub completion: i64,
+    pub pes: usize,
+    pub mems: usize,
+    pub sram_words: i64,
+    pub energy_per_op_pj: f64,
+    pub pixels_per_cycle: f64,
+    pub area_um2: f64,
+    /// Canonical schedule encoding ([`encode_schedule`]).
+    pub encoded: String,
+}
+
+impl CacheEntry {
+    pub fn schedule(&self) -> Result<HwSchedule> {
+        decode_schedule(&self.encoded)
+    }
+
+    fn to_line(&self) -> String {
+        format!(
+            "{}\t{}\t{}\t{}\t{}\t{}\t{:.6}\t{:.6}\t{:.1}\t{}",
+            self.key,
+            self.cycles,
+            self.completion,
+            self.pes,
+            self.mems,
+            self.sram_words,
+            self.energy_per_op_pj,
+            self.pixels_per_cycle,
+            self.area_um2,
+            self.encoded
+        )
+    }
+
+    fn parse_line(line: &str) -> Result<CacheEntry> {
+        let f: Vec<&str> = line.split('\t').collect();
+        let &[key, cycles, completion, pes, mems, sram, energy, ppc, area, encoded] =
+            f.as_slice()
+        else {
+            bail!("cache line has {} fields, want 10", f.len());
+        };
+        Ok(CacheEntry {
+            key: key.to_string(),
+            cycles: cycles.parse().context("cycles")?,
+            completion: completion.parse().context("completion")?,
+            pes: pes.parse().context("pes")?,
+            mems: mems.parse().context("mems")?,
+            sram_words: sram.parse().context("sram_words")?,
+            energy_per_op_pj: energy.parse().context("energy_per_op_pj")?,
+            pixels_per_cycle: ppc.parse().context("pixels_per_cycle")?,
+            area_um2: area.parse().context("area_um2")?,
+            encoded: encoded.to_string(),
+        })
+    }
+}
+
+const HEADER: &str = "# pushmem dse cache v1: key cycles completion pes mems \
+sram_words energy_per_op_pj pixels_per_cycle area_um2 schedule";
+
+/// The per-app result cache: an in-memory index over `<dir>/<app>.tsv`,
+/// appended on every [`record`](DseCache::record).
+pub struct DseCache {
+    path: PathBuf,
+    best_path: PathBuf,
+    entries: BTreeMap<String, CacheEntry>,
+}
+
+impl DseCache {
+    /// Open (creating `dir` if needed) and load the cache for `app`.
+    /// Malformed lines are skipped, not fatal.
+    pub fn open(dir: &Path, app: &str) -> Result<DseCache> {
+        fs::create_dir_all(dir)
+            .with_context(|| format!("creating cache dir {}", dir.display()))?;
+        let path = dir.join(format!("{app}.tsv"));
+        let best_path = dir.join(format!("{app}.best"));
+        let mut entries = BTreeMap::new();
+        if path.exists() {
+            let text = fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            for line in text.lines() {
+                if line.is_empty() || line.starts_with('#') {
+                    continue;
+                }
+                if let Ok(e) = CacheEntry::parse_line(line) {
+                    entries.insert(e.key.clone(), e);
+                }
+            }
+        }
+        Ok(DseCache { path, best_path, entries })
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn lookup(&self, key: &str) -> Option<&CacheEntry> {
+        self.entries.get(key)
+    }
+
+    /// Persist one scored candidate (append + index). Re-recording an
+    /// existing key overwrites the index entry; the duplicate line is
+    /// harmless (last one wins on reload).
+    pub fn record(&mut self, entry: CacheEntry) -> Result<()> {
+        let fresh = !self.path.exists();
+        let mut f = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+            .with_context(|| format!("opening {}", self.path.display()))?;
+        if fresh {
+            writeln!(f, "{HEADER}")?;
+        }
+        writeln!(f, "{}", entry.to_line())?;
+        self.entries.insert(entry.key.clone(), entry);
+        Ok(())
+    }
+
+    /// Mark `key` as the tuned-best schedule (`<app>.best`), the record
+    /// `pushmem serve --tuned-dir` loads.
+    pub fn write_best(&self, key: &str) -> Result<()> {
+        let e = self
+            .entries
+            .get(key)
+            .with_context(|| format!("best key {key} not in cache"))?;
+        fs::write(&self.best_path, format!("{}\n", e.to_line()))
+            .with_context(|| format!("writing {}", self.best_path.display()))
+    }
+}
+
+/// Load the tuned-best schedule for `app`, if one was recorded — the
+/// coordinator hook behind `--tuned-dir`. Any missing or malformed
+/// file is `None`: serving falls back to the hand-written schedule.
+pub fn load_best(dir: &Path, app: &str) -> Option<(HwSchedule, CacheEntry)> {
+    let text = fs::read_to_string(dir.join(format!("{app}.best"))).ok()?;
+    let entry = CacheEntry::parse_line(text.lines().next()?.trim()).ok()?;
+    let sched = entry.schedule().ok()?;
+    Some((sched, entry))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_schedule() -> HwSchedule {
+        HwSchedule::new([60, 60])
+            .store_at("iy")
+            .store_at("ix")
+            .unroll("resp", "x", 2)
+            .unroll_reduction("conv")
+            .on_host("corners")
+    }
+
+    #[test]
+    fn encoding_roundtrips() {
+        let s = sample_schedule();
+        let enc = encode_schedule(&s);
+        let d = decode_schedule(&enc).unwrap();
+        assert_eq!(encode_schedule(&d), enc);
+        assert_eq!(d.tile, vec![60, 60]);
+        assert_eq!(d.memories, vec!["ix".to_string(), "iy".to_string()]);
+        assert_eq!(d.unroll_factors("resp"), &[("x".to_string(), 2)]);
+        assert!(d.is_reduction_unrolled("conv"));
+        assert_eq!(d.host_stages, vec!["corners".to_string()]);
+    }
+
+    #[test]
+    fn encoding_is_canonical_under_directive_order() {
+        let a = HwSchedule::new([8, 8]).store_at("p").store_at("q");
+        let b = HwSchedule::new([8, 8]).store_at("q").store_at("p");
+        assert_eq!(encode_schedule(&a), encode_schedule(&b));
+        assert_eq!(candidate_key("app", &a), candidate_key("app", &b));
+    }
+
+    #[test]
+    fn key_depends_on_app_and_schedule() {
+        let s = HwSchedule::new([8, 8]);
+        assert_ne!(candidate_key("a", &s), candidate_key("b", &s));
+        assert_ne!(
+            candidate_key("a", &s),
+            candidate_key("a", &HwSchedule::new([16, 8]))
+        );
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(decode_schedule("").is_err());
+        assert!(decode_schedule("mem=a").is_err()); // no tile
+        assert!(decode_schedule("tile=4x4|wat=1").is_err());
+        assert!(decode_schedule("tile=4xfour").is_err());
+        assert!(decode_schedule("tile=4|unroll=f:x").is_err());
+    }
+
+    #[test]
+    fn cache_roundtrips_on_disk() {
+        let dir = std::env::temp_dir()
+            .join(format!("pushmem-dse-cache-test-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let s = sample_schedule();
+        let entry = CacheEntry {
+            key: candidate_key("toy", &s),
+            cycles: 1234,
+            completion: 1200,
+            pes: 42,
+            mems: 7,
+            sram_words: 4096,
+            energy_per_op_pj: 2.25,
+            pixels_per_cycle: 1.0,
+            area_um2: 123456.7,
+            encoded: encode_schedule(&s),
+        };
+        {
+            let mut c = DseCache::open(&dir, "toy").unwrap();
+            assert!(c.is_empty());
+            c.record(entry.clone()).unwrap();
+            c.write_best(&entry.key).unwrap();
+        }
+        // Fresh open sees the entry; load_best round-trips the schedule.
+        let c = DseCache::open(&dir, "toy").unwrap();
+        assert_eq!(c.len(), 1);
+        let got = c.lookup(&entry.key).unwrap();
+        assert_eq!(got.cycles, 1234);
+        assert_eq!(got.encoded, entry.encoded);
+        let (sched, best) = load_best(&dir, "toy").unwrap();
+        assert_eq!(encode_schedule(&sched), entry.encoded);
+        assert_eq!(best.key, entry.key);
+        // Unknown app: no best.
+        assert!(load_best(&dir, "nope").is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,126 @@
+//! Candidate scoring: full compile + cycle-accurate simulation +
+//! bit-exact validation, wrapped in one `Result`.
+//!
+//! This is the expensive stage the analytic prune protects. It rides
+//! the same [`crate::apps::compile_checked`] path the test suite uses,
+//! so a candidate that scores here has *already* been validated
+//! bit-exact against the functional reference — an unvalidated design
+//! can never enter the ranking or the cache.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::apps::compile_checked;
+use crate::cost::{design_area_um2, energy_per_op_pj};
+use crate::halide::Program;
+
+/// The simulated metrics of one validated candidate.
+#[derive(Clone, Debug)]
+pub struct Evaluation {
+    /// Simulated cycles for one tile, including output drain.
+    pub cycles: i64,
+    /// Scheduled completion (the Table V/VI figure).
+    pub completion: i64,
+    pub coarse_ii: i64,
+    pub pes: usize,
+    pub mems: usize,
+    pub sram_words: i64,
+    pub sr_words: i64,
+    pub pixels_per_cycle: f64,
+    pub energy_per_op_pj: f64,
+    pub area_um2: f64,
+    /// Wall-clock seconds this evaluation took (tuner throughput).
+    pub eval_seconds: f64,
+}
+
+/// Compile, simulate, and validate `program`; score the run. Any
+/// failure — including an output mismatch — is `Err`.
+pub fn evaluate(program: &Program) -> Result<Evaluation> {
+    let t0 = Instant::now();
+    let run = compile_checked(program)?;
+    Ok(Evaluation {
+        cycles: run.stats.cycles,
+        completion: run.graph.completion,
+        coarse_ii: run.graph.coarse_ii,
+        pes: run.design.pe_count(),
+        mems: run.design.mem_tiles(),
+        sram_words: run.design.sram_words(),
+        sr_words: run.design.sr_words(),
+        pixels_per_cycle: run.graph.output_pixels_per_cycle(),
+        energy_per_op_pj: energy_per_op_pj(&run.design, &run.stats),
+        area_um2: design_area_um2(&run.design),
+        eval_seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// One simulated hand-written Table V baseline.
+pub struct Baseline {
+    pub label: &'static str,
+    /// Realized output-tile side (sch5 doubles the base tile, so raw
+    /// cycle counts are not comparable across rows — normalize with
+    /// [`cycles_per_pixel`]).
+    pub tile: i64,
+    pub eval: Result<Evaluation>,
+}
+
+/// Cycles per output pixel — the tile-size-independent throughput
+/// figure used to compare schedules realized at different tiles
+/// (Table V sch5 runs a 2x-per-side tile).
+pub fn cycles_per_pixel(cycles: i64, tile: &[i64]) -> f64 {
+    cycles as f64 / tile.iter().product::<i64>().max(1) as f64
+}
+
+/// Simulate the six hand-written Table V Harris schedules (base tile
+/// `tile`; sch5 realizes at `2*tile`) with the tuner's own scorer —
+/// the comparison baseline that both `pushmem tune harris` and
+/// `benches/dse_harris.rs` print, defined once so the label table
+/// cannot drift between them.
+pub fn table5_baselines(tile: i64) -> Vec<Baseline> {
+    use crate::apps::harris::{build, Schedule};
+    [
+        ("sch1: recompute all", Schedule::RecomputeAll),
+        ("sch2: recompute some", Schedule::RecomputeSome),
+        ("sch3: no recompute", Schedule::NoRecompute),
+        ("sch4: unroll by 2", Schedule::UnrollBy2),
+        ("sch5: 4x larger tile", Schedule::BiggerTile),
+        ("sch6: last on host", Schedule::LastOnHost),
+    ]
+    .into_iter()
+    .map(|(label, s)| Baseline {
+        label,
+        tile: if s == Schedule::BiggerTile { tile * 2 } else { tile },
+        eval: evaluate(&build(tile, s)),
+    })
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::gaussian;
+
+    #[test]
+    fn evaluates_gaussian_small() {
+        let e = evaluate(&gaussian::build(12)).unwrap();
+        assert!(e.cycles >= 12 * 12);
+        assert!(e.pes > 0 && e.mems > 0);
+        assert!(e.energy_per_op_pj > 0.0 && e.area_um2 > 0.0);
+        assert!((e.pixels_per_cycle - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cycles_per_pixel_normalizes_tiles() {
+        assert!((cycles_per_pixel(3600, &[60, 60]) - 1.0).abs() < 1e-9);
+        assert!((cycles_per_pixel(14400, &[120, 120]) - 1.0).abs() < 1e-9);
+        // Degenerate tile never divides by zero.
+        assert!((cycles_per_pixel(5, &[]) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn infeasible_candidate_is_err_not_panic() {
+        let mut p = gaussian::build(12);
+        p.schedule.tile = vec![12, -1];
+        assert!(evaluate(&p).is_err());
+    }
+}

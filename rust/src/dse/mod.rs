@@ -1,0 +1,370 @@
+//! `dse` — design-space exploration: a parallel schedule auto-tuner
+//! over the unified-buffer mapper.
+//!
+//! The paper's central claim is programmability *with* performance:
+//! §VI-C and Table V show one Halide algorithm spanning a 6x PE /
+//! pixels-per-cycle range purely through schedule choice. This
+//! subsystem searches that space automatically:
+//!
+//! ```text
+//! space::enumerate      tile x store_at-subset x unroll x host axes
+//!   --prune::prune-->   analytic feasibility + cost filter (no sim)
+//!   --evaluate-->       map + cycle-accurate sim on a worker pool,
+//!                       every survivor validated bit-exact
+//!   --cache-->          content-addressed TSV cache + `.best` record
+//! ```
+//!
+//! Entry points: [`tune_app`] (a registered CLI app) and
+//! [`tune_program`] (any [`Program`], e.g. small tiles in tests). The
+//! CLI front end is `pushmem tune`; `pushmem serve --tuned-dir` loads
+//! a tuned winner through [`cache::load_best`]. Full walkthrough:
+//! docs/dse.md (design rationale: DESIGN.md §4).
+
+pub mod cache;
+pub mod evaluate;
+pub mod prune;
+pub mod space;
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cgra::CgraSpec;
+use crate::halide::Program;
+
+pub use cache::{load_best, CacheEntry, DseCache};
+pub use evaluate::{cycles_per_pixel, evaluate, table5_baselines, Baseline, Evaluation};
+pub use prune::{prune, Analysis, Verdict};
+pub use space::{enumerate, Candidate, SpaceConfig};
+
+/// What the tuner minimizes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// Simulated cycles per tile (throughput).
+    Cycles,
+    /// Simulated energy per compute op (the Fig 13 metric).
+    EnergyPerOp,
+    /// PE count.
+    Pes,
+    /// Analytic silicon area.
+    Area,
+    /// Rank by cycles but report the cycles-vs-PEs Pareto front.
+    Pareto,
+}
+
+impl Objective {
+    pub fn parse(s: &str) -> Result<Objective> {
+        Ok(match s {
+            "cycles" => Objective::Cycles,
+            "energy" => Objective::EnergyPerOp,
+            "pes" => Objective::Pes,
+            "area" => Objective::Area,
+            "pareto" => Objective::Pareto,
+            other => bail!("unknown objective {other:?} (want cycles|energy|pes|area|pareto)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Cycles => "cycles",
+            Objective::EnergyPerOp => "energy",
+            Objective::Pes => "pes",
+            Objective::Area => "area",
+            Objective::Pareto => "pareto",
+        }
+    }
+
+    /// Simulated score (lower is better).
+    pub fn score(&self, e: &CacheEntry) -> f64 {
+        match self {
+            Objective::Cycles | Objective::Pareto => e.cycles as f64,
+            Objective::EnergyPerOp => e.energy_per_op_pj,
+            Objective::Pes => e.pes as f64,
+            Objective::Area => e.area_um2,
+        }
+    }
+
+    /// Analytic proxy used to rank prune survivors for the simulation
+    /// budget (lower is better).
+    fn analytic_score(&self, a: &Analysis) -> f64 {
+        match self {
+            Objective::Cycles | Objective::Pareto => a.cycles_lb as f64,
+            Objective::EnergyPerOp => a.energy_per_pixel_pj,
+            Objective::Pes => a.pe_estimate as f64,
+            Objective::Area => a.area_um2,
+        }
+    }
+}
+
+/// Tuner knobs. `Default` matches the `pushmem tune` CLI defaults.
+#[derive(Clone, Debug)]
+pub struct TuneConfig {
+    pub objective: Objective,
+    /// Max candidates to *simulate* (cache hits don't count against
+    /// it; analytic pruning is unbounded).
+    pub budget: usize,
+    /// Evaluation worker threads.
+    pub workers: usize,
+    /// Enumeration seed (overrides `space.seed`).
+    pub seed: u64,
+    /// Result cache directory; `None` disables caching.
+    pub cache_dir: Option<PathBuf>,
+    pub space: SpaceConfig,
+}
+
+impl Default for TuneConfig {
+    fn default() -> Self {
+        TuneConfig {
+            objective: Objective::Cycles,
+            budget: 24,
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            seed: 1,
+            cache_dir: None,
+            space: SpaceConfig::default(),
+        }
+    }
+}
+
+/// One scored candidate in the final ranking.
+#[derive(Clone, Debug)]
+pub struct Ranked {
+    pub candidate: Candidate,
+    pub entry: CacheEntry,
+    pub from_cache: bool,
+}
+
+/// What a tuning run did and found. `results` is sorted best-first by
+/// the objective (ties broken by key, so ranking is deterministic).
+#[derive(Debug)]
+pub struct TuneReport {
+    pub app: String,
+    pub objective: Objective,
+    pub enumerated: usize,
+    pub infeasible: usize,
+    pub feasible: usize,
+    /// Candidates actually simulated this run.
+    pub evaluated: usize,
+    pub cache_hits: usize,
+    /// Post-prune candidates whose compile/simulate still failed.
+    pub failed: usize,
+    /// Wall-clock seconds of the parallel evaluation phase.
+    pub eval_seconds: f64,
+    pub results: Vec<Ranked>,
+}
+
+impl TuneReport {
+    pub fn best(&self) -> Option<&Ranked> {
+        self.results.first()
+    }
+
+    /// Simulated candidates per second of evaluation wall-clock (the
+    /// tuner-throughput figure benches track).
+    pub fn evals_per_sec(&self) -> f64 {
+        if self.eval_seconds > 0.0 {
+            self.evaluated as f64 / self.eval_seconds
+        } else {
+            0.0
+        }
+    }
+
+    /// The cycles-vs-PEs Pareto front, sorted by cycles.
+    pub fn pareto_front(&self) -> Vec<&Ranked> {
+        let dominated = |a: &CacheEntry| {
+            self.results.iter().any(|o| {
+                o.entry.cycles <= a.cycles
+                    && o.entry.pes <= a.pes
+                    && (o.entry.cycles < a.cycles || o.entry.pes < a.pes)
+            })
+        };
+        let mut front: Vec<&Ranked> =
+            self.results.iter().filter(|r| !dominated(&r.entry)).collect();
+        front.sort_by_key(|r| (r.entry.cycles, r.entry.pes, r.entry.key.clone()));
+        front.dedup_by(|a, b| a.entry.key == b.entry.key);
+        front
+    }
+}
+
+/// Tune a registered app (a `pushmem list` name).
+pub fn tune_app(name: &str, cfg: &TuneConfig) -> Result<TuneReport> {
+    let (program, _) =
+        crate::apps::by_name(name).with_context(|| format!("unknown app {name}"))?;
+    tune_program(&program, name, cfg)
+}
+
+/// Tune any program. `app_key` names the cache bucket (and salts
+/// candidate content addresses).
+pub fn tune_program(program: &Program, app_key: &str, cfg: &TuneConfig) -> Result<TuneReport> {
+    anyhow::ensure!(cfg.budget >= 1, "budget must be >= 1");
+    anyhow::ensure!(cfg.workers >= 1, "workers must be >= 1");
+
+    // Phase 1: enumerate.
+    let mut scfg = cfg.space.clone();
+    scfg.seed = cfg.seed;
+    let candidates = space::enumerate(program, app_key, &scfg);
+    let enumerated = candidates.len();
+
+    // Phase 2: analytic prune + proxy ranking. The hand-written
+    // default and the canonical Table-V-shaped corners keep priority
+    // over sampled points so a tiny budget still covers the known
+    // landmarks.
+    let spec = CgraSpec::default();
+    let mut survivors: Vec<(Candidate, Analysis)> = Vec::new();
+    let mut infeasible = 0;
+    for cand in candidates {
+        let mut p = program.clone();
+        p.schedule = cand.schedule.clone();
+        match prune::prune(&p, &spec) {
+            Verdict::Feasible(a) => survivors.push((cand, a)),
+            Verdict::Infeasible(_) => infeasible += 1,
+        }
+    }
+    let feasible = survivors.len();
+    // Budget priority: the hand-written default is always simulated
+    // (so "tuned is never worse than default" holds whenever it is
+    // feasible), then canonical corners, then sampled points — each
+    // class ordered by the objective's analytic proxy.
+    let class = |c: &Candidate| match c.origin {
+        "default" => 0u8,
+        "canonical" => 1,
+        _ => 2,
+    };
+    survivors.sort_by(|(ca, aa), (cb, ab)| {
+        class(ca)
+            .cmp(&class(cb))
+            .then(
+                cfg.objective
+                    .analytic_score(aa)
+                    .total_cmp(&cfg.objective.analytic_score(ab)),
+            )
+            .then(ca.key.cmp(&cb.key))
+    });
+    // Phase 3: cache lookup, then parallel evaluation of the misses.
+    // Cache hits are free — they never consume a budget slot — so a
+    // warm re-run keeps exploring deeper into the ranked survivors
+    // instead of re-treading scored ground.
+    let mut dse_cache = match &cfg.cache_dir {
+        Some(dir) => Some(DseCache::open(dir, app_key)?),
+        None => None,
+    };
+    let mut results: Vec<Ranked> = Vec::new();
+    let mut jobs: VecDeque<Candidate> = VecDeque::new();
+    let mut cache_hits = 0;
+    for (cand, _) in survivors {
+        match dse_cache.as_ref().and_then(|c| c.lookup(&cand.key)) {
+            Some(hit) => {
+                cache_hits += 1;
+                results.push(Ranked { entry: hit.clone(), candidate: cand, from_cache: true });
+            }
+            None if jobs.len() < cfg.budget => jobs.push_back(cand),
+            None => {}
+        }
+    }
+
+    let t0 = Instant::now();
+    let queue = Mutex::new(jobs);
+    let done: Mutex<Vec<(Candidate, Result<Evaluation>)>> = Mutex::new(Vec::new());
+    let n_threads = cfg.workers.min(queue.lock().unwrap().len()).max(1);
+    std::thread::scope(|s| {
+        for _ in 0..n_threads {
+            s.spawn(|| loop {
+                let Some(cand) = queue.lock().unwrap().pop_front() else { break };
+                let mut p = program.clone();
+                p.schedule = cand.schedule.clone();
+                let res = evaluate::evaluate(&p);
+                done.lock().unwrap().push((cand, res));
+            });
+        }
+    });
+    let eval_seconds = t0.elapsed().as_secs_f64();
+
+    let mut evaluated = 0;
+    let mut failed = 0;
+    for (cand, res) in done.into_inner().unwrap() {
+        match res {
+            Ok(ev) => {
+                evaluated += 1;
+                let entry = CacheEntry {
+                    key: cand.key.clone(),
+                    cycles: ev.cycles,
+                    completion: ev.completion,
+                    pes: ev.pes,
+                    mems: ev.mems,
+                    sram_words: ev.sram_words,
+                    energy_per_op_pj: ev.energy_per_op_pj,
+                    pixels_per_cycle: ev.pixels_per_cycle,
+                    area_um2: ev.area_um2,
+                    encoded: cand.encoded.clone(),
+                };
+                if let Some(c) = dse_cache.as_mut() {
+                    c.record(entry.clone())?;
+                }
+                results.push(Ranked { candidate: cand, entry, from_cache: false });
+            }
+            Err(e) => {
+                // Post-prune failures are possible (the prune is
+                // analytic, not a full mapper dry-run) and must never
+                // kill the tuner — that is the whole point of the
+                // Result-returning compile path.
+                failed += 1;
+                eprintln!("[dse] {app_key}: candidate {} failed: {e:#}", cand.key);
+            }
+        }
+    }
+
+    // Phase 4: rank (deterministically) and persist the winner.
+    results.sort_by(|a, b| {
+        cfg.objective
+            .score(&a.entry)
+            .total_cmp(&cfg.objective.score(&b.entry))
+            .then(a.entry.key.cmp(&b.entry.key))
+    });
+    if let (Some(c), Some(best)) = (&dse_cache, results.first()) {
+        c.write_best(&best.entry.key)?;
+    }
+
+    Ok(TuneReport {
+        app: app_key.to_string(),
+        objective: cfg.objective,
+        enumerated,
+        infeasible,
+        feasible,
+        evaluated,
+        cache_hits,
+        failed,
+        eval_seconds,
+        results,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn objective_parse_roundtrips() {
+        for o in [
+            Objective::Cycles,
+            Objective::EnergyPerOp,
+            Objective::Pes,
+            Objective::Area,
+            Objective::Pareto,
+        ] {
+            assert_eq!(Objective::parse(o.name()).unwrap(), o);
+        }
+        assert!(Objective::parse("speed").is_err());
+    }
+
+    #[test]
+    fn zero_budget_rejected() {
+        let cfg = TuneConfig { budget: 0, ..Default::default() };
+        assert!(tune_app("gaussian", &cfg).is_err());
+    }
+
+    #[test]
+    fn unknown_app_rejected() {
+        assert!(tune_app("no_such_app", &TuneConfig::default()).is_err());
+    }
+}

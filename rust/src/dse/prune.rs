@@ -1,0 +1,191 @@
+//! Analytic prune: reject or rank candidates *before* any simulation.
+//!
+//! Lowering a candidate is symbolic and cheap (inlining + exact
+//! interval bounds inference); cycle-accurate simulation is the
+//! expensive step. So the tuner lowers every enumerated candidate,
+//! rejects the ones that can never work, and ranks the survivors by
+//! an analytic proxy of the objective so the simulation budget is
+//! spent on the most promising points first.
+//!
+//! Feasibility checks (all conservative — a rejected candidate could
+//! never have produced a deployable design):
+//!
+//! * lowering itself fails (e.g. an unroll of a dim that does not
+//!   start at 0, or a schedule validation error);
+//! * ALU-op estimate exceeds the array's PE tiles (384 on the paper's
+//!   16x32 array) — recompute-heavy schedules like Table V sch1 at
+//!   769 PEs die here;
+//! * more materialized buffers than MEM tiles, or a realization-box
+//!   footprint beyond total SRAM capacity. The footprint is an upper
+//!   bound — the mapper's storage minimization only shrinks it — so
+//!   exceeding capacity here is a safe reject.
+//!
+//! Cost proxies (used for ranking only, never for rejection): an
+//! issue-slot lower bound on cycles, a Table II-calibrated area sum
+//! ([`crate::cost::area`]), and a per-output-pixel energy figure from
+//! the [`crate::cost::energy`] constants.
+
+use crate::cgra::CgraSpec;
+use crate::cost::area::{table2_variants, PE_UM2};
+use crate::cost::energy::{AGG_TB_PJ, CTL_PJ, PE_OP_PJ, SP_WORD_PJ};
+use crate::halide::{lower, Program};
+use crate::mapping::TILE_CAPACITY_WORDS;
+
+/// Analytic pre-simulation estimates for one feasible candidate.
+#[derive(Clone, Debug)]
+pub struct Analysis {
+    /// One PE per ALU op (the Table IV/V estimate).
+    pub pe_estimate: usize,
+    /// Materialized buffers (each needs at least one MEM bank).
+    pub buffer_count: usize,
+    /// Sum of realization-box footprints in words (upper bound on the
+    /// mapped SRAM allocation).
+    pub words_estimate: i64,
+    /// Issue-slot lower bound on completion: the output stage's full
+    /// domain cardinality (its lanes issue one point per cycle at
+    /// best).
+    pub cycles_lb: i64,
+    /// Analytic silicon area (µm², Table II constants).
+    pub area_um2: f64,
+    /// Analytic energy per output pixel (pJ) — a ranking proxy, much
+    /// cruder than the simulated [`crate::cost::energy_per_op_pj`].
+    pub energy_per_pixel_pj: f64,
+}
+
+/// The prune verdict for one candidate.
+#[derive(Clone, Debug)]
+pub enum Verdict {
+    Feasible(Analysis),
+    /// Why the candidate can never produce a deployable design.
+    Infeasible(String),
+}
+
+impl Verdict {
+    pub fn is_feasible(&self) -> bool {
+        matches!(self, Verdict::Feasible(_))
+    }
+}
+
+/// Analyze `program` (whose schedule is the candidate under test)
+/// against `spec`'s capacity.
+pub fn prune(program: &Program, spec: &CgraSpec) -> Verdict {
+    let lp = match lower::lower(program) {
+        Ok(lp) => lp,
+        Err(e) => return Verdict::Infeasible(format!("lowering: {e:#}")),
+    };
+
+    let pe_estimate: usize = lp.stages.iter().map(|s| s.alu_ops()).sum();
+    if pe_estimate > spec.pe_tiles() {
+        return Verdict::Infeasible(format!(
+            "needs {pe_estimate} PEs > the array's {}",
+            spec.pe_tiles()
+        ));
+    }
+
+    let buffer_count = lp.buffers.len();
+    if buffer_count > spec.mem_tiles() {
+        return Verdict::Infeasible(format!(
+            "{buffer_count} buffers > the array's {} MEM tiles",
+            spec.mem_tiles()
+        ));
+    }
+
+    let words_estimate: i64 = lp.buffers.values().map(|b| b.cardinality()).sum();
+    let sram_budget = (spec.mem_tiles() * TILE_CAPACITY_WORDS) as i64;
+    if words_estimate > sram_budget {
+        return Verdict::Infeasible(format!(
+            "footprint {words_estimate} words > total SRAM {sram_budget}"
+        ));
+    }
+
+    // The output stage issues one full-domain point per lane-set per
+    // cycle at II=1; completion can never beat that.
+    let out_stage = lp.stages.last().expect("lowering yields >= 1 stage");
+    let cycles_lb = out_stage.full_domain().cardinality().max(1);
+
+    // Total ALU firings per tile: every instance of a stage fires once
+    // per full-domain point (alu_ops already sums over instances).
+    let ops_per_tile: i64 = lp
+        .stages
+        .iter()
+        .map(|s| s.alu_ops() as i64 * s.full_domain().cardinality())
+        .sum();
+    let out_pixels = lp.buffers[&lp.output].cardinality().max(1);
+
+    let mem_tile_um2 = table2_variants()[2].1.mem_tile_um2;
+    let tiles_needed = (buffer_count as i64)
+        .max((words_estimate + TILE_CAPACITY_WORDS as i64 - 1) / TILE_CAPACITY_WORDS as i64);
+    let area_um2 = pe_estimate as f64 * PE_UM2 + tiles_needed as f64 * mem_tile_um2;
+
+    // Per pixel: every op costs one PE firing; every materialized word
+    // is written once and read at least once through the wide-fetch
+    // SRAM path.
+    let access_pj = SP_WORD_PJ + AGG_TB_PJ + CTL_PJ;
+    let energy_per_pixel_pj = (ops_per_tile as f64 * PE_OP_PJ
+        + 2.0 * words_estimate as f64 * access_pj)
+        / out_pixels as f64;
+
+    Verdict::Feasible(Analysis {
+        pe_estimate,
+        buffer_count,
+        words_estimate,
+        cycles_lb,
+        area_um2,
+        energy_per_pixel_pj,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{gaussian, harris};
+    use crate::halide::HwSchedule;
+
+    #[test]
+    fn gaussian_default_is_feasible() {
+        let a = match prune(&gaussian::build(14), &CgraSpec::default()) {
+            Verdict::Feasible(a) => a,
+            v => panic!("{v:?}"),
+        };
+        assert!(a.pe_estimate > 0);
+        assert!(a.cycles_lb >= 14 * 14);
+        assert!(a.area_um2 > 0.0);
+        assert!(a.energy_per_pixel_pj > 0.0);
+    }
+
+    #[test]
+    fn recompute_all_unrolled_is_pruned_for_pes() {
+        // sch1 ("recompute all") is already several hundred PEs;
+        // unrolling it by 4 puts it far over the 384-PE array.
+        let mut p = harris::build(20, harris::Schedule::RecomputeAll);
+        p.schedule = p.schedule.unroll("corners", "x", 4);
+        let why = match prune(&p, &CgraSpec::default()) {
+            Verdict::Infeasible(why) => why,
+            v => panic!("expected infeasible, got {v:?}"),
+        };
+        assert!(why.contains("PEs"), "{why}");
+    }
+
+    #[test]
+    fn invalid_schedule_is_pruned_not_panicking() {
+        let mut p = gaussian::build(14);
+        p.schedule = HwSchedule::new([14, 0]);
+        assert!(!prune(&p, &CgraSpec::default()).is_feasible());
+    }
+
+    #[test]
+    fn lower_bound_tracks_unrolling() {
+        // Unrolling by 2 halves the issue-slot lower bound.
+        let base = prune(&gaussian::build(16), &CgraSpec::default());
+        let mut p = gaussian::build(16);
+        p.schedule = p.schedule.unroll("gaussian", "x", 2);
+        let unrolled = prune(&p, &CgraSpec::default());
+        match (base, unrolled) {
+            (Verdict::Feasible(a), Verdict::Feasible(b)) => {
+                assert_eq!(a.cycles_lb, 2 * b.cycles_lb);
+                assert!(b.pe_estimate > a.pe_estimate);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

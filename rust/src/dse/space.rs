@@ -1,0 +1,273 @@
+//! Candidate enumeration: the schedule dimensions of §V-A crossed into
+//! a concrete, deterministic design space.
+//!
+//! For a program with funcs `f1 … fn` (last = output) the space is
+//!
+//! * **tile**        — the hand-written tile scaled by each configured
+//!   multiplier (Table V sch5 is the 2x point);
+//! * **memories**    — subsets of the *pure intermediate* funcs
+//!   (`store_at` vs recompute; sch1/sch2/sch3). Funcs carrying a
+//!   rolled reduction are materialized by lowering regardless, so
+//!   listing them would only duplicate candidates. Canonical subsets
+//!   (all, none, each single, each leave-one-out) come first; seeded
+//!   xorshift sampling fills the remaining budget;
+//! * **unroll**      — a uniform spatial factor on every accelerator
+//!   func's innermost pure var (sch4 is factor 2);
+//! * **host_stages** — the last func offloaded to the host or not
+//!   (sch6).
+//!
+//! The hand-written schedule itself is always candidate zero, so the
+//! tuner's best is never worse than the default. `unroll_reductions`
+//! is carried over from the hand schedule unchanged: it encodes
+//! stencil-vs-DNN policy intent (§V-B), not a free knob — flipping it
+//! is future work tracked in docs/dse.md.
+//!
+//! Enumeration is fully deterministic given a seed; candidates are
+//! deduped by their canonical encoding (see [`super::cache`]).
+
+use std::collections::BTreeSet;
+
+use crate::halide::{HwSchedule, Program};
+
+use super::cache::{candidate_key, encode_schedule};
+
+/// xorshift64* — the same tiny PRNG the property tests use.
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Rng {
+        Rng(seed.max(1))
+    }
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+}
+
+/// Shape of the enumerated space. Defaults reproduce the Table V axes.
+#[derive(Clone, Debug)]
+pub struct SpaceConfig {
+    /// Per-axis scalings of the hand-written tile (`1` = as written).
+    pub tile_multipliers: Vec<i64>,
+    /// Uniform spatial unroll factors (`1` = no unrolling).
+    pub unroll_factors: Vec<i64>,
+    /// Also try the last stage on the host CPU (sch6).
+    pub explore_host_offload: bool,
+    /// Max `store_at` subsets per (tile, host) point — canonical
+    /// subsets first, then seeded random ones.
+    pub max_memory_subsets: usize,
+    /// Sampling seed (overridden by `TuneConfig::seed`).
+    pub seed: u64,
+}
+
+impl Default for SpaceConfig {
+    fn default() -> Self {
+        SpaceConfig {
+            tile_multipliers: vec![1, 2],
+            unroll_factors: vec![1, 2, 4],
+            explore_host_offload: true,
+            max_memory_subsets: 24,
+            seed: 1,
+        }
+    }
+}
+
+/// One enumerated point: a complete `HwSchedule` plus its identity.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    /// Content-address ([`super::cache::candidate_key`]).
+    pub key: String,
+    /// Canonical encoding ([`super::cache::encode_schedule`]).
+    pub encoded: String,
+    pub schedule: HwSchedule,
+    /// Provenance: `"default"` (the hand-written schedule),
+    /// `"canonical"` (a named corner of the space), or `"sampled"`.
+    pub origin: &'static str,
+}
+
+/// The `store_at` subsets for one (tile, host) point: canonical corners
+/// first — buffer-everything, recompute-everything, singles,
+/// leave-one-outs — then random fills, truncated to `max`. The `bool`
+/// marks canonical subsets.
+fn memory_subsets(interm: &[String], max: usize, rng: &mut Rng) -> Vec<(Vec<String>, bool)> {
+    let mut subs: Vec<(Vec<String>, bool)> = Vec::new();
+    subs.push((interm.to_vec(), true));
+    subs.push((Vec::new(), true));
+    for f in interm {
+        subs.push((vec![f.clone()], true));
+    }
+    if interm.len() > 2 {
+        for f in interm {
+            subs.push((interm.iter().filter(|g| *g != f).cloned().collect(), true));
+        }
+    }
+    while subs.len() < max {
+        let sub: Vec<String> =
+            interm.iter().filter(|_| rng.next() & 1 == 1).cloned().collect();
+        subs.push((sub, false));
+    }
+    subs.truncate(max);
+    subs
+}
+
+/// Enumerate the candidate schedules for `program`. `app_key` salts
+/// the content addresses (the same schedule means a different design
+/// on a different app).
+pub fn enumerate(program: &Program, app_key: &str, cfg: &SpaceConfig) -> Vec<Candidate> {
+    let base = &program.schedule;
+    let mut out: Vec<Candidate> = Vec::new();
+    let mut seen: BTreeSet<String> = BTreeSet::new();
+    let mut push = |schedule: HwSchedule, origin: &'static str, out: &mut Vec<Candidate>| {
+        let encoded = encode_schedule(&schedule);
+        if seen.insert(encoded.clone()) {
+            out.push(Candidate {
+                key: candidate_key(app_key, &schedule),
+                encoded,
+                schedule,
+                origin,
+            });
+        }
+    };
+
+    // Candidate zero: the schedule the app shipped with.
+    push(base.clone(), "default", &mut out);
+
+    let last_func = match program.funcs.last() {
+        Some(f) => f.name.clone(),
+        None => return out,
+    };
+    let host_options: Vec<Vec<String>> =
+        if cfg.explore_host_offload && program.funcs.len() >= 2 {
+            vec![Vec::new(), vec![last_func]]
+        } else {
+            vec![Vec::new()]
+        };
+
+    let mut rng = Rng::new(cfg.seed);
+    for &m in &cfg.tile_multipliers {
+        if m < 1 {
+            continue;
+        }
+        let tile: Vec<i64> = base.tile.iter().map(|e| e * m).collect();
+        for host in &host_options {
+            let accel: Vec<&crate::halide::Func> = program
+                .funcs
+                .iter()
+                .filter(|f| !host.contains(&f.name))
+                .collect();
+            let Some((_output, producers)) = accel.split_last() else { continue };
+            let interm: Vec<String> = producers
+                .iter()
+                .filter(|f| {
+                    !(f.reduction.is_some() && !base.unroll_reductions.contains(&f.name))
+                })
+                .map(|f| f.name.clone())
+                .collect();
+            let carried: Vec<String> = base
+                .unroll_reductions
+                .iter()
+                .filter(|r| accel.iter().any(|f| f.name == **r))
+                .cloned()
+                .collect();
+            for (subset, canonical) in
+                memory_subsets(&interm, cfg.max_memory_subsets, &mut rng)
+            {
+                for &u in &cfg.unroll_factors {
+                    if u < 1 {
+                        continue;
+                    }
+                    let mut s = HwSchedule::new(tile.clone());
+                    s.memories = subset.clone();
+                    s.unroll_reductions = carried.clone();
+                    s.host_stages = host.clone();
+                    if u >= 2 {
+                        for f in &accel {
+                            if let Some(var) = f.vars.last() {
+                                s.unroll
+                                    .entry(f.name.clone())
+                                    .or_default()
+                                    .push((var.clone(), u));
+                            }
+                        }
+                    }
+                    push(
+                        s,
+                        if canonical { "canonical" } else { "sampled" },
+                        &mut out,
+                    );
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{gaussian, harris};
+    use crate::dse::cache::decode_schedule;
+
+    #[test]
+    fn enumeration_is_deterministic() {
+        let p = harris::build(12, harris::Schedule::NoRecompute);
+        let cfg = SpaceConfig { seed: 7, ..Default::default() };
+        let a: Vec<String> = enumerate(&p, "harris", &cfg).iter().map(|c| c.key.clone()).collect();
+        let b: Vec<String> = enumerate(&p, "harris", &cfg).iter().map(|c| c.key.clone()).collect();
+        assert_eq!(a, b);
+        assert!(a.len() > 20, "only {} candidates", a.len());
+    }
+
+    #[test]
+    fn default_schedule_is_candidate_zero() {
+        let p = harris::build(12, harris::Schedule::UnrollBy2);
+        let cands = enumerate(&p, "harris_sch4", &SpaceConfig::default());
+        assert_eq!(cands[0].origin, "default");
+        assert_eq!(cands[0].encoded, encode_schedule(&p.schedule));
+    }
+
+    #[test]
+    fn space_contains_the_table5_corners() {
+        // The enumerated harris space must cover schedules shaped like
+        // sch1 (no memories), sch3 (all memories), sch4 (all + unroll
+        // 2), and sch6 (all + last on host).
+        let p = harris::build(12, harris::Schedule::NoRecompute);
+        let cands = enumerate(&p, "harris", &SpaceConfig::default());
+        let has = |pred: &dyn Fn(&HwSchedule) -> bool| cands.iter().any(|c| pred(&c.schedule));
+        let n_interm = 9; // ix iy ixx ixy iyy sxx sxy syy resp
+        assert!(has(&|s| s.memories.is_empty() && s.unroll.is_empty() && s.host_stages.is_empty()));
+        assert!(has(&|s| s.memories.len() == n_interm && s.unroll.is_empty() && s.host_stages.is_empty() && s.tile == vec![12, 12]));
+        assert!(has(&|s| s.memories.len() == n_interm
+            && s.unroll.values().flatten().all(|(v, u)| v == "x" && *u == 2)
+            && !s.unroll.is_empty()));
+        assert!(has(&|s| s.host_stages == vec!["corners".to_string()]));
+        assert!(has(&|s| s.tile == vec![24, 24]));
+    }
+
+    #[test]
+    fn candidates_dedupe_and_roundtrip() {
+        let p = gaussian::build(10);
+        let cands = enumerate(&p, "gaussian", &SpaceConfig::default());
+        let keys: BTreeSet<&str> = cands.iter().map(|c| c.key.as_str()).collect();
+        assert_eq!(keys.len(), cands.len(), "duplicate candidates");
+        for c in &cands {
+            let d = decode_schedule(&c.encoded).unwrap();
+            assert_eq!(encode_schedule(&d), c.encoded, "{}", c.encoded);
+        }
+    }
+
+    #[test]
+    fn single_func_space_has_no_memory_or_host_axes() {
+        // gaussian is one func: intermediates are empty and host
+        // offload would leave nothing to accelerate.
+        let p = gaussian::build(10);
+        for c in enumerate(&p, "gaussian", &SpaceConfig::default()) {
+            assert!(c.schedule.memories.is_empty());
+            assert!(c.schedule.host_stages.is_empty());
+        }
+    }
+}

@@ -122,6 +122,11 @@ fn extract_loads(kernel: &Expr, dims: &[String], self_name: &str) -> Result<Vec<
 /// Lower a program to stages (Fig 1 "scheduling" output).
 pub fn lower(program: &Program) -> Result<LoweredPipeline> {
     program.validate()?;
+    let func_names: Vec<String> = program.funcs.iter().map(|f| f.name.clone()).collect();
+    program
+        .schedule
+        .validate(&func_names)
+        .with_context(|| format!("{}: schedule validation", program.name))?;
     let sched = &program.schedule;
 
     // Partition host stages off the accelerator (sch6 of Table V).
@@ -555,6 +560,20 @@ mod tests {
         assert!(!lp.stages[0].is_reduction());
         // 4 loads (the 2x2 window), all of `in`.
         assert_eq!(lp.stages[0].instances[0].loads.len(), 4);
+    }
+
+    #[test]
+    fn lower_rejects_invalid_schedule() {
+        // store_at of an unknown func fails in schedule validation, up
+        // front, instead of surfacing as a bounds-inference oddity.
+        let mut p = brighten_blur(8);
+        p.schedule = p.schedule.store_at("ghost");
+        let e = lower(&p).unwrap_err();
+        assert!(format!("{e:#}").contains("schedule validation"), "{e:#}");
+        // Non-positive tile too.
+        let mut p = brighten_blur(8);
+        p.schedule.tile = vec![8, 0];
+        assert!(lower(&p).is_err());
     }
 
     #[test]

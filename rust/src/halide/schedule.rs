@@ -80,6 +80,48 @@ impl HwSchedule {
         self
     }
 
+    /// Check the schedule against the program's func names before any
+    /// directive is consumed: every tile extent positive, every unroll
+    /// factor ≥ 2, and every func named by `memories` / `unroll` /
+    /// `unroll_reductions` / `host_stages` actually defined. Runs at
+    /// the top of lowering (where the `HwSchedule` is still in scope —
+    /// `sched::schedule` re-checks the tile it inherits), so an
+    /// auto-generated candidate schedule fails with a message instead
+    /// of a deep internal error.
+    pub fn validate(&self, funcs: &[String]) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.tile.is_empty(), "schedule has an empty tile");
+        for (k, &e) in self.tile.iter().enumerate() {
+            anyhow::ensure!(e >= 1, "tile extent {e} at dim {k} must be >= 1");
+        }
+        let known = |n: &String| funcs.contains(n);
+        for m in &self.memories {
+            anyhow::ensure!(known(m), "store_at of unknown func {m:?}");
+        }
+        for h in &self.host_stages {
+            anyhow::ensure!(known(h), "host stage is an unknown func {h:?}");
+        }
+        for r in &self.unroll_reductions {
+            anyhow::ensure!(known(r), "unroll_reduction of unknown func {r:?}");
+        }
+        for (f, entries) in &self.unroll {
+            anyhow::ensure!(known(f), "unroll of unknown func {f:?}");
+            for (var, factor) in entries {
+                anyhow::ensure!(!var.is_empty(), "unroll of {f:?}: empty var name");
+                anyhow::ensure!(
+                    *factor >= 2,
+                    "unroll({f}, {var}, {factor}): factor must be >= 2"
+                );
+            }
+        }
+        if !funcs.is_empty() {
+            anyhow::ensure!(
+                funcs.iter().any(|f| !self.host_stages.contains(f)),
+                "every func is scheduled on the host; nothing remains to accelerate"
+            );
+        }
+        Ok(())
+    }
+
     pub fn is_memory(&self, func: &str) -> bool {
         self.memories.iter().any(|m| m == func)
     }
@@ -122,5 +164,77 @@ mod tests {
     #[should_panic]
     fn unroll_factor_one_rejected() {
         let _ = HwSchedule::new([8]).unroll("f", "x", 1);
+    }
+
+    fn funcs(names: &[&str]) -> Vec<String> {
+        names.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn validate_accepts_well_formed() {
+        let s = HwSchedule::new([8, 8])
+            .store_at("a")
+            .unroll("b", "x", 2)
+            .unroll_reduction("c")
+            .on_host("d");
+        s.validate(&funcs(&["a", "b", "c", "d"])).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_empty_tile() {
+        let s = HwSchedule::default();
+        assert!(s.validate(&funcs(&["f"])).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_nonpositive_tile_extent() {
+        for bad in [0, -4] {
+            let s = HwSchedule::new([8, bad]);
+            let e = s.validate(&funcs(&["f"])).unwrap_err();
+            assert!(e.to_string().contains("tile extent"), "{e}");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_unknown_memory_func() {
+        let s = HwSchedule::new([8]).store_at("ghost");
+        let e = s.validate(&funcs(&["f"])).unwrap_err();
+        assert!(e.to_string().contains("store_at"), "{e}");
+    }
+
+    #[test]
+    fn validate_rejects_unknown_host_func() {
+        let s = HwSchedule::new([8]).on_host("ghost");
+        assert!(s.validate(&funcs(&["f"])).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_unknown_unroll_func() {
+        let s = HwSchedule::new([8]).unroll("ghost", "x", 2);
+        assert!(s.validate(&funcs(&["f"])).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_unknown_unroll_reduction_func() {
+        let s = HwSchedule::new([8]).unroll_reduction("ghost");
+        assert!(s.validate(&funcs(&["f"])).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_unroll_factor_below_two() {
+        // The builder panics on factor < 2; a hand-assembled schedule
+        // (what a tuner or a deserializer produces) must be caught by
+        // validate instead.
+        let mut s = HwSchedule::new([8]);
+        s.unroll.insert("f".into(), vec![("x".into(), 1)]);
+        let e = s.validate(&funcs(&["f"])).unwrap_err();
+        assert!(e.to_string().contains("factor"), "{e}");
+    }
+
+    #[test]
+    fn validate_rejects_everything_on_host() {
+        let s = HwSchedule::new([8]).on_host("f").on_host("g");
+        let e = s.validate(&funcs(&["f", "g"])).unwrap_err();
+        assert!(e.to_string().contains("host"), "{e}");
     }
 }

@@ -17,11 +17,17 @@
 //!   --cgra-->            place & route -> bitstream -> simulate
 //!   --coordinator-->     validate vs XLA golden model (runtime::*)
 //! ```
+//!
+//! Layered on top, [`dse`] searches the schedule space itself: it
+//! enumerates `HwSchedule` candidates, prunes them analytically, and
+//! scores the survivors through the full compile + simulate path on a
+//! worker pool (§VI-C automated; see docs/dse.md).
 
 pub mod apps;
 pub mod cgra;
 pub mod coordinator;
 pub mod cost;
+pub mod dse;
 pub mod extraction;
 pub mod halide;
 pub mod hw;

@@ -99,7 +99,19 @@ pub fn classify(lp: &LoweredPipeline) -> PipelineKind {
 }
 
 /// Schedule with automatic policy selection.
+///
+/// The full `HwSchedule::validate` runs at the top of lowering (the
+/// directives are consumed there and no longer reachable here); this
+/// re-checks the one piece the lowered pipeline still carries — the
+/// tile — so a hand-built `LoweredPipeline` cannot smuggle in a
+/// degenerate extent.
 pub fn schedule(lp: &LoweredPipeline) -> Result<PipelineSchedule> {
+    anyhow::ensure!(
+        !lp.tile.is_empty() && lp.tile.iter().all(|&e| e >= 1),
+        "{}: non-positive tile extent in {:?}",
+        lp.name,
+        lp.tile
+    );
     match classify(lp) {
         PipelineKind::Stencil => stencil::schedule(lp),
         PipelineKind::Dnn => dnn::schedule(lp),
