@@ -2,8 +2,11 @@
 # validation oracle + CPU baseline — python is never on the rust
 # request path; see DESIGN.md §1). `make verify` is the tier-1 check.
 # `make tune-smoke` is the CI smoke run of the DSE tuner (docs/dse.md).
+# `make sim-bench` is the CI smoke run of the serving-throughput bench
+# (docs/simulator.md): it exercises the SimPlan cache on/off paths and
+# asserts plan-reuse bit-exactness along the way.
 
-.PHONY: artifacts verify tune-smoke clean
+.PHONY: artifacts verify tune-smoke sim-bench clean
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -13,6 +16,9 @@ verify:
 
 tune-smoke:
 	cargo run --release -- tune gaussian --budget 8 --workers 2
+
+sim-bench:
+	SIM_BENCH_QUICK=1 cargo bench --bench serve_throughput
 
 clean:
 	cargo clean

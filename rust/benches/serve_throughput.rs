@@ -1,37 +1,45 @@
-//! Serving throughput baseline: requests/sec for N concurrent clients
-//! against the simulated CGRA through the full TCP + worker-pool
-//! stack. Later scaling PRs (batching, sharding, faster simulation)
-//! measure against these numbers.
+//! Serving throughput: requests/sec through the simulated CGRA, with
+//! and without the per-design SimPlan cache (docs/simulator.md), then
+//! through the full TCP + worker-pool stack.
+//!
+//! §1 isolates the plan/run split: the same requests are simulated
+//! with fresh compile-grade setup per request (the pre-split serving
+//! cost) versus one cached `SimPlan` and a reused `SimRun`. §2 runs N
+//! concurrent clients against the real server, which always serves
+//! from the cached plan.
 //!
 //! Run: `cargo bench --bench serve_throughput` (it is a plain binary:
-//! criterion is not vendored in this offline image).
+//! criterion is not vendored in this offline image). Set
+//! `SIM_BENCH_QUICK=1` for the CI smoke variant (fewer requests,
+//! same code paths — the `make sim-bench` target).
 
 #[path = "harness.rs"]
 mod harness;
 
+use std::collections::BTreeMap;
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 use std::time::Instant;
 
+use pushmem::cgra::{simulate, SimRun};
 use pushmem::coordinator::serve::{self, ServeConfig};
 use pushmem::coordinator::CompiledRegistry;
 use pushmem::tensor::Tensor;
 
 const APP: &str = "gaussian";
-const REQUESTS_PER_CLIENT: usize = 12;
 const WORKERS: usize = 8;
 
 fn main() {
-    harness::rule("serving throughput: N concurrent clients, one endpoint");
+    let quick = std::env::var("SIM_BENCH_QUICK")
+        .map_or(false, |v| !v.is_empty() && v != "0");
+    let requests_per_client: usize = if quick { 4 } else { 12 };
+    let direct_reqs: usize = if quick { 4 } else { 16 };
+    let client_counts: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4, 8] };
+
+    harness::rule("serving throughput: plan caching, then N concurrent clients");
 
     let registry = Arc::new(CompiledRegistry::new());
     let c = registry.get(APP).expect("compile");
-    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-    let addr = listener.local_addr().unwrap();
-    {
-        let registry = Arc::clone(&registry);
-        std::thread::spawn(move || serve::serve_on(listener, ServeConfig::multi(registry, WORKERS)));
-    }
 
     // One deterministic tile reused by every request (we are measuring
     // the serving stack, not input generation).
@@ -49,13 +57,56 @@ fn main() {
             })
         })
         .collect();
+
+    // --- §1 Direct simulation: fresh setup vs cached plan -----------
+    let mut inputs = BTreeMap::new();
+    for (name, t) in c.lp.inputs.iter().zip(tiles.iter()) {
+        inputs.insert(name.clone(), t.clone());
+    }
+    let baseline = simulate(&c.design, &c.graph, &inputs).expect("fresh simulate");
+    let t0 = Instant::now();
+    for _ in 0..direct_reqs {
+        // The pre-split cost: wire interning, hardware instantiation
+        // and event analysis on every request.
+        simulate(&c.design, &c.graph, &inputs).expect("fresh simulate");
+    }
+    let fresh_s = t0.elapsed().as_secs_f64();
+
+    let plan = c.plan().expect("sim plan");
+    let mut run = SimRun::new(plan);
+    run.run(&inputs).expect("cached simulate"); // warm (instantiation)
+    let t0 = Instant::now();
+    for _ in 0..direct_reqs {
+        run.run(&inputs).expect("cached simulate");
+    }
+    let cached_s = t0.elapsed().as_secs_f64();
+    // Bit-exactness checked outside the timed loops so both measure
+    // bare simulation.
+    let check = run.run(&inputs).expect("cached simulate");
+    assert_eq!(check.output.data, baseline.output.data, "plan reuse must be bit-exact");
+
+    let fresh_rps = direct_reqs as f64 / fresh_s;
+    let cached_rps = direct_reqs as f64 / cached_s;
+    println!(
+        "sim only ({direct_reqs} requests): fresh-setup {fresh_rps:.1} req/s, \
+         cached-plan {cached_rps:.1} req/s ({:.2}x)",
+        cached_rps / fresh_rps
+    );
+
+    // --- §2 Full TCP + worker-pool stack (plan-cached) --------------
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    {
+        let registry = Arc::clone(&registry);
+        std::thread::spawn(move || serve::serve_on(listener, ServeConfig::multi(registry, WORKERS)));
+    }
     let tiles = Arc::new(tiles);
 
     println!(
         "{:<10} {:>10} {:>12} {:>14}",
         "clients", "requests", "req/s", "ms/req (avg)"
     );
-    for clients in [1usize, 2, 4, 8] {
+    for &clients in client_counts {
         let t0 = Instant::now();
         std::thread::scope(|s| {
             for _ in 0..clients {
@@ -63,7 +114,7 @@ fn main() {
                 s.spawn(move || {
                     let mut stream = TcpStream::connect(addr).unwrap();
                     let refs: Vec<&Tensor> = tiles.iter().collect();
-                    for _ in 0..REQUESTS_PER_CLIENT {
+                    for _ in 0..requests_per_client {
                         let (words, _, _) =
                             serve::request_app(&mut stream, APP, &refs).unwrap();
                         assert!(!words.is_empty());
@@ -72,7 +123,7 @@ fn main() {
             }
         });
         let wall = t0.elapsed().as_secs_f64();
-        let total = clients * REQUESTS_PER_CLIENT;
+        let total = clients * requests_per_client;
         println!(
             "{:<10} {:>10} {:>12.1} {:>14.3}",
             clients,

@@ -26,9 +26,11 @@ pub mod resnet;
 pub mod unsharp;
 pub mod upsample;
 
+use std::sync::Arc;
+
 use anyhow::{Context, Result};
 
-use crate::cgra::{simulate, SimStats};
+use crate::cgra::{SimPlan, SimRun, SimStats};
 use crate::extraction::extract;
 use crate::halide::{lower, LoweredPipeline, Program};
 use crate::mapping::{map_design, MappedDesign};
@@ -113,6 +115,10 @@ pub struct CheckedRun {
     pub schedule: PipelineSchedule,
     pub graph: UbGraph,
     pub design: MappedDesign,
+    /// The simulation plan the validated run executed against —
+    /// callers that go on to simulate more inputs (benches, serving
+    /// smoke paths) reuse it instead of rebuilding setup.
+    pub plan: Arc<SimPlan>,
     pub stats: SimStats,
 }
 
@@ -135,7 +141,14 @@ pub fn compile_checked(p: &Program) -> Result<CheckedRun> {
     let golden = lp
         .execute(&ins)
         .with_context(|| format!("{}: reference exec", p.name))?;
-    let res = simulate(&d, &g, &ins).with_context(|| format!("{}: simulate", p.name))?;
+    // Same plan/run split the server uses: setup is paid once here and
+    // the plan rides along in the result for further simulations.
+    let plan = Arc::new(
+        SimPlan::build(&d, &g).with_context(|| format!("{}: sim plan", p.name))?,
+    );
+    let res = SimRun::new(Arc::clone(&plan))
+        .run(&ins)
+        .with_context(|| format!("{}: simulate", p.name))?;
     let out = &golden[&lp.output];
     for pt in out.shape.points() {
         // The simulator's output box may be halo-rounded; compare on
@@ -147,7 +160,7 @@ pub fn compile_checked(p: &Program) -> Result<CheckedRun> {
             p.name
         );
     }
-    Ok(CheckedRun { lp, schedule: ps, graph: g, design: d, stats: res.stats })
+    Ok(CheckedRun { lp, schedule: ps, graph: g, design: d, plan, stats: res.stats })
 }
 
 /// Small variants for tests.

@@ -9,11 +9,14 @@
 //!   simplified to one stage each).
 //! * [`bitstream`] — serialization of every tile's configuration
 //!   registers into the final configuration bitstream.
-//! * [`sim`] — the cycle-accurate functional simulator: ticks every
-//!   configured memory tile (controllers, AGG, wide SRAM, TB), shift
-//!   register chain and PE pipeline each cycle, streams the input tiles
-//!   in on their arrival schedules, and collects the drained output for
-//!   golden-model comparison.
+//! * [`sim`] — the cycle-accurate functional simulator, split into a
+//!   compile-once [`SimPlan`] (interned wires, hardware templates,
+//!   event schedules) and an allocation-light [`SimRun`] that executes
+//!   requests against it (docs/simulator.md): ticks every configured
+//!   memory tile (controllers, AGG, wide SRAM, TB), shift register
+//!   chain and PE pipeline each active cycle, streams the input tiles
+//!   in on their arrival schedules, and collects the drained output
+//!   for golden-model comparison.
 
 pub mod array;
 pub mod bitstream;
@@ -24,4 +27,4 @@ pub mod sim;
 pub use array::{CgraSpec, TileKind};
 pub use place::{place, Placement};
 pub use route::{route, RoutingResult};
-pub use sim::{simulate, SimResult, SimStats};
+pub use sim::{simulate, SimPlan, SimResult, SimRun, SimStats};

@@ -7,7 +7,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{bail, Context, Result};
 
-use crate::cgra::{place, route, CgraSpec, Placement, RoutingResult};
+use crate::cgra::{place, route, CgraSpec, Placement, RoutingResult, SimPlan};
 use crate::extraction::extract;
 use crate::halide::{lower, LoweredPipeline, Program};
 use crate::mapping::{map_design, MappedDesign};
@@ -27,11 +27,32 @@ pub struct Compiled {
     /// numbers are reported as unavailable.
     pub placement: Option<Placement>,
     pub routing: Option<RoutingResult>,
+    /// Lazily-built simulation plan (interned wires, hardware
+    /// templates, event schedules — docs/simulator.md). Private:
+    /// everything simulation-shaped goes through [`Compiled::plan`],
+    /// which is what lets `serve` pay setup once per app instead of
+    /// once per request.
+    sim_plan: OnceLock<Result<Arc<SimPlan>, String>>,
 }
 
 impl Compiled {
     pub fn fits(&self) -> bool {
         self.placement.is_some()
+    }
+
+    /// The design's [`SimPlan`], built once on first use and shared by
+    /// every caller as an `Arc` (concurrent first calls race benignly:
+    /// `OnceLock` keeps exactly one winner). A build failure is cached
+    /// too, so a broken design cannot trigger rebuild storms.
+    pub fn plan(&self) -> Result<Arc<SimPlan>> {
+        match self.sim_plan.get_or_init(|| {
+            SimPlan::build(&self.design, &self.graph)
+                .map(Arc::new)
+                .map_err(|e| format!("{e:#}"))
+        }) {
+            Ok(p) => Ok(Arc::clone(p)),
+            Err(e) => bail!("building simulation plan: {e}"),
+        }
     }
 }
 
@@ -51,6 +72,7 @@ pub fn compile(program: &Program) -> Result<Compiled> {
         design,
         placement,
         routing,
+        sim_plan: OnceLock::new(),
     })
 }
 
@@ -372,6 +394,14 @@ mod tests {
         let c = reg.get("gaussian").unwrap();
         assert_eq!(c.lp.tile, vec![62, 62], "hand-written fallback not used");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn plan_is_built_once_and_shared() {
+        let c = compile(&apps::gaussian::build(14)).unwrap();
+        let a = c.plan().unwrap();
+        let b = c.plan().unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "plan must be cached, not rebuilt");
     }
 
     #[test]

@@ -7,7 +7,7 @@ use anyhow::{Context, Result};
 
 use super::driver::{compile, gen_inputs, Compiled};
 use super::validate::validate;
-use crate::cgra::{simulate, SimStats};
+use crate::cgra::SimStats;
 use crate::cost::{energy_per_op_pj, estimate_fpga, FpgaReport, CGRA_CLOCK_HZ};
 use crate::extraction::extract;
 use crate::halide::{lower, Program};
@@ -44,7 +44,11 @@ pub fn report_app(
 ) -> Result<AppReport> {
     let c: Compiled = compile(program)?;
     let inputs = gen_inputs(&c.lp);
-    let res = simulate(&c.design, &c.graph, &inputs).context("simulation")?;
+    // Simulate through the design's cached plan (Compiled::plan), the
+    // same setup-once path serving uses.
+    let res = crate::cgra::SimRun::new(c.plan()?)
+        .run(&inputs)
+        .context("simulation")?;
 
     let (cpu_time_s, validated) = match (artifact, rt) {
         (Some(a), Some(rt)) if a.exists() => {

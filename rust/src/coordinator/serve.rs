@@ -26,7 +26,7 @@ use anyhow::{bail, Context, Result};
 
 use super::driver::{Compiled, CompiledRegistry};
 use super::protocol::{self, FrameError, Request, Response};
-use crate::cgra::simulate;
+use crate::cgra::SimRun;
 use crate::tensor::Tensor;
 
 pub use super::protocol::MAGIC;
@@ -152,11 +152,21 @@ fn check_inputs(c: &Compiled, req: &Request) -> Result<()> {
 /// until the peer disconnects. Errors are reported to the client as a
 /// status frame before the connection drops (public so drivers can
 /// embed the server with their own accept loop).
+///
+/// §Perf: request handling performs **no per-request simulation
+/// setup** — the compile-grade half lives in the design's cached
+/// [`crate::cgra::SimPlan`] ([`Compiled::plan`], built once per app),
+/// and the connection keeps one reusable [`SimRun`] per app it has
+/// served, so a request pays only the streaming itself plus decoding
+/// its own payload (docs/simulator.md).
 pub fn handle_connection(cfg: &ServeConfig, stream: &mut TcpStream) -> Result<()> {
     let peer = stream
         .peer_addr()
         .map(|a| a.to_string())
         .unwrap_or_else(|_| "?".to_string());
+    // Reusable per-app run state, keyed by plan identity (a connection
+    // may interleave v2 requests for different apps).
+    let mut runs: Vec<(usize, SimRun)> = Vec::new();
     loop {
         let req = match read_request(stream) {
             Ok(Some(req)) => req,
@@ -191,8 +201,23 @@ pub fn handle_connection(cfg: &ServeConfig, stream: &mut TcpStream) -> Result<()
         for (name, words) in c.lp.inputs.iter().zip(req.inputs) {
             inputs.insert(name.clone(), Tensor::from_data(c.lp.buffers[name].clone(), words));
         }
+        let plan = match c.plan() {
+            Ok(p) => p,
+            Err(e) => {
+                write_error(stream, protocol::STATUS_INTERNAL);
+                return Err(e.context(format!("planning {} for {peer}", c.program.name)));
+            }
+        };
+        let key = Arc::as_ptr(&plan) as usize;
+        let run = match runs.iter().position(|(k, _)| *k == key) {
+            Some(i) => &mut runs[i].1,
+            None => {
+                runs.push((key, SimRun::new(plan)));
+                &mut runs.last_mut().expect("just pushed").1
+            }
+        };
         let t0 = Instant::now();
-        let res = match simulate(&c.design, &c.graph, &inputs) {
+        let res = match run.run(&inputs) {
             Ok(res) => res,
             Err(e) => {
                 write_error(stream, protocol::STATUS_INTERNAL);
@@ -220,12 +245,35 @@ pub fn handle_connection(cfg: &ServeConfig, stream: &mut TcpStream) -> Result<()
     }
 }
 
+/// A connection handler, as [`serve_on_with`] accepts it. Production
+/// serving always uses [`handle_connection`]; tests inject faulting
+/// handlers to exercise the pool's isolation guarantees.
+pub type Handler = dyn Fn(&ServeConfig, &mut TcpStream) -> Result<()> + Send + Sync;
+
 /// Run the accept loop on an already-bound listener with a bounded
 /// pool of `cfg.workers` connection-handler threads. Accepted
 /// connections queue on a bounded channel when every worker is busy —
 /// load sheds into the kernel backlog instead of unbounded spawning.
 /// Embeddable: tests and examples bind an ephemeral port themselves.
 pub fn serve_on(listener: TcpListener, cfg: ServeConfig) -> Result<()> {
+    serve_on_with(listener, cfg, Arc::new(handle_connection))
+}
+
+/// [`serve_on`] with an injectable per-connection handler (the test
+/// seam for pool-isolation tests; everything else should call
+/// [`serve_on`]).
+///
+/// Fault isolation: one connection must never take the pool down.
+/// A panicking handler is caught (`catch_unwind`), answered with
+/// `STATUS_INTERNAL` best-effort, and its worker keeps serving; a
+/// panic elsewhere that poisons the queue mutex is recovered
+/// (`PoisonError::into_inner` — the queue holds only `TcpStream`s, so
+/// there is no invariant a poisoner could have broken mid-update).
+pub fn serve_on_with(
+    listener: TcpListener,
+    cfg: ServeConfig,
+    handler: Arc<Handler>,
+) -> Result<()> {
     let workers = cfg.workers.max(1);
     let cfg = Arc::new(cfg);
     let (tx, rx) = mpsc::sync_channel::<TcpStream>(2 * workers);
@@ -234,16 +282,33 @@ pub fn serve_on(listener: TcpListener, cfg: ServeConfig) -> Result<()> {
     for _ in 0..workers {
         let rx = Arc::clone(&rx);
         let cfg = Arc::clone(&cfg);
+        let handler = Arc::clone(&handler);
         handles.push(std::thread::spawn(move || loop {
             // The guard is a temporary: the lock is released as soon
-            // as recv returns, before the connection is handled.
-            let next = rx.lock().unwrap().recv();
+            // as recv returns, before the connection is handled. A
+            // poisoned lock is recovered, not propagated — one dead
+            // peer must not cascade the whole pool down.
+            let next = rx
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner())
+                .recv();
             let mut stream = match next {
                 Ok(s) => s,
                 Err(_) => return, // accept loop gone
             };
-            if let Err(e) = handle_connection(&cfg, &mut stream) {
-                eprintln!("connection error: {e:#}");
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                handler(&cfg, &mut stream)
+            }));
+            match outcome {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => eprintln!("connection error: {e:#}"),
+                Err(_) => {
+                    // The handler panicked mid-connection: report an
+                    // internal error to the peer (best-effort) and keep
+                    // this worker alive for the next connection.
+                    write_error(&mut stream, protocol::STATUS_INTERNAL);
+                    eprintln!("connection handler panicked; worker recovered");
+                }
             }
         }));
     }
@@ -360,6 +425,7 @@ fn roundtrip(stream: &mut TcpStream, frame: Vec<u8>) -> Result<(Vec<i32>, u64, u
 mod tests {
     use super::*;
     use crate::apps;
+    use crate::cgra::simulate;
     use crate::coordinator::driver::{compile, gen_inputs};
 
     fn spawn_server(cfg: ServeConfig) -> std::net::SocketAddr {

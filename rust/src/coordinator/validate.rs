@@ -9,7 +9,7 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use super::driver::{gen_inputs, Compiled};
-use crate::cgra::{simulate, SimStats};
+use crate::cgra::SimStats;
 use crate::halide::Func;
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
@@ -51,7 +51,11 @@ pub fn eval_host_funcs(
 /// Validate one compiled app against a golden HLO artifact.
 pub fn validate(c: &Compiled, artifact: &Path, rt: &Runtime) -> Result<Validation> {
     let inputs = gen_inputs(&c.lp);
-    let res = simulate(&c.design, &c.graph, &inputs).context("CGRA simulation")?;
+    // Simulate through the design's cached plan (Compiled::plan), the
+    // same setup-once path serving uses.
+    let res = crate::cgra::SimRun::new(c.plan()?)
+        .run(&inputs)
+        .context("CGRA simulation")?;
 
     // Host stages (if any) run on the simulator output.
     let mut bufs: BTreeMap<String, Tensor> = inputs.clone();

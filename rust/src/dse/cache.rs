@@ -236,6 +236,27 @@ impl DseCache {
         self.entries.get(key)
     }
 
+    /// Collision-safe lookup: a hit must carry the *same canonical
+    /// schedule encoding* as the query, not just the same 64-bit
+    /// FNV-1a key. FNV is not collision-resistant, and a colliding hit
+    /// would silently return another candidate's score (and could even
+    /// crown it `.best`); an encoding mismatch is therefore treated as
+    /// a miss, and the candidate goes back to the simulator.
+    pub fn lookup_verified(&self, key: &str, encoded: &str) -> Option<&CacheEntry> {
+        match self.entries.get(key) {
+            Some(e) if e.encoded == encoded => Some(e),
+            Some(e) => {
+                eprintln!(
+                    "[dse] cache key {key} collides: stored {:?} != queried {encoded:?}; \
+                     treating as a miss",
+                    e.encoded
+                );
+                None
+            }
+            None => None,
+        }
+    }
+
     /// Persist one scored candidate (append + index). Re-recording an
     /// existing key overwrites the index entry; the duplicate line is
     /// harmless (last one wins on reload).
@@ -327,6 +348,40 @@ mod tests {
         assert!(decode_schedule("tile=4x4|wat=1").is_err());
         assert!(decode_schedule("tile=4xfour").is_err());
         assert!(decode_schedule("tile=4|unroll=f:x").is_err());
+    }
+
+    #[test]
+    fn colliding_key_is_a_miss_not_a_wrong_hit() {
+        let dir = std::env::temp_dir()
+            .join(format!("pushmem-dse-collision-test-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        // Forge the collision FNV-1a could produce: an entry recorded
+        // under candidate A's key but carrying candidate B's schedule.
+        let a = HwSchedule::new([8, 8]);
+        let b = HwSchedule::new([16, 16]).store_at("p");
+        let key = candidate_key("toy", &a);
+        let mut c = DseCache::open(&dir, "toy").unwrap();
+        c.record(CacheEntry {
+            key: key.clone(),
+            cycles: 64,
+            completion: 64,
+            pes: 1,
+            mems: 1,
+            sram_words: 1,
+            energy_per_op_pj: 1.0,
+            pixels_per_cycle: 1.0,
+            area_um2: 1.0,
+            encoded: encode_schedule(&b),
+        })
+        .unwrap();
+        // The unverified index still finds it; the verified lookup
+        // rejects the mismatched encoding and only accepts the real
+        // owner of the stored line.
+        assert!(c.lookup(&key).is_some());
+        assert!(c.lookup_verified(&key, &encode_schedule(&a)).is_none());
+        assert!(c.lookup_verified(&key, &encode_schedule(&b)).is_some());
+        assert!(c.lookup_verified("unknown-key", &encode_schedule(&a)).is_none());
+        let _ = fs::remove_dir_all(&dir);
     }
 
     #[test]

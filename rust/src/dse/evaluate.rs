@@ -5,7 +5,11 @@
 //! the same [`crate::apps::compile_checked`] path the test suite uses,
 //! so a candidate that scores here has *already* been validated
 //! bit-exact against the functional reference — an unvalidated design
-//! can never enter the ranking or the cache.
+//! can never enter the ranking or the cache. That path simulates
+//! through the per-design [`crate::cgra::SimPlan`] (docs/simulator.md),
+//! so per-candidate simulation pays setup exactly once and every
+//! additional input a caller streams through `CheckedRun::plan` is
+//! setup-free.
 
 use std::time::Instant;
 

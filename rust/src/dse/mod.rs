@@ -253,7 +253,13 @@ pub fn tune_program(program: &Program, app_key: &str, cfg: &TuneConfig) -> Resul
     let mut jobs: VecDeque<Candidate> = VecDeque::new();
     let mut cache_hits = 0;
     for (cand, _) in survivors {
-        match dse_cache.as_ref().and_then(|c| c.lookup(&cand.key)) {
+        // Verified hits only: the stored canonical encoding must match
+        // the queried one, so a 64-bit key collision can never return
+        // another candidate's score (cache::lookup_verified).
+        match dse_cache
+            .as_ref()
+            .and_then(|c| c.lookup_verified(&cand.key, &cand.encoded))
+        {
             Some(hit) => {
                 cache_hits += 1;
                 results.push(Ranked { entry: hit.clone(), candidate: cand, from_cache: true });

@@ -18,6 +18,12 @@ impl Aggregator {
         self.regs.len()
     }
 
+    /// Zero the register file and write counter (per-run reuse).
+    pub fn reset(&mut self) {
+        self.regs.iter_mut().for_each(|r| *r = 0);
+        self.writes = 0;
+    }
+
     /// Serial write into one slot.
     pub fn write(&mut self, slot: i64, word: i64) {
         assert!(

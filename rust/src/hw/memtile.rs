@@ -120,6 +120,52 @@ impl MemTile {
         self.ctl_out.iter().all(|c| c.is_done())
     }
 
+    /// Return the tile to its just-configured state: every controller
+    /// replays from its first iteration, all storage is zeroed, access
+    /// statistics restart. This is the cheap per-request path of the
+    /// simulator's plan/run split (docs/simulator.md): a `SimRun` keeps
+    /// one instantiated tile per bank and resets it instead of
+    /// re-instantiating the whole design per request.
+    pub fn reset(&mut self) {
+        for c in self
+            .ctl_in
+            .iter_mut()
+            .chain(self.ctl_flush.iter_mut())
+            .chain(self.ctl_read.iter_mut())
+            .chain(self.ctl_out.iter_mut())
+        {
+            c.reset();
+        }
+        for a in &mut self.aggs {
+            a.reset();
+        }
+        for tb in &mut self.tbs {
+            tb.reset();
+        }
+        self.sram.reset();
+        self.inflight = None;
+    }
+
+    /// Earliest future cycle any controller of this tile fires, or
+    /// `None` when every controller is done — the simulator's
+    /// idle-cycle skip must never jump past this.
+    pub fn next_event(&self) -> Option<i64> {
+        self.ctl_in
+            .iter()
+            .chain(&self.ctl_flush)
+            .chain(&self.ctl_read)
+            .chain(&self.ctl_out)
+            .filter(|c| !c.is_done())
+            .map(|c| c.next_fire())
+            .min()
+    }
+
+    /// A wide read is in flight (must land on the very next tick), so
+    /// the tile cannot be skipped over even with no scheduled fire.
+    pub fn busy(&self) -> bool {
+        self.inflight.is_some()
+    }
+
     /// Advance one cycle. `inputs[i]` must carry a word whenever input
     /// port `i`'s schedule fires. Returns one optional word per output
     /// port.
@@ -232,6 +278,30 @@ impl DpMemTile {
         self.ctl_r.iter().all(|c| c.is_done())
     }
 
+    /// Just-configured state; see [`MemTile::reset`].
+    pub fn reset(&mut self) {
+        for c in self.ctl_w.iter_mut().chain(self.ctl_r.iter_mut()) {
+            c.reset();
+        }
+        self.sram.reset();
+        self.pending_port = None;
+    }
+
+    /// Earliest future controller fire; see [`MemTile::next_event`].
+    pub fn next_event(&self) -> Option<i64> {
+        self.ctl_w
+            .iter()
+            .chain(&self.ctl_r)
+            .filter(|c| !c.is_done())
+            .map(|c| c.next_fire())
+            .min()
+    }
+
+    /// A read is pending delivery on the next tick.
+    pub fn busy(&self) -> bool {
+        self.pending_port.is_some()
+    }
+
     pub fn tick(&mut self, cycle: i64, inputs: &[Option<i64>]) -> Result<Vec<Option<i64>>> {
         assert_eq!(inputs.len(), self.ctl_w.len());
         // 1. Data from last cycle's read issue appears on the port.
@@ -277,6 +347,11 @@ impl DelayLine {
 
     pub fn depth(&self) -> usize {
         self.depth
+    }
+
+    /// Flush the line back to all zeros (the reset state).
+    pub fn reset(&mut self) {
+        self.buf.iter_mut().for_each(|v| *v = 0);
     }
 
     /// Push a word, pop the word from `depth` cycles ago.
@@ -349,6 +424,31 @@ mod tests {
         assert_eq!(tile.sram.stats.writes, 4);
         assert_eq!(tile.sram.stats.reads, 4);
         assert_eq!(tile.sram.stats.conflicts, 0);
+    }
+
+    #[test]
+    fn reset_replays_bit_identically() {
+        let mut tile = delay8_tile();
+        assert_eq!(tile.next_event(), Some(0));
+        let run = |tile: &mut MemTile| -> Vec<(i64, i64)> {
+            let mut outs = Vec::new();
+            for cycle in 0..30 {
+                let inw = if cycle < 16 { Some(100 + cycle) } else { None };
+                if let Some(v) = tile.tick(cycle, &[inw]).unwrap()[0] {
+                    outs.push((cycle, v));
+                }
+            }
+            outs
+        };
+        let first = run(&mut tile);
+        assert!(tile.is_done());
+        tile.reset();
+        assert!(!tile.is_done());
+        assert_eq!(tile.next_event(), Some(0));
+        assert_eq!(tile.sram.stats.reads, 0, "stats must restart");
+        let second = run(&mut tile);
+        assert_eq!(first, second);
+        assert_eq!(tile.sram.stats.reads, 4);
     }
 
     #[test]

@@ -76,6 +76,23 @@ impl PeTile {
         self.out_reg
     }
 
+    /// Return to the just-configured state (operand delay lines
+    /// flushed, output register and accumulator cleared) so one
+    /// instantiated PE can be reused across simulation runs
+    /// (docs/simulator.md).
+    pub fn reset(&mut self) {
+        for d in &mut self.delay_lines {
+            d.reset();
+        }
+        self.out_reg = 0;
+        self.acc = match self.cfg.op {
+            PeOp::Acc { init, .. } => init,
+            _ => 0,
+        };
+        self.fire_count = 0;
+        self.ops_executed = 0;
+    }
+
     /// Compute one cycle with routed operand values (ignored where a
     /// constant is configured). The result appears on
     /// [`PeTile::output`] after this call (1-cycle latency).
@@ -161,6 +178,26 @@ mod tests {
             outs.push(pe.output());
         }
         assert_eq!(outs, vec![1, 3, 6, 10, 30, 60]);
+    }
+
+    #[test]
+    fn reset_restores_accumulator_and_delays() {
+        let mut pe = PeTile::new(PeConfig {
+            op: PeOp::Acc { op: BinOp::Add, init: 0, period: 3 },
+            consts: [None; 3],
+            delays: [2, 0, 0],
+        });
+        let run = |pe: &mut PeTile| -> Vec<i32> {
+            (1..=4).map(|v| {
+                pe.tick([v, 0, 0]);
+                pe.output()
+            }).collect()
+        };
+        let first = run(&mut pe);
+        pe.reset();
+        assert_eq!(pe.output(), 0);
+        assert_eq!(pe.ops_executed, 0);
+        assert_eq!(run(&mut pe), first);
     }
 
     #[test]

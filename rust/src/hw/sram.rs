@@ -45,6 +45,16 @@ impl WideSram {
         self.capacity / self.fetch_width
     }
 
+    /// Zero all storage and statistics (the simulator's per-run reuse
+    /// path — a reset run must be bit-identical to a fresh instance).
+    pub fn reset(&mut self) {
+        self.data.iter_mut().for_each(|w| *w = 0);
+        self.accessed_this_cycle = false;
+        self.pending_read = None;
+        self.ready_read = None;
+        self.stats = SramStats::default();
+    }
+
     fn claim_port(&mut self) -> Result<()> {
         if self.accessed_this_cycle {
             self.stats.conflicts += 1;
@@ -118,6 +128,16 @@ impl DualPortSram {
             ready_read: None,
             stats: SramStats::default(),
         }
+    }
+
+    /// Zero all storage and statistics; see [`WideSram::reset`].
+    pub fn reset(&mut self) {
+        self.data.iter_mut().for_each(|w| *w = 0);
+        self.pending_write = None;
+        self.read_this_cycle = false;
+        self.pending_read = None;
+        self.ready_read = None;
+        self.stats = SramStats::default();
     }
 
     /// Write commits at end of cycle: a same-cycle read of the same

@@ -23,6 +23,12 @@ impl TransposeBuffer {
         self.fetch_width
     }
 
+    /// Zero both halves and the load counter (per-run reuse).
+    pub fn reset(&mut self) {
+        self.regs.iter_mut().for_each(|r| *r = 0);
+        self.loads = 0;
+    }
+
     /// Parallel load of one vector into half 0 or 1.
     pub fn load(&mut self, half: usize, words: &[i64]) {
         assert_eq!(words.len(), self.fetch_width, "TB width mismatch");

@@ -14,15 +14,25 @@ pub struct Tensor {
 }
 
 impl Tensor {
-    /// Zero-filled tensor over `shape`.
-    pub fn zeros(shape: BoxSet) -> Tensor {
+    /// Row-major strides over `shape` — THE layout rule for every
+    /// tensor: flat index = Σ (coord_k − min_k) · stride_k. The
+    /// simulator's flat addressing ([`crate::cgra::SimPlan`]) builds
+    /// on this exact function; keep any layout change here.
+    pub fn row_major_strides(shape: &BoxSet) -> Vec<i64> {
         let mut strides = vec![0i64; shape.rank()];
         let mut s = 1i64;
         for k in (0..shape.rank()).rev() {
             strides[k] = s;
             s *= shape.dims[k].extent;
         }
-        Tensor { data: vec![0; s as usize], strides, shape }
+        strides
+    }
+
+    /// Zero-filled tensor over `shape`.
+    pub fn zeros(shape: BoxSet) -> Tensor {
+        let strides = Self::row_major_strides(&shape);
+        let len = shape.cardinality() as usize;
+        Tensor { data: vec![0; len], strides, shape }
     }
 
     /// Build from row-major data in the box's lexicographic point order.

@@ -132,3 +132,72 @@ fn unknown_app_reports_status() {
     let err = serve::request_app(&mut stream, "not_an_app", &[&t]).unwrap_err();
     assert!(err.to_string().contains("status 1"), "{err:#}");
 }
+
+/// A connection whose handling panics must not take the pool down:
+/// with a single worker, the panicking connection is answered with
+/// STATUS_INTERNAL (best-effort) and the *same* worker keeps serving
+/// subsequent connections bit-exactly.
+#[test]
+fn panicking_connection_leaves_pool_serving() {
+    use std::io::Read;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    // Small tile keeps the test fast; the serving path is identical.
+    let program = pushmem::apps::gaussian::build(14);
+    let c = pushmem::coordinator::compile(&program).unwrap();
+    let tiles = tiles_for(&c, 0);
+    let expect = expected(&c, &tiles);
+
+    let mut cfg = ServeConfig::single("gaussian", c);
+    cfg.workers = 1; // one worker: it must personally survive the panic
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    // First connection panics inside the handler; later ones take the
+    // production path.
+    let panicked = Arc::new(AtomicBool::new(false));
+    let flag = Arc::clone(&panicked);
+    let handler: Arc<serve::Handler> = Arc::new(move |cfg, stream| {
+        if !flag.swap(true, Ordering::SeqCst) {
+            panic!("injected connection-handler panic");
+        }
+        serve::handle_connection(cfg, stream)
+    });
+    std::thread::spawn(move || serve::serve_on_with(listener, cfg, handler));
+
+    // Connection 1: the worker panics; the client gets an internal
+    // error status frame and the connection closes.
+    let mut s1 = TcpStream::connect(addr).unwrap();
+    let resp = serve::read_response(&mut s1).unwrap();
+    assert_eq!(resp.status, pushmem::coordinator::protocol::STATUS_INTERNAL);
+    let mut rest = Vec::new();
+    assert_eq!(s1.read_to_end(&mut rest).unwrap(), 0, "connection must close");
+    drop(s1);
+
+    // Connections 2 and 3: the same single worker serves them normally.
+    for _ in 0..2 {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let refs: Vec<&Tensor> = tiles.iter().collect();
+        let (words, cycles, _) = serve::request(&mut s, &refs).unwrap();
+        assert_eq!(words, expect);
+        assert!(cycles > 0);
+    }
+    assert!(panicked.load(Ordering::SeqCst));
+}
+
+/// Plan reuse over the wire: many requests on one connection (the
+/// cached-SimPlan, reused-SimRun path) answer bit-exactly what the
+/// one-shot simulation path computes for each distinct input.
+#[test]
+fn repeated_requests_reuse_plan_bit_exactly() {
+    let registry = Arc::new(CompiledRegistry::new());
+    let addr = spawn_multi_server(Arc::clone(&registry), 1);
+    let c = registry.get("gaussian").unwrap();
+    let mut stream = TcpStream::connect(addr).unwrap();
+    for k in 0..4 {
+        let tiles = tiles_for(&c, k);
+        let refs: Vec<&Tensor> = tiles.iter().collect();
+        let (words, _, _) = serve::request_app(&mut stream, "gaussian", &refs).unwrap();
+        assert_eq!(words, expected(&c, &tiles), "tile {k}");
+    }
+}
