@@ -3,10 +3,13 @@
 # request path; see DESIGN.md §1). `make verify` is the tier-1 check.
 # `make tune-smoke` is the CI smoke run of the DSE tuner (docs/dse.md).
 # `make sim-bench` is the CI smoke run of the serving-throughput bench
-# (docs/simulator.md): it exercises the SimPlan cache on/off paths and
-# asserts plan-reuse bit-exactness along the way.
+# (docs/simulator.md, docs/execution.md): it compares the functional
+# engine against the cycle-accurate simulator and asserts bit-exactness
+# along the way. `make bench-json` refreshes the machine-readable perf
+# trajectory (BENCH_serve.json / BENCH_dse.json) in quick mode — the
+# CI step future PRs diff req/s and candidates/sec against.
 
-.PHONY: artifacts verify tune-smoke sim-bench clean
+.PHONY: artifacts verify tune-smoke sim-bench bench-json clean
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -20,6 +23,10 @@ tune-smoke:
 sim-bench:
 	SIM_BENCH_QUICK=1 cargo bench --bench serve_throughput
 
+bench-json:
+	SIM_BENCH_QUICK=1 cargo bench --bench serve_throughput
+	DSE_BENCH_QUICK=1 cargo bench --bench dse_harris
+
 clean:
 	cargo clean
-	rm -rf artifacts dse-cache
+	rm -rf artifacts dse-cache BENCH_serve.json BENCH_dse.json

@@ -1,23 +1,33 @@
 //! DSE tuner baseline on the paper's schedule-exploration subject
-//! (§VI-C, Table V): candidates-evaluated/sec and tuned-best vs the
-//! six hand-written Harris schedules, so future PRs can track tuner
-//! throughput and search quality.
+//! (§VI-C, Table V): candidates-evaluated/sec through **both**
+//! execution engines (the functional engine is the tuner's default;
+//! the cycle-accurate simulator is the baseline it is measured
+//! against — docs/execution.md), plus tuned-best vs the six
+//! hand-written Harris schedules, so future PRs can track tuner
+//! throughput and search quality. Machine-readable results land in
+//! `BENCH_dse.json` (`make bench-json`).
 //!
 //! Runs at tile 24 (not the paper's 60) to keep the bench quick; the
-//! paper-scale run is `pushmem tune harris`.
+//! paper-scale run is `pushmem tune harris`. `DSE_BENCH_QUICK=1`
+//! shrinks the budget for CI.
 
 #[path = "harness.rs"]
 mod harness;
 
 use pushmem::apps::harris::{build, Schedule};
 use pushmem::dse::{self, Objective, SpaceConfig, TuneConfig};
+use pushmem::exec::Engine;
 
 fn main() {
+    let quick = std::env::var("DSE_BENCH_QUICK").is_ok_and(|v| !v.is_empty() && v != "0");
+    let budget = if quick { 8 } else { 24 };
+
     harness::rule("DSE: Harris schedule auto-tuning (tile 24)");
 
-    // Hand-written Table V baselines, simulated with the same scorer
-    // the tuner uses. Tiles differ across rows (sch5 is 2x per side),
-    // so the comparison metric is cycles per output pixel.
+    // Hand-written Table V baselines, scored with the same functional
+    // engine the tuner defaults to. Tiles differ across rows (sch5 is
+    // 2x per side), so the comparison metric is cycles per output
+    // pixel.
     println!(
         "{:<24} {:>10} {:>5} {:>8} {:>6} {:>6}",
         "hand-written", "cycles", "tile", "cyc/px", "PEs", "MEMs"
@@ -27,7 +37,11 @@ fn main() {
         match b.eval {
             Ok(e) => {
                 let cpp = dse::cycles_per_pixel(e.cycles, &[b.tile, b.tile]);
-                if hand_best.map_or(true, |(c, _)| cpp < c) {
+                let better = match hand_best {
+                    Some((c, _)) => cpp < c,
+                    None => true,
+                };
+                if better {
                     hand_best = Some((cpp, b.label));
                 }
                 println!(
@@ -39,27 +53,49 @@ fn main() {
         }
     }
 
-    let cfg = TuneConfig {
+    // Tuner throughput, one run per engine (same space, same seed, so
+    // the work is identical and the ratio is pure engine speed).
+    let cfg_for = |engine: Engine| TuneConfig {
         objective: Objective::Cycles,
-        budget: 24,
+        budget,
         workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
         seed: 1,
         cache_dir: None,
+        engine,
         space: SpaceConfig::default(),
     };
-    let report = dse::tune_program(&build(24, Schedule::NoRecompute), "harris_t24", &cfg)
-        .expect("tuner failed");
+
+    let sim_report =
+        dse::tune_program(&build(24, Schedule::NoRecompute), "harris_t24", &cfg_for(Engine::Sim))
+            .expect("sim-engine tuner failed");
+    let report =
+        dse::tune_program(&build(24, Schedule::NoRecompute), "harris_t24", &cfg_for(Engine::Auto))
+            .expect("tuner failed");
 
     println!(
-        "\ntuner: {} enumerated, {} pruned, {} simulated (+{} failed) in {:.2} s",
+        "\ntuner: {} enumerated, {} pruned, {} scored (+{} failed)",
         report.enumerated, report.infeasible, report.evaluated, report.failed,
-        report.eval_seconds
+    );
+    let sim_cps = sim_report.evals_per_sec();
+    let exec_cps = report.evals_per_sec();
+    println!(
+        "bench {:<40} {:>10.2} candidates/s",
+        "dse_harris/sim_engine_throughput", sim_cps
     );
     println!(
         "bench {:<40} {:>10.2} candidates/s",
-        "dse_harris/evaluation_throughput",
-        report.evals_per_sec()
+        "dse_harris/exec_engine_throughput", exec_cps
     );
+    let speedup = if sim_cps > 0.0 { exec_cps / sim_cps } else { 0.0 };
+    println!("exec vs sim tuner throughput: {speedup:.1}x");
+
+    // Identical search, identical ranking: the engine must never
+    // change what the tuner finds.
+    let keys = |r: &dse::TuneReport| -> Vec<&str> {
+        r.results.iter().map(|x| x.entry.key.as_str()).collect()
+    };
+    assert_eq!(keys(&sim_report), keys(&report), "engines ranked differently");
+
     let best = report.best().expect("no valid candidate");
     let tuned_tile = best.entry.schedule().map(|s| s.tile).unwrap_or_default();
     let tuned_cpp = dse::cycles_per_pixel(best.entry.cycles, &tuned_tile);
@@ -67,7 +103,9 @@ fn main() {
         "bench {:<40} {:>10.3} cyc/px  (schedule {})",
         "dse_harris/tuned_best", tuned_cpp, best.entry.encoded
     );
+    let mut hand_cpp = f64::NAN;
     if let Some((cpp, label)) = hand_best {
+        hand_cpp = cpp;
         println!(
             "bench {:<40} {:>10.3} cyc/px  ({label})",
             "dse_harris/hand_written_best", cpp
@@ -78,4 +116,19 @@ fn main() {
             if tuned_cpp <= cpp { "tuner >= hand-written" } else { "hand-written ahead" }
         );
     }
+
+    harness::write_bench_json(
+        "BENCH_dse.json",
+        &harness::Json::obj()
+            .str_("bench", "dse_harris")
+            .bool_("quick", quick)
+            .int("budget", budget as i64)
+            .int("evaluated", report.evaluated as i64)
+            .num("sim_candidates_per_s", sim_cps)
+            .num("exec_candidates_per_s", exec_cps)
+            .num("exec_vs_sim_speedup", speedup)
+            .num("tuned_cycles_per_pixel", tuned_cpp)
+            .num("hand_written_cycles_per_pixel", hand_cpp)
+            .end(),
+    );
 }

@@ -37,3 +37,90 @@ pub fn rule(title: &str) {
 pub fn geomean(v: &[f64]) -> f64 {
     (v.iter().map(|x| x.ln()).sum::<f64>() / v.len() as f64).exp()
 }
+
+// ---------------------------------------------------------------------
+// Machine-readable perf trajectory: a tiny JSON emitter (no serde in
+// this offline image). `serve_throughput` writes BENCH_serve.json and
+// `dse_harris` writes BENCH_dse.json through it (`make bench-json`),
+// so CI and future PRs can diff req/s and candidates/sec numerically
+// instead of scraping bench stdout.
+// ---------------------------------------------------------------------
+
+/// Builder for one JSON object. Values are formatted directly;
+/// strings must not contain `"` or `\` (bench keys and app names
+/// never do).
+pub struct Json {
+    buf: String,
+    first: bool,
+}
+
+impl Json {
+    pub fn obj() -> Json {
+        Json { buf: String::from("{"), first: true }
+    }
+
+    fn key(&mut self, k: &str) {
+        if !self.first {
+            self.buf.push(',');
+        }
+        self.first = false;
+        self.buf.push('"');
+        self.buf.push_str(k);
+        self.buf.push_str("\":");
+    }
+
+    pub fn num(mut self, k: &str, v: f64) -> Json {
+        self.key(k);
+        if v.is_finite() {
+            self.buf.push_str(&format!("{v:.6}"));
+        } else {
+            self.buf.push_str("null");
+        }
+        self
+    }
+
+    pub fn int(mut self, k: &str, v: i64) -> Json {
+        self.key(k);
+        self.buf.push_str(&v.to_string());
+        self
+    }
+
+    pub fn bool_(mut self, k: &str, v: bool) -> Json {
+        self.key(k);
+        self.buf.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    pub fn str_(mut self, k: &str, v: &str) -> Json {
+        self.key(k);
+        self.buf.push('"');
+        self.buf.push_str(v);
+        self.buf.push('"');
+        self
+    }
+
+    /// Pre-rendered JSON value (a nested object or array).
+    pub fn raw(mut self, k: &str, v: &str) -> Json {
+        self.key(k);
+        self.buf.push_str(v);
+        self
+    }
+
+    pub fn end(mut self) -> String {
+        self.buf.push('}');
+        self.buf
+    }
+}
+
+/// Render a JSON array from pre-rendered element strings.
+pub fn json_array(items: &[String]) -> String {
+    format!("[{}]", items.join(","))
+}
+
+/// Write a perf-trajectory file to the repo root and echo its path.
+pub fn write_bench_json(path: &str, contents: &str) {
+    match std::fs::write(path, format!("{contents}\n")) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -1,17 +1,23 @@
-//! Serving throughput: requests/sec through the simulated CGRA, with
-//! and without the per-design SimPlan cache (docs/simulator.md), then
-//! through the full TCP + worker-pool stack.
+//! Serving throughput: requests/sec through the compiled designs,
+//! comparing the functional execution engine against the
+//! cycle-accurate simulator (docs/execution.md), then through the
+//! full TCP + worker-pool stack.
 //!
-//! §1 isolates the plan/run split: the same requests are simulated
-//! with fresh compile-grade setup per request (the pre-split serving
-//! cost) versus one cached `SimPlan` and a reused `SimRun`. §2 runs N
-//! concurrent clients against the real server, which always serves
-//! from the cached plan.
+//! §0 is the engine comparison the ExecPlan work is measured by: for
+//! every primary app, the same requests run through a cached-plan
+//! `SimRun` and a cached-plan `ExecRun` (bit-exactness asserted
+//! outside the timed loops), reporting req/s and the exec-vs-sim
+//! speedup. §1 isolates the older plan/run split (fresh sim setup per
+//! request vs cached plan). §2 runs N concurrent clients against the
+//! real server, which serves from the functional engine by default.
 //!
-//! Run: `cargo bench --bench serve_throughput` (it is a plain binary:
+//! Results are also written machine-readably to `BENCH_serve.json`
+//! (the perf trajectory file `make bench-json` refreshes in CI).
+//!
+//! Run: `cargo bench --bench serve_throughput` (a plain binary:
 //! criterion is not vendored in this offline image). Set
-//! `SIM_BENCH_QUICK=1` for the CI smoke variant (fewer requests,
-//! same code paths — the `make sim-bench` target).
+//! `SIM_BENCH_QUICK=1` for the CI smoke variant (fewer requests and
+//! apps, same code paths).
 
 #[path = "harness.rs"]
 mod harness;
@@ -23,26 +29,82 @@ use std::time::Instant;
 
 use pushmem::cgra::{simulate, SimRun};
 use pushmem::coordinator::serve::{self, ServeConfig};
-use pushmem::coordinator::CompiledRegistry;
+use pushmem::coordinator::{gen_inputs, CompiledRegistry};
+use pushmem::exec::ExecRun;
 use pushmem::tensor::Tensor;
 
 const APP: &str = "gaussian";
 const WORKERS: usize = 8;
 
 fn main() {
-    let quick = std::env::var("SIM_BENCH_QUICK")
-        .map_or(false, |v| !v.is_empty() && v != "0");
+    let quick = std::env::var("SIM_BENCH_QUICK").is_ok_and(|v| !v.is_empty() && v != "0");
     let requests_per_client: usize = if quick { 4 } else { 12 };
     let direct_reqs: usize = if quick { 4 } else { 16 };
+    let exec_reqs: usize = if quick { 50 } else { 400 };
     let client_counts: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4, 8] };
+    // Quick mode keeps CI latency down with a representative app
+    // subset; the full run covers every primary app.
+    let bench_apps: &[&str] = if quick {
+        &["gaussian", "harris"]
+    } else {
+        pushmem::apps::PRIMARY
+    };
 
-    harness::rule("serving throughput: plan caching, then N concurrent clients");
+    harness::rule("serving throughput: engines, plan caching, then N concurrent clients");
 
     let registry = Arc::new(CompiledRegistry::new());
-    let c = registry.get(APP).expect("compile");
 
-    // One deterministic tile reused by every request (we are measuring
-    // the serving stack, not input generation).
+    // --- §0 Engine comparison per primary app -----------------------
+    println!(
+        "{:<12} {:>12} {:>12} {:>9}  (cached-plan req/s)",
+        "app", "sim", "exec", "speedup"
+    );
+    let mut app_rows: Vec<String> = Vec::new();
+    let mut speedups: Vec<f64> = Vec::new();
+    for name in bench_apps {
+        let c = registry.get(name).expect("compile");
+        let inputs = gen_inputs(&c.lp);
+
+        let mut sim_run = SimRun::new(c.plan().expect("sim plan"));
+        let mut exec_run = ExecRun::new(c.exec_plan().expect("exec plan"));
+        // Bit-exactness and identical stats checked outside the timed
+        // loops (the differential test suite proves it exhaustively;
+        // the bench must not regress it silently).
+        let s = sim_run.run(&inputs).expect("sim");
+        let e = exec_run.run(&inputs).expect("exec");
+        assert_eq!(s.output.data, e.output.data, "{name}: engine outputs differ");
+        assert_eq!(s.stats, e.stats, "{name}: engine stats differ");
+
+        let t0 = Instant::now();
+        for _ in 0..direct_reqs {
+            sim_run.run(&inputs).expect("sim");
+        }
+        let sim_rps = direct_reqs as f64 / t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        for _ in 0..exec_reqs {
+            exec_run.run(&inputs).expect("exec");
+        }
+        let exec_rps = exec_reqs as f64 / t0.elapsed().as_secs_f64();
+
+        let speedup = exec_rps / sim_rps;
+        speedups.push(speedup);
+        println!("{name:<12} {sim_rps:>12.1} {exec_rps:>12.1} {speedup:>8.1}x");
+        app_rows.push(
+            harness::Json::obj()
+                .str_("app", name)
+                .num("sim_req_per_s", sim_rps)
+                .num("exec_req_per_s", exec_rps)
+                .num("exec_vs_sim_speedup", speedup)
+                .int("cycles_per_tile", s.stats.cycles)
+                .end(),
+        );
+    }
+    let geo = harness::geomean(&speedups);
+    println!("geomean exec-vs-sim speedup: {geo:.1}x");
+
+    // --- §1 Plan caching on the sim fallback ------------------------
+    let c = registry.get(APP).expect("compile");
     let tiles: Vec<Tensor> = c
         .lp
         .inputs
@@ -57,8 +119,6 @@ fn main() {
             })
         })
         .collect();
-
-    // --- §1 Direct simulation: fresh setup vs cached plan -----------
     let mut inputs = BTreeMap::new();
     for (name, t) in c.lp.inputs.iter().zip(tiles.iter()) {
         inputs.insert(name.clone(), t.clone());
@@ -66,8 +126,6 @@ fn main() {
     let baseline = simulate(&c.design, &c.graph, &inputs).expect("fresh simulate");
     let t0 = Instant::now();
     for _ in 0..direct_reqs {
-        // The pre-split cost: wire interning, hardware instantiation
-        // and event analysis on every request.
         simulate(&c.design, &c.graph, &inputs).expect("fresh simulate");
     }
     let fresh_s = t0.elapsed().as_secs_f64();
@@ -80,20 +138,18 @@ fn main() {
         run.run(&inputs).expect("cached simulate");
     }
     let cached_s = t0.elapsed().as_secs_f64();
-    // Bit-exactness checked outside the timed loops so both measure
-    // bare simulation.
     let check = run.run(&inputs).expect("cached simulate");
     assert_eq!(check.output.data, baseline.output.data, "plan reuse must be bit-exact");
 
     let fresh_rps = direct_reqs as f64 / fresh_s;
     let cached_rps = direct_reqs as f64 / cached_s;
     println!(
-        "sim only ({direct_reqs} requests): fresh-setup {fresh_rps:.1} req/s, \
+        "\nsim only ({direct_reqs} requests): fresh-setup {fresh_rps:.1} req/s, \
          cached-plan {cached_rps:.1} req/s ({:.2}x)",
         cached_rps / fresh_rps
     );
 
-    // --- §2 Full TCP + worker-pool stack (plan-cached) --------------
+    // --- §2 Full TCP + worker-pool stack (exec engine) --------------
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     {
@@ -106,6 +162,7 @@ fn main() {
         "{:<10} {:>10} {:>12} {:>14}",
         "clients", "requests", "req/s", "ms/req (avg)"
     );
+    let mut tcp_best_rps = 0.0f64;
     for &clients in client_counts {
         let t0 = Instant::now();
         std::thread::scope(|s| {
@@ -124,16 +181,31 @@ fn main() {
         });
         let wall = t0.elapsed().as_secs_f64();
         let total = clients * requests_per_client;
+        let rps = total as f64 / wall;
+        tcp_best_rps = tcp_best_rps.max(rps);
         println!(
             "{:<10} {:>10} {:>12.1} {:>14.3}",
             clients,
             total,
-            total as f64 / wall,
+            rps,
             wall / total as f64 * 1e3
         );
     }
     println!(
-        "\n(app: {APP}, {} cycles/tile simulated per request, {WORKERS} server workers)",
+        "\n(app: {APP}, {} cycles/tile per request, {WORKERS} server workers, engine auto)",
         c.graph.completion
+    );
+
+    harness::write_bench_json(
+        "BENCH_serve.json",
+        &harness::Json::obj()
+            .str_("bench", "serve_throughput")
+            .bool_("quick", quick)
+            .raw("apps", &harness::json_array(&app_rows))
+            .num("geomean_exec_vs_sim_speedup", geo)
+            .num("sim_fresh_req_per_s", fresh_rps)
+            .num("sim_cached_req_per_s", cached_rps)
+            .num("tcp_best_req_per_s", tcp_best_rps)
+            .end(),
     );
 }

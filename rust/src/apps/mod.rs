@@ -31,6 +31,7 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::cgra::{SimPlan, SimRun, SimStats};
+use crate::exec::{Engine, ExecPlan, ExecRun};
 use crate::extraction::extract;
 use crate::halide::{lower, LoweredPipeline, Program};
 use crate::mapping::{map_design, MappedDesign};
@@ -109,29 +110,39 @@ pub const NAMES: &[&str] = &[
 ];
 
 /// Everything `compile_checked` produced for one program, plus the
-/// cycle-accurate simulation statistics of its validated run.
+/// activity statistics of its validated run. Callers that go on to
+/// execute more inputs should use [`crate::coordinator::Compiled`]'s
+/// cached plans instead.
 pub struct CheckedRun {
     pub lp: LoweredPipeline,
     pub schedule: PipelineSchedule,
     pub graph: UbGraph,
     pub design: MappedDesign,
-    /// The simulation plan the validated run executed against —
-    /// callers that go on to simulate more inputs (benches, serving
-    /// smoke paths) reuse it instead of rebuilding setup.
-    pub plan: Arc<SimPlan>,
     pub stats: SimStats,
+    /// The engine that actually validated the design.
+    pub engine: Engine,
 }
 
-/// Compile `p` end to end (lower → schedule → extract → map), simulate
+/// Compile `p` end to end (lower → schedule → extract → map), execute
 /// it cycle-accurately on the deterministic pseudo-random input stream,
-/// and verify the simulated output bit-exact against the functional
-/// reference execution.
+/// and verify the output bit-exact against the functional reference
+/// execution.
 ///
 /// Every failure — an infeasible lowering, a scheduling or mapping
 /// error, a simulator fault, or an output mismatch — comes back as
 /// `Err`, never a panic, so callers sweeping many schedules (the
 /// [`crate::dse`] tuner) survive individual bad candidates.
 pub fn compile_checked(p: &Program) -> Result<CheckedRun> {
+    compile_checked_with(p, Engine::Sim)
+}
+
+/// [`compile_checked`] with an explicit execution engine. The
+/// bit-exact check against the functional reference is identical in
+/// all modes — an unvalidated design can never come back `Ok` — but
+/// `Exec`/`Auto` validate through the functional engine
+/// ([`crate::exec`]) in a fraction of the simulated time, which is
+/// what moves the [`crate::dse`] tuner's candidates/sec.
+pub fn compile_checked_with(p: &Program, engine: Engine) -> Result<CheckedRun> {
     let lp = lower::lower(p).with_context(|| format!("{}: lower", p.name))?;
     let ps = sched::schedule(&lp).with_context(|| format!("{}: sched", p.name))?;
     let g = extract(&lp, &ps).with_context(|| format!("{}: extract", p.name))?;
@@ -141,26 +152,52 @@ pub fn compile_checked(p: &Program) -> Result<CheckedRun> {
     let golden = lp
         .execute(&ins)
         .with_context(|| format!("{}: reference exec", p.name))?;
-    // Same plan/run split the server uses: setup is paid once here and
-    // the plan rides along in the result for further simulations.
-    let plan = Arc::new(
-        SimPlan::build(&d, &g).with_context(|| format!("{}: sim plan", p.name))?,
-    );
-    let res = SimRun::new(Arc::clone(&plan))
-        .run(&ins)
-        .with_context(|| format!("{}: simulate", p.name))?;
+
+    // Engine resolution: Auto prefers the functional engine, falling
+    // back to the simulator when the design is outside its fragment.
+    let exec_plan = match engine {
+        Engine::Sim => None,
+        Engine::Exec => Some(Arc::new(
+            ExecPlan::build(&d, &g).with_context(|| format!("{}: exec plan", p.name))?,
+        )),
+        Engine::Auto => ExecPlan::build(&d, &g).ok().map(Arc::new),
+    };
+    let (res, engine_used) = match exec_plan {
+        Some(ep) => {
+            let res = ExecRun::new(ep)
+                .run(&ins)
+                .with_context(|| format!("{}: execute", p.name))?;
+            (res, Engine::Exec)
+        }
+        None => {
+            let plan = Arc::new(
+                SimPlan::build(&d, &g).with_context(|| format!("{}: sim plan", p.name))?,
+            );
+            let res = SimRun::new(plan)
+                .run(&ins)
+                .with_context(|| format!("{}: simulate", p.name))?;
+            (res, Engine::Sim)
+        }
+    };
     let out = &golden[&lp.output];
     for pt in out.shape.points() {
-        // The simulator's output box may be halo-rounded; compare on
+        // The accelerator's output box may be halo-rounded; compare on
         // the reference box.
         let (got, want) = (res.output.get(&pt), out.get(&pt));
         anyhow::ensure!(
             got == want,
-            "{}: output mismatch at {pt:?}: simulated {got}, reference {want}",
+            "{}: output mismatch at {pt:?}: executed {got}, reference {want}",
             p.name
         );
     }
-    Ok(CheckedRun { lp, schedule: ps, graph: g, design: d, plan, stats: res.stats })
+    Ok(CheckedRun {
+        lp,
+        schedule: ps,
+        graph: g,
+        design: d,
+        stats: res.stats,
+        engine: engine_used,
+    })
 }
 
 /// Small variants for tests.

@@ -64,10 +64,26 @@ enum SimBank {
 }
 
 impl SimBank {
-    fn tick(&mut self, cycle: i64, inputs: &[Option<i64>]) -> Result<Vec<Option<i64>>> {
+    /// Tick into a caller-owned scratch slice (one `Option<i64>` per
+    /// output port). The per-request hot loop must never allocate a
+    /// fresh output `Vec` per bank per cycle — `SimRun` keeps one
+    /// scratch buffer per bank and reuses it for the whole run.
+    fn tick_into(
+        &mut self,
+        cycle: i64,
+        inputs: &[Option<i64>],
+        out: &mut [Option<i64>],
+    ) -> Result<()> {
         match self {
-            SimBank::Wide(t) => t.tick(cycle, inputs),
-            SimBank::Dual(t) => t.tick(cycle, inputs),
+            SimBank::Wide(t) => t.tick_into(cycle, inputs, out),
+            SimBank::Dual(t) => t.tick_into(cycle, inputs, out),
+        }
+    }
+
+    fn n_outputs(&self) -> usize {
+        match self {
+            SimBank::Wide(t) => t.n_outputs(),
+            SimBank::Dual(t) => t.n_outputs(),
         }
     }
 
@@ -150,12 +166,19 @@ impl GatedIter {
 // Event schedules: plan-side description + run-side cursor.
 // ---------------------------------------------------------------------
 
+/// Cycles simulated past the scheduled completion, so late pipeline
+/// flushes surface as errors instead of silently truncated output.
+/// Shared with the analytic timing model ([`crate::exec`]), whose
+/// cycle/activity accounting must cover the exact same window.
+pub(crate) const HORIZON_SLACK: i64 = 8;
+
 /// Rebase an affine expression over absolute domain coordinates onto
 /// zero-based loop counters: `f(min + v)` has the same coefficients
 /// and an offset shifted by `Σ c_k · min_k`. The one rebasing rule
-/// shared by kernel gates ([`GatedIter`]) and event schedules
-/// ([`EventsPlan`]).
-fn rebase_zero_based(expr: &Affine, mins: &[i64]) -> Affine {
+/// shared by kernel gates ([`GatedIter`]), event schedules
+/// ([`EventsPlan`]), and the functional engine's address recurrences
+/// ([`crate::exec::ExecPlan`]).
+pub(crate) fn rebase_zero_based(expr: &Affine, mins: &[i64]) -> Affine {
     let delta: i64 = expr.coeffs.iter().zip(mins).map(|(c, m)| c * m).sum();
     expr.shift(delta)
 }
@@ -165,7 +188,7 @@ fn rebase_zero_based(expr: &Affine, mins: &[i64]) -> Affine {
 /// applies) into one affine function from iteration point (absolute
 /// coordinates) to flat tensor index — what lets a run read request
 /// words lazily instead of materializing `(cycle, value)` pairs.
-fn flat_access(access: &AffineMap, data_box: &BoxSet) -> Result<Affine> {
+pub(crate) fn flat_access(access: &AffineMap, data_box: &BoxSet) -> Result<Affine> {
     anyhow::ensure!(
         access.out_rank() == data_box.rank(),
         "access rank {} != data box rank {}",
@@ -636,7 +659,7 @@ impl SimPlan {
             words_in,
             expected_out,
             completion: graph.completion,
-            horizon: graph.completion + 8,
+            horizon: graph.completion + HORIZON_SLACK,
             settle,
             idle_pe_ops,
         })
@@ -651,6 +674,9 @@ impl SimPlan {
 struct BankState {
     bank: SimBank,
     ins: Vec<Option<i64>>,
+    /// Scratch for [`SimBank::tick_into`]: reused every cycle so the
+    /// hot loop performs no per-cycle output allocation.
+    outs: Vec<Option<i64>>,
 }
 
 struct KernelState {
@@ -691,8 +717,9 @@ impl SimRun {
             .banks
             .iter()
             .map(|b| BankState {
-                bank: b.proto.clone(),
                 ins: vec![None; b.in_slots.len()],
+                outs: vec![None; b.proto.n_outputs()],
+                bank: b.proto.clone(),
             })
             .collect();
         let taps = plan.taps.iter().map(|t| DelayLine::new(t.depth)).collect();
@@ -741,6 +768,7 @@ impl SimRun {
         for b in &mut self.banks {
             b.bank.reset();
             b.ins.iter_mut().for_each(|v| *v = None);
+            b.outs.iter_mut().for_each(|v| *v = None);
         }
         for t in &mut self.taps {
             t.reset();
@@ -792,14 +820,8 @@ impl SimRun {
             let t = inputs
                 .get(&f.input)
                 .with_context(|| format!("missing input {}", f.input))?;
-            let same_layout = t.shape.rank() == f.shape.rank()
-                && t.shape
-                    .dims
-                    .iter()
-                    .zip(&f.shape.dims)
-                    .all(|(a, b)| a.min == b.min && a.extent == b.extent);
             anyhow::ensure!(
-                same_layout,
+                t.shape.same_layout(&f.shape),
                 "input {}: tensor box {} does not match the design's declared box {}",
                 f.input,
                 t.shape,
@@ -842,17 +864,17 @@ impl SimRun {
                     .context("kernel store")?;
             }
 
-            // 2. Tick memory banks.
+            // 2. Tick memory banks (into per-bank scratch, so the hot
+            // loop never allocates an output vector per cycle).
             for (b, bp) in banks.iter_mut().zip(&plan.banks) {
                 for (k, &slot) in bp.in_slots.iter().enumerate() {
                     b.ins[k] = (slot_ep[slot] == ep).then(|| slot_val[slot]);
                 }
-                let outs = b
-                    .bank
-                    .tick(cycle, &b.ins)
+                b.bank
+                    .tick_into(cycle, &b.ins, &mut b.outs)
                     .with_context(|| format!("bank at cycle {cycle}"))?;
-                for (k, w) in outs.into_iter().enumerate() {
-                    if let Some(v) = w {
+                for (k, w) in b.outs.iter().enumerate() {
+                    if let Some(v) = *w {
                         let wire = bp.out_wires[k];
                         wire_val[wire] = v;
                         wire_ep[wire] = ep;

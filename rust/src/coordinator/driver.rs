@@ -7,7 +7,8 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{bail, Context, Result};
 
-use crate::cgra::{place, route, CgraSpec, Placement, RoutingResult, SimPlan};
+use crate::cgra::{place, route, CgraSpec, Placement, RoutingResult, SimPlan, SimRun};
+use crate::exec::{Engine, EngineRun, ExecPlan, ExecRun};
 use crate::extraction::extract;
 use crate::halide::{lower, LoweredPipeline, Program};
 use crate::mapping::{map_design, MappedDesign};
@@ -33,6 +34,11 @@ pub struct Compiled {
     /// which is what lets `serve` pay setup once per app instead of
     /// once per request.
     sim_plan: OnceLock<Result<Arc<SimPlan>, String>>,
+    /// Lazily-built functional execution plan (fused affine kernels +
+    /// analytic timing — docs/execution.md). A cached `Err` marks the
+    /// design as needing the cycle-accurate fallback; `Auto` engine
+    /// selection consults it once, not per request.
+    exec_plan: OnceLock<Result<Arc<ExecPlan>, String>>,
 }
 
 impl Compiled {
@@ -54,6 +60,37 @@ impl Compiled {
             Err(e) => bail!("building simulation plan: {e}"),
         }
     }
+
+    /// The design's [`ExecPlan`], built once on first use; same
+    /// caching contract as [`Compiled::plan`]. `Err` means the design
+    /// is outside the functional engine's proven fragment and must be
+    /// served by the simulator.
+    pub fn exec_plan(&self) -> Result<Arc<ExecPlan>> {
+        match self.exec_plan.get_or_init(|| {
+            ExecPlan::build(&self.design, &self.graph)
+                .map(Arc::new)
+                .map_err(|e| format!("{e:#}"))
+        }) {
+            Ok(p) => Ok(Arc::clone(p)),
+            Err(e) => bail!("building functional execution plan: {e}"),
+        }
+    }
+
+    /// Resolve `engine` into a concrete per-thread request executor
+    /// over this design's cached plans. `Auto` prefers the functional
+    /// engine and silently falls back to the cycle-accurate simulator
+    /// when [`Compiled::exec_plan`] fails — tuned to the serving path,
+    /// where exec availability must never cost availability.
+    pub fn runner(&self, engine: Engine) -> Result<EngineRun> {
+        match engine {
+            Engine::Exec => Ok(EngineRun::Exec(ExecRun::new(self.exec_plan()?))),
+            Engine::Sim => Ok(EngineRun::Sim(SimRun::new(self.plan()?))),
+            Engine::Auto => match self.exec_plan() {
+                Ok(p) => Ok(EngineRun::Exec(ExecRun::new(p))),
+                Err(_) => Ok(EngineRun::Sim(SimRun::new(self.plan()?))),
+            },
+        }
+    }
 }
 
 /// Full compile: lower → schedule → extract → map → place & route.
@@ -73,6 +110,7 @@ pub fn compile(program: &Program) -> Result<Compiled> {
         placement,
         routing,
         sim_plan: OnceLock::new(),
+        exec_plan: OnceLock::new(),
     })
 }
 
@@ -402,6 +440,22 @@ mod tests {
         let a = c.plan().unwrap();
         let b = c.plan().unwrap();
         assert!(Arc::ptr_eq(&a, &b), "plan must be cached, not rebuilt");
+        let ea = c.exec_plan().unwrap();
+        let eb = c.exec_plan().unwrap();
+        assert!(Arc::ptr_eq(&ea, &eb), "exec plan must be cached too");
+    }
+
+    #[test]
+    fn auto_runner_prefers_the_functional_engine() {
+        let c = compile(&apps::gaussian::build(14)).unwrap();
+        assert_eq!(c.runner(Engine::Auto).unwrap().engine(), Engine::Exec);
+        // Both engines are bit-identical through the runner seam —
+        // output and reported stats.
+        let ins = gen_inputs(&c.lp);
+        let e = c.runner(Engine::Exec).unwrap().run(&ins).unwrap();
+        let s = c.runner(Engine::Sim).unwrap().run(&ins).unwrap();
+        assert_eq!(e.output.data, s.output.data);
+        assert_eq!(e.stats, s.stats);
     }
 
     #[test]

@@ -20,5 +20,9 @@ pub use driver::{
     apply_tuned_schedule, compile, compile_maybe_tuned, gen_inputs, Compiled, CompiledRegistry,
 };
 pub use globalbuf::GlobalBuffer;
-pub use report::{report_app, sequential_comparison, AppReport, SequentialComparison};
-pub use validate::{validate, Validation};
+pub use report::{
+    report_app, report_app_with, sequential_comparison, AppReport, SequentialComparison,
+};
+pub use validate::{
+    cross_check, validate, validate_with, CrossCheck, EngineDivergence, Validation,
+};

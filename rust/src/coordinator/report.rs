@@ -6,9 +6,10 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use super::driver::{compile, gen_inputs, Compiled};
-use super::validate::validate;
+use super::validate::validate_with;
 use crate::cgra::SimStats;
 use crate::cost::{energy_per_op_pj, estimate_fpga, FpgaReport, CGRA_CLOCK_HZ};
+use crate::exec::Engine;
 use crate::extraction::extract;
 use crate::halide::{lower, Program};
 use crate::runtime::Runtime;
@@ -34,25 +35,41 @@ pub struct AppReport {
     pub cpu_time_s: Option<f64>,
     pub validated: Option<bool>,
     pub stats: SimStats,
+    /// Which engine produced the activity stats.
+    pub engine: Engine,
 }
 
-/// Compile, simulate, cost-model, and (optionally) validate one app.
+/// Compile, execute, cost-model, and (optionally) validate one app
+/// with the default (`Auto`) engine selection.
 pub fn report_app(
     program: &Program,
     artifact: Option<&Path>,
     rt: Option<&Runtime>,
 ) -> Result<AppReport> {
+    report_app_with(program, artifact, rt, Engine::Auto)
+}
+
+/// [`report_app`] with an explicit engine (`pushmem report --engine`).
+/// Engine choice can never change a reported number — the functional
+/// engine's analytic stats are bit-identical to the simulator's — it
+/// only changes how long the report takes to produce.
+pub fn report_app_with(
+    program: &Program,
+    artifact: Option<&Path>,
+    rt: Option<&Runtime>,
+    engine: Engine,
+) -> Result<AppReport> {
     let c: Compiled = compile(program)?;
     let inputs = gen_inputs(&c.lp);
-    // Simulate through the design's cached plan (Compiled::plan), the
-    // same setup-once path serving uses.
-    let res = crate::cgra::SimRun::new(c.plan()?)
-        .run(&inputs)
-        .context("simulation")?;
+    // Execute through the design's cached plan, the same setup-once
+    // path serving uses.
+    let mut runner = c.runner(engine)?;
+    let engine_used = runner.engine();
+    let res = runner.run(&inputs).context("execution")?;
 
     let (cpu_time_s, validated) = match (artifact, rt) {
         (Some(a), Some(rt)) if a.exists() => {
-            let v = validate(&c, a, rt)?;
+            let v = validate_with(&c, a, rt, engine)?;
             (Some(v.cpu_time_s), Some(v.matched))
         }
         _ => (None, None),
@@ -76,6 +93,7 @@ pub fn report_app(
         cpu_time_s,
         validated,
         stats: res.stats,
+        engine: engine_used,
     })
 }
 
@@ -149,5 +167,17 @@ mod tests {
         assert!(r.cgra_runtime_s > 0.0);
         assert!(r.fpga.runtime_s > r.cgra_runtime_s);
         assert!(r.validated.is_none());
+        assert_eq!(r.engine, Engine::Exec, "Auto must resolve to exec");
+    }
+
+    /// Engine choice must not change a single reported number.
+    #[test]
+    fn report_numbers_are_engine_independent() {
+        let p = apps::gaussian::build(14);
+        let e = report_app_with(&p, None, None, Engine::Exec).unwrap();
+        let s = report_app_with(&p, None, None, Engine::Sim).unwrap();
+        assert_eq!(e.stats, s.stats);
+        assert_eq!(e.completion, s.completion);
+        assert!((e.cgra_energy_per_op_pj - s.cgra_energy_per_op_pj).abs() < 1e-12);
     }
 }

@@ -26,7 +26,7 @@ use anyhow::{bail, Context, Result};
 
 use super::driver::{Compiled, CompiledRegistry};
 use super::protocol::{self, FrameError, Request, Response};
-use crate::cgra::SimRun;
+use crate::exec::{Engine, EngineRun};
 use crate::tensor::Tensor;
 
 pub use super::protocol::MAGIC;
@@ -44,6 +44,10 @@ pub struct ServeConfig {
     pub workers: usize,
     /// Print one `[req]` line per served request to stderr.
     pub stats: bool,
+    /// Execution engine policy (docs/execution.md): `Auto` serves
+    /// from the functional engine whenever the design supports it and
+    /// falls back to the cycle-accurate simulator otherwise.
+    pub engine: Engine,
 }
 
 impl ServeConfig {
@@ -57,14 +61,26 @@ impl ServeConfig {
         let registry = Arc::new(CompiledRegistry::new());
         let c = Arc::new(c);
         registry.insert(cli_name, Arc::clone(&c));
-        ServeConfig { registry, default_app: Some(c), workers: 4, stats: false }
+        ServeConfig {
+            registry,
+            default_app: Some(c),
+            workers: 4,
+            stats: false,
+            engine: Engine::Auto,
+        }
     }
 
     /// Multi-app serving over a shared registry (`pushmem serve-all`).
     /// Stats default off so embedders (benches, examples, tests) get a
     /// quiet timed path; the CLI opts in.
     pub fn multi(registry: Arc<CompiledRegistry>, workers: usize) -> ServeConfig {
-        ServeConfig { registry, default_app: None, workers, stats: false }
+        ServeConfig {
+            registry,
+            default_app: None,
+            workers,
+            stats: false,
+            engine: Engine::Auto,
+        }
     }
 }
 
@@ -153,20 +169,22 @@ fn check_inputs(c: &Compiled, req: &Request) -> Result<()> {
 /// status frame before the connection drops (public so drivers can
 /// embed the server with their own accept loop).
 ///
-/// §Perf: request handling performs **no per-request simulation
-/// setup** — the compile-grade half lives in the design's cached
-/// [`crate::cgra::SimPlan`] ([`Compiled::plan`], built once per app),
-/// and the connection keeps one reusable [`SimRun`] per app it has
-/// served, so a request pays only the streaming itself plus decoding
-/// its own payload (docs/simulator.md).
+/// §Perf: request handling performs **no per-request setup** — the
+/// compile-grade half lives in the design's cached [`crate::exec::ExecPlan`]
+/// / [`crate::cgra::SimPlan`] (built once per app), and the connection
+/// keeps one reusable [`EngineRun`] per app it has served, so a
+/// request pays only the execution itself plus decoding its own
+/// payload (docs/execution.md, docs/simulator.md). Under the default
+/// `Auto` engine that execution is the functional engine's fused
+/// kernels — microseconds, not a cycle loop.
 pub fn handle_connection(cfg: &ServeConfig, stream: &mut TcpStream) -> Result<()> {
     let peer = stream
         .peer_addr()
         .map(|a| a.to_string())
         .unwrap_or_else(|_| "?".to_string());
-    // Reusable per-app run state, keyed by plan identity (a connection
-    // may interleave v2 requests for different apps).
-    let mut runs: Vec<(usize, SimRun)> = Vec::new();
+    // Reusable per-app run state, keyed by design identity (a
+    // connection may interleave v2 requests for different apps).
+    let mut runs: Vec<(usize, EngineRun)> = Vec::new();
     loop {
         let req = match read_request(stream) {
             Ok(Some(req)) => req,
@@ -201,18 +219,20 @@ pub fn handle_connection(cfg: &ServeConfig, stream: &mut TcpStream) -> Result<()
         for (name, words) in c.lp.inputs.iter().zip(req.inputs) {
             inputs.insert(name.clone(), Tensor::from_data(c.lp.buffers[name].clone(), words));
         }
-        let plan = match c.plan() {
-            Ok(p) => p,
-            Err(e) => {
-                write_error(stream, protocol::STATUS_INTERNAL);
-                return Err(e.context(format!("planning {} for {peer}", c.program.name)));
-            }
-        };
-        let key = Arc::as_ptr(&plan) as usize;
+        let key = Arc::as_ptr(&c) as usize;
         let run = match runs.iter().position(|(k, _)| *k == key) {
             Some(i) => &mut runs[i].1,
             None => {
-                runs.push((key, SimRun::new(plan)));
+                let r = match c.runner(cfg.engine) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        write_error(stream, protocol::STATUS_INTERNAL);
+                        return Err(
+                            e.context(format!("planning {} for {peer}", c.program.name))
+                        );
+                    }
+                };
+                runs.push((key, r));
                 &mut runs.last_mut().expect("just pushed").1
             }
         };
@@ -221,7 +241,7 @@ pub fn handle_connection(cfg: &ServeConfig, stream: &mut TcpStream) -> Result<()
             Ok(res) => res,
             Err(e) => {
                 write_error(stream, protocol::STATUS_INTERNAL);
-                return Err(e.context(format!("simulating {} for {peer}", c.program.name)));
+                return Err(e.context(format!("executing {} for {peer}", c.program.name)));
             }
         };
         let micros = t0.elapsed().as_micros() as u64;
@@ -238,8 +258,9 @@ pub fn handle_connection(cfg: &ServeConfig, stream: &mut TcpStream) -> Result<()
         stream.flush()?;
         if cfg.stats {
             eprintln!(
-                "[req] client={peer} app={} in_words={in_words} out_words={out_words} cycles={cycles} sim_us={micros}",
-                c.program.name
+                "[req] client={peer} app={} engine={} in_words={in_words} out_words={out_words} cycles={cycles} exec_us={micros}",
+                c.program.name,
+                run.engine().name()
             );
         }
     }
@@ -355,18 +376,21 @@ pub fn serve(
     addr: &str,
     workers: usize,
     stats: bool,
+    engine: Engine,
 ) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     eprintln!(
-        "serving {} on {addr} ({} PEs, {} MEM tiles, {} cycles/tile, {workers} workers)",
+        "serving {} on {addr} ({} PEs, {} MEM tiles, {} cycles/tile, {workers} workers, engine {})",
         c.program.name,
         c.design.pe_count(),
         c.design.mem_tiles(),
-        c.graph.completion
+        c.graph.completion,
+        engine.name()
     );
     let mut cfg = ServeConfig::single(cli_name, c);
     cfg.workers = workers;
     cfg.stats = stats;
+    cfg.engine = engine;
     serve_on(listener, cfg)
 }
 
@@ -379,16 +403,19 @@ pub fn serve_all(
     addr: &str,
     workers: usize,
     stats: bool,
+    engine: Engine,
 ) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     let warmed = registry.compiled_names();
     eprintln!(
-        "serving all registered apps on {addr} ({workers} workers, {} pre-compiled: {})",
+        "serving all registered apps on {addr} ({workers} workers, engine {}, {} pre-compiled: {})",
+        engine.name(),
         warmed.len(),
         if warmed.is_empty() { "none — lazy".to_string() } else { warmed.join(",") }
     );
     let mut cfg = ServeConfig::multi(registry, workers);
     cfg.stats = stats;
+    cfg.engine = engine;
     serve_on(listener, cfg)
 }
 
@@ -473,6 +500,30 @@ mod tests {
         let refs: Vec<&Tensor> = ordered.iter().collect();
         let (words, _, _) = request_app(&mut stream, "g14", &refs).unwrap();
         assert_eq!(words, expect);
+    }
+
+    /// The engine flag changes the execution path, never the bytes on
+    /// the wire: exec- and sim-served responses are identical, words
+    /// and reported cycles both.
+    #[test]
+    fn engines_agree_over_the_wire() {
+        let prog = apps::gaussian::build(14);
+        let inputs = gen_inputs(&compile(&prog).unwrap().lp);
+        let ordered: Vec<Tensor> = inputs.values().cloned().collect();
+        let refs: Vec<&Tensor> = ordered.iter().collect();
+
+        let mut answers = Vec::new();
+        for engine in [Engine::Exec, Engine::Sim] {
+            let mut cfg = ServeConfig::single("g14", compile(&prog).unwrap());
+            cfg.engine = engine;
+            let addr = spawn_server(cfg);
+            let mut stream = TcpStream::connect(addr).unwrap();
+            answers.push(request(&mut stream, &refs).unwrap());
+        }
+        let (ew, ec, _) = &answers[0];
+        let (sw, sc, _) = &answers[1];
+        assert_eq!(ew, sw, "exec and sim served different words");
+        assert_eq!(ec, sc, "exec and sim served different cycle counts");
     }
 
     #[test]

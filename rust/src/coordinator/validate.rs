@@ -1,7 +1,11 @@
-//! End-to-end validation: run the cycle-accurate CGRA simulation and
-//! the AOT-compiled XLA golden model on identical inputs and compare
-//! the output images pixel-exactly (§VI-B), evaluating any host-side
-//! stages (sch6-style) on the simulator's output first.
+//! End-to-end validation: run the accelerator model and the
+//! AOT-compiled XLA golden model on identical inputs and compare the
+//! output images pixel-exactly (§VI-B), evaluating any host-side
+//! stages (sch6-style) on the accelerator's output first. Also home
+//! of the engine cross-check ([`cross_check`]): the functional engine
+//! vs the cycle-accurate simulator, with first-divergence reporting
+//! (port, coordinate, cycle) instead of a bare boolean — the
+//! `pushmem validate` subcommand.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -9,7 +13,8 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use super::driver::{gen_inputs, Compiled};
-use crate::cgra::SimStats;
+use crate::cgra::{SimRun, SimStats};
+use crate::exec::{Engine, ExecRun};
 use crate::halide::Func;
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
@@ -21,6 +26,113 @@ pub struct Validation {
     /// Wall-clock of the XLA execution — the Fig 14 CPU point.
     pub cpu_time_s: f64,
     pub stats: SimStats,
+    /// Which engine produced the accelerator output.
+    pub engine: Engine,
+}
+
+/// The first point where the two engines disagree, located on the
+/// output stream: which drain port, which output coordinate, and the
+/// cycle that word leaves the accelerator.
+#[derive(Clone, Debug)]
+pub struct EngineDivergence {
+    pub port: String,
+    pub coord: Vec<i64>,
+    pub cycle: i64,
+    pub sim: i32,
+    pub exec: i32,
+}
+
+/// Result of the exec-vs-sim differential run ([`cross_check`]).
+pub struct CrossCheck {
+    pub app: String,
+    pub words: usize,
+    pub sim_cycles: i64,
+    pub exec_cycles: i64,
+    pub sim_stats: SimStats,
+    pub exec_stats: SimStats,
+    /// `None` when outputs are bit-exact.
+    pub divergence: Option<EngineDivergence>,
+}
+
+impl CrossCheck {
+    /// Bit-exact outputs AND identical reported stats.
+    pub fn matched(&self) -> bool {
+        self.divergence.is_none() && self.sim_stats == self.exec_stats
+    }
+}
+
+/// Run one design through both engines on the deterministic input
+/// stream and compare outputs word-for-word. On divergence, report
+/// the *first* mismatching output event in cycle order — the drain
+/// port, output coordinate, and cycle — so a broken engine points at
+/// the exact event to replay, not a bare boolean.
+pub fn cross_check(c: &Compiled) -> Result<CrossCheck> {
+    let inputs = gen_inputs(&c.lp);
+    let sim = SimRun::new(c.plan()?)
+        .run(&inputs)
+        .context("cycle-accurate simulation")?;
+    let ex = ExecRun::new(c.exec_plan().context("functional engine unavailable")?)
+        .run(&inputs)
+        .context("functional execution")?;
+    anyhow::ensure!(
+        sim.output.shape == ex.output.shape,
+        "engines produced different output boxes: {} vs {}",
+        sim.output.shape,
+        ex.output.shape
+    );
+
+    let mut divergence: Option<EngineDivergence> = None;
+    if sim.output.data != ex.output.data {
+        // Locate the earliest differing output event in cycle order.
+        for ep in &c.graph.output_streams {
+            let port = &c.graph.buffers[&ep.buffer].outputs[ep.port];
+            port.visit_events(|cycle, coords| {
+                let (s, e) = (sim.output.get(coords), ex.output.get(coords));
+                let earlier = match &divergence {
+                    Some(d) => cycle < d.cycle,
+                    None => true,
+                };
+                if s != e && earlier {
+                    divergence = Some(EngineDivergence {
+                        port: port.name.clone(),
+                        coord: coords.to_vec(),
+                        cycle,
+                        sim: s,
+                        exec: e,
+                    });
+                }
+            });
+        }
+        if divergence.is_none() {
+            // The outputs differ at a coordinate no drain event covers
+            // (a never-streamed word). This must still be reported as
+            // a divergence — never let the data-differs case fall
+            // through to a MATCH verdict.
+            for (idx, p) in sim.output.shape.points().enumerate() {
+                let (s, e) = (sim.output.data[idx], ex.output.data[idx]);
+                if s != e {
+                    divergence = Some(EngineDivergence {
+                        port: "(no drain event covers this coordinate)".to_string(),
+                        coord: p,
+                        cycle: -1,
+                        sim: s,
+                        exec: e,
+                    });
+                    break;
+                }
+            }
+        }
+    }
+
+    Ok(CrossCheck {
+        app: c.program.name.clone(),
+        words: sim.output.data.len(),
+        sim_cycles: sim.stats.cycles,
+        exec_cycles: ex.stats.cycles,
+        sim_stats: sim.stats,
+        exec_stats: ex.stats,
+        divergence,
+    })
 }
 
 /// Evaluate host-scheduled funcs (pointwise stages moved off the
@@ -48,14 +160,25 @@ pub fn eval_host_funcs(
     Ok(last)
 }
 
-/// Validate one compiled app against a golden HLO artifact.
+/// Validate one compiled app against a golden HLO artifact, using the
+/// default (`Auto`) engine selection.
 pub fn validate(c: &Compiled, artifact: &Path, rt: &Runtime) -> Result<Validation> {
+    validate_with(c, artifact, rt, Engine::Auto)
+}
+
+/// [`validate`] with an explicit engine choice (`pushmem run --engine`).
+pub fn validate_with(
+    c: &Compiled,
+    artifact: &Path,
+    rt: &Runtime,
+    engine: Engine,
+) -> Result<Validation> {
     let inputs = gen_inputs(&c.lp);
-    // Simulate through the design's cached plan (Compiled::plan), the
-    // same setup-once path serving uses.
-    let res = crate::cgra::SimRun::new(c.plan()?)
-        .run(&inputs)
-        .context("CGRA simulation")?;
+    // Execute through the design's cached plan, the same setup-once
+    // path serving uses.
+    let mut runner = c.runner(engine)?;
+    let engine = runner.engine();
+    let res = runner.run(&inputs).context("accelerator execution")?;
 
     // Host stages (if any) run on the simulator output.
     let mut bufs: BTreeMap<String, Tensor> = inputs.clone();
@@ -114,6 +237,7 @@ pub fn validate(c: &Compiled, artifact: &Path, rt: &Runtime) -> Result<Validatio
         matched,
         cpu_time_s,
         stats: res.stats,
+        engine,
     })
 }
 
@@ -127,6 +251,21 @@ mod tests {
         std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
             .join("artifacts")
             .join(format!("{name}.hlo.txt"))
+    }
+
+    #[test]
+    fn cross_check_engines_match_on_small_apps() {
+        for p in [
+            apps::gaussian::build(14),
+            apps::harris::build(12, apps::harris::Schedule::NoRecompute),
+        ] {
+            let c = compile(&p).unwrap();
+            let cc = cross_check(&c).unwrap_or_else(|e| panic!("{}: {e:#}", p.name));
+            assert!(cc.matched(), "{}: {:?}", p.name, cc.divergence);
+            assert_eq!(cc.sim_cycles, cc.exec_cycles, "{}", p.name);
+            assert_eq!(cc.sim_stats, cc.exec_stats, "{}", p.name);
+            assert!(cc.words > 0);
+        }
     }
 
     #[test]

@@ -1,22 +1,24 @@
-//! Candidate scoring: full compile + cycle-accurate simulation +
-//! bit-exact validation, wrapped in one `Result`.
+//! Candidate scoring: full compile + execution + bit-exact
+//! validation, wrapped in one `Result`.
 //!
 //! This is the expensive stage the analytic prune protects. It rides
-//! the same [`crate::apps::compile_checked`] path the test suite uses,
-//! so a candidate that scores here has *already* been validated
+//! the same [`crate::apps::compile_checked_with`] path the test suite
+//! uses, so a candidate that scores here has *already* been validated
 //! bit-exact against the functional reference — an unvalidated design
-//! can never enter the ranking or the cache. That path simulates
-//! through the per-design [`crate::cgra::SimPlan`] (docs/simulator.md),
-//! so per-candidate simulation pays setup exactly once and every
-//! additional input a caller streams through `CheckedRun::plan` is
-//! setup-free.
+//! can never enter the ranking or the cache. Under the default `Auto`
+//! engine the run goes through the functional engine
+//! ([`crate::exec`]) — analytic cycle counts, no cycle loop — which
+//! is what lifted tuner throughput by an order of magnitude
+//! (`benches/dse_harris.rs` tracks both engines); `--engine sim`
+//! keeps the cycle-accurate scorer.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::apps::compile_checked;
+use crate::apps::compile_checked_with;
 use crate::cost::{design_area_um2, energy_per_op_pj};
+use crate::exec::Engine;
 use crate::halide::Program;
 
 /// The simulated metrics of one validated candidate.
@@ -38,11 +40,20 @@ pub struct Evaluation {
     pub eval_seconds: f64,
 }
 
-/// Compile, simulate, and validate `program`; score the run. Any
-/// failure — including an output mismatch — is `Err`.
+/// Compile, execute, and validate `program` with the default (`Auto`)
+/// engine; score the run. Any failure — including an output mismatch
+/// — is `Err`.
 pub fn evaluate(program: &Program) -> Result<Evaluation> {
+    evaluate_with(program, Engine::Auto)
+}
+
+/// [`evaluate`] with an explicit engine (the tuner's `--engine` flag).
+/// Scores are engine-independent — the functional engine's analytic
+/// cycle/energy counts are bit-identical to simulated ones — so a
+/// cache populated by one engine is valid for the other.
+pub fn evaluate_with(program: &Program, engine: Engine) -> Result<Evaluation> {
     let t0 = Instant::now();
-    let run = compile_checked(program)?;
+    let run = compile_checked_with(program, engine)?;
     Ok(Evaluation {
         cycles: run.stats.cycles,
         completion: run.graph.completion,
@@ -75,12 +86,18 @@ pub fn cycles_per_pixel(cycles: i64, tile: &[i64]) -> f64 {
     cycles as f64 / tile.iter().product::<i64>().max(1) as f64
 }
 
-/// Simulate the six hand-written Table V Harris schedules (base tile
+/// Score the six hand-written Table V Harris schedules (base tile
 /// `tile`; sch5 realizes at `2*tile`) with the tuner's own scorer —
 /// the comparison baseline that both `pushmem tune harris` and
 /// `benches/dse_harris.rs` print, defined once so the label table
 /// cannot drift between them.
 pub fn table5_baselines(tile: i64) -> Vec<Baseline> {
+    table5_baselines_with(tile, Engine::Auto)
+}
+
+/// [`table5_baselines`] with an explicit engine (the bench measures
+/// both to report the exec-vs-sim speedup).
+pub fn table5_baselines_with(tile: i64, engine: Engine) -> Vec<Baseline> {
     use crate::apps::harris::{build, Schedule};
     [
         ("sch1: recompute all", Schedule::RecomputeAll),
@@ -94,7 +111,7 @@ pub fn table5_baselines(tile: i64) -> Vec<Baseline> {
     .map(|(label, s)| Baseline {
         label,
         tile: if s == Schedule::BiggerTile { tile * 2 } else { tile },
-        eval: evaluate(&build(tile, s)),
+        eval: evaluate_with(&build(tile, s), engine),
     })
     .collect()
 }
@@ -119,6 +136,23 @@ mod tests {
         assert!((cycles_per_pixel(14400, &[120, 120]) - 1.0).abs() < 1e-9);
         // Degenerate tile never divides by zero.
         assert!((cycles_per_pixel(5, &[]) - 5.0).abs() < 1e-9);
+    }
+
+    /// A cache populated by one engine must be valid for the other:
+    /// every scored metric is engine-independent.
+    #[test]
+    fn scores_are_engine_independent() {
+        let p = gaussian::build(12);
+        let e = evaluate_with(&p, Engine::Exec).unwrap();
+        let s = evaluate_with(&p, Engine::Sim).unwrap();
+        assert_eq!(e.cycles, s.cycles);
+        assert_eq!(e.completion, s.completion);
+        assert_eq!(
+            (e.pes, e.mems, e.sram_words, e.sr_words),
+            (s.pes, s.mems, s.sram_words, s.sr_words)
+        );
+        assert!((e.energy_per_op_pj - s.energy_per_op_pj).abs() < 1e-12);
+        assert!((e.area_um2 - s.area_um2).abs() < 1e-12);
     }
 
     #[test]

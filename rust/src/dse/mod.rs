@@ -33,10 +33,14 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::cgra::CgraSpec;
+use crate::exec::Engine;
 use crate::halide::Program;
 
 pub use cache::{load_best, CacheEntry, DseCache};
-pub use evaluate::{cycles_per_pixel, evaluate, table5_baselines, Baseline, Evaluation};
+pub use evaluate::{
+    cycles_per_pixel, evaluate, evaluate_with, table5_baselines, table5_baselines_with,
+    Baseline, Evaluation,
+};
 pub use prune::{prune, Analysis, Verdict};
 pub use space::{enumerate, Candidate, SpaceConfig};
 
@@ -112,6 +116,11 @@ pub struct TuneConfig {
     pub seed: u64,
     /// Result cache directory; `None` disables caching.
     pub cache_dir: Option<PathBuf>,
+    /// Candidate execution engine (docs/execution.md). `Auto` scores
+    /// through the functional engine when possible — an order of
+    /// magnitude more candidates/sec at identical scores — with the
+    /// cycle-accurate simulator as fallback.
+    pub engine: Engine,
     pub space: SpaceConfig,
 }
 
@@ -123,6 +132,7 @@ impl Default for TuneConfig {
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             seed: 1,
             cache_dir: None,
+            engine: Engine::Auto,
             space: SpaceConfig::default(),
         }
     }
@@ -279,7 +289,7 @@ pub fn tune_program(program: &Program, app_key: &str, cfg: &TuneConfig) -> Resul
                 let Some(cand) = queue.lock().unwrap().pop_front() else { break };
                 let mut p = program.clone();
                 p.schedule = cand.schedule.clone();
-                let res = evaluate::evaluate(&p);
+                let res = evaluate::evaluate_with(&p, cfg.engine);
                 done.lock().unwrap().push((cand, res));
             });
         }

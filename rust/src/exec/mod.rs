@@ -1,0 +1,117 @@
+//! `exec` — the functional execution engine: serve and tune without
+//! stepping cycles.
+//!
+//! The unified-buffer abstraction makes every port's address stream a
+//! *static affine* function of the iteration domain (PAPER.md §IV), so
+//! a compiled design's outputs **and** its cycle/energy counts are
+//! computable directly from the polyhedral schedule — no cycle loop:
+//!
+//! * [`ExecPlan`] compiles a [`crate::mapping::MappedDesign`] into
+//!   fused, loop-ordered tensor kernels (the mapped PE node programs
+//!   walked over their iteration domains with Fig-5c delta-recurrence
+//!   addressing) plus an analytic timing model ([`ExecTiming`]) that
+//!   derives every [`crate::cgra::SimStats`] field in closed form.
+//! * [`ExecRun`] executes requests against the plan in microseconds,
+//!   producing a [`crate::cgra::SimResult`] bit-identical — output
+//!   *and* stats — to the cycle-accurate [`crate::cgra::SimRun`].
+//!
+//! ## Engine selection
+//!
+//! [`Engine`] names the three policies the stack exposes
+//! (`pushmem serve/serve-all/tune/report/run --engine {exec,sim,auto}`):
+//! `exec` demands the functional engine, `sim` the cycle-accurate
+//! simulator, and `auto` (the default) prefers `exec`, falling back to
+//! `sim` whenever [`ExecPlan::build`] cannot prove the design's port
+//! structure sound for functional replay (non-lockstep load ports,
+//! events outside the simulated window, and similar — the simulator
+//! also catches designs whose event streams *fall behind* at run time,
+//! which a functional replay cannot observe). Full design rationale:
+//! docs/execution.md, DESIGN.md §6. `pushmem validate` cross-checks
+//! the two engines against each other per app.
+
+pub mod plan;
+pub mod run;
+pub mod timing;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::cgra::{SimResult, SimRun};
+use crate::tensor::Tensor;
+
+pub use plan::ExecPlan;
+pub use run::{execute, ExecRun};
+pub use timing::{BufferActivity, ExecTiming};
+
+/// Which execution engine serves a request.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Engine {
+    /// Prefer the functional engine; fall back to the cycle-accurate
+    /// simulator when the design is outside its proven fragment.
+    #[default]
+    Auto,
+    /// The functional engine ([`ExecRun`]), unconditionally.
+    Exec,
+    /// The cycle-accurate simulator ([`SimRun`]), unconditionally.
+    Sim,
+}
+
+impl Engine {
+    pub fn parse(s: &str) -> Result<Engine> {
+        Ok(match s {
+            "auto" => Engine::Auto,
+            "exec" => Engine::Exec,
+            "sim" => Engine::Sim,
+            other => bail!("unknown engine {other:?} (want exec|sim|auto)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Auto => "auto",
+            Engine::Exec => "exec",
+            Engine::Sim => "sim",
+        }
+    }
+}
+
+/// A request executor of either engine — what serving, validation,
+/// reporting, and the tuner hold per design once the engine is
+/// resolved (see [`crate::coordinator::Compiled::runner`]).
+pub enum EngineRun {
+    Exec(ExecRun),
+    Sim(SimRun),
+}
+
+impl EngineRun {
+    pub fn run(&mut self, inputs: &BTreeMap<String, Tensor>) -> Result<SimResult> {
+        match self {
+            EngineRun::Exec(r) => r.run(inputs),
+            EngineRun::Sim(r) => r.run(inputs),
+        }
+    }
+
+    /// The concrete engine behind this run (`Auto` resolves at
+    /// construction, so this is always `Exec` or `Sim`).
+    pub fn engine(&self) -> Engine {
+        match self {
+            EngineRun::Exec(_) => Engine::Exec,
+            EngineRun::Sim(_) => Engine::Sim,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_parse_roundtrips() {
+        for e in [Engine::Auto, Engine::Exec, Engine::Sim] {
+            assert_eq!(Engine::parse(e.name()).unwrap(), e);
+        }
+        assert!(Engine::parse("fast").is_err());
+        assert_eq!(Engine::default(), Engine::Auto);
+    }
+}

@@ -1,0 +1,430 @@
+//! [`ExecPlan`]: a [`MappedDesign`] compiled into a direct functional
+//! executor — fused, loop-ordered tensor kernels derived from the
+//! unified buffers' affine read/write maps, plus the analytic timing
+//! model ([`super::timing`]).
+//!
+//! ## Why this is sound (the invariants `build` verifies)
+//!
+//! The buffer extractor emits a very disciplined port structure
+//! (`extraction/extract.rs`), and `build` re-checks every piece of it
+//! rather than assuming it, so a hand-built or future graph that
+//! breaks the discipline falls back to the cycle-accurate simulator
+//! instead of executing subtly wrong:
+//!
+//! 1. **Lockstep loads** — every buffer output port a kernel actually
+//!    reads has the kernel's own iteration domain and issue schedule,
+//!    so the word on the load wire at issue time is exactly
+//!    `src[access(p)]` for the kernel's current point `p`.
+//! 2. **One store per pure point** — the store port's domain is the
+//!    kernel's pure (non-reduction) prefix, its schedule is the issue
+//!    schedule with the reduction tail bound to its final values plus
+//!    the pipeline latency: the stored word is the root PE's value at
+//!    the *last* reduction step of each pure point.
+//! 3. **Single assignment** — input lanes cover the input box exactly
+//!    and each store port writes each logical coordinate once, so
+//!    executing whole kernels in dataflow order yields the same buffer
+//!    contents every hardware read observes.
+//!
+//! Under those checks, replaying each kernel's mapped PE node program
+//! (`mapping::MappedPe` — the same i32 ALU ops the PEs execute,
+//! including the gated accumulator's reset period) over its domain in
+//! row-major order is bit-exact with the simulator: retiming delays
+//! and pipeline registers align operands across *time*, which the
+//! functional executor collapses to a single logical point.
+//!
+//! Addresses use the same Fig-5c delta recurrences the hardware's
+//! AG/SG run ([`crate::hw::DeltaImpl`]): one add per loop step per
+//! stream, no multiplies in the hot loop.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cgra::sim::{flat_access, rebase_zero_based};
+use crate::hw::{AffineConfig, PeOp};
+use crate::mapping::{MappedDesign, MappedPe, OperandSrc};
+use crate::poly::BoxSet;
+use crate::ub::UbGraph;
+
+use super::timing::{self, ExecTiming};
+
+/// Which backing store a kernel load reads.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum BufRef {
+    /// Request tensor `inputs[i]` (input buffers are never copied —
+    /// their contents are the request words themselves).
+    Input(usize),
+    /// Intermediate buffer `scratch[i]`.
+    Scratch(usize),
+}
+
+pub(crate) struct InputSpec {
+    pub name: String,
+    /// Declared box; flat addressing is only valid against this
+    /// layout, so runs verify it per request (same rule as `SimRun`).
+    pub shape: BoxSet,
+}
+
+pub(crate) struct ScratchSpec {
+    pub len: usize,
+}
+
+pub(crate) struct LoadSpec {
+    pub src: BufRef,
+    /// Zero-based flat-offset recurrence over the kernel domain.
+    pub addr: AffineConfig,
+}
+
+pub(crate) struct StoreSpec {
+    pub dst: usize,
+    /// Zero-based flat-offset recurrence over the *full* kernel domain
+    /// (reduction dims carry zero coefficients, so the value is the
+    /// pure point's offset throughout each reduction group).
+    pub addr: AffineConfig,
+    /// Reduction group length (1 for pure kernels): the root value is
+    /// stored on the last iteration of each group.
+    pub period: i64,
+}
+
+pub(crate) struct ExecKernel {
+    pub stage: String,
+    /// Full iteration domain, zero-based.
+    pub extents: Vec<i64>,
+    pub mins: Vec<i64>,
+    pub loads: Vec<LoadSpec>,
+    /// The mapped PE node program, with `OperandSrc::Load` indices
+    /// remapped onto `loads` (unreferenced ports — e.g. a reduction's
+    /// self-load — are dropped).
+    pub nodes: Vec<MappedPe>,
+    pub store: StoreSpec,
+}
+
+/// The compile-once half of the functional engine. Immutable and
+/// `Sync`; share it with `Arc` and execute requests against it through
+/// [`super::ExecRun`].
+pub struct ExecPlan {
+    pub(crate) inputs: Vec<InputSpec>,
+    pub(crate) scratch: Vec<ScratchSpec>,
+    pub(crate) kernels: Vec<ExecKernel>,
+    pub(crate) out_scratch: usize,
+    pub(crate) out_box: BoxSet,
+    timing: ExecTiming,
+}
+
+/// Check a zero-based flat-offset affine stays inside `[0, len)` over
+/// the zero-based domain `extents`.
+fn check_flat_range(
+    addr: &crate::poly::Affine,
+    extents: &[i64],
+    len: usize,
+    what: &str,
+) -> Result<()> {
+    let dims: Vec<(i64, i64)> = extents.iter().map(|&e| (0, e - 1)).collect();
+    let (lo, hi) = addr.bounds(&dims);
+    anyhow::ensure!(
+        lo >= 0 && (hi as u128) < len as u128,
+        "{what}: flat offsets [{lo}, {hi}] fall outside the backing tensor (len {len})"
+    );
+    Ok(())
+}
+
+impl ExecPlan {
+    /// The analytic timing model (also the source of the run's
+    /// reported [`crate::cgra::SimStats`]).
+    pub fn timing(&self) -> &ExecTiming {
+        &self.timing
+    }
+
+    /// One line per fused kernel: stage, trip count, loads, reduction
+    /// group (the `pushmem validate` diagnostic view).
+    pub fn describe(&self) -> Vec<String> {
+        self.kernels
+            .iter()
+            .map(|k| {
+                let trip: i64 = k.extents.iter().product();
+                format!(
+                    "{}: {} points, {} load streams, group {}",
+                    k.stage,
+                    trip,
+                    k.loads.len(),
+                    k.store.period
+                )
+            })
+            .collect()
+    }
+
+    /// Compile `(design, graph)` into a functional executor, verifying
+    /// every structural invariant the execution strategy relies on.
+    /// `Err` means "this design needs the cycle-accurate simulator",
+    /// never "this design is broken" — engine selection treats it as a
+    /// fallback signal (see [`super::Engine`]).
+    pub fn build(design: &MappedDesign, graph: &UbGraph) -> Result<ExecPlan> {
+        // Output-stream shape checks, mirroring `SimPlan::build`.
+        let first = graph
+            .output_streams
+            .first()
+            .context("design has no output stream: nothing to drain into a result tensor")?;
+        let out_buf = first.buffer.clone();
+        for ep in &graph.output_streams {
+            anyhow::ensure!(
+                ep.buffer == out_buf,
+                "multi-buffer outputs are not supported: streams drain both \
+                 {out_buf:?} and {:?} (one result tensor per design)",
+                ep.buffer
+            );
+        }
+
+        // --- Buffer classification ------------------------------
+        // Input-stream buffers bind to request tensors; every other
+        // buffer is zero-initialized scratch (matching the SRAM's
+        // reset state, so never-written coordinates read as 0 in both
+        // engines).
+        let mut input_of: BTreeMap<&str, usize> = BTreeMap::new();
+        let mut inputs: Vec<InputSpec> = Vec::new();
+        for ep in &graph.input_streams {
+            if !input_of.contains_key(ep.buffer.as_str()) {
+                input_of.insert(&ep.buffer, inputs.len());
+                inputs.push(InputSpec {
+                    name: ep.buffer.clone(),
+                    shape: graph.buffers[&ep.buffer].data_box.clone(),
+                });
+            }
+        }
+        let mut scratch_of: BTreeMap<&str, usize> = BTreeMap::new();
+        let mut scratch: Vec<ScratchSpec> = Vec::new();
+        for (name, ub) in &graph.buffers {
+            if input_of.contains_key(name.as_str()) {
+                continue;
+            }
+            scratch_of.insert(name, scratch.len());
+            scratch.push(ScratchSpec { len: ub.data_box.cardinality() as usize });
+        }
+
+        // --- Kernels, in dataflow order -------------------------
+        anyhow::ensure!(
+            design.kernels.len() == graph.kernels.len(),
+            "design/graph kernel count mismatch"
+        );
+        // Index of the last kernel writing each scratch buffer, to
+        // verify producers complete before consumers read.
+        let mut last_writer: BTreeMap<usize, usize> = BTreeMap::new();
+        for (ki, kn) in graph.kernels.iter().enumerate() {
+            if let Some(&s) = scratch_of.get(kn.store.0.as_str()) {
+                last_writer.insert(s, ki);
+            }
+        }
+
+        let mut kernels: Vec<ExecKernel> = Vec::new();
+        for (ki, (kn, mk)) in graph.kernels.iter().zip(&design.kernels).enumerate() {
+            anyhow::ensure!(
+                kn.stage == mk.stage && kn.lane == mk.lane,
+                "kernel order mismatch between graph and design"
+            );
+            if kn.domain.is_empty() {
+                continue; // no points, no stores
+            }
+            anyhow::ensure!(!mk.nodes.is_empty(), "kernel {} maps to no PEs", kn.stage);
+            for (ni, n) in mk.nodes.iter().enumerate() {
+                anyhow::ensure!(
+                    !matches!(n.cfg.op, PeOp::Acc { .. }) || ni + 1 == mk.nodes.len(),
+                    "kernel {}: accumulator PE at non-root position {ni}",
+                    kn.stage
+                );
+            }
+            let full = &kn.domain;
+            let extents: Vec<i64> = full.dims.iter().map(|d| d.extent).collect();
+            let mins: Vec<i64> = full.dims.iter().map(|d| d.min).collect();
+
+            // Referenced loads only (a reduction's accumulator
+            // self-load exists as a port but feeds no PE operand).
+            let mut used: Vec<usize> = mk
+                .nodes
+                .iter()
+                .flat_map(|n| n.srcs.iter())
+                .filter_map(|s| match s {
+                    OperandSrc::Load(l) => Some(*l),
+                    _ => None,
+                })
+                .collect();
+            used.sort_unstable();
+            used.dedup();
+            let mut slot_of = vec![usize::MAX; kn.loads.len()];
+            let mut loads: Vec<LoadSpec> = Vec::new();
+            for &l in &used {
+                let (buf, pidx) = kn
+                    .loads
+                    .get(l)
+                    .with_context(|| format!("kernel {}: load index {l} out of range", kn.stage))?;
+                let port = &graph.buffers[buf].outputs[*pidx];
+                anyhow::ensure!(
+                    port.domain.same_layout(full),
+                    "kernel {} load {buf}: port domain {} is not the kernel domain {}",
+                    kn.stage,
+                    port.domain,
+                    full
+                );
+                anyhow::ensure!(
+                    port.schedule.expr == kn.schedule.expr,
+                    "kernel {} load {buf}: port schedule {} not in lockstep with issue {}",
+                    kn.stage,
+                    port.schedule,
+                    kn.schedule
+                );
+                let src_box = &graph.buffers[buf].data_box;
+                let flat = flat_access(&port.access, src_box)
+                    .with_context(|| format!("kernel {} load {buf}", kn.stage))?;
+                let flat = rebase_zero_based(&flat, &mins);
+                let src = match input_of.get(buf.as_str()) {
+                    Some(&i) => BufRef::Input(i),
+                    None => {
+                        let s = scratch_of[buf.as_str()];
+                        // Producers must be complete before we read:
+                        // whole-kernel execution order is only valid
+                        // when every writer of `buf` precedes us (a
+                        // never-written buffer reads as zeros, exactly
+                        // like the zero-initialized SRAM).
+                        if let Some(&w) = last_writer.get(&s) {
+                            anyhow::ensure!(
+                                w < ki,
+                                "kernel {} reads {buf}, which is still being written by a later kernel",
+                                kn.stage
+                            );
+                        }
+                        BufRef::Scratch(s)
+                    }
+                };
+                let len = match src {
+                    BufRef::Input(i) => inputs[i].shape.cardinality() as usize,
+                    BufRef::Scratch(s) => scratch[s].len,
+                };
+                check_flat_range(&flat, &extents, len, "load")?;
+                slot_of[l] = loads.len();
+                loads.push(LoadSpec { src, addr: AffineConfig::from_affine(&flat) });
+            }
+
+            // Remap the node program onto the referenced-load slots.
+            let nodes: Vec<MappedPe> = mk
+                .nodes
+                .iter()
+                .map(|n| {
+                    let mut n = n.clone();
+                    for s in n.srcs.iter_mut() {
+                        if let OperandSrc::Load(l) = s {
+                            *l = slot_of[*l];
+                        }
+                    }
+                    n
+                })
+                .collect();
+
+            // --- Store port: one write per pure point -----------
+            let sp = &graph.buffers[&kn.store.0].inputs[kn.store.1];
+            let pure = &sp.domain;
+            let pr = pure.rank();
+            anyhow::ensure!(
+                pr <= full.rank() && BoxSet::new(full.dims[..pr].to_vec()).same_layout(pure),
+                "kernel {}: store domain {} is not the pure prefix of {}",
+                kn.stage,
+                pure,
+                full
+            );
+            let period: i64 = full.dims[pr..].iter().map(|d| d.extent).product();
+            anyhow::ensure!(
+                period == mk.acc_period,
+                "kernel {}: reduction group {period} != mapped accumulator period {}",
+                kn.stage,
+                mk.acc_period
+            );
+            if let PeOp::Acc { period: p, .. } = &mk.nodes.last().unwrap().cfg.op {
+                anyhow::ensure!(
+                    *p == period,
+                    "kernel {}: accumulator period {p} != reduction group {period}",
+                    kn.stage
+                );
+            } else {
+                anyhow::ensure!(
+                    period == 1,
+                    "kernel {}: reduction group {period} without an accumulator root",
+                    kn.stage
+                );
+            }
+            // The stored value is the root at the final reduction
+            // step: store schedule = issue schedule with the reduction
+            // tail bound to its last values, delayed by the latency.
+            let tail_last: Vec<i64> =
+                full.dims[pr..].iter().map(|d| d.min + d.extent - 1).collect();
+            let expect = kn.schedule.expr.bind_tail(&tail_last).shift(kn.latency);
+            anyhow::ensure!(
+                sp.schedule.expr == expect,
+                "kernel {}: store schedule {} != issue(tail-bound)+latency ({expect})",
+                kn.stage,
+                sp.schedule
+            );
+
+            let dst = match scratch_of.get(kn.store.0.as_str()) {
+                Some(&s) => s,
+                None => bail!(
+                    "kernel {} stores into input buffer {} (unsupported)",
+                    kn.stage,
+                    kn.store.0
+                ),
+            };
+            let store_box = &graph.buffers[&kn.store.0].data_box;
+            let flat = flat_access(&sp.access, store_box)
+                .with_context(|| format!("kernel {} store", kn.stage))?;
+            // Extend over the full domain (zero coefficients on the
+            // reduction tail) so one recurrence serves the whole walk.
+            let flat = rebase_zero_based(&flat.insert_dims(pr, full.rank() - pr), &mins);
+            check_flat_range(&flat, &extents, scratch[dst].len, "store")?;
+
+            kernels.push(ExecKernel {
+                stage: kn.stage.clone(),
+                extents,
+                mins,
+                loads,
+                nodes,
+                store: StoreSpec { dst, addr: AffineConfig::from_affine(&flat), period },
+            });
+        }
+
+        // --- Output binding -------------------------------------
+        let out_scratch = match scratch_of.get(out_buf.as_str()) {
+            Some(&s) => s,
+            None => bail!("output buffer {out_buf} is an input buffer (nothing computes it)"),
+        };
+        let out_box = graph.buffers[&out_buf].data_box.clone();
+        // Every write port of the output buffer must be drained by a
+        // stream with the write port's own domain and access map.
+        // Otherwise the simulator leaves the undrained coordinates at
+        // 0 in its result tensor while this engine returns the stored
+        // values — exactly the divergence the fallback must absorb.
+        let out_ub = &graph.buffers[&out_buf];
+        let mut drained = vec![false; out_ub.inputs.len()];
+        for ep in &graph.output_streams {
+            let dp = &out_ub.outputs[ep.port];
+            let w = out_ub
+                .inputs
+                .iter()
+                .position(|wp| wp.domain.same_layout(&dp.domain) && wp.access == dp.access)
+                .with_context(|| {
+                    format!("output drain {} matches no write port of {out_buf}", dp.name)
+                })?;
+            drained[w] = true;
+        }
+        anyhow::ensure!(
+            drained.iter().all(|&d| d),
+            "output buffer {out_buf}: a write port is never drained \
+             (the simulator would report 0 for its coordinates)"
+        );
+
+        let timing = timing::build(design, graph)?;
+        Ok(ExecPlan {
+            inputs,
+            scratch,
+            kernels,
+            out_scratch,
+            out_box,
+            timing,
+        })
+    }
+}

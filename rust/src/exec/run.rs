@@ -1,0 +1,423 @@
+//! [`ExecRun`]: execute one request against an [`ExecPlan`] — fused
+//! loop nests over the kernels' iteration domains, no cycle loop.
+//!
+//! Per request the run walks each kernel's domain once in row-major
+//! order: load addresses advance by Fig-5c delta recurrences
+//! ([`crate::hw::DeltaImpl`], one add per stream per step), the mapped
+//! PE node program evaluates with the same i32 ALU semantics the
+//! hardware uses ([`crate::halide::expr::eval_binop`]), and the root
+//! value is stored once per reduction group. The reported
+//! [`SimStats`] come from the plan's analytic timing model and are
+//! bit-identical to what the cycle-accurate simulator would report —
+//! the differential suite (`rust/tests/exec_vs_sim.rs`) enforces it.
+//!
+//! Like [`crate::cgra::SimRun`], an `ExecRun` is reused across
+//! requests with in-place resets: one run serves one thread.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::cgra::{SimResult, SimStats};
+use crate::halide::expr::{eval_binop, UnOp};
+use crate::hw::{AffineHw, DeltaImpl, IterationDomain, PeOp};
+use crate::mapping::{MappedDesign, OperandSrc};
+use crate::tensor::Tensor;
+use crate::ub::UbGraph;
+
+use super::plan::{BufRef, ExecPlan};
+
+/// Per-kernel iteration state, reset in place between requests.
+struct KernelCursors {
+    id: IterationDomain,
+    loads: Vec<DeltaImpl>,
+    store: DeltaImpl,
+}
+
+/// The execution half of the functional engine: mutable per-request
+/// state for one [`ExecPlan`].
+pub struct ExecRun {
+    plan: Arc<ExecPlan>,
+    scratch: Vec<Vec<i32>>,
+    cursors: Vec<KernelCursors>,
+    /// PE register file scratch (sized to the widest kernel).
+    regs: Vec<i32>,
+    load_vals: Vec<i32>,
+}
+
+impl ExecRun {
+    pub fn new(plan: Arc<ExecPlan>) -> ExecRun {
+        let scratch = plan.scratch.iter().map(|s| vec![0i32; s.len]).collect();
+        let cursors = plan
+            .kernels
+            .iter()
+            .map(|k| KernelCursors {
+                id: IterationDomain::new(k.extents.clone()),
+                loads: k
+                    .loads
+                    .iter()
+                    .map(|l| DeltaImpl::new(&l.addr, &k.extents))
+                    .collect(),
+                store: DeltaImpl::new(&k.store.addr, &k.extents),
+            })
+            .collect();
+        let regs = vec![0; plan.kernels.iter().map(|k| k.nodes.len()).max().unwrap_or(0)];
+        let load_vals =
+            vec![0; plan.kernels.iter().map(|k| k.loads.len()).max().unwrap_or(0)];
+        ExecRun { plan, scratch, cursors, regs, load_vals }
+    }
+
+    pub fn plan(&self) -> &Arc<ExecPlan> {
+        &self.plan
+    }
+
+    /// Execute one request. Output and stats are bit-identical to a
+    /// cycle-accurate [`crate::cgra::SimRun::run`] on the same design
+    /// and inputs.
+    pub fn run(&mut self, inputs: &BTreeMap<String, Tensor>) -> Result<SimResult> {
+        let plan = Arc::clone(&self.plan);
+        let ExecRun { scratch, cursors, regs, load_vals, .. } = self;
+
+        // Bind request tensors, verifying layout (same rule as the
+        // simulator: flat addressing is only valid against the
+        // declared boxes).
+        let mut feed: Vec<&[i32]> = Vec::with_capacity(plan.inputs.len());
+        for spec in &plan.inputs {
+            let t = inputs
+                .get(&spec.name)
+                .with_context(|| format!("missing input {}", spec.name))?;
+            anyhow::ensure!(
+                t.shape.same_layout(&spec.shape),
+                "input {}: tensor box {} does not match the design's declared box {}",
+                spec.name,
+                t.shape,
+                spec.shape
+            );
+            feed.push(&t.data);
+        }
+
+        // Zero the intermediate buffers (the hardware's reset state).
+        for s in scratch.iter_mut() {
+            s.iter_mut().for_each(|v| *v = 0);
+        }
+
+        // --- Fused kernel loops, in dataflow order --------------
+        for (ks, kp) in cursors.iter_mut().zip(&plan.kernels) {
+            ks.id.reset();
+            for d in ks.loads.iter_mut() {
+                d.reset();
+            }
+            ks.store.reset();
+
+            let root = kp.nodes.len() - 1;
+            let period = kp.store.period;
+            let mut acc: i32 = 0;
+            let mut group: i64 = 0;
+            loop {
+                let pt = ks.id.point();
+                for (li, l) in kp.loads.iter().enumerate() {
+                    let a = ks.loads[li].value() as usize;
+                    load_vals[li] = match l.src {
+                        BufRef::Input(i) => feed[i][a],
+                        BufRef::Scratch(s) => scratch[s][a],
+                    };
+                }
+                for (ni, node) in kp.nodes.iter().enumerate() {
+                    let mut ops = [0i32; 3];
+                    for (k, s) in node.srcs.iter().enumerate() {
+                        let routed = match s {
+                            OperandSrc::Load(l) => load_vals[*l],
+                            OperandSrc::Node(j) => regs[*j],
+                            OperandSrc::Iter(d) => (kp.mins[*d] + pt[*d]) as i32,
+                            OperandSrc::None => 0,
+                        };
+                        ops[k] = node.cfg.consts[k].unwrap_or(routed);
+                    }
+                    regs[ni] = match &node.cfg.op {
+                        PeOp::Bin(op) => eval_binop(*op, ops[0], ops[1]),
+                        PeOp::Un(UnOp::Neg) => ops[0].wrapping_neg(),
+                        PeOp::Un(UnOp::Abs) => ops[0].wrapping_abs(),
+                        PeOp::Select => {
+                            if ops[0] != 0 {
+                                ops[1]
+                            } else {
+                                ops[2]
+                            }
+                        }
+                        PeOp::Acc { op, init, .. } => {
+                            // Same reset-every-`period`-firings rule as
+                            // the PE's accumulate mode; firing order is
+                            // row-major, exactly the gated order the
+                            // simulator latches.
+                            if group == 0 {
+                                acc = *init;
+                            }
+                            acc = eval_binop(*op, acc, ops[0]);
+                            acc
+                        }
+                    };
+                }
+                group += 1;
+                if group == period {
+                    group = 0;
+                    let a = ks.store.value() as usize;
+                    scratch[kp.store.dst][a] = regs[root];
+                }
+                match ks.id.step() {
+                    Some((inc, clr)) => {
+                        for d in ks.loads.iter_mut() {
+                            d.step(&inc, &clr);
+                        }
+                        ks.store.step(&inc, &clr);
+                    }
+                    None => break,
+                }
+            }
+        }
+
+        Ok(SimResult {
+            output: Tensor::from_data(
+                plan.out_box.clone(),
+                scratch[plan.out_scratch].clone(),
+            ),
+            stats: plan.timing().stats,
+        })
+    }
+
+    /// The analytic stats the engine reports (identical every request
+    /// — activity is input-independent by construction).
+    pub fn stats(&self) -> SimStats {
+        self.plan.timing().stats
+    }
+}
+
+/// One-shot convenience over [`ExecPlan::build`] + [`ExecRun::run`],
+/// mirroring [`crate::cgra::simulate`]. Repeated callers should build
+/// the plan once and reuse an `ExecRun`.
+pub fn execute(
+    design: &MappedDesign,
+    graph: &UbGraph,
+    inputs: &BTreeMap<String, Tensor>,
+) -> Result<SimResult> {
+    let plan = Arc::new(ExecPlan::build(design, graph)?);
+    ExecRun::new(plan).run(inputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::simulate;
+    use crate::extraction::extract;
+    use crate::halide::func::{Func, InputDecl, Program};
+    use crate::halide::lower::lower;
+    use crate::halide::schedule::HwSchedule;
+    use crate::halide::{Expr, LoweredPipeline};
+    use crate::mapping::map_design;
+    use crate::sched;
+
+    fn compile(p: &Program) -> (LoweredPipeline, UbGraph, MappedDesign) {
+        let lp = lower(p).unwrap();
+        let ps = sched::schedule(&lp).unwrap();
+        let g = extract(&lp, &ps).unwrap();
+        let d = map_design(&g).unwrap();
+        (lp, g, d)
+    }
+
+    fn brighten_blur(tile: i64) -> Program {
+        let brighten = Func::pure_fn(
+            "brighten",
+            &["y", "x"],
+            Expr::mul(Expr::c(2), Expr::ld("input", vec![Expr::v("y"), Expr::v("x")])),
+        );
+        let blur = Func::pure_fn(
+            "blur",
+            &["y", "x"],
+            Expr::shr(
+                Expr::sum(vec![
+                    Expr::ld("brighten", vec![Expr::v("y"), Expr::v("x")]),
+                    Expr::ld(
+                        "brighten",
+                        vec![Expr::v("y"), Expr::add(Expr::v("x"), Expr::c(1))],
+                    ),
+                    Expr::ld(
+                        "brighten",
+                        vec![Expr::add(Expr::v("y"), Expr::c(1)), Expr::v("x")],
+                    ),
+                    Expr::ld(
+                        "brighten",
+                        vec![
+                            Expr::add(Expr::v("y"), Expr::c(1)),
+                            Expr::add(Expr::v("x"), Expr::c(1)),
+                        ],
+                    ),
+                ]),
+                2,
+            ),
+        );
+        Program {
+            name: "bb".into(),
+            inputs: vec![InputDecl { name: "input".into(), rank: 2 }],
+            funcs: vec![brighten, blur],
+            schedule: HwSchedule::new([tile, tile]).store_at("brighten"),
+        }
+    }
+
+    fn inputs_for(lp: &LoweredPipeline, salt: i64) -> BTreeMap<String, Tensor> {
+        let mut ins = BTreeMap::new();
+        for name in &lp.inputs {
+            ins.insert(
+                name.clone(),
+                Tensor::from_fn(lp.buffers[name].clone(), |pt| {
+                    let mut h = salt;
+                    for &v in pt {
+                        h = h.wrapping_mul(31).wrapping_add(v + 7);
+                    }
+                    (h.rem_euclid(251)) as i32
+                }),
+            );
+        }
+        ins
+    }
+
+    /// The engine contract on a stencil pipeline: outputs AND stats
+    /// bit-identical to the cycle-accurate simulator.
+    #[test]
+    fn stencil_matches_sim_bit_exact_with_identical_stats() {
+        let p = brighten_blur(15);
+        let (lp, g, d) = compile(&p);
+        let ins = inputs_for(&lp, 17);
+        let sim = simulate(&d, &g, &ins).unwrap();
+        let ex = execute(&d, &g, &ins).unwrap();
+        assert_eq!(ex.output.shape, sim.output.shape);
+        assert_eq!(ex.output.data, sim.output.data);
+        assert_eq!(ex.stats, sim.stats);
+    }
+
+    /// Reduction pipeline (accumulator PE, dual-port fallback): same
+    /// contract.
+    #[test]
+    fn reduction_matches_sim_bit_exact() {
+        let conv = Func::reduce_fn(
+            "conv",
+            &["y", "x"],
+            Expr::c(0),
+            &[("ry", 0, 3), ("rx", 0, 3)],
+            Expr::add(
+                Expr::ld("conv", vec![Expr::v("y"), Expr::v("x")]),
+                Expr::ld(
+                    "in",
+                    vec![
+                        Expr::add(Expr::v("y"), Expr::v("ry")),
+                        Expr::add(Expr::v("x"), Expr::v("rx")),
+                    ],
+                ),
+            ),
+        );
+        let p = Program {
+            name: "boxf".into(),
+            inputs: vec![InputDecl { name: "in".into(), rank: 2 }],
+            funcs: vec![conv],
+            schedule: HwSchedule::new([6, 6]),
+        };
+        let (lp, g, d) = compile(&p);
+        let ins = inputs_for(&lp, 3);
+        let sim = simulate(&d, &g, &ins).unwrap();
+        let ex = execute(&d, &g, &ins).unwrap();
+        assert_eq!(ex.output.data, sim.output.data);
+        assert_eq!(ex.stats, sim.stats);
+    }
+
+    /// Unrolled lanes: multiple kernels per stage, multiple drains.
+    #[test]
+    fn unrolled_matches_sim_bit_exact() {
+        let mut p = brighten_blur(14);
+        p.schedule = HwSchedule::new([14, 14])
+            .store_at("brighten")
+            .unroll("brighten", "x", 2)
+            .unroll("blur", "x", 2);
+        let (lp, g, d) = compile(&p);
+        let ins = inputs_for(&lp, 29);
+        let sim = simulate(&d, &g, &ins).unwrap();
+        let ex = execute(&d, &g, &ins).unwrap();
+        assert_eq!(ex.output.data, sim.output.data);
+        assert_eq!(ex.stats, sim.stats);
+    }
+
+    /// A reused ExecRun is bit-identical across interleaved inputs,
+    /// like the simulator's plan-reuse contract.
+    #[test]
+    fn run_reuse_is_bit_identical_across_inputs() {
+        let p = brighten_blur(12);
+        let (lp, g, d) = compile(&p);
+        let plan = Arc::new(ExecPlan::build(&d, &g).unwrap());
+        let mut run = ExecRun::new(Arc::clone(&plan));
+        let (a, b) = (inputs_for(&lp, 1), inputs_for(&lp, 2));
+        for ins in [&a, &b, &a] {
+            let reused = run.run(ins).unwrap();
+            let fresh = execute(&d, &g, ins).unwrap();
+            assert_eq!(reused.output.data, fresh.output.data);
+        }
+        assert_ne!(
+            run.run(&a).unwrap().output.data,
+            run.run(&b).unwrap().output.data
+        );
+    }
+
+    /// Graphs the functional engine cannot prove sound are rejected at
+    /// plan build (the engine-selection fallback signal).
+    #[test]
+    fn no_output_stream_is_an_error() {
+        let p = brighten_blur(8);
+        let (_, mut g, d) = compile(&p);
+        g.output_streams.clear();
+        let err = ExecPlan::build(&d, &g).unwrap_err();
+        assert!(err.to_string().contains("no output stream"), "{err:#}");
+    }
+
+    /// An output write port with no matching drain is rejected: the
+    /// simulator would report 0 for its coordinates while this engine
+    /// would return the stored values.
+    #[test]
+    fn undrained_output_write_port_is_rejected() {
+        let mut p = brighten_blur(14);
+        p.schedule = HwSchedule::new([14, 14])
+            .store_at("brighten")
+            .unroll("brighten", "x", 2)
+            .unroll("blur", "x", 2);
+        let (_, mut g, d) = compile(&p);
+        assert!(g.output_streams.len() >= 2, "need an unrolled output");
+        g.output_streams.pop();
+        let err = ExecPlan::build(&d, &g).unwrap_err();
+        assert!(err.to_string().contains("never drained"), "{err:#}");
+    }
+
+    /// A load port nudged out of lockstep with its kernel must be
+    /// rejected — that is precisely the shape the cycle-accurate
+    /// fallback exists for.
+    #[test]
+    fn non_lockstep_load_port_is_rejected() {
+        let p = brighten_blur(8);
+        let (_, mut g, d) = compile(&p);
+        // Delay one read port one cycle: sim would model the skew,
+        // the functional engine must refuse.
+        let ub = g.buffers.get_mut("brighten").unwrap();
+        ub.outputs[0].schedule = ub.outputs[0].schedule.delayed(1);
+        let err = ExecPlan::build(&d, &g).unwrap_err();
+        assert!(err.to_string().contains("lockstep"), "{err:#}");
+    }
+
+    /// Mismatched request layout is rejected up front, same as SimRun.
+    #[test]
+    fn mismatched_input_box_is_rejected() {
+        let p = brighten_blur(8);
+        let (_, g, d) = compile(&p);
+        let mut ins = BTreeMap::new();
+        ins.insert(
+            "input".to_string(),
+            Tensor::zeros(crate::poly::BoxSet::from_extents(&[3, 3])),
+        );
+        let err = execute(&d, &g, &ins).unwrap_err();
+        assert!(err.to_string().contains("does not match"), "{err:#}");
+    }
+}

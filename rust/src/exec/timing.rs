@@ -1,0 +1,208 @@
+//! The analytic timing/energy model: every field of
+//! [`crate::cgra::SimStats`] derived in closed form from the
+//! polyhedral event counts of a mapped design — no cycle loop.
+//!
+//! The unified-buffer abstraction makes this possible (PAPER.md §IV):
+//! every port's schedule is a static affine function of its iteration
+//! domain, so "how many times does this element fire, and when" is a
+//! cardinality / interval-bound question, not a simulation question.
+//! The derivations mirror the cycle-accurate simulator's accounting
+//! exactly (docs/execution.md walks through each one):
+//!
+//! * `cycles`      — the scheduled completion (what the simulator
+//!   reports verbatim).
+//! * `words_in/out` — input/output stream event counts (domain
+//!   cardinalities).
+//! * `sr_shifts`   — shift-register taps free-run every cycle of the
+//!   simulated window: `horizon × taps`.
+//! * `pe_ops`      — non-accumulator PEs free-run every cycle
+//!   (`horizon × count`); gated accumulators fire once per point of
+//!   their kernel's full domain.
+//! * `sram_reads/writes` — wide-bank flush/read controllers fire once
+//!   per point of their (strip-mined) iteration domains.
+//!
+//! Each closed form is only valid when the corresponding events all
+//! land inside the simulator's `[0, horizon)` window; [`build`]
+//! verifies the interval bounds and returns `Err` otherwise, which is
+//! one of the conditions that makes engine selection fall back to the
+//! cycle-accurate simulator (see [`crate::exec::Engine`]).
+
+use anyhow::Result;
+
+use crate::cgra::sim::HORIZON_SLACK;
+use crate::cgra::SimStats;
+use crate::hw::memtile::PortCtlConfig;
+use crate::hw::PeOp;
+use crate::mapping::{BankConfig, MappedDesign, PortImpl};
+use crate::poly::Affine;
+use crate::ub::UbGraph;
+
+/// Event-count activity of one unified buffer over the tile window —
+/// the "per-tile activity" view of the analytic model.
+#[derive(Clone, Debug)]
+pub struct BufferActivity {
+    pub buffer: String,
+    /// Port events (reads + writes) per tile.
+    pub events: u64,
+    /// First and last cycle any port of this buffer fires (inclusive).
+    pub first: i64,
+    pub last: i64,
+    /// Events per cycle of the buffer's own active window — 1.0 means
+    /// some port fires every cycle the buffer is live.
+    pub occupancy: f64,
+}
+
+/// The closed-form performance model of one mapped design.
+#[derive(Clone, Debug)]
+pub struct ExecTiming {
+    /// Cycles to complete one tile (the figure `SimStats::cycles`
+    /// reports).
+    pub completion: i64,
+    /// The simulator's accounting window (`completion` plus the flush
+    /// slack); the free-running stats below cover exactly this window.
+    pub horizon: i64,
+    /// Bit-identical to what a cycle-accurate run reports.
+    pub stats: SimStats,
+    /// Per-buffer event counts and active spans.
+    pub activity: Vec<BufferActivity>,
+    /// Stall-free output occupancy: output words per completion cycle
+    /// (1.0 = one pixel drained every cycle of the tile).
+    pub occupancy: f64,
+}
+
+/// Total fires of a set of port controllers, verified to land inside
+/// `[0, horizon)` (outside it the simulator would stop counting and
+/// the closed form would diverge).
+fn ctl_fires(ctls: &[PortCtlConfig], horizon: i64, what: &str) -> Result<u64> {
+    let mut total = 0u64;
+    for c in ctls {
+        if c.extents.iter().any(|&e| e <= 0) {
+            continue;
+        }
+        let dims: Vec<(i64, i64)> = c.extents.iter().map(|&e| (0, e - 1)).collect();
+        let sched = Affine::new(c.sched.strides.clone(), c.sched.offset);
+        let (lo, hi) = sched.bounds(&dims);
+        anyhow::ensure!(
+            lo >= 0 && hi < horizon,
+            "{what} controller fires in [{lo}, {hi}], outside the simulated window [0, {horizon})"
+        );
+        total += c.extents.iter().product::<i64>() as u64;
+    }
+    Ok(total)
+}
+
+/// Derive the full timing model for `(design, graph)`.
+pub fn build(design: &MappedDesign, graph: &UbGraph) -> Result<ExecTiming> {
+    let completion = graph.completion;
+    let horizon = completion + HORIZON_SLACK;
+
+    // --- Stream event counts ------------------------------------
+    let mut words_in = 0u64;
+    for ep in &graph.input_streams {
+        words_in += graph.buffers[&ep.buffer].inputs[ep.port].domain.cardinality() as u64;
+    }
+    let mut words_out = 0u64;
+    for ep in &graph.output_streams {
+        words_out += graph.buffers[&ep.buffer].outputs[ep.port].domain.cardinality() as u64;
+    }
+
+    // --- Free-running shift registers ---------------------------
+    let taps = design
+        .buffers
+        .values()
+        .flat_map(|b| b.port_impls.iter())
+        .filter(|i| matches!(i, PortImpl::Shift { .. }))
+        .count() as u64;
+    let sr_shifts = horizon as u64 * taps;
+
+    // --- PE operations ------------------------------------------
+    // Non-accumulator PEs tick every cycle of the window; a gated
+    // accumulator ticks once per full-domain point, provided every
+    // gate event lands inside the window.
+    let mut free_running_pes = 0u64;
+    let mut acc_fires = 0u64;
+    for k in &design.kernels {
+        for (ni, n) in k.nodes.iter().enumerate() {
+            if matches!(n.cfg.op, PeOp::Acc { .. }) {
+                anyhow::ensure!(
+                    ni + 1 == k.nodes.len(),
+                    "kernel {}: accumulator PE at non-root position {ni}",
+                    k.stage
+                );
+                if k.domain.is_empty() {
+                    continue;
+                }
+                let gate = k.schedule.delayed(k.latency - 1);
+                let (lo, hi) = gate.expr.bounds(&k.domain.bounds());
+                anyhow::ensure!(
+                    lo >= 0 && hi < horizon,
+                    "kernel {}: accumulator gate fires in [{lo}, {hi}], outside [0, {horizon})",
+                    k.stage
+                );
+                acc_fires += k.domain.cardinality() as u64;
+            } else {
+                free_running_pes += 1;
+            }
+        }
+    }
+    let pe_ops = horizon as u64 * free_running_pes + acc_fires;
+
+    // --- Wide-bank SRAM accesses --------------------------------
+    // One write per aggregator flush, one read per SRAM→TB fetch
+    // (dual-port fallback banks are excluded, exactly as the
+    // simulator's stats collection excludes them).
+    let mut sram_reads = 0u64;
+    let mut sram_writes = 0u64;
+    for mb in design.buffers.values() {
+        for bank in &mb.banks {
+            if let BankConfig::Wide(cfg) = &bank.config {
+                sram_writes += ctl_fires(&cfg.agg_flush, horizon, "AGG flush")?;
+                sram_reads += ctl_fires(&cfg.sram_read, horizon, "SRAM read")?;
+            }
+        }
+    }
+
+    // --- Per-buffer activity ------------------------------------
+    let mut activity = Vec::with_capacity(graph.buffers.len());
+    for (name, ub) in &graph.buffers {
+        let mut events = 0u64;
+        let mut first = i64::MAX;
+        let mut last = i64::MIN;
+        for port in ub.inputs.iter().chain(&ub.outputs) {
+            if port.domain.is_empty() {
+                continue;
+            }
+            events += port.domain.cardinality() as u64;
+            let (lo, hi) = port.active_span();
+            first = first.min(lo);
+            last = last.max(hi);
+        }
+        if events == 0 {
+            continue;
+        }
+        let window = (last - first + 1).max(1) as f64;
+        activity.push(BufferActivity {
+            buffer: name.clone(),
+            events,
+            first,
+            last,
+            occupancy: events as f64 / window,
+        });
+    }
+
+    Ok(ExecTiming {
+        completion,
+        horizon,
+        stats: SimStats {
+            cycles: completion,
+            sram_reads,
+            sram_writes,
+            pe_ops,
+            sr_shifts,
+            words_in,
+            words_out,
+        },
+        activity,
+        occupancy: words_out as f64 / completion.max(1) as f64,
+    })
+}

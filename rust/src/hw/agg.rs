@@ -38,6 +38,13 @@ impl Aggregator {
     pub fn read_all(&self) -> Vec<i64> {
         self.regs.clone()
     }
+
+    /// Borrow the register file directly — the allocation-free flush
+    /// path ([`crate::hw::MemTile::tick_into`] copies straight from
+    /// here into the SRAM write port).
+    pub fn regs(&self) -> &[i64] {
+        &self.regs
+    }
 }
 
 #[cfg(test)]

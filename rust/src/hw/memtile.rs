@@ -168,9 +168,29 @@ impl MemTile {
 
     /// Advance one cycle. `inputs[i]` must carry a word whenever input
     /// port `i`'s schedule fires. Returns one optional word per output
-    /// port.
+    /// port. Convenience over [`MemTile::tick_into`] — steady-state
+    /// callers (the simulator's bank loop) pass a reusable scratch
+    /// slice instead of allocating a fresh `Vec` per cycle.
     pub fn tick(&mut self, cycle: i64, inputs: &[Option<i64>]) -> Result<Vec<Option<i64>>> {
+        let mut out = vec![None; self.ctl_out.len()];
+        self.tick_into(cycle, inputs, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`MemTile::tick`] writing into caller-owned scratch (cleared to
+    /// `None` first). The whole cycle is allocation-free: aggregator
+    /// flushes borrow the register file ([`Aggregator::regs`]) and the
+    /// landing read borrows the SRAM's double-buffered read register
+    /// ([`WideSram::take_read_ref`]).
+    pub fn tick_into(
+        &mut self,
+        cycle: i64,
+        inputs: &[Option<i64>],
+        out: &mut [Option<i64>],
+    ) -> Result<()> {
         assert_eq!(inputs.len(), self.ctl_in.len(), "input arity mismatch");
+        assert_eq!(out.len(), self.ctl_out.len(), "output arity mismatch");
+        out.iter_mut().for_each(|v| *v = None);
 
         // 1. Serial input -> aggregator slots.
         for (i, ctl) in self.ctl_in.iter_mut().enumerate() {
@@ -186,16 +206,14 @@ impl MemTile {
         for (i, ctl) in self.ctl_flush.iter_mut().enumerate() {
             if let Some(vaddr) = ctl.tick(cycle) {
                 let vaddr = self.cfg.agg_flush[i].wrap(vaddr);
-                let vec = self.aggs[i].read_all();
                 self.sram
-                    .write_vec(vaddr, &vec)
+                    .write_vec(vaddr, self.aggs[i].regs())
                     .with_context(|| format!("flush {i} at cycle {cycle}"))?;
             }
         }
 
         // 3. Serialize TB slots onto the output ports (the TB register
         // file still holds last cycle's contents — loads land below).
-        let mut out = vec![None; self.ctl_out.len()];
         for (o, ctl) in self.ctl_out.iter_mut().enumerate() {
             if let Some(slot) = ctl.tick(cycle) {
                 out[o] = Some(self.tbs[o].read(self.cfg.tb_out[o].wrap(slot)));
@@ -207,8 +225,11 @@ impl MemTile {
         // latch at end of cycle: data issued at cycle t is readable from
         // t+2).
         if let Some((tbi, half)) = self.inflight.take() {
-            let data = self.sram.take_read().context("SRAM read did not complete")?;
-            self.tbs[tbi].load(half, &data);
+            let data = self
+                .sram
+                .take_read_ref()
+                .context("SRAM read did not complete")?;
+            self.tbs[tbi].load(half, data);
         }
 
         // 5. Issue this cycle's wide SRAM read.
@@ -224,7 +245,7 @@ impl MemTile {
         }
 
         self.sram.end_cycle();
-        Ok(out)
+        Ok(())
     }
 }
 
@@ -278,6 +299,10 @@ impl DpMemTile {
         self.ctl_r.iter().all(|c| c.is_done())
     }
 
+    pub fn n_outputs(&self) -> usize {
+        self.ctl_r.len()
+    }
+
     /// Just-configured state; see [`MemTile::reset`].
     pub fn reset(&mut self) {
         for c in self.ctl_w.iter_mut().chain(self.ctl_r.iter_mut()) {
@@ -302,10 +327,23 @@ impl DpMemTile {
         self.pending_port.is_some()
     }
 
+    /// See [`MemTile::tick`] / [`MemTile::tick_into`].
     pub fn tick(&mut self, cycle: i64, inputs: &[Option<i64>]) -> Result<Vec<Option<i64>>> {
-        assert_eq!(inputs.len(), self.ctl_w.len());
-        // 1. Data from last cycle's read issue appears on the port.
         let mut out = vec![None; self.ctl_r.len()];
+        self.tick_into(cycle, inputs, &mut out)?;
+        Ok(out)
+    }
+
+    pub fn tick_into(
+        &mut self,
+        cycle: i64,
+        inputs: &[Option<i64>],
+        out: &mut [Option<i64>],
+    ) -> Result<()> {
+        assert_eq!(inputs.len(), self.ctl_w.len());
+        assert_eq!(out.len(), self.ctl_r.len());
+        out.iter_mut().for_each(|v| *v = None);
+        // 1. Data from last cycle's read issue appears on the port.
         if let Some(o) = self.pending_port.take() {
             out[o] = Some(self.sram.take_read().context("DP read did not complete")?);
         }
@@ -327,7 +365,7 @@ impl DpMemTile {
             }
         }
         self.sram.end_cycle();
-        Ok(out)
+        Ok(())
     }
 }
 

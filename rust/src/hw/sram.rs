@@ -22,8 +22,14 @@ pub struct WideSram {
     pub capacity: usize,
     data: Vec<i64>,
     accessed_this_cycle: bool,
-    pending_read: Option<Vec<i64>>,
-    ready_read: Option<Vec<i64>>,
+    /// Double-buffered read register: `read_vec` fills `pending_buf`,
+    /// `end_cycle` swaps it into `ready_buf`. Fixed buffers instead of
+    /// per-read `Vec`s — the simulator's steady state must not
+    /// allocate per SRAM access.
+    pending: bool,
+    ready: bool,
+    pending_buf: Vec<i64>,
+    ready_buf: Vec<i64>,
     pub stats: SramStats,
 }
 
@@ -35,8 +41,10 @@ impl WideSram {
             capacity,
             data: vec![0; capacity],
             accessed_this_cycle: false,
-            pending_read: None,
-            ready_read: None,
+            pending: false,
+            ready: false,
+            pending_buf: vec![0; fetch_width],
+            ready_buf: vec![0; fetch_width],
             stats: SramStats::default(),
         }
     }
@@ -50,8 +58,8 @@ impl WideSram {
     pub fn reset(&mut self) {
         self.data.iter_mut().for_each(|w| *w = 0);
         self.accessed_this_cycle = false;
-        self.pending_read = None;
-        self.ready_read = None;
+        self.pending = false;
+        self.ready = false;
         self.stats = SramStats::default();
     }
 
@@ -75,11 +83,14 @@ impl WideSram {
     }
 
     /// Issue a vector read; data is available via [`WideSram::take_read`]
-    /// after the next [`WideSram::end_cycle`].
+    /// (or the allocation-free [`WideSram::take_read_ref`]) after the
+    /// next [`WideSram::end_cycle`].
     pub fn read_vec(&mut self, vaddr: i64) -> Result<()> {
         self.claim_port()?;
         let base = self.word_base(vaddr)?;
-        self.pending_read = Some(self.data[base..base + self.fetch_width].to_vec());
+        self.pending_buf
+            .copy_from_slice(&self.data[base..base + self.fetch_width]);
+        self.pending = true;
         self.stats.reads += 1;
         Ok(())
     }
@@ -94,13 +105,27 @@ impl WideSram {
 
     /// Retire the cycle: pending read data becomes ready.
     pub fn end_cycle(&mut self) {
-        self.ready_read = self.pending_read.take();
+        std::mem::swap(&mut self.pending_buf, &mut self.ready_buf);
+        self.ready = self.pending;
+        self.pending = false;
         self.accessed_this_cycle = false;
     }
 
     /// Data from the read issued last cycle.
     pub fn take_read(&mut self) -> Option<Vec<i64>> {
-        self.ready_read.take()
+        self.take_read_ref().map(|d| d.to_vec())
+    }
+
+    /// [`WideSram::take_read`] without the copy: borrows the read
+    /// register directly (the memory tile loads it straight into a
+    /// transpose buffer).
+    pub fn take_read_ref(&mut self) -> Option<&[i64]> {
+        if self.ready {
+            self.ready = false;
+            Some(&self.ready_buf)
+        } else {
+            None
+        }
     }
 }
 

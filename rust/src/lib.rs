@@ -22,12 +22,19 @@
 //! enumerates `HwSchedule` candidates, prunes them analytically, and
 //! scores the survivors through the full compile + simulate path on a
 //! worker pool (§VI-C automated; see docs/dse.md).
+//!
+//! Serving and tuning default to the [`exec`] functional engine — the
+//! design executed as fused affine tensor kernels with an analytic
+//! timing model, bit-identical to the simulator but orders of
+//! magnitude faster (docs/execution.md, DESIGN.md §6); the
+//! cycle-accurate [`cgra::sim`] remains the fallback and the oracle.
 
 pub mod apps;
 pub mod cgra;
 pub mod coordinator;
 pub mod cost;
 pub mod dse;
+pub mod exec;
 pub mod extraction;
 pub mod halide;
 pub mod hw;

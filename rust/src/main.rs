@@ -6,13 +6,19 @@
 //! ```text
 //! pushmem list                       show registered applications
 //! pushmem compile <app>              compile and print the design report
-//! pushmem run <app> [--artifacts D]  simulate; validate vs XLA golden
+//! pushmem run <app> [--artifacts D]  execute; validate vs XLA golden
+//! pushmem validate <app>             cross-check exec vs cycle-accurate sim
 //! pushmem report [--artifacts D]     all apps: Table IV + Fig 13/14 rows
 //! pushmem tables                     Tables V, VI, VII reproductions
 //! pushmem tune <app> [--budget N]    auto-tune the schedule (dse::)
 //! pushmem serve <app> [--addr A]     serve one app over TCP (Fig 12 shape)
 //! pushmem serve-all [--addr A]       serve every app over one TCP port
 //! ```
+//!
+//! `run`, `report`, `tune`, `serve` and `serve-all` accept
+//! `--engine {exec,sim,auto}` (docs/execution.md): `exec` is the
+//! functional execution engine, `sim` the cycle-accurate simulator,
+//! `auto` (default) prefers exec with sim as fallback.
 //!
 //! The repo-level README.md walks through every subcommand; the serve
 //! wire format is specified in docs/protocol.md.
@@ -24,9 +30,13 @@ use anyhow::{bail, Context, Result};
 
 use pushmem::apps;
 use pushmem::coordinator::serve;
-use pushmem::coordinator::{compile, report_app, sequential_comparison, validate, CompiledRegistry};
+use pushmem::coordinator::{
+    compile, cross_check, report_app_with, sequential_comparison, validate_with,
+    CompiledRegistry,
+};
 use pushmem::cost::CGRA_CLOCK_HZ;
 use pushmem::dse;
+use pushmem::exec::Engine;
 use pushmem::runtime::Runtime;
 
 fn artifact_path(dir: &str, name: &str) -> PathBuf {
@@ -52,14 +62,20 @@ fn usage(cmd: &str) -> &'static str {
     match cmd {
         "list" => "usage: pushmem list\n\nPrint every registered application name (apps + Harris schedule variants).",
         "compile" => "usage: pushmem compile <app>\n\nCompile one app through the full pipeline and print the design report\n(PEs, MEM tiles, SRAM/SR words, completion, place & route, bitstream).",
-        "run" => "usage: pushmem run <app> [--artifacts D]\n\n  --artifacts D   directory of HLO golden artifacts (default: artifacts)\n\nSimulate one app cycle-accurately and validate bit-exactly against the\nXLA golden model (requires `make artifacts`).",
-        "report" => "usage: pushmem report [--artifacts D]\n\n  --artifacts D   directory of HLO golden artifacts (default: artifacts)\n\nAll seven Table III apps: Table IV resources plus Fig 13/14 rows.",
+        "run" => "usage: pushmem run <app> [--artifacts D] [--engine E]\n\n  --artifacts D   directory of HLO golden artifacts (default: artifacts)\n  --engine E      exec|sim|auto (default: auto) — docs/execution.md\n\nExecute one app and validate bit-exactly against the XLA golden model\n(requires `make artifacts`).",
+        "validate" => "usage: pushmem validate <app>\n\nDifferential engine check (no artifacts needed): run <app> through\nboth the functional execution engine and the cycle-accurate simulator\non identical inputs and compare outputs word-for-word and reported\nstats field-by-field. On divergence, prints the first mismatching\ndrain port, output coordinate, and cycle (docs/execution.md).",
+        "report" => "usage: pushmem report [--artifacts D] [--engine E]\n\n  --artifacts D   directory of HLO golden artifacts (default: artifacts)\n  --engine E      exec|sim|auto (default: auto)\n\nAll seven Table III apps: Table IV resources plus Fig 13/14 rows.",
         "tables" => "usage: pushmem tables\n\nReproduce Tables V (Harris schedules), VI and VII (optimized vs\nsequential mappings).",
-        "tune" => "usage: pushmem tune <app> [--objective O] [--budget N] [--workers N] [--seed S] [--cache-dir D]\n\n  --objective O   cycles|energy|pes|area|pareto (default: cycles)\n  --budget N      max candidates to simulate (default: 24)\n  --workers N     evaluation threads (default: all cores)\n  --seed S        enumeration seed (default: 1)\n  --cache-dir D   content-addressed result cache (default: dse-cache;\n                  'none' disables caching)\n\nSearch the schedule space of <app>: enumerate tile/store_at/unroll/\nhost candidates, prune analytically, simulate survivors in parallel\n(each validated bit-exact against the functional reference), rank by\nthe objective, and record the winner for `serve --tuned-dir`. For\nharris the ranking is compared against the six hand-written Table V\nschedules. See docs/dse.md.",
-        "serve" => "usage: pushmem serve <app> [--addr A] [--workers N] [--stats] [--tuned-dir D]\n\n  --addr A      listen address (default: 127.0.0.1:7411)\n  --workers N   connection worker threads (default: 4; a connection\n                holds its worker until it disconnects)\n  --stats       print one [req] line per served request\n  --tuned-dir D use the tuner-recorded best schedule from D when one\n                exists (see `pushmem tune`); falls back to the\n                hand-written schedule otherwise\n\nCompile <app> and serve tiles over TCP. v1 frames target <app>; v2\nframes may name any registered app (docs/protocol.md).",
-        "serve-all" => "usage: pushmem serve-all [--addr A] [--workers N] [--apps a,b,c] [--warm] [--tuned-dir D]\n\n  --addr A      listen address (default: 127.0.0.1:7411)\n  --workers N   connection worker threads (default: 8)\n  --apps LIST   comma-separated app names to register (default: the\n                seven Table III apps; variants like harris_sch4 allowed)\n  --warm        compile every registered app up front instead of lazily\n                on first request\n  --tuned-dir D per-app tuner-recorded schedules from D override the\n                hand-written defaults (see `pushmem tune`)\n\nServe every registered app over one TCP port (v2 frames carry the app\nname; see docs/protocol.md). Designs are compiled once, cached, and\nshared across connections. Prints one [req] stats line per request.",
-        _ => "usage: pushmem <list|compile|run|report|tables|tune|serve|serve-all> [args]\nsee `pushmem list` for applications and `pushmem <cmd> --help` for flags",
+        "tune" => "usage: pushmem tune <app> [--objective O] [--budget N] [--workers N] [--seed S] [--cache-dir D] [--engine E]\n\n  --objective O   cycles|energy|pes|area|pareto (default: cycles)\n  --budget N      max candidates to score (default: 24)\n  --workers N     evaluation threads (default: all cores)\n  --seed S        enumeration seed (default: 1)\n  --cache-dir D   content-addressed result cache (default: dse-cache;\n                  'none' disables caching)\n  --engine E      exec|sim|auto (default: auto) — exec scores an order\n                  of magnitude more candidates/sec at identical scores\n\nSearch the schedule space of <app>: enumerate tile/store_at/unroll/\nhost candidates, prune analytically, score survivors in parallel\n(each validated bit-exact against the functional reference), rank by\nthe objective, and record the winner for `serve --tuned-dir`. For\nharris the ranking is compared against the six hand-written Table V\nschedules. See docs/dse.md.",
+        "serve" => "usage: pushmem serve <app> [--addr A] [--workers N] [--stats] [--tuned-dir D] [--engine E]\n\n  --addr A      listen address (default: 127.0.0.1:7411)\n  --workers N   connection worker threads (default: 4; a connection\n                holds its worker until it disconnects)\n  --stats       print one [req] line per served request\n  --tuned-dir D use the tuner-recorded best schedule from D when one\n                exists (see `pushmem tune`); falls back to the\n                hand-written schedule otherwise\n  --engine E    exec|sim|auto (default: auto) — the functional engine\n                serves requests in microseconds; sim stays available\n                as the cycle-accurate reference (docs/execution.md)\n\nCompile <app> and serve tiles over TCP. v1 frames target <app>; v2\nframes may name any registered app (docs/protocol.md).",
+        "serve-all" => "usage: pushmem serve-all [--addr A] [--workers N] [--apps a,b,c] [--warm] [--tuned-dir D] [--engine E]\n\n  --addr A      listen address (default: 127.0.0.1:7411)\n  --workers N   connection worker threads (default: 8)\n  --apps LIST   comma-separated app names to register (default: the\n                seven Table III apps; variants like harris_sch4 allowed)\n  --warm        compile every registered app up front instead of lazily\n                on first request\n  --tuned-dir D per-app tuner-recorded schedules from D override the\n                hand-written defaults (see `pushmem tune`)\n  --engine E    exec|sim|auto (default: auto)\n\nServe every registered app over one TCP port (v2 frames carry the app\nname; see docs/protocol.md). Designs are compiled once, cached, and\nshared across connections. Prints one [req] stats line per request.",
+        _ => "usage: pushmem <list|compile|run|validate|report|tables|tune|serve|serve-all> [args]\nsee `pushmem list` for applications and `pushmem <cmd> --help` for flags",
     }
+}
+
+/// Shared `--engine exec|sim|auto` flag (default: auto).
+fn engine_flag(args: &[String]) -> Result<Engine> {
+    Engine::parse(&flag_value(args, "--engine", "auto")?)
 }
 
 fn cmd_list() {
@@ -103,7 +119,7 @@ fn cmd_compile(name: &str) -> Result<()> {
     Ok(())
 }
 
-fn cmd_run(name: &str, artifacts: &str) -> Result<()> {
+fn cmd_run(name: &str, artifacts: &str, engine: Engine) -> Result<()> {
     let (program, artifact) =
         apps::by_name(name).with_context(|| format!("unknown app {name}"))?;
     let c = compile(&program)?;
@@ -113,9 +129,10 @@ fn cmd_run(name: &str, artifacts: &str) -> Result<()> {
     }
     let rt = Runtime::cpu()?;
     println!("platform          {}", rt.platform());
-    let v = validate(&c, &path, &rt)?;
+    let v = validate_with(&c, &path, &rt, engine)?;
     println!("app               {}", v.app);
-    println!("simulated         {} cycles", v.stats.cycles);
+    println!("engine            {}", v.engine.name());
+    println!("accelerated       {} cycles", v.stats.cycles);
     println!("words compared    {}", v.words_compared);
     println!(
         "CGRA vs XLA       {}",
@@ -132,7 +149,49 @@ fn cmd_run(name: &str, artifacts: &str) -> Result<()> {
     Ok(())
 }
 
-fn cmd_report(artifacts: &str) -> Result<()> {
+/// Differential engine check: functional engine vs cycle-accurate
+/// simulator, with first-divergence reporting (docs/execution.md).
+fn cmd_validate(name: &str) -> Result<()> {
+    let (program, _) = apps::by_name(name).with_context(|| format!("unknown app {name}"))?;
+    let c = compile(&program)?;
+    let cc = cross_check(&c)?;
+    println!("app               {}", cc.app);
+    println!("words compared    {}", cc.words);
+    println!("sim cycles        {}", cc.sim_cycles);
+    println!("exec cycles       {}", cc.exec_cycles);
+    let plan = c.exec_plan()?;
+    for line in plan.describe() {
+        println!("kernel            {line}");
+    }
+    let t = plan.timing();
+    println!(
+        "analytic model    {} pe_ops, {} sram reads, {} writes, occupancy {:.2} px/cycle",
+        t.stats.pe_ops, t.stats.sram_reads, t.stats.sram_writes, t.occupancy
+    );
+    match &cc.divergence {
+        None if cc.sim_stats == cc.exec_stats => {
+            println!("engines           MATCH (bit-exact output, identical stats)");
+            Ok(())
+        }
+        None => {
+            println!("engines           OUTPUT MATCH but stats diverge:");
+            println!("  sim  {:?}", cc.sim_stats);
+            println!("  exec {:?}", cc.exec_stats);
+            bail!("engine stats diverged");
+        }
+        Some(d) => {
+            println!("engines           DIVERGE — first mismatching event:");
+            println!("  port            {}", d.port);
+            println!("  coordinate      {:?}", d.coord);
+            println!("  cycle           {}", d.cycle);
+            println!("  sim value       {}", d.sim);
+            println!("  exec value      {}", d.exec);
+            bail!("engines diverged at cycle {}", d.cycle);
+        }
+    }
+}
+
+fn cmd_report(artifacts: &str, engine: Engine) -> Result<()> {
     let rt = Runtime::cpu().ok();
     println!(
         "{:<14} {:>7} {:>5} {:>5} {:>9} {:>6} {:>5} {:>7} {:>7} {:>10} {:>10} {:>9} {:>6}",
@@ -142,10 +201,11 @@ fn cmd_report(artifacts: &str) -> Result<()> {
     for name in apps::PRIMARY {
         let (program, artifact) = apps::by_name(name).unwrap();
         let path = artifact_path(artifacts, artifact);
-        let r = report_app(
+        let r = report_app_with(
             &program,
             if path.exists() { Some(path.as_path()) } else { None },
             rt.as_ref(),
+            engine,
         )
         .with_context(|| format!("reporting {name}"))?;
         println!(
@@ -184,7 +244,7 @@ fn cmd_tables() -> Result<()> {
         ("sch6: last on host", "harris_sch6"),
     ] {
         let (program, _) = apps::by_name(name).unwrap();
-        let r = report_app(&program, None, None)?;
+        let r = pushmem::coordinator::report_app(&program, None, None)?;
         println!(
             "{:<22} {:>8.2} {:>6} {:>6} {:>9}",
             label, r.pixels_per_cycle, r.pes, r.mems, r.completion
@@ -228,18 +288,21 @@ fn cmd_tune(name: &str, args: &[String]) -> Result<()> {
     let cache_arg = flag_value(args, "--cache-dir", "dse-cache")?;
     let cache_dir =
         if cache_arg == "none" { None } else { Some(PathBuf::from(&cache_arg)) };
+    let engine = engine_flag(args)?;
     let cfg = dse::TuneConfig {
         objective,
         budget,
         workers,
         seed,
         cache_dir,
+        engine,
         space: Default::default(),
     };
 
     eprintln!(
-        "tuning {name}: objective {}, budget {budget}, workers {workers}, seed {seed}",
-        objective.name()
+        "tuning {name}: objective {}, budget {budget}, workers {workers}, seed {seed}, engine {}",
+        objective.name(),
+        engine.name()
     );
     let t0 = std::time::Instant::now();
     let report = dse::tune_app(name, &cfg)?;
@@ -314,7 +377,11 @@ fn cmd_tune(name: &str, args: &[String]) -> Result<()> {
             match b.eval {
                 Ok(e) => {
                     let cpp = dse::cycles_per_pixel(e.cycles, &[b.tile, b.tile]);
-                    if hand_best.map_or(true, |(c, _)| cpp < c) {
+                    let better = match hand_best {
+                        Some((c, _)) => cpp < c,
+                        None => true,
+                    };
+                    if better {
                         hand_best = Some((cpp, b.label));
                     }
                     println!(
@@ -356,11 +423,12 @@ fn cmd_serve(name: &str, args: &[String]) -> Result<()> {
     let workers = workers_flag(args, "4")?;
     let stats = args.iter().any(|a| a == "--stats");
     let tuned_dir = flag_value(args, "--tuned-dir", "")?;
+    let engine = engine_flag(args)?;
     let (program, _) =
         apps::by_name(name).with_context(|| format!("unknown app {name}"))?;
     let dir = (!tuned_dir.is_empty()).then(|| std::path::Path::new(&tuned_dir));
     let c = pushmem::coordinator::compile_maybe_tuned(&program, name, dir)?;
-    serve::serve(name, c, &addr, workers, stats)
+    serve::serve(name, c, &addr, workers, stats, engine)
 }
 
 fn cmd_serve_all(args: &[String]) -> Result<()> {
@@ -395,7 +463,7 @@ fn cmd_serve_all(args: &[String]) -> Result<()> {
             names.join(",")
         );
     }
-    serve::serve_all(registry, &addr, workers, true)
+    serve::serve_all(registry, &addr, workers, true, engine_flag(args)?)
 }
 
 fn main() -> Result<()> {
@@ -418,9 +486,20 @@ fn main() -> Result<()> {
         }
         Some("run") => {
             let name = args.get(1).context("usage: pushmem run <app>")?;
-            cmd_run(name, &flag_value(&args, "--artifacts", "artifacts")?)
+            cmd_run(
+                name,
+                &flag_value(&args, "--artifacts", "artifacts")?,
+                engine_flag(&args)?,
+            )
         }
-        Some("report") => cmd_report(&flag_value(&args, "--artifacts", "artifacts")?),
+        Some("validate") => {
+            let name = args.get(1).context("usage: pushmem validate <app>")?;
+            cmd_validate(name)
+        }
+        Some("report") => cmd_report(
+            &flag_value(&args, "--artifacts", "artifacts")?,
+            engine_flag(&args)?,
+        ),
         Some("tables") => cmd_tables(),
         Some("tune") => {
             let name = args.get(1).context("usage: pushmem tune <app>")?;

@@ -141,6 +141,20 @@ impl BoxSet {
     pub fn dim_index(&self, name: &str) -> Option<usize> {
         self.dims.iter().position(|d| d.name == name)
     }
+
+    /// Layout equality: same rank, mins, and extents — dim names are
+    /// irrelevant to layout. The one rule every flat-addressing
+    /// consumer (`SimRun`, `ExecRun`, `ExecPlan`) checks request
+    /// tensors and port domains by, defined once so the engines can
+    /// never drift on which boxes they accept.
+    pub fn same_layout(&self, other: &BoxSet) -> bool {
+        self.rank() == other.rank()
+            && self
+                .dims
+                .iter()
+                .zip(&other.dims)
+                .all(|(a, b)| a.min == b.min && a.extent == b.extent)
+    }
 }
 
 /// Lexicographic point iterator over a [`BoxSet`].

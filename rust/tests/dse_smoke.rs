@@ -8,6 +8,7 @@ use std::path::PathBuf;
 
 use pushmem::apps::{gaussian, harris};
 use pushmem::dse::{self, cache, Objective, SpaceConfig, TuneConfig};
+use pushmem::exec::Engine;
 
 /// A tiny, fast search config: base tile only, unroll up to 2, small
 /// simulation budget.
@@ -18,6 +19,7 @@ fn tiny_cfg(budget: usize, cache_dir: Option<PathBuf>) -> TuneConfig {
         workers: 2,
         seed: 3,
         cache_dir,
+        engine: Engine::Auto,
         space: SpaceConfig {
             tile_multipliers: vec![1],
             unroll_factors: vec![1, 2],

@@ -1,0 +1,124 @@
+//! Differential property tests between the two execution engines
+//! (docs/execution.md): every design must produce **bit-exact
+//! outputs** and report **identical total-cycle counts** (in fact,
+//! identical full `SimStats`) through the functional engine
+//! ([`pushmem::exec::ExecRun`]) and the cycle-accurate simulator
+//! ([`pushmem::cgra::SimRun`]).
+//!
+//! Coverage comes from two directions: every `apps::PRIMARY` entry at
+//! paper scale, and randomized schedules drawn (seeded, deterministic)
+//! from the same `dse::space` enumeration the tuner searches — so the
+//! engines are proven equivalent over the exact space the tuner
+//! explores with the functional engine by default.
+
+use pushmem::apps;
+use pushmem::cgra::{SimResult, SimRun};
+use pushmem::coordinator::{compile, cross_check, gen_inputs, Compiled};
+use pushmem::dse::{self, SpaceConfig};
+use pushmem::exec::ExecRun;
+
+/// Run one compiled design through both engines on the deterministic
+/// input stream.
+fn both(c: &Compiled) -> (SimResult, SimResult) {
+    let ins = gen_inputs(&c.lp);
+    let sim = SimRun::new(c.plan().expect("sim plan"))
+        .run(&ins)
+        .expect("sim run");
+    let ex = ExecRun::new(c.exec_plan().expect("exec plan"))
+        .run(&ins)
+        .expect("exec run");
+    (sim, ex)
+}
+
+fn assert_engines_agree(name: &str, c: &Compiled) {
+    let (sim, ex) = both(c);
+    assert_eq!(
+        sim.output.shape, ex.output.shape,
+        "{name}: output boxes differ"
+    );
+    assert_eq!(sim.output.data, ex.output.data, "{name}: outputs differ");
+    assert_eq!(
+        sim.stats.cycles, ex.stats.cycles,
+        "{name}: reported cycle counts differ"
+    );
+    assert_eq!(sim.stats, ex.stats, "{name}: stats differ");
+}
+
+/// Every primary app at paper scale: bit-exact outputs, identical
+/// cycle counts, identical full stats.
+#[test]
+fn primary_apps_agree_bit_exact() {
+    for name in apps::PRIMARY {
+        let (p, _) = apps::by_name(name).unwrap();
+        let c = compile(&p).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert_engines_agree(name, &c);
+    }
+}
+
+/// The harris schedule variants exercise unrolling, bigger tiles, and
+/// host offload — each must agree too.
+#[test]
+fn harris_schedule_variants_agree() {
+    for name in ["harris_sch1", "harris_sch2", "harris_sch4", "harris_sch5", "harris_sch6"] {
+        let (p, _) = apps::by_name(name).unwrap();
+        let c = compile(&p).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert_engines_agree(name, &c);
+    }
+}
+
+/// Randomized schedules from the tuner's own (seeded) enumeration:
+/// whatever the space produces and the compiler accepts, the engines
+/// must agree on. Candidates the compiler rejects are skipped — the
+/// tuner skips them the same way — but enough must compile for the
+/// property to have teeth.
+#[test]
+fn randomized_tuner_schedules_agree() {
+    let programs = [
+        (apps::gaussian::build(10), "g10"),
+        (apps::harris::build(8, apps::harris::Schedule::NoRecompute), "h8"),
+        (apps::unsharp::build(10), "u10"),
+    ];
+    for (base, key) in programs {
+        let cfg = SpaceConfig {
+            tile_multipliers: vec![1, 2],
+            unroll_factors: vec![1, 2],
+            explore_host_offload: true,
+            max_memory_subsets: 8,
+            seed: 11,
+        };
+        let cands = dse::enumerate(&base, key, &cfg);
+        assert!(!cands.is_empty(), "{key}: empty candidate space");
+        let mut checked = 0;
+        for cand in cands.iter().take(12) {
+            let mut p = base.clone();
+            p.schedule = cand.schedule.clone();
+            let Ok(c) = compile(&p) else { continue };
+            assert_engines_agree(&format!("{key}/{}", cand.encoded), &c);
+            checked += 1;
+        }
+        assert!(checked >= 4, "{key}: only {checked} candidates compiled");
+    }
+}
+
+/// The coordinator's cross-check (what `pushmem validate` runs) must
+/// agree with the raw differential run and report no divergence.
+#[test]
+fn cross_check_reports_match_for_small_apps() {
+    for p in [
+        apps::gaussian::build(14),
+        apps::upsample::build(12),
+        apps::mobilenet::build(apps::mobilenet::Size::small()),
+    ] {
+        let c = compile(&p).unwrap_or_else(|e| panic!("{}: {e:#}", p.name));
+        let cc = cross_check(&c).unwrap_or_else(|e| panic!("{}: {e:#}", p.name));
+        assert!(
+            cc.matched(),
+            "{}: divergence {:?} (sim {:?} vs exec {:?})",
+            p.name,
+            cc.divergence,
+            cc.sim_stats,
+            cc.exec_stats
+        );
+        assert_eq!(cc.sim_cycles, cc.exec_cycles);
+    }
+}
