@@ -2,14 +2,17 @@
 # validation oracle + CPU baseline — python is never on the rust
 # request path; see DESIGN.md §1). `make verify` is the tier-1 check.
 # `make tune-smoke` is the CI smoke run of the DSE tuner (docs/dse.md).
+# `make validate-all` cross-checks the functional engine against the
+# cycle-accurate simulator for every primary app (docs/execution.md).
 # `make sim-bench` is the CI smoke run of the serving-throughput bench
 # (docs/simulator.md, docs/execution.md): it compares the functional
 # engine against the cycle-accurate simulator and asserts bit-exactness
 # along the way. `make bench-json` refreshes the machine-readable perf
 # trajectory (BENCH_serve.json / BENCH_dse.json) in quick mode — the
-# CI step future PRs diff req/s and candidates/sec against.
+# CI step future PRs diff req/s and candidates/sec against; it now
+# includes the large-image tiled serving numbers (docs/tiling.md).
 
-.PHONY: artifacts verify tune-smoke sim-bench bench-json clean
+.PHONY: artifacts verify tune-smoke validate-all sim-bench bench-json clean
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -19,6 +22,9 @@ verify:
 
 tune-smoke:
 	cargo run --release -- tune gaussian --budget 8 --workers 2
+
+validate-all:
+	cargo run --release -- validate --all
 
 sim-bench:
 	SIM_BENCH_QUICK=1 cargo bench --bench serve_throughput

@@ -1,11 +1,14 @@
 """Dependency-free TCP client for the pushmem tile server.
 
-Speaks both request generations of the framed protocol specified in
-docs/protocol.md (constants mirrored from
+Speaks all three request generations of the framed protocol specified
+in docs/protocol.md (constants mirrored from
 rust/src/coordinator/protocol.rs):
 
 * v1 — implicit app, for ``pushmem serve <app>`` endpoints
 * v2 — named app, for ``pushmem serve-all`` endpoints
+* v3 — named (or default) app **plus a requested output extent**: the
+  server tiles a whole image of any size onto its fixed compiled
+  design and answers the stitched result (docs/tiling.md)
 
 Only the standard library (socket + struct) is used, so this module
 imports cleanly without jax/numpy — it is the deploy-side counterpart
@@ -16,6 +19,9 @@ Usage::
     from pushmem_client import PushmemClient
     with PushmemClient(port=7411) as c:
         words, cycles, micros = c.request([tile_words], app="gaussian")
+        # whole image: inputs sized to the halo-grown image boxes
+        words, cycles, micros = c.request(
+            [image_words], app="gaussian", extent=(250, 250))
 """
 
 from __future__ import annotations
@@ -25,6 +31,7 @@ import struct
 
 MAGIC = 0x50554222
 VERSION2 = 0xFFFF0002
+VERSION3 = 0xFFFF0003
 
 STATUS_OK = 0
 STATUS_UNKNOWN_APP = 1
@@ -35,6 +42,7 @@ MAX_INPUTS = 64
 MAX_APP_NAME = 64
 MAX_WORDS = 1 << 24
 MAX_FRAME_WORDS = 1 << 24  # aggregate across all inputs in one frame
+MAX_RANK = 8  # v3 output extent rank cap
 
 _STATUS_NAMES = {
     STATUS_OK: "ok",
@@ -49,12 +57,29 @@ class ProtocolError(Exception):
 
 
 class ServerError(Exception):
-    """The server answered with a non-OK status frame."""
+    """The server answered with a non-OK status frame.
 
-    def __init__(self, status: int):
+    ``detail`` carries the server's packed diagnostic when present —
+    e.g. the expected vs received word count per input on a
+    ``STATUS_BAD_REQUEST`` — and is empty against pre-diagnostic
+    servers.
+    """
+
+    def __init__(self, status: int, detail: str = ""):
         self.status = status
+        self.detail = detail
         name = _STATUS_NAMES.get(status, "unknown status")
-        super().__init__(f"server error status {status} ({name})")
+        msg = f"server error status {status} ({name})"
+        if detail:
+            msg += f": {detail}"
+        super().__init__(msg)
+
+
+def decode_detail(words) -> str:
+    """Unpack a non-OK response's diagnostic payload: 4 little-endian
+    bytes per word, trailing zero padding stripped (docs/protocol.md)."""
+    raw = b"".join(struct.pack("<i", w) for w in words).rstrip(b"\x00")
+    return raw.decode("utf-8", errors="replace")
 
 
 def _pack_inputs(inputs) -> bytes:
@@ -85,6 +110,38 @@ def encode_request_v2(app: str, inputs) -> bytes:
     return (
         struct.pack("<III", MAGIC, VERSION2, len(name))
         + name
+        + _pack_inputs(inputs)
+    )
+
+
+def encode_request_v3(app, extent, inputs) -> bytes:
+    """``magic | VERSION3 | name_len | name | rank | extent[rank] |
+    n_inputs | (word_count | words)*``.
+
+    ``app=None`` (a zero-length name) targets the server's default
+    app; ``extent`` is the requested whole-image output extents,
+    outermost dim first. Inputs must cover the halo-grown whole-image
+    boxes the server's tile planner derives (docs/tiling.md); a
+    mismatch earns a ``STATUS_BAD_REQUEST`` whose detail quotes the
+    expected word count per input.
+    """
+    name = (app or "").encode("utf-8")
+    if len(name) > MAX_APP_NAME:
+        raise ProtocolError(f"app name {len(name)} bytes exceeds cap {MAX_APP_NAME}")
+    extent = list(extent)
+    if not 1 <= len(extent) <= MAX_RANK:
+        raise ProtocolError(f"extent rank {len(extent)} outside 1..{MAX_RANK}")
+    words = 1
+    for e in extent:
+        if e < 1:
+            raise ProtocolError(f"extent dim {e} must be >= 1")
+        words *= e
+        if words > MAX_WORDS:
+            raise ProtocolError(f"extent words {words} exceeds cap {MAX_WORDS}")
+    return (
+        struct.pack("<III", MAGIC, VERSION3, len(name))
+        + name
+        + struct.pack(f"<I{len(extent)}I", len(extent), *extent)
         + _pack_inputs(inputs)
     )
 
@@ -125,15 +182,24 @@ class PushmemClient:
             remaining -= len(chunk)
         return b"".join(chunks)
 
-    def request(self, inputs, app: str | None = None):
+    def request(self, inputs, app: str | None = None, extent=None):
         """Send one request; returns ``(words, cycles, micros)``.
 
         ``inputs`` is a list of row-major i32 word lists, one per
         declared input of the app, in declared order. ``app`` selects
         v2 framing (required against a ``serve-all`` endpoint);
         ``None`` sends a v1 frame for the server's default app.
+        ``extent`` selects v3 framing (with or without ``app``): the
+        inputs are whole images over the halo-grown boxes for that
+        output extent, and the response is the stitched whole-image
+        output (docs/tiling.md).
         """
-        frame = encode_request_v1(inputs) if app is None else encode_request_v2(app, inputs)
+        if extent is not None:
+            frame = encode_request_v3(app, extent, inputs)
+        elif app is None:
+            frame = encode_request_v1(inputs)
+        else:
+            frame = encode_request_v2(app, inputs)
         self.sock.sendall(frame)
         header = self._recv_exact(12)
         magic, status, word_count = struct.unpack("<III", header)
@@ -144,7 +210,7 @@ class PushmemClient:
         body = self._recv_exact(4 * word_count + 16)
         _, words, cycles, micros, _ = decode_response(header + body)
         if status != STATUS_OK:
-            raise ServerError(status)
+            raise ServerError(status, decode_detail(words))
         return words, cycles, micros
 
     def close(self) -> None:

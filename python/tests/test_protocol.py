@@ -15,11 +15,17 @@ from pushmem_client import (  # noqa: E402
     MAGIC,
     MAX_APP_NAME,
     MAX_INPUTS,
+    MAX_RANK,
+    MAX_WORDS,
     VERSION2,
+    VERSION3,
     ProtocolError,
+    ServerError,
+    decode_detail,
     decode_response,
     encode_request_v1,
     encode_request_v2,
+    encode_request_v3,
 )
 
 
@@ -27,7 +33,10 @@ def test_constants_match_spec():
     # docs/protocol.md — cross-referenced with coordinator/protocol.rs.
     assert MAGIC == 0x50554222
     assert VERSION2 == 0xFFFF0002
+    assert VERSION3 == 0xFFFF0003
     assert VERSION2 > MAX_INPUTS  # the version-detection invariant
+    assert VERSION3 > MAX_INPUTS
+    assert MAX_RANK == 8
 
 
 def test_v1_frame_golden_bytes():
@@ -63,6 +72,65 @@ def test_v2_multiple_inputs():
         + struct.pack("<I2i", 2, 8, 9)
     )
     assert frame == expect
+
+
+def test_v3_frame_golden_bytes():
+    # The worked example from docs/protocol.md: gaussian at 250x131.
+    frame = encode_request_v3("gaussian", (250, 131), [[9, -8, 7]])
+    expect = (
+        struct.pack("<III", MAGIC, VERSION3, 8)
+        + b"gaussian"
+        + struct.pack("<III", 2, 250, 131)
+        + struct.pack("<II", 1, 3)
+        + struct.pack("<3i", 9, -8, 7)
+    )
+    assert frame == expect
+    assert frame.hex() == (
+        "22425550" "0300ffff" "08000000"
+        + b"gaussian".hex()
+        + "02000000" "fa000000" "83000000"
+        + "01000000" "03000000" "09000000" "f8ffffff" "07000000"
+    )
+
+
+def test_v3_default_app_zero_length_name():
+    frame = encode_request_v3(None, (33, 20), [[5]])
+    expect = (
+        struct.pack("<III", MAGIC, VERSION3, 0)
+        + struct.pack("<III", 2, 33, 20)
+        + struct.pack("<II", 1, 1)
+        + struct.pack("<i", 5)
+    )
+    assert frame == expect
+
+
+def test_v3_extent_caps():
+    with pytest.raises(ProtocolError, match="rank"):
+        encode_request_v3("x", [], [[0]])
+    with pytest.raises(ProtocolError, match="rank"):
+        encode_request_v3("x", [1] * (MAX_RANK + 1), [[0]])
+    with pytest.raises(ProtocolError, match="must be >= 1"):
+        encode_request_v3("x", (4, 0), [[0]])
+    with pytest.raises(ProtocolError, match="extent words"):
+        encode_request_v3("x", (1 << 13, 1 << 13), [[0]])
+    assert (1 << 13) * (1 << 13) > MAX_WORDS  # the case above overflows
+
+
+def test_detail_decode():
+    msg = "input gradient: got 100 words, expected 4096"
+    packed = msg.encode("utf-8")
+    packed += b"\x00" * (-len(packed) % 4)
+    words = list(struct.unpack(f"<{len(packed) // 4}i", packed))
+    assert decode_detail(words) == msg
+    assert decode_detail([]) == ""
+
+
+def test_server_error_carries_detail():
+    err = ServerError(STATUS := 2, "input x: got 3 words, expected 256")
+    assert err.status == STATUS
+    assert "expected 256" in str(err)
+    # Pre-diagnostic servers: empty detail keeps the legacy message.
+    assert str(ServerError(2)) == "server error status 2 (bad request)"
 
 
 def test_response_round_trip():

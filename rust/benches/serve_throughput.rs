@@ -30,8 +30,9 @@ use std::time::Instant;
 use pushmem::cgra::{simulate, SimRun};
 use pushmem::coordinator::serve::{self, ServeConfig};
 use pushmem::coordinator::{gen_inputs, CompiledRegistry};
-use pushmem::exec::ExecRun;
+use pushmem::exec::{Engine, ExecRun};
 use pushmem::tensor::Tensor;
+use pushmem::tile::run_tiled;
 
 const APP: &str = "gaussian";
 const WORKERS: usize = 8;
@@ -196,6 +197,57 @@ fn main() {
         c.graph.completion
     );
 
+    // --- §3 Large-image tiled serving (docs/tiling.md) --------------
+    // One whole-image request is decomposed onto the fixed design by
+    // the tile planner: measure tiles/sec and whole-image req/s, both
+    // in-process (run_tiled with a local worker fan-out) and over the
+    // wire (v3 frames against the running server, whose pool recruits
+    // idle workers into the batch).
+    let extent: Vec<i64> = if quick { vec![150, 150] } else { vec![250, 250] };
+    let plan = c.tile_plan(&extent).expect("tile plan");
+    let tiles_per_image = plan.tile_count();
+    let mut image_inputs = BTreeMap::new();
+    let mut image_tensors: Vec<Tensor> = Vec::new();
+    for (name, b) in plan.input_names.iter().zip(&plan.input_boxes) {
+        let t = Tensor::from_fn(b.clone(), |p| {
+            let mut h = 41i64;
+            for &v in p {
+                h = h.wrapping_mul(31).wrapping_add(v + 7);
+            }
+            (h.rem_euclid(253)) as i32
+        });
+        image_inputs.insert(name.clone(), t.clone());
+        image_tensors.push(t);
+    }
+    let image_reps: usize = if quick { 3 } else { 10 };
+
+    let t0 = Instant::now();
+    for _ in 0..image_reps {
+        let res = run_tiled(&c, Engine::Auto, &extent, image_inputs.clone(), WORKERS)
+            .expect("tiled run");
+        assert_eq!(res.tiles, tiles_per_image);
+    }
+    let direct_s = t0.elapsed().as_secs_f64();
+    let tiles_per_s = (image_reps * tiles_per_image) as f64 / direct_s;
+    let image_rps = image_reps as f64 / direct_s;
+
+    let refs: Vec<&Tensor> = image_tensors.iter().collect();
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let t0 = Instant::now();
+    for _ in 0..image_reps {
+        let (words, _, _) =
+            serve::request_extent(&mut stream, Some(APP), &extent, &refs).unwrap();
+        assert_eq!(words.len() as i64, extent.iter().product::<i64>());
+    }
+    let tcp_image_rps = image_reps as f64 / t0.elapsed().as_secs_f64();
+
+    println!(
+        "\ntiled {APP} {}x{}: {tiles_per_image} tiles/image, \
+         {tiles_per_s:.1} tiles/s, {image_rps:.2} image/s direct, \
+         {tcp_image_rps:.2} image/s over TCP",
+        extent[0], extent[1]
+    );
+
     harness::write_bench_json(
         "BENCH_serve.json",
         &harness::Json::obj()
@@ -206,6 +258,24 @@ fn main() {
             .num("sim_fresh_req_per_s", fresh_rps)
             .num("sim_cached_req_per_s", cached_rps)
             .num("tcp_best_req_per_s", tcp_best_rps)
+            .raw(
+                "tiled",
+                &harness::Json::obj()
+                    .str_("app", APP)
+                    .str_(
+                        "extent",
+                        &extent
+                            .iter()
+                            .map(|e| e.to_string())
+                            .collect::<Vec<_>>()
+                            .join("x"),
+                    )
+                    .int("tiles_per_image", tiles_per_image as i64)
+                    .num("tiles_per_s", tiles_per_s)
+                    .num("image_req_per_s", image_rps)
+                    .num("tcp_image_req_per_s", tcp_image_rps)
+                    .end(),
+            )
             .end(),
     );
 }

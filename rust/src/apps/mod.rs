@@ -93,6 +93,15 @@ pub fn is_registered(name: &str) -> bool {
     NAMES.contains(&name) || name == "harris_sch3"
 }
 
+/// The compiled output-tile extents of a registered app, straight
+/// from its hand-written schedule — no compile. This is the accessor
+/// CLI, docs, and benches use instead of hard-coding the per-app
+/// 62/60/64 magic numbers; requests at any *other* extent go through
+/// the tile planner ([`crate::tile`], docs/tiling.md).
+pub fn tile_extent(name: &str) -> Option<Vec<i64>> {
+    by_name(name).map(|(p, _)| p.schedule.tile)
+}
+
 /// CLI names of everything in [`by_name`].
 pub const NAMES: &[&str] = &[
     "gaussian",
@@ -211,6 +220,24 @@ pub fn all_small() -> Vec<Program> {
         resnet::build(resnet::Size::small()),
         mobilenet::build(mobilenet::Size::small()),
     ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_extent_matches_schedules_without_compiling() {
+        assert_eq!(tile_extent("gaussian"), Some(vec![62, 62]));
+        assert_eq!(tile_extent("harris"), Some(vec![60, 60]));
+        assert_eq!(tile_extent("upsample"), Some(vec![64, 2, 64, 2]));
+        assert_eq!(tile_extent("no_such_app"), None);
+        // Every primary app reports a positive-extent tile.
+        for name in PRIMARY {
+            let t = tile_extent(name).unwrap_or_else(|| panic!("{name}"));
+            assert!(!t.is_empty() && t.iter().all(|&e| e > 0), "{name}: {t:?}");
+        }
+    }
 }
 
 #[cfg(test)]

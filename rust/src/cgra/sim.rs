@@ -51,6 +51,22 @@ pub struct SimStats {
     pub words_out: u64,
 }
 
+/// Stats accumulate across runs: a multi-tile request (the tile
+/// planner, [`crate::tile`]) reports the field-wise sum of its
+/// per-tile runs — `cycles` is then the sequential-replay total, the
+/// number the one-accelerator deployment of Fig 12 would spend.
+impl std::ops::AddAssign for SimStats {
+    fn add_assign(&mut self, o: SimStats) {
+        self.cycles += o.cycles;
+        self.sram_reads += o.sram_reads;
+        self.sram_writes += o.sram_writes;
+        self.pe_ops += o.pe_ops;
+        self.sr_shifts += o.sr_shifts;
+        self.words_in += o.words_in;
+        self.words_out += o.words_out;
+    }
+}
+
 pub struct SimResult {
     /// Collected output over the output buffer's data box.
     pub output: Tensor,

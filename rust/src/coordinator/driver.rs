@@ -14,6 +14,7 @@ use crate::halide::{lower, LoweredPipeline, Program};
 use crate::mapping::{map_design, MappedDesign};
 use crate::sched::{self, PipelineSchedule};
 use crate::tensor::Tensor;
+use crate::tile::TilePlan;
 use crate::ub::UbGraph;
 
 /// Everything the compiler produced for one program.
@@ -39,11 +40,52 @@ pub struct Compiled {
     /// design as needing the cycle-accurate fallback; `Auto` engine
     /// selection consults it once, not per request.
     exec_plan: OnceLock<Result<Arc<ExecPlan>, String>>,
+    /// Tiling plans by requested output extent (docs/tiling.md):
+    /// planning an extent costs a handful of bounds-inference runs,
+    /// so repeated whole-image requests at the same size — the
+    /// production shape — reuse one plan. Only successes are cached,
+    /// and the cache is **bounded** ([`TILE_PLAN_CACHE_CAP`]): a
+    /// client cycling through distinct extents evicts old plans
+    /// instead of growing server memory without limit.
+    tile_plans: Mutex<BTreeMap<Vec<i64>, Arc<TilePlan>>>,
 }
+
+/// Cap on cached tiling plans per design. Production traffic uses a
+/// handful of image sizes; anything past the cap evicts the
+/// smallest-key entry (cheap, deterministic — a re-planned extent
+/// costs only bounds inference, while an unbounded map is a remote
+/// memory-growth vector).
+const TILE_PLAN_CACHE_CAP: usize = 16;
 
 impl Compiled {
     pub fn fits(&self) -> bool {
         self.placement.is_some()
+    }
+
+    /// The design's compiled output-tile extents — the fixed box one
+    /// accelerator pass produces. Requests at any other extent go
+    /// through [`Compiled::tile_plan`].
+    pub fn tile_extent(&self) -> &[i64] {
+        &self.lp.tile
+    }
+
+    /// The tiling plan decomposing `extent` onto this fixed design,
+    /// built on first use and cached per extent (docs/tiling.md).
+    /// Racing first calls may build twice; the first result wins the
+    /// cache and both are valid. The cache is bounded
+    /// ([`TILE_PLAN_CACHE_CAP`]) so hostile extent-cycling cannot
+    /// grow server memory.
+    pub fn tile_plan(&self, extent: &[i64]) -> Result<Arc<TilePlan>> {
+        if let Some(p) = self.tile_plans.lock().unwrap().get(extent) {
+            return Ok(Arc::clone(p));
+        }
+        let built = Arc::new(TilePlan::build(self, extent)?);
+        let mut plans = self.tile_plans.lock().unwrap();
+        while plans.len() >= TILE_PLAN_CACHE_CAP && !plans.contains_key(extent) {
+            let first = plans.keys().next().cloned().expect("non-empty map");
+            plans.remove(&first);
+        }
+        Ok(Arc::clone(plans.entry(extent.to_vec()).or_insert(built)))
     }
 
     /// The design's [`SimPlan`], built once on first use and shared by
@@ -111,6 +153,7 @@ pub fn compile(program: &Program) -> Result<Compiled> {
         routing,
         sim_plan: OnceLock::new(),
         exec_plan: OnceLock::new(),
+        tile_plans: Mutex::new(BTreeMap::new()),
     })
 }
 
@@ -456,6 +499,35 @@ mod tests {
         let s = c.runner(Engine::Sim).unwrap().run(&ins).unwrap();
         assert_eq!(e.output.data, s.output.data);
         assert_eq!(e.stats, s.stats);
+    }
+
+    #[test]
+    fn tile_plans_are_cached_per_extent() {
+        let c = compile(&apps::gaussian::build(14)).unwrap();
+        assert_eq!(c.tile_extent(), &[14, 14]);
+        let a = c.tile_plan(&[33, 20]).unwrap();
+        let b = c.tile_plan(&[33, 20]).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same extent must share one plan");
+        let other = c.tile_plan(&[20, 33]).unwrap();
+        assert!(!Arc::ptr_eq(&a, &other));
+        // Failures are not cached — and keep failing.
+        assert!(c.tile_plan(&[33]).is_err());
+        assert!(c.tile_plan(&[33]).is_err());
+    }
+
+    #[test]
+    fn tile_plan_cache_is_bounded() {
+        let c = compile(&apps::gaussian::build(14)).unwrap();
+        for k in 0..(2 * TILE_PLAN_CACHE_CAP as i64) {
+            c.tile_plan(&[14 + k, 14]).unwrap();
+        }
+        let cached = c.tile_plans.lock().unwrap().len();
+        assert!(cached <= TILE_PLAN_CACHE_CAP, "{cached} plans cached");
+        // A capped cache still serves: the newest extent hits.
+        let last = 14 + 2 * TILE_PLAN_CACHE_CAP as i64 - 1;
+        let a = c.tile_plan(&[last, 14]).unwrap();
+        let b = c.tile_plan(&[last, 14]).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! source of truth (the Python client mirrors them in
 //! python/pushmem_client.py).
 //!
-//! Two request generations share one port:
+//! Three request generations share one port:
 //!
 //! * **v1** (the original `pushmem serve <app>` shape): the word after
 //!   the magic is the input count, and the target app is implicit (the
@@ -13,8 +13,18 @@
 //!   a value no valid v1 input count can reach, since v1 counts are
 //!   capped at [`MAX_INPUTS`] — followed by an app-name field, so one
 //!   endpoint serves every registered app.
+//! * **v3**: the [`VERSION3`] sentinel, then an app-name field (length
+//!   0 targets the default app) and a **requested output extent**
+//!   (rank + per-dim extents), so a request may carry a whole image of
+//!   any size: the server decomposes it onto the fixed compiled design
+//!   through the tile planner ([`crate::tile`], docs/tiling.md) and
+//!   answers the stitched output.
 //!
-//! Responses are identical for both generations.
+//! Responses are identical for all generations. Non-OK responses may
+//! carry a UTF-8 **diagnostic** packed into the payload words
+//! ([`detail_words`] / [`detail_from_words`]) — e.g. the expected vs
+//! received word count per input on `STATUS_BAD_REQUEST` — which
+//! pre-diagnostic clients simply ignore.
 //!
 //! All decode functions are *total* over `&[u8]`: on a short buffer
 //! they return [`FrameError::Truncated`] carrying the exact number of
@@ -31,6 +41,10 @@ pub const MAGIC: u32 = 0x5055_4222;
 /// Deliberately far above [`MAX_INPUTS`] so the two generations can
 /// never be confused.
 pub const VERSION2: u32 = 0xFFFF_0002;
+
+/// v3 discriminator (arbitrary-extent requests), same collision rule
+/// as [`VERSION2`].
+pub const VERSION3: u32 = 0xFFFF_0003;
 
 /// Request handled; payload words follow.
 pub const STATUS_OK: u32 = 0;
@@ -53,13 +67,23 @@ pub const MAX_WORDS: u32 = 1 << 24;
 /// (≈ 4 GiB) and OOM a worker before the app's declared boxes ever
 /// reject it.
 pub const MAX_FRAME_WORDS: u32 = 1 << 24;
+/// Cap on a v3 request's output rank (the registered apps top out at
+/// rank 4).
+pub const MAX_RANK: u32 = 8;
+/// Cap on non-OK responses' packed diagnostic, so the detail channel
+/// can never amplify (128 words = 512 bytes of UTF-8).
+pub const MAX_DETAIL_BYTES: usize = 512;
 
 /// A decoded request frame. `app` is `None` for v1 frames (implicit
-/// default app) and `Some(name)` for v2. Inputs are row-major word
-/// vectors in the app's declared input order.
+/// default app) and `Some(name)` for v2/v3; `extent` is `Some` only
+/// for v3 frames (requested whole-image output extents, outermost
+/// dim first). Inputs are row-major word vectors in the app's
+/// declared input order — over the declared per-tile boxes for v1/v2,
+/// over the whole-image boxes (halo included) for v3.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Request {
     pub app: Option<String>,
+    pub extent: Option<Vec<i64>>,
     pub inputs: Vec<Vec<i32>>,
 }
 
@@ -81,6 +105,9 @@ pub enum FrameError {
     BadMagic(u32),
     TooLarge { what: &'static str, got: u32, max: u32 },
     BadAppName,
+    /// A v3 extent field is structurally invalid (zero rank or a zero
+    /// per-dim extent) — size overruns are [`FrameError::TooLarge`].
+    BadExtent { what: &'static str, got: u32 },
 }
 
 impl fmt::Display for FrameError {
@@ -94,6 +121,9 @@ impl fmt::Display for FrameError {
                 write!(f, "{what} {got} exceeds protocol cap {max}")
             }
             FrameError::BadAppName => write!(f, "app name is not valid UTF-8"),
+            FrameError::BadExtent { what, got } => {
+                write!(f, "output extent {what} {got} is invalid (must be >= 1)")
+            }
         }
     }
 }
@@ -140,6 +170,61 @@ impl<'a> Cur<'a> {
     }
 }
 
+/// Skip a v2/v3 app-name field (`name_len | bytes`), enforcing the
+/// length cap — the non-allocating half shared by [`read_name`] and
+/// the frame-length pre-scan, so the cap can never diverge between
+/// them. Returns the name bytes.
+fn skip_name<'a>(c: &mut Cur<'a>) -> Result<&'a [u8], FrameError> {
+    let name_len = c.u32()?;
+    if name_len > MAX_APP_NAME {
+        return Err(FrameError::TooLarge {
+            what: "app name length",
+            got: name_len,
+            max: MAX_APP_NAME,
+        });
+    }
+    c.take(name_len as usize)
+}
+
+/// Read a v2/v3 app-name field, enforcing the length cap and UTF-8.
+fn read_name(c: &mut Cur<'_>) -> Result<String, FrameError> {
+    Ok(std::str::from_utf8(skip_name(c)?)
+        .map_err(|_| FrameError::BadAppName)?
+        .to_string())
+}
+
+/// Read a v3 extent field (`rank | extent[rank]`). The product of the
+/// extents is the response's output word count, so it is capped at
+/// [`MAX_WORDS`] from the header alone — a hostile extent cannot make
+/// the server plan (or allocate) a gigaword image.
+fn read_extent(c: &mut Cur<'_>) -> Result<Vec<i64>, FrameError> {
+    let rank = c.u32()?;
+    if rank == 0 {
+        return Err(FrameError::BadExtent { what: "rank", got: 0 });
+    }
+    if rank > MAX_RANK {
+        return Err(FrameError::TooLarge { what: "extent rank", got: rank, max: MAX_RANK });
+    }
+    let mut extent = Vec::with_capacity(rank as usize);
+    let mut words: u64 = 1;
+    for _ in 0..rank {
+        let e = c.u32()?;
+        if e == 0 {
+            return Err(FrameError::BadExtent { what: "dim extent", got: 0 });
+        }
+        words = words.saturating_mul(e as u64);
+        if words > MAX_WORDS as u64 {
+            return Err(FrameError::TooLarge {
+                what: "output extent words",
+                got: words.min(u32::MAX as u64) as u32,
+                max: MAX_WORDS,
+            });
+        }
+        extent.push(e as i64);
+    }
+    Ok(extent)
+}
+
 fn put_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
 }
@@ -179,12 +264,49 @@ pub fn encode_request_v2(app: &str, inputs: &[&[i32]]) -> Vec<u8> {
     out
 }
 
-/// Encode a [`Request`], choosing v1 or v2 framing by `app` presence.
+/// Encode a v3 request:
+/// `magic | VERSION3 | name_len | name | rank | extent[rank] | n_inputs | (word_count | words)*`.
+/// `app = None` encodes a zero-length name and targets the server's
+/// default app; inputs are whole-image tensors over the boxes the
+/// tile planner derives for `extent` (docs/tiling.md).
+///
+/// Panics on an extent outside `1..=u32::MAX` per dim — the wire
+/// field is u32, and silently truncating would frame a *different*
+/// extent (the mirrored Python encoder rejects these too).
+pub fn encode_request_v3(app: Option<&str>, extent: &[i64], inputs: &[&[i32]]) -> Vec<u8> {
+    for &e in extent {
+        assert!(
+            e >= 1 && e <= u32::MAX as i64,
+            "extent dim {e} outside the encodable range 1..=u32::MAX"
+        );
+    }
+    let name = app.unwrap_or("");
+    let total: usize = inputs.iter().map(|w| w.len()).sum();
+    let mut out =
+        Vec::with_capacity(24 + name.len() + 4 * (extent.len() + inputs.len()) + 4 * total);
+    put_u32(&mut out, MAGIC);
+    put_u32(&mut out, VERSION3);
+    put_u32(&mut out, name.len() as u32);
+    out.extend_from_slice(name.as_bytes());
+    put_u32(&mut out, extent.len() as u32);
+    for &e in extent {
+        put_u32(&mut out, e as u32);
+    }
+    put_u32(&mut out, inputs.len() as u32);
+    for words in inputs {
+        put_words(&mut out, words);
+    }
+    out
+}
+
+/// Encode a [`Request`], choosing framing by field presence: an
+/// extent forces v3, else an app name selects v2, else v1.
 pub fn encode_request(req: &Request) -> Vec<u8> {
     let refs: Vec<&[i32]> = req.inputs.iter().map(|v| v.as_slice()).collect();
-    match &req.app {
-        Some(name) => encode_request_v2(name, &refs),
-        None => encode_request_v1(&refs),
+    match (&req.extent, &req.app) {
+        (Some(extent), app) => encode_request_v3(app.as_deref(), extent, &refs),
+        (None, Some(name)) => encode_request_v2(name, &refs),
+        (None, None) => encode_request_v1(&refs),
     }
 }
 
@@ -197,17 +319,14 @@ pub fn decode_request(buf: &[u8]) -> Result<(Request, usize), FrameError> {
         return Err(FrameError::BadMagic(magic));
     }
     let word2 = c.u32()?;
-    let (app, n_inputs) = if word2 == VERSION2 {
-        let name_len = c.u32()?;
-        if name_len > MAX_APP_NAME {
-            return Err(FrameError::TooLarge { what: "app name length", got: name_len, max: MAX_APP_NAME });
-        }
-        let name = std::str::from_utf8(c.take(name_len as usize)?)
-            .map_err(|_| FrameError::BadAppName)?
-            .to_string();
-        (Some(name), c.u32()?)
+    let (app, extent, n_inputs) = if word2 == VERSION2 {
+        (Some(read_name(&mut c)?), None, c.u32()?)
+    } else if word2 == VERSION3 {
+        let name = read_name(&mut c)?;
+        let app = (!name.is_empty()).then_some(name);
+        (app, Some(read_extent(&mut c)?), c.u32()?)
     } else {
-        (None, word2)
+        (None, None, word2)
     };
     if n_inputs > MAX_INPUTS {
         return Err(FrameError::TooLarge { what: "input count", got: n_inputs, max: MAX_INPUTS });
@@ -225,7 +344,7 @@ pub fn decode_request(buf: &[u8]) -> Result<(Request, usize), FrameError> {
         }
         inputs.push(c.words(wc as usize)?);
     }
-    Ok((Request { app, inputs }, c.pos))
+    Ok((Request { app, extent, inputs }, c.pos))
 }
 
 /// Total byte length of the request frame at the front of `buf`,
@@ -243,11 +362,11 @@ pub fn request_frame_len(buf: &[u8]) -> Result<usize, FrameError> {
     }
     let word2 = c.u32()?;
     let n_inputs = if word2 == VERSION2 {
-        let name_len = c.u32()?;
-        if name_len > MAX_APP_NAME {
-            return Err(FrameError::TooLarge { what: "app name length", got: name_len, max: MAX_APP_NAME });
-        }
-        c.take(name_len as usize)?;
+        skip_name(&mut c)?;
+        c.u32()?
+    } else if word2 == VERSION3 {
+        skip_name(&mut c)?;
+        read_extent(&mut c)?;
         c.u32()?
     } else {
         word2
@@ -303,6 +422,44 @@ pub fn encode_error(status: u32) -> Vec<u8> {
     encode_response(&Response { status, words: Vec::new(), cycles: 0, micros: 0 })
 }
 
+/// Pack a UTF-8 diagnostic into response payload words (4 bytes per
+/// word, little-endian, the last word zero-padded), truncated to
+/// [`MAX_DETAIL_BYTES`]. Non-OK responses use this channel to say
+/// *what* was wrong — e.g. the expected vs received word count per
+/// input on `STATUS_BAD_REQUEST` — instead of a bare status word.
+pub fn detail_words(msg: &str) -> Vec<i32> {
+    let bytes = &msg.as_bytes()[..msg.len().min(MAX_DETAIL_BYTES)];
+    bytes
+        .chunks(4)
+        .map(|c| {
+            let mut b = [0u8; 4];
+            b[..c.len()].copy_from_slice(c);
+            i32::from_le_bytes(b)
+        })
+        .collect()
+}
+
+/// Recover a [`detail_words`] diagnostic from an error frame's
+/// payload (trailing padding stripped; invalid UTF-8 — possible only
+/// on a truncation boundary — is replaced, never an error).
+pub fn detail_from_words(words: &[i32]) -> String {
+    let mut bytes: Vec<u8> = words.iter().flat_map(|w| w.to_le_bytes()).collect();
+    while bytes.last() == Some(&0) {
+        bytes.pop();
+    }
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// An error response with a packed diagnostic (see [`detail_words`]).
+pub fn encode_error_detail(status: u32, detail: &str) -> Vec<u8> {
+    encode_response(&Response {
+        status,
+        words: detail_words(detail),
+        cycles: 0,
+        micros: 0,
+    })
+}
+
 /// Decode one response frame from the front of `buf`; returns the
 /// response and the number of bytes consumed.
 pub fn decode_response(buf: &[u8]) -> Result<(Response, usize), FrameError> {
@@ -327,19 +484,69 @@ mod tests {
     use super::*;
 
     fn req_v1() -> Request {
-        Request { app: None, inputs: vec![vec![1, -2, 3], vec![0; 5]] }
+        Request { app: None, extent: None, inputs: vec![vec![1, -2, 3], vec![0; 5]] }
     }
 
     fn req_v2() -> Request {
         Request {
             app: Some("gaussian".to_string()),
+            extent: None,
             inputs: vec![vec![i32::MIN, -1, 0, 1, i32::MAX]],
+        }
+    }
+
+    fn req_v3() -> Request {
+        Request {
+            app: Some("gaussian".to_string()),
+            extent: Some(vec![250, 131]),
+            inputs: vec![vec![9, -8, 7]],
         }
     }
 
     #[test]
     fn sentinel_cannot_collide_with_v1_counts() {
         assert!(VERSION2 > MAX_INPUTS);
+        assert!(VERSION3 > MAX_INPUTS);
+        assert_ne!(VERSION2, VERSION3);
+    }
+
+    /// The v1/v2 wire bytes are **frozen**: any refactor that changes
+    /// them breaks deployed clients. Pinned as literal byte vectors
+    /// (mirroring python/tests/test_protocol.py and docs/protocol.md).
+    #[test]
+    fn v1_v2_frames_are_byte_frozen() {
+        let v1 = encode_request_v1(&[&[1, -2, 3]]);
+        let mut expect = Vec::new();
+        for w in [MAGIC, 1, 3, 1i32 as u32, -2i32 as u32, 3] {
+            expect.extend_from_slice(&w.to_le_bytes());
+        }
+        assert_eq!(v1, expect);
+
+        let v2 = encode_request_v2("gaussian", &[&[1, -2, 3]]);
+        let mut expect = Vec::new();
+        for w in [MAGIC, VERSION2, 8] {
+            expect.extend_from_slice(&w.to_le_bytes());
+        }
+        expect.extend_from_slice(b"gaussian");
+        for w in [1u32, 3, 1i32 as u32, -2i32 as u32, 3] {
+            expect.extend_from_slice(&w.to_le_bytes());
+        }
+        assert_eq!(v2, expect);
+    }
+
+    /// The v3 layout as specified in docs/protocol.md, pinned.
+    #[test]
+    fn v3_frame_golden_bytes() {
+        let frame = encode_request_v3(Some("gaussian"), &[250, 131], &[&[9, -8, 7]]);
+        let mut expect = Vec::new();
+        for w in [MAGIC, VERSION3, 8] {
+            expect.extend_from_slice(&w.to_le_bytes());
+        }
+        expect.extend_from_slice(b"gaussian");
+        for w in [2u32, 250, 131, 1, 3, 9, (-8i32) as u32, 7] {
+            expect.extend_from_slice(&w.to_le_bytes());
+        }
+        assert_eq!(frame, expect);
     }
 
     #[test]
@@ -362,9 +569,29 @@ mod tests {
 
     #[test]
     fn v2_empty_inputs_round_trip() {
-        let req = Request { app: Some("x".into()), inputs: vec![] };
+        let req = Request { app: Some("x".into()), extent: None, inputs: vec![] };
         let (back, _) = decode_request(&encode_request(&req)).unwrap();
         assert_eq!(back, req);
+    }
+
+    #[test]
+    fn v3_request_round_trip() {
+        let req = req_v3();
+        let bytes = encode_request(&req);
+        let (back, used) = decode_request(&bytes).unwrap();
+        assert_eq!(back, req);
+        assert_eq!(used, bytes.len());
+    }
+
+    /// A zero-length v3 name decodes as the implicit default app —
+    /// the single-app `pushmem serve <app>` shape.
+    #[test]
+    fn v3_default_app_round_trip() {
+        let req = Request { app: None, extent: Some(vec![33, 20]), inputs: vec![vec![5]] };
+        let bytes = encode_request(&req);
+        let (back, used) = decode_request(&bytes).unwrap();
+        assert_eq!(back, req);
+        assert_eq!(used, bytes.len());
     }
 
     /// Every strict prefix must report Truncated with a `need` that
@@ -372,7 +599,7 @@ mod tests {
     /// — the invariant the socket reader in serve.rs relies on.
     #[test]
     fn request_truncation_sweep() {
-        for req in [req_v1(), req_v2()] {
+        for req in [req_v1(), req_v2(), req_v3()] {
             let bytes = encode_request(&req);
             for cut in 0..bytes.len() {
                 match decode_request(&bytes[..cut]) {
@@ -464,6 +691,67 @@ mod tests {
         ));
     }
 
+    /// v3 extent fields: rank and per-dim extents are validated from
+    /// the header alone, including the output-word product cap.
+    #[test]
+    fn v3_extent_validation() {
+        let v3_header = |rank: u32, extents: &[u32]| {
+            let mut out = Vec::new();
+            super::put_u32(&mut out, MAGIC);
+            super::put_u32(&mut out, VERSION3);
+            super::put_u32(&mut out, 0); // empty name -> default app
+            super::put_u32(&mut out, rank);
+            for &e in extents {
+                super::put_u32(&mut out, e);
+            }
+            out
+        };
+        assert!(matches!(
+            decode_request(&v3_header(0, &[])).unwrap_err(),
+            FrameError::BadExtent { what: "rank", .. }
+        ));
+        assert!(matches!(
+            decode_request(&v3_header(MAX_RANK + 1, &[1; 9])).unwrap_err(),
+            FrameError::TooLarge { what: "extent rank", .. }
+        ));
+        assert!(matches!(
+            decode_request(&v3_header(2, &[4, 0])).unwrap_err(),
+            FrameError::BadExtent { what: "dim extent", .. }
+        ));
+        // Product cap: 2^13 x 2^13 = 2^26 output words > MAX_WORDS.
+        let too_big = v3_header(2, &[1 << 13, 1 << 13]);
+        assert!(matches!(
+            decode_request(&too_big).unwrap_err(),
+            FrameError::TooLarge { what: "output extent words", .. }
+        ));
+        assert!(matches!(
+            request_frame_len(&too_big).unwrap_err(),
+            FrameError::TooLarge { what: "output extent words", .. }
+        ));
+    }
+
+    /// Diagnostic payloads: pack, round-trip, cap, and the frame
+    /// shape old clients see (non-empty words on a non-OK status).
+    #[test]
+    fn error_detail_round_trip() {
+        let msg = "input gradient: got 100 words, expected 4096";
+        let frame = encode_error_detail(STATUS_BAD_REQUEST, msg);
+        let (resp, _) = decode_response(&frame).unwrap();
+        assert_eq!(resp.status, STATUS_BAD_REQUEST);
+        assert_eq!(detail_from_words(&resp.words), msg);
+        assert_eq!((resp.cycles, resp.micros), (0, 0));
+
+        // Length not a multiple of 4 pads the last word with zeros.
+        assert_eq!(detail_from_words(&detail_words("abcde")), "abcde");
+        // The cap truncates instead of amplifying.
+        let long = "x".repeat(4 * MAX_DETAIL_BYTES);
+        let words = detail_words(&long);
+        assert_eq!(words.len() * 4, MAX_DETAIL_BYTES);
+        assert_eq!(detail_from_words(&words).len(), MAX_DETAIL_BYTES);
+        // Empty detail is the legacy 28-byte error frame.
+        assert_eq!(encode_error_detail(STATUS_INTERNAL, ""), encode_error(STATUS_INTERNAL));
+    }
+
     #[test]
     fn non_utf8_app_name_rejected() {
         let mut out = Vec::new();
@@ -490,7 +778,7 @@ mod tests {
     /// strict prefix, never overshooting the frame).
     #[test]
     fn frame_len_matches_decode() {
-        for req in [req_v1(), req_v2()] {
+        for req in [req_v1(), req_v2(), req_v3()] {
             let bytes = encode_request(&req);
             assert_eq!(request_frame_len(&bytes).unwrap(), bytes.len());
             for cut in 0..bytes.len() {
@@ -514,12 +802,16 @@ mod tests {
     fn consumed_supports_pipelining() {
         let a = encode_request(&req_v2());
         let b = encode_request(&req_v1());
+        let c = encode_request(&req_v3());
         let mut buf = a.clone();
         buf.extend_from_slice(&b);
+        buf.extend_from_slice(&c);
         let (first, used) = decode_request(&buf).unwrap();
         assert_eq!(first, req_v2());
         let (second, used2) = decode_request(&buf[used..]).unwrap();
         assert_eq!(second, req_v1());
-        assert_eq!(used + used2, buf.len());
+        let (third, used3) = decode_request(&buf[used + used2..]).unwrap();
+        assert_eq!(third, req_v3());
+        assert_eq!(used + used2 + used3, buf.len());
     }
 }

@@ -5,16 +5,28 @@
 //! no async runtime; the rationale is DESIGN.md §2).
 //!
 //! The wire format lives in [`super::protocol`] (spec: docs/protocol.md).
-//! Two generations share one port: v1 frames target the server's
+//! Three generations share one port: v1 frames target the server's
 //! default app (`pushmem serve <app>`), v2 frames carry an app name so
 //! a single endpoint serves every design in the
 //! [`CompiledRegistry`](super::driver::CompiledRegistry)
-//! (`pushmem serve-all`).
+//! (`pushmem serve-all`), and v3 frames additionally carry a requested
+//! **output extent** — whole images of any size, decomposed onto the
+//! fixed compiled design by the tile planner ([`crate::tile`],
+//! docs/tiling.md) and answered stitched.
 //!
-//! This module owns only the socket I/O; framing is pure byte-slice
-//! code in [`super::protocol`], and app-to-design resolution is the
-//! registry's job. That split keeps every layer unit-testable without
-//! the others.
+//! The worker pool drains a queue of [`Job`]s, not raw connections: a
+//! connection occupies one worker for its lifetime as before, but a
+//! v3 request also posts its [`TileBatch`] back onto the queue, so
+//! **idle** workers join the tile drain and one large request
+//! saturates the pool. Progress never depends on recruitment — the
+//! posting worker drains unclaimed tiles itself (see
+//! [`crate::tile::run`]), so a pool full of busy connections degrades
+//! to in-connection execution, never deadlock.
+//!
+//! This module owns only the socket I/O and the pool; framing is pure
+//! byte-slice code in [`super::protocol`], app-to-design resolution is
+//! the registry's job, and tiling is [`crate::tile`]'s. That split
+//! keeps every layer unit-testable without the others.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -28,8 +40,23 @@ use super::driver::{Compiled, CompiledRegistry};
 use super::protocol::{self, FrameError, Request, Response};
 use crate::exec::{Engine, EngineRun};
 use crate::tensor::Tensor;
+use crate::tile::TileBatch;
 
 pub use super::protocol::MAGIC;
+
+/// What the pool's workers drain: whole connections (held until the
+/// peer disconnects) and tile batches posted by v3 requests in flight
+/// on *other* workers (drained cooperatively, returning the worker to
+/// the queue when the batch's claims run out). Batch jobs hold a
+/// `Weak` handle: a job that sits queued past its request's lifetime
+/// (every worker was busy) must not pin the request's whole-image
+/// inputs and per-tile outputs in memory — the submitting connection
+/// owns the only strong reference, and a stale job upgrades to
+/// nothing.
+enum Job {
+    Conn(TcpStream),
+    Tiles(std::sync::Weak<TileBatch>),
+}
 
 /// How connections resolve apps and report, plus the pool size used
 /// by [`serve_on`].
@@ -48,6 +75,12 @@ pub struct ServeConfig {
     /// from the functional engine whenever the design supports it and
     /// falls back to the cycle-accurate simulator otherwise.
     pub engine: Engine,
+    /// Set by [`serve_on_with`] once the pool's queue exists (and
+    /// cleared at shutdown so workers see the channel disconnect); v3
+    /// handling uses it to recruit idle workers into a tile batch.
+    /// `None` (embedders calling [`handle_connection`] directly, unit
+    /// tests) means tiles drain on the connection's own thread.
+    helpers: Mutex<Option<mpsc::SyncSender<Job>>>,
 }
 
 impl ServeConfig {
@@ -67,6 +100,7 @@ impl ServeConfig {
             workers: 4,
             stats: false,
             engine: Engine::Auto,
+            helpers: Mutex::new(None),
         }
     }
 
@@ -80,6 +114,7 @@ impl ServeConfig {
             workers,
             stats: false,
             engine: Engine::Auto,
+            helpers: Mutex::new(None),
         }
     }
 }
@@ -144,24 +179,68 @@ fn write_error(stream: &mut TcpStream, status: u32) {
     let _ = stream.flush();
 }
 
-/// Check a request's inputs against the app's declared input boxes
+/// Best-effort error frame with a packed diagnostic (docs/protocol.md)
+/// so the peer learns *what* was wrong, not just a status word.
+fn write_error_detail(stream: &mut TcpStream, status: u32, detail: &str) {
+    let _ = stream.write_all(&protocol::encode_error_detail(status, detail));
+    let _ = stream.flush();
+}
+
+/// Check request payloads against the expected per-input word counts
 /// before any tensor is built (`Tensor::from_data` asserts lengths).
-fn check_inputs(c: &Compiled, req: &Request) -> Result<()> {
-    anyhow::ensure!(
-        req.inputs.len() == c.lp.inputs.len(),
-        "expected {} inputs, got {}",
-        c.lp.inputs.len(),
-        req.inputs.len()
-    );
-    for (name, words) in c.lp.inputs.iter().zip(&req.inputs) {
-        let want = c.lp.buffers[name].cardinality();
-        anyhow::ensure!(
-            words.len() as i64 == want,
-            "input {name}: {} words != box {want}",
-            words.len()
+/// The error text enumerates expected vs received counts per input —
+/// it travels back to the client as the `STATUS_BAD_REQUEST` detail
+/// payload, replacing the old opaque status word.
+fn check_input_words(app: &str, expect: &[(&str, i64)], inputs: &[Vec<i32>]) -> Result<()> {
+    if inputs.len() != expect.len() {
+        let decl: Vec<String> = expect
+            .iter()
+            .map(|(name, want)| format!("{name}={want} words"))
+            .collect();
+        bail!(
+            "app {app}: expected {} inputs ({}), got {}",
+            expect.len(),
+            decl.join(", "),
+            inputs.len()
         );
     }
+    let bad: Vec<String> = expect
+        .iter()
+        .zip(inputs)
+        .filter(|((_, want), words)| words.len() as i64 != *want)
+        .map(|((name, want), words)| {
+            format!("input {name}: got {} words, expected {want}", words.len())
+        })
+        .collect();
+    anyhow::ensure!(bad.is_empty(), "app {app}: {}", bad.join("; "));
     Ok(())
+}
+
+/// Expected word counts for the fixed-box (v1/v2) path: the app's
+/// declared per-tile input boxes.
+fn declared_words(c: &Compiled) -> Vec<(&str, i64)> {
+    c.lp
+        .inputs
+        .iter()
+        .map(|name| (name.as_str(), c.lp.buffers[name].cardinality()))
+        .collect()
+}
+
+/// The connection's cached per-design runner, built on first use —
+/// shared by the fixed-box and tiled paths so neither pays
+/// per-request engine setup (`runs` is keyed by design identity; a
+/// connection may interleave apps).
+fn runner_for<'a>(
+    runs: &'a mut Vec<(usize, EngineRun)>,
+    c: &Arc<Compiled>,
+    engine: Engine,
+) -> Result<&'a mut EngineRun> {
+    let key = Arc::as_ptr(c) as usize;
+    if let Some(i) = runs.iter().position(|(k, _)| *k == key) {
+        return Ok(&mut runs[i].1);
+    }
+    runs.push((key, c.runner(engine)?));
+    Ok(&mut runs.last_mut().expect("just pushed").1)
 }
 
 /// Handle one client connection: frames in, simulated tiles out,
@@ -190,7 +269,10 @@ pub fn handle_connection(cfg: &ServeConfig, stream: &mut TcpStream) -> Result<()
             Ok(Some(req)) => req,
             Ok(None) => return Ok(()),
             Err(e) => {
-                write_error(stream, protocol::STATUS_BAD_REQUEST);
+                // Framing errors carry precise, client-safe messages
+                // (cap overruns name the field and the cap) — send
+                // them as the diagnostic like every semantic error.
+                write_error_detail(stream, protocol::STATUS_BAD_REQUEST, &format!("{e:#}"));
                 return Err(e.context(format!("client {peer}")));
             }
         };
@@ -210,30 +292,30 @@ pub fn handle_connection(cfg: &ServeConfig, stream: &mut TcpStream) -> Result<()
                 }
             },
         };
-        if let Err(e) = check_inputs(&c, &req) {
-            write_error(stream, protocol::STATUS_BAD_REQUEST);
-            return Err(e.context(format!("client {peer}, app {}", c.program.name)));
+        let Request { extent, inputs: payloads, .. } = req;
+        // v3: arbitrary-extent requests take the tiling path — plan,
+        // fan tiles out across idle pool workers, stitch, respond.
+        if let Some(extent) = extent {
+            match handle_tiled(cfg, stream, &peer, &c, &extent, payloads, &mut runs) {
+                Ok(()) => continue,
+                Err(e) => return Err(e),
+            }
         }
-        let in_words: usize = req.inputs.iter().map(|w| w.len()).sum();
+        if let Err(e) = check_input_words(&c.program.name, &declared_words(&c), &payloads)
+        {
+            write_error_detail(stream, protocol::STATUS_BAD_REQUEST, &format!("{e:#}"));
+            return Err(e.context(format!("client {peer}")));
+        }
+        let in_words: usize = payloads.iter().map(|w| w.len()).sum();
         let mut inputs = BTreeMap::new();
-        for (name, words) in c.lp.inputs.iter().zip(req.inputs) {
+        for (name, words) in c.lp.inputs.iter().zip(payloads) {
             inputs.insert(name.clone(), Tensor::from_data(c.lp.buffers[name].clone(), words));
         }
-        let key = Arc::as_ptr(&c) as usize;
-        let run = match runs.iter().position(|(k, _)| *k == key) {
-            Some(i) => &mut runs[i].1,
-            None => {
-                let r = match c.runner(cfg.engine) {
-                    Ok(r) => r,
-                    Err(e) => {
-                        write_error(stream, protocol::STATUS_INTERNAL);
-                        return Err(
-                            e.context(format!("planning {} for {peer}", c.program.name))
-                        );
-                    }
-                };
-                runs.push((key, r));
-                &mut runs.last_mut().expect("just pushed").1
+        let run = match runner_for(&mut runs, &c, cfg.engine) {
+            Ok(r) => r,
+            Err(e) => {
+                write_error(stream, protocol::STATUS_INTERNAL);
+                return Err(e.context(format!("planning {} for {peer}", c.program.name)));
             }
         };
         let t0 = Instant::now();
@@ -266,6 +348,105 @@ pub fn handle_connection(cfg: &ServeConfig, stream: &mut TcpStream) -> Result<()
     }
 }
 
+/// Serve one v3 (whole-image) request on an open connection: plan the
+/// tiling (cached per extent on the design), validate the whole-image
+/// inputs, recruit idle pool workers into the [`TileBatch`], drain,
+/// stitch, respond. Client-caused failures answer
+/// `STATUS_BAD_REQUEST` with a packed diagnostic; like every non-OK
+/// path, the connection closes afterwards (`Err` return).
+fn handle_tiled(
+    cfg: &ServeConfig,
+    stream: &mut TcpStream,
+    peer: &str,
+    c: &Arc<Compiled>,
+    extent: &[i64],
+    payloads: Vec<Vec<i32>>,
+    runs: &mut Vec<(usize, EngineRun)>,
+) -> Result<()> {
+    let app = c.program.name.clone();
+    let plan = match c.tile_plan(extent) {
+        Ok(p) => p,
+        Err(e) => {
+            let msg = format!("app {app}: cannot tile output extent {extent:?}: {e:#}");
+            write_error_detail(stream, protocol::STATUS_BAD_REQUEST, &msg);
+            bail!("client {peer}: {msg}");
+        }
+    };
+    if let Err(e) = check_input_words(&app, &plan.expected_words(), &payloads) {
+        write_error_detail(stream, protocol::STATUS_BAD_REQUEST, &format!("{e:#}"));
+        return Err(e.context(format!("client {peer} (extent {extent:?})")));
+    }
+    let mut inputs = BTreeMap::new();
+    for ((name, b), words) in plan.input_names.iter().zip(&plan.input_boxes).zip(payloads) {
+        inputs.insert(name.clone(), Tensor::from_data(b.clone(), words));
+    }
+    let t0 = Instant::now();
+    let batch = match TileBatch::new(Arc::clone(c), cfg.engine, Arc::clone(&plan), inputs) {
+        Ok(b) => b,
+        Err(e) => {
+            write_error_detail(stream, protocol::STATUS_INTERNAL, &format!("{e:#}"));
+            return Err(e.context(format!("batching {app} for {peer}")));
+        }
+    };
+    // Opportunistic recruitment: idle workers pick the batch off the
+    // pool queue and join the drain; a saturated pool (try_send
+    // fails, or the jobs sit queued until the batch is over) just
+    // leaves the whole drain to this thread. Stale pickups are free —
+    // `work` returns immediately once all tiles are claimed.
+    let recruit = cfg
+        .helpers
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+        .clone();
+    if let Some(tx) = recruit {
+        let extra = cfg
+            .workers
+            .saturating_sub(1)
+            .min(batch.tile_count().saturating_sub(1));
+        for _ in 0..extra {
+            if tx.try_send(Job::Tiles(Arc::downgrade(&batch))).is_err() {
+                break;
+            }
+        }
+    }
+    // The connection's cached runner drains tiles — a v3 request on a
+    // warm connection pays no engine setup, like the fixed-box path.
+    match runner_for(runs, c, cfg.engine) {
+        Ok(run) => batch.work_with(run),
+        Err(e) => {
+            write_error_detail(stream, protocol::STATUS_INTERNAL, &format!("{e:#}"));
+            return Err(e.context(format!("planning {app} for {peer}")));
+        }
+    }
+    let res = match batch.wait() {
+        Ok(r) => r,
+        Err(e) => {
+            write_error_detail(stream, protocol::STATUS_INTERNAL, &format!("{e:#}"));
+            return Err(e.context(format!("tiled execution of {app} for {peer}")));
+        }
+    };
+    let micros = t0.elapsed().as_micros() as u64;
+    let cycles = res.stats.cycles as u64;
+    let out_words = res.output.data.len();
+    let frame = protocol::encode_response(&Response {
+        status: protocol::STATUS_OK,
+        words: res.output.data,
+        cycles,
+        micros,
+    });
+    stream.write_all(&frame)?;
+    stream.flush()?;
+    if cfg.stats {
+        eprintln!(
+            "[req] client={peer} app={app} engine={} extent={extent:?} tiles={} \
+             out_words={out_words} cycles={cycles} exec_us={micros}",
+            res.engine.name(),
+            res.tiles
+        );
+    }
+    Ok(())
+}
+
 /// A connection handler, as [`serve_on_with`] accepts it. Production
 /// serving always uses [`handle_connection`]; tests inject faulting
 /// handlers to exercise the pool's isolation guarantees.
@@ -288,16 +469,23 @@ pub fn serve_on(listener: TcpListener, cfg: ServeConfig) -> Result<()> {
 /// A panicking handler is caught (`catch_unwind`), answered with
 /// `STATUS_INTERNAL` best-effort, and its worker keeps serving; a
 /// panic elsewhere that poisons the queue mutex is recovered
-/// (`PoisonError::into_inner` — the queue holds only `TcpStream`s, so
-/// there is no invariant a poisoner could have broken mid-update).
+/// (`PoisonError::into_inner` — the queue holds only streams and
+/// batch handles, so there is no invariant a poisoner could have
+/// broken mid-update). Tile-batch jobs contain their own panics (see
+/// [`crate::tile::run`]), so a worker surviving them needs no extra
+/// guard here.
 pub fn serve_on_with(
     listener: TcpListener,
     cfg: ServeConfig,
     handler: Arc<Handler>,
 ) -> Result<()> {
     let workers = cfg.workers.max(1);
+    let (tx, rx) = mpsc::sync_channel::<Job>(2 * workers);
+    // Hand the queue to v3 tile fan-out before any connection can
+    // arrive; cleared again at shutdown so the channel can disconnect
+    // and the workers exit.
+    *cfg.helpers.lock().unwrap_or_else(|p| p.into_inner()) = Some(tx.clone());
     let cfg = Arc::new(cfg);
-    let (tx, rx) = mpsc::sync_channel::<TcpStream>(2 * workers);
     let rx = Arc::new(Mutex::new(rx));
     let mut handles = Vec::with_capacity(workers);
     for _ in 0..workers {
@@ -306,15 +494,27 @@ pub fn serve_on_with(
         let handler = Arc::clone(&handler);
         handles.push(std::thread::spawn(move || loop {
             // The guard is a temporary: the lock is released as soon
-            // as recv returns, before the connection is handled. A
-            // poisoned lock is recovered, not propagated — one dead
-            // peer must not cascade the whole pool down.
+            // as recv returns, before the job is handled. A poisoned
+            // lock is recovered, not propagated — one dead peer must
+            // not cascade the whole pool down.
             let next = rx
                 .lock()
                 .unwrap_or_else(|poisoned| poisoned.into_inner())
                 .recv();
             let mut stream = match next {
-                Ok(s) => s,
+                Ok(Job::Conn(s)) => s,
+                Ok(Job::Tiles(batch)) => {
+                    // Join an in-flight whole-image request; `work`
+                    // panics are contained inside the batch, a
+                    // drained batch returns immediately, and a batch
+                    // whose request already completed upgrades to
+                    // nothing (its connection dropped the only
+                    // strong handle).
+                    if let Some(batch) = batch.upgrade() {
+                        batch.work();
+                    }
+                    continue;
+                }
                 Err(_) => return, // accept loop gone
             };
             let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
@@ -337,14 +537,14 @@ pub fn serve_on_with(
         match stream {
             // try_send first so pool saturation is visible to the
             // operator (a queued client hangs silently otherwise).
-            Ok(s) => match tx.try_send(s) {
+            Ok(s) => match tx.try_send(Job::Conn(s)) {
                 Ok(()) => {}
-                Err(mpsc::TrySendError::Full(s)) => {
+                Err(mpsc::TrySendError::Full(job)) => {
                     eprintln!(
                         "all {workers} workers busy and queue full; \
                          connection waits (raise --workers if this persists)"
                     );
-                    if tx.send(s).is_err() {
+                    if tx.send(job).is_err() {
                         break;
                     }
                 }
@@ -358,6 +558,7 @@ pub fn serve_on_with(
             }
         }
     }
+    cfg.helpers.lock().unwrap_or_else(|p| p.into_inner()).take();
     drop(tx);
     for h in handles {
         let _ = h.join();
@@ -436,15 +637,31 @@ pub fn request_app(
     roundtrip(stream, protocol::encode_request_v2(app, &refs))
 }
 
+/// Client helper: send one v3 whole-image request at `extent`
+/// (`app = None` targets the server's default app); inputs are the
+/// whole-image tensors over the tile planner's boxes
+/// ([`crate::coordinator::Compiled::tile_plan`], docs/tiling.md).
+pub fn request_extent(
+    stream: &mut TcpStream,
+    app: Option<&str>,
+    extent: &[i64],
+    inputs: &[&Tensor],
+) -> Result<(Vec<i32>, u64, u64)> {
+    let refs: Vec<&[i32]> = inputs.iter().map(|t| t.data.as_slice()).collect();
+    roundtrip(stream, protocol::encode_request_v3(app, extent, &refs))
+}
+
 fn roundtrip(stream: &mut TcpStream, frame: Vec<u8>) -> Result<(Vec<i32>, u64, u64)> {
     stream.write_all(&frame)?;
     stream.flush()?;
     let resp = read_response(stream)?;
-    anyhow::ensure!(
-        resp.status == protocol::STATUS_OK,
-        "server error status {}",
-        resp.status
-    );
+    if resp.status != protocol::STATUS_OK {
+        let detail = protocol::detail_from_words(&resp.words);
+        if detail.is_empty() {
+            bail!("server error status {}", resp.status);
+        }
+        bail!("server error status {}: {detail}", resp.status);
+    }
     Ok((resp.words, resp.cycles, resp.micros))
 }
 
@@ -552,6 +769,94 @@ mod tests {
             err.to_string().contains(&format!("status {}", protocol::STATUS_BAD_REQUEST)),
             "{err:#}"
         );
+    }
+
+    /// v3 whole-image request over the real pool: stitched output is
+    /// bit-exact vs the host-side whole-image golden, the plan is
+    /// reused across requests, and both the default-app (empty name)
+    /// and named forms work.
+    #[test]
+    fn v3_whole_image_request_stitches() {
+        let prog = apps::gaussian::build(14);
+        let c = compile(&prog).unwrap();
+        let extent = vec![33i64, 20];
+        let mut full = prog.clone();
+        full.schedule.tile = extent.clone();
+        let lp = crate::halide::lower::lower(&full).unwrap();
+        let inputs = gen_inputs(&lp);
+        let want = lp.execute(&inputs).unwrap()[&lp.output].clone();
+        let ordered: Vec<Tensor> = lp.inputs.iter().map(|n| inputs[n].clone()).collect();
+
+        let addr = spawn_server(ServeConfig::single("g14", c));
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let refs: Vec<&Tensor> = ordered.iter().collect();
+        for _ in 0..2 {
+            let (words, cycles, _) =
+                request_extent(&mut stream, None, &extent, &refs).unwrap();
+            assert_eq!(words, want.data, "stitched output != whole-image golden");
+            assert!(cycles > 0);
+        }
+        let (words, _, _) =
+            request_extent(&mut stream, Some("g14"), &extent, &refs).unwrap();
+        assert_eq!(words, want.data);
+        // The same connection still serves fixed-box v1 frames after.
+        let tile_inputs = gen_inputs(&crate::halide::lower::lower(&prog).unwrap());
+        let ordered: Vec<Tensor> =
+            prog_inputs_in_order(&prog, &tile_inputs);
+        let refs: Vec<&Tensor> = ordered.iter().collect();
+        let (words, _, _) = request(&mut stream, &refs).unwrap();
+        assert_eq!(words.len(), 14 * 14);
+    }
+
+    fn prog_inputs_in_order(
+        prog: &crate::halide::Program,
+        inputs: &BTreeMap<String, Tensor>,
+    ) -> Vec<Tensor> {
+        prog.inputs.iter().map(|i| inputs[&i.name].clone()).collect()
+    }
+
+    /// The bad-request diagnostic channel: wrong whole-image word
+    /// counts come back naming the input with expected vs received.
+    #[test]
+    fn v3_wrong_word_count_reports_expected_counts() {
+        let prog = apps::gaussian::build(14);
+        let addr = spawn_server(ServeConfig::single("g14", compile(&prog).unwrap()));
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let t = Tensor::from_data(crate::poly::BoxSet::from_extents(&[3]), vec![1, 2, 3]);
+        let err =
+            request_extent(&mut stream, None, &[33, 20], &[&t]).unwrap_err();
+        let msg = err.to_string();
+        // 33x20 gaussian needs a (33+2)x(20+2) input image.
+        assert!(msg.contains("got 3 words, expected 770"), "{msg}");
+        assert!(msg.contains("input"), "{msg}");
+    }
+
+    /// The fixed-box path gained the same diagnostics: the old opaque
+    /// status word now carries expected vs received per input.
+    #[test]
+    fn v1_word_count_mismatch_detail_names_expected() {
+        let prog = apps::gaussian::build(14);
+        let addr = spawn_server(ServeConfig::single("g14", compile(&prog).unwrap()));
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let t = Tensor::from_data(crate::poly::BoxSet::from_extents(&[3]), vec![1, 2, 3]);
+        let err = request(&mut stream, &[&t]).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains(&format!("status {}", protocol::STATUS_BAD_REQUEST)), "{msg}");
+        assert!(msg.contains("got 3 words, expected 256"), "{msg}");
+    }
+
+    /// An untileable extent (wrong rank) earns a diagnostic
+    /// BAD_REQUEST, not a dropped connection.
+    #[test]
+    fn v3_bad_rank_gets_diagnostic_bad_request() {
+        let prog = apps::gaussian::build(14);
+        let addr = spawn_server(ServeConfig::single("g14", compile(&prog).unwrap()));
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let t = Tensor::from_data(crate::poly::BoxSet::from_extents(&[3]), vec![1, 2, 3]);
+        let err = request_extent(&mut stream, None, &[33], &[&t]).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains(&format!("status {}", protocol::STATUS_BAD_REQUEST)), "{msg}");
+        assert!(msg.contains("cannot tile output extent"), "{msg}");
     }
 
     #[test]

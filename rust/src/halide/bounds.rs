@@ -48,18 +48,35 @@ pub fn infer(
     tile: &[i64],
     rounding: &BTreeMap<String, Vec<(String, i64)>>,
 ) -> Result<BTreeMap<String, Intervals>> {
+    let out: Intervals = tile.iter().map(|&e| (0, e - 1)).collect();
+    infer_boxes(stages, &out, rounding)
+}
+
+/// [`infer`] generalized to an arbitrary *absolute* output box: the
+/// output stage is realized over `out` (`(min, max)` inclusive per
+/// pure dim, not necessarily starting at 0), and every producer halo
+/// is ranged from there. Because every access is affine, the result
+/// is exact at any position — this is the primitive the tile planner
+/// ([`crate::tile`]) uses to place a compiled fixed-tile design at
+/// every tile origin of an arbitrarily large image and read off each
+/// input's shifted footprint (docs/tiling.md).
+pub fn infer_boxes(
+    stages: &[StageDef],
+    out: &[(i64, i64)],
+    rounding: &BTreeMap<String, Vec<(String, i64)>>,
+) -> Result<BTreeMap<String, Intervals>> {
     let mut required: BTreeMap<String, Intervals> = BTreeMap::new();
     let output = stages.last().context("no stages")?;
     anyhow::ensure!(
-        tile.len() == output.vars.len(),
-        "tile rank {} != output rank {}",
-        tile.len(),
+        out.len() == output.vars.len(),
+        "output box rank {} != output rank {}",
+        out.len(),
         output.vars.len()
     );
-    required.insert(
-        output.name.clone(),
-        tile.iter().map(|&e| (0, e - 1)).collect(),
-    );
+    for (k, &(lo, hi)) in out.iter().enumerate() {
+        anyhow::ensure!(lo <= hi, "empty output interval ({lo}, {hi}) at dim {k}");
+    }
+    required.insert(output.name.clone(), out.to_vec());
 
     for stage in stages.iter().rev() {
         // Round up unrolled dims before ranging this stage's loads.
@@ -211,6 +228,43 @@ mod tests {
         let req = infer(&[conv], &[8, 8], &BTreeMap::new()).unwrap();
         assert_eq!(req["in"], vec![(0, 9), (0, 9)]);
         assert_eq!(req["w"], vec![(0, 2), (0, 2)]);
+    }
+
+    #[test]
+    fn shifted_output_box_shifts_the_footprint() {
+        // The tile-planner invariant: for identity-linear stencil
+        // accesses, realizing the output over [o, o+t) instead of
+        // [0, t) translates every producer footprint by o without
+        // changing its extent.
+        let s = stage(
+            "g",
+            &["x"],
+            Expr::add(
+                Expr::ld("in", vec![Expr::sub(Expr::v("x"), Expr::c(1))]),
+                Expr::ld("in", vec![Expr::add(Expr::v("x"), Expr::c(1))]),
+            ),
+        );
+        let base = infer_boxes(&[s.clone()], &[(0, 15)], &BTreeMap::new()).unwrap();
+        let shifted = infer_boxes(&[s], &[(40, 55)], &BTreeMap::new()).unwrap();
+        assert_eq!(base["in"], vec![(-1, 16)]);
+        assert_eq!(shifted["in"], vec![(39, 56)]);
+        assert_eq!(shifted["g"], vec![(40, 55)]);
+    }
+
+    #[test]
+    fn scaling_access_shifts_by_linear_part() {
+        // Strip-mined upsample shape: out(yo, yi) = in(yo). A tile at
+        // yo-origin 8 needs in rows starting at 8 — the footprint
+        // shift is the access map's linear part applied to the origin.
+        let up = stage("up", &["yo", "yi"], Expr::ld("in", vec![Expr::v("yo")]));
+        let f = infer_boxes(&[up], &[(8, 15), (0, 1)], &BTreeMap::new()).unwrap();
+        assert_eq!(f["in"], vec![(8, 15)]);
+    }
+
+    #[test]
+    fn empty_output_interval_rejected() {
+        let s = stage("g", &["x"], Expr::ld("in", vec![Expr::v("x")]));
+        assert!(infer_boxes(&[s], &[(4, 3)], &BTreeMap::new()).is_err());
     }
 
     #[test]

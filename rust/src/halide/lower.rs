@@ -73,6 +73,15 @@ pub struct LoweredPipeline {
     pub tile: Vec<i64>,
     /// Funcs scheduled on the host CPU (evaluated by the coordinator).
     pub host_funcs: Vec<Func>,
+    /// The post-inlining stage definitions bounds inference ran over —
+    /// kept so consumers can re-range the same access structure at a
+    /// *different* output box ([`LoweredPipeline::footprint`]; the
+    /// tile planner's halo math, docs/tiling.md).
+    pub stage_defs: Vec<bounds::StageDef>,
+    /// The unroll round-up directives that accompanied inference
+    /// (`func -> [(var, factor)]`), so re-ranging reproduces the
+    /// exact halos the compiled design was built with.
+    pub rounding: BTreeMap<String, Vec<(String, i64)>>,
 }
 
 /// Fully unroll a reduction func into a pure expression: repeatedly
@@ -304,10 +313,25 @@ pub fn lower(program: &Program) -> Result<LoweredPipeline> {
         output,
         tile: sched.tile.clone(),
         host_funcs,
+        stage_defs,
+        rounding: sched.unroll.clone(),
     })
 }
 
 impl LoweredPipeline {
+    /// Re-run bounds inference over this pipeline's (post-inlining)
+    /// stage graph with the output realized over an arbitrary absolute
+    /// box `out` (`(min, max)` inclusive per output pure dim). Returns
+    /// the required interval of **every** buffer — materialized stages
+    /// and streamed inputs — at that placement; `out == [(0, tile-1)]`
+    /// reproduces [`LoweredPipeline::buffers`] exactly. This is the
+    /// halo/footprint primitive the tile planner ([`crate::tile`])
+    /// uses to slice whole-image inputs per output tile
+    /// (docs/tiling.md).
+    pub fn footprint(&self, out: &[(i64, i64)]) -> Result<BTreeMap<String, bounds::Intervals>> {
+        bounds::infer_boxes(&self.stage_defs, out, &self.rounding)
+    }
+
     /// Reference (functional) execution: evaluate every stage over its
     /// domain in program order. This is the semantics the cycle-accurate
     /// schedule and the CGRA simulator must preserve.
@@ -485,6 +509,23 @@ mod tests {
                 assert_eq!(out.get(&[y, x]), expect);
             }
         }
+    }
+
+    #[test]
+    fn footprint_at_compiled_tile_reproduces_buffers() {
+        let lp = lower(&brighten_blur(16)).unwrap();
+        let out: Vec<(i64, i64)> = lp.tile.iter().map(|&e| (0, e - 1)).collect();
+        let fp = lp.footprint(&out).unwrap();
+        for (name, b) in &lp.buffers {
+            let iv = &fp[name];
+            assert_eq!(b.rank(), iv.len(), "{name}");
+            for (d, &(lo, hi)) in b.dims.iter().zip(iv) {
+                assert_eq!((d.min, d.max()), (lo, hi), "{name}/{}", d.name);
+            }
+        }
+        // A shifted tile translates the input footprint, extent intact.
+        let shifted = lp.footprint(&[(16, 31), (32, 47)]).unwrap();
+        assert_eq!(shifted["input"], vec![(16, 32), (32, 48)]);
     }
 
     #[test]

@@ -43,4 +43,5 @@ pub mod poly;
 pub mod runtime;
 pub mod sched;
 pub mod tensor;
+pub mod tile;
 pub mod ub;

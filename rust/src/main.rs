@@ -7,7 +7,9 @@
 //! pushmem list                       show registered applications
 //! pushmem compile <app>              compile and print the design report
 //! pushmem run <app> [--artifacts D]  execute; validate vs XLA golden
-//! pushmem validate <app>             cross-check exec vs cycle-accurate sim
+//! pushmem run <app> --extent WxH     whole image via the tile planner,
+//!                                    validated vs the host golden
+//! pushmem validate <app>|--all       cross-check exec vs cycle-accurate sim
 //! pushmem report [--artifacts D]     all apps: Table IV + Fig 13/14 rows
 //! pushmem tables                     Tables V, VI, VII reproductions
 //! pushmem tune <app> [--budget N]    auto-tune the schedule (dse::)
@@ -62,12 +64,12 @@ fn usage(cmd: &str) -> &'static str {
     match cmd {
         "list" => "usage: pushmem list\n\nPrint every registered application name (apps + Harris schedule variants).",
         "compile" => "usage: pushmem compile <app>\n\nCompile one app through the full pipeline and print the design report\n(PEs, MEM tiles, SRAM/SR words, completion, place & route, bitstream).",
-        "run" => "usage: pushmem run <app> [--artifacts D] [--engine E]\n\n  --artifacts D   directory of HLO golden artifacts (default: artifacts)\n  --engine E      exec|sim|auto (default: auto) — docs/execution.md\n\nExecute one app and validate bit-exactly against the XLA golden model\n(requires `make artifacts`).",
-        "validate" => "usage: pushmem validate <app>\n\nDifferential engine check (no artifacts needed): run <app> through\nboth the functional execution engine and the cycle-accurate simulator\non identical inputs and compare outputs word-for-word and reported\nstats field-by-field. On divergence, prints the first mismatching\ndrain port, output coordinate, and cycle (docs/execution.md).",
+        "run" => "usage: pushmem run <app> [--extent WxH] [--artifacts D] [--engine E]\n\n  --extent WxH    execute a whole image of this output extent through\n                  the tile planner (docs/tiling.md) and validate\n                  bit-exactly against the host-side whole-image golden\n                  model — no artifacts needed. Rank must match the\n                  app's output (e.g. 250x250 for the 2-D stencils).\n  --artifacts D   directory of HLO golden artifacts (default: artifacts)\n  --engine E      exec|sim|auto (default: auto) — docs/execution.md\n\nWithout --extent: execute one app at its compiled tile and validate\nbit-exactly against the XLA golden model (requires `make artifacts`).",
+        "validate" => "usage: pushmem validate <app>|--all\n\nDifferential engine check (no artifacts needed): run the app through\nboth the functional execution engine and the cycle-accurate simulator\non identical inputs and compare outputs word-for-word and reported\nstats field-by-field. On divergence, prints the first mismatching\ndrain port, output coordinate, and cycle (docs/execution.md).\n--all cross-checks every primary app and fails if any diverges\n(`make validate-all`).",
         "report" => "usage: pushmem report [--artifacts D] [--engine E]\n\n  --artifacts D   directory of HLO golden artifacts (default: artifacts)\n  --engine E      exec|sim|auto (default: auto)\n\nAll seven Table III apps: Table IV resources plus Fig 13/14 rows.",
         "tables" => "usage: pushmem tables\n\nReproduce Tables V (Harris schedules), VI and VII (optimized vs\nsequential mappings).",
         "tune" => "usage: pushmem tune <app> [--objective O] [--budget N] [--workers N] [--seed S] [--cache-dir D] [--engine E]\n\n  --objective O   cycles|energy|pes|area|pareto (default: cycles)\n  --budget N      max candidates to score (default: 24)\n  --workers N     evaluation threads (default: all cores)\n  --seed S        enumeration seed (default: 1)\n  --cache-dir D   content-addressed result cache (default: dse-cache;\n                  'none' disables caching)\n  --engine E      exec|sim|auto (default: auto) — exec scores an order\n                  of magnitude more candidates/sec at identical scores\n\nSearch the schedule space of <app>: enumerate tile/store_at/unroll/\nhost candidates, prune analytically, score survivors in parallel\n(each validated bit-exact against the functional reference), rank by\nthe objective, and record the winner for `serve --tuned-dir`. For\nharris the ranking is compared against the six hand-written Table V\nschedules. See docs/dse.md.",
-        "serve" => "usage: pushmem serve <app> [--addr A] [--workers N] [--stats] [--tuned-dir D] [--engine E]\n\n  --addr A      listen address (default: 127.0.0.1:7411)\n  --workers N   connection worker threads (default: 4; a connection\n                holds its worker until it disconnects)\n  --stats       print one [req] line per served request\n  --tuned-dir D use the tuner-recorded best schedule from D when one\n                exists (see `pushmem tune`); falls back to the\n                hand-written schedule otherwise\n  --engine E    exec|sim|auto (default: auto) — the functional engine\n                serves requests in microseconds; sim stays available\n                as the cycle-accurate reference (docs/execution.md)\n\nCompile <app> and serve tiles over TCP. v1 frames target <app>; v2\nframes may name any registered app (docs/protocol.md).",
+        "serve" => "usage: pushmem serve <app> [--addr A] [--workers N] [--stats] [--extent WxH] [--tuned-dir D] [--engine E]\n\n  --addr A      listen address (default: 127.0.0.1:7411)\n  --workers N   connection worker threads (default: 4; a connection\n                holds its worker until it disconnects, and idle\n                workers join in-flight whole-image tile batches)\n  --stats       print one [req] line per served request\n  --extent WxH  pre-build (warm) the tile plan for this whole-image\n                output extent so the first v3 request at that size\n                pays nothing (docs/tiling.md)\n  --tuned-dir D use the tuner-recorded best schedule from D when one\n                exists (see `pushmem tune`); falls back to the\n                hand-written schedule otherwise\n  --engine E    exec|sim|auto (default: auto) — the functional engine\n                serves requests in microseconds; sim stays available\n                as the cycle-accurate reference (docs/execution.md)\n\nCompile <app> and serve tiles over TCP. v1 frames target <app>; v2\nframes may name any registered app; v3 frames carry a whole-image\noutput extent, tiled onto the fixed design (docs/protocol.md).",
         "serve-all" => "usage: pushmem serve-all [--addr A] [--workers N] [--apps a,b,c] [--warm] [--tuned-dir D] [--engine E]\n\n  --addr A      listen address (default: 127.0.0.1:7411)\n  --workers N   connection worker threads (default: 8)\n  --apps LIST   comma-separated app names to register (default: the\n                seven Table III apps; variants like harris_sch4 allowed)\n  --warm        compile every registered app up front instead of lazily\n                on first request\n  --tuned-dir D per-app tuner-recorded schedules from D override the\n                hand-written defaults (see `pushmem tune`)\n  --engine E    exec|sim|auto (default: auto)\n\nServe every registered app over one TCP port (v2 frames carry the app\nname; see docs/protocol.md). Designs are compiled once, cached, and\nshared across connections. Prints one [req] stats line per request.",
         _ => "usage: pushmem <list|compile|run|validate|report|tables|tune|serve|serve-all> [args]\nsee `pushmem list` for applications and `pushmem <cmd> --help` for flags",
     }
@@ -76,6 +78,29 @@ fn usage(cmd: &str) -> &'static str {
 /// Shared `--engine exec|sim|auto` flag (default: auto).
 fn engine_flag(args: &[String]) -> Result<Engine> {
     Engine::parse(&flag_value(args, "--engine", "auto")?)
+}
+
+/// Optional `--extent WxH[xD...]` flag: per-dim output extents,
+/// outermost first, `x`-separated (`250x250`).
+fn extent_flag(args: &[String]) -> Result<Option<Vec<i64>>> {
+    let raw = flag_value(args, "--extent", "")?;
+    if raw.is_empty() {
+        return Ok(None);
+    }
+    let extent: Vec<i64> = raw
+        .split(['x', 'X'])
+        .map(|p| {
+            p.parse::<i64>()
+                .ok()
+                .filter(|&e| e >= 1)
+                .with_context(|| format!("--extent {raw:?}: {p:?} is not a positive integer"))
+        })
+        .collect::<Result<_>>()?;
+    Ok(Some(extent))
+}
+
+fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
 fn cmd_list() {
@@ -117,6 +142,77 @@ fn cmd_compile(name: &str) -> Result<()> {
         pushmem::cgra::bitstream::size_bytes(&bs)
     );
     Ok(())
+}
+
+/// `pushmem run <app> --extent WxH`: whole-image execution through
+/// the tile planner, validated bit-exactly against the host-side
+/// whole-image golden (the same program lowered at `tile = extent`
+/// and executed functionally) — the no-artifacts differential that
+/// proves arbitrary-extent serving end to end (docs/tiling.md).
+fn cmd_run_tiled(name: &str, extent: &[i64], engine: Engine) -> Result<()> {
+    let (program, _) =
+        apps::by_name(name).with_context(|| format!("unknown app {name}"))?;
+    let compiled_tile =
+        apps::tile_extent(name).expect("registered app has a schedule tile");
+    anyhow::ensure!(
+        extent.len() == compiled_tile.len(),
+        "--extent rank {} != {name}'s output rank {} (compiled tile {:?})",
+        extent.len(),
+        compiled_tile.len(),
+        compiled_tile
+    );
+    let c = Arc::new(compile(&program)?);
+    let plan = c.tile_plan(extent)?;
+
+    let mut full = program.clone();
+    full.schedule.tile = extent.to_vec();
+    let lp = pushmem::halide::lower::lower(&full)
+        .context("lowering the whole-image golden")?;
+    let inputs = pushmem::coordinator::gen_inputs(&lp);
+    let golden = lp.execute(&inputs).context("whole-image golden execution")?
+        [&lp.output]
+        .clone();
+
+    let workers = default_workers();
+    let t0 = std::time::Instant::now();
+    let res = pushmem::tile::run_tiled(&c, engine, extent, inputs, workers)?;
+    let wall = t0.elapsed();
+
+    let mut mismatch: Option<Vec<i64>> = None;
+    res.output.shape.for_each_point(|p| {
+        if mismatch.is_none() && res.output.get(p) != golden.get(p) {
+            mismatch = Some(p.to_vec());
+        }
+    });
+
+    let fmt_extent = |e: &[i64]| {
+        e.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("x")
+    };
+    println!("app               {name}");
+    println!("engine            {}", res.engine.name());
+    println!("compiled tile     {}", fmt_extent(&plan.tile));
+    println!("output extent     {}", fmt_extent(extent));
+    println!("tiles             {} ({} workers)", res.tiles, workers);
+    for (inp, b) in plan.input_names.iter().zip(&plan.input_boxes) {
+        println!("input {inp:<11} {} words, box {b}", b.cardinality());
+    }
+    println!("cycles            {} total ({} per tile)", res.stats.cycles, c.graph.completion);
+    println!("words out         {}", res.output.data.len());
+    println!("host wall         {:.3} ms", wall.as_secs_f64() * 1e3);
+    match &mismatch {
+        None => {
+            println!("tiled vs golden   MATCH (bit-exact over the whole image)");
+            Ok(())
+        }
+        Some(p) => {
+            println!(
+                "tiled vs golden   MISMATCH at {p:?}: tiled {}, golden {}",
+                res.output.get(p),
+                golden.get(p)
+            );
+            bail!("tiled execution diverged from the whole-image golden");
+        }
+    }
 }
 
 fn cmd_run(name: &str, artifacts: &str, engine: Engine) -> Result<()> {
@@ -189,6 +285,51 @@ fn cmd_validate(name: &str) -> Result<()> {
             bail!("engines diverged at cycle {}", d.cycle);
         }
     }
+}
+
+/// `pushmem validate --all`: the engine cross-check over every
+/// primary app — the CI gate behind `make validate-all`.
+fn cmd_validate_all() -> Result<()> {
+    println!(
+        "{:<12} {:>8} {:>12} {:>12}  verdict",
+        "app", "words", "sim cycles", "exec cycles"
+    );
+    let mut failed: Vec<String> = Vec::new();
+    for name in apps::PRIMARY {
+        let (program, _) = apps::by_name(name).expect("primary app registered");
+        let outcome = compile(&program).and_then(|c| cross_check(&c));
+        match outcome {
+            Ok(cc) if cc.matched() => println!(
+                "{:<12} {:>8} {:>12} {:>12}  MATCH",
+                name, cc.words, cc.sim_cycles, cc.exec_cycles
+            ),
+            Ok(cc) => {
+                println!(
+                    "{:<12} {:>8} {:>12} {:>12}  DIVERGED{}",
+                    name,
+                    cc.words,
+                    cc.sim_cycles,
+                    cc.exec_cycles,
+                    cc.divergence
+                        .as_ref()
+                        .map(|d| format!(" at {:?} (cycle {})", d.coord, d.cycle))
+                        .unwrap_or_else(|| " (stats only)".into())
+                );
+                failed.push(name.to_string());
+            }
+            Err(e) => {
+                println!("{name:<12} ERROR: {e:#}");
+                failed.push(name.to_string());
+            }
+        }
+    }
+    anyhow::ensure!(
+        failed.is_empty(),
+        "engine cross-check failed for: {}",
+        failed.join(", ")
+    );
+    println!("all {} primary apps: engines MATCH", apps::PRIMARY.len());
+    Ok(())
 }
 
 fn cmd_report(artifacts: &str, engine: Engine) -> Result<()> {
@@ -428,6 +569,18 @@ fn cmd_serve(name: &str, args: &[String]) -> Result<()> {
         apps::by_name(name).with_context(|| format!("unknown app {name}"))?;
     let dir = (!tuned_dir.is_empty()).then(|| std::path::Path::new(&tuned_dir));
     let c = pushmem::coordinator::compile_maybe_tuned(&program, name, dir)?;
+    if let Some(extent) = extent_flag(args)? {
+        // Warm the tiling plan so the first v3 request at this size
+        // pays nothing; the plan cache rides into the server with `c`.
+        let plan = c
+            .tile_plan(&extent)
+            .with_context(|| format!("warming tile plan for --extent {extent:?}"))?;
+        eprintln!(
+            "warmed tile plan: extent {extent:?} -> {} tiles of {:?}",
+            plan.tile_count(),
+            plan.tile
+        );
+    }
     serve::serve(name, c, &addr, workers, stats, engine)
 }
 
@@ -486,15 +639,22 @@ fn main() -> Result<()> {
         }
         Some("run") => {
             let name = args.get(1).context("usage: pushmem run <app>")?;
-            cmd_run(
-                name,
-                &flag_value(&args, "--artifacts", "artifacts")?,
-                engine_flag(&args)?,
-            )
+            match extent_flag(&args)? {
+                Some(extent) => cmd_run_tiled(name, &extent, engine_flag(&args)?),
+                None => cmd_run(
+                    name,
+                    &flag_value(&args, "--artifacts", "artifacts")?,
+                    engine_flag(&args)?,
+                ),
+            }
         }
         Some("validate") => {
-            let name = args.get(1).context("usage: pushmem validate <app>")?;
-            cmd_validate(name)
+            let name = args.get(1).context("usage: pushmem validate <app>|--all")?;
+            if name == "--all" {
+                cmd_validate_all()
+            } else {
+                cmd_validate(name)
+            }
         }
         Some("report") => cmd_report(
             &flag_value(&args, "--artifacts", "artifacts")?,

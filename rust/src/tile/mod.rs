@@ -1,0 +1,42 @@
+//! `tile` — the halo-aware tiling planner: serve **any** output extent
+//! on the fixed-extent compiled design.
+//!
+//! The paper's accelerator executes one pass over a fixed output tile
+//! (64×64-input scale); everything above it in this repo — apps,
+//! protocol, server — historically inherited that limit. This layer
+//! removes it with the host/accelerator split the paper assumes and
+//! Pu et al. make explicit in *"Programming Heterogeneous Systems
+//! from an Image Processing DSL"*: the host decomposes the requested
+//! image into compiled-tile-sized pieces, gathers each tile's input
+//! slice **with its stencil halo**, replays the unchanged accelerator
+//! design per tile, and stitches the results.
+//!
+//! * [`TilePlan`] is the pure planning half: built once per
+//!   `(design, extent)` and cached on
+//!   [`crate::coordinator::Compiled::tile_plan`], it uses polyhedral
+//!   bounds inference ([`crate::halide::bounds::infer_boxes`] via
+//!   [`crate::halide::LoweredPipeline::footprint`]) to derive the
+//!   whole-image input boxes a request must supply and, per tile, the
+//!   translation from the design's declared input boxes into
+//!   whole-image coordinates. Edge tiles are **clamped**: their
+//!   origins shift back so every accelerator pass runs at the full
+//!   compiled extent, recomputing the overlap (bit-identical by
+//!   shift-invariance of the affine access structure, which the
+//!   planner verifies per tile).
+//! * [`TileBatch`] is the execution half: a cooperative work queue of
+//!   per-tile runs over the design's cached engine plan
+//!   ([`crate::coordinator::Compiled::runner`], ExecPlan-preferred
+//!   with SimRun fallback). Any number of threads may join via
+//!   [`TileBatch::work`] — the serving worker pool recruits idle
+//!   workers into a large request this way
+//!   (`coordinator/serve.rs`) — and [`TileBatch::wait`] stitches the
+//!   finished tiles and sums their [`crate::cgra::SimStats`].
+//!
+//! Full halo math, edge-clamping rationale, and the v3 wire frames
+//! that carry requested extents: docs/tiling.md.
+
+pub mod plan;
+pub mod run;
+
+pub use plan::{TilePlan, TileSlot};
+pub use run::{run_tiled, TileBatch, TiledResult};

@@ -1,0 +1,346 @@
+//! [`TilePlan`]: the pure planning half of arbitrary-extent serving.
+//!
+//! Built once per `(compiled design, requested output extent)` and
+//! cached on [`Compiled::tile_plan`], a plan holds everything the
+//! execution half needs that does not depend on request payloads: the
+//! whole-image input boxes a request must supply, the clamped tile
+//! origins covering the requested extent, and — per tile, per input —
+//! the translation from the design's declared input box into
+//! whole-image coordinates (docs/tiling.md).
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::Compiled;
+use crate::halide::bounds::Intervals;
+use crate::poly::set::{BoxSet, Dim};
+use crate::tensor::Tensor;
+
+/// One accelerator pass of the plan: where its (full-extent) output
+/// tile lands in the image, and where each input slice is read from.
+#[derive(Clone, Debug)]
+pub struct TileSlot {
+    /// Output-tile origin per output pure dim (absolute image coords).
+    /// Edge tiles are clamped back so `origin + tile <= extent`
+    /// whenever the extent allows a full tile.
+    pub origin: Vec<i64>,
+    /// Per input (in declared order): the per-dim translation from the
+    /// design's declared input box into whole-image coordinates
+    /// (`image_coord = local_coord + shift`). Derived from the tile's
+    /// polyhedral footprint, so it carries the stencil halo exactly.
+    pub input_shift: Vec<Vec<i64>>,
+}
+
+/// A tiling of one requested output extent onto one compiled design.
+#[derive(Clone, Debug)]
+pub struct TilePlan {
+    /// Requested output extents, per output pure dim.
+    pub extent: Vec<i64>,
+    /// Stitched output box: zero-based, `extent` per dim (the box the
+    /// response words are row-major over).
+    pub out_box: BoxSet,
+    /// The design's compiled per-tile output extents
+    /// ([`crate::halide::LoweredPipeline::tile`]).
+    pub tile: Vec<i64>,
+    /// Declared input names, in request order.
+    pub input_names: Vec<String>,
+    /// Whole-image box per input — what a request must supply, halo
+    /// included (`footprint` of the full requested extent).
+    pub input_boxes: Vec<BoxSet>,
+    /// The design's declared per-tile input boxes (what every
+    /// accelerator pass consumes).
+    pub compiled_input_boxes: Vec<BoxSet>,
+    /// The accelerator passes, in scatter order.
+    pub tiles: Vec<TileSlot>,
+}
+
+/// Clamped 1-D tile origins covering `[0, h)` with stride/width `t`:
+/// full tiles at multiples of `t`, and a final origin shifted back to
+/// `h - t` when `h` is not a multiple (the overlap is recomputed and
+/// restitched bit-identically). `h <= t` degenerates to one tile at 0
+/// whose overhang is fed by clamp-to-edge gathering and cropped away.
+fn origins_1d(h: i64, t: i64) -> Vec<i64> {
+    if h <= t {
+        return vec![0];
+    }
+    let mut v = Vec::new();
+    let mut x = 0;
+    while x + t < h {
+        v.push(x);
+        x += t;
+    }
+    v.push(h - t);
+    v
+}
+
+impl TilePlan {
+    /// Plan the decomposition of `extent` onto `c`'s fixed design.
+    ///
+    /// Fails when the rank does not match the design's output, when an
+    /// extent is non-positive, or when the access structure is not
+    /// tileable by translation (a tile's input footprint would need a
+    /// different extent than the design's declared box — no registered
+    /// app does this; the guard keeps the planner honest if one ever
+    /// does).
+    pub fn build(c: &Compiled, extent: &[i64]) -> Result<TilePlan> {
+        let lp = &c.lp;
+        anyhow::ensure!(
+            extent.len() == lp.tile.len(),
+            "output extent rank {} != design output rank {} (tile {:?})",
+            extent.len(),
+            lp.tile.len(),
+            lp.tile
+        );
+        for (k, &e) in extent.iter().enumerate() {
+            anyhow::ensure!(e >= 1, "output extent {e} at dim {k} must be >= 1");
+        }
+
+        // Whole-image inference: the input boxes a request must
+        // supply. Identical to lowering the same program at
+        // `tile = extent` — the host-side golden model's boxes.
+        let full: Intervals = extent.iter().map(|&e| (0, e - 1)).collect();
+        let full_fp = lp.footprint(&full).context("whole-image bounds inference")?;
+        let mut input_boxes = Vec::with_capacity(lp.inputs.len());
+        let mut compiled_input_boxes = Vec::with_capacity(lp.inputs.len());
+        for name in &lp.inputs {
+            let compiled = &lp.buffers[name];
+            let names: Vec<String> = compiled.dims.iter().map(|d| d.name.clone()).collect();
+            input_boxes.push(crate::halide::bounds::intervals_to_box(&names, &full_fp[name]));
+            compiled_input_boxes.push(compiled.clone());
+        }
+
+        // Clamped tile origins, cartesian across dims.
+        let per_dim: Vec<Vec<i64>> = extent
+            .iter()
+            .zip(&lp.tile)
+            .map(|(&h, &t)| origins_1d(h, t))
+            .collect();
+        let mut origin_list: Vec<Vec<i64>> = vec![Vec::new()];
+        for dim_origins in &per_dim {
+            let mut next = Vec::with_capacity(origin_list.len() * dim_origins.len());
+            for prefix in &origin_list {
+                for &o in dim_origins {
+                    let mut p = prefix.clone();
+                    p.push(o);
+                    next.push(p);
+                }
+            }
+            origin_list = next;
+        }
+
+        // Per tile: range the same access structure at the tile's
+        // absolute output box and read off each input's translation.
+        // The extents must reproduce the design's declared boxes —
+        // every pass runs the unchanged fixed design.
+        let mut tiles = Vec::with_capacity(origin_list.len());
+        for origin in origin_list {
+            let out: Intervals =
+                origin.iter().zip(&lp.tile).map(|(&o, &t)| (o, o + t - 1)).collect();
+            let fp = lp
+                .footprint(&out)
+                .with_context(|| format!("tile footprint at origin {origin:?}"))?;
+            for (name, compiled) in &lp.buffers {
+                let iv = fp
+                    .get(name)
+                    .with_context(|| format!("buffer {name} missing from tile footprint"))?;
+                for (k, (d, &(lo, hi))) in compiled.dims.iter().zip(iv).enumerate() {
+                    anyhow::ensure!(
+                        hi - lo + 1 == d.extent,
+                        "buffer {name} dim {k}: footprint extent {} at tile origin \
+                         {origin:?} != compiled extent {} — access structure is not \
+                         tileable by translation",
+                        hi - lo + 1,
+                        d.extent
+                    );
+                }
+            }
+            let input_shift = lp
+                .inputs
+                .iter()
+                .map(|name| {
+                    lp.buffers[name]
+                        .dims
+                        .iter()
+                        .zip(&fp[name])
+                        .map(|(d, &(lo, _))| lo - d.min)
+                        .collect()
+                })
+                .collect();
+            tiles.push(TileSlot { origin, input_shift });
+        }
+
+        let out_box = BoxSet::new(
+            lp.buffers[&lp.output]
+                .dims
+                .iter()
+                .zip(extent)
+                .map(|(d, &e)| Dim::new(d.name.clone(), 0, e))
+                .collect(),
+        );
+        Ok(TilePlan {
+            extent: extent.to_vec(),
+            out_box,
+            tile: lp.tile.clone(),
+            input_names: lp.inputs.clone(),
+            input_boxes,
+            compiled_input_boxes,
+            tiles,
+        })
+    }
+
+    pub fn tile_count(&self) -> usize {
+        self.tiles.len()
+    }
+
+    /// Expected whole-image word count per input, in request order —
+    /// the numbers the server's diagnostics quote back to clients.
+    pub fn expected_words(&self) -> Vec<(&str, i64)> {
+        self.input_names
+            .iter()
+            .map(String::as_str)
+            .zip(self.input_boxes.iter().map(BoxSet::cardinality))
+            .collect()
+    }
+
+    /// Validate a request's whole-image tensors: every declared input
+    /// present with exactly the plan's box layout.
+    pub fn check_inputs(&self, inputs: &BTreeMap<String, Tensor>) -> Result<()> {
+        for (name, b) in self.input_names.iter().zip(&self.input_boxes) {
+            let t = inputs
+                .get(name)
+                .with_context(|| format!("missing input {name}"))?;
+            anyhow::ensure!(
+                t.shape.same_layout(b),
+                "input {name}: tensor box {} does not match the whole-image box {b}",
+                t.shape
+            );
+        }
+        Ok(())
+    }
+
+    /// Build the input slices one accelerator pass consumes: tensors
+    /// over the design's declared boxes, filled from the whole-image
+    /// tensors at the tile's shifted footprint. Reads outside the
+    /// whole-image box clamp to the image edge — those samples only
+    /// ever feed output pixels outside the requested extent (the
+    /// overhang of a tile wider than the image), which stitching
+    /// discards, so clamping never alters a served word.
+    pub fn gather(
+        &self,
+        slot: &TileSlot,
+        inputs: &BTreeMap<String, Tensor>,
+    ) -> BTreeMap<String, Tensor> {
+        let mut out = BTreeMap::new();
+        for (k, name) in self.input_names.iter().enumerate() {
+            let full = &inputs[name];
+            let compiled = &self.compiled_input_boxes[k];
+            let shift = &slot.input_shift[k];
+            let slice = if shift.iter().all(|&s| s == 0) && full.shape.same_layout(compiled)
+            {
+                full.clone()
+            } else {
+                let mut q = vec![0i64; compiled.rank()];
+                Tensor::from_fn(compiled.clone(), |p| {
+                    for (qk, (&pk, &sk)) in q.iter_mut().zip(p.iter().zip(shift)) {
+                        *qk = pk + sk;
+                    }
+                    full.get_clamped(&q)
+                })
+            };
+            out.insert(name.clone(), slice);
+        }
+        out
+    }
+
+    /// Copy one finished tile into the stitched output, cropped to the
+    /// requested extent. Clamped tiles overlap their neighbours; the
+    /// overlap re-writes bit-identical words (same design, same input
+    /// slice values), so scatter order is irrelevant.
+    pub fn scatter(&self, slot: &TileSlot, tile_out: &Tensor, out: &mut Tensor) {
+        let clip = BoxSet::new(
+            self.out_box
+                .dims
+                .iter()
+                .zip(&slot.origin)
+                .zip(&self.tile)
+                .map(|((d, &o), &t)| {
+                    Dim::new(d.name.clone(), o, (o + t).min(d.min + d.extent) - o)
+                })
+                .collect(),
+        );
+        let mut local = vec![0i64; clip.rank()];
+        clip.for_each_point(|p| {
+            for (lk, (&pk, &ok)) in local.iter_mut().zip(p.iter().zip(&slot.origin)) {
+                *lk = pk - ok;
+            }
+            out.set(p, tile_out.get(&local));
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::coordinator::compile;
+
+    #[test]
+    fn origins_clamp_at_the_edge() {
+        assert_eq!(origins_1d(28, 14), vec![0, 14]);
+        assert_eq!(origins_1d(33, 14), vec![0, 14, 19]);
+        assert_eq!(origins_1d(250, 62), vec![0, 62, 124, 186, 188]);
+        assert_eq!(origins_1d(14, 14), vec![0]);
+        assert_eq!(origins_1d(9, 14), vec![0]);
+    }
+
+    #[test]
+    fn gaussian_plan_shapes() {
+        let c = compile(&apps::gaussian::build(14)).unwrap();
+        let plan = TilePlan::build(&c, &[33, 20]).unwrap();
+        assert_eq!(plan.tile_count(), 6, "origins {:?}", plan.tiles);
+        // 3x3 stencil: whole-image input is extent+2 per side.
+        assert_eq!(plan.input_boxes[0].dims[0].extent, 35);
+        assert_eq!(plan.input_boxes[0].dims[1].extent, 22);
+        assert_eq!(plan.expected_words(), vec![("input", 35 * 22)]);
+        // Identity access: each tile's input shift is its origin.
+        for slot in &plan.tiles {
+            assert_eq!(slot.input_shift[0], slot.origin);
+        }
+        assert_eq!(plan.tiles[0].origin, vec![0, 0]);
+        assert_eq!(plan.tiles.last().unwrap().origin, vec![19, 6]);
+    }
+
+    #[test]
+    fn extent_smaller_than_tile_is_one_clamped_pass() {
+        let c = compile(&apps::gaussian::build(14)).unwrap();
+        let plan = TilePlan::build(&c, &[9, 9]).unwrap();
+        assert_eq!(plan.tile_count(), 1);
+        assert_eq!(plan.input_boxes[0].dims[0].extent, 11);
+        assert_eq!(plan.out_box.cardinality(), 81);
+    }
+
+    #[test]
+    fn rank_and_extent_validation() {
+        let c = compile(&apps::gaussian::build(14)).unwrap();
+        assert!(TilePlan::build(&c, &[33]).is_err());
+        assert!(TilePlan::build(&c, &[33, 0]).is_err());
+    }
+
+    #[test]
+    fn gather_is_a_pure_translation_inside_the_image() {
+        let c = compile(&apps::gaussian::build(14)).unwrap();
+        let plan = TilePlan::build(&c, &[33, 20]).unwrap();
+        let full = Tensor::from_fn(plan.input_boxes[0].clone(), |p| {
+            (100 * p[0] + p[1]) as i32
+        });
+        let mut inputs = BTreeMap::new();
+        inputs.insert("input".to_string(), full.clone());
+        let slot = &plan.tiles[plan.tile_count() - 1]; // origin [19, 6]
+        let slice = &plan.gather(slot, &inputs)["input"];
+        assert!(slice.shape.same_layout(&c.lp.buffers["input"]));
+        // Local (0,0) reads image (19,6); local (15,15) reads (34,21).
+        assert_eq!(slice.get(&[0, 0]), full.get(&[19, 6]));
+        assert_eq!(slice.get(&[15, 15]), full.get(&[34, 21]));
+    }
+}

@@ -1,0 +1,318 @@
+//! [`TileBatch`]: the execution half of arbitrary-extent serving — a
+//! cooperative work queue of per-tile accelerator passes.
+//!
+//! One batch is one whole-image request: the plan's tiles are claimed
+//! off a shared atomic cursor and executed through the design's cached
+//! engine plan ([`crate::coordinator::Compiled::runner`] — fused
+//! functional kernels when the design supports them, the
+//! cycle-accurate simulator otherwise). **Any** thread may join the
+//! drain via [`TileBatch::work`]: the standalone path
+//! ([`run_tiled`]) spawns scoped helpers, while the serving worker
+//! pool posts the batch to its own job queue so idle connection
+//! workers pick tiles up and one large request saturates the pool
+//! (`coordinator/serve.rs`). Progress never depends on helpers — the
+//! submitting thread drains every unclaimed tile itself, so a fully
+//! busy pool degrades to sequential execution, not deadlock.
+//!
+//! [`TileBatch::wait`] blocks until every claimed tile has landed,
+//! then stitches the clipped tile outputs into the whole image and
+//! sums the per-tile [`SimStats`] (the sequential-replay totals one
+//! accelerator would spend).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::cgra::{SimResult, SimStats};
+use crate::coordinator::Compiled;
+use crate::exec::Engine;
+use crate::tensor::Tensor;
+
+use super::plan::TilePlan;
+
+/// A stitched whole-image result.
+pub struct TiledResult {
+    /// Row-major over the plan's `out_box` (zero-based, the requested
+    /// extents).
+    pub output: Tensor,
+    /// Field-wise sum of the per-tile runs.
+    pub stats: SimStats,
+    /// How many accelerator passes the image took.
+    pub tiles: usize,
+    /// The concrete engine that executed the passes (`Auto` resolved).
+    pub engine: Engine,
+}
+
+struct BatchState {
+    results: Vec<Option<SimResult>>,
+    finished: usize,
+    failed: Option<String>,
+    engine_used: Option<Engine>,
+}
+
+/// One in-flight whole-image request (see module docs).
+pub struct TileBatch {
+    c: Arc<Compiled>,
+    engine: Engine,
+    plan: Arc<TilePlan>,
+    inputs: BTreeMap<String, Tensor>,
+    /// Next unclaimed tile index; `>= tile_count` once drained (or
+    /// poisoned to stop claims after a failure).
+    next: AtomicUsize,
+    state: Mutex<BatchState>,
+    done: Condvar,
+}
+
+impl TileBatch {
+    /// Validate the whole-image inputs against the plan and wrap the
+    /// request for execution.
+    pub fn new(
+        c: Arc<Compiled>,
+        engine: Engine,
+        plan: Arc<TilePlan>,
+        inputs: BTreeMap<String, Tensor>,
+    ) -> Result<Arc<TileBatch>> {
+        plan.check_inputs(&inputs)?;
+        let tiles = plan.tile_count();
+        Ok(Arc::new(TileBatch {
+            c,
+            engine,
+            plan,
+            inputs,
+            next: AtomicUsize::new(0),
+            state: Mutex::new(BatchState {
+                results: (0..tiles).map(|_| None).collect(),
+                finished: 0,
+                failed: None,
+                engine_used: None,
+            }),
+            done: Condvar::new(),
+        }))
+    }
+
+    pub fn tile_count(&self) -> usize {
+        self.plan.tile_count()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BatchState> {
+        // A panicking claimant already recorded its failure through
+        // the catch_unwind in `work`; the state it guards is only
+        // Options and counters, so recovery is safe.
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn fail(&self, msg: String) {
+        self.next.store(self.plan.tile_count(), Ordering::Relaxed);
+        let mut st = self.lock();
+        if st.failed.is_none() {
+            st.failed = Some(msg);
+        }
+        drop(st);
+        self.done.notify_all();
+    }
+
+    /// Claim and execute tiles until none remain unclaimed; safe to
+    /// call from any number of threads, and returns quickly when the
+    /// batch is already drained (stale helper wake-ups are free).
+    /// Each participant builds one engine runner lazily on its first
+    /// claim and reuses it for every subsequent tile.
+    pub fn work(&self) {
+        let mut runner = None;
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.plan.tile_count() {
+                return;
+            }
+            if runner.is_none() {
+                match self.c.runner(self.engine) {
+                    Ok(r) => runner = Some(r),
+                    Err(e) => return self.fail(format!("building engine runner: {e:#}")),
+                }
+            }
+            if !self.step(i, runner.as_mut().expect("runner just built")) {
+                return;
+            }
+        }
+    }
+
+    /// [`TileBatch::work`] with a caller-provided runner — the serving
+    /// path lends its per-connection cached [`EngineRun`] so a v3
+    /// request on a warm connection pays no runner setup, keeping the
+    /// fixed-box path's "no per-request setup" invariant.
+    pub fn work_with(&self, runner: &mut crate::exec::EngineRun) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.plan.tile_count() {
+                return;
+            }
+            if !self.step(i, runner) {
+                return;
+            }
+        }
+    }
+
+    /// Execute one claimed tile; returns `false` when the batch
+    /// failed and the claimant should stop.
+    fn step(&self, i: usize, r: &mut crate::exec::EngineRun) -> bool {
+        // A panic inside an engine must not strand the batch: the
+        // submitter waits on the finished count, so every claimed
+        // tile has to resolve to a result or a recorded failure.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let slice = self.plan.gather(&self.plan.tiles[i], &self.inputs);
+            r.run(&slice)
+        }));
+        match outcome {
+            Ok(Ok(res)) => {
+                let mut st = self.lock();
+                st.engine_used.get_or_insert(r.engine());
+                st.results[i] = Some(res);
+                st.finished += 1;
+                let all = st.finished == self.plan.tile_count();
+                drop(st);
+                if all {
+                    self.done.notify_all();
+                }
+                true
+            }
+            Ok(Err(e)) => {
+                self.fail(format!("tile {i}: {e:#}"));
+                false
+            }
+            Err(_) => {
+                self.fail(format!("tile {i}: engine panicked"));
+                false
+            }
+        }
+    }
+
+    /// Block until every tile has finished (or the batch failed), then
+    /// stitch. Callable from the submitting thread while helpers are
+    /// still landing their last claims.
+    pub fn wait(&self) -> Result<TiledResult> {
+        let mut st = self.lock();
+        loop {
+            if let Some(e) = &st.failed {
+                bail!("tiled execution failed: {e}");
+            }
+            if st.finished == self.plan.tile_count() {
+                break;
+            }
+            st = self.done.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+        let mut output = Tensor::zeros(self.plan.out_box.clone());
+        let mut stats = SimStats::default();
+        for (slot, res) in self.plan.tiles.iter().zip(&st.results) {
+            let res = res.as_ref().expect("finished tile has a result");
+            stats += res.stats;
+            self.plan.scatter(slot, &res.output, &mut output);
+        }
+        Ok(TiledResult {
+            output,
+            stats,
+            tiles: self.plan.tile_count(),
+            engine: st.engine_used.unwrap_or(self.engine),
+        })
+    }
+
+    /// Drain the batch on the calling thread plus up to `workers - 1`
+    /// scoped helper threads — the standalone (CLI / test / bench)
+    /// path; serving recruits its worker pool instead.
+    pub fn run_local(self: &Arc<Self>, workers: usize) -> Result<TiledResult> {
+        let helpers = workers
+            .saturating_sub(1)
+            .min(self.tile_count().saturating_sub(1));
+        std::thread::scope(|s| {
+            for _ in 0..helpers {
+                let b = Arc::clone(self);
+                s.spawn(move || b.work());
+            }
+            self.work();
+        });
+        self.wait()
+    }
+}
+
+/// One-call tiled execution: plan (cached on `c`), batch, drain with
+/// `workers` threads, stitch.
+pub fn run_tiled(
+    c: &Arc<Compiled>,
+    engine: Engine,
+    extent: &[i64],
+    inputs: BTreeMap<String, Tensor>,
+    workers: usize,
+) -> Result<TiledResult> {
+    let plan = c.tile_plan(extent)?;
+    TileBatch::new(Arc::clone(c), engine, plan, inputs)?.run_local(workers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::coordinator::compile;
+    use crate::halide::lower;
+
+    /// Whole-image host golden: the same program lowered at
+    /// `tile = extent`, executed functionally.
+    fn golden(
+        name_tile: i64,
+        extent: &[i64],
+    ) -> (BTreeMap<String, Tensor>, Tensor) {
+        let mut p = apps::gaussian::build(name_tile);
+        p.schedule.tile = extent.to_vec();
+        let lp = lower::lower(&p).unwrap();
+        let inputs = crate::coordinator::gen_inputs(&lp);
+        let out = lp.execute(&inputs).unwrap()[&lp.output].clone();
+        (inputs, out)
+    }
+
+    #[test]
+    fn stitched_output_matches_whole_image_golden() {
+        let c = Arc::new(compile(&apps::gaussian::build(14)).unwrap());
+        for extent in [vec![33, 20], vec![9, 9], vec![14, 14], vec![28, 28]] {
+            let (inputs, want) = golden(14, &extent);
+            for engine in [Engine::Exec, Engine::Sim] {
+                let res =
+                    run_tiled(&c, engine, &extent, inputs.clone(), 3).unwrap();
+                assert_eq!(res.engine, engine);
+                assert!(res.tiles >= 1);
+                res.output.shape.for_each_point(|p| {
+                    assert_eq!(
+                        res.output.get(p),
+                        want.get(p),
+                        "{engine:?} {extent:?} at {p:?}"
+                    );
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn stats_aggregate_across_tiles() {
+        let c = Arc::new(compile(&apps::gaussian::build(14)).unwrap());
+        let (inputs, _) = golden(14, &[28, 28]);
+        let res = run_tiled(&c, Engine::Exec, &[28, 28], inputs, 2).unwrap();
+        assert_eq!(res.tiles, 4);
+        // Four full passes: exactly four times one pass's cycles.
+        let one = c.graph.completion;
+        assert_eq!(res.stats.cycles, 4 * one);
+        assert_eq!(res.output.shape.cardinality(), 28 * 28);
+    }
+
+    #[test]
+    fn bad_inputs_rejected_up_front() {
+        let c = Arc::new(compile(&apps::gaussian::build(14)).unwrap());
+        let plan = c.tile_plan(&[28, 28]).unwrap();
+        let err = TileBatch::new(
+            Arc::clone(&c),
+            Engine::Exec,
+            plan,
+            BTreeMap::new(),
+        )
+        .err()
+        .expect("missing inputs must fail");
+        assert!(format!("{err:#}").contains("missing input"), "{err:#}");
+    }
+}

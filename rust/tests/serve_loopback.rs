@@ -201,3 +201,56 @@ fn repeated_requests_reuse_plan_bit_exactly() {
         assert_eq!(words, expected(&c, &tiles), "tile {k}");
     }
 }
+
+/// v3 over the full stack (`serve-all` multi-app endpoint): a
+/// whole-image request at a non-multiple extent comes back bit-exact
+/// with the host-side whole-image golden model, cycles aggregate
+/// across the clamped tiles, and the same connection still serves
+/// fixed-box v2 frames afterwards — with concurrent whole-image
+/// clients exercising worker recruitment without deadlock.
+#[test]
+fn v3_whole_image_matches_host_golden_over_the_wire() {
+    let registry = Arc::new(CompiledRegistry::new());
+    let addr = spawn_multi_server(Arc::clone(&registry), 3);
+    let extent = vec![100i64, 70];
+
+    // Host golden: gaussian lowered at tile = extent.
+    let (mut program, _) = pushmem::apps::by_name("gaussian").unwrap();
+    program.schedule.tile = extent.clone();
+    let lp = pushmem::halide::lower::lower(&program).unwrap();
+    let inputs = pushmem::coordinator::gen_inputs(&lp);
+    let want = lp.execute(&inputs).unwrap()[&lp.output].clone();
+    let ordered: Vec<Tensor> = lp.inputs.iter().map(|n| inputs[n].clone()).collect();
+
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let (extent, ordered, want) = (&extent, &ordered, &want);
+            handles.push(s.spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                let refs: Vec<&Tensor> = ordered.iter().collect();
+                let (words, cycles, _) =
+                    serve::request_extent(&mut stream, Some("gaussian"), extent, &refs)
+                        .unwrap();
+                assert_eq!(words, want.data, "stitched response != host golden");
+                (words.len(), cycles)
+            }));
+        }
+        for h in handles {
+            let (len, cycles) = h.join().unwrap();
+            assert_eq!(len, 100 * 70);
+            // 100x70 on the 62-tile design: 2x2 clamped tiles.
+            let c = registry.get("gaussian").unwrap();
+            assert_eq!(cycles as i64, 4 * c.graph.completion);
+        }
+    });
+
+    // The endpoint still serves fixed-box v2 frames on a fresh
+    // connection (and the registry was populated by the v3 path).
+    let c = registry.get("gaussian").unwrap();
+    let tiles = tiles_for(&c, 1);
+    let refs: Vec<&Tensor> = tiles.iter().collect();
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let (words, _, _) = serve::request_app(&mut stream, "gaussian", &refs).unwrap();
+    assert_eq!(words, expected(&c, &tiles));
+}

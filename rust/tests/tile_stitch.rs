@@ -1,0 +1,167 @@
+//! Differential tile-stitch suite: arbitrary-extent execution through
+//! the tile planner ([`pushmem::tile`]) must be bit-exact against the
+//! host-side whole-image golden model — the same program lowered at
+//! `tile = extent` and executed functionally — on **both** engines.
+//!
+//! The extents are deliberately not multiples of the compiled tiles
+//! (250x250 and 67x131 against 62/60-tile designs), so every run
+//! exercises clamped edge tiles and overlap restitching; the halo
+//! math itself is exercised by the stencil reach of each app
+//! (gaussian/unsharp read +2 per side, harris +2 with deeper
+//! intermediate chains). The unroll variant (harris_sch4) covers the
+//! rounding path, and the strip-mined rank-4 upsample covers
+//! non-identity (scaling) access maps.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use pushmem::apps;
+use pushmem::coordinator::{compile, gen_inputs};
+use pushmem::exec::Engine;
+use pushmem::halide::{lower, Program};
+use pushmem::tensor::Tensor;
+use pushmem::tile::run_tiled;
+
+/// Whole-image host golden at `extent`: the identical program with
+/// its schedule tile swapped for the full extent, lowered, and
+/// executed functionally. Its input boxes are exactly the boxes the
+/// tile planner derives (both run the same bounds inference), so the
+/// generated inputs feed both paths.
+fn golden(program: &Program, extent: &[i64]) -> (BTreeMap<String, Tensor>, Tensor) {
+    let mut full = program.clone();
+    full.schedule.tile = extent.to_vec();
+    let lp = lower::lower(&full).unwrap_or_else(|e| panic!("golden lower: {e:#}"));
+    let inputs = gen_inputs(&lp);
+    let out = lp
+        .execute(&inputs)
+        .unwrap_or_else(|e| panic!("golden execute: {e:#}"))[&lp.output]
+        .clone();
+    (inputs, out)
+}
+
+fn assert_tiled_matches(program: &Program, extent: &[i64], engine: Engine) {
+    let c = Arc::new(compile(program).unwrap_or_else(|e| panic!("compile: {e:#}")));
+    let (inputs, want) = golden(program, extent);
+    let res = run_tiled(&c, engine, extent, inputs, 4)
+        .unwrap_or_else(|e| panic!("{} {extent:?} {engine:?}: {e:#}", program.name));
+    assert_eq!(res.engine, engine, "{}", program.name);
+    assert!(res.tiles >= 1);
+    res.output.shape.for_each_point(|p| {
+        assert_eq!(
+            res.output.get(p),
+            want.get(p),
+            "{} {extent:?} {engine:?} at {p:?}",
+            program.name
+        );
+    });
+}
+
+fn by_name(name: &str) -> Program {
+    apps::by_name(name).unwrap_or_else(|| panic!("unknown app {name}")).0
+}
+
+// ---- 250x250 (not a multiple of any compiled tile) ----------------
+
+#[test]
+fn gaussian_250x250_exec() {
+    assert_tiled_matches(&by_name("gaussian"), &[250, 250], Engine::Exec);
+}
+
+#[test]
+fn harris_250x250_exec() {
+    assert_tiled_matches(&by_name("harris"), &[250, 250], Engine::Exec);
+}
+
+#[test]
+fn unsharp_250x250_exec() {
+    assert_tiled_matches(&by_name("unsharp"), &[250, 250], Engine::Exec);
+}
+
+/// The cycle-accurate engine at the big extent too (one app keeps the
+/// suite's wall-clock bounded; 67x131 covers sim for all three).
+#[test]
+fn gaussian_250x250_sim() {
+    assert_tiled_matches(&by_name("gaussian"), &[250, 250], Engine::Sim);
+}
+
+// ---- 67x131 (both dims non-multiples, rectangular) ----------------
+
+#[test]
+fn gaussian_67x131_both_engines() {
+    let p = by_name("gaussian");
+    assert_tiled_matches(&p, &[67, 131], Engine::Exec);
+    assert_tiled_matches(&p, &[67, 131], Engine::Sim);
+}
+
+#[test]
+fn harris_67x131_both_engines() {
+    let p = by_name("harris");
+    assert_tiled_matches(&p, &[67, 131], Engine::Exec);
+    assert_tiled_matches(&p, &[67, 131], Engine::Sim);
+}
+
+#[test]
+fn unsharp_67x131_both_engines() {
+    let p = by_name("unsharp");
+    assert_tiled_matches(&p, &[67, 131], Engine::Exec);
+    assert_tiled_matches(&p, &[67, 131], Engine::Sim);
+}
+
+// ---- structural edge cases ----------------------------------------
+
+/// Spatial unrolling: bounds-inference rounding must reproduce
+/// identically in the planner and the golden (harris sch4 unrolls x
+/// by 2; 131 rounds up to 132 in both).
+#[test]
+fn harris_unrolled_67x131_exec() {
+    assert_tiled_matches(&by_name("harris_sch4"), &[67, 131], Engine::Exec);
+}
+
+/// Non-identity access maps: the strip-mined rank-4 upsample shifts
+/// its input footprint by the access map's linear part, not the raw
+/// origin. Small build keeps the sim side cheap.
+#[test]
+fn upsample_rank4_small_both_engines() {
+    let p = apps::upsample::build(8);
+    for engine in [Engine::Exec, Engine::Sim] {
+        assert_tiled_matches(&p, &[11, 2, 9, 2], engine);
+    }
+}
+
+/// Extents smaller than the compiled tile: one clamped pass fed by
+/// edge-clamped gathering, cropped on stitch.
+#[test]
+fn smaller_than_tile_both_engines() {
+    let p = apps::gaussian::build(14);
+    for engine in [Engine::Exec, Engine::Sim] {
+        assert_tiled_matches(&p, &[9, 20], engine);
+        assert_tiled_matches(&p, &[5, 5], engine);
+    }
+}
+
+/// The identity extent (exactly the compiled tile) round-trips
+/// through the planner as a single shift-free tile.
+#[test]
+fn identity_extent_is_single_tile() {
+    let p = apps::gaussian::build(14);
+    let c = Arc::new(compile(&p).unwrap());
+    let plan = c.tile_plan(&[14, 14]).unwrap();
+    assert_eq!(plan.tile_count(), 1);
+    assert!(plan.tiles[0].input_shift[0].iter().all(|&s| s == 0));
+    assert_tiled_matches(&p, &[14, 14], Engine::Exec);
+}
+
+/// Aggregated stats: a multi-tile image reports the field-wise sum of
+/// its per-tile runs, identically on both engines.
+#[test]
+fn aggregated_stats_are_engine_independent() {
+    let p = apps::gaussian::build(14);
+    let c = Arc::new(compile(&p).unwrap());
+    let (inputs, _) = golden(&p, &[33, 20]);
+    let e = run_tiled(&c, Engine::Exec, &[33, 20], inputs.clone(), 2).unwrap();
+    let s = run_tiled(&c, Engine::Sim, &[33, 20], inputs, 2).unwrap();
+    assert_eq!(e.tiles, 6);
+    assert_eq!(e.stats, s.stats, "aggregated stats must match across engines");
+    assert_eq!(e.output.data, s.output.data);
+    assert_eq!(e.stats.cycles, 6 * c.graph.completion);
+}
