@@ -11,8 +11,12 @@
 # trajectory (BENCH_serve.json / BENCH_dse.json) in quick mode — the
 # CI step future PRs diff req/s and candidates/sec against; it now
 # includes the large-image tiled serving numbers (docs/tiling.md).
+# `make fuzz-smoke` is the CI smoke run of the seeded three-engine
+# differential fuzz suite (rust/tests/exec_fuzz.rs): a small pinned
+# case count so failures reproduce exactly; the full 50-case sweep
+# runs in `make verify` via `cargo test`.
 
-.PHONY: artifacts verify tune-smoke validate-all sim-bench bench-json clean
+.PHONY: artifacts verify tune-smoke validate-all sim-bench bench-json fuzz-smoke clean
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -28,6 +32,9 @@ validate-all:
 
 sim-bench:
 	SIM_BENCH_QUICK=1 cargo bench --bench serve_throughput
+
+fuzz-smoke:
+	PUSHMEM_FUZZ_CASES=6 PUSHMEM_FUZZ_SEED=7 cargo test -q --test exec_fuzz
 
 bench-json:
 	SIM_BENCH_QUICK=1 cargo bench --bench serve_throughput

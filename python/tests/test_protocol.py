@@ -116,6 +116,34 @@ def test_v3_extent_caps():
     assert (1 << 13) * (1 << 13) > MAX_WORDS  # the case above overflows
 
 
+def test_v3_boundary_extents_encode():
+    """Exact boundary values are part of the contract (mirroring
+    v3_boundary_extents_decode in coordinator/protocol.rs): 1x1, rank
+    exactly MAX_RANK, and a product of exactly MAX_WORDS must encode;
+    one past the word cap must not."""
+    # The smallest legal whole image.
+    frame = encode_request_v3("gaussian", (1, 1), [[42]])
+    expect = (
+        struct.pack("<III", MAGIC, VERSION3, 8)
+        + b"gaussian"
+        + struct.pack("<III", 2, 1, 1)
+        + struct.pack("<II", 1, 1)
+        + struct.pack("<i", 42)
+    )
+    assert frame == expect
+
+    # Rank exactly MAX_RANK encodes.
+    frame = encode_request_v3(None, (1,) * MAX_RANK, [])
+    assert struct.unpack_from("<I", frame, 12)[0] == MAX_RANK
+
+    # Product exactly MAX_WORDS (2^12 x 2^12 = 2^24) encodes; the next
+    # extent up raises.
+    encode_request_v3(None, (1 << 12, 1 << 12), [])
+    assert (1 << 12) * (1 << 12) == MAX_WORDS
+    with pytest.raises(ProtocolError, match="extent words"):
+        encode_request_v3(None, (1 << 12, (1 << 12) + 1), [])
+
+
 def test_detail_decode():
     msg = "input gradient: got 100 words, expected 4096"
     packed = msg.encode("utf-8")

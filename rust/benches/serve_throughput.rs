@@ -221,6 +221,17 @@ fn main() {
     }
     let image_reps: usize = if quick { 3 } else { 10 };
 
+    // Bit-exactness of the vectorized + threaded drain against the
+    // scalar reference walk, asserted outside the timed loops (the
+    // exec_fuzz suite proves it exhaustively; the bench must not
+    // regress it silently).
+    let vres = run_tiled(&c, Engine::Exec, &extent, image_inputs.clone(), WORKERS)
+        .expect("tiled exec");
+    let sres = run_tiled(&c, Engine::ExecScalar, &extent, image_inputs.clone(), WORKERS)
+        .expect("tiled exec-scalar");
+    assert_eq!(vres.output.data, sres.output.data, "scalar vs vectorized outputs differ");
+    assert_eq!(vres.stats, sres.stats, "scalar vs vectorized stats differ");
+
     let t0 = Instant::now();
     for _ in 0..image_reps {
         let res = run_tiled(&c, Engine::Auto, &extent, image_inputs.clone(), WORKERS)
@@ -230,6 +241,18 @@ fn main() {
     let direct_s = t0.elapsed().as_secs_f64();
     let tiles_per_s = (image_reps * tiles_per_image) as f64 / direct_s;
     let image_rps = image_reps as f64 / direct_s;
+
+    // The same drain through the scalar reference path — the
+    // denominator of the hot-path (lanes + threads + arena) speedup.
+    let t0 = Instant::now();
+    for _ in 0..image_reps {
+        let res = run_tiled(&c, Engine::ExecScalar, &extent, image_inputs.clone(), WORKERS)
+            .expect("tiled scalar run");
+        assert_eq!(res.tiles, tiles_per_image);
+    }
+    let scalar_s = t0.elapsed().as_secs_f64();
+    let scalar_tiles_per_s = (image_reps * tiles_per_image) as f64 / scalar_s;
+    let hot_path_speedup = tiles_per_s / scalar_tiles_per_s;
 
     let refs: Vec<&Tensor> = image_tensors.iter().collect();
     let mut stream = TcpStream::connect(addr).unwrap();
@@ -246,6 +269,10 @@ fn main() {
          {tiles_per_s:.1} tiles/s, {image_rps:.2} image/s direct, \
          {tcp_image_rps:.2} image/s over TCP",
         extent[0], extent[1]
+    );
+    println!(
+        "tiled hot path: vectorized {tiles_per_s:.1} tiles/s vs scalar \
+         {scalar_tiles_per_s:.1} tiles/s ({hot_path_speedup:.2}x)"
     );
 
     harness::write_bench_json(
@@ -272,6 +299,8 @@ fn main() {
                     )
                     .int("tiles_per_image", tiles_per_image as i64)
                     .num("tiles_per_s", tiles_per_s)
+                    .num("scalar_tiles_per_s", scalar_tiles_per_s)
+                    .num("vector_vs_scalar_speedup", hot_path_speedup)
                     .num("image_req_per_s", image_rps)
                     .num("tcp_image_req_per_s", tcp_image_rps)
                     .end(),

@@ -55,15 +55,20 @@ pub struct SimStats {
 /// planner, [`crate::tile`]) reports the field-wise sum of its
 /// per-tile runs — `cycles` is then the sequential-replay total, the
 /// number the one-accelerator deployment of Fig 12 would spend.
+///
+/// Sums **saturate**: an unbounded v3 request stream accumulates into
+/// one `SimStats` for the connection's lifetime, and a counter pinned
+/// at `MAX` is a diagnostic; a wrapped one silently reports a tiny
+/// total (and `+=` on overflow would abort a release-built server).
 impl std::ops::AddAssign for SimStats {
     fn add_assign(&mut self, o: SimStats) {
-        self.cycles += o.cycles;
-        self.sram_reads += o.sram_reads;
-        self.sram_writes += o.sram_writes;
-        self.pe_ops += o.pe_ops;
-        self.sr_shifts += o.sr_shifts;
-        self.words_in += o.words_in;
-        self.words_out += o.words_out;
+        self.cycles = self.cycles.saturating_add(o.cycles);
+        self.sram_reads = self.sram_reads.saturating_add(o.sram_reads);
+        self.sram_writes = self.sram_writes.saturating_add(o.sram_writes);
+        self.pe_ops = self.pe_ops.saturating_add(o.pe_ops);
+        self.sr_shifts = self.sr_shifts.saturating_add(o.sr_shifts);
+        self.words_in = self.words_in.saturating_add(o.words_in);
+        self.words_out = self.words_out.saturating_add(o.words_out);
     }
 }
 
@@ -1094,6 +1099,48 @@ mod tests {
         let g = extract(&lp, &ps).unwrap();
         let d = map_design(&g).unwrap();
         (lp, g, d)
+    }
+
+    #[test]
+    fn stats_sums_saturate_instead_of_wrapping() {
+        let big = SimStats {
+            cycles: i64::MAX - 1,
+            sram_reads: u64::MAX - 1,
+            sram_writes: u64::MAX - 1,
+            pe_ops: u64::MAX - 1,
+            sr_shifts: u64::MAX - 1,
+            words_in: u64::MAX - 1,
+            words_out: u64::MAX - 1,
+        };
+        let step = SimStats {
+            cycles: 100,
+            sram_reads: 100,
+            sram_writes: 100,
+            pe_ops: 100,
+            sr_shifts: 100,
+            words_in: 100,
+            words_out: 100,
+        };
+        let mut acc = big;
+        acc += step;
+        let pinned = SimStats {
+            cycles: i64::MAX,
+            sram_reads: u64::MAX,
+            sram_writes: u64::MAX,
+            pe_ops: u64::MAX,
+            sr_shifts: u64::MAX,
+            words_in: u64::MAX,
+            words_out: u64::MAX,
+        };
+        assert_eq!(acc, pinned, "overflow must pin at MAX, not wrap");
+        // Once pinned, further accumulation stays pinned.
+        acc += step;
+        assert_eq!(acc, pinned);
+        // Far from the boundary it is an ordinary sum.
+        let mut small = step;
+        small += step;
+        assert_eq!(small.cycles, 200);
+        assert_eq!(small.pe_ops, 200);
     }
 
     fn brighten_blur(tile: i64) -> Program {

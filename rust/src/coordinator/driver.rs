@@ -126,6 +126,9 @@ impl Compiled {
     pub fn runner(&self, engine: Engine) -> Result<EngineRun> {
         match engine {
             Engine::Exec => Ok(EngineRun::Exec(ExecRun::new(self.exec_plan()?))),
+            Engine::ExecScalar => {
+                Ok(EngineRun::Exec(ExecRun::new_scalar(self.exec_plan()?)))
+            }
             Engine::Sim => Ok(EngineRun::Sim(SimRun::new(self.plan()?))),
             Engine::Auto => match self.exec_plan() {
                 Ok(p) => Ok(EngineRun::Exec(ExecRun::new(p))),
@@ -528,6 +531,66 @@ mod tests {
         let a = c.tile_plan(&[last, 14]).unwrap();
         let b = c.tile_plan(&[last, 14]).unwrap();
         assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    /// Eviction is oldest-key-first (BTreeMap order): filling exactly
+    /// to cap keeps everything; one more insert evicts the smallest
+    /// extent and only it.
+    #[test]
+    fn tile_plan_cache_evicts_smallest_key_first() {
+        let c = compile(&apps::gaussian::build(14)).unwrap();
+        for k in 0..TILE_PLAN_CACHE_CAP as i64 {
+            c.tile_plan(&[20 + k, 14]).unwrap();
+        }
+        {
+            let plans = c.tile_plans.lock().unwrap();
+            assert_eq!(plans.len(), TILE_PLAN_CACHE_CAP);
+            assert!(plans.contains_key([20, 14].as_slice()));
+        }
+        // Cap + 1: exactly one eviction, and it is the smallest key.
+        c.tile_plan(&[200, 14]).unwrap();
+        let plans = c.tile_plans.lock().unwrap();
+        assert_eq!(plans.len(), TILE_PLAN_CACHE_CAP);
+        assert!(
+            !plans.contains_key([20, 14].as_slice()),
+            "smallest key should have been evicted"
+        );
+        assert!(plans.contains_key([21, 14].as_slice()));
+        assert!(plans.contains_key([200, 14].as_slice()));
+    }
+
+    /// A re-requested evicted extent rebuilds a bit-identical plan and
+    /// serves bit-identical results — eviction is purely a memory
+    /// policy, never a behavior change.
+    #[test]
+    fn evicted_tile_plan_rebuilds_bit_identically() {
+        let c = Arc::new(compile(&apps::gaussian::build(14)).unwrap());
+        let before = c.tile_plan(&[33, 20]).unwrap();
+        let snapshot = format!("{before:?}");
+        let inputs = {
+            let mut p = apps::gaussian::build(14);
+            p.schedule.tile = vec![33, 20];
+            gen_inputs(&lower::lower(&p).unwrap())
+        };
+        let first =
+            crate::tile::run_tiled(&c, Engine::Exec, &[33, 20], inputs.clone(), 2).unwrap();
+        // Cycle enough distinct extents to evict [33, 20]...
+        for k in 0..(2 * TILE_PLAN_CACHE_CAP as i64) {
+            c.tile_plan(&[40 + k, 14]).unwrap();
+        }
+        assert!(
+            !c.tile_plans.lock().unwrap().contains_key([33, 20].as_slice()),
+            "extent should have been evicted"
+        );
+        // ...then re-request it: a fresh Arc, an identical plan, and
+        // identical served words.
+        let rebuilt = c.tile_plan(&[33, 20]).unwrap();
+        assert!(!Arc::ptr_eq(&before, &rebuilt), "must be a rebuild");
+        assert_eq!(snapshot, format!("{rebuilt:?}"), "rebuilt plan differs");
+        let again =
+            crate::tile::run_tiled(&c, Engine::Exec, &[33, 20], inputs, 2).unwrap();
+        assert_eq!(first.output.data, again.output.data);
+        assert_eq!(first.stats, again.stats);
     }
 
     #[test]

@@ -730,6 +730,41 @@ mod tests {
         ));
     }
 
+    /// The exact boundary values are part of the wire contract
+    /// (mirrored in python/tests/test_protocol.py): a 1x1 whole-image
+    /// request, a rank of exactly [`MAX_RANK`], and an output product
+    /// of exactly [`MAX_WORDS`] must all decode; one past each must
+    /// not (the one-past-rank case is in [`v3_extent_validation`]).
+    #[test]
+    fn v3_boundary_extents_decode() {
+        // The smallest legal whole image: 1x1.
+        let req = Request {
+            app: Some("gaussian".into()),
+            extent: Some(vec![1, 1]),
+            inputs: vec![vec![42]],
+        };
+        let bytes = encode_request(&req);
+        let (back, used) = decode_request(&bytes).unwrap();
+        assert_eq!(back, req);
+        assert_eq!(used, bytes.len());
+
+        // Rank exactly MAX_RANK decodes.
+        let req = Request { app: None, extent: Some(vec![1; MAX_RANK as usize]), inputs: vec![] };
+        let (back, _) = decode_request(&encode_request(&req)).unwrap();
+        assert_eq!(back, req);
+
+        // Output product exactly MAX_WORDS (2^12 x 2^12 = 2^24)
+        // decodes; the next extent up does not.
+        let at_cap = Request { app: None, extent: Some(vec![1 << 12, 1 << 12]), inputs: vec![] };
+        let (back, _) = decode_request(&encode_request(&at_cap)).unwrap();
+        assert_eq!(back, at_cap);
+        let over = Request { app: None, extent: Some(vec![1 << 12, (1 << 12) + 1]), inputs: vec![] };
+        assert!(matches!(
+            decode_request(&encode_request(&over)).unwrap_err(),
+            FrameError::TooLarge { what: "output extent words", .. }
+        ));
+    }
+
     /// Diagnostic payloads: pack, round-trip, cap, and the frame
     /// shape old clients see (non-empty words on a non-OK status).
     #[test]

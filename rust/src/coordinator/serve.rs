@@ -40,7 +40,7 @@ use super::driver::{Compiled, CompiledRegistry};
 use super::protocol::{self, FrameError, Request, Response};
 use crate::exec::{Engine, EngineRun};
 use crate::tensor::Tensor;
-use crate::tile::TileBatch;
+use crate::tile::{TileBatch, TileScratch};
 
 pub use super::protocol::MAGIC;
 
@@ -226,21 +226,32 @@ fn declared_words(c: &Compiled) -> Vec<(&str, i64)> {
         .collect()
 }
 
+/// One connection-cached slot per design: the reusable engine run plus
+/// the tiled path's gather/output scratch. The scratch is built lazily
+/// (the fixed-box path never pays for it) and is keyed per *design*,
+/// not per extent — every tile plan of a design gathers into the same
+/// compiled input boxes, so one scratch serves all requested extents.
+struct RunSlot {
+    key: usize,
+    run: EngineRun,
+    scratch: Option<TileScratch>,
+}
+
 /// The connection's cached per-design runner, built on first use —
 /// shared by the fixed-box and tiled paths so neither pays
 /// per-request engine setup (`runs` is keyed by design identity; a
 /// connection may interleave apps).
 fn runner_for<'a>(
-    runs: &'a mut Vec<(usize, EngineRun)>,
+    runs: &'a mut Vec<RunSlot>,
     c: &Arc<Compiled>,
     engine: Engine,
-) -> Result<&'a mut EngineRun> {
+) -> Result<&'a mut RunSlot> {
     let key = Arc::as_ptr(c) as usize;
-    if let Some(i) = runs.iter().position(|(k, _)| *k == key) {
-        return Ok(&mut runs[i].1);
+    if let Some(i) = runs.iter().position(|s| s.key == key) {
+        return Ok(&mut runs[i]);
     }
-    runs.push((key, c.runner(engine)?));
-    Ok(&mut runs.last_mut().expect("just pushed").1)
+    runs.push(RunSlot { key, run: c.runner(engine)?, scratch: None });
+    Ok(runs.last_mut().expect("just pushed"))
 }
 
 /// Handle one client connection: frames in, simulated tiles out,
@@ -263,7 +274,7 @@ pub fn handle_connection(cfg: &ServeConfig, stream: &mut TcpStream) -> Result<()
         .unwrap_or_else(|_| "?".to_string());
     // Reusable per-app run state, keyed by design identity (a
     // connection may interleave v2 requests for different apps).
-    let mut runs: Vec<(usize, EngineRun)> = Vec::new();
+    let mut runs: Vec<RunSlot> = Vec::new();
     loop {
         let req = match read_request(stream) {
             Ok(Some(req)) => req,
@@ -312,7 +323,7 @@ pub fn handle_connection(cfg: &ServeConfig, stream: &mut TcpStream) -> Result<()
             inputs.insert(name.clone(), Tensor::from_data(c.lp.buffers[name].clone(), words));
         }
         let run = match runner_for(&mut runs, &c, cfg.engine) {
-            Ok(r) => r,
+            Ok(slot) => &mut slot.run,
             Err(e) => {
                 write_error(stream, protocol::STATUS_INTERNAL);
                 return Err(e.context(format!("planning {} for {peer}", c.program.name)));
@@ -361,7 +372,7 @@ fn handle_tiled(
     c: &Arc<Compiled>,
     extent: &[i64],
     payloads: Vec<Vec<i32>>,
-    runs: &mut Vec<(usize, EngineRun)>,
+    runs: &mut Vec<RunSlot>,
 ) -> Result<()> {
     let app = c.program.name.clone();
     let plan = match c.tile_plan(extent) {
@@ -410,9 +421,15 @@ fn handle_tiled(
         }
     }
     // The connection's cached runner drains tiles — a v3 request on a
-    // warm connection pays no engine setup, like the fixed-box path.
+    // warm connection pays no engine setup, like the fixed-box path —
+    // and its cached scratch makes the warm drain allocation-free
+    // (gathers, per-tile output, and stitch coordinates all reuse the
+    // slot's buffers; see `crate::tile::run`).
     match runner_for(runs, c, cfg.engine) {
-        Ok(run) => batch.work_with(run),
+        Ok(slot) => {
+            let scratch = slot.scratch.get_or_insert_with(|| TileScratch::new(&plan));
+            batch.work_with(&mut slot.run, scratch);
+        }
         Err(e) => {
             write_error_detail(stream, protocol::STATUS_INTERNAL, &format!("{e:#}"));
             return Err(e.context(format!("planning {app} for {peer}")));

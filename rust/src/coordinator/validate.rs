@@ -74,6 +74,18 @@ pub fn cross_check(c: &Compiled) -> Result<CrossCheck> {
     let ex = ExecRun::new(c.exec_plan().context("functional engine unavailable")?)
         .run(&inputs)
         .context("functional execution")?;
+    // Third leg: the scalar reference walk. The vectorized + threaded
+    // hot path is *defined* to be bit-identical to it (DESIGN.md §6);
+    // any daylight here is an engine bug, never a design property, so
+    // it is a hard internal failure rather than a CrossCheck verdict.
+    let sc = ExecRun::new_scalar(c.exec_plan().context("functional engine unavailable")?)
+        .run(&inputs)
+        .context("scalar functional execution")?;
+    anyhow::ensure!(
+        sc.output.data == ex.output.data && sc.stats == ex.stats,
+        "vectorized functional engine diverges from its scalar reference \
+         (this is an exec-engine bug; run `cargo test --test exec_fuzz` to localize)"
+    );
     anyhow::ensure!(
         sim.output.shape == ex.output.shape,
         "engines produced different output boxes: {} vs {}",

@@ -1,0 +1,105 @@
+//! The per-run arena: every buffer the functional engine touches at
+//! steady state, allocated once when an [`super::ExecRun`] is built
+//! and reset in place between requests — so a warm run (and the
+//! large-extent `TileBatch` drains layered on top, docs/tiling.md)
+//! performs **zero** steady-state heap allocations.
+//!
+//! The arena also carries an allocation counter: construction and any
+//! later growth event (a feed spill, an output buffer that had to
+//! grow) increment it, and the alloc-counter tests assert the count is
+//! frozen across repeated warm runs. That turns the zero-allocation
+//! contract from a claim in a doc into a property a test can watch.
+
+use super::lanes::{Lanes, LANES};
+use super::plan::{ExecKernel, ExecPlan};
+
+/// Reusable per-kernel working buffers: the scalar and lane register
+/// files, loaded operand values, odometer counters, and per-stream
+/// running addresses. Sized to the widest kernel they will serve.
+pub(crate) struct KernelBufs {
+    /// Scalar PE register file (one slot per mapped node).
+    pub regs: Vec<i32>,
+    /// Scalar loaded word per load stream.
+    pub load_vals: Vec<i32>,
+    /// Lane register file (one vector per mapped node).
+    pub lane_regs: Vec<Lanes>,
+    /// Lane loaded words per load stream.
+    pub lane_loads: Vec<Lanes>,
+    /// Outer-loop odometer (dims outside the lane dim).
+    pub outer: Vec<i64>,
+    /// Reduction-tail odometer (dims inside the lane dim).
+    pub tail: Vec<i64>,
+    /// Running flat address per load stream.
+    pub addr: Vec<i64>,
+}
+
+/// How many `Vec`s a [`KernelBufs`] construction allocates.
+const KERNEL_BUF_VECS: u64 = 7;
+
+impl KernelBufs {
+    fn with(nodes: usize, loads: usize, rank: usize) -> KernelBufs {
+        KernelBufs {
+            regs: vec![0; nodes],
+            load_vals: vec![0; loads],
+            lane_regs: vec![[0; LANES]; nodes],
+            lane_loads: vec![[0; LANES]; loads],
+            outer: vec![0; rank],
+            tail: vec![0; rank],
+            addr: vec![0; loads],
+        }
+    }
+
+    /// Buffers sized to the widest kernel of `plan`.
+    pub fn for_plan(plan: &ExecPlan) -> KernelBufs {
+        let max = |f: fn(&ExecKernel) -> usize| {
+            plan.kernels.iter().map(f).max().unwrap_or(0)
+        };
+        KernelBufs::with(max(|k| k.nodes.len()), max(|k| k.loads.len()), max(|k| k.extents.len()))
+    }
+
+    /// Buffers for one kernel — what each helper thread of the
+    /// row-parallel path builds for itself.
+    pub fn for_kernel(k: &ExecKernel) -> KernelBufs {
+        KernelBufs::with(k.nodes.len(), k.loads.len(), k.extents.len())
+    }
+}
+
+/// The arena one [`super::ExecRun`] owns: intermediate (scratch)
+/// buffers plus the kernel working buffers, reset between requests.
+pub(crate) struct Arena {
+    /// Zero-initialized intermediate buffers, one per plan scratch
+    /// spec — the SRAM's reset state.
+    pub scratch: Vec<Vec<i32>>,
+    pub bufs: KernelBufs,
+    allocs: u64,
+}
+
+impl Arena {
+    pub fn for_plan(plan: &ExecPlan) -> Arena {
+        let scratch: Vec<Vec<i32>> =
+            plan.scratch.iter().map(|s| vec![0i32; s.len]).collect();
+        // Construction cost: the scratch Vecs (plus their container)
+        // and the kernel buffers.
+        let allocs = scratch.len() as u64 + 1 + KERNEL_BUF_VECS;
+        Arena { scratch, bufs: KernelBufs::for_plan(plan), allocs }
+    }
+
+    /// Reset the intermediates to the hardware's zeroed state in
+    /// place — no frees, no allocations.
+    pub fn zero_scratch(&mut self) {
+        for s in self.scratch.iter_mut() {
+            s.iter_mut().for_each(|v| *v = 0);
+        }
+    }
+
+    /// Record a heap-allocation event attributed to this run (a
+    /// steady-state run must never call this — the alloc-counter
+    /// tests assert the count stays frozen across warm runs).
+    pub fn count_alloc(&mut self) {
+        self.allocs += 1;
+    }
+
+    pub fn alloc_count(&self) -> u64 {
+        self.allocs
+    }
+}

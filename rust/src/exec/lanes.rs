@@ -1,0 +1,190 @@
+//! Fixed-width lane arithmetic for the vectorized functional engine
+//! (docs/execution.md, "Lanes, threads, and the arena").
+//!
+//! A lane vector is a plain `[i32; 8]` — no unstable SIMD features,
+//! just arrays the optimizer autovectorizes — evaluated element-wise
+//! with exactly the wrapping-i32 semantics of
+//! [`crate::halide::expr::eval_binop`] and the PE ALU
+//! ([`crate::hw::PeOp`]). Every lane op below is the scalar op applied
+//! independently per element, so a lane program is bit-identical to
+//! eight scalar programs run in lockstep; DESIGN.md §6 makes the
+//! argument in full, and `lane_binop_matches_eval_binop` pins each
+//! operator against the scalar ALU over an edge-case sweep.
+//!
+//! The operator `match` in [`lane_binop`] is hoisted outside the lane
+//! loop on purpose: the per-element closure is branch-free, which is
+//! what lets the compiler emit one 8-wide vector op per operator
+//! instead of re-dispatching per element.
+
+use crate::halide::expr::{eval_binop, BinOp};
+
+/// Lane width: eight i32 elements per vector step. Wide enough to
+/// keep the host ALU ports busy, narrow enough that the scalar tail
+/// (`extent % 8` points) stays cheap at the paper's 60–64-wide tiles.
+pub const LANES: usize = 8;
+
+/// One vector of lane values.
+pub type Lanes = [i32; LANES];
+
+/// Broadcast a scalar across all lanes.
+#[inline]
+pub fn splat(v: i32) -> Lanes {
+    [v; LANES]
+}
+
+#[inline]
+fn zipmap(a: &Lanes, b: &Lanes, f: impl Fn(i32, i32) -> i32) -> Lanes {
+    let mut r = [0i32; LANES];
+    for ((r, &x), &y) in r.iter_mut().zip(a).zip(b) {
+        *r = f(x, y);
+    }
+    r
+}
+
+/// Element-wise [`eval_binop`]: each arm mirrors the scalar ALU's
+/// wrapping/euclidean semantics exactly (comparisons produce 0/1,
+/// division by zero yields 0 — the hardware's defined result).
+#[inline]
+pub fn lane_binop(op: BinOp, a: &Lanes, b: &Lanes) -> Lanes {
+    match op {
+        BinOp::Add => zipmap(a, b, i32::wrapping_add),
+        BinOp::Sub => zipmap(a, b, i32::wrapping_sub),
+        BinOp::Mul => zipmap(a, b, i32::wrapping_mul),
+        BinOp::Div => zipmap(a, b, |x, y| if y == 0 { 0 } else { x.div_euclid(y) }),
+        BinOp::Mod => zipmap(a, b, |x, y| if y == 0 { 0 } else { x.rem_euclid(y) }),
+        BinOp::Min => zipmap(a, b, i32::min),
+        BinOp::Max => zipmap(a, b, i32::max),
+        BinOp::Shl => zipmap(a, b, |x, y| x.wrapping_shl(y as u32)),
+        BinOp::Shr => zipmap(a, b, |x, y| x.wrapping_shr(y as u32)),
+        BinOp::And => zipmap(a, b, |x, y| x & y),
+        BinOp::Or => zipmap(a, b, |x, y| x | y),
+        BinOp::Xor => zipmap(a, b, |x, y| x ^ y),
+        BinOp::Lt => zipmap(a, b, |x, y| (x < y) as i32),
+        BinOp::Le => zipmap(a, b, |x, y| (x <= y) as i32),
+        BinOp::Gt => zipmap(a, b, |x, y| (x > y) as i32),
+        BinOp::Ge => zipmap(a, b, |x, y| (x >= y) as i32),
+        BinOp::Eq => zipmap(a, b, |x, y| (x == y) as i32),
+        BinOp::Ne => zipmap(a, b, |x, y| (x != y) as i32),
+    }
+}
+
+/// Element-wise wrapping negation ([`crate::halide::expr::UnOp::Neg`]).
+#[inline]
+pub fn lane_neg(a: &Lanes) -> Lanes {
+    let mut r = *a;
+    for v in r.iter_mut() {
+        *v = v.wrapping_neg();
+    }
+    r
+}
+
+/// Element-wise wrapping absolute value
+/// ([`crate::halide::expr::UnOp::Abs`]).
+#[inline]
+pub fn lane_abs(a: &Lanes) -> Lanes {
+    let mut r = *a;
+    for v in r.iter_mut() {
+        *v = v.wrapping_abs();
+    }
+    r
+}
+
+/// Element-wise select: `c != 0 ? t : e`, the PE's three-operand mux.
+#[inline]
+pub fn lane_select(c: &Lanes, t: &Lanes, e: &Lanes) -> Lanes {
+    let mut r = [0i32; LANES];
+    for (l, v) in r.iter_mut().enumerate() {
+        *v = if c[l] != 0 { t[l] } else { e[l] };
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ALL_OPS: [BinOp; 18] = [
+        BinOp::Add,
+        BinOp::Sub,
+        BinOp::Mul,
+        BinOp::Div,
+        BinOp::Mod,
+        BinOp::Min,
+        BinOp::Max,
+        BinOp::Shl,
+        BinOp::Shr,
+        BinOp::And,
+        BinOp::Or,
+        BinOp::Xor,
+        BinOp::Lt,
+        BinOp::Le,
+        BinOp::Gt,
+        BinOp::Ge,
+        BinOp::Eq,
+        BinOp::Ne,
+    ];
+
+    /// The values where wrapping/euclidean/shift semantics can drift:
+    /// extremes, zero divisors, negative operands, shift counts past
+    /// the width.
+    const EDGES: [i32; 12] = [
+        i32::MIN,
+        i32::MIN + 1,
+        -257,
+        -31,
+        -1,
+        0,
+        1,
+        2,
+        31,
+        33,
+        12345,
+        i32::MAX,
+    ];
+
+    /// Every lane operator is element-wise identical to the scalar
+    /// ALU (`eval_binop`) — the bit-exactness argument of DESIGN.md §6
+    /// reduced to a sweep.
+    #[test]
+    fn lane_binop_matches_eval_binop() {
+        for op in ALL_OPS {
+            for &x in &EDGES {
+                for chunk in EDGES.chunks(LANES) {
+                    let mut b = [0i32; LANES];
+                    b[..chunk.len()].copy_from_slice(chunk);
+                    let a = splat(x);
+                    let got = lane_binop(op, &a, &b);
+                    for l in 0..LANES {
+                        assert_eq!(
+                            got[l],
+                            eval_binop(op, x, b[l]),
+                            "{op:?}({x}, {})",
+                            b[l]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_unary_and_select_match_scalar() {
+        let mut a = [0i32; LANES];
+        let mut c = [0i32; LANES];
+        for (l, v) in a.iter_mut().enumerate() {
+            *v = EDGES[l];
+            c[l] = (l % 2) as i32;
+        }
+        let neg = lane_neg(&a);
+        let abs = lane_abs(&a);
+        let sel = lane_select(&c, &a, &splat(-7));
+        for l in 0..LANES {
+            assert_eq!(neg[l], a[l].wrapping_neg());
+            assert_eq!(abs[l], a[l].wrapping_abs());
+            assert_eq!(sel[l], if c[l] != 0 { a[l] } else { -7 });
+        }
+        // The wrapping edge the i16-style ALU relies on.
+        assert_eq!(lane_neg(&splat(i32::MIN))[0], i32::MIN);
+        assert_eq!(lane_abs(&splat(i32::MIN))[0], i32::MIN);
+    }
+}

@@ -17,9 +17,11 @@
 //!
 //! ## Engine selection
 //!
-//! [`Engine`] names the three policies the stack exposes
-//! (`pushmem serve/serve-all/tune/report/run --engine {exec,sim,auto}`):
-//! `exec` demands the functional engine, `sim` the cycle-accurate
+//! [`Engine`] names the policies the stack exposes (`pushmem
+//! serve/serve-all/tune/report/run --engine {exec,exec-scalar,sim,auto}`):
+//! `exec` demands the functional engine (vectorized + threaded, see
+//! [`run`]), `exec-scalar` its original scalar reference walk (the
+//! differential-testing escape hatch), `sim` the cycle-accurate
 //! simulator, and `auto` (the default) prefers `exec`, falling back to
 //! `sim` whenever [`ExecPlan::build`] cannot prove the design's port
 //! structure sound for functional replay (non-lockstep load ports,
@@ -29,6 +31,8 @@
 //! docs/execution.md, DESIGN.md §6. `pushmem validate` cross-checks
 //! the two engines against each other per app.
 
+mod arena;
+pub mod lanes;
 pub mod plan;
 pub mod run;
 pub mod timing;
@@ -37,7 +41,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
-use crate::cgra::{SimResult, SimRun};
+use crate::cgra::{SimResult, SimRun, SimStats};
 use crate::tensor::Tensor;
 
 pub use plan::ExecPlan;
@@ -53,6 +57,10 @@ pub enum Engine {
     Auto,
     /// The functional engine ([`ExecRun`]), unconditionally.
     Exec,
+    /// The functional engine's scalar reference path
+    /// ([`ExecRun::new_scalar`]) — the original one-point-at-a-time
+    /// walk, kept selectable as a differential-testing escape hatch.
+    ExecScalar,
     /// The cycle-accurate simulator ([`SimRun`]), unconditionally.
     Sim,
 }
@@ -62,8 +70,9 @@ impl Engine {
         Ok(match s {
             "auto" => Engine::Auto,
             "exec" => Engine::Exec,
+            "exec-scalar" => Engine::ExecScalar,
             "sim" => Engine::Sim,
-            other => bail!("unknown engine {other:?} (want exec|sim|auto)"),
+            other => bail!("unknown engine {other:?} (want exec|exec-scalar|sim|auto)"),
         })
     }
 
@@ -71,6 +80,7 @@ impl Engine {
         match self {
             Engine::Auto => "auto",
             Engine::Exec => "exec",
+            Engine::ExecScalar => "exec-scalar",
             Engine::Sim => "sim",
         }
     }
@@ -92,10 +102,43 @@ impl EngineRun {
         }
     }
 
+    /// Execute into a caller-owned output tensor, reusing its buffer
+    /// when the layout already matches — the allocation-free variant
+    /// the tile path drains through. Returns the stats and whether the
+    /// tensor was freshly (re)allocated this call.
+    pub fn run_into(
+        &mut self,
+        inputs: &BTreeMap<String, Tensor>,
+        out: &mut Option<Tensor>,
+    ) -> Result<(SimStats, bool)> {
+        match self {
+            EngineRun::Exec(r) => {
+                let reuse = out
+                    .as_ref()
+                    .is_some_and(|t| t.shape.same_layout(&r.plan().out_box));
+                if !reuse {
+                    *out = Some(Tensor::zeros(r.plan().out_box.clone()));
+                }
+                let t = out.as_mut().expect("output tensor bound above");
+                let stats = r.run_into(inputs, &mut t.data)?;
+                Ok((stats, !reuse))
+            }
+            // The simulator builds its result tensor internally; no
+            // reuse to be had (it is not the steady-state tile path).
+            EngineRun::Sim(r) => {
+                let res = r.run(inputs)?;
+                let stats = res.stats;
+                *out = Some(res.output);
+                Ok((stats, true))
+            }
+        }
+    }
+
     /// The concrete engine behind this run (`Auto` resolves at
-    /// construction, so this is always `Exec` or `Sim`).
+    /// construction, so this is always `Exec`, `ExecScalar`, or `Sim`).
     pub fn engine(&self) -> Engine {
         match self {
+            EngineRun::Exec(r) if r.is_scalar() => Engine::ExecScalar,
             EngineRun::Exec(_) => Engine::Exec,
             EngineRun::Sim(_) => Engine::Sim,
         }
@@ -108,7 +151,7 @@ mod tests {
 
     #[test]
     fn engine_parse_roundtrips() {
-        for e in [Engine::Auto, Engine::Exec, Engine::Sim] {
+        for e in [Engine::Auto, Engine::Exec, Engine::ExecScalar, Engine::Sim] {
             assert_eq!(Engine::parse(e.name()).unwrap(), e);
         }
         assert!(Engine::parse("fast").is_err());

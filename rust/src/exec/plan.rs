@@ -86,17 +86,93 @@ pub(crate) struct StoreSpec {
     pub period: i64,
 }
 
+/// Row-block split metadata for intra-kernel threading. When the
+/// store's dim-0 stride strictly dominates the flat-offset spread of
+/// every inner dim, rows `[r0, r1)` store exactly into the flat range
+/// `[r0·stride + lo, r1·stride + lo)` and distinct row ranges are
+/// disjoint — so the destination buffer can be `split_at_mut` at the
+/// block boundaries and written by threads with no synchronization
+/// and no `unsafe` (docs/execution.md).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct RowBlock {
+    /// Store stride of dim 0.
+    pub stride: i64,
+    /// Smallest store offset within a row, relative to `row · stride`.
+    pub lo: i64,
+}
+
+/// Lane/thread metadata for one kernel, derived once at plan build so
+/// the hot loop never recomputes it (see [`super::run`]).
+pub(crate) struct LaneInfo {
+    /// The innermost **pure** dim — lanes run across it, each lane
+    /// owning one pure point's full reduction walk. `None` when the
+    /// kernel has no pure dims (a full reduction to a single point).
+    pub lane_dim: Option<usize>,
+    /// Per load stream: flat-address stride of the lane dim (adjacent
+    /// lanes' addresses differ by exactly this at every tail step).
+    pub load_lane_stride: Vec<i64>,
+    /// Per load stream: Fig-5c deltas restricted to the reduction
+    /// tail dims (`pure_rank..rank`) — the in-group address walk.
+    pub load_tail_deltas: Vec<Vec<i64>>,
+    /// Store stride of the lane dim (0 when there is none).
+    pub store_lane_stride: i64,
+    /// Present when dim 0 is an outer dim whose store rows are
+    /// provably disjoint flat ranges (enables row-parallel execution).
+    pub row_block: Option<RowBlock>,
+}
+
+/// Derive the [`LaneInfo`] for a kernel from its pure rank, domain
+/// extents, and flat-address recurrences.
+fn lane_info(pr: usize, extents: &[i64], loads: &[LoadSpec], store: &AffineConfig) -> LaneInfo {
+    let lane_dim = pr.checked_sub(1);
+    let tail = |cfg: &AffineConfig| {
+        AffineConfig { strides: cfg.strides[pr..].to_vec(), offset: 0 }
+            .deltas(&extents[pr..])
+    };
+    let lane_stride = |cfg: &AffineConfig| lane_dim.map_or(0, |d| cfg.strides[d]);
+    let row_block = match lane_dim {
+        // Dim 0 must be an outer dim, not the lane dim itself.
+        Some(d) if d >= 1 => {
+            let s0 = store.strides[0];
+            // Flat-offset spread of the inner dims: a row's stores lie
+            // in [row·s0 + lo, row·s0 + hi].
+            let (mut lo, mut hi) = (store.offset, store.offset);
+            for (k, &s) in store.strides.iter().enumerate().skip(1) {
+                let span = s * (extents[k] - 1);
+                if span >= 0 {
+                    hi += span;
+                } else {
+                    lo += span;
+                }
+            }
+            (s0 > 0 && s0 > hi - lo).then_some(RowBlock { stride: s0, lo })
+        }
+        _ => None,
+    };
+    LaneInfo {
+        lane_dim,
+        load_lane_stride: loads.iter().map(|l| lane_stride(&l.addr)).collect(),
+        load_tail_deltas: loads.iter().map(|l| tail(&l.addr)).collect(),
+        store_lane_stride: lane_stride(store),
+        row_block,
+    }
+}
+
 pub(crate) struct ExecKernel {
     pub stage: String,
     /// Full iteration domain, zero-based.
     pub extents: Vec<i64>,
     pub mins: Vec<i64>,
+    /// Rank of the pure (non-reduction) prefix of the domain.
+    pub pure_rank: usize,
     pub loads: Vec<LoadSpec>,
     /// The mapped PE node program, with `OperandSrc::Load` indices
     /// remapped onto `loads` (unreferenced ports — e.g. a reduction's
     /// self-load — are dropped).
     pub nodes: Vec<MappedPe>,
     pub store: StoreSpec,
+    /// Vectorization/threading metadata (see [`LaneInfo`]).
+    pub lane: LaneInfo,
 }
 
 /// The compile-once half of the functional engine. Immutable and
@@ -377,13 +453,17 @@ impl ExecPlan {
             let flat = rebase_zero_based(&flat.insert_dims(pr, full.rank() - pr), &mins);
             check_flat_range(&flat, &extents, scratch[dst].len, "store")?;
 
+            let store_addr = AffineConfig::from_affine(&flat);
+            let lane = lane_info(pr, &extents, &loads, &store_addr);
             kernels.push(ExecKernel {
                 stage: kn.stage.clone(),
                 extents,
                 mins,
+                pure_rank: pr,
                 loads,
                 nodes,
-                store: StoreSpec { dst, addr: AffineConfig::from_affine(&flat), period },
+                store: StoreSpec { dst, addr: store_addr, period },
+                lane,
             });
         }
 

@@ -2,88 +2,183 @@
 //! loop nests over the kernels' iteration domains, no cycle loop.
 //!
 //! Per request the run walks each kernel's domain once in row-major
-//! order: load addresses advance by Fig-5c delta recurrences
-//! ([`crate::hw::DeltaImpl`], one add per stream per step), the mapped
-//! PE node program evaluates with the same i32 ALU semantics the
-//! hardware uses ([`crate::halide::expr::eval_binop`]), and the root
-//! value is stored once per reduction group. The reported
-//! [`SimStats`] come from the plan's analytic timing model and are
-//! bit-identical to what the cycle-accurate simulator would report —
-//! the differential suite (`rust/tests/exec_vs_sim.rs`) enforces it.
+//! order: load addresses advance by Fig-5c delta recurrences (one add
+//! per stream per step), the mapped PE node program evaluates with the
+//! same i32 ALU semantics the hardware uses
+//! ([`crate::halide::expr::eval_binop`]), and the root value is stored
+//! once per reduction group. The reported [`SimStats`] come from the
+//! plan's analytic timing model and are bit-identical to what the
+//! cycle-accurate simulator would report — the differential suites
+//! (`rust/tests/exec_vs_sim.rs`, `rust/tests/exec_fuzz.rs`) enforce it.
+//!
+//! ## The hot path (docs/execution.md, "Lanes, threads, and the arena")
+//!
+//! The default engine walks each kernel in three nested layers:
+//!
+//! - **Lanes** — the innermost *pure* dim runs [`LANES`] points at a
+//!   time as plain `[i32; 8]` arrays ([`super::lanes`]), each lane
+//!   replaying its pure point's full reduction walk with a per-lane
+//!   accumulator register; a scalar tail covers `extent % LANES`.
+//! - **Threads** — when the kernel is large enough and its store rows
+//!   are provably disjoint flat ranges ([`super::plan::RowBlock`]),
+//!   the outermost dim is split into row-range chunks executed on
+//!   scoped `std::thread`s over `split_at_mut` destination slices —
+//!   no locks, no `unsafe`. `PUSHMEM_EXEC_THREADS` caps the fan-out.
+//! - **The arena** ([`super::arena`]) — every scratch tensor and
+//!   working buffer is owned by the run and reset in place, so warm
+//!   runs (and `TileBatch` drains over them) allocate nothing.
+//!
+//! [`ExecRun::new_scalar`] (`--engine exec-scalar`) keeps the original
+//! one-point-at-a-time walk over [`DeltaImpl`] cursors as an
+//! independently-implemented reference for differential testing.
 //!
 //! Like [`crate::cgra::SimRun`], an `ExecRun` is reused across
 //! requests with in-place resets: one run serves one thread.
 
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use anyhow::{Context, Result};
 
 use crate::cgra::{SimResult, SimStats};
 use crate::halide::expr::{eval_binop, UnOp};
-use crate::hw::{AffineHw, DeltaImpl, IterationDomain, PeOp};
+use crate::hw::{AffineConfig, AffineHw, DeltaImpl, IterationDomain, PeOp};
 use crate::mapping::{MappedDesign, OperandSrc};
 use crate::tensor::Tensor;
 use crate::ub::UbGraph;
 
-use super::plan::{BufRef, ExecPlan};
+use super::arena::{Arena, KernelBufs};
+use super::lanes::{self, Lanes, LANES};
+use super::plan::{BufRef, ExecKernel, ExecPlan, RowBlock};
 
-/// Per-kernel iteration state, reset in place between requests.
-struct KernelCursors {
-    id: IterationDomain,
-    loads: Vec<DeltaImpl>,
-    store: DeltaImpl,
+/// Minimum kernel trip count before the row-parallel path engages:
+/// below this, thread spawn/join overhead beats the win. Per-tile
+/// kernels (the paper's 60–64-wide tiles) stay under it, which is also
+/// what keeps the steady-state tile path allocation-free — the
+/// parallel path builds per-thread [`KernelBufs`].
+const PAR_MIN_POINTS: i64 = 1 << 16;
+
+/// Most designs bind a handful of input streams; up to this many are
+/// held in a stack array so request binding allocates nothing.
+const FEED_CAP: usize = 8;
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map_or(1, |n| n.get()).min(8)
+}
+
+/// Worker cap for the row-parallel path: `PUSHMEM_EXEC_THREADS` if set
+/// (clamped to `[1, 64]`), else `min(available_parallelism, 8)`.
+fn exec_threads() -> usize {
+    static THREADS: OnceLock<usize> = OnceLock::new();
+    *THREADS.get_or_init(|| match std::env::var("PUSHMEM_EXEC_THREADS") {
+        Ok(v) => v
+            .trim()
+            .parse::<usize>()
+            .ok()
+            .map_or_else(default_threads, |n| n.clamp(1, 64)),
+        Err(_) => default_threads(),
+    })
 }
 
 /// The execution half of the functional engine: mutable per-request
 /// state for one [`ExecPlan`].
 pub struct ExecRun {
     plan: Arc<ExecPlan>,
-    scratch: Vec<Vec<i32>>,
-    cursors: Vec<KernelCursors>,
-    /// PE register file scratch (sized to the widest kernel).
-    regs: Vec<i32>,
-    load_vals: Vec<i32>,
+    arena: Arena,
+    /// Use the original scalar reference walk (`--engine exec-scalar`).
+    scalar: bool,
+    threads: usize,
 }
 
 impl ExecRun {
     pub fn new(plan: Arc<ExecPlan>) -> ExecRun {
-        let scratch = plan.scratch.iter().map(|s| vec![0i32; s.len]).collect();
-        let cursors = plan
-            .kernels
-            .iter()
-            .map(|k| KernelCursors {
-                id: IterationDomain::new(k.extents.clone()),
-                loads: k
-                    .loads
-                    .iter()
-                    .map(|l| DeltaImpl::new(&l.addr, &k.extents))
-                    .collect(),
-                store: DeltaImpl::new(&k.store.addr, &k.extents),
-            })
-            .collect();
-        let regs = vec![0; plan.kernels.iter().map(|k| k.nodes.len()).max().unwrap_or(0)];
-        let load_vals =
-            vec![0; plan.kernels.iter().map(|k| k.loads.len()).max().unwrap_or(0)];
-        ExecRun { plan, scratch, cursors, regs, load_vals }
+        ExecRun::with_threads(plan, exec_threads())
+    }
+
+    /// A run with an explicit worker cap (tests pin 1 vs N).
+    pub fn with_threads(plan: Arc<ExecPlan>, threads: usize) -> ExecRun {
+        let arena = Arena::for_plan(&plan);
+        ExecRun { plan, arena, scalar: false, threads: threads.max(1) }
+    }
+
+    /// The scalar reference engine: the original one-point-at-a-time
+    /// [`DeltaImpl`] walk, kept as an independent implementation for
+    /// differential testing (`--engine exec-scalar`).
+    pub fn new_scalar(plan: Arc<ExecPlan>) -> ExecRun {
+        let arena = Arena::for_plan(&plan);
+        ExecRun { plan, arena, scalar: true, threads: 1 }
+    }
+
+    pub fn is_scalar(&self) -> bool {
+        self.scalar
     }
 
     pub fn plan(&self) -> &Arc<ExecPlan> {
         &self.plan
     }
 
+    /// Heap allocations attributed to this run so far (construction
+    /// plus any later growth). Frozen across warm runs — the
+    /// alloc-counter tests assert it.
+    pub fn alloc_count(&self) -> u64 {
+        self.arena.alloc_count()
+    }
+
     /// Execute one request. Output and stats are bit-identical to a
     /// cycle-accurate [`crate::cgra::SimRun::run`] on the same design
     /// and inputs.
     pub fn run(&mut self, inputs: &BTreeMap<String, Tensor>) -> Result<SimResult> {
+        self.execute_all(inputs)?;
+        Ok(SimResult {
+            output: Tensor::from_data(
+                self.plan.out_box.clone(),
+                self.arena.scratch[self.plan.out_scratch].clone(),
+            ),
+            stats: self.plan.timing().stats,
+        })
+    }
+
+    /// Execute one request into a caller-owned output buffer —
+    /// the allocation-free variant the tile path drains through
+    /// (`tile/run.rs`). `out` is overwritten with the flat output
+    /// words in `out_box` row-major order.
+    pub fn run_into(
+        &mut self,
+        inputs: &BTreeMap<String, Tensor>,
+        out: &mut Vec<i32>,
+    ) -> Result<SimStats> {
+        self.execute_all(inputs)?;
+        let need = self.arena.scratch[self.plan.out_scratch].len();
+        if out.capacity() < need {
+            self.arena.count_alloc();
+        }
+        out.clear();
+        out.extend_from_slice(&self.arena.scratch[self.plan.out_scratch]);
+        Ok(self.plan.timing().stats)
+    }
+
+    /// The analytic stats the engine reports (identical every request
+    /// — activity is input-independent by construction).
+    pub fn stats(&self) -> SimStats {
+        self.plan.timing().stats
+    }
+
+    /// Bind the request, reset the arena, and run every kernel in
+    /// dataflow order; the result is left in the output scratch.
+    fn execute_all(&mut self, inputs: &BTreeMap<String, Tensor>) -> Result<()> {
         let plan = Arc::clone(&self.plan);
-        let ExecRun { scratch, cursors, regs, load_vals, .. } = self;
 
         // Bind request tensors, verifying layout (same rule as the
         // simulator: flat addressing is only valid against the
-        // declared boxes).
-        let mut feed: Vec<&[i32]> = Vec::with_capacity(plan.inputs.len());
-        for spec in &plan.inputs {
+        // declared boxes). The common case fits the stack array.
+        let n = plan.inputs.len();
+        let mut feed_arr: [&[i32]; FEED_CAP] = [&[]; FEED_CAP];
+        let mut feed_vec: Vec<&[i32]> = Vec::new();
+        if n > FEED_CAP {
+            feed_vec.reserve(n);
+            self.arena.count_alloc();
+        }
+        for (k, spec) in plan.inputs.iter().enumerate() {
             let t = inputs
                 .get(&spec.name)
                 .with_context(|| format!("missing input {}", spec.name))?;
@@ -94,101 +189,450 @@ impl ExecRun {
                 t.shape,
                 spec.shape
             );
-            feed.push(&t.data);
+            if n <= FEED_CAP {
+                feed_arr[k] = &t.data;
+            } else {
+                feed_vec.push(&t.data);
+            }
         }
+        let feed: &[&[i32]] =
+            if n <= FEED_CAP { &feed_arr[..n] } else { &feed_vec };
 
         // Zero the intermediate buffers (the hardware's reset state).
-        for s in scratch.iter_mut() {
-            s.iter_mut().for_each(|v| *v = 0);
-        }
+        self.arena.zero_scratch();
 
         // --- Fused kernel loops, in dataflow order --------------
-        for (ks, kp) in cursors.iter_mut().zip(&plan.kernels) {
-            ks.id.reset();
-            for d in ks.loads.iter_mut() {
-                d.reset();
+        // The destination buffer is taken out of the arena so the
+        // remaining scratch can be read shared (including by worker
+        // threads). Sound because `build` verified no kernel reads a
+        // buffer still being written (`last_writer < ki`) — in
+        // particular no kernel reads its own store buffer.
+        let scalar = self.scalar;
+        let threads = self.threads;
+        let arena = &mut self.arena;
+        for kp in &plan.kernels {
+            let mut dst = std::mem::take(&mut arena.scratch[kp.store.dst]);
+            if scalar {
+                exec_kernel_scalar(kp, feed, &arena.scratch, &mut dst, &mut arena.bufs);
+            } else {
+                exec_kernel(kp, feed, &arena.scratch, &mut dst, &mut arena.bufs, threads);
             }
-            ks.store.reset();
+            arena.scratch[kp.store.dst] = dst;
+        }
+        Ok(())
+    }
+}
 
-            let root = kp.nodes.len() - 1;
-            let period = kp.store.period;
-            let mut acc: i32 = 0;
-            let mut group: i64 = 0;
+/// Flat address of `cfg` at outer point `outer`, lane-dim coordinate
+/// `x`, reduction tail all-zero.
+#[inline]
+fn addr_at(cfg: &AffineConfig, outer: &[i64], ld: usize, x: i64) -> i64 {
+    let mut a = cfg.offset + cfg.strides[ld] * x;
+    for (s, o) in cfg.strides[..ld].iter().zip(outer) {
+        a += s * o;
+    }
+    a
+}
+
+/// Advance the outer odometer (dims `0..outer.len()`, row-major), with
+/// dim 0 confined to `[row0, row1)`. Returns false when exhausted —
+/// immediately for an empty odometer (lane dim is dim 0).
+fn step_outer(outer: &mut [i64], extents: &[i64], row0: i64, row1: i64) -> bool {
+    for k in (0..outer.len()).rev() {
+        outer[k] += 1;
+        let limit = if k == 0 { row1 } else { extents[k] };
+        if outer[k] < limit {
+            return true;
+        }
+        outer[k] = if k == 0 { row0 } else { 0 };
+    }
+    false
+}
+
+/// Advance the reduction-tail odometer one step, updating every load
+/// stream's running flat address by its Fig-5c delta (the delta for
+/// the owning dim already accounts for every inner dim's wrap —
+/// exactly [`DeltaImpl::step`], without the per-step `inc`/`clr`
+/// vectors). Returns false when the tail is exhausted.
+#[inline]
+fn step_tail(extents: &[i64], tail: &mut [i64], deltas: &[Vec<i64>], addr: &mut [i64]) -> bool {
+    for k in (0..tail.len()).rev() {
+        tail[k] += 1;
+        if tail[k] < extents[k] {
+            for (a, d) in addr.iter_mut().zip(deltas) {
+                *a += d[k];
+            }
+            return true;
+        }
+        tail[k] = 0;
+    }
+    false
+}
+
+/// `OperandSrc::Iter(d)` as a lane vector at lane-dim chunk `x0`:
+/// consecutive values along the lane dim, a broadcast elsewhere.
+#[inline]
+fn iter_lanes(kp: &ExecKernel, d: usize, ld: usize, x0: i64, outer: &[i64], tail: &[i64]) -> Lanes {
+    use std::cmp::Ordering;
+    match d.cmp(&ld) {
+        Ordering::Equal => {
+            let mut r = [0i32; LANES];
+            for (l2, v) in r.iter_mut().enumerate() {
+                *v = (kp.mins[d] + x0 + l2 as i64) as i32;
+            }
+            r
+        }
+        Ordering::Less => lanes::splat((kp.mins[d] + outer[d]) as i32),
+        Ordering::Greater => lanes::splat((kp.mins[d] + tail[d - ld - 1]) as i32),
+    }
+}
+
+/// Run the full reduction group of ONE pure point, scalar. `prefix(d)`
+/// is the zero-based coordinate of pure dim `d`. Returns the root
+/// value at group end (the word the store port would latch).
+///
+/// Accumulator semantics: the PE resets to `init` on the first firing
+/// of each group, and `regs[ni]` carries the accumulator between
+/// firings (the accumulator is root-only, so nothing else writes that
+/// register) — the same gated row-major order the simulator latches.
+#[allow(clippy::too_many_arguments)]
+fn scalar_group(
+    kp: &ExecKernel,
+    feed: &[&[i32]],
+    scratch: &[Vec<i32>],
+    regs: &mut [i32],
+    load_vals: &mut [i32],
+    tail: &mut [i64],
+    addr: &mut [i64],
+    prefix: &impl Fn(usize) -> i64,
+) -> i32 {
+    let pr = kp.pure_rank;
+    let tr = kp.extents.len() - pr;
+    let tail = &mut tail[..tr];
+    let addr = &mut addr[..kp.loads.len()];
+    for (li, l) in kp.loads.iter().enumerate() {
+        let mut a = l.addr.offset;
+        for (d, &s) in l.addr.strides[..pr].iter().enumerate() {
+            a += s * prefix(d);
+        }
+        addr[li] = a;
+    }
+    tail.iter_mut().for_each(|v| *v = 0);
+    let mut first = true;
+    loop {
+        for (li, l) in kp.loads.iter().enumerate() {
+            let a = addr[li] as usize;
+            load_vals[li] = match l.src {
+                BufRef::Input(i) => feed[i][a],
+                BufRef::Scratch(s) => scratch[s][a],
+            };
+        }
+        for (ni, node) in kp.nodes.iter().enumerate() {
+            let mut ops = [0i32; 3];
+            for (k, s) in node.srcs.iter().enumerate() {
+                let routed = match s {
+                    OperandSrc::Load(l) => load_vals[*l],
+                    OperandSrc::Node(j) => regs[*j],
+                    OperandSrc::Iter(d) => {
+                        let c = if *d < pr { prefix(*d) } else { tail[*d - pr] };
+                        (kp.mins[*d] + c) as i32
+                    }
+                    OperandSrc::None => 0,
+                };
+                ops[k] = node.cfg.consts[k].unwrap_or(routed);
+            }
+            let v = match &node.cfg.op {
+                PeOp::Bin(op) => eval_binop(*op, ops[0], ops[1]),
+                PeOp::Un(UnOp::Neg) => ops[0].wrapping_neg(),
+                PeOp::Un(UnOp::Abs) => ops[0].wrapping_abs(),
+                PeOp::Select => {
+                    if ops[0] != 0 {
+                        ops[1]
+                    } else {
+                        ops[2]
+                    }
+                }
+                PeOp::Acc { op, init, .. } => {
+                    let prev = if first { *init } else { regs[ni] };
+                    eval_binop(*op, prev, ops[0])
+                }
+            };
+            regs[ni] = v;
+        }
+        first = false;
+        if !step_tail(&kp.extents[pr..], tail, &kp.lane.load_tail_deltas, addr) {
+            break;
+        }
+    }
+    regs[kp.nodes.len() - 1]
+}
+
+/// Walk rows `[row0, row1)` of the outermost dim (all outer dims when
+/// `ld >= 1`; a single pass when the lane dim IS dim 0), running the
+/// lane dim in [`LANES`]-wide chunks with a scalar tail. `dst` is the
+/// destination slice starting at flat offset `dst_base`.
+#[allow(clippy::too_many_arguments)]
+fn run_rows_lanes(
+    kp: &ExecKernel,
+    ld: usize,
+    row0: i64,
+    row1: i64,
+    feed: &[&[i32]],
+    scratch: &[Vec<i32>],
+    dst: &mut [i32],
+    dst_base: i64,
+    bufs: &mut KernelBufs,
+) {
+    let KernelBufs { regs, load_vals, lane_regs, lane_loads, outer, tail, addr } = bufs;
+    let pr = kp.pure_rank; // == ld + 1
+    let lane_ext = kp.extents[ld];
+    let main = lane_ext - lane_ext % LANES as i64;
+    let root = kp.nodes.len() - 1;
+    let outer = &mut outer[..ld];
+    let tail = &mut tail[..kp.extents.len() - pr];
+    let addr = &mut addr[..kp.loads.len()];
+    outer.iter_mut().for_each(|v| *v = 0);
+    if ld >= 1 {
+        if row0 >= row1 {
+            return;
+        }
+        outer[0] = row0;
+    }
+    loop {
+        // --- Full LANES-wide chunks of the lane dim -------------
+        let mut x0 = 0i64;
+        while x0 < main {
+            for (li, l) in kp.loads.iter().enumerate() {
+                addr[li] = addr_at(&l.addr, outer, ld, x0);
+            }
+            // Store strides on reduction dims are zero, so the store
+            // address is constant across the whole tail walk.
+            let store_at = addr_at(&kp.store.addr, outer, ld, x0);
+            tail.iter_mut().for_each(|v| *v = 0);
+            let mut first = true;
             loop {
-                let pt = ks.id.point();
                 for (li, l) in kp.loads.iter().enumerate() {
-                    let a = ks.loads[li].value() as usize;
-                    load_vals[li] = match l.src {
-                        BufRef::Input(i) => feed[i][a],
-                        BufRef::Scratch(s) => scratch[s][a],
+                    let src: &[i32] = match l.src {
+                        BufRef::Input(i) => feed[i],
+                        BufRef::Scratch(s) => &scratch[s],
                     };
+                    let base = addr[li];
+                    let stride = kp.lane.load_lane_stride[li];
+                    for (l2, v) in lane_loads[li].iter_mut().enumerate() {
+                        *v = src[(base + l2 as i64 * stride) as usize];
+                    }
                 }
                 for (ni, node) in kp.nodes.iter().enumerate() {
-                    let mut ops = [0i32; 3];
+                    let mut ops = [lanes::splat(0); 3];
                     for (k, s) in node.srcs.iter().enumerate() {
-                        let routed = match s {
-                            OperandSrc::Load(l) => load_vals[*l],
-                            OperandSrc::Node(j) => regs[*j],
-                            OperandSrc::Iter(d) => (kp.mins[*d] + pt[*d]) as i32,
-                            OperandSrc::None => 0,
+                        ops[k] = match node.cfg.consts[k] {
+                            Some(c) => lanes::splat(c),
+                            None => match s {
+                                OperandSrc::Load(l) => lane_loads[*l],
+                                OperandSrc::Node(j) => lane_regs[*j],
+                                OperandSrc::Iter(d) => {
+                                    iter_lanes(kp, *d, ld, x0, outer, tail)
+                                }
+                                OperandSrc::None => lanes::splat(0),
+                            },
                         };
-                        ops[k] = node.cfg.consts[k].unwrap_or(routed);
                     }
-                    regs[ni] = match &node.cfg.op {
-                        PeOp::Bin(op) => eval_binop(*op, ops[0], ops[1]),
-                        PeOp::Un(UnOp::Neg) => ops[0].wrapping_neg(),
-                        PeOp::Un(UnOp::Abs) => ops[0].wrapping_abs(),
-                        PeOp::Select => {
-                            if ops[0] != 0 {
-                                ops[1]
-                            } else {
-                                ops[2]
-                            }
-                        }
+                    let v = match &node.cfg.op {
+                        PeOp::Bin(op) => lanes::lane_binop(*op, &ops[0], &ops[1]),
+                        PeOp::Un(UnOp::Neg) => lanes::lane_neg(&ops[0]),
+                        PeOp::Un(UnOp::Abs) => lanes::lane_abs(&ops[0]),
+                        PeOp::Select => lanes::lane_select(&ops[0], &ops[1], &ops[2]),
                         PeOp::Acc { op, init, .. } => {
-                            // Same reset-every-`period`-firings rule as
-                            // the PE's accumulate mode; firing order is
-                            // row-major, exactly the gated order the
-                            // simulator latches.
-                            if group == 0 {
-                                acc = *init;
-                            }
-                            acc = eval_binop(*op, acc, ops[0]);
-                            acc
+                            // Per-lane accumulator: each lane replays
+                            // its pure point's group in scalar order.
+                            let prev =
+                                if first { lanes::splat(*init) } else { lane_regs[ni] };
+                            lanes::lane_binop(*op, &prev, &ops[0])
                         }
                     };
+                    lane_regs[ni] = v;
                 }
-                group += 1;
-                if group == period {
-                    group = 0;
-                    let a = ks.store.value() as usize;
-                    scratch[kp.store.dst][a] = regs[root];
-                }
-                match ks.id.step() {
-                    Some((inc, clr)) => {
-                        for d in ks.loads.iter_mut() {
-                            d.step(&inc, &clr);
-                        }
-                        ks.store.step(&inc, &clr);
-                    }
-                    None => break,
+                first = false;
+                if !step_tail(&kp.extents[pr..], tail, &kp.lane.load_tail_deltas, addr) {
+                    break;
                 }
             }
+            // One store per pure point, at its group's last step.
+            let sbase = store_at - dst_base;
+            let sstride = kp.lane.store_lane_stride;
+            for (l2, &v) in lane_regs[root].iter().enumerate() {
+                dst[(sbase + l2 as i64 * sstride) as usize] = v;
+            }
+            x0 += LANES as i64;
         }
-
-        Ok(SimResult {
-            output: Tensor::from_data(
-                plan.out_box.clone(),
-                scratch[plan.out_scratch].clone(),
-            ),
-            stats: plan.timing().stats,
-        })
+        // --- Scalar tail: the remaining extent % LANES points ---
+        for x in main..lane_ext {
+            let v = scalar_group(kp, feed, scratch, regs, load_vals, tail, addr, &|d| {
+                if d == ld {
+                    x
+                } else {
+                    outer[d]
+                }
+            });
+            let sa = addr_at(&kp.store.addr, outer, ld, x) - dst_base;
+            dst[sa as usize] = v;
+        }
+        if !step_outer(outer, &kp.extents[..ld], row0, row1) {
+            break;
+        }
     }
+}
 
-    /// The analytic stats the engine reports (identical every request
-    /// — activity is input-independent by construction).
-    pub fn stats(&self) -> SimStats {
-        self.plan.timing().stats
+/// Split the outermost dim into row-range chunks and run them on
+/// scoped threads. Sound because [`RowBlock`] proved rows `[r0, r1)`
+/// store exactly into the flat range `[r0·stride + lo, r1·stride + lo)`
+/// — so `split_at_mut` at the block boundaries hands each worker a
+/// disjoint `&mut` slice, and the borrow checker does the rest.
+/// Boundary chunks absorb the `[0, lo)` / `[.., len)` margins.
+fn run_rows_parallel(
+    kp: &ExecKernel,
+    ld: usize,
+    rb: RowBlock,
+    feed: &[&[i32]],
+    scratch: &[Vec<i32>],
+    dst: &mut [i32],
+    threads: usize,
+) {
+    let rows = kp.extents[0];
+    let t = threads.min(rows as usize);
+    let len = dst.len() as i64;
+    std::thread::scope(|s| {
+        let mut rest: &mut [i32] = dst;
+        let mut taken = 0i64;
+        for i in 0..t {
+            let r0 = rows * i as i64 / t as i64;
+            let r1 = rows * (i + 1) as i64 / t as i64;
+            let end = if r1 >= rows { len } else { r1 * rb.stride + rb.lo };
+            let (chunk, r2) = std::mem::take(&mut rest).split_at_mut((end - taken) as usize);
+            rest = r2;
+            let dst_base = taken;
+            taken = end;
+            s.spawn(move || {
+                // Per-worker buffers: allocation is fine here — this
+                // path only engages at `trip >= PAR_MIN_POINTS`, far
+                // above any per-tile kernel.
+                let mut bufs = KernelBufs::for_kernel(kp);
+                run_rows_lanes(kp, ld, r0, r1, feed, scratch, chunk, dst_base, &mut bufs);
+            });
+        }
+    });
+}
+
+/// The vectorized engine's per-kernel dispatch: full-reduction
+/// fallback, row-parallel when proven safe and big enough, else the
+/// serial lane walk.
+fn exec_kernel(
+    kp: &ExecKernel,
+    feed: &[&[i32]],
+    scratch: &[Vec<i32>],
+    dst: &mut [i32],
+    bufs: &mut KernelBufs,
+    threads: usize,
+) {
+    let Some(ld) = kp.lane.lane_dim else {
+        // No pure dims: the whole domain is one reduction group
+        // draining to a single point (store strides are all zero).
+        let KernelBufs { regs, load_vals, tail, addr, .. } = bufs;
+        let v = scalar_group(kp, feed, scratch, regs, load_vals, tail, addr, &|_| 0);
+        dst[kp.store.addr.offset as usize] = v;
+        return;
+    };
+    let rows = kp.extents[0];
+    let trip: i64 = kp.extents.iter().product();
+    if threads >= 2 && ld >= 1 && rows >= 2 && trip >= PAR_MIN_POINTS {
+        if let Some(rb) = kp.lane.row_block {
+            run_rows_parallel(kp, ld, rb, feed, scratch, dst, threads);
+            return;
+        }
+    }
+    let row1 = if ld >= 1 { rows } else { 1 };
+    run_rows_lanes(kp, ld, 0, row1, feed, scratch, dst, 0, bufs);
+}
+
+/// The original scalar reference walk (`--engine exec-scalar`): one
+/// point at a time over an [`IterationDomain`] with [`DeltaImpl`]
+/// address cursors — a genuinely independent implementation of the
+/// same kernel semantics, kept for differential testing. Builds its
+/// cursors per call; it is not on anyone's hot path.
+fn exec_kernel_scalar(
+    kp: &ExecKernel,
+    feed: &[&[i32]],
+    scratch: &[Vec<i32>],
+    dst: &mut [i32],
+    bufs: &mut KernelBufs,
+) {
+    let KernelBufs { regs, load_vals, .. } = bufs;
+    let mut id = IterationDomain::new(kp.extents.clone());
+    let mut loads: Vec<DeltaImpl> =
+        kp.loads.iter().map(|l| DeltaImpl::new(&l.addr, &kp.extents)).collect();
+    let mut store = DeltaImpl::new(&kp.store.addr, &kp.extents);
+    let root = kp.nodes.len() - 1;
+    let period = kp.store.period;
+    let mut acc: i32 = 0;
+    let mut group: i64 = 0;
+    loop {
+        let pt = id.point();
+        for (li, l) in kp.loads.iter().enumerate() {
+            let a = loads[li].value() as usize;
+            load_vals[li] = match l.src {
+                BufRef::Input(i) => feed[i][a],
+                BufRef::Scratch(s) => scratch[s][a],
+            };
+        }
+        for (ni, node) in kp.nodes.iter().enumerate() {
+            let mut ops = [0i32; 3];
+            for (k, s) in node.srcs.iter().enumerate() {
+                let routed = match s {
+                    OperandSrc::Load(l) => load_vals[*l],
+                    OperandSrc::Node(j) => regs[*j],
+                    OperandSrc::Iter(d) => (kp.mins[*d] + pt[*d]) as i32,
+                    OperandSrc::None => 0,
+                };
+                ops[k] = node.cfg.consts[k].unwrap_or(routed);
+            }
+            regs[ni] = match &node.cfg.op {
+                PeOp::Bin(op) => eval_binop(*op, ops[0], ops[1]),
+                PeOp::Un(UnOp::Neg) => ops[0].wrapping_neg(),
+                PeOp::Un(UnOp::Abs) => ops[0].wrapping_abs(),
+                PeOp::Select => {
+                    if ops[0] != 0 {
+                        ops[1]
+                    } else {
+                        ops[2]
+                    }
+                }
+                PeOp::Acc { op, init, .. } => {
+                    // Same reset-every-`period`-firings rule as the
+                    // PE's accumulate mode; firing order is row-major,
+                    // exactly the gated order the simulator latches.
+                    if group == 0 {
+                        acc = *init;
+                    }
+                    acc = eval_binop(*op, acc, ops[0]);
+                    acc
+                }
+            };
+        }
+        group += 1;
+        if group == period {
+            group = 0;
+            let a = store.value() as usize;
+            dst[a] = regs[root];
+        }
+        match id.step() {
+            Some((inc, clr)) => {
+                for d in loads.iter_mut() {
+                    d.step(&inc, &clr);
+                }
+                store.step(&inc, &clr);
+            }
+            None => break,
+        }
     }
 }
 
@@ -263,6 +707,31 @@ mod tests {
         }
     }
 
+    fn box_filter(tile: i64) -> Program {
+        let conv = Func::reduce_fn(
+            "conv",
+            &["y", "x"],
+            Expr::c(0),
+            &[("ry", 0, 3), ("rx", 0, 3)],
+            Expr::add(
+                Expr::ld("conv", vec![Expr::v("y"), Expr::v("x")]),
+                Expr::ld(
+                    "in",
+                    vec![
+                        Expr::add(Expr::v("y"), Expr::v("ry")),
+                        Expr::add(Expr::v("x"), Expr::v("rx")),
+                    ],
+                ),
+            ),
+        );
+        Program {
+            name: "boxf".into(),
+            inputs: vec![InputDecl { name: "in".into(), rank: 2 }],
+            funcs: vec![conv],
+            schedule: HwSchedule::new([tile, tile]),
+        }
+    }
+
     fn inputs_for(lp: &LoweredPipeline, salt: i64) -> BTreeMap<String, Tensor> {
         let mut ins = BTreeMap::new();
         for name in &lp.inputs {
@@ -298,28 +767,7 @@ mod tests {
     /// contract.
     #[test]
     fn reduction_matches_sim_bit_exact() {
-        let conv = Func::reduce_fn(
-            "conv",
-            &["y", "x"],
-            Expr::c(0),
-            &[("ry", 0, 3), ("rx", 0, 3)],
-            Expr::add(
-                Expr::ld("conv", vec![Expr::v("y"), Expr::v("x")]),
-                Expr::ld(
-                    "in",
-                    vec![
-                        Expr::add(Expr::v("y"), Expr::v("ry")),
-                        Expr::add(Expr::v("x"), Expr::v("rx")),
-                    ],
-                ),
-            ),
-        );
-        let p = Program {
-            name: "boxf".into(),
-            inputs: vec![InputDecl { name: "in".into(), rank: 2 }],
-            funcs: vec![conv],
-            schedule: HwSchedule::new([6, 6]),
-        };
+        let p = box_filter(6);
         let (lp, g, d) = compile(&p);
         let ins = inputs_for(&lp, 3);
         let sim = simulate(&d, &g, &ins).unwrap();
@@ -344,6 +792,52 @@ mod tests {
         assert_eq!(ex.stats, sim.stats);
     }
 
+    /// The scalar reference engine is bit-identical to the vectorized
+    /// one — on a stencil (pure), a reduction (accumulator), and an
+    /// unrolled variant. Tile sizes straddle LANES multiples so the
+    /// scalar-tail path runs too.
+    #[test]
+    fn scalar_engine_matches_simd_engine() {
+        let mut unrolled = brighten_blur(14);
+        unrolled.schedule = HwSchedule::new([14, 14])
+            .store_at("brighten")
+            .unroll("brighten", "x", 2)
+            .unroll("blur", "x", 2);
+        for (p, salt) in [(brighten_blur(16), 5), (box_filter(9), 7), (unrolled, 9)] {
+            let (lp, g, d) = compile(&p);
+            let ins = inputs_for(&lp, salt);
+            let plan = Arc::new(ExecPlan::build(&d, &g).unwrap());
+            let simd = ExecRun::new(Arc::clone(&plan)).run(&ins).unwrap();
+            let scalar = ExecRun::new_scalar(plan).run(&ins).unwrap();
+            assert_eq!(simd.output.data, scalar.output.data, "{}", p.name);
+            assert_eq!(simd.stats, scalar.stats, "{}", p.name);
+        }
+    }
+
+    /// A domain big enough to cross PAR_MIN_POINTS engages the
+    /// row-parallel path — its output must be bit-identical to one
+    /// worker and to the scalar reference.
+    #[test]
+    fn threaded_matches_single_thread_bit_exact() {
+        let p = brighten_blur(280); // 280^2 points > 2^16
+        let (lp, g, d) = compile(&p);
+        let plan = Arc::new(ExecPlan::build(&d, &g).unwrap());
+        assert!(
+            plan.kernels.iter().any(|k| {
+                k.extents.iter().product::<i64>() >= PAR_MIN_POINTS
+                    && k.lane.row_block.is_some()
+            }),
+            "fixture no longer exercises the parallel path"
+        );
+        let ins = inputs_for(&lp, 13);
+        let par = ExecRun::with_threads(Arc::clone(&plan), 4).run(&ins).unwrap();
+        let one = ExecRun::with_threads(Arc::clone(&plan), 1).run(&ins).unwrap();
+        let sc = ExecRun::new_scalar(plan).run(&ins).unwrap();
+        assert_eq!(par.output.data, one.output.data);
+        assert_eq!(par.output.data, sc.output.data);
+        assert_eq!(par.stats, one.stats);
+    }
+
     /// A reused ExecRun is bit-identical across interleaved inputs,
     /// like the simulator's plan-reuse contract.
     #[test]
@@ -362,6 +856,40 @@ mod tests {
             run.run(&a).unwrap().output.data,
             run.run(&b).unwrap().output.data
         );
+    }
+
+    /// The arena's zero-allocation contract: after the first request,
+    /// repeated `run_into` calls never allocate — the counter freezes.
+    #[test]
+    fn warm_runs_do_not_allocate() {
+        for p in [brighten_blur(12), box_filter(9)] {
+            let (lp, g, d) = compile(&p);
+            let plan = Arc::new(ExecPlan::build(&d, &g).unwrap());
+            let mut run = ExecRun::new(plan);
+            let (a, b) = (inputs_for(&lp, 4), inputs_for(&lp, 6));
+            let mut out = Vec::new();
+            run.run_into(&a, &mut out).unwrap();
+            let warm = run.alloc_count();
+            for ins in [&b, &a, &b] {
+                run.run_into(ins, &mut out).unwrap();
+            }
+            assert_eq!(run.alloc_count(), warm, "{}: warm run allocated", p.name);
+        }
+    }
+
+    /// `run_into` produces the same words `run` returns.
+    #[test]
+    fn run_into_matches_run() {
+        let p = brighten_blur(12);
+        let (lp, g, d) = compile(&p);
+        let plan = Arc::new(ExecPlan::build(&d, &g).unwrap());
+        let mut run = ExecRun::new(plan);
+        let ins = inputs_for(&lp, 21);
+        let full = run.run(&ins).unwrap();
+        let mut out = Vec::new();
+        let stats = run.run_into(&ins, &mut out).unwrap();
+        assert_eq!(out, full.output.data);
+        assert_eq!(stats, full.stats);
     }
 
     /// Graphs the functional engine cannot prove sound are rejected at

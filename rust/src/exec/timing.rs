@@ -26,6 +26,12 @@
 //! verifies the interval bounds and returns `Err` otherwise, which is
 //! one of the conditions that makes engine selection fall back to the
 //! cycle-accurate simulator (see [`crate::exec::Engine`]).
+//!
+//! Because the model is purely analytic — a function of the *design*,
+//! never of how the functional engine walks it — the stats are
+//! identical whether [`crate::exec::ExecRun`] executes scalar,
+//! vectorized, or across threads (docs/execution.md, "Lanes, threads,
+//! and the arena"); the exec_fuzz suite asserts exactly that.
 
 use anyhow::Result;
 

@@ -18,9 +18,11 @@
 //! ```
 //!
 //! `run`, `report`, `tune`, `serve` and `serve-all` accept
-//! `--engine {exec,sim,auto}` (docs/execution.md): `exec` is the
-//! functional execution engine, `sim` the cycle-accurate simulator,
-//! `auto` (default) prefers exec with sim as fallback.
+//! `--engine {exec,exec-scalar,sim,auto}` (docs/execution.md): `exec`
+//! is the functional execution engine (vectorized + threaded),
+//! `exec-scalar` its one-point-at-a-time reference walk (the
+//! differential-testing escape hatch), `sim` the cycle-accurate
+//! simulator, `auto` (default) prefers exec with sim as fallback.
 //!
 //! The repo-level README.md walks through every subcommand; the serve
 //! wire format is specified in docs/protocol.md.
@@ -64,18 +66,18 @@ fn usage(cmd: &str) -> &'static str {
     match cmd {
         "list" => "usage: pushmem list\n\nPrint every registered application name (apps + Harris schedule variants).",
         "compile" => "usage: pushmem compile <app>\n\nCompile one app through the full pipeline and print the design report\n(PEs, MEM tiles, SRAM/SR words, completion, place & route, bitstream).",
-        "run" => "usage: pushmem run <app> [--extent WxH] [--artifacts D] [--engine E]\n\n  --extent WxH    execute a whole image of this output extent through\n                  the tile planner (docs/tiling.md) and validate\n                  bit-exactly against the host-side whole-image golden\n                  model — no artifacts needed. Rank must match the\n                  app's output (e.g. 250x250 for the 2-D stencils).\n  --artifacts D   directory of HLO golden artifacts (default: artifacts)\n  --engine E      exec|sim|auto (default: auto) — docs/execution.md\n\nWithout --extent: execute one app at its compiled tile and validate\nbit-exactly against the XLA golden model (requires `make artifacts`).",
+        "run" => "usage: pushmem run <app> [--extent WxH] [--artifacts D] [--engine E]\n\n  --extent WxH    execute a whole image of this output extent through\n                  the tile planner (docs/tiling.md) and validate\n                  bit-exactly against the host-side whole-image golden\n                  model — no artifacts needed. Rank must match the\n                  app's output (e.g. 250x250 for the 2-D stencils).\n  --artifacts D   directory of HLO golden artifacts (default: artifacts)\n  --engine E      exec|exec-scalar|sim|auto (default: auto) — docs/execution.md\n\nWithout --extent: execute one app at its compiled tile and validate\nbit-exactly against the XLA golden model (requires `make artifacts`).",
         "validate" => "usage: pushmem validate <app>|--all\n\nDifferential engine check (no artifacts needed): run the app through\nboth the functional execution engine and the cycle-accurate simulator\non identical inputs and compare outputs word-for-word and reported\nstats field-by-field. On divergence, prints the first mismatching\ndrain port, output coordinate, and cycle (docs/execution.md).\n--all cross-checks every primary app and fails if any diverges\n(`make validate-all`).",
-        "report" => "usage: pushmem report [--artifacts D] [--engine E]\n\n  --artifacts D   directory of HLO golden artifacts (default: artifacts)\n  --engine E      exec|sim|auto (default: auto)\n\nAll seven Table III apps: Table IV resources plus Fig 13/14 rows.",
+        "report" => "usage: pushmem report [--artifacts D] [--engine E]\n\n  --artifacts D   directory of HLO golden artifacts (default: artifacts)\n  --engine E      exec|exec-scalar|sim|auto (default: auto)\n\nAll seven Table III apps: Table IV resources plus Fig 13/14 rows.",
         "tables" => "usage: pushmem tables\n\nReproduce Tables V (Harris schedules), VI and VII (optimized vs\nsequential mappings).",
-        "tune" => "usage: pushmem tune <app> [--objective O] [--budget N] [--workers N] [--seed S] [--cache-dir D] [--engine E]\n\n  --objective O   cycles|energy|pes|area|pareto (default: cycles)\n  --budget N      max candidates to score (default: 24)\n  --workers N     evaluation threads (default: all cores)\n  --seed S        enumeration seed (default: 1)\n  --cache-dir D   content-addressed result cache (default: dse-cache;\n                  'none' disables caching)\n  --engine E      exec|sim|auto (default: auto) — exec scores an order\n                  of magnitude more candidates/sec at identical scores\n\nSearch the schedule space of <app>: enumerate tile/store_at/unroll/\nhost candidates, prune analytically, score survivors in parallel\n(each validated bit-exact against the functional reference), rank by\nthe objective, and record the winner for `serve --tuned-dir`. For\nharris the ranking is compared against the six hand-written Table V\nschedules. See docs/dse.md.",
-        "serve" => "usage: pushmem serve <app> [--addr A] [--workers N] [--stats] [--extent WxH] [--tuned-dir D] [--engine E]\n\n  --addr A      listen address (default: 127.0.0.1:7411)\n  --workers N   connection worker threads (default: 4; a connection\n                holds its worker until it disconnects, and idle\n                workers join in-flight whole-image tile batches)\n  --stats       print one [req] line per served request\n  --extent WxH  pre-build (warm) the tile plan for this whole-image\n                output extent so the first v3 request at that size\n                pays nothing (docs/tiling.md)\n  --tuned-dir D use the tuner-recorded best schedule from D when one\n                exists (see `pushmem tune`); falls back to the\n                hand-written schedule otherwise\n  --engine E    exec|sim|auto (default: auto) — the functional engine\n                serves requests in microseconds; sim stays available\n                as the cycle-accurate reference (docs/execution.md)\n\nCompile <app> and serve tiles over TCP. v1 frames target <app>; v2\nframes may name any registered app; v3 frames carry a whole-image\noutput extent, tiled onto the fixed design (docs/protocol.md).",
-        "serve-all" => "usage: pushmem serve-all [--addr A] [--workers N] [--apps a,b,c] [--warm] [--tuned-dir D] [--engine E]\n\n  --addr A      listen address (default: 127.0.0.1:7411)\n  --workers N   connection worker threads (default: 8)\n  --apps LIST   comma-separated app names to register (default: the\n                seven Table III apps; variants like harris_sch4 allowed)\n  --warm        compile every registered app up front instead of lazily\n                on first request\n  --tuned-dir D per-app tuner-recorded schedules from D override the\n                hand-written defaults (see `pushmem tune`)\n  --engine E    exec|sim|auto (default: auto)\n\nServe every registered app over one TCP port (v2 frames carry the app\nname; see docs/protocol.md). Designs are compiled once, cached, and\nshared across connections. Prints one [req] stats line per request.",
+        "tune" => "usage: pushmem tune <app> [--objective O] [--budget N] [--workers N] [--seed S] [--cache-dir D] [--engine E]\n\n  --objective O   cycles|energy|pes|area|pareto (default: cycles)\n  --budget N      max candidates to score (default: 24)\n  --workers N     evaluation threads (default: all cores)\n  --seed S        enumeration seed (default: 1)\n  --cache-dir D   content-addressed result cache (default: dse-cache;\n                  'none' disables caching)\n  --engine E      exec|exec-scalar|sim|auto (default: auto) — exec scores an order\n                  of magnitude more candidates/sec at identical scores\n\nSearch the schedule space of <app>: enumerate tile/store_at/unroll/\nhost candidates, prune analytically, score survivors in parallel\n(each validated bit-exact against the functional reference), rank by\nthe objective, and record the winner for `serve --tuned-dir`. For\nharris the ranking is compared against the six hand-written Table V\nschedules. See docs/dse.md.",
+        "serve" => "usage: pushmem serve <app> [--addr A] [--workers N] [--stats] [--extent WxH] [--tuned-dir D] [--engine E]\n\n  --addr A      listen address (default: 127.0.0.1:7411)\n  --workers N   connection worker threads (default: 4; a connection\n                holds its worker until it disconnects, and idle\n                workers join in-flight whole-image tile batches)\n  --stats       print one [req] line per served request\n  --extent WxH  pre-build (warm) the tile plan for this whole-image\n                output extent so the first v3 request at that size\n                pays nothing (docs/tiling.md)\n  --tuned-dir D use the tuner-recorded best schedule from D when one\n                exists (see `pushmem tune`); falls back to the\n                hand-written schedule otherwise\n  --engine E    exec|exec-scalar|sim|auto (default: auto) — the functional engine\n                serves requests in microseconds; sim stays available\n                as the cycle-accurate reference (docs/execution.md)\n\nCompile <app> and serve tiles over TCP. v1 frames target <app>; v2\nframes may name any registered app; v3 frames carry a whole-image\noutput extent, tiled onto the fixed design (docs/protocol.md).",
+        "serve-all" => "usage: pushmem serve-all [--addr A] [--workers N] [--apps a,b,c] [--warm] [--tuned-dir D] [--engine E]\n\n  --addr A      listen address (default: 127.0.0.1:7411)\n  --workers N   connection worker threads (default: 8)\n  --apps LIST   comma-separated app names to register (default: the\n                seven Table III apps; variants like harris_sch4 allowed)\n  --warm        compile every registered app up front instead of lazily\n                on first request\n  --tuned-dir D per-app tuner-recorded schedules from D override the\n                hand-written defaults (see `pushmem tune`)\n  --engine E    exec|exec-scalar|sim|auto (default: auto)\n\nServe every registered app over one TCP port (v2 frames carry the app\nname; see docs/protocol.md). Designs are compiled once, cached, and\nshared across connections. Prints one [req] stats line per request.",
         _ => "usage: pushmem <list|compile|run|validate|report|tables|tune|serve|serve-all> [args]\nsee `pushmem list` for applications and `pushmem <cmd> --help` for flags",
     }
 }
 
-/// Shared `--engine exec|sim|auto` flag (default: auto).
+/// Shared `--engine exec|exec-scalar|sim|auto` flag (default: auto).
 fn engine_flag(args: &[String]) -> Result<Engine> {
     Engine::parse(&flag_value(args, "--engine", "auto")?)
 }

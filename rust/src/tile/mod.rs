@@ -39,4 +39,4 @@ pub mod plan;
 pub mod run;
 
 pub use plan::{TilePlan, TileSlot};
-pub use run::{run_tiled, TileBatch, TiledResult};
+pub use run::{run_tiled, TileBatch, TileScratch, TiledResult};

@@ -253,6 +253,62 @@ impl TilePlan {
         out
     }
 
+    /// The allocation-free [`TilePlan::gather`]: fill input `k`'s
+    /// pre-shaped slice tensor `dst` (over the design's declared box)
+    /// from the whole-image tensor, for one tile. `p` and `q` are
+    /// caller-owned coordinate scratch of at least the input's rank —
+    /// [`Tensor::get_clamped`] builds a coord `Vec` per call, which is
+    /// exactly the per-point allocation the tile hot path must avoid
+    /// (docs/tiling.md). Same clamp-to-edge semantics as `gather`.
+    pub fn gather_into(
+        &self,
+        k: usize,
+        slot: &TileSlot,
+        full: &Tensor,
+        dst: &mut Tensor,
+        p: &mut [i64],
+        q: &mut [i64],
+    ) {
+        let compiled = &self.compiled_input_boxes[k];
+        let shift = &slot.input_shift[k];
+        debug_assert!(dst.shape.same_layout(compiled), "dst not pre-shaped");
+        if shift.iter().all(|&s| s == 0) && full.shape.same_layout(compiled) {
+            dst.data.copy_from_slice(&full.data);
+            return;
+        }
+        // Manual row-major odometer over the compiled box: `p` is the
+        // local point, `q` its clamped whole-image coordinate. `dst`
+        // is filled sequentially — local row-major order IS its flat
+        // order.
+        let rank = compiled.rank();
+        let p = &mut p[..rank];
+        let q = &mut q[..rank];
+        for (v, d) in p.iter_mut().zip(&compiled.dims) {
+            *v = d.min;
+        }
+        let mut idx = 0usize;
+        loop {
+            for i in 0..rank {
+                let d = &full.shape.dims[i];
+                q[i] = (p[i] + shift[i]).clamp(d.min, d.max());
+            }
+            dst.data[idx] = full.get(q);
+            idx += 1;
+            let mut done = true;
+            for k in (0..rank).rev() {
+                p[k] += 1;
+                if p[k] < compiled.dims[k].min + compiled.dims[k].extent {
+                    done = false;
+                    break;
+                }
+                p[k] = compiled.dims[k].min;
+            }
+            if done {
+                break;
+            }
+        }
+    }
+
     /// Copy one finished tile into the stitched output, cropped to the
     /// requested extent. Clamped tiles overlap their neighbours; the
     /// overlap re-writes bit-identical words (same design, same input
@@ -276,6 +332,46 @@ impl TilePlan {
             }
             out.set(p, tile_out.get(&local));
         });
+    }
+
+    /// The allocation-free [`TilePlan::scatter`]: same crop-and-copy
+    /// with caller-owned coordinate scratch (`local`, `image`, at
+    /// least the output rank each) instead of a per-call `Vec` and the
+    /// box point iterator.
+    pub fn scatter_into(
+        &self,
+        slot: &TileSlot,
+        tile_out: &Tensor,
+        out: &mut Tensor,
+        local: &mut [i64],
+        image: &mut [i64],
+    ) {
+        let rank = self.out_box.rank();
+        let local = &mut local[..rank];
+        let image = &mut image[..rank];
+        local.iter_mut().for_each(|v| *v = 0);
+        loop {
+            for i in 0..rank {
+                image[i] = slot.origin[i] + local[i];
+            }
+            out.set(image, tile_out.get(local));
+            let mut done = true;
+            for k in (0..rank).rev() {
+                local[k] += 1;
+                // Crop: only [origin, min(origin + tile, extent)) of
+                // each dim lands in the stitched image.
+                let span = (slot.origin[k] + self.tile[k]).min(self.out_box.dims[k].extent)
+                    - slot.origin[k];
+                if local[k] < span {
+                    done = false;
+                    break;
+                }
+                local[k] = 0;
+            }
+            if done {
+                break;
+            }
+        }
     }
 }
 
@@ -342,5 +438,37 @@ mod tests {
         // Local (0,0) reads image (19,6); local (15,15) reads (34,21).
         assert_eq!(slice.get(&[0, 0]), full.get(&[19, 6]));
         assert_eq!(slice.get(&[15, 15]), full.get(&[34, 21]));
+    }
+
+    /// The allocation-free gather/scatter variants are bit-identical
+    /// to the allocating reference paths, across every tile of a plan
+    /// with clamped edge tiles (so the clamp and crop paths both run).
+    #[test]
+    fn gather_into_and_scatter_into_match_the_allocating_paths() {
+        let c = compile(&apps::gaussian::build(14)).unwrap();
+        let plan = TilePlan::build(&c, &[33, 20]).unwrap();
+        let full = Tensor::from_fn(plan.input_boxes[0].clone(), |p| {
+            (7 * p[0] + 3 * p[1] + 1) as i32
+        });
+        let mut inputs = BTreeMap::new();
+        inputs.insert("input".to_string(), full.clone());
+        let (mut ca, mut cb) = (vec![0i64; 4], vec![0i64; 4]);
+        let mut dst = Tensor::zeros(plan.compiled_input_boxes[0].clone());
+        for slot in &plan.tiles {
+            let want = &plan.gather(slot, &inputs)["input"];
+            plan.gather_into(0, slot, &full, &mut dst, &mut ca, &mut cb);
+            assert_eq!(dst.data, want.data, "origin {:?}", slot.origin);
+        }
+        let tile_box = BoxSet::from_extents(&plan.tile);
+        let mut a = Tensor::zeros(plan.out_box.clone());
+        let mut b = Tensor::zeros(plan.out_box.clone());
+        for (i, slot) in plan.tiles.iter().enumerate() {
+            let t = Tensor::from_fn(tile_box.clone(), |p| {
+                (i as i64 * 1000 + 10 * p[0] + p[1]) as i32
+            });
+            plan.scatter(slot, &t, &mut a);
+            plan.scatter_into(slot, &t, &mut b, &mut ca, &mut cb);
+        }
+        assert_eq!(a.data, b.data);
     }
 }

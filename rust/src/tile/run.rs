@@ -14,10 +14,25 @@
 //! submitting thread drains every unclaimed tile itself, so a fully
 //! busy pool degrades to sequential execution, not deadlock.
 //!
+//! ## The steady-state drain allocates nothing
+//!
+//! Each participant drains through a [`TileScratch`]: pre-shaped
+//! per-input slice tensors filled by [`TilePlan::gather_into`], a
+//! reused tile-output tensor driven by
+//! [`crate::exec::EngineRun::run_into`], and coordinate scratch for
+//! the non-allocating scatter. Tiles land directly in the batch's
+//! preallocated stitched output as they finish (under the state lock
+//! — overlapping clamped tiles write bit-identical words, the lock
+//! just keeps `Tensor::set` races out of the picture). The scratch is
+//! design-level, not extent-level: the serving layer caches one per
+//! design next to its cached runner, so a warm connection's
+//! whole-image requests perform **zero per-tile heap allocations**
+//! with the functional engine — the alloc-counter test pins it.
+//!
 //! [`TileBatch::wait`] blocks until every claimed tile has landed,
-//! then stitches the clipped tile outputs into the whole image and
-//! sums the per-tile [`SimStats`] (the sequential-replay totals one
-//! accelerator would spend).
+//! then hands over the stitched image and the summed per-tile
+//! [`SimStats`] (the sequential-replay totals one accelerator would
+//! spend).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -25,9 +40,9 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{bail, Result};
 
-use crate::cgra::{SimResult, SimStats};
+use crate::cgra::SimStats;
 use crate::coordinator::Compiled;
-use crate::exec::Engine;
+use crate::exec::{Engine, EngineRun};
 use crate::tensor::Tensor;
 
 use super::plan::TilePlan;
@@ -45,8 +60,48 @@ pub struct TiledResult {
     pub engine: Engine,
 }
 
+/// One drain participant's reusable buffers, sized by the design (not
+/// the extent — every [`TilePlan`] of a design shares the declared
+/// per-tile boxes), so serving caches one per design alongside its
+/// cached runner.
+pub struct TileScratch {
+    /// Per-input tile slices over the design's declared boxes.
+    inputs: BTreeMap<String, Tensor>,
+    /// Reused tile-output tensor ([`EngineRun::run_into`] rebinds it
+    /// only when the layout changes).
+    out: Option<Tensor>,
+    /// Coordinate scratch for the odometer walks (max rank in play).
+    ca: Vec<i64>,
+    cb: Vec<i64>,
+    /// Fresh tile-output bindings observed: the functional engine
+    /// binds once and reuses; the simulator rebuilds per tile.
+    allocs: u64,
+}
+
+impl TileScratch {
+    pub fn new(plan: &TilePlan) -> TileScratch {
+        let mut inputs = BTreeMap::new();
+        let mut rank = plan.out_box.rank();
+        for (name, b) in plan.input_names.iter().zip(&plan.compiled_input_boxes) {
+            rank = rank.max(b.rank());
+            inputs.insert(name.clone(), Tensor::zeros(b.clone()));
+        }
+        TileScratch { inputs, out: None, ca: vec![0; rank], cb: vec![0; rank], allocs: 0 }
+    }
+
+    /// Fresh tile-output bindings so far — frozen across warm drains
+    /// with the functional engine (the alloc-counter test asserts it
+    /// together with [`crate::exec::ExecRun::alloc_count`]).
+    pub fn alloc_count(&self) -> u64 {
+        self.allocs
+    }
+}
+
 struct BatchState {
-    results: Vec<Option<SimResult>>,
+    /// The stitched image, preallocated at batch creation; tiles land
+    /// in it as they finish. Taken (once) by [`TileBatch::wait`].
+    output: Option<Tensor>,
+    stats: SimStats,
     finished: usize,
     failed: Option<String>,
     engine_used: Option<Engine>,
@@ -75,7 +130,7 @@ impl TileBatch {
         inputs: BTreeMap<String, Tensor>,
     ) -> Result<Arc<TileBatch>> {
         plan.check_inputs(&inputs)?;
-        let tiles = plan.tile_count();
+        let output = Tensor::zeros(plan.out_box.clone());
         Ok(Arc::new(TileBatch {
             c,
             engine,
@@ -83,7 +138,8 @@ impl TileBatch {
             inputs,
             next: AtomicUsize::new(0),
             state: Mutex::new(BatchState {
-                results: (0..tiles).map(|_| None).collect(),
+                output: Some(output),
+                stats: SimStats::default(),
                 finished: 0,
                 failed: None,
                 engine_used: None,
@@ -98,8 +154,8 @@ impl TileBatch {
 
     fn lock(&self) -> std::sync::MutexGuard<'_, BatchState> {
         // A panicking claimant already recorded its failure through
-        // the catch_unwind in `work`; the state it guards is only
-        // Options and counters, so recovery is safe.
+        // the catch_unwind in `step`; the state it guards is only
+        // counters and tensors written whole, so recovery is safe.
         self.state.lock().unwrap_or_else(|p| p.into_inner())
     }
 
@@ -116,58 +172,79 @@ impl TileBatch {
     /// Claim and execute tiles until none remain unclaimed; safe to
     /// call from any number of threads, and returns quickly when the
     /// batch is already drained (stale helper wake-ups are free).
-    /// Each participant builds one engine runner lazily on its first
-    /// claim and reuses it for every subsequent tile.
+    /// Each participant builds one engine runner and one scratch
+    /// lazily on its first claim and reuses them for every subsequent
+    /// tile.
     pub fn work(&self) {
-        let mut runner = None;
+        let mut ctx: Option<(EngineRun, TileScratch)> = None;
         loop {
             let i = self.next.fetch_add(1, Ordering::Relaxed);
             if i >= self.plan.tile_count() {
                 return;
             }
-            if runner.is_none() {
+            if ctx.is_none() {
                 match self.c.runner(self.engine) {
-                    Ok(r) => runner = Some(r),
+                    Ok(r) => ctx = Some((r, TileScratch::new(&self.plan))),
                     Err(e) => return self.fail(format!("building engine runner: {e:#}")),
                 }
             }
-            if !self.step(i, runner.as_mut().expect("runner just built")) {
+            let (r, scratch) = ctx.as_mut().expect("runner just built");
+            if !self.step(i, r, scratch) {
                 return;
             }
         }
     }
 
-    /// [`TileBatch::work`] with a caller-provided runner — the serving
-    /// path lends its per-connection cached [`EngineRun`] so a v3
-    /// request on a warm connection pays no runner setup, keeping the
-    /// fixed-box path's "no per-request setup" invariant.
-    pub fn work_with(&self, runner: &mut crate::exec::EngineRun) {
+    /// [`TileBatch::work`] with caller-provided runner and scratch —
+    /// the serving path lends its per-design cached [`EngineRun`] and
+    /// [`TileScratch`] so a v3 request on a warm connection pays no
+    /// setup and no per-tile allocation.
+    pub fn work_with(&self, runner: &mut EngineRun, scratch: &mut TileScratch) {
         loop {
             let i = self.next.fetch_add(1, Ordering::Relaxed);
             if i >= self.plan.tile_count() {
                 return;
             }
-            if !self.step(i, runner) {
+            if !self.step(i, runner, scratch) {
                 return;
             }
         }
     }
 
-    /// Execute one claimed tile; returns `false` when the batch
-    /// failed and the claimant should stop.
-    fn step(&self, i: usize, r: &mut crate::exec::EngineRun) -> bool {
+    /// Execute one claimed tile: gather into the scratch slices, run
+    /// into the reused tile output, scatter into the stitched image.
+    /// Returns `false` when the batch failed and the claimant should
+    /// stop.
+    fn step(&self, i: usize, r: &mut EngineRun, scratch: &mut TileScratch) -> bool {
+        let slot = &self.plan.tiles[i];
         // A panic inside an engine must not strand the batch: the
         // submitter waits on the finished count, so every claimed
         // tile has to resolve to a result or a recorded failure.
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            let slice = self.plan.gather(&self.plan.tiles[i], &self.inputs);
-            r.run(&slice)
+            for (k, name) in self.plan.input_names.iter().enumerate() {
+                let dst = scratch.inputs.get_mut(name).expect("scratch covers inputs");
+                self.plan.gather_into(
+                    k,
+                    slot,
+                    &self.inputs[name],
+                    dst,
+                    &mut scratch.ca,
+                    &mut scratch.cb,
+                );
+            }
+            r.run_into(&scratch.inputs, &mut scratch.out)
         }));
         match outcome {
-            Ok(Ok(res)) => {
+            Ok(Ok((stats, fresh))) => {
+                if fresh {
+                    scratch.allocs += 1;
+                }
+                let tile_out = scratch.out.as_ref().expect("run_into bound the output");
                 let mut st = self.lock();
                 st.engine_used.get_or_insert(r.engine());
-                st.results[i] = Some(res);
+                st.stats += stats;
+                let out = st.output.as_mut().expect("result not yet consumed");
+                self.plan.scatter_into(slot, tile_out, out, &mut scratch.ca, &mut scratch.cb);
                 st.finished += 1;
                 let all = st.finished == self.plan.tile_count();
                 drop(st);
@@ -188,8 +265,9 @@ impl TileBatch {
     }
 
     /// Block until every tile has finished (or the batch failed), then
-    /// stitch. Callable from the submitting thread while helpers are
-    /// still landing their last claims.
+    /// hand over the stitched result. Callable from the submitting
+    /// thread while helpers are still landing their last claims.
+    /// Consumes the result: a second call reports an error.
     pub fn wait(&self) -> Result<TiledResult> {
         let mut st = self.lock();
         loop {
@@ -201,16 +279,12 @@ impl TileBatch {
             }
             st = self.done.wait(st).unwrap_or_else(|p| p.into_inner());
         }
-        let mut output = Tensor::zeros(self.plan.out_box.clone());
-        let mut stats = SimStats::default();
-        for (slot, res) in self.plan.tiles.iter().zip(&st.results) {
-            let res = res.as_ref().expect("finished tile has a result");
-            stats += res.stats;
-            self.plan.scatter(slot, &res.output, &mut output);
-        }
+        let Some(output) = st.output.take() else {
+            bail!("tiled result already consumed by an earlier wait()");
+        };
         Ok(TiledResult {
             output,
-            stats,
+            stats: st.stats,
             tiles: self.plan.tile_count(),
             engine: st.engine_used.unwrap_or(self.engine),
         })
@@ -273,7 +347,7 @@ mod tests {
         let c = Arc::new(compile(&apps::gaussian::build(14)).unwrap());
         for extent in [vec![33, 20], vec![9, 9], vec![14, 14], vec![28, 28]] {
             let (inputs, want) = golden(14, &extent);
-            for engine in [Engine::Exec, Engine::Sim] {
+            for engine in [Engine::Exec, Engine::ExecScalar, Engine::Sim] {
                 let res =
                     run_tiled(&c, engine, &extent, inputs.clone(), 3).unwrap();
                 assert_eq!(res.engine, engine);
@@ -314,5 +388,44 @@ mod tests {
         .err()
         .expect("missing inputs must fail");
         assert!(format!("{err:#}").contains("missing input"), "{err:#}");
+    }
+
+    /// The zero-allocation contract of the steady-state drain: after
+    /// one warm-up batch, further batches through the same runner +
+    /// scratch freeze both allocation counters (the engine arena's and
+    /// the tile scratch's).
+    #[test]
+    fn steady_state_tile_drain_does_not_allocate() {
+        let c = Arc::new(compile(&apps::gaussian::build(14)).unwrap());
+        let plan = c.tile_plan(&[33, 20]).unwrap();
+        let (inputs, _) = golden(14, &[33, 20]);
+        let mut runner = c.runner(Engine::Exec).unwrap();
+        let mut scratch = TileScratch::new(&plan);
+        let exec_allocs = |r: &EngineRun| match r {
+            EngineRun::Exec(e) => e.alloc_count(),
+            EngineRun::Sim(_) => unreachable!("Engine::Exec requested"),
+        };
+        let drain = |runner: &mut EngineRun, scratch: &mut TileScratch| {
+            let b = TileBatch::new(
+                Arc::clone(&c),
+                Engine::Exec,
+                Arc::clone(&plan),
+                inputs.clone(),
+            )
+            .unwrap();
+            b.work_with(runner, scratch);
+            b.wait().unwrap()
+        };
+        let first = drain(&mut runner, &mut scratch);
+        let frozen = (exec_allocs(&runner), scratch.alloc_count());
+        for _ in 0..2 {
+            let warm = drain(&mut runner, &mut scratch);
+            assert_eq!(warm.output.data, first.output.data);
+        }
+        assert_eq!(
+            (exec_allocs(&runner), scratch.alloc_count()),
+            frozen,
+            "steady-state drain allocated"
+        );
     }
 }

@@ -1,0 +1,354 @@
+//! Seeded property-based differential fuzzing of the three execution
+//! engines (docs/execution.md): for **random output extents, random
+//! schedules, and random inputs**, the vectorized + threaded
+//! functional engine (`exec`), its scalar reference walk
+//! (`exec-scalar`), and the cycle-accurate simulator (`sim`) must
+//! produce bit-identical outputs AND report identical [`SimStats`] —
+//! the property the whole serving stack rests on.
+//!
+//! Every `apps::PRIMARY` app gets its own `#[test]` (they fuzz in
+//! parallel) driving `PUSHMEM_FUZZ_CASES` cases (default 50) of random
+//! whole-image extents through the tile planner with all three
+//! engines. Case generation is a pure function of
+//! `PUSHMEM_FUZZ_SEED` (default 0xC0FFEE) — a CI failure line is
+//! reproducible locally by exporting the same two variables
+//! (`make fuzz-smoke` pins a small deterministic configuration).
+//!
+//! The extent space deliberately covers the degenerate corners: case 0
+//! is always the all-ones extent (`1x1` for the 2-D stencils), case 1
+//! the design's own compiled tile (the identity tiling), and the
+//! random tail mixes tiny (dims in 1..=3), ordinary (around the
+//! compiled tile), and large (one dim up to 300) extents, with total
+//! points capped so the cycle-accurate leg stays affordable.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use pushmem::apps;
+use pushmem::cgra::SimRun;
+use pushmem::coordinator::{compile, gen_inputs, Compiled};
+use pushmem::dse::{self, SpaceConfig};
+use pushmem::exec::{Engine, ExecRun};
+use pushmem::tensor::Tensor;
+use pushmem::tile::run_tiled;
+
+/// Splitmix64 — tiny, seedable, and good enough for case generation;
+/// the repo vendors no rand crate.
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Rng {
+        Rng(seed)
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `0..n` (modulo bias is irrelevant at these sizes).
+    fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+
+    /// Uniform in `lo..=hi`.
+    fn range(&mut self, lo: i64, hi: i64) -> i64 {
+        lo + self.below((hi - lo + 1) as u64) as i64
+    }
+
+    /// An input word: mostly small values (the realistic pixel range),
+    /// salted with ALU edge cases — every engine is wrapping-i32, so
+    /// extremes must agree too.
+    fn value(&mut self) -> i32 {
+        match self.below(16) {
+            0 => i32::MIN,
+            1 => i32::MAX,
+            2 => -1,
+            _ => (self.next_u64() % 509) as i32 - 254,
+        }
+    }
+}
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn fuzz_seed() -> u64 {
+    env_u64("PUSHMEM_FUZZ_SEED", 0xC0FFEE)
+}
+
+fn fuzz_cases() -> usize {
+    env_u64("PUSHMEM_FUZZ_CASES", 50) as usize
+}
+
+/// Stable per-app sub-seed so each app's case list is independent of
+/// the others (and of test scheduling order).
+fn mix(seed: u64, name: &str) -> u64 {
+    name.bytes()
+        .fold(seed ^ 0x9E3779B97F4A7C15, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x100000001B3)
+        })
+}
+
+/// One random requested extent, rank-matched to the design's compiled
+/// tile. Tiny / ordinary / large mix; points capped (deterministic
+/// halving) so the `sim` leg stays affordable at 50 cases per app.
+fn random_extent(rng: &mut Rng, tile: &[i64]) -> Vec<i64> {
+    let rank = tile.len();
+    let tiny = rng.below(10) == 0;
+    let big = !tiny && rank <= 2 && rng.below(8) == 0;
+    let mut e: Vec<i64> = tile
+        .iter()
+        .map(|&t| {
+            if tiny {
+                rng.range(1, 3)
+            } else {
+                rng.range(1, 3 * t.max(1))
+            }
+        })
+        .collect();
+    if big {
+        let d = rng.below(rank as u64) as usize;
+        e[d] = rng.range(100, 300);
+    }
+    let cap: i64 = if big { 12_000 } else { 2_500 };
+    while e.iter().product::<i64>() > cap {
+        let k = (0..rank).max_by_key(|&k| e[k]).expect("rank >= 1");
+        e[k] = (e[k] / 2).max(1);
+    }
+    e
+}
+
+/// The deterministic case list for one app: the two pinned corners
+/// (all-ones, compiled tile) followed by the seeded random tail.
+fn case_extents(seed: u64, tile: &[i64], n: usize) -> Vec<Vec<i64>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| match i {
+            0 => vec![1; tile.len()],
+            1 => tile.to_vec(),
+            _ => random_extent(&mut rng, tile),
+        })
+        .collect()
+}
+
+/// The small build for each `apps::PRIMARY` name — paper-scale tiles
+/// would make 50 × 3-engine tiled runs per app take hours on `sim`.
+fn small_build(name: &str) -> pushmem::halide::Program {
+    match name {
+        "gaussian" => apps::gaussian::build(14),
+        "harris" => apps::harris::build(12, apps::harris::Schedule::NoRecompute),
+        "upsample" => apps::upsample::build(12),
+        "unsharp" => apps::unsharp::build(12),
+        "camera" => apps::camera::build(12),
+        "resnet" => apps::resnet::build(apps::resnet::Size::small()),
+        "mobilenet" => apps::mobilenet::build(apps::mobilenet::Size::small()),
+        other => panic!("no small build registered for primary app {other:?}"),
+    }
+}
+
+/// Drive one app's full case list through all three engines via the
+/// tile planner and require bit-identical outputs and stats.
+fn fuzz_app(name: &str) {
+    let c = Arc::new(
+        compile(&small_build(name)).unwrap_or_else(|e| panic!("{name}: compile: {e:#}")),
+    );
+    let tile = c.tile_extent().to_vec();
+    let seed = mix(fuzz_seed(), name);
+    let mut rng = Rng::new(seed ^ 0xDA7A);
+    for (case, extent) in case_extents(seed, &tile, fuzz_cases()).iter().enumerate() {
+        let ctx = || format!("{name} case {case} extent {extent:?} (seed {seed:#x})");
+        let plan = c
+            .tile_plan(extent)
+            .unwrap_or_else(|e| panic!("{}: plan: {e:#}", ctx()));
+        let mut inputs = BTreeMap::new();
+        for (n, b) in plan.input_names.iter().zip(&plan.input_boxes) {
+            let words: Vec<i32> = (0..b.cardinality()).map(|_| rng.value()).collect();
+            inputs.insert(n.clone(), Tensor::from_data(b.clone(), words));
+        }
+        let ex = run_tiled(&c, Engine::Exec, extent, inputs.clone(), 3)
+            .unwrap_or_else(|e| panic!("{}: exec: {e:#}", ctx()));
+        let sc = run_tiled(&c, Engine::ExecScalar, extent, inputs.clone(), 3)
+            .unwrap_or_else(|e| panic!("{}: exec-scalar: {e:#}", ctx()));
+        let sim = run_tiled(&c, Engine::Sim, extent, inputs, 3)
+            .unwrap_or_else(|e| panic!("{}: sim: {e:#}", ctx()));
+        assert_eq!(ex.engine, Engine::Exec, "{}", ctx());
+        assert_eq!(sc.engine, Engine::ExecScalar, "{}", ctx());
+        assert_eq!(sim.engine, Engine::Sim, "{}", ctx());
+        assert_eq!(
+            ex.output.shape,
+            sc.output.shape,
+            "{}: output boxes differ",
+            ctx()
+        );
+        assert_eq!(
+            ex.output.data,
+            sc.output.data,
+            "{}: exec vs exec-scalar outputs differ",
+            ctx()
+        );
+        assert_eq!(
+            ex.output.data,
+            sim.output.data,
+            "{}: exec vs sim outputs differ",
+            ctx()
+        );
+        assert_eq!(
+            ex.stats,
+            sc.stats,
+            "{}: exec vs exec-scalar stats differ",
+            ctx()
+        );
+        assert_eq!(ex.stats, sim.stats, "{}: exec vs sim stats differ", ctx());
+        assert_eq!(ex.tiles, sim.tiles, "{}", ctx());
+    }
+}
+
+#[test]
+fn fuzz_gaussian() {
+    fuzz_app("gaussian");
+}
+
+#[test]
+fn fuzz_harris() {
+    fuzz_app("harris");
+}
+
+#[test]
+fn fuzz_upsample() {
+    fuzz_app("upsample");
+}
+
+#[test]
+fn fuzz_unsharp() {
+    fuzz_app("unsharp");
+}
+
+#[test]
+fn fuzz_camera() {
+    fuzz_app("camera");
+}
+
+#[test]
+fn fuzz_resnet() {
+    fuzz_app("resnet");
+}
+
+#[test]
+fn fuzz_mobilenet() {
+    fuzz_app("mobilenet");
+}
+
+/// Every primary app must have a small build registered above — a new
+/// PRIMARY entry without one should fail here, not silently go
+/// unfuzzed.
+#[test]
+fn every_primary_app_is_fuzzed() {
+    for name in apps::PRIMARY {
+        let _ = small_build(name);
+    }
+}
+
+/// Direct (untiled) three-engine comparison at the design's compiled
+/// extent, on given inputs.
+fn assert_three_engines_agree(name: &str, c: &Compiled, inputs: &BTreeMap<String, Tensor>) {
+    let sim = SimRun::new(c.plan().expect("sim plan"))
+        .run(inputs)
+        .unwrap_or_else(|e| panic!("{name}: sim: {e:#}"));
+    let ex = ExecRun::new(c.exec_plan().expect("exec plan"))
+        .run(inputs)
+        .unwrap_or_else(|e| panic!("{name}: exec: {e:#}"));
+    let sc = ExecRun::new_scalar(c.exec_plan().expect("exec plan"))
+        .run(inputs)
+        .unwrap_or_else(|e| panic!("{name}: exec-scalar: {e:#}"));
+    assert_eq!(sim.output.shape, ex.output.shape, "{name}: output boxes");
+    assert_eq!(ex.output.data, sc.output.data, "{name}: exec vs scalar");
+    assert_eq!(sim.output.data, ex.output.data, "{name}: sim vs exec");
+    assert_eq!(ex.stats, sc.stats, "{name}: exec vs scalar stats");
+    assert_eq!(sim.stats, ex.stats, "{name}: sim vs exec stats");
+}
+
+/// Random inputs shaped to the design's declared (compiled) boxes.
+fn random_compiled_inputs(c: &Compiled, rng: &mut Rng) -> BTreeMap<String, Tensor> {
+    c.lp
+        .inputs
+        .iter()
+        .map(|n| {
+            let b = c.lp.buffers[n].clone();
+            let words: Vec<i32> = (0..b.cardinality()).map(|_| rng.value()).collect();
+            (n.clone(), Tensor::from_data(b, words))
+        })
+        .collect()
+}
+
+/// Random schedules from the tuner's own (seeded) enumeration: every
+/// candidate the compiler accepts must agree across all three engines,
+/// on both the deterministic input stream and a random one.
+#[test]
+fn randomized_tuner_schedules_agree_across_three_engines() {
+    let programs = [
+        (apps::gaussian::build(10), "g10"),
+        (apps::harris::build(8, apps::harris::Schedule::NoRecompute), "h8"),
+        (apps::unsharp::build(10), "u10"),
+    ];
+    let mut rng = Rng::new(mix(fuzz_seed(), "schedules"));
+    for (base, key) in programs {
+        let cfg = SpaceConfig {
+            tile_multipliers: vec![1, 2],
+            unroll_factors: vec![1, 2],
+            explore_host_offload: true,
+            max_memory_subsets: 8,
+            seed: 11,
+        };
+        let cands = dse::enumerate(&base, key, &cfg);
+        assert!(!cands.is_empty(), "{key}: empty candidate space");
+        let mut checked = 0;
+        for cand in cands.iter().take(12) {
+            let mut p = base.clone();
+            p.schedule = cand.schedule.clone();
+            let Ok(c) = compile(&p) else { continue };
+            let tag = format!("{key}/{}", cand.encoded);
+            assert_three_engines_agree(&tag, &c, &gen_inputs(&c.lp));
+            assert_three_engines_agree(&tag, &c, &random_compiled_inputs(&c, &mut rng));
+            checked += 1;
+        }
+        assert!(checked >= 4, "{key}: only {checked} candidates compiled");
+    }
+}
+
+/// Case generation is a pure function of the seed: identical seeds
+/// reproduce identical case lists, different seeds diverge, and the
+/// mix covers the degenerate and large corners it promises.
+#[test]
+fn case_generation_is_seed_deterministic_and_covers_corners() {
+    let tile = [14, 14];
+    let a = case_extents(123, &tile, 200);
+    assert_eq!(a, case_extents(123, &tile, 200), "same seed must replay");
+    assert_ne!(a, case_extents(124, &tile, 200), "seed must matter");
+    assert_eq!(a[0], vec![1, 1], "case 0 is the all-ones corner");
+    assert_eq!(a[1], vec![14, 14], "case 1 is the identity tiling");
+    assert!(
+        a.iter().any(|e| e.iter().any(|&x| x >= 100)),
+        "no large extent in 200 cases"
+    );
+    assert!(
+        a.iter().skip(2).any(|e| e.iter().all(|&x| x <= 3)),
+        "no tiny extent in 200 cases"
+    );
+    for e in &a {
+        assert_eq!(e.len(), 2);
+        assert!(e.iter().all(|&x| (1..=300).contains(&x)), "{e:?} out of bounds");
+        assert!(e.iter().product::<i64>() <= 12_000, "{e:?} exceeds point cap");
+    }
+    // Rank-4 designs (upsample) get rank-4 extents with the same caps.
+    for e in case_extents(7, &[12, 2, 12, 2], 100) {
+        assert_eq!(e.len(), 4);
+        assert!(e.iter().product::<i64>() <= 2_500);
+    }
+}
