@@ -15,8 +15,11 @@
 # differential fuzz suite (rust/tests/exec_fuzz.rs): a small pinned
 # case count so failures reproduce exactly; the full 50-case sweep
 # runs in `make verify` via `cargo test`.
+# `make metrics-smoke` starts a real server, pushes one request through
+# the Python client, queries telemetry over the wire (`pushmem stats`)
+# and checks the --metrics-json dump (docs/observability.md).
 
-.PHONY: artifacts verify tune-smoke validate-all sim-bench bench-json fuzz-smoke clean
+.PHONY: artifacts verify tune-smoke validate-all sim-bench bench-json fuzz-smoke metrics-smoke clean
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -35,6 +38,9 @@ sim-bench:
 
 fuzz-smoke:
 	PUSHMEM_FUZZ_CASES=6 PUSHMEM_FUZZ_SEED=7 cargo test -q --test exec_fuzz
+
+metrics-smoke:
+	bash scripts/metrics_smoke.sh
 
 bench-json:
 	SIM_BENCH_QUICK=1 cargo bench --bench serve_throughput

@@ -9,6 +9,9 @@ rust/src/coordinator/protocol.rs):
 * v3 — named (or default) app **plus a requested output extent**: the
   server tiles a whole image of any size onto its fixed compiled
   design and answers the stitched result (docs/tiling.md)
+* ADMIN_STATS — an 8-byte admin frame answered with the server's
+  telemetry snapshot as JSON (``PushmemClient.stats()``,
+  docs/observability.md)
 
 Only the standard library (socket + struct) is used, so this module
 imports cleanly without jax/numpy — it is the deploy-side counterpart
@@ -26,12 +29,14 @@ Usage::
 
 from __future__ import annotations
 
+import json
 import socket
 import struct
 
 MAGIC = 0x50554222
 VERSION2 = 0xFFFF0002
 VERSION3 = 0xFFFF0003
+ADMIN_STATS = 0xFFFF0004
 
 STATUS_OK = 0
 STATUS_UNKNOWN_APP = 1
@@ -146,6 +151,14 @@ def encode_request_v3(app, extent, inputs) -> bytes:
     )
 
 
+def encode_stats_request() -> bytes:
+    """``magic | ADMIN_STATS`` — the fixed 8-byte admin frame asking
+    for the server's telemetry snapshot (docs/observability.md). The
+    answer is an ordinary OK response whose payload words pack the
+    snapshot JSON like an error detail (4 bytes/word, zero padded)."""
+    return struct.pack("<II", MAGIC, ADMIN_STATS)
+
+
 def decode_response(buf: bytes):
     """Decode one response frame from the front of ``buf``.
 
@@ -212,6 +225,26 @@ class PushmemClient:
         if status != STATUS_OK:
             raise ServerError(status, decode_detail(words))
         return words, cycles, micros
+
+    def stats(self) -> dict:
+        """Query the server's telemetry snapshot (``pushmem stats`` in
+        Python form): send the 8-byte ADMIN_STATS frame, decode the
+        packed JSON payload, and return it parsed — a dict with
+        ``schema == "pushmem-stats-v1"``, ``counters``, ``gauges``,
+        ``histograms`` and ``recent`` keys (docs/observability.md).
+        """
+        self.sock.sendall(encode_stats_request())
+        header = self._recv_exact(12)
+        magic, status, word_count = struct.unpack("<III", header)
+        if magic != MAGIC:
+            raise ProtocolError(f"bad response magic {magic:#010x}")
+        if word_count > MAX_WORDS:
+            raise ProtocolError(f"response word count {word_count} exceeds cap {MAX_WORDS}")
+        body = self._recv_exact(4 * word_count + 16)
+        _, words, _, _, _ = decode_response(header + body)
+        if status != STATUS_OK:
+            raise ServerError(status, decode_detail(words))
+        return json.loads(decode_detail(words))
 
     def close(self) -> None:
         self.sock.close()

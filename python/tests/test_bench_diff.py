@@ -1,0 +1,114 @@
+"""Behavior pins for scripts/bench_diff.py: flattening, threshold
+classification, regression direction, and the CLI exit code. Stdlib
+only — runs anywhere the protocol tests do."""
+
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[2] / "scripts"))
+
+from bench_diff import diff, flatten, is_higher_better, main  # noqa: E402
+
+
+def test_flatten_nested_and_lists():
+    doc = {
+        "bench": "serve_throughput",  # strings skipped
+        "quick": True,  # bools skipped
+        "apps": [{"app": "gaussian", "exec_req_per_s": 10.0}],
+        "tiled": {"tiles_per_s": 5, "extent": "100x70"},
+    }
+    assert flatten(doc) == {
+        "apps.0.exec_req_per_s": 10.0,
+        "tiled.tiles_per_s": 5.0,
+    }
+
+
+def test_higher_is_better_suffixes():
+    assert is_higher_better("apps.0.exec_req_per_s")
+    assert is_higher_better("geomean_exec_vs_sim_speedup")
+    assert not is_higher_better("telemetry.counters.requests_total")
+    assert not is_higher_better("telemetry.histograms.stage_execute.sum_ns")
+
+
+def test_diff_classifies_within_and_past_threshold():
+    old = {"a_per_s": 100.0, "count": 10, "same_per_s": 50.0}
+    new = {"a_per_s": 80.0, "count": 200, "same_per_s": 52.0}
+    by_path = {r[0]: r for r in diff(old, new, threshold=0.10)}
+    # 20% drop on a higher-is-better key: regression.
+    assert by_path["a_per_s"][4] == "regressed"
+    assert by_path["a_per_s"][3] == pytest.approx(-0.2)
+    # Counters grow with work done — changed, never regressed.
+    assert by_path["count"][4] == "changed"
+    # 4% wiggle is under the threshold.
+    assert by_path["same_per_s"][4] == "same"
+
+
+def test_diff_improvement_is_not_regression():
+    recs = diff({"x_per_s": 100.0}, {"x_per_s": 150.0}, threshold=0.10)
+    assert recs[0][4] == "changed"
+    assert recs[0][3] == pytest.approx(0.5)
+
+
+def test_diff_added_removed_and_zero_baseline():
+    old = {"gone": 1, "zero": 0}
+    new = {"fresh": 2, "zero": 3}
+    by_path = {r[0]: r for r in diff(old, new, threshold=0.10)}
+    assert by_path["gone"][4] == "removed"
+    assert by_path["fresh"][4] == "added"
+    # 0 -> 3 has no defined relative change but is a change.
+    assert by_path["zero"][4] == "changed"
+    assert by_path["zero"][3] is None
+
+
+def _write(tmp_path, name, doc):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc), encoding="utf-8")
+    return str(p)
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    old = _write(tmp_path, "old.json", {"rps_per_s": 100.0, "n": 1})
+    bad = _write(tmp_path, "bad.json", {"rps_per_s": 50.0, "n": 2})
+    ok = _write(tmp_path, "ok.json", {"rps_per_s": 101.0, "n": 2})
+
+    # Regression without --fail-on-regression: reported, exit 0.
+    assert main([old, bad]) == 0
+    out = capsys.readouterr().out
+    assert "regressed" in out and "1 regression(s)" in out
+
+    # Regression with the gate: exit 1.
+    assert main([old, bad, "--fail-on-regression"]) == 1
+    capsys.readouterr()
+
+    # No regression: exit 0 either way.
+    assert main([old, ok, "--fail-on-regression"]) == 0
+    out = capsys.readouterr().out
+    assert "0 regression(s)" in out
+
+
+def test_cli_diffs_embedded_telemetry(tmp_path, capsys):
+    # The BENCH_serve.json shape: bench numbers plus an embedded
+    # telemetry snapshot (docs/observability.md).
+    old = _write(
+        tmp_path,
+        "a.json",
+        {
+            "tcp_best_req_per_s": 1000.0,
+            "telemetry": {"counters": {"requests_total": 64, "queue_full": 0}},
+        },
+    )
+    new = _write(
+        tmp_path,
+        "b.json",
+        {
+            "tcp_best_req_per_s": 1200.0,
+            "telemetry": {"counters": {"requests_total": 64, "queue_full": 5}},
+        },
+    )
+    assert main([old, new, "--all"]) == 0
+    out = capsys.readouterr().out
+    assert "telemetry.counters.queue_full" in out
+    assert "telemetry.counters.requests_total" in out

@@ -12,6 +12,7 @@ import pytest
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 from pushmem_client import (  # noqa: E402
+    ADMIN_STATS,
     MAGIC,
     MAX_APP_NAME,
     MAX_INPUTS,
@@ -26,6 +27,7 @@ from pushmem_client import (  # noqa: E402
     encode_request_v1,
     encode_request_v2,
     encode_request_v3,
+    encode_stats_request,
 )
 
 
@@ -34,8 +36,10 @@ def test_constants_match_spec():
     assert MAGIC == 0x50554222
     assert VERSION2 == 0xFFFF0002
     assert VERSION3 == 0xFFFF0003
+    assert ADMIN_STATS == 0xFFFF0004
     assert VERSION2 > MAX_INPUTS  # the version-detection invariant
     assert VERSION3 > MAX_INPUTS
+    assert ADMIN_STATS > MAX_INPUTS
     assert MAX_RANK == 8
 
 
@@ -199,3 +203,82 @@ def test_caps_enforced_on_encode():
         encode_request_v1([[0]] * (MAX_INPUTS + 1))
     with pytest.raises(ProtocolError, match="app name"):
         encode_request_v2("a" * (MAX_APP_NAME + 1), [[0]])
+
+
+def test_stats_frame_golden_bytes():
+    # The fixed 8-byte ADMIN_STATS frame from docs/protocol.md /
+    # docs/observability.md: magic | ADMIN_STATS, little-endian.
+    frame = encode_stats_request()
+    assert frame == struct.pack("<II", MAGIC, ADMIN_STATS)
+    assert frame.hex() == "22425550" "0400ffff"
+    assert len(frame) == 8
+
+
+def test_stats_response_payload_decodes_like_detail():
+    # The STATS answer is an ordinary OK response whose words pack the
+    # snapshot JSON exactly like an error detail: 4 bytes/word LE,
+    # zero padded.
+    snapshot = '{"schema":"pushmem-stats-v1","counters":{"requests_total":7}}'
+    packed = snapshot.encode("utf-8")
+    packed += b"\x00" * (-len(packed) % 4)
+    words = list(struct.unpack(f"<{len(packed) // 4}i", packed))
+    body = (
+        struct.pack("<III", MAGIC, 0, len(words))
+        + struct.pack(f"<{len(words)}i", *words)
+        + struct.pack("<QQ", 0, 0)
+    )
+    status, got_words, cycles, micros, consumed = decode_response(body)
+    assert status == 0
+    assert (cycles, micros) == (0, 0)
+    assert consumed == len(body)
+    assert decode_detail(got_words) == snapshot
+
+
+def test_client_stats_loopback():
+    """``PushmemClient.stats()`` against a stdlib stand-in server:
+    accept one connection, require the exact 8-byte ADMIN_STATS frame,
+    answer a canned snapshot — the client must return it parsed."""
+    import json
+    import socket
+    import threading
+
+    from pushmem_client import PushmemClient
+
+    snapshot = {
+        "schema": "pushmem-stats-v1",
+        "counters": {"requests_total": 3, "stats_requests": 1},
+        "gauges": {"workers_total": 4},
+        "histograms": {},
+        "recent": [],
+    }
+    srv = socket.socket()
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(1)
+    port = srv.getsockname()[1]
+    seen = {}
+
+    def serve_once():
+        conn, _ = srv.accept()
+        with conn:
+            seen["frame"] = conn.recv(8)
+            packed = json.dumps(snapshot, separators=(",", ":")).encode("utf-8")
+            packed += b"\x00" * (-len(packed) % 4)
+            words = list(struct.unpack(f"<{len(packed) // 4}i", packed))
+            conn.sendall(
+                struct.pack("<III", MAGIC, 0, len(words))
+                + struct.pack(f"<{len(words)}i", *words)
+                + struct.pack("<QQ", 0, 0)
+            )
+
+    t = threading.Thread(target=serve_once)
+    t.start()
+    try:
+        with PushmemClient(port=port, timeout=10.0) as c:
+            got = c.stats()
+    finally:
+        t.join(timeout=10)
+        srv.close()
+    assert seen["frame"] == encode_stats_request()
+    assert got == snapshot
+    assert got["schema"] == "pushmem-stats-v1"
+    assert got["counters"]["requests_total"] == 3

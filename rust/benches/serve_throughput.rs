@@ -305,6 +305,12 @@ fn main() {
                     .num("tcp_image_req_per_s", tcp_image_rps)
                     .end(),
             )
+            // Point-in-time server telemetry (docs/observability.md):
+            // the TCP sections above ran through the instrumented
+            // serving path, so the snapshot carries request counts,
+            // per-stage latency histograms, and exec lane/thread
+            // counters for `scripts/bench_diff.py` to compare.
+            .raw("telemetry", &pushmem::telemetry::metrics().snapshot().to_json())
             .end(),
     );
 }

@@ -46,6 +46,16 @@ pub const VERSION2: u32 = 0xFFFF_0002;
 /// as [`VERSION2`].
 pub const VERSION3: u32 = 0xFFFF_0003;
 
+/// Admin discriminator: a `STATS` request (docs/observability.md).
+/// Same collision rule as [`VERSION2`] — the sentinel occupies the
+/// word where v1 puts `n_inputs`, far above [`MAX_INPUTS`]. The frame
+/// is exactly 8 bytes (`magic | ADMIN_STATS`); the server answers
+/// with an ordinary OK response whose payload words pack a JSON
+/// telemetry snapshot ([`stats_words`] / [`detail_from_words`]). The
+/// v1–v3 data frames are untouched: old clients never see this
+/// sentinel unless they send it.
+pub const ADMIN_STATS: u32 = 0xFFFF_0004;
+
 /// Request handled; payload words follow.
 pub const STATUS_OK: u32 = 0;
 /// v2 app name (or v1 with no default app) did not resolve.
@@ -73,6 +83,11 @@ pub const MAX_RANK: u32 = 8;
 /// Cap on non-OK responses' packed diagnostic, so the detail channel
 /// can never amplify (128 words = 512 bytes of UTF-8).
 pub const MAX_DETAIL_BYTES: usize = 512;
+/// Cap on a `STATS` reply's packed JSON payload. Separate from
+/// [`MAX_DETAIL_BYTES`]: a snapshot with full histograms and the
+/// recent-request ring is a few KiB, far above the diagnostic cap,
+/// but still must not amplify unboundedly.
+pub const MAX_STATS_BYTES: usize = 1 << 20;
 
 /// A decoded request frame. `app` is `None` for v1 frames (implicit
 /// default app) and `Some(name)` for v2/v3; `extent` is `Some` only
@@ -85,6 +100,16 @@ pub struct Request {
     pub app: Option<String>,
     pub extent: Option<Vec<i64>>,
     pub inputs: Vec<Vec<i32>>,
+}
+
+/// Any inbound frame: a data request (v1/v2/v3) or an admin `STATS`
+/// query. [`decode_frame`] is the server-side entry point;
+/// [`decode_request`] keeps its original signature for data-only
+/// callers (and all the frozen byte-level tests).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Frame {
+    Request(Request),
+    Stats,
 }
 
 /// A decoded response frame (shared by v1 and v2).
@@ -299,6 +324,14 @@ pub fn encode_request_v3(app: Option<&str>, extent: &[i64], inputs: &[&[i32]]) -
     out
 }
 
+/// Encode an admin `STATS` request: `magic | ADMIN_STATS`, 8 bytes.
+pub fn encode_stats_request() -> Vec<u8> {
+    let mut out = Vec::with_capacity(8);
+    put_u32(&mut out, MAGIC);
+    put_u32(&mut out, ADMIN_STATS);
+    out
+}
+
 /// Encode a [`Request`], choosing framing by field presence: an
 /// extent forces v3, else an app name selects v2, else v1.
 pub fn encode_request(req: &Request) -> Vec<u8> {
@@ -347,6 +380,23 @@ pub fn decode_request(buf: &[u8]) -> Result<(Request, usize), FrameError> {
     Ok((Request { app, extent, inputs }, c.pos))
 }
 
+/// Decode one inbound frame — data request or admin `STATS` — from
+/// the front of `buf`; returns the frame and the bytes consumed.
+/// Same totality contract as [`decode_request`]: short buffers yield
+/// [`FrameError::Truncated`].
+pub fn decode_frame(buf: &[u8]) -> Result<(Frame, usize), FrameError> {
+    let mut c = Cur::new(buf);
+    let magic = c.u32()?;
+    if magic != MAGIC {
+        return Err(FrameError::BadMagic(magic));
+    }
+    if c.u32()? == ADMIN_STATS {
+        return Ok((Frame::Stats, 8));
+    }
+    let (req, used) = decode_request(buf)?;
+    Ok((Frame::Request(req), used))
+}
+
 /// Total byte length of the request frame at the front of `buf`,
 /// computed from the length fields alone — no payload allocation or
 /// word conversion. Returns `Truncated { need }` while more bytes are
@@ -361,6 +411,9 @@ pub fn request_frame_len(buf: &[u8]) -> Result<usize, FrameError> {
         return Err(FrameError::BadMagic(magic));
     }
     let word2 = c.u32()?;
+    if word2 == ADMIN_STATS {
+        return Ok(8);
+    }
     let n_inputs = if word2 == VERSION2 {
         skip_name(&mut c)?;
         c.u32()?
@@ -428,7 +481,21 @@ pub fn encode_error(status: u32) -> Vec<u8> {
 /// *what* was wrong — e.g. the expected vs received word count per
 /// input on `STATUS_BAD_REQUEST` — instead of a bare status word.
 pub fn detail_words(msg: &str) -> Vec<i32> {
-    let bytes = &msg.as_bytes()[..msg.len().min(MAX_DETAIL_BYTES)];
+    pack_utf8_words(msg, MAX_DETAIL_BYTES)
+}
+
+/// Pack a `STATS` reply's JSON snapshot into response payload words —
+/// same packing as [`detail_words`] (so [`detail_from_words`] decodes
+/// both) under the larger [`MAX_STATS_BYTES`] cap.
+pub fn stats_words(json: &str) -> Vec<i32> {
+    pack_utf8_words(json, MAX_STATS_BYTES)
+}
+
+/// The shared UTF-8-to-words packer behind [`detail_words`] and
+/// [`stats_words`]: one cap parameter, one packing, so the two
+/// channels can never diverge in layout.
+fn pack_utf8_words(msg: &str, cap: usize) -> Vec<i32> {
+    let bytes = &msg.as_bytes()[..msg.len().min(cap)];
     bytes
         .chunks(4)
         .map(|c| {
@@ -507,7 +574,72 @@ mod tests {
     fn sentinel_cannot_collide_with_v1_counts() {
         assert!(VERSION2 > MAX_INPUTS);
         assert!(VERSION3 > MAX_INPUTS);
+        assert!(ADMIN_STATS > MAX_INPUTS);
         assert_ne!(VERSION2, VERSION3);
+        assert_ne!(ADMIN_STATS, VERSION2);
+        assert_ne!(ADMIN_STATS, VERSION3);
+    }
+
+    /// The admin STATS frame is exactly 8 bytes, pinned as literals
+    /// (mirroring python/tests/test_protocol.py and docs/protocol.md).
+    #[test]
+    fn stats_frame_golden_bytes() {
+        let frame = encode_stats_request();
+        assert_eq!(frame, [0x22, 0x42, 0x55, 0x50, 0x04, 0x00, 0xFF, 0xFF]);
+        assert_eq!(request_frame_len(&frame).unwrap(), 8);
+        let (decoded, used) = decode_frame(&frame).unwrap();
+        assert_eq!(decoded, Frame::Stats);
+        assert_eq!(used, 8);
+        // Every strict prefix is recoverable Truncated, like any
+        // other frame.
+        for cut in 0..frame.len() {
+            match decode_frame(&frame[..cut]) {
+                Err(FrameError::Truncated { have, need }) => {
+                    assert_eq!(have, cut);
+                    assert!(need > cut && need <= frame.len(), "cut {cut}");
+                }
+                other => panic!("cut {cut}: expected Truncated, got {other:?}"),
+            }
+        }
+    }
+
+    /// decode_frame passes data frames through to decode_request
+    /// unchanged, including the consumed-byte count for pipelining.
+    #[test]
+    fn decode_frame_passes_data_requests_through() {
+        for req in [req_v1(), req_v2(), req_v3()] {
+            let bytes = encode_request(&req);
+            let (frame, used) = decode_frame(&bytes).unwrap();
+            assert_eq!(frame, Frame::Request(req));
+            assert_eq!(used, bytes.len());
+        }
+        // A STATS frame followed by a data frame in one buffer.
+        let mut buf = encode_stats_request();
+        let data = encode_request(&req_v1());
+        buf.extend_from_slice(&data);
+        let (first, used) = decode_frame(&buf).unwrap();
+        assert_eq!(first, Frame::Stats);
+        let (second, used2) = decode_frame(&buf[used..]).unwrap();
+        assert_eq!(second, Frame::Request(req_v1()));
+        assert_eq!(used + used2, buf.len());
+    }
+
+    /// Stats payload packing: same layout as detail_words (one
+    /// decoder serves both), but under the larger cap.
+    #[test]
+    fn stats_words_round_trip_and_cap() {
+        let json = "{\"counters\":{\"requests_total\":7}}";
+        let words = stats_words(json);
+        assert_eq!(detail_from_words(&words), json);
+        assert_eq!(words, detail_words(json)); // same packing below both caps
+        // Beyond the detail cap but within the stats cap: intact.
+        let big = "y".repeat(4 * MAX_DETAIL_BYTES);
+        assert_eq!(detail_from_words(&stats_words(&big)), big);
+        // The stats cap truncates instead of amplifying.
+        let huge = "z".repeat(MAX_STATS_BYTES + 9);
+        let words = stats_words(&huge);
+        assert_eq!(words.len() * 4, MAX_STATS_BYTES);
+        assert_eq!(detail_from_words(&words).len(), MAX_STATS_BYTES);
     }
 
     /// The v1/v2 wire bytes are **frozen**: any refactor that changes

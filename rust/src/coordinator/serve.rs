@@ -23,6 +23,19 @@
 //! [`crate::tile::run`]), so a pool full of busy connections degrades
 //! to in-connection execution, never deadlock.
 //!
+//! Every request is measured: the serving path records one
+//! [`RequestRecord`] span per request — stage timings (accept-wait →
+//! decode → lookup → execute → stitch → respond), engine, tile count,
+//! queue depth at admission — into the process-global
+//! [`crate::telemetry`] registry, queryable over the wire via the
+//! admin `STATS` frame ([`protocol::ADMIN_STATS`], `pushmem stats`)
+//! and dumpable periodically with `--metrics-json`
+//! (docs/observability.md). The per-request `[req]` line printed
+//! under `--stats` is derived from the same record, so the flag and
+//! the snapshot can never disagree; its format is a stable script
+//! interface and bypasses the leveled [`telemetry::log`] logger the
+//! rest of the module's stderr output goes through.
+//!
 //! This module owns only the socket I/O and the pool; framing is pure
 //! byte-slice code in [`super::protocol`], app-to-design resolution is
 //! the registry's job, and tiling is [`crate::tile`]'s. That split
@@ -31,14 +44,16 @@
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use super::driver::{Compiled, CompiledRegistry};
 use super::protocol::{self, FrameError, Request, Response};
 use crate::exec::{Engine, EngineRun};
+use crate::telemetry::{self, log, RequestRecord};
 use crate::tensor::Tensor;
 use crate::tile::{TileBatch, TileScratch};
 
@@ -52,9 +67,11 @@ pub use super::protocol::MAGIC;
 /// (every worker was busy) must not pin the request's whole-image
 /// inputs and per-tile outputs in memory — the submitting connection
 /// owns the only strong reference, and a stale job upgrades to
-/// nothing.
+/// nothing. Connection jobs carry their enqueue time so the pool can
+/// histogram accept-wait (time queued before a worker picked the
+/// connection up).
 enum Job {
-    Conn(TcpStream),
+    Conn(TcpStream, Instant),
     Tiles(std::sync::Weak<TileBatch>),
 }
 
@@ -75,6 +92,10 @@ pub struct ServeConfig {
     /// from the functional engine whenever the design supports it and
     /// falls back to the cycle-accurate simulator otherwise.
     pub engine: Engine,
+    /// Periodically dump the telemetry snapshot JSON to this path
+    /// (atomic overwrite, ~5 s cadence, plus a final dump at
+    /// shutdown). `None` disables the dump thread entirely.
+    pub metrics_json: Option<std::path::PathBuf>,
     /// Set by [`serve_on_with`] once the pool's queue exists (and
     /// cleared at shutdown so workers see the channel disconnect); v3
     /// handling uses it to recruit idle workers into a tile batch.
@@ -100,6 +121,7 @@ impl ServeConfig {
             workers: 4,
             stats: false,
             engine: Engine::Auto,
+            metrics_json: None,
             helpers: Mutex::new(None),
         }
     }
@@ -114,6 +136,7 @@ impl ServeConfig {
             workers,
             stats: false,
             engine: Engine::Auto,
+            metrics_json: None,
             helpers: Mutex::new(None),
         }
     }
@@ -153,6 +176,36 @@ pub fn read_request(stream: &mut impl Read) -> Result<Option<Request>> {
     }
 }
 
+/// Read one inbound frame — data request or admin `STATS` — plus the
+/// span anchors the serving loop needs: the instant the frame's first
+/// header bytes arrived (the request's start-of-span) and the decode
+/// stage duration (from that instant until the frame is fully read
+/// and decoded, i.e. wire transfer of the body + parsing).
+/// `Ok(None)` is a clean disconnect.
+fn read_frame(stream: &mut impl Read) -> Result<Option<(protocol::Frame, Instant, u64)>> {
+    let mut buf = vec![0u8; 4];
+    match stream.read_exact(&mut buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e).context("reading frame header"),
+    }
+    let started = Instant::now();
+    loop {
+        match protocol::request_frame_len(&buf) {
+            Ok(total) => {
+                if buf.len() < total {
+                    fill_to(stream, &mut buf, total)?;
+                }
+                let (frame, _) = protocol::decode_frame(&buf)?;
+                let decode_ns = started.elapsed().as_nanos() as u64;
+                return Ok(Some((frame, started, decode_ns)));
+            }
+            Err(FrameError::Truncated { need, .. }) => fill_to(stream, &mut buf, need)?,
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
 /// Read one response frame (client side), same single-decode
 /// discipline as [`read_request`].
 pub fn read_response(stream: &mut impl Read) -> Result<Response> {
@@ -184,6 +237,68 @@ fn write_error(stream: &mut TcpStream, status: u32) {
 fn write_error_detail(stream: &mut TcpStream, status: u32, detail: &str) {
     let _ = stream.write_all(&protocol::encode_error_detail(status, detail));
     let _ = stream.flush();
+}
+
+/// Write one complete frame (the success-path counterpart of
+/// [`write_error`], but fallible — a failed OK response must be
+/// reported, and recorded as a failed request).
+fn send_frame(stream: &mut TcpStream, frame: &[u8]) -> std::io::Result<()> {
+    stream.write_all(frame)?;
+    stream.flush()
+}
+
+/// Record a failed request into the telemetry registry. Stage timings
+/// beyond decode are zero — a failure span documents *that* and
+/// *where* a request died, not a latency profile (stage histograms are
+/// fed by OK requests only, so their counts equal `requests_ok`).
+fn fail_rec(version: u8, app: &str, ctx: &ReqCtx<'_>) {
+    telemetry::metrics().record_request(RequestRecord {
+        app: app.to_string(),
+        engine: "?",
+        version,
+        ok: false,
+        tiles: 0,
+        in_words: ctx.in_words,
+        out_words: 0,
+        cycles: 0,
+        queue_depth: ctx.queue_depth,
+        decode_ns: ctx.decode_ns,
+        lookup_ns: 0,
+        execute_ns: 0,
+        stitch_ns: 0,
+        respond_ns: 0,
+        total_ns: ctx.started.elapsed().as_nanos() as u64,
+    });
+}
+
+/// Per-request span context threaded from the frame reader into the
+/// fixed-box and tiled handlers.
+struct ReqCtx<'a> {
+    peer: &'a str,
+    /// First header bytes on the wire — the span's zero point.
+    started: Instant,
+    /// Start of the lookup stage (app resolution + validation +
+    /// tensor/plan build).
+    lookup_t0: Instant,
+    decode_ns: u64,
+    /// Pool queue depth sampled at admission.
+    queue_depth: u64,
+    in_words: u64,
+}
+
+/// Answer an admin `STATS` frame: freeze a snapshot, pack its JSON
+/// into payload words, reply `STATUS_OK` with zeroed timing fields.
+fn handle_stats(stream: &mut TcpStream) -> Result<()> {
+    let m = telemetry::metrics();
+    m.stats_requests.inc();
+    let json = m.snapshot().to_json();
+    let frame = protocol::encode_response(&Response {
+        status: protocol::STATUS_OK,
+        words: protocol::stats_words(&json),
+        cycles: 0,
+        micros: 0,
+    });
+    send_frame(stream, &frame).context("responding to stats query")
 }
 
 /// Check request payloads against the expected per-input word counts
@@ -268,6 +383,18 @@ fn runner_for<'a>(
 /// `Auto` engine that execution is the functional engine's fused
 /// kernels — microseconds, not a cycle loop.
 pub fn handle_connection(cfg: &ServeConfig, stream: &mut TcpStream) -> Result<()> {
+    let m = telemetry::metrics();
+    m.connections_opened.inc();
+    // Count the close however the connection ends — clean EOF, error
+    // return, or a panic unwinding out through the pool's
+    // catch_unwind.
+    struct CloseGuard;
+    impl Drop for CloseGuard {
+        fn drop(&mut self) {
+            telemetry::metrics().connections_closed.inc();
+        }
+    }
+    let _close = CloseGuard;
     let peer = stream
         .peer_addr()
         .map(|a| a.to_string())
@@ -276,21 +403,54 @@ pub fn handle_connection(cfg: &ServeConfig, stream: &mut TcpStream) -> Result<()
     // connection may interleave v2 requests for different apps).
     let mut runs: Vec<RunSlot> = Vec::new();
     loop {
-        let req = match read_request(stream) {
-            Ok(Some(req)) => req,
+        let (frame, started, decode_ns) = match read_frame(stream) {
+            Ok(Some(f)) => f,
             Ok(None) => return Ok(()),
             Err(e) => {
                 // Framing errors carry precise, client-safe messages
                 // (cap overruns name the field and the cap) — send
                 // them as the diagnostic like every semantic error.
+                fail_rec(
+                    0,
+                    "?",
+                    &ReqCtx {
+                        peer: &peer,
+                        started: Instant::now(),
+                        lookup_t0: Instant::now(),
+                        decode_ns: 0,
+                        queue_depth: m.queue_depth.get(),
+                        in_words: 0,
+                    },
+                );
                 write_error_detail(stream, protocol::STATUS_BAD_REQUEST, &format!("{e:#}"));
                 return Err(e.context(format!("client {peer}")));
             }
+        };
+        let req = match frame {
+            protocol::Frame::Stats => {
+                handle_stats(stream)?;
+                continue;
+            }
+            protocol::Frame::Request(req) => req,
+        };
+        let version: u8 = match (&req.extent, &req.app) {
+            (Some(_), _) => 3,
+            (None, Some(_)) => 2,
+            (None, None) => 1,
+        };
+        let ctx = ReqCtx {
+            peer: &peer,
+            started,
+            lookup_t0: Instant::now(),
+            decode_ns,
+            queue_depth: m.queue_depth.get(),
+            in_words: req.inputs.iter().map(|w| w.len() as u64).sum(),
         };
         let c: Arc<Compiled> = match &req.app {
             Some(name) => match cfg.registry.get(name) {
                 Ok(c) => c,
                 Err(e) => {
+                    fail_rec(version, name, &ctx);
                     write_error(stream, protocol::STATUS_UNKNOWN_APP);
                     bail!("client {peer}: {e:#}");
                 }
@@ -298,6 +458,7 @@ pub fn handle_connection(cfg: &ServeConfig, stream: &mut TcpStream) -> Result<()
             None => match &cfg.default_app {
                 Some(c) => Arc::clone(c),
                 None => {
+                    fail_rec(version, "?", &ctx);
                     write_error(stream, protocol::STATUS_UNKNOWN_APP);
                     bail!("client {peer}: v1 frame on a server with no default app (send v2 frames with an app name)");
                 }
@@ -307,17 +468,16 @@ pub fn handle_connection(cfg: &ServeConfig, stream: &mut TcpStream) -> Result<()
         // v3: arbitrary-extent requests take the tiling path — plan,
         // fan tiles out across idle pool workers, stitch, respond.
         if let Some(extent) = extent {
-            match handle_tiled(cfg, stream, &peer, &c, &extent, payloads, &mut runs) {
+            match handle_tiled(cfg, stream, &c, &extent, payloads, &mut runs, &ctx) {
                 Ok(()) => continue,
                 Err(e) => return Err(e),
             }
         }
-        if let Err(e) = check_input_words(&c.program.name, &declared_words(&c), &payloads)
-        {
+        if let Err(e) = check_input_words(&c.program.name, &declared_words(&c), &payloads) {
+            fail_rec(version, &c.program.name, &ctx);
             write_error_detail(stream, protocol::STATUS_BAD_REQUEST, &format!("{e:#}"));
             return Err(e.context(format!("client {peer}")));
         }
-        let in_words: usize = payloads.iter().map(|w| w.len()).sum();
         let mut inputs = BTreeMap::new();
         for (name, words) in c.lp.inputs.iter().zip(payloads) {
             inputs.insert(name.clone(), Tensor::from_data(c.lp.buffers[name].clone(), words));
@@ -325,37 +485,70 @@ pub fn handle_connection(cfg: &ServeConfig, stream: &mut TcpStream) -> Result<()
         let run = match runner_for(&mut runs, &c, cfg.engine) {
             Ok(slot) => &mut slot.run,
             Err(e) => {
+                fail_rec(version, &c.program.name, &ctx);
                 write_error(stream, protocol::STATUS_INTERNAL);
                 return Err(e.context(format!("planning {} for {peer}", c.program.name)));
             }
         };
+        let engine_name = run.engine().name();
+        let lookup_ns = ctx.lookup_t0.elapsed().as_nanos() as u64;
         let t0 = Instant::now();
         let res = match run.run(&inputs) {
             Ok(res) => res,
             Err(e) => {
+                fail_rec(version, &c.program.name, &ctx);
                 write_error(stream, protocol::STATUS_INTERNAL);
                 return Err(e.context(format!("executing {} for {peer}", c.program.name)));
             }
         };
-        let micros = t0.elapsed().as_micros() as u64;
+        let execute_ns = t0.elapsed().as_nanos() as u64;
+        let micros = execute_ns / 1000;
         let cycles = res.stats.cycles as u64;
         let words = res.output.data;
-        let out_words = words.len();
+        let out_words = words.len() as u64;
+        let respond_t0 = Instant::now();
         let frame = protocol::encode_response(&Response {
             status: protocol::STATUS_OK,
             words,
             cycles,
             micros,
         });
-        stream.write_all(&frame)?;
-        stream.flush()?;
+        if let Err(e) = send_frame(stream, &frame) {
+            fail_rec(version, &c.program.name, &ctx);
+            return Err(e).context(format!("responding to {peer}"));
+        }
+        let rec = RequestRecord {
+            app: c.program.name.clone(),
+            engine: engine_name,
+            version,
+            ok: true,
+            tiles: 1,
+            in_words: ctx.in_words,
+            out_words,
+            cycles,
+            queue_depth: ctx.queue_depth,
+            decode_ns,
+            lookup_ns,
+            execute_ns,
+            stitch_ns: 0,
+            respond_ns: respond_t0.elapsed().as_nanos() as u64,
+            total_ns: started.elapsed().as_nanos() as u64,
+        };
+        // The `[req]` line is a stable script interface (format
+        // frozen); it is printed from the same record the registry
+        // keeps, so the two can never disagree.
         if cfg.stats {
             eprintln!(
-                "[req] client={peer} app={} engine={} in_words={in_words} out_words={out_words} cycles={cycles} exec_us={micros}",
-                c.program.name,
-                run.engine().name()
+                "[req] client={peer} app={} engine={} in_words={} out_words={} cycles={} exec_us={}",
+                rec.app,
+                rec.engine,
+                rec.in_words,
+                rec.out_words,
+                rec.cycles,
+                rec.execute_ns / 1000
             );
         }
+        m.record_request(rec);
     }
 }
 
@@ -368,22 +561,25 @@ pub fn handle_connection(cfg: &ServeConfig, stream: &mut TcpStream) -> Result<()
 fn handle_tiled(
     cfg: &ServeConfig,
     stream: &mut TcpStream,
-    peer: &str,
     c: &Arc<Compiled>,
     extent: &[i64],
     payloads: Vec<Vec<i32>>,
     runs: &mut Vec<RunSlot>,
+    ctx: &ReqCtx<'_>,
 ) -> Result<()> {
+    let peer = ctx.peer;
     let app = c.program.name.clone();
     let plan = match c.tile_plan(extent) {
         Ok(p) => p,
         Err(e) => {
+            fail_rec(3, &app, ctx);
             let msg = format!("app {app}: cannot tile output extent {extent:?}: {e:#}");
             write_error_detail(stream, protocol::STATUS_BAD_REQUEST, &msg);
             bail!("client {peer}: {msg}");
         }
     };
     if let Err(e) = check_input_words(&app, &plan.expected_words(), &payloads) {
+        fail_rec(3, &app, ctx);
         write_error_detail(stream, protocol::STATUS_BAD_REQUEST, &format!("{e:#}"));
         return Err(e.context(format!("client {peer} (extent {extent:?})")));
     }
@@ -391,10 +587,12 @@ fn handle_tiled(
     for ((name, b), words) in plan.input_names.iter().zip(&plan.input_boxes).zip(payloads) {
         inputs.insert(name.clone(), Tensor::from_data(b.clone(), words));
     }
-    let t0 = Instant::now();
+    let lookup_ns = ctx.lookup_t0.elapsed().as_nanos() as u64;
+    let exec_t0 = Instant::now();
     let batch = match TileBatch::new(Arc::clone(c), cfg.engine, Arc::clone(&plan), inputs) {
         Ok(b) => b,
         Err(e) => {
+            fail_rec(3, &app, ctx);
             write_error_detail(stream, protocol::STATUS_INTERNAL, &format!("{e:#}"));
             return Err(e.context(format!("batching {app} for {peer}")));
         }
@@ -415,8 +613,9 @@ fn handle_tiled(
             .saturating_sub(1)
             .min(batch.tile_count().saturating_sub(1));
         for _ in 0..extra {
-            if tx.try_send(Job::Tiles(Arc::downgrade(&batch))).is_err() {
-                break;
+            match tx.try_send(Job::Tiles(Arc::downgrade(&batch))) {
+                Ok(()) => telemetry::metrics().queue_depth.inc(),
+                Err(_) => break,
             }
         }
     }
@@ -431,36 +630,63 @@ fn handle_tiled(
             batch.work_with(&mut slot.run, scratch);
         }
         Err(e) => {
+            fail_rec(3, &app, ctx);
             write_error_detail(stream, protocol::STATUS_INTERNAL, &format!("{e:#}"));
             return Err(e.context(format!("planning {app} for {peer}")));
         }
     }
+    let execute_ns = exec_t0.elapsed().as_nanos() as u64;
+    let stitch_t0 = Instant::now();
     let res = match batch.wait() {
         Ok(r) => r,
         Err(e) => {
+            fail_rec(3, &app, ctx);
             write_error_detail(stream, protocol::STATUS_INTERNAL, &format!("{e:#}"));
             return Err(e.context(format!("tiled execution of {app} for {peer}")));
         }
     };
-    let micros = t0.elapsed().as_micros() as u64;
+    let stitch_ns = stitch_t0.elapsed().as_nanos() as u64;
+    let micros = (execute_ns + stitch_ns) / 1000;
     let cycles = res.stats.cycles as u64;
-    let out_words = res.output.data.len();
+    let out_words = res.output.data.len() as u64;
+    let respond_t0 = Instant::now();
     let frame = protocol::encode_response(&Response {
         status: protocol::STATUS_OK,
         words: res.output.data,
         cycles,
         micros,
     });
-    stream.write_all(&frame)?;
-    stream.flush()?;
+    if let Err(e) = send_frame(stream, &frame) {
+        fail_rec(3, &app, ctx);
+        return Err(e).context(format!("responding to {peer}"));
+    }
+    let rec = RequestRecord {
+        app,
+        engine: res.engine.name(),
+        version: 3,
+        ok: true,
+        tiles: res.tiles as u64,
+        in_words: ctx.in_words,
+        out_words,
+        cycles,
+        queue_depth: ctx.queue_depth,
+        decode_ns: ctx.decode_ns,
+        lookup_ns,
+        execute_ns,
+        stitch_ns,
+        respond_ns: respond_t0.elapsed().as_nanos() as u64,
+        total_ns: ctx.started.elapsed().as_nanos() as u64,
+    };
+    // Same stable `[req]` interface as the fixed-box path, derived
+    // from the record.
     if cfg.stats {
         eprintln!(
-            "[req] client={peer} app={app} engine={} extent={extent:?} tiles={} \
-             out_words={out_words} cycles={cycles} exec_us={micros}",
-            res.engine.name(),
-            res.tiles
+            "[req] client={peer} app={} engine={} extent={extent:?} tiles={} \
+             out_words={} cycles={} exec_us={micros}",
+            rec.app, rec.engine, rec.tiles, rec.out_words, rec.cycles
         );
     }
+    telemetry::metrics().record_request(rec);
     Ok(())
 }
 
@@ -491,18 +717,52 @@ pub fn serve_on(listener: TcpListener, cfg: ServeConfig) -> Result<()> {
 /// broken mid-update). Tile-batch jobs contain their own panics (see
 /// [`crate::tile::run`]), so a worker surviving them needs no extra
 /// guard here.
+///
+/// Serving turns telemetry sampling on ([`telemetry::set_sampling`])
+/// so the exec/tile hot-path hooks record; standalone CLI runs leave
+/// it off and pay one relaxed bool load per dispatch (DESIGN.md §8).
 pub fn serve_on_with(
     listener: TcpListener,
     cfg: ServeConfig,
     handler: Arc<Handler>,
 ) -> Result<()> {
+    telemetry::set_sampling(true);
     let workers = cfg.workers.max(1);
+    telemetry::metrics().workers_total.set(workers as u64);
     let (tx, rx) = mpsc::sync_channel::<Job>(2 * workers);
     // Hand the queue to v3 tile fan-out before any connection can
     // arrive; cleared again at shutdown so the channel can disconnect
     // and the workers exit.
     *cfg.helpers.lock().unwrap_or_else(|p| p.into_inner()) = Some(tx.clone());
     let cfg = Arc::new(cfg);
+    // Periodic snapshot dumps (--metrics-json): a side thread, never
+    // the serving path. Stops (after one final dump) when the accept
+    // loop ends.
+    let dump_stop = Arc::new(AtomicBool::new(false));
+    let dump_handle = cfg.metrics_json.clone().map(|path| {
+        let stop = Arc::clone(&dump_stop);
+        std::thread::spawn(move || {
+            let mut ticks = 0u32;
+            loop {
+                std::thread::sleep(Duration::from_millis(250));
+                let stopping = stop.load(Ordering::Relaxed);
+                ticks += 1;
+                if stopping || ticks >= 20 {
+                    ticks = 0;
+                    let json = telemetry::metrics().snapshot().to_json();
+                    if let Err(e) = std::fs::write(&path, json) {
+                        log::warn(
+                            "serve",
+                            &format!("event=metrics_dump_failed path={} err={e}", path.display()),
+                        );
+                    }
+                }
+                if stopping {
+                    return;
+                }
+            }
+        })
+    });
     let rx = Arc::new(Mutex::new(rx));
     let mut handles = Vec::with_capacity(workers);
     for _ in 0..workers {
@@ -518,66 +778,103 @@ pub fn serve_on_with(
                 .lock()
                 .unwrap_or_else(|poisoned| poisoned.into_inner())
                 .recv();
-            let mut stream = match next {
-                Ok(Job::Conn(s)) => s,
-                Ok(Job::Tiles(batch)) => {
+            let job = match next {
+                Ok(job) => job,
+                Err(_) => return, // accept loop gone
+            };
+            let m = telemetry::metrics();
+            m.queue_depth.dec();
+            m.workers_busy.inc();
+            let busy_t0 = Instant::now();
+            match job {
+                Job::Conn(mut stream, queued) => {
+                    m.jobs_conn.inc();
+                    m.accept_wait.record_ns(queued.elapsed().as_nanos() as u64);
+                    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        handler(&cfg, &mut stream)
+                    }));
+                    match outcome {
+                        Ok(Ok(())) => {}
+                        Ok(Err(e)) => {
+                            log::warn("serve", &format!("event=connection_error err={e:#}"))
+                        }
+                        Err(_) => {
+                            // The handler panicked mid-connection:
+                            // report an internal error to the peer
+                            // (best-effort) and keep this worker alive
+                            // for the next connection.
+                            write_error(&mut stream, protocol::STATUS_INTERNAL);
+                            log::error(
+                                "serve",
+                                "event=handler_panic msg=\"worker recovered\"",
+                            );
+                        }
+                    }
+                }
+                Job::Tiles(batch) => {
                     // Join an in-flight whole-image request; `work`
                     // panics are contained inside the batch, a
                     // drained batch returns immediately, and a batch
                     // whose request already completed upgrades to
                     // nothing (its connection dropped the only
                     // strong handle).
+                    m.jobs_tiles.inc();
                     if let Some(batch) = batch.upgrade() {
                         batch.work();
                     }
-                    continue;
-                }
-                Err(_) => return, // accept loop gone
-            };
-            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                handler(&cfg, &mut stream)
-            }));
-            match outcome {
-                Ok(Ok(())) => {}
-                Ok(Err(e)) => eprintln!("connection error: {e:#}"),
-                Err(_) => {
-                    // The handler panicked mid-connection: report an
-                    // internal error to the peer (best-effort) and keep
-                    // this worker alive for the next connection.
-                    write_error(&mut stream, protocol::STATUS_INTERNAL);
-                    eprintln!("connection handler panicked; worker recovered");
                 }
             }
+            m.workers_busy.dec();
+            m.worker_busy_ns.add(busy_t0.elapsed().as_nanos() as u64);
         }));
     }
+    // One log line per interval on the accept-error path — a listener
+    // stuck on EMFILE returns errors in a tight loop and must not
+    // flood stderr (the `accept_errors` counter keeps the true rate).
+    let accept_rl = log::RateLimited::new(Duration::from_secs(5));
     for stream in listener.incoming() {
         match stream {
             // try_send first so pool saturation is visible to the
             // operator (a queued client hangs silently otherwise).
-            Ok(s) => match tx.try_send(Job::Conn(s)) {
-                Ok(()) => {}
+            Ok(s) => match tx.try_send(Job::Conn(s, Instant::now())) {
+                Ok(()) => telemetry::metrics().queue_depth.inc(),
                 Err(mpsc::TrySendError::Full(job)) => {
-                    eprintln!(
-                        "all {workers} workers busy and queue full; \
-                         connection waits (raise --workers if this persists)"
+                    telemetry::metrics().queue_full.inc();
+                    log::warn(
+                        "serve",
+                        &format!(
+                            "event=queue_full workers={workers} \
+                             msg=\"connection waits; raise --workers if this persists\""
+                        ),
                     );
                     if tx.send(job).is_err() {
                         break;
                     }
+                    telemetry::metrics().queue_depth.inc();
                 }
                 Err(mpsc::TrySendError::Disconnected(_)) => break,
             },
             Err(e) => {
                 // Persistent accept failures (e.g. EMFILE under fd
                 // exhaustion) must shed load, not busy-spin.
-                eprintln!("accept error: {e}");
-                std::thread::sleep(std::time::Duration::from_millis(50));
+                telemetry::metrics().accept_errors.inc();
+                if let Some(suppressed) = accept_rl.admit() {
+                    log::error(
+                        "serve",
+                        &format!("event=accept_error err={e} suppressed={suppressed}"),
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(50));
             }
         }
     }
     cfg.helpers.lock().unwrap_or_else(|p| p.into_inner()).take();
     drop(tx);
     for h in handles {
+        let _ = h.join();
+    }
+    dump_stop.store(true, Ordering::Relaxed);
+    if let Some(h) = dump_handle {
         let _ = h.join();
     }
     Ok(())
@@ -587,7 +884,8 @@ pub fn serve_on_with(
 /// path; v1 frames hit this app, v2 frames may name any other
 /// registered app). `cli_name` is the `pushmem list` name the design
 /// is cached under; `workers` bounds concurrent connections (a
-/// connection holds its worker until disconnect — DESIGN.md §2).
+/// connection holds its worker until disconnect — DESIGN.md §2);
+/// `metrics_json` enables periodic telemetry snapshot dumps.
 pub fn serve(
     cli_name: &str,
     c: Compiled,
@@ -595,45 +893,55 @@ pub fn serve(
     workers: usize,
     stats: bool,
     engine: Engine,
+    metrics_json: Option<std::path::PathBuf>,
 ) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-    eprintln!(
-        "serving {} on {addr} ({} PEs, {} MEM tiles, {} cycles/tile, {workers} workers, engine {})",
-        c.program.name,
-        c.design.pe_count(),
-        c.design.mem_tiles(),
-        c.graph.completion,
-        engine.name()
+    log::info(
+        "serve",
+        &format!(
+            "event=listening app={} addr={addr} pes={} mem_tiles={} cycles_per_tile={} workers={workers} engine={}",
+            c.program.name,
+            c.design.pe_count(),
+            c.design.mem_tiles(),
+            c.graph.completion,
+            engine.name()
+        ),
     );
     let mut cfg = ServeConfig::single(cli_name, c);
     cfg.workers = workers;
     cfg.stats = stats;
     cfg.engine = engine;
+    cfg.metrics_json = metrics_json;
     serve_on(listener, cfg)
 }
 
 /// Serve every app in `registry` on one endpoint forever (the
 /// `pushmem serve-all` path). Designs compile lazily on first
 /// request unless the registry was warmed. `stats` prints one
-/// `[req]` line per served request.
+/// `[req]` line per served request; `metrics_json` enables periodic
+/// telemetry snapshot dumps.
 pub fn serve_all(
     registry: Arc<CompiledRegistry>,
     addr: &str,
     workers: usize,
     stats: bool,
     engine: Engine,
+    metrics_json: Option<std::path::PathBuf>,
 ) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     let warmed = registry.compiled_names();
-    eprintln!(
-        "serving all registered apps on {addr} ({workers} workers, engine {}, {} pre-compiled: {})",
-        engine.name(),
-        warmed.len(),
-        if warmed.is_empty() { "none — lazy".to_string() } else { warmed.join(",") }
+    log::info(
+        "serve",
+        &format!(
+            "event=listening_all addr={addr} workers={workers} engine={} precompiled={}",
+            engine.name(),
+            if warmed.is_empty() { "none(lazy)".to_string() } else { warmed.join(",") }
+        ),
     );
     let mut cfg = ServeConfig::multi(registry, workers);
     cfg.stats = stats;
     cfg.engine = engine;
+    cfg.metrics_json = metrics_json;
     serve_on(listener, cfg)
 }
 
@@ -666,6 +974,19 @@ pub fn request_extent(
 ) -> Result<(Vec<i32>, u64, u64)> {
     let refs: Vec<&[i32]> = inputs.iter().map(|t| t.data.as_slice()).collect();
     roundtrip(stream, protocol::encode_request_v3(app, extent, &refs))
+}
+
+/// Client helper: query the server's telemetry snapshot over the wire
+/// (the admin `STATS` frame, docs/observability.md). Returns the raw
+/// JSON string.
+pub fn request_stats(stream: &mut TcpStream) -> Result<String> {
+    stream.write_all(&protocol::encode_stats_request())?;
+    stream.flush()?;
+    let resp = read_response(stream)?;
+    if resp.status != protocol::STATUS_OK {
+        bail!("server error status {}", resp.status);
+    }
+    Ok(protocol::detail_from_words(&resp.words))
 }
 
 fn roundtrip(stream: &mut TcpStream, frame: Vec<u8>) -> Result<(Vec<i32>, u64, u64)> {
@@ -888,5 +1209,28 @@ mod tests {
         // Server closed the connection afterwards.
         let mut rest = Vec::new();
         assert_eq!(stream.read_to_end(&mut rest).unwrap(), 0);
+    }
+
+    /// A STATS frame answered on a connection interleaved with data
+    /// frames: OK status, parseable JSON payload, zeroed timings.
+    #[test]
+    fn stats_frame_answers_json_on_data_connection() {
+        let prog = apps::gaussian::build(14);
+        let c = compile(&prog).unwrap();
+        let inputs = gen_inputs(&c.lp);
+        let ordered: Vec<Tensor> =
+            c.lp.inputs.iter().map(|n| inputs[n].clone()).collect();
+        let addr = spawn_server(ServeConfig::single("g14", c));
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let refs: Vec<&Tensor> = ordered.iter().collect();
+        let (words, _, _) = request(&mut stream, &refs).unwrap();
+        assert_eq!(words.len(), 14 * 14);
+        let json = request_stats(&mut stream).unwrap();
+        assert!(json.starts_with("{\"schema\":\"pushmem-stats-v1\""), "{json}");
+        assert!(json.contains("\"requests_total\":"), "{json}");
+        // The connection still serves data frames after the admin
+        // frame.
+        let (words, _, _) = request(&mut stream, &refs).unwrap();
+        assert_eq!(words.len(), 14 * 14);
     }
 }

@@ -70,14 +70,19 @@ fn default_threads() -> usize {
 /// (clamped to `[1, 64]`), else `min(available_parallelism, 8)`.
 fn exec_threads() -> usize {
     static THREADS: OnceLock<usize> = OnceLock::new();
-    *THREADS.get_or_init(|| match std::env::var("PUSHMEM_EXEC_THREADS") {
+    let n = *THREADS.get_or_init(|| match std::env::var("PUSHMEM_EXEC_THREADS") {
         Ok(v) => v
             .trim()
             .parse::<usize>()
             .ok()
             .map_or_else(default_threads, |n| n.clamp(1, 64)),
         Err(_) => default_threads(),
-    })
+    });
+    // Surface the configured cap next to `exec_threads_used` so the
+    // stats snapshot shows fan-out used vs available. Config-path
+    // only (once per ExecRun construction), never per kernel.
+    crate::telemetry::metrics().exec_threads_cap.set(n as u64);
+    n
 }
 
 /// The execution half of the functional engine: mutable per-request
@@ -534,9 +539,16 @@ fn exec_kernel(
     bufs: &mut KernelBufs,
     threads: usize,
 ) {
+    let sampled = crate::telemetry::sampling();
     let Some(ld) = kp.lane.lane_dim else {
         // No pure dims: the whole domain is one reduction group
         // draining to a single point (store strides are all zero).
+        if sampled {
+            let m = crate::telemetry::metrics();
+            m.exec_kernels.inc();
+            m.exec_threads_used.inc();
+            m.exec_points_scalar.inc();
+        }
         let KernelBufs { regs, load_vals, tail, addr, .. } = bufs;
         let v = scalar_group(kp, feed, scratch, regs, load_vals, tail, addr, &|_| 0);
         dst[kp.store.addr.offset as usize] = v;
@@ -546,12 +558,36 @@ fn exec_kernel(
     let trip: i64 = kp.extents.iter().product();
     if threads >= 2 && ld >= 1 && rows >= 2 && trip >= PAR_MIN_POINTS {
         if let Some(rb) = kp.lane.row_block {
+            if sampled {
+                record_dispatch(kp, ld, threads.min(rows as usize) as u64, true);
+            }
             run_rows_parallel(kp, ld, rb, feed, scratch, dst, threads);
             return;
         }
     }
+    if sampled {
+        record_dispatch(kp, ld, 1, false);
+    }
     let row1 = if ld >= 1 { rows } else { 1 };
     run_rows_lanes(kp, ld, 0, row1, feed, scratch, dst, 0, bufs);
+}
+
+/// Telemetry accounting for one vectorized-kernel dispatch: lane
+/// engagement (how many output points ran through the 8-wide main
+/// loop vs the scalar tail) and thread fan-out. Only called when
+/// sampling is on; a few multiplies and atomic adds, no allocation.
+fn record_dispatch(kp: &ExecKernel, ld: usize, threads_used: u64, parallel: bool) {
+    let m = crate::telemetry::metrics();
+    m.exec_kernels.inc();
+    if parallel {
+        m.exec_kernels_parallel.inc();
+    }
+    m.exec_threads_used.add(threads_used);
+    let lane_ext = kp.extents[ld];
+    let main = lane_ext - lane_ext % LANES as i64;
+    let outer_trip: i64 = kp.extents[..ld].iter().product();
+    m.exec_points_vector.add((outer_trip * main) as u64);
+    m.exec_points_scalar.add((outer_trip * (lane_ext - main)) as u64);
 }
 
 /// The original scalar reference walk (`--engine exec-scalar`): one
@@ -566,6 +602,13 @@ fn exec_kernel_scalar(
     dst: &mut [i32],
     bufs: &mut KernelBufs,
 ) {
+    if crate::telemetry::sampling() {
+        let m = crate::telemetry::metrics();
+        m.exec_kernels.inc();
+        m.exec_threads_used.inc();
+        let pts: i64 = kp.extents[..kp.pure_rank].iter().product();
+        m.exec_points_scalar.add(pts as u64);
+    }
     let KernelBufs { regs, load_vals, .. } = bufs;
     let mut id = IterationDomain::new(kp.extents.clone());
     let mut loads: Vec<DeltaImpl> =

@@ -42,6 +42,7 @@ pub mod mapping;
 pub mod poly;
 pub mod runtime;
 pub mod sched;
+pub mod telemetry;
 pub mod tensor;
 pub mod tile;
 pub mod ub;

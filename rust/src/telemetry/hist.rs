@@ -1,0 +1,323 @@
+//! Lock-free log-linear latency histograms (docs/observability.md).
+//!
+//! The bucket layout is **fixed** — every histogram in the process
+//! (and in any snapshot ever serialized) uses the same boundaries, so
+//! snapshots are mergeable across threads, processes, and PRs without
+//! coordination: merging is element-wise saturating addition, which is
+//! associative and commutative.
+//!
+//! Layout (values are nanoseconds, but nothing here assumes a unit):
+//! buckets `0..4` are exact (`v < 4` lands in bucket `v`); past that,
+//! each power-of-two octave is split into 4 linear sub-buckets, so
+//! bucket width tracks magnitude at a constant ~25% relative error.
+//! The top octave of `u64` maps to the last bucket — recording can
+//! never index out of range, and overflow saturates instead of
+//! wrapping (mirroring the `SimStats` saturating-sum semantics).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::Counter;
+
+/// 4 exact buckets + 62 octaves x 4 sub-buckets covers all of `u64`.
+pub const N_BUCKETS: usize = 252;
+
+/// Bucket index for a recorded value (total over `u64`).
+pub fn bucket_index(v: u64) -> usize {
+    if v < 4 {
+        return v as usize;
+    }
+    let exp = 63 - v.leading_zeros() as usize; // 2..=63
+    let sub = ((v >> (exp - 2)) & 3) as usize;
+    (exp - 2) * 4 + 4 + sub
+}
+
+/// Inclusive lower bound of bucket `i` — the value reported for any
+/// sample in the bucket (quantiles are therefore lower-bound
+/// estimates with ~25% relative error).
+pub fn bucket_floor(i: usize) -> u64 {
+    if i < 4 {
+        return i as u64;
+    }
+    let oct = (i - 4) / 4;
+    let sub = ((i - 4) % 4) as u64;
+    (4 + sub) << oct
+}
+
+/// A lock-free histogram: relaxed per-bucket counters plus a total
+/// count, a saturating sum, and a running max. `record_ns` is a few
+/// relaxed atomic RMWs — safe to call from any thread, never blocks.
+pub struct Histogram {
+    buckets: [AtomicU64; N_BUCKETS],
+    /// Release-ordered so a snapshot that reads `count` first is
+    /// guaranteed to see at least that many bucket increments.
+    count: Counter,
+    sum: Counter,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: Counter::new(),
+            sum: Counter::new(),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample (nanoseconds by convention). Bucket first,
+    /// count last: `count` is the release-publish, so any reader that
+    /// observes `count >= n` also observes `>= n` bucket increments.
+    pub fn record_ns(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.add(v);
+        self.max.fetch_max(v, Ordering::Relaxed);
+        self.count.add(1);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.get()
+    }
+
+    /// Point-in-time copy. Reads `count` (acquire) before the
+    /// buckets, so `snapshot.buckets` always sums to **at least**
+    /// `snapshot.count` even while writers are racing.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let count = self.count.get();
+        let sum_ns = self.sum.get();
+        let max_ns = self.max.load(Ordering::Acquire);
+        let mut buckets = Vec::new();
+        for (i, b) in self.buckets.iter().enumerate() {
+            let n = b.load(Ordering::Relaxed);
+            if n > 0 {
+                buckets.push((i as u32, n));
+            }
+        }
+        HistogramSnapshot { count, sum_ns, max_ns, buckets }
+    }
+}
+
+/// A frozen histogram: sparse `(bucket index, count)` pairs in index
+/// order, plus the scalar aggregates. Mergeable (fixed layout) and
+/// serializable (docs/observability.md gives the JSON shape).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum_ns: u64,
+    pub max_ns: u64,
+    /// `(bucket, count)` with `bucket < N_BUCKETS`, strictly
+    /// increasing, zero-count buckets omitted.
+    pub buckets: Vec<(u32, u64)>,
+}
+
+impl HistogramSnapshot {
+    pub fn empty() -> HistogramSnapshot {
+        HistogramSnapshot { count: 0, sum_ns: 0, max_ns: 0, buckets: Vec::new() }
+    }
+
+    /// Element-wise saturating merge. Saturating addition over a
+    /// fixed bucket layout is associative, so merging snapshots in
+    /// any grouping or order yields identical results (pinned by
+    /// test).
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        self.count = self.count.saturating_add(other.count);
+        self.sum_ns = self.sum_ns.saturating_add(other.sum_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+        let mut merged: Vec<(u32, u64)> =
+            Vec::with_capacity(self.buckets.len() + other.buckets.len());
+        let (mut a, mut b) = (self.buckets.iter().peekable(), other.buckets.iter().peekable());
+        loop {
+            match (a.peek(), b.peek()) {
+                (Some(&&(ia, na)), Some(&&(ib, nb))) => {
+                    if ia == ib {
+                        merged.push((ia, na.saturating_add(nb)));
+                        a.next();
+                        b.next();
+                    } else if ia < ib {
+                        merged.push((ia, na));
+                        a.next();
+                    } else {
+                        merged.push((ib, nb));
+                        b.next();
+                    }
+                }
+                (Some(_), None) => {
+                    merged.extend(a.by_ref().copied());
+                }
+                (None, Some(_)) => {
+                    merged.extend(b.by_ref().copied());
+                }
+                (None, None) => break,
+            }
+        }
+        self.buckets = merged;
+    }
+
+    /// Lower-bound quantile estimate (`q` in `[0, 1]`): the floor of
+    /// the bucket holding the `ceil(q * count)`-th sample.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for &(i, n) in &self.buckets {
+            cum = cum.saturating_add(n);
+            if cum >= target {
+                return bucket_floor(i as usize);
+            }
+        }
+        self.max_ns
+    }
+
+    /// Mean in nanoseconds (0 when empty).
+    pub fn mean_ns(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.sum_ns / self.count
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The exact bucket boundaries are part of the snapshot format:
+    /// 0..4 exact, then 4 linear sub-buckets per octave, floors
+    /// `(4 + sub) << octave`. Pinned so serialized snapshots stay
+    /// comparable across versions.
+    #[test]
+    fn bucket_boundaries_pinned() {
+        // Exact region.
+        for v in 0..4u64 {
+            assert_eq!(bucket_index(v), v as usize);
+            assert_eq!(bucket_floor(v as usize), v);
+        }
+        // First octave [4, 8): one bucket per value.
+        for v in 4..8u64 {
+            assert_eq!(bucket_index(v), v as usize);
+        }
+        // Octave starts land on sub-bucket 0.
+        for (v, want) in [(8u64, 8usize), (16, 12), (32, 16), (1 << 20, 4 + 18 * 4)] {
+            assert_eq!(bucket_index(v), want, "v={v}");
+            assert_eq!(bucket_floor(want), v, "v={v}");
+        }
+        // A value one below an octave lands in the top sub-bucket of
+        // the previous octave.
+        assert_eq!(bucket_index(15), 11);
+        assert_eq!(bucket_floor(11), 14);
+        // Full range: u64::MAX maps to the last bucket, in range.
+        assert_eq!(bucket_index(u64::MAX), N_BUCKETS - 1);
+        assert_eq!(bucket_floor(N_BUCKETS - 1), 7u64 << 61);
+        // Floors are monotone and index/floor are mutually consistent
+        // over every bucket.
+        for i in 0..N_BUCKETS {
+            let f = bucket_floor(i);
+            assert_eq!(bucket_index(f), i, "floor of bucket {i} maps back");
+            if i > 0 {
+                assert!(f > bucket_floor(i - 1), "floors monotone at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn record_and_quantiles() {
+        let h = Histogram::new();
+        for v in [10u64, 20, 30, 40, 1000] {
+            h.record_ns(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.sum_ns, 1100);
+        assert_eq!(s.max_ns, 1000);
+        assert_eq!(s.buckets.iter().map(|&(_, n)| n).sum::<u64>(), 5);
+        // Lower-bound estimates: within one bucket of the truth.
+        assert_eq!(s.quantile_ns(0.5), bucket_floor(bucket_index(30)));
+        assert_eq!(s.quantile_ns(1.0), bucket_floor(bucket_index(1000)));
+        assert_eq!(s.quantile_ns(0.0), bucket_floor(bucket_index(10)));
+        assert_eq!(s.mean_ns(), 220);
+    }
+
+    /// Merging is associative: (a ⊕ b) ⊕ c == a ⊕ (b ⊕ c), including
+    /// under saturation — the property that lets per-thread or
+    /// per-process snapshots be combined in any order.
+    #[test]
+    fn merge_is_associative() {
+        let mk = |vals: &[u64]| {
+            let h = Histogram::new();
+            for &v in vals {
+                h.record_ns(v);
+            }
+            h.snapshot()
+        };
+        let a = mk(&[1, 5, 9, 1 << 30]);
+        let b = mk(&[5, 5, 7]);
+        let c = mk(&[0, u64::MAX, 1 << 30]);
+
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ab_c = ab.clone();
+        ab_c.merge(&c);
+
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+
+        assert_eq!(ab_c, a_bc);
+        // Commutative too.
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+        // Counts and bucket totals agree after merging.
+        assert_eq!(ab_c.count, 10);
+        assert_eq!(ab_c.buckets.iter().map(|&(_, n)| n).sum::<u64>(), 10);
+    }
+
+    /// Saturation: sums pin at u64::MAX instead of wrapping, exactly
+    /// like `SimStats`' saturating `AddAssign`.
+    #[test]
+    fn merge_saturates_instead_of_wrapping() {
+        let mut a = HistogramSnapshot {
+            count: u64::MAX - 1,
+            sum_ns: u64::MAX,
+            max_ns: 1,
+            buckets: vec![(0, u64::MAX)],
+        };
+        let b = a.clone();
+        a.merge(&b);
+        assert_eq!(a.count, u64::MAX);
+        assert_eq!(a.sum_ns, u64::MAX);
+        assert_eq!(a.buckets, vec![(0, u64::MAX)]);
+    }
+
+    /// Concurrent recording loses nothing: bucket totals, count, and
+    /// sum all land exactly.
+    #[test]
+    fn concurrent_recording_is_lossless() {
+        let h = Histogram::new();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let h = &h;
+                s.spawn(move || {
+                    for i in 0..1000u64 {
+                        h.record_ns(t * 1000 + i);
+                    }
+                });
+            }
+        });
+        let s = h.snapshot();
+        assert_eq!(s.count, 4000);
+        assert_eq!(s.buckets.iter().map(|&(_, n)| n).sum::<u64>(), 4000);
+        assert_eq!(s.sum_ns, (0..4000u64).sum::<u64>());
+        assert_eq!(s.max_ns, 3999);
+    }
+}

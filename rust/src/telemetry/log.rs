@@ -1,0 +1,171 @@
+//! Minimal leveled stderr logger for the serving path
+//! (docs/observability.md).
+//!
+//! One line per event, structured as `key=value` pairs so operators
+//! can grep and cut without a parser:
+//!
+//! ```text
+//! log level=warn target=serve event=accept_error err=... suppressed=12
+//! ```
+//!
+//! The level comes from `PUSHMEM_LOG` (`error|warn|info|debug`,
+//! default `info`), read once per process. There is deliberately no
+//! timestamp machinery or formatting framework — the serving stack is
+//! std-only, and anything heavier belongs in the metrics registry,
+//! not stderr. The `[req]` per-request line printed under `--stats`
+//! does NOT route through here: its format is a stable script
+//! interface (see `coordinator/serve.rs`) and it prints regardless of
+//! level.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Severity, ordered: a configured level admits itself and everything
+/// more severe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    /// Parse a `PUSHMEM_LOG` value; unknown strings fall back to
+    /// `Info` (a typo must not silence error reporting — erring
+    /// toward chatty is the safe direction).
+    pub fn parse(s: &str) -> Level {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" | "0" => Level::Error,
+            "warn" | "warning" | "1" => Level::Warn,
+            "debug" | "3" => Level::Debug,
+            _ => Level::Info,
+        }
+    }
+}
+
+fn configured() -> Level {
+    static LEVEL: OnceLock<Level> = OnceLock::new();
+    *LEVEL.get_or_init(|| match std::env::var("PUSHMEM_LOG") {
+        Ok(v) => Level::parse(&v),
+        Err(_) => Level::Info,
+    })
+}
+
+/// Is `level` admitted by the configured threshold? Callers use this
+/// to skip formatting entirely on the fast path.
+pub fn enabled(level: Level) -> bool {
+    level <= configured()
+}
+
+/// Emit one structured line to stderr (no-op above the configured
+/// level). `msg` should be `key=value` pairs.
+pub fn write(level: Level, target: &str, msg: &str) {
+    if enabled(level) {
+        eprintln!("log level={} target={target} {msg}", level.name());
+    }
+}
+
+pub fn error(target: &str, msg: &str) {
+    write(Level::Error, target, msg);
+}
+
+pub fn warn(target: &str, msg: &str) {
+    write(Level::Warn, target, msg);
+}
+
+pub fn info(target: &str, msg: &str) {
+    write(Level::Info, target, msg);
+}
+
+pub fn debug(target: &str, msg: &str) {
+    write(Level::Debug, target, msg);
+}
+
+/// Token-bucket-of-one rate limiter for repetitive failure paths
+/// (e.g. a listener stuck on EMFILE returning accept errors in a
+/// tight loop): admits at most one log line per interval and counts
+/// what it suppressed, so the operator sees both the error and its
+/// rate without stderr flooding.
+pub struct RateLimited {
+    interval: Duration,
+    last: Mutex<Option<Instant>>,
+    suppressed: AtomicU64,
+}
+
+impl RateLimited {
+    pub fn new(interval: Duration) -> RateLimited {
+        RateLimited { interval, last: Mutex::new(None), suppressed: AtomicU64::new(0) }
+    }
+
+    /// `Some(suppressed_since_last)` when the caller should log now,
+    /// `None` when the event should be counted silently.
+    pub fn admit(&self) -> Option<u64> {
+        let mut last = self.last.lock().unwrap_or_else(|p| p.into_inner());
+        let now = Instant::now();
+        match *last {
+            Some(t) if now.duration_since(t) < self.interval => {
+                self.suppressed.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+            _ => {
+                *last = Some(now);
+                Some(self.suppressed.swap(0, Ordering::Relaxed))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing_and_ordering() {
+        assert_eq!(Level::parse("error"), Level::Error);
+        assert_eq!(Level::parse("WARN"), Level::Warn);
+        assert_eq!(Level::parse(" debug "), Level::Debug);
+        // Unknown values fall back to Info, never to silence.
+        assert_eq!(Level::parse("verbose"), Level::Info);
+        assert_eq!(Level::parse(""), Level::Info);
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn rate_limiter_admits_once_per_interval() {
+        let rl = RateLimited::new(Duration::from_secs(3600));
+        assert_eq!(rl.admit(), Some(0)); // first event always logs
+        for _ in 0..5 {
+            assert_eq!(rl.admit(), None); // within the interval: counted
+        }
+        // A zero-interval limiter admits every event and reports the
+        // backlog exactly once.
+        let rl = RateLimited::new(Duration::from_secs(0));
+        assert_eq!(rl.admit(), Some(0));
+        assert_eq!(rl.admit(), Some(0));
+    }
+
+    #[test]
+    fn rate_limiter_reports_suppressed_count() {
+        let rl = RateLimited::new(Duration::from_secs(3600));
+        assert_eq!(rl.admit(), Some(0));
+        for _ in 0..7 {
+            assert_eq!(rl.admit(), None);
+        }
+        // Force the window open and check the backlog is surfaced.
+        *rl.last.lock().unwrap() = Some(Instant::now() - Duration::from_secs(7200));
+        assert_eq!(rl.admit(), Some(7));
+    }
+}

@@ -1,0 +1,619 @@
+//! Process-global serving telemetry: lock-free metrics, request
+//! spans, and the snapshot surface behind `pushmem stats`
+//! (docs/observability.md).
+//!
+//! Three layers, std-only:
+//!
+//! * **Registry** — a fixed set of saturating atomic [`Counter`]s,
+//!   [`Gauge`]s, and log-linear latency [`Histogram`]s
+//!   ([`hist`]), owned by one process-global [`Metrics`] instance.
+//!   Every mutation is a handful of relaxed/acq-rel atomic ops; there
+//!   is no lock anywhere on the recording path. Counters saturate at
+//!   `u64::MAX` instead of wrapping, mirroring the `SimStats`
+//!   saturating-sum semantics the serving stats already use.
+//! * **Spans** — the serving path builds one [`RequestRecord`] per
+//!   request ([`span`]) and feeds it through [`Metrics::record_request`],
+//!   which updates the counters and stage histograms and retains the
+//!   most recent records in a bounded ring. The `--stats` `[req]`
+//!   line is printed from the *same record*, so the flag and the
+//!   metrics snapshot can never disagree.
+//! * **Snapshot** — [`Metrics::snapshot`] freezes a consistent
+//!   point-in-time [`Snapshot`], serializable to JSON with a tiny
+//!   std-only emitter (the same idiom as the bench harness's
+//!   `BENCH_*.json` writer). The wire `STATS` frame, the
+//!   `--metrics-json` periodic dump, and the bench embedding all
+//!   serialize this one type.
+//!
+//! ## Hot-path hooks cost ~nothing when off
+//!
+//! The exec/tile hot paths (`exec/run.rs`, `tile/run.rs`) only touch
+//! the registry when [`sampling`] is on — a single relaxed
+//! `AtomicBool` load per kernel dispatch / per tile otherwise, and
+//! never a heap allocation either way (the zero-allocation
+//! steady-state contracts from PR 6 hold with sampling on; the
+//! alloc-counter tests pin them). Serving turns sampling on; the CLI
+//! run/tune/fuzz paths leave it off. See DESIGN.md §8 for the
+//! overhead argument.
+//!
+//! ## Snapshot consistency under concurrent writers
+//!
+//! Writers publish with release ordering in a fixed field order
+//! (`requests_total` before `requests_ok`/`requests_failed`;
+//! histogram buckets before the histogram count) and [`Metrics::snapshot`]
+//! reads with acquire ordering in the *opposite* order, so every
+//! snapshot satisfies `requests_ok + requests_failed <= requests_total`
+//! and `sum(buckets) >= count` even while requests are in flight —
+//! pinned by a concurrent-writer test.
+
+pub mod hist;
+pub mod log;
+pub mod span;
+
+pub use hist::{Histogram, HistogramSnapshot};
+pub use span::{RecentRing, RequestRecord};
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Global sampling switch for the hot-path hooks. Off by default so
+/// standalone CLI runs, the tuner, and the fuzz suites pay one
+/// relaxed bool load per kernel dispatch and nothing else; the
+/// serving loop turns it on.
+static SAMPLING: AtomicBool = AtomicBool::new(false);
+
+#[inline]
+pub fn sampling() -> bool {
+    SAMPLING.load(Ordering::Relaxed)
+}
+
+pub fn set_sampling(on: bool) {
+    SAMPLING.store(on, Ordering::Relaxed);
+}
+
+/// A monotone saturating counter. `add` is an acq-rel RMW (so
+/// cross-counter snapshot invariants hold — see the module docs);
+/// overflow pins at `u64::MAX` instead of wrapping, mirroring
+/// `SimStats`' saturating `AddAssign`.
+pub struct Counter(AtomicU64);
+
+impl Default for Counter {
+    fn default() -> Counter {
+        Counter::new()
+    }
+}
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn add(&self, n: u64) {
+        let prev = self.0.fetch_add(n, Ordering::AcqRel);
+        if prev.checked_add(n).is_none() {
+            // Wrapped: pin to the ceiling. Racing adders may observe
+            // a transiently wrapped value, but the counter converges
+            // to MAX and never reports a small value again.
+            self.0.store(u64::MAX, Ordering::Release);
+        }
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
+/// An instantaneous level (queue depth, busy workers). Decrements
+/// saturate at zero so a racing teardown can never underflow to
+/// 2^64-1.
+pub struct Gauge(AtomicU64);
+
+impl Default for Gauge {
+    fn default() -> Gauge {
+        Gauge::new()
+    }
+}
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::AcqRel);
+    }
+
+    pub fn dec(&self) {
+        let _ = self
+            .0
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |v| Some(v.saturating_sub(1)));
+    }
+
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Release);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
+/// The process-global metrics registry: every field is a named metric
+/// surfaced verbatim in the snapshot (docs/observability.md lists
+/// them all). A fixed struct, not a dynamic map: registration is a
+/// field, lookup is a load, and the recording path stays lock-free.
+pub struct Metrics {
+    start: Instant,
+
+    // -- serving counters ------------------------------------------
+    pub connections_opened: Counter,
+    pub connections_closed: Counter,
+    pub requests_total: Counter,
+    pub requests_ok: Counter,
+    pub requests_failed: Counter,
+    pub requests_v1: Counter,
+    pub requests_v2: Counter,
+    pub requests_v3: Counter,
+    pub stats_requests: Counter,
+    pub accept_errors: Counter,
+    pub queue_full: Counter,
+    pub words_in: Counter,
+    pub words_out: Counter,
+    /// Accelerator passes behind served OK responses (1 per fixed-box
+    /// request, the plan's tile count per v3 request).
+    pub tiles_served: Counter,
+
+    // -- worker pool ------------------------------------------------
+    pub jobs_conn: Counter,
+    pub jobs_tiles: Counter,
+    /// Summed wall time workers spent inside jobs; utilization =
+    /// worker_busy_ns / (uptime * workers_total).
+    pub worker_busy_ns: Counter,
+    pub queue_depth: Gauge,
+    pub workers_busy: Gauge,
+    pub workers_total: Gauge,
+
+    // -- hot-path hooks (recorded only while `sampling()` is on) ----
+    /// Tiles executed by the tile drain (`tile/run.rs`), whoever
+    /// drained them; tiles/s = tiles_executed / uptime.
+    pub tiles_executed: Counter,
+    pub exec_kernels: Counter,
+    /// Kernel dispatches that took the row-parallel path.
+    pub exec_kernels_parallel: Counter,
+    /// Summed thread fan-out actually used (vs the
+    /// `PUSHMEM_EXEC_THREADS` cap in `exec_threads_cap`); mean
+    /// fan-out = exec_threads_used / exec_kernels.
+    pub exec_threads_used: Counter,
+    /// Output points computed through the 8-wide lane path vs the
+    /// scalar tail/reference walk: lane engagement =
+    /// vector / (vector + scalar).
+    pub exec_points_vector: Counter,
+    pub exec_points_scalar: Counter,
+    pub exec_threads_cap: Gauge,
+
+    // -- stage histograms (nanoseconds) -----------------------------
+    pub accept_wait: Histogram,
+    pub stage_decode: Histogram,
+    pub stage_lookup: Histogram,
+    pub stage_execute: Histogram,
+    pub stage_stitch: Histogram,
+    pub stage_respond: Histogram,
+    pub request_total: Histogram,
+    pub tile_exec: Histogram,
+
+    recent: RecentRing,
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics::new()
+    }
+}
+
+impl Metrics {
+    /// A fresh registry. Production code uses the process-global
+    /// [`metrics`]; tests build private instances.
+    pub fn new() -> Metrics {
+        Metrics {
+            start: Instant::now(),
+            connections_opened: Counter::new(),
+            connections_closed: Counter::new(),
+            requests_total: Counter::new(),
+            requests_ok: Counter::new(),
+            requests_failed: Counter::new(),
+            requests_v1: Counter::new(),
+            requests_v2: Counter::new(),
+            requests_v3: Counter::new(),
+            stats_requests: Counter::new(),
+            accept_errors: Counter::new(),
+            queue_full: Counter::new(),
+            words_in: Counter::new(),
+            words_out: Counter::new(),
+            tiles_served: Counter::new(),
+            jobs_conn: Counter::new(),
+            jobs_tiles: Counter::new(),
+            worker_busy_ns: Counter::new(),
+            queue_depth: Gauge::new(),
+            workers_busy: Gauge::new(),
+            workers_total: Gauge::new(),
+            tiles_executed: Counter::new(),
+            exec_kernels: Counter::new(),
+            exec_kernels_parallel: Counter::new(),
+            exec_threads_used: Counter::new(),
+            exec_points_vector: Counter::new(),
+            exec_points_scalar: Counter::new(),
+            exec_threads_cap: Gauge::new(),
+            accept_wait: Histogram::new(),
+            stage_decode: Histogram::new(),
+            stage_lookup: Histogram::new(),
+            stage_execute: Histogram::new(),
+            stage_stitch: Histogram::new(),
+            stage_respond: Histogram::new(),
+            request_total: Histogram::new(),
+            tile_exec: Histogram::new(),
+            recent: RecentRing::new(),
+        }
+    }
+
+    /// Fold one served request into the registry: counters, stage
+    /// histograms (OK requests only, so every stage histogram's count
+    /// equals `requests_ok`), and the recent-request ring. This is
+    /// the single entry point the serving path uses — the `--stats`
+    /// `[req]` line is printed from the same record afterwards, so
+    /// the two surfaces cannot diverge.
+    ///
+    /// Write order matters: `requests_total` is incremented *before*
+    /// the ok/failed split (see the module docs on snapshot
+    /// consistency).
+    pub fn record_request(&self, rec: RequestRecord) {
+        self.requests_total.inc();
+        match rec.version {
+            1 => self.requests_v1.inc(),
+            2 => self.requests_v2.inc(),
+            3 => self.requests_v3.inc(),
+            // 0 = the request failed before its generation was known
+            // (framing error); counted in total/failed only.
+            _ => {}
+        }
+        self.words_in.add(rec.in_words);
+        if rec.ok {
+            self.words_out.add(rec.out_words);
+            self.tiles_served.add(rec.tiles);
+            self.stage_decode.record_ns(rec.decode_ns);
+            self.stage_lookup.record_ns(rec.lookup_ns);
+            self.stage_execute.record_ns(rec.execute_ns);
+            self.stage_stitch.record_ns(rec.stitch_ns);
+            self.stage_respond.record_ns(rec.respond_ns);
+            self.request_total.record_ns(rec.total_ns);
+            self.requests_ok.inc();
+        } else {
+            self.requests_failed.inc();
+        }
+        self.recent.push(rec);
+    }
+
+    /// Freeze a point-in-time snapshot. Reads the ok/failed split
+    /// *before* `requests_total` (the reverse of the write order), so
+    /// `ok + failed <= total` holds in every snapshot.
+    pub fn snapshot(&self) -> Snapshot {
+        let requests_ok = self.requests_ok.get();
+        let requests_failed = self.requests_failed.get();
+        let requests_total = self.requests_total.get();
+        let counters = vec![
+            ("connections_opened", self.connections_opened.get()),
+            ("connections_closed", self.connections_closed.get()),
+            ("requests_total", requests_total),
+            ("requests_ok", requests_ok),
+            ("requests_failed", requests_failed),
+            ("requests_v1", self.requests_v1.get()),
+            ("requests_v2", self.requests_v2.get()),
+            ("requests_v3", self.requests_v3.get()),
+            ("stats_requests", self.stats_requests.get()),
+            ("accept_errors", self.accept_errors.get()),
+            ("queue_full", self.queue_full.get()),
+            ("words_in", self.words_in.get()),
+            ("words_out", self.words_out.get()),
+            ("tiles_served", self.tiles_served.get()),
+            ("jobs_conn", self.jobs_conn.get()),
+            ("jobs_tiles", self.jobs_tiles.get()),
+            ("worker_busy_ns", self.worker_busy_ns.get()),
+            ("tiles_executed", self.tiles_executed.get()),
+            ("exec_kernels", self.exec_kernels.get()),
+            ("exec_kernels_parallel", self.exec_kernels_parallel.get()),
+            ("exec_threads_used", self.exec_threads_used.get()),
+            ("exec_points_vector", self.exec_points_vector.get()),
+            ("exec_points_scalar", self.exec_points_scalar.get()),
+        ];
+        let gauges = vec![
+            ("queue_depth", self.queue_depth.get()),
+            ("workers_busy", self.workers_busy.get()),
+            ("workers_total", self.workers_total.get()),
+            ("exec_threads_cap", self.exec_threads_cap.get()),
+        ];
+        let histograms = vec![
+            ("accept_wait", self.accept_wait.snapshot()),
+            ("stage_decode", self.stage_decode.snapshot()),
+            ("stage_lookup", self.stage_lookup.snapshot()),
+            ("stage_execute", self.stage_execute.snapshot()),
+            ("stage_stitch", self.stage_stitch.snapshot()),
+            ("stage_respond", self.stage_respond.snapshot()),
+            ("request_total", self.request_total.snapshot()),
+            ("tile_exec", self.tile_exec.snapshot()),
+        ];
+        Snapshot {
+            uptime_s: self.start.elapsed().as_secs_f64(),
+            counters,
+            gauges,
+            histograms,
+            recent: self.recent.to_vec(),
+        }
+    }
+}
+
+/// The process-global registry (one per process, like the exec thread
+/// cap). Lazy so library users who never serve pay nothing.
+pub fn metrics() -> &'static Metrics {
+    static METRICS: OnceLock<Metrics> = OnceLock::new();
+    METRICS.get_or_init(Metrics::new)
+}
+
+/// A consistent point-in-time copy of the registry, the one type
+/// every stats surface serializes: the wire `STATS` reply, the
+/// `--metrics-json` dump, and the bench embedding.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub uptime_s: f64,
+    pub counters: Vec<(&'static str, u64)>,
+    pub gauges: Vec<(&'static str, u64)>,
+    pub histograms: Vec<(&'static str, HistogramSnapshot)>,
+    pub recent: Vec<RequestRecord>,
+}
+
+impl Snapshot {
+    /// Named counter value (0 if absent — snapshots are forward
+    /// compatible: readers must tolerate missing names).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .chain(self.gauges.iter())
+            .find(|(n, _)| *n == name)
+            .map_or(0, |&(_, v)| v)
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&HistogramSnapshot> {
+        self.histograms.iter().find(|(n, _)| *n == name).map(|(_, h)| h)
+    }
+
+    /// Serialize to one JSON object (docs/observability.md pins the
+    /// shape). Std-only, same idiom as the bench harness emitter.
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(2048);
+        out.push_str("{\"schema\":\"pushmem-stats-v1\"");
+        out.push_str(&format!(",\"uptime_s\":{:.6}", self.uptime_s));
+        out.push_str(",\"counters\":{");
+        for (i, (name, v)) in self.counters.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{name}\":{v}"));
+        }
+        out.push_str("},\"gauges\":{");
+        for (i, (name, v)) in self.gauges.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{name}\":{v}"));
+        }
+        out.push_str("},\"histograms\":{");
+        for (i, (name, h)) in self.histograms.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\"{name}\":{{\"count\":{},\"sum_ns\":{},\"max_ns\":{},\"mean_ns\":{},\
+                 \"p50_ns\":{},\"p90_ns\":{},\"p99_ns\":{},\"buckets\":[",
+                h.count,
+                h.sum_ns,
+                h.max_ns,
+                h.mean_ns(),
+                h.quantile_ns(0.50),
+                h.quantile_ns(0.90),
+                h.quantile_ns(0.99),
+            ));
+            for (j, (b, n)) in h.buckets.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!("[{b},{n}]"));
+            }
+            out.push_str("]}");
+        }
+        out.push_str("},\"recent\":[");
+        for (i, rec) in self.recent.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&rec.to_json());
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// Escape a string for inclusion in a JSON string literal (quotes,
+/// backslashes, and control characters; everything else verbatim).
+pub(crate) fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(ok: bool) -> RequestRecord {
+        RequestRecord {
+            app: "gaussian".into(),
+            engine: "exec",
+            version: 3,
+            ok,
+            tiles: 4,
+            in_words: 770,
+            out_words: 700,
+            cycles: 100,
+            queue_depth: 0,
+            decode_ns: 10,
+            lookup_ns: 20,
+            execute_ns: 30,
+            stitch_ns: 5,
+            respond_ns: 15,
+            total_ns: 80,
+        }
+    }
+
+    /// Counter saturation mirrors `SimStats`' saturating `AddAssign`:
+    /// once at the ceiling the counter stays there.
+    #[test]
+    fn counter_saturates_at_max() {
+        let c = Counter::new();
+        c.add(u64::MAX - 1);
+        c.add(5); // would wrap
+        assert_eq!(c.get(), u64::MAX);
+        c.add(17); // stays pinned
+        assert_eq!(c.get(), u64::MAX);
+        c.inc();
+        assert_eq!(c.get(), u64::MAX);
+    }
+
+    #[test]
+    fn gauge_never_underflows() {
+        let g = Gauge::new();
+        g.inc();
+        g.dec();
+        g.dec(); // extra decrement: clamps at 0, no wraparound
+        assert_eq!(g.get(), 0);
+        g.set(3);
+        assert_eq!(g.get(), 3);
+    }
+
+    /// The documented snapshot invariants hold while writers race:
+    /// `ok + failed <= total`, and each stage histogram's bucket sum
+    /// covers its count.
+    #[test]
+    fn snapshot_consistent_under_concurrent_writers() {
+        let m = Metrics::new();
+        const PER_THREAD: u64 = 500;
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let m = &m;
+                s.spawn(move || {
+                    for i in 0..PER_THREAD {
+                        m.record_request(rec((i + t) % 3 != 0));
+                    }
+                });
+            }
+            // Snapshot continuously while writers run.
+            let m = &m;
+            s.spawn(move || {
+                let mut last_total = 0;
+                for _ in 0..200 {
+                    let snap = m.snapshot();
+                    let total = snap.counter("requests_total");
+                    let ok = snap.counter("requests_ok");
+                    let failed = snap.counter("requests_failed");
+                    assert!(
+                        ok + failed <= total,
+                        "ok {ok} + failed {failed} > total {total}"
+                    );
+                    assert!(total >= last_total, "requests_total went backwards");
+                    last_total = total;
+                    for (name, h) in &snap.histograms {
+                        let bucket_sum: u64 =
+                            h.buckets.iter().map(|&(_, n)| n).sum();
+                        assert!(
+                            bucket_sum >= h.count,
+                            "{name}: buckets {bucket_sum} < count {}",
+                            h.count
+                        );
+                    }
+                }
+            });
+        });
+        let end = m.snapshot();
+        assert_eq!(end.counter("requests_total"), 4 * PER_THREAD);
+        assert_eq!(
+            end.counter("requests_ok") + end.counter("requests_failed"),
+            4 * PER_THREAD
+        );
+        // OK-only histogram feeding: every stage histogram count
+        // equals requests_ok exactly.
+        for (name, h) in &end.histograms {
+            if name.starts_with("stage_") || *name == "request_total" {
+                assert_eq!(h.count, end.counter("requests_ok"), "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn snapshot_json_is_well_formed_and_complete() {
+        let m = Metrics::new();
+        m.record_request(rec(true));
+        m.record_request(rec(false));
+        let snap = m.snapshot();
+        let json = snap.to_json();
+        assert!(json.starts_with("{\"schema\":\"pushmem-stats-v1\""), "{json}");
+        for key in [
+            "\"uptime_s\":",
+            "\"counters\":{",
+            "\"requests_total\":2",
+            "\"requests_ok\":1",
+            "\"requests_failed\":1",
+            "\"gauges\":{",
+            "\"queue_depth\":",
+            "\"histograms\":{",
+            "\"stage_decode\":{\"count\":1",
+            "\"buckets\":[",
+            "\"recent\":[{",
+            "\"app\":\"gaussian\"",
+        ] {
+            assert!(json.contains(key), "{key} missing from {json}");
+        }
+        // Balanced braces/brackets (cheap well-formedness check; the
+        // Python side parses the same JSON with a real parser).
+        let opens = json.matches(['{', '[']).count();
+        let closes = json.matches(['}', ']']).count();
+        assert_eq!(opens, closes, "{json}");
+    }
+
+    #[test]
+    fn json_escaping() {
+        assert_eq!(json_escape("plain"), "plain");
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(json_escape("x\ny"), "x\\ny");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+
+    #[test]
+    fn snapshot_counter_lookup_covers_gauges() {
+        let m = Metrics::new();
+        m.workers_total.set(8);
+        let snap = m.snapshot();
+        assert_eq!(snap.counter("workers_total"), 8);
+        assert_eq!(snap.counter("no_such_metric"), 0);
+    }
+}

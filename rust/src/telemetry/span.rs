@@ -1,0 +1,177 @@
+//! Request spans: one record per served request, carrying the
+//! per-stage timing breakdown of the serving path
+//! (docs/observability.md).
+//!
+//! The stages mirror the lifecycle of a request inside
+//! `coordinator/serve.rs`:
+//!
+//! ```text
+//! accept-wait -> decode -> lookup -> execute -> stitch -> respond
+//! ```
+//!
+//! `accept-wait` (time queued before a worker picked the connection
+//! up) is a per-connection quantity and feeds its own histogram;
+//! the rest are per-request and are recorded both into the stage
+//! histograms and — for the most recent requests — into a bounded
+//! in-memory ring surfaced verbatim in the `STATS` reply, so an
+//! operator can see the last few concrete requests, not just
+//! aggregates.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use super::json_escape;
+
+/// How many recent requests the ring retains. Small on purpose: the
+/// ring is a debugging window, not a log — aggregates live in the
+/// histograms.
+pub const RING_CAP: usize = 32;
+
+/// One served request, as recorded by the serving path. Stage
+/// durations are nanoseconds; a stage the request never entered
+/// (e.g. `stitch` on a fixed-box request) records 0.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestRecord {
+    /// Resolved app name ("?" when the request failed before
+    /// resolution).
+    pub app: String,
+    /// Concrete engine that executed ("?" before resolution).
+    pub engine: &'static str,
+    /// Protocol generation: 1, 2, or 3.
+    pub version: u8,
+    pub ok: bool,
+    /// Accelerator passes (1 for fixed-box, the plan's tile count for
+    /// v3 whole-image requests).
+    pub tiles: u64,
+    pub in_words: u64,
+    pub out_words: u64,
+    pub cycles: u64,
+    /// Pool queue depth sampled at admission.
+    pub queue_depth: u64,
+    pub decode_ns: u64,
+    pub lookup_ns: u64,
+    pub execute_ns: u64,
+    pub stitch_ns: u64,
+    pub respond_ns: u64,
+    pub total_ns: u64,
+}
+
+impl RequestRecord {
+    /// Serialize as a JSON object (the element shape of the
+    /// snapshot's `recent` array).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"app\":\"{}\",\"engine\":\"{}\",\"version\":{},\"ok\":{},\
+             \"tiles\":{},\"in_words\":{},\"out_words\":{},\"cycles\":{},\
+             \"queue_depth\":{},\"decode_ns\":{},\"lookup_ns\":{},\
+             \"execute_ns\":{},\"stitch_ns\":{},\"respond_ns\":{},\"total_ns\":{}}}",
+            json_escape(&self.app),
+            json_escape(self.engine),
+            self.version,
+            self.ok,
+            self.tiles,
+            self.in_words,
+            self.out_words,
+            self.cycles,
+            self.queue_depth,
+            self.decode_ns,
+            self.lookup_ns,
+            self.execute_ns,
+            self.stitch_ns,
+            self.respond_ns,
+            self.total_ns,
+        )
+    }
+}
+
+/// Bounded ring of recent [`RequestRecord`]s. A mutex is fine here:
+/// it is taken once per request (never on the tile/exec hot path) and
+/// holds only a push/pop.
+pub struct RecentRing {
+    ring: Mutex<VecDeque<RequestRecord>>,
+}
+
+impl Default for RecentRing {
+    fn default() -> RecentRing {
+        RecentRing::new()
+    }
+}
+
+impl RecentRing {
+    pub fn new() -> RecentRing {
+        RecentRing { ring: Mutex::new(VecDeque::with_capacity(RING_CAP)) }
+    }
+
+    pub fn push(&self, rec: RequestRecord) {
+        let mut ring = self.ring.lock().unwrap_or_else(|p| p.into_inner());
+        if ring.len() == RING_CAP {
+            ring.pop_front();
+        }
+        ring.push_back(rec);
+    }
+
+    /// Oldest-first copy of the retained records.
+    pub fn to_vec(&self) -> Vec<RequestRecord> {
+        self.ring
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .iter()
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(i: u64) -> RequestRecord {
+        RequestRecord {
+            app: format!("app{i}"),
+            engine: "exec",
+            version: 3,
+            ok: true,
+            tiles: i,
+            in_words: 0,
+            out_words: 0,
+            cycles: 0,
+            queue_depth: 0,
+            decode_ns: 1,
+            lookup_ns: 2,
+            execute_ns: 3,
+            stitch_ns: 4,
+            respond_ns: 5,
+            total_ns: 15,
+        }
+    }
+
+    #[test]
+    fn ring_is_bounded_and_keeps_newest() {
+        let ring = RecentRing::new();
+        for i in 0..(RING_CAP as u64 + 10) {
+            ring.push(rec(i));
+        }
+        let v = ring.to_vec();
+        assert_eq!(v.len(), RING_CAP);
+        assert_eq!(v[0].tiles, 10); // oldest retained
+        assert_eq!(v.last().unwrap().tiles, RING_CAP as u64 + 9);
+    }
+
+    #[test]
+    fn record_json_shape() {
+        let j = rec(7).to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'), "{j}");
+        for key in [
+            "\"app\":\"app7\"",
+            "\"engine\":\"exec\"",
+            "\"version\":3",
+            "\"ok\":true",
+            "\"tiles\":7",
+            "\"decode_ns\":1",
+            "\"stitch_ns\":4",
+            "\"total_ns\":15",
+        ] {
+            assert!(j.contains(key), "{key} missing from {j}");
+        }
+    }
+}

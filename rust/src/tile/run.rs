@@ -215,7 +215,16 @@ impl TileBatch {
     /// into the reused tile output, scatter into the stitched image.
     /// Returns `false` when the batch failed and the claimant should
     /// stop.
+    ///
+    /// §Telemetry: when serving has sampling on
+    /// ([`crate::telemetry::sampling`]), each successful tile bumps
+    /// `tiles_executed` and records its wall time (gather + engine run
+    /// + scatter) into the `tile_exec` histogram — a handful of atomic
+    /// ops, no allocation, so the zero-allocation steady-state
+    /// contract above holds with sampling on. Off, the hook is one
+    /// relaxed bool load.
     fn step(&self, i: usize, r: &mut EngineRun, scratch: &mut TileScratch) -> bool {
+        let sampled_t0 = crate::telemetry::sampling().then(std::time::Instant::now);
         let slot = &self.plan.tiles[i];
         // A panic inside an engine must not strand the batch: the
         // submitter waits on the finished count, so every claimed
@@ -250,6 +259,11 @@ impl TileBatch {
                 drop(st);
                 if all {
                     self.done.notify_all();
+                }
+                if let Some(t0) = sampled_t0 {
+                    let m = crate::telemetry::metrics();
+                    m.tiles_executed.inc();
+                    m.tile_exec.record_ns(t0.elapsed().as_nanos() as u64);
                 }
                 true
             }

@@ -1,0 +1,252 @@
+//! End-to-end telemetry tests over the wire: spawn the real server on
+//! an ephemeral port, drive data requests through it, then query the
+//! ADMIN_STATS frame (docs/protocol.md) and assert the snapshot deltas
+//! match the work actually performed — request counts, per-stage
+//! histogram counts, tile counters — while the data-path outputs stay
+//! bit-exact.
+//!
+//! The metrics registry is process-global, so every test here takes
+//! `TEST_LOCK` and asserts *deltas* between two over-the-wire
+//! snapshots, never absolute values. Counters are published after the
+//! response bytes (the record is the last thing a request does), so
+//! tests poll until the expected total arrives instead of reading one
+//! snapshot racily.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+
+use pushmem::coordinator::serve::{self, ServeConfig};
+use pushmem::coordinator::CompiledRegistry;
+use pushmem::tensor::Tensor;
+
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+fn spawn_multi_server(registry: Arc<CompiledRegistry>, workers: usize) -> std::net::SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || serve::serve_on(listener, ServeConfig::multi(registry, workers)));
+    addr
+}
+
+fn stats(addr: std::net::SocketAddr) -> String {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    serve::request_stats(&mut stream).unwrap()
+}
+
+/// Poll STATS until `pred` holds (the server records a request *after*
+/// answering it, so the client can observe its response before the
+/// counters move). Panics with the last snapshot on timeout.
+fn stats_until(addr: std::net::SocketAddr, pred: impl Fn(&str) -> bool) -> String {
+    let mut last = String::new();
+    for _ in 0..400 {
+        last = stats(addr);
+        if pred(&last) {
+            return last;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    panic!("stats never converged; last snapshot: {last}");
+}
+
+/// First `"key":<u64>` occurrence. Counter and gauge names are unique
+/// across the snapshot's sections (and both sections precede the
+/// `recent` records, whose keys could otherwise shadow them).
+fn json_u64(json: &str, key: &str) -> u64 {
+    let pat = format!("\"{key}\":");
+    let i = json
+        .find(&pat)
+        .unwrap_or_else(|| panic!("key {key:?} not in snapshot: {json}"));
+    let digits: String =
+        json[i + pat.len()..].chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().unwrap_or_else(|_| panic!("key {key:?} is not a u64 in: {json}"))
+}
+
+/// A numeric field of one named histogram (`count`, `sum_ns`, ...).
+fn hist_u64(json: &str, name: &str, field: &str) -> u64 {
+    let pat = format!("\"{name}\":{{\"count\":");
+    let i = json
+        .find(&pat)
+        .unwrap_or_else(|| panic!("histogram {name:?} not in snapshot: {json}"));
+    let scoped = &json[i..];
+    let end = scoped.find('}').expect("histogram object closes");
+    let fpat = format!("\"{field}\":");
+    let j = scoped[..end]
+        .find(&fpat)
+        .unwrap_or_else(|| panic!("histogram {name:?} has no field {field:?}"));
+    let digits: String =
+        scoped[j + fpat.len()..].chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().unwrap()
+}
+
+/// Distinct deterministic tile `k` for every input box of `c` (same
+/// generator as rust/tests/serve_loopback.rs).
+fn tiles_for(c: &pushmem::coordinator::Compiled, k: i64) -> Vec<Tensor> {
+    c.lp.inputs
+        .iter()
+        .enumerate()
+        .map(|(i, name)| {
+            Tensor::from_fn(c.lp.buffers[name].clone(), |p| {
+                let mut h = 131 * k + 17 * i as i64 + 3;
+                for &v in p {
+                    h = h.wrapping_mul(31).wrapping_add(v + 7);
+                }
+                (h.rem_euclid(253)) as i32
+            })
+        })
+        .collect()
+}
+
+/// The acceptance scenario: two concurrent v3 whole-image requests,
+/// bit-exact responses, then STATS over the wire showing exactly those
+/// two requests in the counters, every per-request stage histogram,
+/// and the tile counters matching the plan's tile count.
+#[test]
+fn stats_deltas_track_concurrent_whole_image_requests() {
+    let _g = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let registry = Arc::new(CompiledRegistry::new());
+    let addr = spawn_multi_server(Arc::clone(&registry), 3);
+    let extent = vec![100i64, 70];
+
+    // Host golden: gaussian lowered at tile = extent.
+    let (mut program, _) = pushmem::apps::by_name("gaussian").unwrap();
+    program.schedule.tile = extent.clone();
+    let lp = pushmem::halide::lower::lower(&program).unwrap();
+    let inputs = pushmem::coordinator::gen_inputs(&lp);
+    let want = lp.execute(&inputs).unwrap()[&lp.output].clone();
+    let ordered: Vec<Tensor> = lp.inputs.iter().map(|n| inputs[n].clone()).collect();
+    let in_words_per_req: u64 = ordered.iter().map(|t| t.data.len() as u64).sum();
+
+    let before = stats(addr);
+    assert!(before.starts_with("{\"schema\":\"pushmem-stats-v1\""), "{before}");
+    let total0 = json_u64(&before, "requests_total");
+
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let (extent, ordered, want) = (&extent, &ordered, &want);
+            handles.push(s.spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                let refs: Vec<&Tensor> = ordered.iter().collect();
+                let (words, cycles, _) =
+                    serve::request_extent(&mut stream, Some("gaussian"), extent, &refs)
+                        .unwrap();
+                assert_eq!(words, want.data, "stitched response != host golden");
+                cycles
+            }));
+        }
+        let c = registry.get("gaussian").unwrap();
+        for h in handles {
+            // The data path stays bit-exact and cycle-identical with
+            // telemetry recording underneath it.
+            assert_eq!(h.join().unwrap() as i64, 4 * c.graph.completion);
+        }
+    });
+
+    let after = stats_until(addr, |j| json_u64(j, "requests_total") >= total0 + 2);
+    let d = |key: &str| json_u64(&after, key) - json_u64(&before, key);
+    let dh = |name: &str| {
+        hist_u64(&after, name, "count") - hist_u64(&before, name, "count")
+    };
+
+    // Exactly the two data requests — STATS queries never count as
+    // requests, and nothing else talked to this process.
+    assert_eq!(d("requests_total"), 2, "before:\n{before}\nafter:\n{after}");
+    assert_eq!(d("requests_ok"), 2);
+    assert_eq!(d("requests_failed"), 0);
+    assert_eq!(d("requests_v3"), 2);
+    assert_eq!(d("words_in"), 2 * in_words_per_req);
+    assert_eq!(d("words_out"), 2 * 100 * 70);
+
+    // Every per-request stage histogram saw both requests.
+    for h in
+        ["stage_decode", "stage_lookup", "stage_execute", "stage_stitch", "stage_respond", "request_total"]
+    {
+        assert_eq!(dh(h), 2, "histogram {h}");
+    }
+    // Stages are disjoint sub-intervals of the request, so their
+    // summed time cannot exceed the end-to-end total.
+    let stage_sum: u64 = ["stage_decode", "stage_lookup", "stage_execute", "stage_stitch", "stage_respond"]
+        .iter()
+        .map(|h| hist_u64(&after, h, "sum_ns") - hist_u64(&before, h, "sum_ns"))
+        .sum();
+    let total_sum =
+        hist_u64(&after, "request_total", "sum_ns") - hist_u64(&before, "request_total", "sum_ns");
+    assert!(stage_sum <= total_sum, "stage sum {stage_sum} > total {total_sum}");
+
+    // Tile accounting matches the plan: 100x70 on the 62-tile design
+    // clamps to 2x2 tiles per image.
+    let c = registry.get("gaussian").unwrap();
+    let tiles_per_req = c.tile_plan(&extent).unwrap().tile_count() as u64;
+    assert_eq!(tiles_per_req, 4);
+    assert_eq!(d("tiles_served"), 2 * tiles_per_req);
+    assert_eq!(d("tiles_executed"), 2 * tiles_per_req);
+    assert_eq!(dh("tile_exec"), 2 * tiles_per_req);
+
+    // The exec hot-path hooks fired while sampling was on.
+    assert!(d("exec_kernels") > 0, "exec dispatch hook never fired");
+    assert!(
+        d("exec_points_vector") + d("exec_points_scalar") > 0,
+        "lane-engagement counters never moved"
+    );
+    assert!(d("exec_threads_used") > 0);
+
+    // Wire-level STATS bookkeeping and pool gauges.
+    assert!(d("stats_requests") >= 1);
+    assert!(d("connections_opened") >= 2);
+    assert_eq!(json_u64(&after, "workers_total"), 3);
+
+    // The recent-request ring carries the served records.
+    assert!(after.contains("\"recent\":["), "{after}");
+    assert!(after.contains("\"app\":\"gaussian\""), "{after}");
+    assert!(after.contains("\"ok\":true"), "{after}");
+}
+
+/// Fixed-box requests and failures: ok/failed split, per-version
+/// counters, and one tile per fixed-box request — all observable over
+/// the wire, with error responses still answered as status frames.
+#[test]
+fn stats_count_fixed_box_requests_and_failures() {
+    let _g = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let registry = Arc::new(CompiledRegistry::new());
+    let addr = spawn_multi_server(Arc::clone(&registry), 1);
+    let c = registry.get("gaussian").unwrap();
+
+    let before = stats(addr);
+    let total0 = json_u64(&before, "requests_total");
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    for k in 0..3 {
+        let tiles = tiles_for(&c, k);
+        let refs: Vec<&Tensor> = tiles.iter().collect();
+        let (words, cycles, _) = serve::request_app(&mut stream, "gaussian", &refs).unwrap();
+        assert_eq!(words.len(), c.lp.buffers[&c.lp.output].cardinality() as usize);
+        assert_eq!(cycles as i64, c.graph.completion, "tile {k}");
+    }
+    // Unknown app: an error status frame, recorded as a failed request.
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let t = Tensor::from_data(pushmem::poly::BoxSet::from_extents(&[4]), vec![1, 2, 3, 4]);
+        let err = serve::request_app(&mut s, "not_an_app", &[&t]).unwrap_err();
+        assert!(err.to_string().contains("status 1"), "{err:#}");
+    }
+
+    let after = stats_until(addr, |j| json_u64(j, "requests_total") >= total0 + 4);
+    let d = |key: &str| json_u64(&after, key) - json_u64(&before, key);
+
+    assert_eq!(d("requests_total"), 4, "before:\n{before}\nafter:\n{after}");
+    assert_eq!(d("requests_ok"), 3);
+    assert_eq!(d("requests_failed"), 1);
+    // All four frames were v2 (named-app), counted whether or not they
+    // succeeded; the failure contributes no stage-histogram samples.
+    assert_eq!(d("requests_v2"), 4);
+    assert_eq!(d("requests_v3"), 0);
+    let dh = |name: &str| {
+        hist_u64(&after, name, "count") - hist_u64(&before, name, "count")
+    };
+    assert_eq!(dh("request_total"), 3);
+    // Fixed-box requests are one tile each.
+    assert_eq!(d("tiles_served"), 3);
+    // The failed record is visible in the ring.
+    assert!(after.contains("\"ok\":false"), "{after}");
+    assert!(after.contains("\"app\":\"not_an_app\""), "{after}");
+}

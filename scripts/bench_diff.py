@@ -1,0 +1,133 @@
+#!/usr/bin/env python3
+"""Threshold-based diff of two bench/telemetry JSON files.
+
+Compares the numeric leaves of two JSON documents — typically two
+``BENCH_serve.json`` runs (which embed a telemetry snapshot, see
+docs/observability.md) or two ``--metrics-json`` dumps — and reports
+relative changes by dotted key path::
+
+    python3 scripts/bench_diff.py OLD.json NEW.json [--threshold 0.10]
+        [--fail-on-regression] [--all]
+
+Throughput-shaped metrics (``*_per_s``, ``*_speedup``, ``*_rps``) are
+treated as higher-is-better; with ``--fail-on-regression`` the script
+exits 1 when any of them drops by more than the threshold, which is
+what CI wants for a perf gate. Every other numeric key is informational
+only (counters grow with work done, so direction is meaningless).
+
+Stdlib only; importable (``flatten`` / ``diff`` / ``main``) so
+python/tests/test_bench_diff.py can pin the behavior.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# Keys whose value dropping is a regression (dotted-path suffix match).
+HIGHER_IS_BETTER = ("_per_s", "_speedup", "_rps")
+
+
+def flatten(obj, prefix: str = "") -> dict:
+    """Numeric leaves of a nested JSON value, keyed by dotted path.
+    Lists index as ``path.N``; bools and strings are skipped."""
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(flatten(v, f"{prefix}.{k}" if prefix else k))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            out.update(flatten(v, f"{prefix}.{i}" if prefix else str(i)))
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        out[prefix] = float(obj)
+    return out
+
+
+def is_higher_better(path: str) -> bool:
+    leaf = path.rsplit(".", 1)[-1]
+    return leaf.endswith(HIGHER_IS_BETTER)
+
+
+def diff(old, new, threshold: float):
+    """One record per numeric key present in either document:
+    ``(path, old, new, rel_change, verdict)`` where ``rel_change`` is
+    ``(new - old) / |old|`` (``None`` when the key is one-sided or the
+    old value is 0) and verdict is ``same``/``changed``/``regressed``/
+    ``added``/``removed``. Only higher-is-better keys can regress."""
+    fo, fn = flatten(old), flatten(new)
+    records = []
+    for path in sorted(set(fo) | set(fn)):
+        if path not in fn:
+            records.append((path, fo[path], None, None, "removed"))
+            continue
+        if path not in fo:
+            records.append((path, None, fn[path], None, "added"))
+            continue
+        a, b = fo[path], fn[path]
+        if a == 0:
+            rel = None
+            verdict = "same" if b == 0 else "changed"
+        else:
+            rel = (b - a) / abs(a)
+            if abs(rel) <= threshold:
+                verdict = "same"
+            elif rel < 0 and is_higher_better(path):
+                verdict = "regressed"
+            else:
+                verdict = "changed"
+        records.append((path, a, b, rel, verdict))
+    return records
+
+
+def format_record(rec) -> str:
+    path, a, b, rel, verdict = rec
+    pct = f"{rel * 100:+.1f}%" if rel is not None else "n/a"
+    return f"{verdict:<10} {path:<60} {a!s:>14} -> {b!s:>14}  {pct}"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("old", help="baseline JSON file")
+    ap.add_argument("new", help="candidate JSON file")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.10,
+        help="relative change below this is noise (default 0.10 = 10%%)",
+    )
+    ap.add_argument(
+        "--fail-on-regression",
+        action="store_true",
+        help="exit 1 if any higher-is-better metric drops past the threshold",
+    )
+    ap.add_argument(
+        "--all",
+        action="store_true",
+        help="print unchanged keys too (default: only changes)",
+    )
+    args = ap.parse_args(argv)
+
+    with open(args.old, encoding="utf-8") as f:
+        old = json.load(f)
+    with open(args.new, encoding="utf-8") as f:
+        new = json.load(f)
+
+    records = diff(old, new, args.threshold)
+    regressions = [r for r in records if r[4] == "regressed"]
+    shown = 0
+    for rec in records:
+        if args.all or rec[4] != "same":
+            print(format_record(rec))
+            shown += 1
+    print(
+        f"{len(records)} keys compared, {shown} shown, "
+        f"{len(regressions)} regression(s) past {args.threshold:.0%}"
+    )
+    if regressions and args.fail_on_regression:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
