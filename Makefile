@@ -18,8 +18,12 @@
 # `make metrics-smoke` starts a real server, pushes one request through
 # the Python client, queries telemetry over the wire (`pushmem stats`)
 # and checks the --metrics-json dump (docs/observability.md).
+# `make serve-stress-smoke` fires 100 concurrent short-lived clients at
+# a real server: every client must end with OK or STATUS_BUSY — never a
+# hang — and the final stats must reconcile every rejection and accept
+# (docs/serving.md).
 
-.PHONY: artifacts verify tune-smoke validate-all sim-bench bench-json fuzz-smoke metrics-smoke clean
+.PHONY: artifacts verify tune-smoke validate-all sim-bench bench-json fuzz-smoke metrics-smoke serve-stress-smoke clean
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -41,6 +45,9 @@ fuzz-smoke:
 
 metrics-smoke:
 	bash scripts/metrics_smoke.sh
+
+serve-stress-smoke:
+	bash scripts/serve_stress.sh
 
 bench-json:
 	SIM_BENCH_QUICK=1 cargo bench --bench serve_throughput

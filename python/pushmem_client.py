@@ -13,6 +13,11 @@ rust/src/coordinator/protocol.rs):
   telemetry snapshot as JSON (``PushmemClient.stats()``,
   docs/observability.md)
 
+A saturated server refuses admission with ``STATUS_BUSY`` plus a
+``retry_after_ms`` hint instead of hanging; that surfaces here as
+``ServerBusy`` and ``request(..., retries=N)`` opts into bounded
+automatic retry (docs/serving.md).
+
 Only the standard library (socket + struct) is used, so this module
 imports cleanly without jax/numpy — it is the deploy-side counterpart
 of the build-time golden-model code under python/compile/.
@@ -30,8 +35,10 @@ Usage::
 from __future__ import annotations
 
 import json
+import re
 import socket
 import struct
+import time
 
 MAGIC = 0x50554222
 VERSION2 = 0xFFFF0002
@@ -42,6 +49,7 @@ STATUS_OK = 0
 STATUS_UNKNOWN_APP = 1
 STATUS_BAD_REQUEST = 2
 STATUS_INTERNAL = 3
+STATUS_BUSY = 4
 
 MAX_INPUTS = 64
 MAX_APP_NAME = 64
@@ -54,6 +62,7 @@ _STATUS_NAMES = {
     STATUS_UNKNOWN_APP: "unknown app",
     STATUS_BAD_REQUEST: "bad request",
     STATUS_INTERNAL: "internal server error",
+    STATUS_BUSY: "server busy",
 }
 
 
@@ -78,6 +87,24 @@ class ServerError(Exception):
         if detail:
             msg += f": {detail}"
         super().__init__(msg)
+
+
+class ServerBusy(ServerError):
+    """The server declined admission (``STATUS_BUSY``): every worker
+    was busy and the job queue was full (docs/serving.md).
+
+    ``retry_after_ms`` is the server's backpressure hint, parsed from
+    the machine-readable detail form ``busy: retry_after_ms=<N>``, or
+    ``None`` when absent/malformed (callers should then use their own
+    backoff). The server closes the connection after the busy frame,
+    so retrying needs a fresh connection —
+    ``PushmemClient.request(..., retries=N)`` does both automatically.
+    """
+
+    def __init__(self, detail: str = ""):
+        m = re.search(r"retry_after_ms=(\d+)", detail)
+        self.retry_after_ms = int(m.group(1)) if m else None
+        super().__init__(STATUS_BUSY, detail)
 
 
 def decode_detail(words) -> str:
@@ -182,7 +209,26 @@ class PushmemClient:
     sequential requests, v1 and v2 freely interleaved."""
 
     def __init__(self, host: str = "127.0.0.1", port: int = 7411, timeout: float | None = 30.0):
+        self._addr = (host, port)
+        self._timeout = timeout
         self.sock = socket.create_connection((host, port), timeout=timeout)
+
+    def _reconnect(self) -> None:
+        """Fresh connection to the same endpoint — needed after any
+        non-OK status (the server closes the connection), which is how
+        a busy retry gets back in the accept queue."""
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+        self.sock = socket.create_connection(self._addr, timeout=self._timeout)
+
+    @staticmethod
+    def _raise_status(status: int, words) -> None:
+        detail = decode_detail(words)
+        if status == STATUS_BUSY:
+            raise ServerBusy(detail)
+        raise ServerError(status, detail)
 
     def _recv_exact(self, n: int) -> bytes:
         chunks = []
@@ -195,7 +241,22 @@ class PushmemClient:
             remaining -= len(chunk)
         return b"".join(chunks)
 
-    def request(self, inputs, app: str | None = None, extent=None):
+    def _roundtrip(self, frame: bytes):
+        """Send one encoded frame, read one response; returns
+        ``(status, words, cycles, micros)`` without raising on non-OK
+        statuses (the callers decide)."""
+        self.sock.sendall(frame)
+        header = self._recv_exact(12)
+        magic, status, word_count = struct.unpack("<III", header)
+        if magic != MAGIC:
+            raise ProtocolError(f"bad response magic {magic:#010x}")
+        if word_count > MAX_WORDS:
+            raise ProtocolError(f"response word count {word_count} exceeds cap {MAX_WORDS}")
+        body = self._recv_exact(4 * word_count + 16)
+        _, words, cycles, micros, _ = decode_response(header + body)
+        return status, words, cycles, micros
+
+    def request(self, inputs, app: str | None = None, extent=None, retries: int = 0):
         """Send one request; returns ``(words, cycles, micros)``.
 
         ``inputs`` is a list of row-major i32 word lists, one per
@@ -206,6 +267,13 @@ class PushmemClient:
         inputs are whole images over the halo-grown boxes for that
         output extent, and the response is the stitched whole-image
         output (docs/tiling.md).
+
+        A saturated server answers ``STATUS_BUSY`` with a retry hint,
+        raised here as ``ServerBusy``. ``retries`` bounds automatic
+        retry: up to that many additional attempts, each sleeping the
+        server's ``retry_after_ms`` hint (25 ms when absent) and
+        reconnecting first (the server closes after a busy frame).
+        The final attempt's ``ServerBusy`` propagates.
         """
         if extent is not None:
             frame = encode_request_v3(app, extent, inputs)
@@ -213,18 +281,17 @@ class PushmemClient:
             frame = encode_request_v1(inputs)
         else:
             frame = encode_request_v2(app, inputs)
-        self.sock.sendall(frame)
-        header = self._recv_exact(12)
-        magic, status, word_count = struct.unpack("<III", header)
-        if magic != MAGIC:
-            raise ProtocolError(f"bad response magic {magic:#010x}")
-        if word_count > MAX_WORDS:
-            raise ProtocolError(f"response word count {word_count} exceeds cap {MAX_WORDS}")
-        body = self._recv_exact(4 * word_count + 16)
-        _, words, cycles, micros, _ = decode_response(header + body)
-        if status != STATUS_OK:
-            raise ServerError(status, decode_detail(words))
-        return words, cycles, micros
+        remaining = retries
+        while True:
+            status, words, cycles, micros = self._roundtrip(frame)
+            if status == STATUS_OK:
+                return words, cycles, micros
+            if status != STATUS_BUSY or remaining <= 0:
+                self._raise_status(status, words)
+            remaining -= 1
+            hint_ms = ServerBusy(decode_detail(words)).retry_after_ms
+            time.sleep((hint_ms if hint_ms is not None else 25) / 1000.0)
+            self._reconnect()
 
     def stats(self) -> dict:
         """Query the server's telemetry snapshot (``pushmem stats`` in
@@ -243,7 +310,7 @@ class PushmemClient:
         body = self._recv_exact(4 * word_count + 16)
         _, words, _, _, _ = decode_response(header + body)
         if status != STATUS_OK:
-            raise ServerError(status, decode_detail(words))
+            self._raise_status(status, words)
         return json.loads(decode_detail(words))
 
     def close(self) -> None:

@@ -18,9 +18,11 @@ from pushmem_client import (  # noqa: E402
     MAX_INPUTS,
     MAX_RANK,
     MAX_WORDS,
+    STATUS_BUSY,
     VERSION2,
     VERSION3,
     ProtocolError,
+    ServerBusy,
     ServerError,
     decode_detail,
     decode_response,
@@ -232,6 +234,112 @@ def test_stats_response_payload_decodes_like_detail():
     assert (cycles, micros) == (0, 0)
     assert consumed == len(body)
     assert decode_detail(got_words) == snapshot
+
+
+def _pack_detail_words(payload: bytes):
+    payload += b"\x00" * (-len(payload) % 4)
+    return list(struct.unpack(f"<{len(payload) // 4}i", payload))
+
+
+def _busy_frame(retry_ms: int) -> bytes:
+    """The server's admission rejection, byte for byte: an error
+    response with status ``STATUS_BUSY`` whose detail words pack
+    ``busy: retry_after_ms=<N>`` (docs/protocol.md)."""
+    words = _pack_detail_words(f"busy: retry_after_ms={retry_ms}".encode("utf-8"))
+    return (
+        struct.pack("<III", MAGIC, STATUS_BUSY, len(words))
+        + struct.pack(f"<{len(words)}i", *words)
+        + struct.pack("<QQ", 0, 0)
+    )
+
+
+def test_busy_frame_golden_bytes_and_hint_parse():
+    # Spec-pinned: status word 4, detail "busy: retry_after_ms=250"
+    # (24 bytes -> 6 words), zeroed timings.
+    frame = _busy_frame(250)
+    assert frame[4:8] == struct.pack("<I", 4)
+    status, words, cycles, micros, consumed = decode_response(frame)
+    assert status == STATUS_BUSY
+    assert (cycles, micros) == (0, 0)
+    assert consumed == len(frame)
+    detail = decode_detail(words)
+    assert detail == "busy: retry_after_ms=250"
+
+    err = ServerBusy(detail)
+    assert isinstance(err, ServerError)
+    assert err.status == STATUS_BUSY
+    assert err.retry_after_ms == 250
+    assert "server busy" in str(err)
+    # Absent or malformed hints parse to None, never raise.
+    assert ServerBusy("busy").retry_after_ms is None
+    assert ServerBusy("retry_after_ms=x9").retry_after_ms is None
+
+
+def _busy_standin_server(responses):
+    """A stdlib stand-in server: accept one connection per canned
+    response, read the request frame, answer the response, close —
+    the server-closes-after-non-OK behavior docs/protocol.md pins."""
+    import socket
+    import threading
+
+    srv = socket.socket()
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(len(responses))
+    port = srv.getsockname()[1]
+    seen = []
+
+    def serve():
+        for resp in responses:
+            conn, _ = srv.accept()
+            with conn:
+                seen.append(conn.recv(65536))
+                conn.sendall(resp)
+
+    t = threading.Thread(target=serve)
+    t.start()
+    return srv, port, seen, t
+
+
+def test_client_busy_then_retry_succeeds_loopback():
+    """``request(..., retries=1)``: first attempt refused with a busy
+    frame, the client sleeps the hint, reconnects, resends the exact
+    same frame, and returns the second attempt's OK response."""
+    from pushmem_client import PushmemClient
+
+    ok = (
+        struct.pack("<III", MAGIC, 0, 2)
+        + struct.pack("<2i", 10, 20)
+        + struct.pack("<QQ", 5, 6)
+    )
+    srv, port, seen, t = _busy_standin_server([_busy_frame(1), ok])
+    try:
+        with PushmemClient(port=port, timeout=10.0) as c:
+            words, cycles, micros = c.request([[1, 2, 3]], app="gaussian", retries=1)
+    finally:
+        t.join(timeout=10)
+        srv.close()
+    assert (words, cycles, micros) == ([10, 20], 5, 6)
+    # Both attempts carried the identical v2 frame.
+    want = encode_request_v2("gaussian", [[1, 2, 3]])
+    assert seen == [want, want]
+
+
+def test_client_busy_exhausted_raises_server_busy():
+    """With no retries left the final busy frame surfaces as
+    ``ServerBusy`` carrying the parsed hint."""
+    from pushmem_client import PushmemClient
+
+    srv, port, seen, t = _busy_standin_server([_busy_frame(7), _busy_frame(7)])
+    try:
+        with PushmemClient(port=port, timeout=10.0) as c:
+            with pytest.raises(ServerBusy) as ei:
+                c.request([[42]], retries=1)
+    finally:
+        t.join(timeout=10)
+        srv.close()
+    assert ei.value.status == STATUS_BUSY
+    assert ei.value.retry_after_ms == 7
+    assert len(seen) == 2  # one original attempt + one retry, no more
 
 
 def test_client_stats_loopback():

@@ -10,6 +10,9 @@
 //! speedup. §1 isolates the older plan/run split (fresh sim setup per
 //! request vs cached plan). §2 runs N concurrent clients against the
 //! real server, which serves from the functional engine by default.
+//! §3 measures tiled whole-image serving (docs/tiling.md) and §4 the
+//! cross-request scheduler: M concurrent image clients vs the same
+//! total issued one-at-a-time (docs/serving.md).
 //!
 //! Results are also written machine-readably to `BENCH_serve.json`
 //! (the perf trajectory file `make bench-json` refreshes in CI).
@@ -275,6 +278,53 @@ fn main() {
          {scalar_tiles_per_s:.1} tiles/s ({hot_path_speedup:.2}x)"
     );
 
+    // --- §4 Concurrent image clients (docs/serving.md) --------------
+    // The traffic-engine scenario: M clients firing the same
+    // whole-image request at once. The shared tile scheduler
+    // interleaves their batches across one worker pool (and one
+    // warmed plan/runner per design), so concurrent aggregate req/s
+    // should beat the same total issued one-at-a-time.
+    let conc_clients: usize = if quick { 2 } else { 4 };
+    let conc_reps: usize = if quick { 2 } else { 5 };
+    let total_images = conc_clients * conc_reps;
+
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..conc_clients {
+            let (refs, extent) = (&image_tensors, &extent);
+            s.spawn(move || {
+                let refs: Vec<&Tensor> = refs.iter().collect();
+                let mut stream = TcpStream::connect(addr).unwrap();
+                for _ in 0..conc_reps {
+                    let (words, _, _) =
+                        serve::request_extent(&mut stream, Some(APP), extent, &refs).unwrap();
+                    assert_eq!(words.len() as i64, extent.iter().product::<i64>());
+                }
+            });
+        }
+    });
+    let conc_image_rps = total_images as f64 / t0.elapsed().as_secs_f64();
+
+    // Isolated baseline: the same total images, one at a time on one
+    // connection (no cross-request scheduling possible).
+    let t0 = Instant::now();
+    {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        for _ in 0..total_images {
+            let (words, _, _) =
+                serve::request_extent(&mut stream, Some(APP), &extent, &refs).unwrap();
+            assert_eq!(words.len() as i64, extent.iter().product::<i64>());
+        }
+    }
+    let serial_image_rps = total_images as f64 / t0.elapsed().as_secs_f64();
+    let coalesced_speedup = conc_image_rps / serial_image_rps;
+
+    println!(
+        "concurrent images: {conc_clients} clients x {conc_reps} reqs: \
+         {conc_image_rps:.2} image/s concurrent vs {serial_image_rps:.2} image/s \
+         isolated ({coalesced_speedup:.2}x coalesced-vs-isolated)"
+    );
+
     harness::write_bench_json(
         "BENCH_serve.json",
         &harness::Json::obj()
@@ -303,6 +353,16 @@ fn main() {
                     .num("vector_vs_scalar_speedup", hot_path_speedup)
                     .num("image_req_per_s", image_rps)
                     .num("tcp_image_req_per_s", tcp_image_rps)
+                    .end(),
+            )
+            .raw(
+                "concurrent",
+                &harness::Json::obj()
+                    .int("clients", conc_clients as i64)
+                    .int("reqs_per_client", conc_reps as i64)
+                    .num("concurrent_image_req_per_s", conc_image_rps)
+                    .num("serial_image_req_per_s", serial_image_rps)
+                    .num("coalesced_vs_isolated_speedup", coalesced_speedup)
                     .end(),
             )
             // Point-in-time server telemetry (docs/observability.md):

@@ -71,21 +71,27 @@ impl Compiled {
 
     /// The tiling plan decomposing `extent` onto this fixed design,
     /// built on first use and cached per extent (docs/tiling.md).
-    /// Racing first calls may build twice; the first result wins the
-    /// cache and both are valid. The cache is bounded
-    /// ([`TILE_PLAN_CACHE_CAP`]) so hostile extent-cycling cannot
-    /// grow server memory.
+    /// **Single-flight**: the build runs under the cache lock, so
+    /// racing first calls for one extent build exactly once — the
+    /// losers block for the few bounds-inference runs a build costs
+    /// and then share the winner's `Arc`. That is what makes
+    /// `tile_plan_builds` an exact coalescing observable: M
+    /// concurrent same-extent requests move it by 1. The cache is
+    /// bounded ([`TILE_PLAN_CACHE_CAP`]) so hostile extent-cycling
+    /// cannot grow server memory.
     pub fn tile_plan(&self, extent: &[i64]) -> Result<Arc<TilePlan>> {
-        if let Some(p) = self.tile_plans.lock().unwrap().get(extent) {
+        let mut plans = self.tile_plans.lock().unwrap();
+        if let Some(p) = plans.get(extent) {
             return Ok(Arc::clone(p));
         }
         let built = Arc::new(TilePlan::build(self, extent)?);
-        let mut plans = self.tile_plans.lock().unwrap();
-        while plans.len() >= TILE_PLAN_CACHE_CAP && !plans.contains_key(extent) {
+        crate::telemetry::metrics().tile_plan_builds.inc();
+        while plans.len() >= TILE_PLAN_CACHE_CAP {
             let first = plans.keys().next().cloned().expect("non-empty map");
             plans.remove(&first);
         }
-        Ok(Arc::clone(plans.entry(extent.to_vec()).or_insert(built)))
+        plans.insert(extent.to_vec(), Arc::clone(&built));
+        Ok(built)
     }
 
     /// The design's [`SimPlan`], built once on first use and shared by

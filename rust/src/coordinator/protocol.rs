@@ -65,6 +65,13 @@ pub const STATUS_UNKNOWN_APP: u32 = 1;
 pub const STATUS_BAD_REQUEST: u32 = 2;
 /// Simulation failed server-side.
 pub const STATUS_INTERNAL: u32 = 3;
+/// The server declined admission: every worker is busy and the job
+/// queue is full. The packed detail carries a machine-parseable
+/// `retry_after_ms` hint ([`encode_busy`] / [`busy_retry_after_ms`])
+/// sized from the live queue depth and tile backlog, so clients can
+/// back off instead of hanging (docs/serving.md). Like every non-OK
+/// status, the server closes the connection after sending it.
+pub const STATUS_BUSY: u32 = 4;
 
 /// Caps that keep one malformed length word from allocating
 /// gigabytes. Generous: the paper-scale apps use ≤ 5 inputs and
@@ -100,6 +107,45 @@ pub struct Request {
     pub app: Option<String>,
     pub extent: Option<Vec<i64>>,
     pub inputs: Vec<Vec<i32>>,
+}
+
+/// A borrowed view of a request frame: the same structural decode as
+/// [`decode_request`] — identical validation, caps, and consumed-byte
+/// count — but input payloads stay in the frame buffer as byte ranges
+/// instead of being converted into owned `Vec<i32>`s. The tile path
+/// gathers straight from these ranges into per-tile scratch
+/// ([`crate::tile::ImageSource`]), so a whole-image payload is copied
+/// once (frame → scratch) instead of twice (frame → Vec → scratch).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestView<'a> {
+    pub app: Option<&'a str>,
+    pub extent: Option<Vec<i64>>,
+    pub inputs: Vec<WordsRange>,
+}
+
+/// One input payload inside a request frame: `words` little-endian
+/// i32 words starting at byte offset `byte_off`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WordsRange {
+    pub byte_off: usize,
+    pub words: usize,
+}
+
+impl WordsRange {
+    /// The payload bytes within `frame` (the buffer the view was
+    /// decoded from).
+    pub fn bytes<'a>(&self, frame: &'a [u8]) -> &'a [u8] {
+        &frame[self.byte_off..self.byte_off + 4 * self.words]
+    }
+
+    /// Materialize the words — the bridge back to the owned
+    /// [`Request`] shape where zero-copy doesn't apply.
+    pub fn to_vec(&self, frame: &[u8]) -> Vec<i32> {
+        self.bytes(frame)
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
 }
 
 /// Any inbound frame: a data request (v1/v2/v3) or an admin `STATS`
@@ -380,6 +426,49 @@ pub fn decode_request(buf: &[u8]) -> Result<(Request, usize), FrameError> {
     Ok((Request { app, extent, inputs }, c.pos))
 }
 
+/// Decode one request frame from the front of `buf` without copying
+/// input payloads: the borrowing counterpart of [`decode_request`].
+/// Identical header validation and caps; each input is returned as a
+/// [`WordsRange`] into `buf`. Pinned against [`decode_request`] by
+/// `view_agrees_with_owned_decode` below.
+pub fn decode_request_view(buf: &[u8]) -> Result<(RequestView<'_>, usize), FrameError> {
+    let mut c = Cur::new(buf);
+    let magic = c.u32()?;
+    if magic != MAGIC {
+        return Err(FrameError::BadMagic(magic));
+    }
+    let word2 = c.u32()?;
+    let (app, extent, n_inputs) = if word2 == VERSION2 {
+        let name = std::str::from_utf8(skip_name(&mut c)?).map_err(|_| FrameError::BadAppName)?;
+        (Some(name), None, c.u32()?)
+    } else if word2 == VERSION3 {
+        let name = std::str::from_utf8(skip_name(&mut c)?).map_err(|_| FrameError::BadAppName)?;
+        let app = (!name.is_empty()).then_some(name);
+        (app, Some(read_extent(&mut c)?), c.u32()?)
+    } else {
+        (None, None, word2)
+    };
+    if n_inputs > MAX_INPUTS {
+        return Err(FrameError::TooLarge { what: "input count", got: n_inputs, max: MAX_INPUTS });
+    }
+    let mut inputs = Vec::with_capacity(n_inputs as usize);
+    let mut total: u64 = 0;
+    for _ in 0..n_inputs {
+        let wc = c.u32()?;
+        if wc > MAX_WORDS {
+            return Err(FrameError::TooLarge { what: "input word count", got: wc, max: MAX_WORDS });
+        }
+        total += wc as u64;
+        if total > MAX_FRAME_WORDS as u64 {
+            return Err(FrameError::TooLarge { what: "frame word total", got: total.min(u32::MAX as u64) as u32, max: MAX_FRAME_WORDS });
+        }
+        let byte_off = c.pos;
+        c.take(wc as usize * 4)?;
+        inputs.push(WordsRange { byte_off, words: wc as usize });
+    }
+    Ok((RequestView { app, extent, inputs }, c.pos))
+}
+
 /// Decode one inbound frame — data request or admin `STATS` — from
 /// the front of `buf`; returns the frame and the bytes consumed.
 /// Same totality contract as [`decode_request`]: short buffers yield
@@ -525,6 +614,23 @@ pub fn encode_error_detail(status: u32, detail: &str) -> Vec<u8> {
         cycles: 0,
         micros: 0,
     })
+}
+
+/// Encode a [`STATUS_BUSY`] admission rejection. The retry hint rides
+/// in the packed-detail words in the fixed machine-parseable form
+/// `busy: retry_after_ms=<N>` ([`busy_retry_after_ms`] is the
+/// matching parser; the Python client mirrors it in `ServerBusy`).
+pub fn encode_busy(retry_after_ms: u64) -> Vec<u8> {
+    encode_error_detail(STATUS_BUSY, &format!("busy: retry_after_ms={retry_after_ms}"))
+}
+
+/// Parse the `retry_after_ms` hint out of a [`STATUS_BUSY`] detail
+/// string. `None` if the marker is absent or malformed — a client
+/// should then fall back to its own backoff.
+pub fn busy_retry_after_ms(detail: &str) -> Option<u64> {
+    let rest = detail.split("retry_after_ms=").nth(1)?;
+    let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().ok()
 }
 
 /// Decode one response frame from the front of `buf`; returns the
@@ -961,6 +1067,60 @@ mod tests {
         let bytes = encode_response(&resp);
         assert_eq!(response_frame_len(&bytes).unwrap(), bytes.len());
         assert_eq!(response_frame_len(&bytes[..12]).unwrap(), bytes.len());
+    }
+
+    /// The borrowing decode must agree with the owned decode on every
+    /// generation: same app/extent, same consumed count, and ranges
+    /// that materialize to the same words. Truncation behaviour is
+    /// identical too.
+    #[test]
+    fn view_agrees_with_owned_decode() {
+        for req in [req_v1(), req_v2(), req_v3()] {
+            let bytes = encode_request(&req);
+            let (owned, used) = decode_request(&bytes).unwrap();
+            let (view, vused) = decode_request_view(&bytes).unwrap();
+            assert_eq!(vused, used);
+            assert_eq!(view.app.map(str::to_string), owned.app);
+            assert_eq!(view.extent, owned.extent);
+            assert_eq!(view.inputs.len(), owned.inputs.len());
+            for (r, w) in view.inputs.iter().zip(&owned.inputs) {
+                assert_eq!(&r.to_vec(&bytes), w);
+                assert_eq!(r.bytes(&bytes).len(), 4 * w.len());
+            }
+            for cut in 0..bytes.len() {
+                assert_eq!(
+                    decode_request_view(&bytes[..cut]).unwrap_err(),
+                    decode_request(&bytes[..cut]).unwrap_err(),
+                    "cut {cut}"
+                );
+            }
+        }
+        // Cap violations surface identically.
+        let mut out = Vec::new();
+        super::put_u32(&mut out, MAGIC);
+        super::put_u32(&mut out, 1);
+        super::put_u32(&mut out, MAX_WORDS + 1);
+        assert_eq!(decode_request_view(&out).unwrap_err(), decode_request(&out).unwrap_err());
+    }
+
+    /// STATUS_BUSY admission rejections: frame shape, the packed
+    /// retry hint round-trip, and the parser's failure modes.
+    #[test]
+    fn busy_frame_round_trip() {
+        let frame = encode_busy(250);
+        let (resp, used) = decode_response(&frame).unwrap();
+        assert_eq!(used, frame.len());
+        assert_eq!(resp.status, STATUS_BUSY);
+        assert_eq!((resp.cycles, resp.micros), (0, 0));
+        let detail = detail_from_words(&resp.words);
+        assert_eq!(detail, "busy: retry_after_ms=250");
+        assert_eq!(busy_retry_after_ms(&detail), Some(250));
+
+        assert_eq!(busy_retry_after_ms("busy: retry_after_ms=0"), Some(0));
+        assert_eq!(busy_retry_after_ms("retry_after_ms=17 trailing"), Some(17));
+        assert_eq!(busy_retry_after_ms("busy"), None);
+        assert_eq!(busy_retry_after_ms("retry_after_ms="), None);
+        assert_eq!(busy_retry_after_ms("retry_after_ms=x9"), None);
     }
 
     /// Back-to-back frames in one buffer decode independently via the

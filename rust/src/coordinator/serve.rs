@@ -16,12 +16,23 @@
 //!
 //! The worker pool drains a queue of [`Job`]s, not raw connections: a
 //! connection occupies one worker for its lifetime as before, but a
-//! v3 request also posts its [`TileBatch`] back onto the queue, so
-//! **idle** workers join the tile drain and one large request
-//! saturates the pool. Progress never depends on recruitment — the
-//! posting worker drains unclaimed tiles itself (see
-//! [`crate::tile::run`]), so a pool full of busy connections degrades
-//! to in-connection execution, never deadlock.
+//! v3 request also registers its [`TileBatch`] with the server's
+//! shared [`TileScheduler`] and posts wake-up tokens, so **idle**
+//! workers join a *cross-request* tile drain: claims are weighted
+//! round-robin across every in-flight batch (oldest first), so N
+//! concurrent whole-image requests interleave fairly instead of
+//! serializing behind the largest one. Progress never depends on
+//! recruitment — the submitting worker drains through the same
+//! scheduler until its own batch completes (see [`crate::tile::run`]),
+//! so a pool full of busy connections degrades to in-connection
+//! execution, never deadlock.
+//!
+//! Admission is bounded end to end: the listener is shared across K
+//! acceptor shards (`PUSHMEM_ACCEPT_SHARDS`, default 2), and when the
+//! job queue is full an acceptor answers [`protocol::STATUS_BUSY`]
+//! with a `retry_after_ms` hint derived from the live queue depth and
+//! tile backlog, then closes — a saturated server is loud and fast,
+//! never a silent hang (docs/serving.md, DESIGN.md §2).
 //!
 //! Every request is measured: the serving path records one
 //! [`RequestRecord`] span per request — stage timings (accept-wait →
@@ -53,26 +64,28 @@ use anyhow::{bail, Context, Result};
 use super::driver::{Compiled, CompiledRegistry};
 use super::protocol::{self, FrameError, Request, Response};
 use crate::exec::{Engine, EngineRun};
-use crate::telemetry::{self, log, RequestRecord};
+use crate::telemetry::{self, log, RequestRecord, MAX_ACCEPT_SHARDS};
 use crate::tensor::Tensor;
-use crate::tile::{TileBatch, TileScratch};
+use crate::tile::{TileBatch, TileScheduler, TileScratch};
 
 pub use super::protocol::MAGIC;
 
 /// What the pool's workers drain: whole connections (held until the
-/// peer disconnects) and tile batches posted by v3 requests in flight
-/// on *other* workers (drained cooperatively, returning the worker to
-/// the queue when the batch's claims run out). Batch jobs hold a
-/// `Weak` handle: a job that sits queued past its request's lifetime
-/// (every worker was busy) must not pin the request's whole-image
-/// inputs and per-tile outputs in memory — the submitting connection
-/// owns the only strong reference, and a stale job upgrades to
-/// nothing. Connection jobs carry their enqueue time so the pool can
-/// histogram accept-wait (time queued before a worker picked the
+/// peer disconnects) and `Drain` wake-up tokens posted by v3 requests
+/// in flight on *other* workers. A token carries no batch handle —
+/// the woken worker pulls tiles from the server's shared
+/// [`TileScheduler`], which weights claims across **every** in-flight
+/// request (oldest first), so a token posted for one request ends up
+/// helping whichever requests need work most, and a stale token (the
+/// batch drained before any worker came free) is a cheap no-op. Not
+/// pinning the batch also keeps the old `Weak`-handle property: a
+/// queued token never holds a finished request's whole-image inputs
+/// in memory. Connection jobs carry their enqueue time so the pool
+/// can histogram accept-wait (time queued before a worker picked the
 /// connection up).
 enum Job {
     Conn(TcpStream, Instant),
-    Tiles(std::sync::Weak<TileBatch>),
+    Drain,
 }
 
 /// How connections resolve apps and report, plus the pool size used
@@ -96,6 +109,21 @@ pub struct ServeConfig {
     /// (atomic overwrite, ~5 s cadence, plus a final dump at
     /// shutdown). `None` disables the dump thread entirely.
     pub metrics_json: Option<std::path::PathBuf>,
+    /// Capacity of the pool's bounded job queue (`None`: `2 *
+    /// workers`). When the queue is full the acceptor answers
+    /// `STATUS_BUSY` with a retry hint instead of parking — tests pin
+    /// the rejection path with a cap of 1.
+    pub queue_cap: Option<usize>,
+    /// Acceptor threads sharing the listener (`None`: the
+    /// `PUSHMEM_ACCEPT_SHARDS` env var, default 2; always clamped to
+    /// `1..=MAX_ACCEPT_SHARDS`). Accepting is cheap but serial: under
+    /// a connection flood a single acceptor is the choke point, every
+    /// handoff *and* every busy rejection queueing behind one thread
+    /// (DESIGN.md §2).
+    pub accept_shards: Option<usize>,
+    /// The cross-request tile scheduler shared by every pool worker
+    /// and v3 submitter of this server (docs/serving.md).
+    sched: Arc<TileScheduler>,
     /// Set by [`serve_on_with`] once the pool's queue exists (and
     /// cleared at shutdown so workers see the channel disconnect); v3
     /// handling uses it to recruit idle workers into a tile batch.
@@ -122,6 +150,9 @@ impl ServeConfig {
             stats: false,
             engine: Engine::Auto,
             metrics_json: None,
+            queue_cap: None,
+            accept_shards: None,
+            sched: Arc::new(TileScheduler::new()),
             helpers: Mutex::new(None),
         }
     }
@@ -137,6 +168,9 @@ impl ServeConfig {
             stats: false,
             engine: Engine::Auto,
             metrics_json: None,
+            queue_cap: None,
+            accept_shards: None,
+            sched: Arc::new(TileScheduler::new()),
             helpers: Mutex::new(None),
         }
     }
@@ -176,13 +210,16 @@ pub fn read_request(stream: &mut impl Read) -> Result<Option<Request>> {
     }
 }
 
-/// Read one inbound frame — data request or admin `STATS` — plus the
-/// span anchors the serving loop needs: the instant the frame's first
-/// header bytes arrived (the request's start-of-span) and the decode
-/// stage duration (from that instant until the frame is fully read
-/// and decoded, i.e. wire transfer of the body + parsing).
-/// `Ok(None)` is a clean disconnect.
-fn read_frame(stream: &mut impl Read) -> Result<Option<(protocol::Frame, Instant, u64)>> {
+/// Read one inbound frame's raw bytes — data request or admin
+/// `STATS` — plus the instant its first header bytes arrived (the
+/// request's start-of-span). The length pre-scan
+/// ([`protocol::request_frame_len`]) enforces every structural cap
+/// before a byte is buffered, but the frame is *not* decoded here:
+/// the caller decodes a borrowing [`protocol::RequestView`] over the
+/// returned buffer, so a v3 whole-image payload travels frame →
+/// gather scratch with no intermediate `Vec<i32>` copy. `Ok(None)`
+/// is a clean disconnect.
+fn read_frame_bytes(stream: &mut impl Read) -> Result<Option<(Vec<u8>, Instant)>> {
     let mut buf = vec![0u8; 4];
     match stream.read_exact(&mut buf) {
         Ok(()) => {}
@@ -196,9 +233,7 @@ fn read_frame(stream: &mut impl Read) -> Result<Option<(protocol::Frame, Instant
                 if buf.len() < total {
                     fill_to(stream, &mut buf, total)?;
                 }
-                let (frame, _) = protocol::decode_frame(&buf)?;
-                let decode_ns = started.elapsed().as_nanos() as u64;
-                return Ok(Some((frame, started, decode_ns)));
+                return Ok(Some((buf, started)));
             }
             Err(FrameError::Truncated { need, .. }) => fill_to(stream, &mut buf, need)?,
             Err(e) => return Err(e.into()),
@@ -307,7 +342,15 @@ fn handle_stats(stream: &mut TcpStream) -> Result<()> {
 /// it travels back to the client as the `STATUS_BAD_REQUEST` detail
 /// payload, replacing the old opaque status word.
 fn check_input_words(app: &str, expect: &[(&str, i64)], inputs: &[Vec<i32>]) -> Result<()> {
-    if inputs.len() != expect.len() {
+    let got: Vec<usize> = inputs.iter().map(|w| w.len()).collect();
+    check_input_counts(app, expect, &got)
+}
+
+/// The count-only core of [`check_input_words`]: the zero-copy tiled
+/// path validates its [`protocol::WordsRange`] lengths here without
+/// ever materializing the payload words.
+fn check_input_counts(app: &str, expect: &[(&str, i64)], got: &[usize]) -> Result<()> {
+    if got.len() != expect.len() {
         let decl: Vec<String> = expect
             .iter()
             .map(|(name, want)| format!("{name}={want} words"))
@@ -316,17 +359,15 @@ fn check_input_words(app: &str, expect: &[(&str, i64)], inputs: &[Vec<i32>]) -> 
             "app {app}: expected {} inputs ({}), got {}",
             expect.len(),
             decl.join(", "),
-            inputs.len()
+            got.len()
         );
     }
-    let bad: Vec<String> = expect
-        .iter()
-        .zip(inputs)
-        .filter(|((_, want), words)| words.len() as i64 != *want)
-        .map(|((name, want), words)| {
-            format!("input {name}: got {} words, expected {want}", words.len())
-        })
-        .collect();
+    let mut bad = Vec::new();
+    for ((name, want), &got) in expect.iter().zip(got) {
+        if got as i64 != *want {
+            bad.push(format!("input {name}: got {got} words, expected {want}"));
+        }
+    }
     anyhow::ensure!(bad.is_empty(), "app {app}: {}", bad.join("; "));
     Ok(())
 }
@@ -403,7 +444,7 @@ pub fn handle_connection(cfg: &ServeConfig, stream: &mut TcpStream) -> Result<()
     // connection may interleave v2 requests for different apps).
     let mut runs: Vec<RunSlot> = Vec::new();
     loop {
-        let (frame, started, decode_ns) = match read_frame(stream) {
+        let (buf, started) = match read_frame_bytes(stream) {
             Ok(Some(f)) => f,
             Ok(None) => return Ok(()),
             Err(e) => {
@@ -426,14 +467,35 @@ pub fn handle_connection(cfg: &ServeConfig, stream: &mut TcpStream) -> Result<()
                 return Err(e.context(format!("client {peer}")));
             }
         };
-        let req = match frame {
-            protocol::Frame::Stats => {
-                handle_stats(stream)?;
-                continue;
+        // Admin STATS frames are exactly `magic | ADMIN_STATS` (the
+        // only 8-byte frame whose second word is the stats sentinel).
+        if buf.len() == 8 && buf[4..8] == protocol::ADMIN_STATS.to_le_bytes() {
+            handle_stats(stream)?;
+            continue;
+        }
+        // Borrowing decode: payload words stay in `buf` as ranges, so
+        // the v3 path hands the frame itself to the tile batch.
+        let view = match protocol::decode_request_view(&buf) {
+            Ok((view, _)) => view,
+            Err(e) => {
+                fail_rec(
+                    0,
+                    "?",
+                    &ReqCtx {
+                        peer: &peer,
+                        started,
+                        lookup_t0: Instant::now(),
+                        decode_ns: started.elapsed().as_nanos() as u64,
+                        queue_depth: m.queue_depth.get(),
+                        in_words: 0,
+                    },
+                );
+                write_error_detail(stream, protocol::STATUS_BAD_REQUEST, &format!("{e}"));
+                return Err(anyhow::Error::new(e).context(format!("client {peer}")));
             }
-            protocol::Frame::Request(req) => req,
         };
-        let version: u8 = match (&req.extent, &req.app) {
+        let decode_ns = started.elapsed().as_nanos() as u64;
+        let version: u8 = match (&view.extent, &view.app) {
             (Some(_), _) => 3,
             (None, Some(_)) => 2,
             (None, None) => 1,
@@ -444,9 +506,9 @@ pub fn handle_connection(cfg: &ServeConfig, stream: &mut TcpStream) -> Result<()
             lookup_t0: Instant::now(),
             decode_ns,
             queue_depth: m.queue_depth.get(),
-            in_words: req.inputs.iter().map(|w| w.len() as u64).sum(),
+            in_words: view.inputs.iter().map(|r| r.words as u64).sum(),
         };
-        let c: Arc<Compiled> = match &req.app {
+        let c: Arc<Compiled> = match view.app {
             Some(name) => match cfg.registry.get(name) {
                 Ok(c) => c,
                 Err(e) => {
@@ -464,15 +526,23 @@ pub fn handle_connection(cfg: &ServeConfig, stream: &mut TcpStream) -> Result<()
                 }
             },
         };
-        let Request { extent, inputs: payloads, .. } = req;
+        // The extent and input ranges own no part of `buf`; moving
+        // them out ends the view's borrow so the v3 path can take the
+        // frame buffer itself.
+        let extent = view.extent;
+        let ranges = view.inputs;
         // v3: arbitrary-extent requests take the tiling path — plan,
         // fan tiles out across idle pool workers, stitch, respond.
         if let Some(extent) = extent {
-            match handle_tiled(cfg, stream, &c, &extent, payloads, &mut runs, &ctx) {
+            match handle_tiled(cfg, stream, &c, &extent, buf, ranges, &mut runs, &ctx) {
                 Ok(()) => continue,
                 Err(e) => return Err(e),
             }
         }
+        // Fixed-box (v1/v2) path: materialize the owned payload words
+        // the tensor build needs — the same single frame→Vec copy as
+        // before the view decode existed.
+        let payloads: Vec<Vec<i32>> = ranges.iter().map(|r| r.to_vec(&buf)).collect();
         if let Err(e) = check_input_words(&c.program.name, &declared_words(&c), &payloads) {
             fail_rec(version, &c.program.name, &ctx);
             write_error_detail(stream, protocol::STATUS_BAD_REQUEST, &format!("{e:#}"));
@@ -553,17 +623,27 @@ pub fn handle_connection(cfg: &ServeConfig, stream: &mut TcpStream) -> Result<()
 }
 
 /// Serve one v3 (whole-image) request on an open connection: plan the
-/// tiling (cached per extent on the design), validate the whole-image
-/// inputs, recruit idle pool workers into the [`TileBatch`], drain,
-/// stitch, respond. Client-caused failures answer
-/// `STATUS_BAD_REQUEST` with a packed diagnostic; like every non-OK
-/// path, the connection closes afterwards (`Err` return).
+/// tiling (cached per extent on the design, built single-flight),
+/// validate the whole-image inputs, register the [`TileBatch`] with
+/// the shared [`TileScheduler`], wake idle pool workers, drain
+/// through the scheduler, stitch, respond. Client-caused failures
+/// answer `STATUS_BAD_REQUEST` with a packed diagnostic; like every
+/// non-OK path, the connection closes afterwards (`Err` return).
+///
+/// §Perf: the whole-image payload is **zero-copy** — it stays as
+/// little-endian words inside the request frame (`frame_buf` +
+/// `ranges`, from [`protocol::decode_request_view`]), owned by the
+/// batch and gathered directly into per-tile scratch
+/// ([`crate::tile::ImageSource`]). The old path copied every payload
+/// frame → `Vec<i32>` → scratch.
+#[allow(clippy::too_many_arguments)]
 fn handle_tiled(
     cfg: &ServeConfig,
     stream: &mut TcpStream,
     c: &Arc<Compiled>,
     extent: &[i64],
-    payloads: Vec<Vec<i32>>,
+    frame_buf: Vec<u8>,
+    ranges: Vec<protocol::WordsRange>,
     runs: &mut Vec<RunSlot>,
     ctx: &ReqCtx<'_>,
 ) -> Result<()> {
@@ -578,18 +658,21 @@ fn handle_tiled(
             bail!("client {peer}: {msg}");
         }
     };
-    if let Err(e) = check_input_words(&app, &plan.expected_words(), &payloads) {
+    let got: Vec<usize> = ranges.iter().map(|r| r.words).collect();
+    if let Err(e) = check_input_counts(&app, &plan.expected_words(), &got) {
         fail_rec(3, &app, ctx);
         write_error_detail(stream, protocol::STATUS_BAD_REQUEST, &format!("{e:#}"));
         return Err(e.context(format!("client {peer} (extent {extent:?})")));
     }
-    let mut inputs = BTreeMap::new();
-    for ((name, b), words) in plan.input_names.iter().zip(&plan.input_boxes).zip(payloads) {
-        inputs.insert(name.clone(), Tensor::from_data(b.clone(), words));
-    }
     let lookup_ns = ctx.lookup_t0.elapsed().as_nanos() as u64;
     let exec_t0 = Instant::now();
-    let batch = match TileBatch::new(Arc::clone(c), cfg.engine, Arc::clone(&plan), inputs) {
+    let batch = match TileBatch::new_frame(
+        Arc::clone(c),
+        cfg.engine,
+        Arc::clone(&plan),
+        frame_buf,
+        ranges.iter().map(|r| (r.byte_off, r.words)).collect(),
+    ) {
         Ok(b) => b,
         Err(e) => {
             fail_rec(3, &app, ctx);
@@ -597,11 +680,13 @@ fn handle_tiled(
             return Err(e.context(format!("batching {app} for {peer}")));
         }
     };
-    // Opportunistic recruitment: idle workers pick the batch off the
-    // pool queue and join the drain; a saturated pool (try_send
-    // fails, or the jobs sit queued until the batch is over) just
-    // leaves the whole drain to this thread. Stale pickups are free —
-    // `work` returns immediately once all tiles are claimed.
+    let m = telemetry::metrics();
+    // Register with the shared scheduler, then wake idle workers with
+    // Drain tokens. A saturated pool (try_send fails, or the tokens
+    // sit queued until the batch is over) just leaves the drain to
+    // this thread and its sibling submitters; stale tokens are free.
+    cfg.sched.submit(&batch);
+    m.sched_batches.inc();
     let recruit = cfg
         .helpers
         .lock()
@@ -613,26 +698,56 @@ fn handle_tiled(
             .saturating_sub(1)
             .min(batch.tile_count().saturating_sub(1));
         for _ in 0..extra {
-            match tx.try_send(Job::Tiles(Arc::downgrade(&batch))) {
-                Ok(()) => telemetry::metrics().queue_depth.inc(),
+            match tx.try_send(Job::Drain) {
+                Ok(()) => m.queue_depth.inc(),
                 Err(_) => break,
             }
         }
     }
-    // The connection's cached runner drains tiles — a v3 request on a
-    // warm connection pays no engine setup, like the fixed-box path —
-    // and its cached scratch makes the warm drain allocation-free
+    // Fail fast if this connection cannot run the app at all — the
+    // drain loop below treats a runner error as "skip", which is only
+    // sound for *foreign* batches (whose own submitter hits this same
+    // deterministic error and fails their request).
+    if let Err(e) = runner_for(runs, c, cfg.engine) {
+        fail_rec(3, &app, ctx);
+        write_error_detail(stream, protocol::STATUS_INTERNAL, &format!("{e:#}"));
+        return Err(e.context(format!("planning {app} for {peer}")));
+    }
+    // Drain through the shared scheduler until this request's batch
+    // completes. Most claims land on our own batch (oldest-first
+    // weighting), but claims for sibling requests are taken too —
+    // that cross-service is what keeps N concurrent images advancing
+    // together instead of serializing. Progress never depends on
+    // recruitment: with no siblings and no idle workers this loop is
+    // exactly the old drain-it-yourself path. The per-design
+    // [`RunSlot`] cache makes the warm drain allocation-free
     // (gathers, per-tile output, and stitch coordinates all reuse the
     // slot's buffers; see `crate::tile::run`).
-    match runner_for(runs, c, cfg.engine) {
-        Ok(slot) => {
-            let scratch = slot.scratch.get_or_insert_with(|| TileScratch::new(&plan));
-            batch.work_with(&mut slot.run, scratch);
+    loop {
+        if batch.is_done() {
+            break;
         }
-        Err(e) => {
-            fail_rec(3, &app, ctx);
-            write_error_detail(stream, protocol::STATUS_INTERNAL, &format!("{e:#}"));
-            return Err(e.context(format!("planning {app} for {peer}")));
+        let Some(b) = cfg.sched.claim() else {
+            // No unclaimed tiles anywhere: ours are all claimed,
+            // possibly still executing on other workers — wait()
+            // below blocks until they land.
+            break;
+        };
+        let mine = Arc::ptr_eq(&b, &batch);
+        let slot = match runner_for(runs, b.compiled(), b.engine()) {
+            Ok(s) => s,
+            Err(_) => {
+                // A foreign design this connection cannot plan. Its
+                // own submitter hits the same deterministic error,
+                // fails the request, and drops the batch (pruning
+                // it); yield instead of spinning until then.
+                std::thread::yield_now();
+                continue;
+            }
+        };
+        let scratch = slot.scratch.get_or_insert_with(|| TileScratch::new(b.plan()));
+        if b.work_one(&mut slot.run, scratch) && !mine {
+            m.sched_cross_tiles.inc();
         }
     }
     let execute_ns = exec_t0.elapsed().as_nanos() as u64;
@@ -695,10 +810,119 @@ fn handle_tiled(
 /// handlers to exercise the pool's isolation guarantees.
 pub type Handler = dyn Fn(&ServeConfig, &mut TcpStream) -> Result<()> + Send + Sync;
 
+/// `PUSHMEM_ACCEPT_SHARDS`: acceptor threads sharing the listener.
+/// Default 2; the caller clamps to `1..=MAX_ACCEPT_SHARDS`.
+fn env_accept_shards() -> usize {
+    std::env::var("PUSHMEM_ACCEPT_SHARDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2)
+}
+
+/// The admission rejection's backpressure hint: scale with what a
+/// queued client would actually wait behind — the jobs already queued
+/// plus the in-flight tile backlog spread across the pool — and clamp
+/// to `[1, 1000]` ms so a pathological backlog can never tell clients
+/// to sleep for minutes.
+fn retry_hint_ms(cfg: &ServeConfig, workers: u64) -> u64 {
+    let m = telemetry::metrics();
+    (1 + 2 * m.queue_depth.get() + cfg.sched.backlog() / workers.max(1)).clamp(1, 1000)
+}
+
+/// Refuse admission: answer `STATUS_BUSY` with a retry hint, then
+/// close. Order matters — the busy frame is written **first**, and
+/// the peer's already-sent request bytes are drained afterwards:
+/// closing a socket with unread inbound data makes the kernel send
+/// RST, which can discard the peer's unread busy frame in flight.
+/// Every step is bounded (short timeouts, a byte budget) so a hostile
+/// peer cannot pin the acceptor.
+fn reject_busy(mut stream: TcpStream, retry_after_ms: u64) {
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(250)));
+    let _ = stream.write_all(&protocol::encode_busy(retry_after_ms));
+    let _ = stream.flush();
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    let mut sink = [0u8; 4096];
+    let mut budget: usize = 1 << 20;
+    loop {
+        match stream.read(&mut sink) {
+            Ok(0) | Err(_) => break, // EOF, timeout, or reset
+            Ok(n) => {
+                budget = budget.saturating_sub(n);
+                if budget == 0 {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// One acceptor shard's loop: accept, try to enqueue, and on a full
+/// queue answer `STATUS_BUSY` + retry hint instead of parking (the
+/// pre-scheduler fallback blocked the lone acceptor on `tx.send`, so
+/// a saturated pool silently hung every later client). Returns when
+/// the pool's queue disconnects. Counters account exactly: every
+/// accept lands in `accepts_shard<i>`, and every rejection bumps both
+/// `queue_full` and `requests_busy`.
+fn accept_loop(
+    listener: &TcpListener,
+    shard: usize,
+    tx: &mpsc::SyncSender<Job>,
+    cfg: &ServeConfig,
+    workers: usize,
+) {
+    let m = telemetry::metrics();
+    // One log line per interval on the accept-error path — a listener
+    // stuck on EMFILE returns errors in a tight loop and must not
+    // flood stderr (the `accept_errors` counter keeps the true rate).
+    let accept_rl = log::RateLimited::new(Duration::from_secs(5));
+    for stream in listener.incoming() {
+        match stream {
+            // try_send first so pool saturation is visible to the
+            // operator and the client both (a silently queued-forever
+            // client hangs otherwise).
+            Ok(s) => {
+                m.accepts_by_shard[shard].inc();
+                match tx.try_send(Job::Conn(s, Instant::now())) {
+                    Ok(()) => m.queue_depth.inc(),
+                    Err(mpsc::TrySendError::Full(Job::Conn(s, _))) => {
+                        m.queue_full.inc();
+                        m.requests_busy.inc();
+                        let retry = retry_hint_ms(cfg, workers as u64);
+                        log::warn(
+                            "serve",
+                            &format!(
+                                "event=admission_reject shard={shard} workers={workers} \
+                                 retry_after_ms={retry} msg=\"pool saturated; client told to retry\""
+                            ),
+                        );
+                        reject_busy(s, retry);
+                    }
+                    // Only Conn jobs originate here.
+                    Err(mpsc::TrySendError::Full(Job::Drain)) => {}
+                    Err(mpsc::TrySendError::Disconnected(_)) => return,
+                }
+            }
+            Err(e) => {
+                // Persistent accept failures (e.g. EMFILE under fd
+                // exhaustion) must shed load, not busy-spin.
+                m.accept_errors.inc();
+                if let Some(suppressed) = accept_rl.admit() {
+                    log::error(
+                        "serve",
+                        &format!("event=accept_error shard={shard} err={e} suppressed={suppressed}"),
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
 /// Run the accept loop on an already-bound listener with a bounded
 /// pool of `cfg.workers` connection-handler threads. Accepted
-/// connections queue on a bounded channel when every worker is busy —
-/// load sheds into the kernel backlog instead of unbounded spawning.
+/// connections queue on a bounded channel when every worker is busy,
+/// and queue overflow is answered `STATUS_BUSY` + retry hint — bounded
+/// admission instead of unbounded spawning or silent parking.
 /// Embeddable: tests and examples bind an ephemeral port themselves.
 pub fn serve_on(listener: TcpListener, cfg: ServeConfig) -> Result<()> {
     serve_on_with(listener, cfg, Arc::new(handle_connection))
@@ -729,7 +953,12 @@ pub fn serve_on_with(
     telemetry::set_sampling(true);
     let workers = cfg.workers.max(1);
     telemetry::metrics().workers_total.set(workers as u64);
-    let (tx, rx) = mpsc::sync_channel::<Job>(2 * workers);
+    let queue_cap = cfg.queue_cap.unwrap_or(2 * workers).max(1);
+    let shards = cfg
+        .accept_shards
+        .unwrap_or_else(env_accept_shards)
+        .clamp(1, MAX_ACCEPT_SHARDS);
+    let (tx, rx) = mpsc::sync_channel::<Job>(queue_cap);
     // Hand the queue to v3 tile fan-out before any connection can
     // arrive; cleared again at shutdown so the channel can disconnect
     // and the workers exit.
@@ -769,105 +998,117 @@ pub fn serve_on_with(
         let rx = Arc::clone(&rx);
         let cfg = Arc::clone(&cfg);
         let handler = Arc::clone(&handler);
-        handles.push(std::thread::spawn(move || loop {
-            // The guard is a temporary: the lock is released as soon
-            // as recv returns, before the job is handled. A poisoned
-            // lock is recovered, not propagated — one dead peer must
-            // not cascade the whole pool down.
-            let next = rx
-                .lock()
-                .unwrap_or_else(|poisoned| poisoned.into_inner())
-                .recv();
-            let job = match next {
-                Ok(job) => job,
-                Err(_) => return, // accept loop gone
-            };
-            let m = telemetry::metrics();
-            m.queue_depth.dec();
-            m.workers_busy.inc();
-            let busy_t0 = Instant::now();
-            match job {
-                Job::Conn(mut stream, queued) => {
-                    m.jobs_conn.inc();
-                    m.accept_wait.record_ns(queued.elapsed().as_nanos() as u64);
-                    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        handler(&cfg, &mut stream)
-                    }));
-                    match outcome {
-                        Ok(Ok(())) => {}
-                        Ok(Err(e)) => {
-                            log::warn("serve", &format!("event=connection_error err={e:#}"))
+        handles.push(std::thread::spawn(move || {
+            // Per-worker engine runners, persistent across jobs: the
+            // pool serves many requests for the same few apps, and
+            // this warmed cache is what makes the Nth concurrent
+            // request pay no engine setup (it coalesces onto slots
+            // built by earlier drains).
+            let mut runs: Vec<RunSlot> = Vec::new();
+            loop {
+                // The guard is a temporary: the lock is released as
+                // soon as recv returns, before the job is handled. A
+                // poisoned lock is recovered, not propagated — one
+                // dead peer must not cascade the whole pool down.
+                let next = rx
+                    .lock()
+                    .unwrap_or_else(|poisoned| poisoned.into_inner())
+                    .recv();
+                let job = match next {
+                    Ok(job) => job,
+                    Err(_) => return, // accept loop gone
+                };
+                let m = telemetry::metrics();
+                m.queue_depth.dec();
+                m.workers_busy.inc();
+                let busy_t0 = Instant::now();
+                match job {
+                    Job::Conn(mut stream, queued) => {
+                        m.jobs_conn.inc();
+                        m.accept_wait.record_ns(queued.elapsed().as_nanos() as u64);
+                        let outcome =
+                            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                handler(&cfg, &mut stream)
+                            }));
+                        match outcome {
+                            Ok(Ok(())) => {}
+                            Ok(Err(e)) => {
+                                log::warn("serve", &format!("event=connection_error err={e:#}"))
+                            }
+                            Err(_) => {
+                                // The handler panicked mid-connection:
+                                // report an internal error to the peer
+                                // (best-effort) and keep this worker
+                                // alive for the next connection.
+                                write_error(&mut stream, protocol::STATUS_INTERNAL);
+                                log::error(
+                                    "serve",
+                                    "event=handler_panic msg=\"worker recovered\"",
+                                );
+                            }
                         }
-                        Err(_) => {
-                            // The handler panicked mid-connection:
-                            // report an internal error to the peer
-                            // (best-effort) and keep this worker alive
-                            // for the next connection.
-                            write_error(&mut stream, protocol::STATUS_INTERNAL);
-                            log::error(
-                                "serve",
-                                "event=handler_panic msg=\"worker recovered\"",
-                            );
+                    }
+                    Job::Drain => {
+                        // Join the cross-request tile drain: claim one
+                        // tile at a time from the shared scheduler —
+                        // which batch each claim serves is its call —
+                        // until no batch has unclaimed tiles. Tile
+                        // panics are contained inside the batch, and a
+                        // stale token (the batch drained or its
+                        // request died before this worker came free)
+                        // falls straight through.
+                        m.jobs_tiles.inc();
+                        while let Some(b) = cfg.sched.claim() {
+                            let slot = match runner_for(&mut runs, b.compiled(), b.engine()) {
+                                Ok(s) => s,
+                                Err(_) => {
+                                    // The batch's own submitter hits
+                                    // this same deterministic planning
+                                    // error and drops it; don't spin.
+                                    std::thread::yield_now();
+                                    continue;
+                                }
+                            };
+                            let scratch =
+                                slot.scratch.get_or_insert_with(|| TileScratch::new(b.plan()));
+                            if b.work_one(&mut slot.run, scratch) {
+                                // Pool workers never submit batches,
+                                // so every tile they execute is
+                                // cross-request service.
+                                m.sched_cross_tiles.inc();
+                            }
                         }
                     }
                 }
-                Job::Tiles(batch) => {
-                    // Join an in-flight whole-image request; `work`
-                    // panics are contained inside the batch, a
-                    // drained batch returns immediately, and a batch
-                    // whose request already completed upgrades to
-                    // nothing (its connection dropped the only
-                    // strong handle).
-                    m.jobs_tiles.inc();
-                    if let Some(batch) = batch.upgrade() {
-                        batch.work();
-                    }
-                }
+                m.workers_busy.dec();
+                m.worker_busy_ns.add(busy_t0.elapsed().as_nanos() as u64);
             }
-            m.workers_busy.dec();
-            m.worker_busy_ns.add(busy_t0.elapsed().as_nanos() as u64);
         }));
     }
-    // One log line per interval on the accept-error path — a listener
-    // stuck on EMFILE returns errors in a tight loop and must not
-    // flood stderr (the `accept_errors` counter keeps the true rate).
-    let accept_rl = log::RateLimited::new(Duration::from_secs(5));
-    for stream in listener.incoming() {
-        match stream {
-            // try_send first so pool saturation is visible to the
-            // operator (a queued client hangs silently otherwise).
-            Ok(s) => match tx.try_send(Job::Conn(s, Instant::now())) {
-                Ok(()) => telemetry::metrics().queue_depth.inc(),
-                Err(mpsc::TrySendError::Full(job)) => {
-                    telemetry::metrics().queue_full.inc();
-                    log::warn(
-                        "serve",
-                        &format!(
-                            "event=queue_full workers={workers} \
-                             msg=\"connection waits; raise --workers if this persists\""
-                        ),
-                    );
-                    if tx.send(job).is_err() {
-                        break;
-                    }
-                    telemetry::metrics().queue_depth.inc();
-                }
-                Err(mpsc::TrySendError::Disconnected(_)) => break,
-            },
+    // Sharded accept: shards 1..K run on their own threads over
+    // `try_clone`d handles of the same listener (the kernel load-
+    // balances accepts across blocked acceptors); shard 0 runs here.
+    // The extra acceptors are detached — they hold only the listener
+    // and a queue sender, and exit when the queue disconnects under
+    // them (joining them would block shutdown on one more accept).
+    for shard in 1..shards {
+        match listener.try_clone() {
+            Ok(l) => {
+                let tx = tx.clone();
+                let cfg = Arc::clone(&cfg);
+                std::thread::spawn(move || accept_loop(&l, shard, &tx, &cfg, workers));
+            }
             Err(e) => {
-                // Persistent accept failures (e.g. EMFILE under fd
-                // exhaustion) must shed load, not busy-spin.
-                telemetry::metrics().accept_errors.inc();
-                if let Some(suppressed) = accept_rl.admit() {
-                    log::error(
-                        "serve",
-                        &format!("event=accept_error err={e} suppressed={suppressed}"),
-                    );
-                }
-                std::thread::sleep(Duration::from_millis(50));
+                // Fewer shards is a performance regression, not a
+                // correctness one; shard 0 still accepts everything.
+                log::warn(
+                    "serve",
+                    &format!("event=accept_shard_clone_failed shard={shard} err={e}"),
+                );
             }
         }
     }
+    accept_loop(&listener, 0, &tx, &cfg, workers);
     cfg.helpers.lock().unwrap_or_else(|p| p.into_inner()).take();
     drop(tx);
     for h in handles {
@@ -1209,6 +1450,84 @@ mod tests {
         // Server closed the connection afterwards.
         let mut rest = Vec::new();
         assert_eq!(stream.read_to_end(&mut rest).unwrap(), 0);
+    }
+
+    /// Satellite regression for the old accept-loop saturation
+    /// fallback (which parked the acceptor on a blocking `send`, so a
+    /// saturated pool silently hung every later client): with
+    /// workers=1 and queue_cap=1 there is room for exactly two
+    /// connections — one held by the worker, one queued — and a third
+    /// concurrent connection must receive `STATUS_BUSY` with a
+    /// parseable retry hint and a clean close, never a hang.
+    #[test]
+    fn saturated_pool_answers_busy_not_hang() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut cfg = ServeConfig::multi(Arc::new(CompiledRegistry::new()), 1);
+        cfg.workers = 1;
+        cfg.queue_cap = Some(1);
+        cfg.accept_shards = Some(1);
+        // The injected handler parks until its peer closes, pinning
+        // the single worker without any app compilation.
+        std::thread::spawn(move || {
+            serve_on_with(
+                listener,
+                cfg,
+                Arc::new(|_cfg: &ServeConfig, stream: &mut TcpStream| {
+                    let mut b = [0u8; 1];
+                    let _ = stream.read(&mut b);
+                    Ok(())
+                }),
+            )
+        });
+        let conns: Vec<TcpStream> = (0..3)
+            .map(|_| {
+                let s = TcpStream::connect(addr).unwrap();
+                s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+                s
+            })
+            .collect();
+        // Whichever interleaving the accept/dequeue race picks, at
+        // least one of the three must be refused; admitted
+        // connections just time out their reads (the handler never
+        // responds) and hang up, freeing the worker for the next.
+        let mut busy = 0;
+        for mut s in conns {
+            if let Ok(resp) = read_response(&mut s) {
+                assert_eq!(resp.status, protocol::STATUS_BUSY);
+                let detail = protocol::detail_from_words(&resp.words);
+                let hint = protocol::busy_retry_after_ms(&detail)
+                    .unwrap_or_else(|| panic!("unparseable busy detail: {detail:?}"));
+                assert!((1..=1000).contains(&hint), "retry hint {hint} out of range");
+                // The server closes after any non-OK status.
+                let mut rest = Vec::new();
+                assert_eq!(s.read_to_end(&mut rest).unwrap(), 0, "data after busy frame");
+                busy += 1;
+            }
+        }
+        assert!(busy >= 1, "no connection was refused admission");
+    }
+
+    /// Multiple acceptor shards serve plain request traffic exactly
+    /// like one acceptor: every connection lands on some shard and
+    /// round-trips bit-exactly.
+    #[test]
+    fn sharded_accept_serves_requests() {
+        let prog = apps::gaussian::build(14);
+        let c = compile(&prog).unwrap();
+        let inputs = gen_inputs(&c.lp);
+        let expect = simulate(&c.design, &c.graph, &inputs).unwrap().output.data;
+        let ordered: Vec<Tensor> =
+            c.lp.inputs.iter().map(|n| inputs[n].clone()).collect();
+        let mut cfg = ServeConfig::single("g14", c);
+        cfg.accept_shards = Some(3);
+        let addr = spawn_server(cfg);
+        let refs: Vec<&Tensor> = ordered.iter().collect();
+        for _ in 0..6 {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            let (words, _, _) = request(&mut stream, &refs).unwrap();
+            assert_eq!(words, expect);
+        }
     }
 
     /// A STATS frame answered on a connection interleaved with data

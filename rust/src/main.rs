@@ -72,8 +72,8 @@ fn usage(cmd: &str) -> &'static str {
         "report" => "usage: pushmem report [--artifacts D] [--engine E]\n\n  --artifacts D   directory of HLO golden artifacts (default: artifacts)\n  --engine E      exec|exec-scalar|sim|auto (default: auto)\n\nAll seven Table III apps: Table IV resources plus Fig 13/14 rows.",
         "tables" => "usage: pushmem tables\n\nReproduce Tables V (Harris schedules), VI and VII (optimized vs\nsequential mappings).",
         "tune" => "usage: pushmem tune <app> [--objective O] [--budget N] [--workers N] [--seed S] [--cache-dir D] [--engine E]\n\n  --objective O   cycles|energy|pes|area|pareto (default: cycles)\n  --budget N      max candidates to score (default: 24)\n  --workers N     evaluation threads (default: all cores)\n  --seed S        enumeration seed (default: 1)\n  --cache-dir D   content-addressed result cache (default: dse-cache;\n                  'none' disables caching)\n  --engine E      exec|exec-scalar|sim|auto (default: auto) — exec scores an order\n                  of magnitude more candidates/sec at identical scores\n\nSearch the schedule space of <app>: enumerate tile/store_at/unroll/\nhost candidates, prune analytically, score survivors in parallel\n(each validated bit-exact against the functional reference), rank by\nthe objective, and record the winner for `serve --tuned-dir`. For\nharris the ranking is compared against the six hand-written Table V\nschedules. See docs/dse.md.",
-        "serve" => "usage: pushmem serve <app> [--addr A] [--workers N] [--stats] [--extent WxH] [--tuned-dir D] [--engine E] [--metrics-json PATH]\n\n  --addr A      listen address (default: 127.0.0.1:7411)\n  --workers N   connection worker threads (default: 4; a connection\n                holds its worker until it disconnects, and idle\n                workers join in-flight whole-image tile batches)\n  --stats       print one [req] line per served request\n  --extent WxH  pre-build (warm) the tile plan for this whole-image\n                output extent so the first v3 request at that size\n                pays nothing (docs/tiling.md)\n  --tuned-dir D use the tuner-recorded best schedule from D when one\n                exists (see `pushmem tune`); falls back to the\n                hand-written schedule otherwise\n  --engine E    exec|exec-scalar|sim|auto (default: auto) — the functional engine\n                serves requests in microseconds; sim stays available\n                as the cycle-accurate reference (docs/execution.md)\n  --metrics-json PATH  periodically dump the telemetry snapshot\n                (docs/observability.md) to PATH as JSON; also written\n                once at shutdown\n\nCompile <app> and serve tiles over TCP. v1 frames target <app>; v2\nframes may name any registered app; v3 frames carry a whole-image\noutput extent, tiled onto the fixed design (docs/protocol.md).\nLive counters are queryable with `pushmem stats <host:port>`.",
-        "serve-all" => "usage: pushmem serve-all [--addr A] [--workers N] [--apps a,b,c] [--warm] [--tuned-dir D] [--engine E] [--metrics-json PATH]\n\n  --addr A      listen address (default: 127.0.0.1:7411)\n  --workers N   connection worker threads (default: 8)\n  --apps LIST   comma-separated app names to register (default: the\n                seven Table III apps; variants like harris_sch4 allowed)\n  --warm        compile every registered app up front instead of lazily\n                on first request\n  --tuned-dir D per-app tuner-recorded schedules from D override the\n                hand-written defaults (see `pushmem tune`)\n  --engine E    exec|exec-scalar|sim|auto (default: auto)\n  --metrics-json PATH  periodically dump the telemetry snapshot to PATH\n\nServe every registered app over one TCP port (v2 frames carry the app\nname; see docs/protocol.md). Designs are compiled once, cached, and\nshared across connections. Prints one [req] stats line per request.",
+        "serve" => "usage: pushmem serve <app> [--addr A] [--workers N] [--stats] [--extent WxH] [--tuned-dir D] [--engine E] [--metrics-json PATH]\n\n  --addr A      listen address (default: 127.0.0.1:7411)\n  --workers N   connection worker threads (default: 4; a connection\n                holds its worker until it disconnects, and idle\n                workers join in-flight whole-image tile batches)\n  --stats       print one [req] line per served request\n  --extent WxH  pre-build (warm) the tile plan for this whole-image\n                output extent so the first v3 request at that size\n                pays nothing (docs/tiling.md)\n  --tuned-dir D use the tuner-recorded best schedule from D when one\n                exists (see `pushmem tune`); falls back to the\n                hand-written schedule otherwise\n  --engine E    exec|exec-scalar|sim|auto (default: auto) — the functional engine\n                serves requests in microseconds; sim stays available\n                as the cycle-accurate reference (docs/execution.md)\n  --metrics-json PATH  periodically dump the telemetry snapshot\n                (docs/observability.md) to PATH as JSON; also written\n                once at shutdown\n\nCompile <app> and serve tiles over TCP. v1 frames target <app>; v2\nframes may name any registered app; v3 frames carry a whole-image\noutput extent, tiled onto the fixed design (docs/protocol.md).\nLive counters are queryable with `pushmem stats <host:port>`.\nConcurrent v3 requests share one tile scheduler and, past the\nbounded queue, new connections are answered STATUS_BUSY with a retry\nhint instead of hanging (docs/serving.md). PUSHMEM_ACCEPT_SHARDS=K\nshards the accept loop across K threads (default 2).",
+        "serve-all" => "usage: pushmem serve-all [--addr A] [--workers N] [--apps a,b,c] [--warm] [--tuned-dir D] [--engine E] [--metrics-json PATH]\n\n  --addr A      listen address (default: 127.0.0.1:7411)\n  --workers N   connection worker threads (default: 8)\n  --apps LIST   comma-separated app names to register (default: the\n                seven Table III apps; variants like harris_sch4 allowed)\n  --warm        compile every registered app up front instead of lazily\n                on first request\n  --tuned-dir D per-app tuner-recorded schedules from D override the\n                hand-written defaults (see `pushmem tune`)\n  --engine E    exec|exec-scalar|sim|auto (default: auto)\n  --metrics-json PATH  periodically dump the telemetry snapshot to PATH\n\nServe every registered app over one TCP port (v2 frames carry the app\nname; see docs/protocol.md). Designs are compiled once, cached, and\nshared across connections. Prints one [req] stats line per request.\nAdmission control and the cross-request tile scheduler behave as in\n`pushmem serve` (docs/serving.md; PUSHMEM_ACCEPT_SHARDS=K, default 2).",
         "stats" => "usage: pushmem stats <host:port>\n\nQuery a running `pushmem serve`/`serve-all` server for its telemetry\nsnapshot over the wire (the 8-byte ADMIN_STATS frame, docs/protocol.md)\nand print the JSON to stdout: request/error counters, per-stage latency\nhistograms with quantiles, exec-engine lane/thread counters, and the\nmost recent request records. See docs/observability.md for the schema.",
         _ => "usage: pushmem <list|compile|run|validate|report|tables|tune|serve|serve-all|stats> [args]\nsee `pushmem list` for applications and `pushmem <cmd> --help` for flags",
     }

@@ -56,6 +56,11 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;
 
+/// Acceptor-shard ceiling: the per-shard accept counters are a fixed
+/// array so the recording path stays lock-free (`PUSHMEM_ACCEPT_SHARDS`
+/// is clamped to this in `coordinator/serve.rs`).
+pub const MAX_ACCEPT_SHARDS: usize = 8;
+
 /// Global sampling switch for the hot-path hooks. Off by default so
 /// standalone CLI runs, the tuner, and the fuzz suites pay one
 /// relaxed bool load per kernel dispatch and nothing else; the
@@ -161,6 +166,15 @@ pub struct Metrics {
     pub stats_requests: Counter,
     pub accept_errors: Counter,
     pub queue_full: Counter,
+    /// Connections rejected at admission with `STATUS_BUSY` + a
+    /// retry-after hint (docs/serving.md). On the serving path every
+    /// `queue_full` event becomes exactly one `requests_busy`
+    /// rejection — the reconciliation the loopback suite pins.
+    pub requests_busy: Counter,
+    /// Accepted connections per acceptor shard
+    /// (`PUSHMEM_ACCEPT_SHARDS`); shards beyond the configured count
+    /// stay zero.
+    pub accepts_by_shard: [Counter; MAX_ACCEPT_SHARDS],
     pub words_in: Counter,
     pub words_out: Counter,
     /// Accelerator passes behind served OK responses (1 per fixed-box
@@ -170,6 +184,16 @@ pub struct Metrics {
     // -- worker pool ------------------------------------------------
     pub jobs_conn: Counter,
     pub jobs_tiles: Counter,
+    /// Tile plans actually built (cache misses on
+    /// `Compiled::tile_plan`); coalesced same-extent requests share
+    /// one build, so M concurrent identical v3 requests move this by
+    /// exactly 1.
+    pub tile_plan_builds: Counter,
+    /// Batches admitted to the shared tile scheduler.
+    pub sched_batches: Counter,
+    /// Tiles a worker executed for a batch it did **not** submit —
+    /// the cross-request work-stealing the scheduler exists for.
+    pub sched_cross_tiles: Counter,
     /// Summed wall time workers spent inside jobs; utilization =
     /// worker_busy_ns / (uptime * workers_total).
     pub worker_busy_ns: Counter,
@@ -231,11 +255,16 @@ impl Metrics {
             stats_requests: Counter::new(),
             accept_errors: Counter::new(),
             queue_full: Counter::new(),
+            requests_busy: Counter::new(),
+            accepts_by_shard: std::array::from_fn(|_| Counter::new()),
             words_in: Counter::new(),
             words_out: Counter::new(),
             tiles_served: Counter::new(),
             jobs_conn: Counter::new(),
             jobs_tiles: Counter::new(),
+            tile_plan_builds: Counter::new(),
+            sched_batches: Counter::new(),
+            sched_cross_tiles: Counter::new(),
             worker_busy_ns: Counter::new(),
             queue_depth: Gauge::new(),
             workers_busy: Gauge::new(),
@@ -315,11 +344,23 @@ impl Metrics {
             ("stats_requests", self.stats_requests.get()),
             ("accept_errors", self.accept_errors.get()),
             ("queue_full", self.queue_full.get()),
+            ("requests_busy", self.requests_busy.get()),
+            ("accepts_shard0", self.accepts_by_shard[0].get()),
+            ("accepts_shard1", self.accepts_by_shard[1].get()),
+            ("accepts_shard2", self.accepts_by_shard[2].get()),
+            ("accepts_shard3", self.accepts_by_shard[3].get()),
+            ("accepts_shard4", self.accepts_by_shard[4].get()),
+            ("accepts_shard5", self.accepts_by_shard[5].get()),
+            ("accepts_shard6", self.accepts_by_shard[6].get()),
+            ("accepts_shard7", self.accepts_by_shard[7].get()),
             ("words_in", self.words_in.get()),
             ("words_out", self.words_out.get()),
             ("tiles_served", self.tiles_served.get()),
             ("jobs_conn", self.jobs_conn.get()),
             ("jobs_tiles", self.jobs_tiles.get()),
+            ("tile_plan_builds", self.tile_plan_builds.get()),
+            ("sched_batches", self.sched_batches.get()),
+            ("sched_cross_tiles", self.sched_cross_tiles.get()),
             ("worker_busy_ns", self.worker_busy_ns.get()),
             ("tiles_executed", self.tiles_executed.get()),
             ("exec_kernels", self.exec_kernels.get()),
@@ -583,6 +624,12 @@ mod tests {
             "\"requests_total\":2",
             "\"requests_ok\":1",
             "\"requests_failed\":1",
+            "\"requests_busy\":",
+            "\"accepts_shard0\":",
+            "\"accepts_shard7\":",
+            "\"tile_plan_builds\":",
+            "\"sched_batches\":",
+            "\"sched_cross_tiles\":",
             "\"gauges\":{",
             "\"queue_depth\":",
             "\"histograms\":{",

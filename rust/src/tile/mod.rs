@@ -32,11 +32,19 @@
 //!   (`coordinator/serve.rs`) — and [`TileBatch::wait`] stitches the
 //!   finished tiles and sums their [`crate::cgra::SimStats`].
 //!
+//! * [`TileScheduler`] sits between the two halves on the serving
+//!   path: it holds the claim cursors of **all** in-flight batches so
+//!   pool workers drain tiles in a weighted round-robin across
+//!   requests — oldest first, nobody starved — instead of dedicating
+//!   themselves to one batch (docs/serving.md).
+//!
 //! Full halo math, edge-clamping rationale, and the v3 wire frames
 //! that carry requested extents: docs/tiling.md.
 
 pub mod plan;
 pub mod run;
+pub mod sched;
 
-pub use plan::{TilePlan, TileSlot};
-pub use run::{run_tiled, TileBatch, TileScratch, TiledResult};
+pub use plan::{ImageSource, TilePlan, TileSlot};
+pub use run::{run_tiled, BatchPayload, TileBatch, TileScratch, TiledResult};
+pub use sched::TileScheduler;

@@ -17,6 +17,59 @@ use crate::halide::bounds::Intervals;
 use crate::poly::set::{BoxSet, Dim};
 use crate::tensor::Tensor;
 
+/// A whole-image input payload the gather path reads from: either an
+/// owned [`Tensor`] (the in-process `run_tiled` shape) or raw
+/// little-endian words still sitting in the request frame buffer (the
+/// server's zero-copy v3 path — payload bytes are copied exactly once,
+/// frame → tile scratch, instead of frame → `Vec<i32>` → scratch).
+/// Both variants index the same row-major layout the wire declares
+/// (docs/protocol.md), pinned equal by the gather tests below.
+#[derive(Clone, Copy)]
+pub enum ImageSource<'a> {
+    Tensor(&'a Tensor),
+    Frame { shape: &'a BoxSet, bytes: &'a [u8] },
+}
+
+impl ImageSource<'_> {
+    pub fn shape(&self) -> &BoxSet {
+        match self {
+            ImageSource::Tensor(t) => &t.shape,
+            ImageSource::Frame { shape, .. } => shape,
+        }
+    }
+
+    /// Read one word at image point `q` (must lie inside the shape).
+    #[inline]
+    fn get(&self, q: &[i64]) -> i32 {
+        match self {
+            ImageSource::Tensor(t) => t.get(q),
+            ImageSource::Frame { shape, bytes } => {
+                let mut idx = 0usize;
+                let mut mul = 1usize;
+                for (i, d) in shape.dims.iter().enumerate().rev() {
+                    idx += (q[i] - d.min) as usize * mul;
+                    mul *= d.extent as usize;
+                }
+                let b = &bytes[4 * idx..4 * idx + 4];
+                i32::from_le_bytes([b[0], b[1], b[2], b[3]])
+            }
+        }
+    }
+
+    /// Whole-image copy for the aligned fast path (`dst` must have
+    /// exactly the source's cardinality).
+    fn copy_into(&self, dst: &mut [i32]) {
+        match self {
+            ImageSource::Tensor(t) => dst.copy_from_slice(&t.data),
+            ImageSource::Frame { bytes, .. } => {
+                for (d, c) in dst.iter_mut().zip(bytes.chunks_exact(4)) {
+                    *d = i32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                }
+            }
+        }
+    }
+}
+
 /// One accelerator pass of the plan: where its (full-extent) output
 /// tile lands in the image, and where each input slice is read from.
 #[derive(Clone, Debug)]
@@ -264,7 +317,7 @@ impl TilePlan {
         &self,
         k: usize,
         slot: &TileSlot,
-        full: &Tensor,
+        full: ImageSource<'_>,
         dst: &mut Tensor,
         p: &mut [i64],
         q: &mut [i64],
@@ -272,8 +325,8 @@ impl TilePlan {
         let compiled = &self.compiled_input_boxes[k];
         let shift = &slot.input_shift[k];
         debug_assert!(dst.shape.same_layout(compiled), "dst not pre-shaped");
-        if shift.iter().all(|&s| s == 0) && full.shape.same_layout(compiled) {
-            dst.data.copy_from_slice(&full.data);
+        if shift.iter().all(|&s| s == 0) && full.shape().same_layout(compiled) {
+            full.copy_into(&mut dst.data);
             return;
         }
         // Manual row-major odometer over the compiled box: `p` is the
@@ -286,10 +339,11 @@ impl TilePlan {
         for (v, d) in p.iter_mut().zip(&compiled.dims) {
             *v = d.min;
         }
+        let full_shape = full.shape();
         let mut idx = 0usize;
         loop {
             for i in 0..rank {
-                let d = &full.shape.dims[i];
+                let d = &full_shape.dims[i];
                 q[i] = (p[i] + shift[i]).clamp(d.min, d.max());
             }
             dst.data[idx] = full.get(q);
@@ -456,7 +510,7 @@ mod tests {
         let mut dst = Tensor::zeros(plan.compiled_input_boxes[0].clone());
         for slot in &plan.tiles {
             let want = &plan.gather(slot, &inputs)["input"];
-            plan.gather_into(0, slot, &full, &mut dst, &mut ca, &mut cb);
+            plan.gather_into(0, slot, ImageSource::Tensor(&full), &mut dst, &mut ca, &mut cb);
             assert_eq!(dst.data, want.data, "origin {:?}", slot.origin);
         }
         let tile_box = BoxSet::from_extents(&plan.tile);
@@ -470,5 +524,45 @@ mod tests {
             plan.scatter_into(slot, &t, &mut b, &mut ca, &mut cb);
         }
         assert_eq!(a.data, b.data);
+    }
+
+    /// A Frame source over the tensor's wire bytes gathers exactly
+    /// what the Tensor source does, on every tile of a plan whose edge
+    /// tiles exercise the clamp path — the zero-copy v3 path can never
+    /// change served words. The 33x20 extent exercises the shifted
+    /// odometer path; the 14x14 extent (exactly one design tile) is
+    /// zero-shift with matching layout, the aligned fast path.
+    #[test]
+    fn frame_source_matches_tensor_source() {
+        let c = compile(&apps::gaussian::build(14)).unwrap();
+        for extent in [vec![33i64, 20], vec![14, 14]] {
+            let plan = TilePlan::build(&c, &extent).unwrap();
+            let full = Tensor::from_fn(plan.input_boxes[0].clone(), |p| {
+                (13 * p[0] - 5 * p[1] + 2) as i32
+            });
+            let bytes: Vec<u8> = full.data.iter().flat_map(|w| w.to_le_bytes()).collect();
+            let (mut ca, mut cb) = (vec![0i64; 4], vec![0i64; 4]);
+            let mut from_tensor = Tensor::zeros(plan.compiled_input_boxes[0].clone());
+            let mut from_frame = Tensor::zeros(plan.compiled_input_boxes[0].clone());
+            for slot in &plan.tiles {
+                plan.gather_into(
+                    0,
+                    slot,
+                    ImageSource::Tensor(&full),
+                    &mut from_tensor,
+                    &mut ca,
+                    &mut cb,
+                );
+                plan.gather_into(
+                    0,
+                    slot,
+                    ImageSource::Frame { shape: &full.shape, bytes: &bytes },
+                    &mut from_frame,
+                    &mut ca,
+                    &mut cb,
+                );
+                assert_eq!(from_frame.data, from_tensor.data, "origin {:?}", slot.origin);
+            }
+        }
     }
 }

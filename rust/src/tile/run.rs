@@ -45,7 +45,7 @@ use crate::coordinator::Compiled;
 use crate::exec::{Engine, EngineRun};
 use crate::tensor::Tensor;
 
-use super::plan::TilePlan;
+use super::plan::{ImageSource, TilePlan};
 
 /// A stitched whole-image result.
 pub struct TiledResult {
@@ -107,12 +107,23 @@ struct BatchState {
     engine_used: Option<Engine>,
 }
 
+/// The whole-image inputs a batch gathers from: owned tensors (the
+/// in-process path), or the raw request frame buffer plus per-input
+/// word ranges `(byte_off, words)` in plan order (the server's
+/// zero-copy v3 path — the batch owns the frame bytes because any
+/// pool worker may gather from them long after the submitting
+/// connection's stack frame is gone).
+pub enum BatchPayload {
+    Tensors(BTreeMap<String, Tensor>),
+    Frame { buf: Vec<u8>, ranges: Vec<(usize, usize)> },
+}
+
 /// One in-flight whole-image request (see module docs).
 pub struct TileBatch {
     c: Arc<Compiled>,
     engine: Engine,
     plan: Arc<TilePlan>,
-    inputs: BTreeMap<String, Tensor>,
+    payload: BatchPayload,
     /// Next unclaimed tile index; `>= tile_count` once drained (or
     /// poisoned to stop claims after a failure).
     next: AtomicUsize,
@@ -130,12 +141,59 @@ impl TileBatch {
         inputs: BTreeMap<String, Tensor>,
     ) -> Result<Arc<TileBatch>> {
         plan.check_inputs(&inputs)?;
+        Self::with_payload(c, engine, plan, BatchPayload::Tensors(inputs))
+    }
+
+    /// The zero-copy constructor: whole-image inputs stay as
+    /// little-endian words inside the request frame `buf`, one
+    /// `(byte_off, word_count)` range per declared input in plan
+    /// order. Word counts are validated against the plan's
+    /// whole-image boxes (the serving layer has already diagnosed
+    /// mismatches client-side; this guard keeps the batch honest for
+    /// any other caller).
+    pub fn new_frame(
+        c: Arc<Compiled>,
+        engine: Engine,
+        plan: Arc<TilePlan>,
+        buf: Vec<u8>,
+        ranges: Vec<(usize, usize)>,
+    ) -> Result<Arc<TileBatch>> {
+        anyhow::ensure!(
+            ranges.len() == plan.input_names.len(),
+            "frame payload has {} inputs, plan declares {}",
+            ranges.len(),
+            plan.input_names.len()
+        );
+        for ((name, b), &(off, words)) in
+            plan.input_names.iter().zip(&plan.input_boxes).zip(&ranges)
+        {
+            anyhow::ensure!(
+                words as i64 == b.cardinality(),
+                "input {name}: frame range has {words} words, whole-image box {b} needs {}",
+                b.cardinality()
+            );
+            anyhow::ensure!(
+                off + 4 * words <= buf.len(),
+                "input {name}: frame range [{off}, {}) overruns the {}-byte buffer",
+                off + 4 * words,
+                buf.len()
+            );
+        }
+        Self::with_payload(c, engine, plan, BatchPayload::Frame { buf, ranges })
+    }
+
+    fn with_payload(
+        c: Arc<Compiled>,
+        engine: Engine,
+        plan: Arc<TilePlan>,
+        payload: BatchPayload,
+    ) -> Result<Arc<TileBatch>> {
         let output = Tensor::zeros(plan.out_box.clone());
         Ok(Arc::new(TileBatch {
             c,
             engine,
             plan,
-            inputs,
+            payload,
             next: AtomicUsize::new(0),
             state: Mutex::new(BatchState {
                 output: Some(output),
@@ -148,8 +206,63 @@ impl TileBatch {
         }))
     }
 
+    /// The whole-image source for input `k` (named `name`), whichever
+    /// payload variant backs it.
+    fn source(&self, k: usize, name: &str) -> ImageSource<'_> {
+        match &self.payload {
+            BatchPayload::Tensors(m) => ImageSource::Tensor(&m[name]),
+            BatchPayload::Frame { buf, ranges } => {
+                let (off, words) = ranges[k];
+                ImageSource::Frame {
+                    shape: &self.plan.input_boxes[k],
+                    bytes: &buf[off..off + 4 * words],
+                }
+            }
+        }
+    }
+
     pub fn tile_count(&self) -> usize {
         self.plan.tile_count()
+    }
+
+    /// The design this batch runs on — the scheduler key worker
+    /// threads use to reuse a warmed runner/scratch across batches.
+    pub fn compiled(&self) -> &Arc<Compiled> {
+        &self.c
+    }
+
+    pub fn plan(&self) -> &Arc<TilePlan> {
+        &self.plan
+    }
+
+    pub fn engine(&self) -> Engine {
+        self.engine
+    }
+
+    /// Whether any tile is still unclaimed (claims may still be
+    /// executing). The scheduler prunes drained batches on this.
+    pub fn has_unclaimed(&self) -> bool {
+        self.next.load(Ordering::Relaxed) < self.plan.tile_count()
+    }
+
+    /// Tiles still unclaimed — the scheduler's backlog contribution.
+    pub fn unclaimed(&self) -> usize {
+        self.plan.tile_count() - self.claimed()
+    }
+
+    /// Tiles claimed so far (capped at the tile count — the cursor
+    /// overshoots on concurrent claims and failure poisoning).
+    pub fn claimed(&self) -> usize {
+        self.next.load(Ordering::Relaxed).min(self.plan.tile_count())
+    }
+
+    /// Whether the batch has fully resolved: every tile landed, or
+    /// the batch failed. Distinct from [`TileBatch::has_unclaimed`] —
+    /// between a claim and its landing the batch has no unclaimed
+    /// tiles but is not yet done.
+    pub fn is_done(&self) -> bool {
+        let st = self.lock();
+        st.failed.is_some() || st.finished == self.plan.tile_count()
     }
 
     fn lock(&self) -> std::sync::MutexGuard<'_, BatchState> {
@@ -211,6 +324,22 @@ impl TileBatch {
         }
     }
 
+    /// Claim and execute exactly **one** tile; `false` when nothing
+    /// was left to claim. The scheduler's drain unit
+    /// ([`super::TileScheduler`]): a worker claims one tile, then
+    /// re-asks the scheduler which batch deserves its next claim, so
+    /// no single large batch monopolizes a thread that other requests
+    /// are waiting on. A failed step still returns `true` — a claim
+    /// was spent; the failure is recorded on the batch.
+    pub fn work_one(&self, runner: &mut EngineRun, scratch: &mut TileScratch) -> bool {
+        let i = self.next.fetch_add(1, Ordering::Relaxed);
+        if i >= self.plan.tile_count() {
+            return false;
+        }
+        self.step(i, runner, scratch);
+        true
+    }
+
     /// Execute one claimed tile: gather into the scratch slices, run
     /// into the reused tile output, scatter into the stitched image.
     /// Returns `false` when the batch failed and the claimant should
@@ -235,7 +364,7 @@ impl TileBatch {
                 self.plan.gather_into(
                     k,
                     slot,
-                    &self.inputs[name],
+                    self.source(k, name),
                     dst,
                     &mut scratch.ca,
                     &mut scratch.cb,
@@ -402,6 +531,90 @@ mod tests {
         .err()
         .expect("missing inputs must fail");
         assert!(format!("{err:#}").contains("missing input"), "{err:#}");
+    }
+
+    /// A frame-payload batch (the server's zero-copy v3 path) stitches
+    /// the same image as the tensor-payload batch, and `new_frame`
+    /// rejects ranges that do not match the plan's whole-image boxes.
+    #[test]
+    fn frame_payload_batch_matches_tensor_batch() {
+        let c = Arc::new(compile(&apps::gaussian::build(14)).unwrap());
+        let plan = c.tile_plan(&[33, 20]).unwrap();
+        let (inputs, want) = golden(14, &[33, 20]);
+        // Serialize the inputs the way a v3 frame carries them:
+        // concatenated little-endian row-major words, one range each.
+        let mut buf = Vec::new();
+        let mut ranges = Vec::new();
+        for name in &plan.input_names {
+            let t = &inputs[name];
+            ranges.push((buf.len(), t.data.len()));
+            for w in &t.data {
+                buf.extend_from_slice(&w.to_le_bytes());
+            }
+        }
+        let b = TileBatch::new_frame(
+            Arc::clone(&c),
+            Engine::Exec,
+            Arc::clone(&plan),
+            buf.clone(),
+            ranges.clone(),
+        )
+        .unwrap();
+        b.work();
+        let res = b.wait().unwrap();
+        assert_eq!(res.tiles, plan.tile_count());
+        res.output.shape.for_each_point(|p| {
+            assert_eq!(res.output.get(p), want.get(p), "at {p:?}");
+        });
+
+        // Wrong word count and buffer overrun are rejected up front.
+        let mut short = ranges.clone();
+        short[0].1 -= 1;
+        assert!(TileBatch::new_frame(
+            Arc::clone(&c),
+            Engine::Exec,
+            Arc::clone(&plan),
+            buf.clone(),
+            short
+        )
+        .is_err());
+        let mut shifted = ranges.clone();
+        shifted[0].0 += 8;
+        assert!(TileBatch::new_frame(
+            Arc::clone(&c),
+            Engine::Exec,
+            Arc::clone(&plan),
+            buf.clone(),
+            shifted
+        )
+        .is_err());
+        assert!(TileBatch::new_frame(Arc::clone(&c), Engine::Exec, plan, buf, vec![]).is_err());
+    }
+
+    /// `work_one` claims exactly one tile per call and reports when
+    /// the batch has nothing left; the bookkeeping accessors the
+    /// scheduler relies on track it.
+    #[test]
+    fn work_one_claims_a_single_tile() {
+        let c = Arc::new(compile(&apps::gaussian::build(14)).unwrap());
+        let plan = c.tile_plan(&[28, 28]).unwrap();
+        let (inputs, _) = golden(14, &[28, 28]);
+        let b = TileBatch::new(Arc::clone(&c), Engine::Exec, plan, inputs).unwrap();
+        let mut runner = c.runner(Engine::Exec).unwrap();
+        let mut scratch = TileScratch::new(b.plan());
+        assert_eq!(b.tile_count(), 4);
+        for k in 1..=4 {
+            assert!(b.has_unclaimed());
+            assert!(!b.is_done());
+            assert!(b.work_one(&mut runner, &mut scratch));
+            assert_eq!(b.claimed(), k);
+            assert_eq!(b.unclaimed(), 4 - k);
+        }
+        assert!(!b.has_unclaimed());
+        assert!(b.is_done());
+        assert!(!b.work_one(&mut runner, &mut scratch));
+        assert_eq!(b.claimed(), 4);
+        assert!(b.wait().is_ok());
     }
 
     /// The zero-allocation contract of the steady-state drain: after

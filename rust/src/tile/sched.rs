@@ -1,0 +1,243 @@
+//! [`TileScheduler`]: cross-request tile scheduling for the serving
+//! pool (docs/serving.md).
+//!
+//! The PR-5 serving design posted each whole-image request to the job
+//! queue as an opportunistic `Job::Tiles(Weak<TileBatch>)` fan-out: a
+//! worker that picked the job up dedicated itself to that one batch
+//! until the batch drained. Two consequences: N concurrent requests
+//! each paid their own recruitment round, and one large image could
+//! head-of-line-block every small request behind it on the queue.
+//!
+//! The scheduler replaces that with one shared structure holding the
+//! claim cursors of **all** in-flight batches, in admission order.
+//! Workers ask it one question — "which batch deserves my next tile
+//! claim?" — via [`TileScheduler::claim`], execute exactly one tile
+//! ([`crate::tile::TileBatch::work_one`]), and ask again. The answer
+//! is a weighted round-robin: the **oldest** live batch gets every
+//! other claim (it admitted first, it finishes first), and the
+//! remaining claims rotate across the younger batches so none of them
+//! starves while the oldest drains.
+//!
+//! ## Exactness
+//!
+//! The scheduler only decides *which thread claims which tile next*.
+//! Tile execution itself — gather, engine run, scatter — is untouched
+//! and order-independent: every tile reads only its own input slice
+//! and writes only its own output region (overlapping clamped tiles
+//! rewrite bit-identical words, see [`crate::tile::TilePlan`]), so
+//! any interleaving of claims across requests stitches exactly the
+//! images serial execution would. The coalescing loopback suite pins
+//! this over the wire.
+//!
+//! Batches are held as [`Weak`] references: the submitting connection
+//! owns the only strong `Arc`, so a request that fails or disconnects
+//! unregisters itself by dropping — dead and fully-claimed entries
+//! are pruned on every call.
+
+use std::sync::{Arc, Mutex, Weak};
+
+use super::TileBatch;
+
+/// Shared across all acceptor threads, pool workers, and submitting
+/// connections of one server (see module docs).
+pub struct TileScheduler {
+    state: Mutex<SchedState>,
+}
+
+struct SchedState {
+    /// Live batches in admission order — index 0 is the oldest.
+    entries: Vec<Weak<TileBatch>>,
+    /// Claim counter driving the oldest-first weighting.
+    tick: u64,
+    /// Rotation cursor over the non-oldest entries.
+    rr: usize,
+}
+
+impl Default for TileScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TileScheduler {
+    pub fn new() -> TileScheduler {
+        TileScheduler {
+            state: Mutex::new(SchedState { entries: Vec::new(), tick: 0, rr: 0 }),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, SchedState> {
+        // State is a list of weak refs and two counters — always
+        // valid whole, so poisoned-lock recovery is safe.
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Register an in-flight batch. The caller keeps its strong
+    /// `Arc`; the scheduler prunes the entry once the batch is fully
+    /// claimed or dropped.
+    pub fn submit(&self, batch: &Arc<TileBatch>) {
+        self.lock().entries.push(Arc::downgrade(batch));
+    }
+
+    /// Pick the batch that deserves the caller's next tile claim, or
+    /// `None` when no batch has unclaimed tiles. Weighted
+    /// round-robin: even ticks go to the oldest live batch, odd ticks
+    /// rotate across the rest (with one live batch, every tick is
+    /// its). The caller should claim exactly one tile
+    /// ([`TileBatch::work_one`]) and ask again, so scheduling
+    /// decisions track batch arrivals and completions claim by claim.
+    pub fn claim(&self) -> Option<Arc<TileBatch>> {
+        let mut st = self.lock();
+        let mut live: Vec<Arc<TileBatch>> = Vec::with_capacity(st.entries.len());
+        st.entries.retain(|w| match w.upgrade() {
+            Some(b) if b.has_unclaimed() => {
+                live.push(b);
+                true
+            }
+            _ => false,
+        });
+        if live.is_empty() {
+            return None;
+        }
+        let idx = if live.len() == 1 || st.tick % 2 == 0 {
+            0
+        } else {
+            let i = 1 + st.rr % (live.len() - 1);
+            st.rr += 1;
+            i
+        };
+        st.tick += 1;
+        Some(live.swap_remove(idx))
+    }
+
+    /// Unclaimed tiles across every live batch — the admission
+    /// layer's in-flight backlog signal (prunes as it counts).
+    pub fn backlog(&self) -> u64 {
+        let mut st = self.lock();
+        let mut sum = 0u64;
+        st.entries.retain(|w| match w.upgrade() {
+            Some(b) if b.has_unclaimed() => {
+                sum += b.unclaimed() as u64;
+                true
+            }
+            _ => false,
+        });
+        sum
+    }
+
+    /// Live batches with unclaimed tiles.
+    pub fn active(&self) -> usize {
+        let mut st = self.lock();
+        st.entries.retain(|w| w.upgrade().is_some_and(|b| b.has_unclaimed()));
+        st.entries.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeMap;
+
+    use super::*;
+    use crate::apps;
+    use crate::coordinator::{compile, Compiled};
+    use crate::exec::Engine;
+    use crate::tensor::Tensor;
+    use crate::tile::{TileBatch, TileScratch};
+
+    fn four_tile_batch(c: &Arc<Compiled>) -> Arc<TileBatch> {
+        let plan = c.tile_plan(&[28, 28]).unwrap();
+        let mut inputs = BTreeMap::new();
+        for (name, b) in plan.input_names.iter().zip(&plan.input_boxes) {
+            inputs.insert(name.clone(), Tensor::from_fn(b.clone(), |p| (p[0] + p[1]) as i32));
+        }
+        TileBatch::new(Arc::clone(c), Engine::Exec, plan, inputs).unwrap()
+    }
+
+    /// Two live batches: a single drainer's claims alternate strictly
+    /// between them (oldest on even ticks, the other on odd), so both
+    /// claim cursors advance together — the no-starvation property
+    /// the coalescing loopback suite observes over the wire.
+    #[test]
+    fn claims_interleave_across_two_batches() {
+        let c = Arc::new(compile(&apps::gaussian::build(14)).unwrap());
+        let sched = TileScheduler::new();
+        let a = four_tile_batch(&c);
+        let b = four_tile_batch(&c);
+        sched.submit(&a);
+        sched.submit(&b);
+        assert_eq!(sched.active(), 2);
+        assert_eq!(sched.backlog(), 8);
+
+        let mut runner = c.runner(Engine::Exec).unwrap();
+        let mut scratch = TileScratch::new(a.plan());
+        let mut order = Vec::new();
+        while let Some(batch) = sched.claim() {
+            assert!(batch.work_one(&mut runner, &mut scratch));
+            order.push(if Arc::ptr_eq(&batch, &a) { 'a' } else { 'b' });
+            // Both cursors advance in lockstep: after any prefix the
+            // two claim counts differ by at most one.
+            assert!(a.claimed().abs_diff(b.claimed()) <= 1, "order so far {order:?}");
+        }
+        assert_eq!(order.iter().collect::<String>(), "abababab");
+        assert!(a.wait().is_ok());
+        assert!(b.wait().is_ok());
+        assert_eq!(sched.backlog(), 0);
+        assert_eq!(sched.active(), 0);
+    }
+
+    /// Three batches: the oldest gets every even tick (half of all
+    /// claims) and drains first; the younger two share the odd ticks
+    /// evenly — weighted toward the oldest, starving nobody.
+    #[test]
+    fn oldest_batch_gets_half_of_the_claims() {
+        let c = Arc::new(compile(&apps::gaussian::build(14)).unwrap());
+        let sched = TileScheduler::new();
+        let batches = [four_tile_batch(&c), four_tile_batch(&c), four_tile_batch(&c)];
+        for b in &batches {
+            sched.submit(b);
+        }
+        let mut runner = c.runner(Engine::Exec).unwrap();
+        let mut scratch = TileScratch::new(batches[0].plan());
+        let mut first_drained = None;
+        while let Some(batch) = sched.claim() {
+            assert!(batch.work_one(&mut runner, &mut scratch));
+            for (i, b) in batches.iter().enumerate() {
+                if !b.has_unclaimed() && first_drained.is_none() {
+                    first_drained = Some(i);
+                    // At the moment the oldest is fully claimed it
+                    // has had every even tick — half of all claims —
+                    // and the younger two split the odd ticks, both
+                    // having progressed.
+                    assert_eq!(batches[1].claimed() + batches[2].claimed(), 3);
+                    assert!(batches[1].claimed() >= 1, "second batch starved");
+                    assert!(batches[2].claimed() >= 1, "third batch starved");
+                }
+            }
+        }
+        assert_eq!(first_drained, Some(0), "the oldest batch must drain first");
+        for b in &batches {
+            assert_eq!(b.claimed(), 4);
+            assert!(b.wait().is_ok());
+        }
+    }
+
+    /// Dropped and fully-claimed batches disappear from the
+    /// scheduler's view without any explicit unregister call.
+    #[test]
+    fn dead_and_drained_batches_are_pruned() {
+        let c = Arc::new(compile(&apps::gaussian::build(14)).unwrap());
+        let sched = TileScheduler::new();
+        let a = four_tile_batch(&c);
+        sched.submit(&a);
+        drop(a);
+        assert!(sched.claim().is_none());
+        assert_eq!(sched.active(), 0);
+
+        let b = four_tile_batch(&c);
+        sched.submit(&b);
+        b.work(); // drain on this thread
+        assert!(sched.claim().is_none(), "fully-claimed batch must be pruned");
+        assert_eq!(sched.backlog(), 0);
+        assert!(b.wait().is_ok());
+    }
+}

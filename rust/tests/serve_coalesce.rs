@@ -1,0 +1,212 @@
+//! Multi-request serving tests over the wire: concurrent v3 clients
+//! against one server, asserting the PR-8 traffic-engine properties
+//! end to end — coalescing (M identical requests share one
+//! single-flight tile-plan build), bit-exactness under cross-request
+//! tile scheduling, and busy-rejection accounting that reconciles
+//! exactly with what clients observed (docs/serving.md).
+//!
+//! The metrics registry is process-global, so every test takes
+//! `TEST_LOCK` and asserts *deltas* between two over-the-wire
+//! snapshots, never absolute values (the pattern of
+//! rust/tests/telemetry_loopback.rs).
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use pushmem::coordinator::serve::{self, ServeConfig};
+use pushmem::coordinator::CompiledRegistry;
+use pushmem::tensor::Tensor;
+
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+fn spawn_server(cfg: ServeConfig) -> std::net::SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || serve::serve_on(listener, cfg));
+    addr
+}
+
+fn stats(addr: std::net::SocketAddr) -> String {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    serve::request_stats(&mut stream).unwrap()
+}
+
+/// Poll STATS until `pred` holds (counters are recorded after the
+/// response bytes, so a client can observe its response before the
+/// counters move). Panics with the last snapshot on timeout.
+fn stats_until(addr: std::net::SocketAddr, pred: impl Fn(&str) -> bool) -> String {
+    let mut last = String::new();
+    for _ in 0..400 {
+        last = stats(addr);
+        if pred(&last) {
+            return last;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    panic!("stats never converged; last snapshot: {last}");
+}
+
+/// First `"key":<u64>` occurrence (counter and gauge names are unique
+/// across the snapshot's sections).
+fn json_u64(json: &str, key: &str) -> u64 {
+    let pat = format!("\"{key}\":");
+    let i = json
+        .find(&pat)
+        .unwrap_or_else(|| panic!("key {key:?} not in snapshot: {json}"));
+    let digits: String =
+        json[i + pat.len()..].chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().unwrap_or_else(|_| panic!("key {key:?} is not a u64 in: {json}"))
+}
+
+/// The acceptance scenario for cross-request scheduling: M concurrent
+/// v3 clients requesting the same app at the same extent. Every
+/// response must be bit-exact against the host golden, and the
+/// counters must show true coalescing — exactly **one** tile-plan
+/// build (single-flight under the cache lock), M scheduler batches,
+/// and M × tile_count tiles executed, with any cross-request service
+/// bounded by the work that existed.
+#[test]
+fn concurrent_identical_v3_requests_coalesce_onto_one_plan() {
+    let _g = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    const M: usize = 4;
+    let registry = Arc::new(CompiledRegistry::new());
+    let addr = spawn_server(ServeConfig::multi(Arc::clone(&registry), 3));
+    let extent = vec![100i64, 70];
+
+    // Host golden: gaussian lowered at tile = extent.
+    let (mut program, _) = pushmem::apps::by_name("gaussian").unwrap();
+    program.schedule.tile = extent.clone();
+    let lp = pushmem::halide::lower::lower(&program).unwrap();
+    let inputs = pushmem::coordinator::gen_inputs(&lp);
+    let want = lp.execute(&inputs).unwrap()[&lp.output].clone();
+    let ordered: Vec<Tensor> = lp.inputs.iter().map(|n| inputs[n].clone()).collect();
+
+    // Compile the design before the baseline snapshot so the delta
+    // isolates plan builds, not compilation.
+    let c = registry.get("gaussian").unwrap();
+    let before = stats(addr);
+    let v3_0 = json_u64(&before, "requests_v3");
+
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for _ in 0..M {
+            let (extent, ordered, want) = (&extent, &ordered, &want);
+            handles.push(s.spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                let refs: Vec<&Tensor> = ordered.iter().collect();
+                let (words, _, _) =
+                    serve::request_extent(&mut stream, Some("gaussian"), extent, &refs)
+                        .unwrap();
+                assert_eq!(words, want.data, "stitched response != host golden");
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+
+    let after = stats_until(addr, |j| json_u64(j, "requests_v3") >= v3_0 + M as u64);
+    let d = |key: &str| json_u64(&after, key) - json_u64(&before, key);
+
+    // Coalescing, the tentpole observable: M concurrent identical
+    // requests share ONE single-flight plan build. (The plan cache is
+    // per (design, extent); the losers block on the cache lock and
+    // reuse the winner's Arc.)
+    assert_eq!(d("tile_plan_builds"), 1, "before:\n{before}\nafter:\n{after}");
+
+    // Request and tile accounting: every request fully served.
+    let tiles = c.tile_plan(&extent).unwrap().tile_count() as u64;
+    assert_eq!(tiles, 4);
+    assert_eq!(d("requests_v3"), M as u64);
+    assert_eq!(d("requests_ok"), M as u64);
+    assert_eq!(d("requests_failed"), 0);
+    assert_eq!(d("sched_batches"), M as u64);
+    assert_eq!(d("tiles_served"), M as u64 * tiles);
+    assert_eq!(d("tiles_executed"), M as u64 * tiles);
+
+    // Cross-request service (tiles a thread ran for a batch it did
+    // not submit) is opportunistic — how much happens depends on
+    // thread timing — but it can never exceed the tiles that existed.
+    assert!(d("sched_cross_tiles") <= M as u64 * tiles, "after:\n{after}");
+
+    // Nothing was refused admission in this scenario.
+    assert_eq!(d("requests_busy"), 0);
+    assert_eq!(d("queue_full"), 0);
+
+    // Every accept landed on a configured shard: per-shard counters
+    // sum to the connections this test opened (M data + the STATS
+    // polls), and no shard beyond the configured count fired.
+    let shard_sum: u64 = (0..8).map(|i| d(&format!("accepts_shard{i}"))).sum();
+    assert!(shard_sum >= M as u64, "after:\n{after}");
+}
+
+/// Saturation reconciliation: with workers=1 and queue_cap=1 a burst
+/// of idle connections can admit at most two (one held by the worker,
+/// one queued); every other connection must observe a `STATUS_BUSY`
+/// frame whose count reconciles **exactly** with the server's
+/// `requests_busy` and `queue_full` counters — every rejection
+/// accounted, no rejection silent.
+#[test]
+fn busy_rejections_reconcile_with_server_counters() {
+    let _g = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let registry = Arc::new(CompiledRegistry::new());
+    let mut cfg = ServeConfig::multi(Arc::clone(&registry), 1);
+    cfg.workers = 1;
+    cfg.queue_cap = Some(1);
+    cfg.accept_shards = Some(1);
+    let addr = spawn_server(cfg);
+
+    let before = stats(addr);
+    let busy0 = json_u64(&before, "requests_busy");
+
+    // A burst of idle connections (no frames sent): the worker parks
+    // on the first it dequeues, one more waits in the queue, and the
+    // rest must be refused — quickly, with a parseable retry hint.
+    let conns: Vec<TcpStream> = (0..6)
+        .map(|_| {
+            let s = TcpStream::connect(addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_millis(1500))).unwrap();
+            s
+        })
+        .collect();
+    let mut observed_busy = 0u64;
+    for mut s in conns {
+        match serve::read_response(&mut s) {
+            Ok(resp) => {
+                // The only frame an idle connection can receive is the
+                // admission rejection.
+                assert_eq!(
+                    resp.status,
+                    pushmem::coordinator::protocol::STATUS_BUSY,
+                    "unexpected status: {resp:?}"
+                );
+                let detail = pushmem::coordinator::protocol::detail_from_words(&resp.words);
+                let hint = pushmem::coordinator::protocol::busy_retry_after_ms(&detail)
+                    .unwrap_or_else(|| panic!("unparseable busy detail: {detail:?}"));
+                assert!((1..=1000).contains(&hint), "retry hint {hint} out of range");
+                observed_busy += 1;
+            }
+            Err(_) => {
+                // An admitted (held or queued) connection: its read
+                // timed out; dropping it here frees the worker for
+                // the next queued connection.
+            }
+        }
+    }
+    assert!(observed_busy >= 4, "burst of 6 with capacity 2 must reject >= 4");
+
+    // All admitted connections are closed now, so the worker is free
+    // to serve the STATS queries below.
+    let after = stats_until(addr, |j| json_u64(j, "requests_busy") >= busy0 + observed_busy);
+    let d = |key: &str| json_u64(&after, key) - json_u64(&before, key);
+
+    // Exact reconciliation: one queue_full event per busy frame a
+    // client received, nothing more, nothing less — and only the one
+    // configured shard accepted.
+    assert_eq!(d("requests_busy"), observed_busy, "before:\n{before}\nafter:\n{after}");
+    assert_eq!(d("queue_full"), observed_busy);
+    for i in 1..8 {
+        assert_eq!(d(&format!("accepts_shard{i}")), 0, "shard {i} fired with shards=1");
+    }
+}

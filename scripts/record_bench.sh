@@ -1,0 +1,45 @@
+#!/usr/bin/env bash
+# One-command perf-trajectory capture (README.md "Benchmarks"):
+# refresh BENCH_serve.json / BENCH_dse.json on a machine with the rust
+# toolchain, then sanity-diff the new serving numbers against the
+# committed baseline with scripts/bench_diff.py. Intended for landing
+# bench JSON from a dev box when the CI/container image has no cargo:
+#
+#   scripts/record_bench.sh           # full-mode capture + diff
+#   QUICK=1 scripts/record_bench.sh   # quick mode (CI-sized runs)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+  echo "record_bench: cargo not available — run this on a machine with" >&2
+  echo "the rust toolchain, then commit the refreshed BENCH_*.json." >&2
+  exit 1
+fi
+
+QUICK="${QUICK:-}"
+OLD=$(mktemp)
+trap 'rm -f "$OLD"' EXIT
+HAVE_BASELINE=0
+if [[ -f BENCH_serve.json ]]; then
+  cp BENCH_serve.json "$OLD"
+  HAVE_BASELINE=1
+fi
+
+if [[ -n "$QUICK" ]]; then
+  SIM_BENCH_QUICK=1 cargo bench --bench serve_throughput
+  DSE_BENCH_QUICK=1 cargo bench --bench dse_harris
+else
+  cargo bench --bench serve_throughput
+  cargo bench --bench dse_harris
+fi
+
+if [[ "$HAVE_BASELINE" == 1 ]]; then
+  # Informational by default: capture runs on heterogeneous machines,
+  # so a drop vs the committed baseline is a conversation, not a gate.
+  python3 scripts/bench_diff.py "$OLD" BENCH_serve.json --threshold 0.10 || true
+else
+  echo "record_bench: no committed BENCH_serve.json baseline; nothing to diff"
+fi
+
+echo "record_bench: BENCH_serve.json and BENCH_dse.json refreshed —"
+echo "review and commit them to extend the perf trajectory."

@@ -1,0 +1,113 @@
+#!/usr/bin/env python3
+"""Admission-control stress: a burst of short-lived concurrent clients.
+
+Fires ``N_CLIENTS`` (default 100) threaded stdlib clients at a running
+``pushmem serve`` endpoint, each opening its own connection and pushing
+one fixed-box gaussian request. The contract under load (docs/serving.md):
+every client terminates promptly with either a bit-valid OK response or
+a ``STATUS_BUSY`` rejection carrying a parseable retry hint — never a
+silent hang, never any other status. Afterwards one ADMIN_STATS frame
+must reconcile the books exactly:
+
+* ``requests_busy == queue_full`` — every rejection was answered;
+* busy rejections observed by clients ``<= requests_busy`` (the server
+  may also have rejected this script's own stray connects);
+* per-shard accept counters sum to at least every connection we opened.
+
+Usage: ``serve_stress.py PORT [N_CLIENTS]`` (run by
+``scripts/serve_stress.sh`` / ``make serve-stress-smoke``; stdlib only).
+"""
+
+import socket
+import sys
+import threading
+import time
+
+sys.path.insert(0, "python")
+from pushmem_client import PushmemClient, ServerBusy  # noqa: E402
+
+# A 64x64 input box feeds the compiled 62x62 gaussian output tile.
+INPUT = [i % 251 for i in range(64 * 64)]
+WANT_WORDS = 62 * 62
+# Any single client stalling past this is the hang this harness exists
+# to catch (a loaded CI runner needs headroom, a hang needs minutes).
+CLIENT_TIMEOUT_S = 30.0
+
+
+def one_client(port: int, results: list, idx: int) -> None:
+    try:
+        with PushmemClient(port=port, timeout=CLIENT_TIMEOUT_S) as c:
+            words, cycles, _ = c.request([INPUT])
+        assert len(words) == WANT_WORDS, f"client {idx}: {len(words)} words"
+        assert cycles > 0, f"client {idx}: zero cycles"
+        results[idx] = "ok"
+    except ServerBusy as e:
+        assert e.retry_after_ms is not None, f"client {idx}: busy without hint"
+        assert 1 <= e.retry_after_ms <= 1000, f"client {idx}: hint {e.retry_after_ms}"
+        results[idx] = "busy"
+    except Exception as e:  # noqa: BLE001 — report, don't crash the harness
+        results[idx] = f"error: {type(e).__name__}: {e}"
+
+
+def main() -> int:
+    port = int(sys.argv[1])
+    n_clients = int(sys.argv[2]) if len(sys.argv) > 2 else 100
+
+    for _ in range(100):
+        try:
+            socket.create_connection(("127.0.0.1", port), timeout=0.2).close()
+            break
+        except OSError:
+            time.sleep(0.1)
+    else:
+        sys.exit("server never started listening")
+
+    results = [None] * n_clients
+    t0 = time.monotonic()
+    threads = [
+        threading.Thread(target=one_client, args=(port, results, i))
+        for i in range(n_clients)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        # A generous join deadline so a wedged client is a failure, not
+        # a CI timeout with no diagnostics.
+        t.join(timeout=CLIENT_TIMEOUT_S + 30)
+        if t.is_alive():
+            sys.exit(f"HANG: a client thread never finished; results so far: {results}")
+    wall = time.monotonic() - t0
+
+    ok = sum(1 for r in results if r == "ok")
+    busy = sum(1 for r in results if r == "busy")
+    bad = [r for r in results if r not in ("ok", "busy")]
+    if bad:
+        sys.exit(f"clients ended with non-OK/BUSY outcomes: {bad}")
+    print(f"{n_clients} clients in {wall:.2f}s: {ok} ok, {busy} busy, 0 hangs")
+
+    with PushmemClient(port=port, timeout=CLIENT_TIMEOUT_S) as c:
+        snap = c.stats()
+    counters = snap["counters"]
+    assert snap["schema"] == "pushmem-stats-v1", snap
+    assert counters["requests_busy"] == counters["queue_full"], counters
+    assert counters["requests_busy"] >= busy, (busy, counters)
+    assert counters["requests_ok"] >= ok, (ok, counters)
+    shard_accepts = sum(
+        v for k, v in counters.items() if k.startswith("accepts_shard")
+    )
+    # Every connection this script opened (clients + readiness probe +
+    # this stats connection) was accepted on some shard.
+    assert shard_accepts >= n_clients + 2, (shard_accepts, counters)
+    shards_used = sum(
+        1 for k, v in counters.items() if k.startswith("accepts_shard") and v > 0
+    )
+    print(
+        f"stats reconcile: requests_busy={counters['requests_busy']} == "
+        f"queue_full={counters['queue_full']}, "
+        f"{shard_accepts} accepts over {shards_used} shard(s)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

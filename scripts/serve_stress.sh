@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Serving stress smoke (make serve-stress-smoke, docs/serving.md):
+# start a real `pushmem serve` with a small worker pool and sharded
+# accept, then fire 100 concurrent short-lived stdlib clients at it
+# (scripts/serve_stress.py). Every client must finish with OK or a
+# STATUS_BUSY + retry-after frame — zero hangs — and the final
+# ADMIN_STATS snapshot must reconcile every rejection
+# (requests_busy == queue_full) and every accept (per-shard counters).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+  echo "serve-stress-smoke: cargo not available, skipping" >&2
+  exit 0
+fi
+
+cargo build --release --quiet
+BIN=target/release/pushmem
+
+PORT=$((20000 + RANDOM % 20000))
+ADDR="127.0.0.1:${PORT}"
+TMP=$(mktemp -d)
+trap 'kill "${SERVER_PID:-}" 2>/dev/null || true; rm -rf "$TMP"' EXIT
+
+# 4 workers + 4 acceptor shards: enough parallelism that the burst
+# mostly succeeds, small enough that admission control has to act.
+PUSHMEM_ACCEPT_SHARDS=4 "$BIN" serve gaussian --addr "$ADDR" --workers 4 \
+  >"$TMP/serve.log" 2>&1 &
+SERVER_PID=$!
+
+python3 scripts/serve_stress.py "$PORT" 100
+
+echo "serve-stress-smoke: all checks passed"
