@@ -12,7 +12,11 @@
 //! real server, which serves from the functional engine by default.
 //! §3 measures tiled whole-image serving (docs/tiling.md) and §4 the
 //! cross-request scheduler: M concurrent image clients vs the same
-//! total issued one-at-a-time (docs/serving.md).
+//! total issued one-at-a-time (docs/serving.md). §5 isolates the
+//! persistent compute pool: dispatch cost vs a per-run
+//! `std::thread::scope` spawn over identical work, and the
+//! `StorePartition` parallel path on a channel-interleaved store
+//! (8-wide vs serial req/s on the same compiled design).
 //!
 //! Results are also written machine-readably to `BENCH_serve.json`
 //! (the perf trajectory file `make bench-json` refreshes in CI).
@@ -27,18 +31,44 @@ mod harness;
 
 use std::collections::BTreeMap;
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
 use pushmem::cgra::{simulate, SimRun};
 use pushmem::coordinator::serve::{self, ServeConfig};
-use pushmem::coordinator::{gen_inputs, CompiledRegistry};
-use pushmem::exec::{Engine, ExecRun};
+use pushmem::coordinator::{compile, gen_inputs, CompiledRegistry};
+use pushmem::exec::{pool, Engine, ExecRun};
 use pushmem::tensor::Tensor;
 use pushmem::tile::run_tiled;
 
 const APP: &str = "gaussian";
 const WORKERS: usize = 8;
+
+/// A channel-unrolled planar-RGB pipeline: each per-lane kernel has a
+/// collapsed dim-0 extent of 1 and an interleaved store — the shape
+/// only the generalized `StorePartition` proof can parallelize (the
+/// §5 strided-parallel measurement; see docs/execution.md).
+fn planar_rgb(tile: i64) -> pushmem::halide::Program {
+    use pushmem::halide::{Expr, Func, HwSchedule, InputDecl, Program};
+    let rgb = Func::pure_fn(
+        "rgb",
+        &["c", "y", "x"],
+        Expr::add(
+            Expr::mul(
+                Expr::c(3),
+                Expr::ld("input", vec![Expr::v("c"), Expr::v("y"), Expr::v("x")]),
+            ),
+            Expr::v("c"),
+        ),
+    );
+    Program {
+        name: "prgb".into(),
+        inputs: vec![InputDecl { name: "input".into(), rank: 3 }],
+        funcs: vec![rgb],
+        schedule: HwSchedule::new([3, tile, tile]).unroll("rgb", "c", 3),
+    }
+}
 
 fn main() {
     let quick = std::env::var("SIM_BENCH_QUICK").is_ok_and(|v| !v.is_empty() && v != "0");
@@ -325,6 +355,97 @@ fn main() {
          isolated ({coalesced_speedup:.2}x coalesced-vs-isolated)"
     );
 
+    // --- §5 Persistent compute pool (docs/execution.md) -------------
+    // (a) Dispatch cost: the same partitioned sum fanned out through
+    // the warm persistent pool vs a fresh `std::thread::scope` spawn
+    // per dispatch — the per-tile overhead the pool removes from the
+    // serve drain. (b) The `StorePartition` parallel path: a
+    // channel-interleaved store (collapsed dim 0, provable only under
+    // the generalized proof) at 8-wide vs serial, bit-exactness
+    // asserted outside the timed loops.
+    let pool_iters: usize = if quick { 50 } else { 500 };
+    let data: Vec<u64> = (0..(1u64 << 16)).collect();
+    let parts = std::thread::available_parallelism()
+        .map_or(2, |n| n.get())
+        .clamp(2, 8);
+    let chunks: Vec<&[u64]> = data.chunks((data.len() + parts - 1) / parts).collect();
+    let expected: u64 = data.iter().sum();
+    let acc = AtomicU64::new(0);
+
+    let dispatch = |acc: &AtomicU64| {
+        let mut tasks: Vec<_> = chunks
+            .iter()
+            .map(|&c| move || {
+                acc.fetch_add(c.iter().sum::<u64>(), Ordering::Relaxed);
+            })
+            .collect();
+        pool::run_tasks(&mut tasks);
+    };
+    dispatch(&acc); // warm: spawns the workers outside the timed loop
+    let t0 = Instant::now();
+    for _ in 0..pool_iters {
+        dispatch(&acc);
+    }
+    let pool_s = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    for _ in 0..pool_iters {
+        std::thread::scope(|s| {
+            for &c in &chunks {
+                let acc = &acc;
+                s.spawn(move || {
+                    acc.fetch_add(c.iter().sum::<u64>(), Ordering::Relaxed);
+                });
+            }
+        });
+    }
+    let spawn_s = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        acc.load(Ordering::Relaxed),
+        expected * (2 * pool_iters as u64 + 1),
+        "pool and spawn dispatches must run every task exactly once"
+    );
+    let pool_dispatch_per_s = pool_iters as f64 / pool_s;
+    let spawn_dispatch_per_s = pool_iters as f64 / spawn_s;
+    let pool_vs_spawn_speedup = spawn_s / pool_s;
+    println!(
+        "\ncompute pool: {pool_dispatch_per_s:.0} dispatch/s warm pool vs \
+         {spawn_dispatch_per_s:.0} dispatch/s thread::scope \
+         ({pool_vs_spawn_speedup:.2}x, {parts} tasks/dispatch)"
+    );
+
+    let pc = compile(&planar_rgb(280)).expect("compile planar rgb");
+    assert!(
+        pc.exec_plan().expect("exec plan").parallel_kernel_count() >= 1,
+        "planar rgb must take the partitioned parallel path"
+    );
+    let prgb_inputs = gen_inputs(&pc.lp);
+    let mut par = ExecRun::with_threads(pc.exec_plan().expect("exec plan"), 8);
+    let mut ser = ExecRun::with_threads(pc.exec_plan().expect("exec plan"), 1);
+    let a = par.run(&prgb_inputs).expect("parallel exec");
+    let b = ser.run(&prgb_inputs).expect("serial exec");
+    assert_eq!(a.output.data, b.output.data, "strided parallel outputs differ");
+    assert_eq!(a.stats, b.stats, "strided parallel stats differ");
+
+    let strided_reps: usize = if quick { 10 } else { 60 };
+    let t0 = Instant::now();
+    for _ in 0..strided_reps {
+        par.run(&prgb_inputs).expect("parallel exec");
+    }
+    let strided_parallel_req_per_s = strided_reps as f64 / t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    for _ in 0..strided_reps {
+        ser.run(&prgb_inputs).expect("serial exec");
+    }
+    let strided_serial_req_per_s = strided_reps as f64 / t0.elapsed().as_secs_f64();
+    let strided_parallel_speedup = strided_parallel_req_per_s / strided_serial_req_per_s;
+    println!(
+        "strided-store parallel path (planar rgb 3x280x280): \
+         {strided_parallel_req_per_s:.1} req/s 8-wide vs \
+         {strided_serial_req_per_s:.1} req/s serial \
+         ({strided_parallel_speedup:.2}x)"
+    );
+
     harness::write_bench_json(
         "BENCH_serve.json",
         &harness::Json::obj()
@@ -363,6 +484,18 @@ fn main() {
                     .num("concurrent_image_req_per_s", conc_image_rps)
                     .num("serial_image_req_per_s", serial_image_rps)
                     .num("coalesced_vs_isolated_speedup", coalesced_speedup)
+                    .end(),
+            )
+            .raw(
+                "pool",
+                &harness::Json::obj()
+                    .num("pool_dispatch_per_s", pool_dispatch_per_s)
+                    .num("spawn_dispatch_per_s", spawn_dispatch_per_s)
+                    .num("pool_vs_spawn_speedup", pool_vs_spawn_speedup)
+                    .num("strided_parallel_req_per_s", strided_parallel_req_per_s)
+                    .num("strided_serial_req_per_s", strided_serial_req_per_s)
+                    .num("strided_parallel_speedup", strided_parallel_speedup)
+                    .int("pool_workers_spawned", pool::spawn_count() as i64)
                     .end(),
             )
             // Point-in-time server telemetry (docs/observability.md):

@@ -746,8 +746,9 @@ fn handle_tiled(
             }
         };
         let scratch = slot.scratch.get_or_insert_with(|| TileScratch::new(b.plan()));
-        if b.work_one(&mut slot.run, scratch) && !mine {
-            m.sched_cross_tiles.inc();
+        let done = b.work_run(&mut slot.run, scratch);
+        if done > 0 && !mine {
+            m.sched_cross_tiles.add(done as u64);
         }
     }
     let execute_ns = exec_t0.elapsed().as_nanos() as u64;
@@ -1050,9 +1051,10 @@ pub fn serve_on_with(
                     }
                     Job::Drain => {
                         // Join the cross-request tile drain: claim one
-                        // tile at a time from the shared scheduler —
-                        // which batch each claim serves is its call —
-                        // until no batch has unclaimed tiles. Tile
+                        // short run of tiles at a time from the shared
+                        // scheduler — which batch each claim serves is
+                        // its call — until no batch has unclaimed
+                        // tiles. Tile
                         // panics are contained inside the batch, and a
                         // stale token (the batch drained or its
                         // request died before this worker came free)
@@ -1071,12 +1073,11 @@ pub fn serve_on_with(
                             };
                             let scratch =
                                 slot.scratch.get_or_insert_with(|| TileScratch::new(b.plan()));
-                            if b.work_one(&mut slot.run, scratch) {
-                                // Pool workers never submit batches,
-                                // so every tile they execute is
-                                // cross-request service.
-                                m.sched_cross_tiles.inc();
-                            }
+                            // Pool workers never submit batches, so
+                            // every tile they drain is cross-request
+                            // service.
+                            let done = b.work_run(&mut slot.run, scratch);
+                            m.sched_cross_tiles.add(done as u64);
                         }
                     }
                 }

@@ -19,8 +19,9 @@
 //!
 //! [`Engine`] names the policies the stack exposes (`pushmem
 //! serve/serve-all/tune/report/run --engine {exec,exec-scalar,sim,auto}`):
-//! `exec` demands the functional engine (vectorized + threaded, see
-//! [`run`]), `exec-scalar` its original scalar reference walk (the
+//! `exec` demands the functional engine (vectorized + parallel on the
+//! persistent compute pool, see [`run`] and [`pool`]), `exec-scalar`
+//! its original scalar reference walk (the
 //! differential-testing escape hatch), `sim` the cycle-accurate
 //! simulator, and `auto` (the default) prefers `exec`, falling back to
 //! `sim` whenever [`ExecPlan::build`] cannot prove the design's port
@@ -34,6 +35,7 @@
 mod arena;
 pub mod lanes;
 pub mod plan;
+pub mod pool;
 pub mod run;
 pub mod timing;
 

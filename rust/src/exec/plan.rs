@@ -86,18 +86,30 @@ pub(crate) struct StoreSpec {
     pub period: i64,
 }
 
-/// Row-block split metadata for intra-kernel threading. When the
-/// store's dim-0 stride strictly dominates the flat-offset spread of
-/// every inner dim, rows `[r0, r1)` store exactly into the flat range
-/// `[r0·stride + lo, r1·stride + lo)` and distinct row ranges are
-/// disjoint — so the destination buffer can be `split_at_mut` at the
-/// block boundaries and written by threads with no synchronization
-/// and no `unsafe` (docs/execution.md).
+/// Store-partition metadata for intra-kernel threading: a pure outer
+/// dim whose store stride strictly dominates the flat-offset spread of
+/// **all other dims combined** (lane, reduction, and remaining outer
+/// dims alike). Blocks `[r0, r1)` of that dim then store exactly into
+/// the flat range `[r0·stride + lo, r1·stride + lo)`, and distinct
+/// blocks are disjoint — so the destination buffer can be
+/// `split_at_mut` at the block boundaries and written by pool workers
+/// with no synchronization and no `unsafe` (docs/execution.md).
+///
+/// This generalizes the old dim-0-only `RowBlock` proof: any pure
+/// non-lane dim can carry the partition, which admits strided and
+/// channel-interleaved stores — e.g. the unrolled-`c` planar RGB
+/// pattern, whose dim-0 extent collapses to 1 under unrolling but
+/// whose `y` dim still partitions the flat offsets into disjoint
+/// congruence classes of rows.
 #[derive(Clone, Copy, Debug)]
-pub(crate) struct RowBlock {
-    /// Store stride of dim 0.
+pub(crate) struct StorePartition {
+    /// The dim the split runs over (always `< lane_dim`, so the lane
+    /// loop itself is never divided).
+    pub dim: usize,
+    /// Store stride of the split dim.
     pub stride: i64,
-    /// Smallest store offset within a row, relative to `row · stride`.
+    /// Smallest store offset within one block, relative to
+    /// `block · stride`.
     pub lo: i64,
 }
 
@@ -116,9 +128,9 @@ pub(crate) struct LaneInfo {
     pub load_tail_deltas: Vec<Vec<i64>>,
     /// Store stride of the lane dim (0 when there is none).
     pub store_lane_stride: i64,
-    /// Present when dim 0 is an outer dim whose store rows are
-    /// provably disjoint flat ranges (enables row-parallel execution).
-    pub row_block: Option<RowBlock>,
+    /// Present when some pure outer dim's store blocks are provably
+    /// disjoint flat ranges (enables partitioned parallel execution).
+    pub partition: Option<StorePartition>,
 }
 
 /// Derive the [`LaneInfo`] for a kernel from its pure rank, domain
@@ -130,14 +142,30 @@ fn lane_info(pr: usize, extents: &[i64], loads: &[LoadSpec], store: &AffineConfi
             .deltas(&extents[pr..])
     };
     let lane_stride = |cfg: &AffineConfig| lane_dim.map_or(0, |d| cfg.strides[d]);
-    let row_block = match lane_dim {
-        // Dim 0 must be an outer dim, not the lane dim itself.
-        Some(d) if d >= 1 => {
-            let s0 = store.strides[0];
-            // Flat-offset spread of the inner dims: a row's stores lie
-            // in [row·s0 + lo, row·s0 + hi].
+    // Partition proof: a candidate dim d (any pure dim strictly before
+    // the lane dim, so the lane loop is never divided) qualifies when
+    // its stride strictly dominates the combined flat-offset spread of
+    // every *other* dim. A block of d then stores into
+    // [b·sd + lo, b·sd + hi] with hi - lo < sd, so distinct blocks
+    // occupy disjoint flat ranges. Among qualifying dims, pick the one
+    // with the largest extent (most parallelism); ties break to the
+    // smallest dim, which reproduces the old dim-0 RowBlock choice on
+    // row-major stores exactly.
+    let mut partition: Option<StorePartition> = None;
+    if let Some(ld) = lane_dim {
+        for d in 0..ld {
+            if extents[d] < 2 {
+                continue; // nothing to split
+            }
+            let sd = store.strides[d];
+            if sd <= 0 {
+                continue;
+            }
             let (mut lo, mut hi) = (store.offset, store.offset);
-            for (k, &s) in store.strides.iter().enumerate().skip(1) {
+            for (k, &s) in store.strides.iter().enumerate() {
+                if k == d {
+                    continue;
+                }
                 let span = s * (extents[k] - 1);
                 if span >= 0 {
                     hi += span;
@@ -145,16 +173,18 @@ fn lane_info(pr: usize, extents: &[i64], loads: &[LoadSpec], store: &AffineConfi
                     lo += span;
                 }
             }
-            (s0 > 0 && s0 > hi - lo).then_some(RowBlock { stride: s0, lo })
+            let wider = !partition.is_some_and(|p| extents[p.dim] >= extents[d]);
+            if sd > hi - lo && wider {
+                partition = Some(StorePartition { dim: d, stride: sd, lo });
+            }
         }
-        _ => None,
-    };
+    }
     LaneInfo {
         lane_dim,
         load_lane_stride: loads.iter().map(|l| lane_stride(&l.addr)).collect(),
         load_tail_deltas: loads.iter().map(|l| tail(&l.addr)).collect(),
         store_lane_stride: lane_stride(store),
-        row_block,
+        partition,
     }
 }
 
@@ -209,6 +239,20 @@ impl ExecPlan {
     /// reported [`crate::cgra::SimStats`]).
     pub fn timing(&self) -> &ExecTiming {
         &self.timing
+    }
+
+    /// How many kernels would take the partitioned parallel path at a
+    /// thread width ≥ 2: a provable [`StorePartition`] plus a trip
+    /// count over the parallel threshold. Lets integration tests (the
+    /// fuzz suite) assert a program actually exercises the pool.
+    pub fn parallel_kernel_count(&self) -> usize {
+        self.kernels
+            .iter()
+            .filter(|k| {
+                k.lane.partition.is_some()
+                    && k.extents.iter().product::<i64>() >= super::run::PAR_MIN_POINTS
+            })
+            .count()
     }
 
     /// One line per fused kernel: stage, trip count, loads, reduction

@@ -19,11 +19,14 @@
 //!   time as plain `[i32; 8]` arrays ([`super::lanes`]), each lane
 //!   replaying its pure point's full reduction walk with a per-lane
 //!   accumulator register; a scalar tail covers `extent % LANES`.
-//! - **Threads** — when the kernel is large enough and its store rows
-//!   are provably disjoint flat ranges ([`super::plan::RowBlock`]),
-//!   the outermost dim is split into row-range chunks executed on
-//!   scoped `std::thread`s over `split_at_mut` destination slices —
-//!   no locks, no `unsafe`. `PUSHMEM_EXEC_THREADS` caps the fan-out.
+//! - **Threads** — when the kernel is large enough and some pure
+//!   outer dim's store blocks are provably disjoint flat ranges
+//!   ([`super::plan::StorePartition`] — row-major rows, strided rows,
+//!   and channel-interleaved planes alike), that dim is split into
+//!   chunks executed on the persistent compute pool
+//!   ([`super::pool`]) over `split_at_mut` destination slices — no
+//!   locks, no per-run thread spawns, no `unsafe` in this module.
+//!   `PUSHMEM_EXEC_THREADS` caps the fan-out (`0` = auto).
 //! - **The arena** ([`super::arena`]) — every scratch tensor and
 //!   working buffer is owned by the run and reset in place, so warm
 //!   runs (and `TileBatch` drains over them) allocate nothing.
@@ -49,14 +52,14 @@ use crate::ub::UbGraph;
 
 use super::arena::{Arena, KernelBufs};
 use super::lanes::{self, Lanes, LANES};
-use super::plan::{BufRef, ExecKernel, ExecPlan, RowBlock};
+use super::plan::{BufRef, ExecKernel, ExecPlan, StorePartition};
 
-/// Minimum kernel trip count before the row-parallel path engages:
-/// below this, thread spawn/join overhead beats the win. Per-tile
+/// Minimum kernel trip count before the partitioned parallel path
+/// engages: below this, dispatch overhead beats the win. Per-tile
 /// kernels (the paper's 60–64-wide tiles) stay under it, which is also
 /// what keeps the steady-state tile path allocation-free — the
-/// parallel path builds per-thread [`KernelBufs`].
-const PAR_MIN_POINTS: i64 = 1 << 16;
+/// parallel path builds per-worker [`KernelBufs`].
+pub(crate) const PAR_MIN_POINTS: i64 = 1 << 16;
 
 /// Most designs bind a handful of input streams; up to this many are
 /// held in a stack array so request binding allocates nothing.
@@ -66,16 +69,27 @@ fn default_threads() -> usize {
     std::thread::available_parallelism().map_or(1, |n| n.get()).min(8)
 }
 
-/// Worker cap for the row-parallel path: `PUSHMEM_EXEC_THREADS` if set
-/// (clamped to `[1, 64]`), else `min(available_parallelism, 8)`.
+/// Worker cap for the parallel path: `PUSHMEM_EXEC_THREADS` if set
+/// (clamped to `[1, 64]`; `0` means "auto"), else
+/// `min(available_parallelism, 8)`. A value that does not parse logs a
+/// `warn` through the telemetry logger and falls back to auto — never
+/// silently.
 fn exec_threads() -> usize {
     static THREADS: OnceLock<usize> = OnceLock::new();
     let n = *THREADS.get_or_init(|| match std::env::var("PUSHMEM_EXEC_THREADS") {
-        Ok(v) => v
-            .trim()
-            .parse::<usize>()
-            .ok()
-            .map_or_else(default_threads, |n| n.clamp(1, 64)),
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(0) => default_threads(),
+            Ok(n) => n.clamp(1, 64),
+            Err(_) => {
+                crate::telemetry::log::warn(
+                    "exec",
+                    &format!(
+                        "event=bad_env var=PUSHMEM_EXEC_THREADS value={v:?} fallback=auto"
+                    ),
+                );
+                default_threads()
+            }
+        },
         Err(_) => default_threads(),
     });
     // Surface the configured cap next to `exec_threads_used` so the
@@ -240,16 +254,16 @@ fn addr_at(cfg: &AffineConfig, outer: &[i64], ld: usize, x: i64) -> i64 {
 }
 
 /// Advance the outer odometer (dims `0..outer.len()`, row-major), with
-/// dim 0 confined to `[row0, row1)`. Returns false when exhausted —
-/// immediately for an empty odometer (lane dim is dim 0).
-fn step_outer(outer: &mut [i64], extents: &[i64], row0: i64, row1: i64) -> bool {
+/// dim `cdim` confined to `[row0, row1)`. Returns false when exhausted
+/// — immediately for an empty odometer (lane dim is dim 0).
+fn step_outer(outer: &mut [i64], extents: &[i64], cdim: usize, row0: i64, row1: i64) -> bool {
     for k in (0..outer.len()).rev() {
         outer[k] += 1;
-        let limit = if k == 0 { row1 } else { extents[k] };
+        let limit = if k == cdim { row1 } else { extents[k] };
         if outer[k] < limit {
             return true;
         }
-        outer[k] = if k == 0 { row0 } else { 0 };
+        outer[k] = if k == cdim { row0 } else { 0 };
     }
     false
 }
@@ -372,14 +386,18 @@ fn scalar_group(
     regs[kp.nodes.len() - 1]
 }
 
-/// Walk rows `[row0, row1)` of the outermost dim (all outer dims when
-/// `ld >= 1`; a single pass when the lane dim IS dim 0), running the
-/// lane dim in [`LANES`]-wide chunks with a scalar tail. `dst` is the
-/// destination slice starting at flat offset `dst_base`.
+/// Walk blocks `[row0, row1)` of outer dim `cdim` (every other outer
+/// dim runs its full extent; a single pass when the lane dim IS
+/// dim 0), running the lane dim in [`LANES`]-wide chunks with a scalar
+/// tail. `dst` is the destination slice starting at flat offset
+/// `dst_base`. Serial callers pass `cdim = 0` over the full extent;
+/// the partitioned path confines whichever dim carries the
+/// [`StorePartition`].
 #[allow(clippy::too_many_arguments)]
 fn run_rows_lanes(
     kp: &ExecKernel,
     ld: usize,
+    cdim: usize,
     row0: i64,
     row1: i64,
     feed: &[&[i32]],
@@ -401,7 +419,7 @@ fn run_rows_lanes(
         if row0 >= row1 {
             return;
         }
-        outer[0] = row0;
+        outer[cdim] = row0;
     }
     loop {
         // --- Full LANES-wide chunks of the lane dim -------------
@@ -482,55 +500,67 @@ fn run_rows_lanes(
             let sa = addr_at(&kp.store.addr, outer, ld, x) - dst_base;
             dst[sa as usize] = v;
         }
-        if !step_outer(outer, &kp.extents[..ld], row0, row1) {
+        if !step_outer(outer, &kp.extents[..ld], cdim, row0, row1) {
             break;
         }
     }
 }
 
-/// Split the outermost dim into row-range chunks and run them on
-/// scoped threads. Sound because [`RowBlock`] proved rows `[r0, r1)`
-/// store exactly into the flat range `[r0·stride + lo, r1·stride + lo)`
-/// — so `split_at_mut` at the block boundaries hands each worker a
-/// disjoint `&mut` slice, and the borrow checker does the rest.
-/// Boundary chunks absorb the `[0, lo)` / `[.., len)` margins.
-fn run_rows_parallel(
+/// Split the partition dim into block-range chunks and run them on the
+/// persistent compute pool ([`super::pool`]). Sound because
+/// [`StorePartition`] proved blocks `[r0, r1)` store exactly into the
+/// flat range `[r0·stride + lo, r1·stride + lo)` — so `split_at_mut`
+/// at the block boundaries hands each worker a disjoint `&mut` slice,
+/// and the borrow checker does the rest. Boundary chunks absorb the
+/// `[0, lo)` / `[.., len)` margins.
+fn run_partitioned(
     kp: &ExecKernel,
     ld: usize,
-    rb: RowBlock,
+    sp: StorePartition,
     feed: &[&[i32]],
     scratch: &[Vec<i32>],
     dst: &mut [i32],
     threads: usize,
 ) {
-    let rows = kp.extents[0];
+    let rows = kp.extents[sp.dim];
     let t = threads.min(rows as usize);
     let len = dst.len() as i64;
-    std::thread::scope(|s| {
-        let mut rest: &mut [i32] = dst;
-        let mut taken = 0i64;
-        for i in 0..t {
-            let r0 = rows * i as i64 / t as i64;
-            let r1 = rows * (i + 1) as i64 / t as i64;
-            let end = if r1 >= rows { len } else { r1 * rb.stride + rb.lo };
-            let (chunk, r2) = std::mem::take(&mut rest).split_at_mut((end - taken) as usize);
-            rest = r2;
-            let dst_base = taken;
-            taken = end;
-            s.spawn(move || {
-                // Per-worker buffers: allocation is fine here — this
-                // path only engages at `trip >= PAR_MIN_POINTS`, far
-                // above any per-tile kernel.
-                let mut bufs = KernelBufs::for_kernel(kp);
-                run_rows_lanes(kp, ld, r0, r1, feed, scratch, chunk, dst_base, &mut bufs);
-            });
-        }
-    });
+    let mut tasks = Vec::with_capacity(t);
+    let mut rest: &mut [i32] = dst;
+    let mut taken = 0i64;
+    for i in 0..t {
+        let r0 = rows * i as i64 / t as i64;
+        let r1 = rows * (i + 1) as i64 / t as i64;
+        let end = if r1 >= rows { len } else { r1 * sp.stride + sp.lo };
+        let (chunk, r2) = std::mem::take(&mut rest).split_at_mut((end - taken) as usize);
+        rest = r2;
+        let dst_base = taken;
+        taken = end;
+        tasks.push(move || {
+            // Per-worker buffers: allocation is fine here — this
+            // path only engages at `trip >= PAR_MIN_POINTS`, far
+            // above any per-tile kernel.
+            let mut bufs = KernelBufs::for_kernel(kp);
+            run_rows_lanes(
+                kp,
+                ld,
+                sp.dim,
+                r0,
+                r1,
+                feed,
+                scratch,
+                &mut *chunk,
+                dst_base,
+                &mut bufs,
+            );
+        });
+    }
+    super::pool::run_tasks(&mut tasks);
 }
 
 /// The vectorized engine's per-kernel dispatch: full-reduction
-/// fallback, row-parallel when proven safe and big enough, else the
-/// serial lane walk.
+/// fallback, partitioned-parallel when proven safe and big enough,
+/// else the serial lane walk.
 fn exec_kernel(
     kp: &ExecKernel,
     feed: &[&[i32]],
@@ -554,22 +584,24 @@ fn exec_kernel(
         dst[kp.store.addr.offset as usize] = v;
         return;
     };
-    let rows = kp.extents[0];
     let trip: i64 = kp.extents.iter().product();
-    if threads >= 2 && ld >= 1 && rows >= 2 && trip >= PAR_MIN_POINTS {
-        if let Some(rb) = kp.lane.row_block {
+    if threads >= 2 && trip >= PAR_MIN_POINTS {
+        // The partition proof guarantees `dim < ld` and extent ≥ 2,
+        // so a width-2+ run always fans out at least 2 workers here.
+        if let Some(sp) = kp.lane.partition {
             if sampled {
-                record_dispatch(kp, ld, threads.min(rows as usize) as u64, true);
+                let t = threads.min(kp.extents[sp.dim] as usize);
+                record_dispatch(kp, ld, t as u64, true);
             }
-            run_rows_parallel(kp, ld, rb, feed, scratch, dst, threads);
+            run_partitioned(kp, ld, sp, feed, scratch, dst, threads);
             return;
         }
     }
     if sampled {
         record_dispatch(kp, ld, 1, false);
     }
-    let row1 = if ld >= 1 { rows } else { 1 };
-    run_rows_lanes(kp, ld, 0, row1, feed, scratch, dst, 0, bufs);
+    let row1 = if ld >= 1 { kp.extents[0] } else { 1 };
+    run_rows_lanes(kp, ld, 0, 0, row1, feed, scratch, dst, 0, bufs);
 }
 
 /// Telemetry accounting for one vectorized-kernel dispatch: lane
@@ -775,6 +807,31 @@ mod tests {
         }
     }
 
+    /// A planar RGB generator with the channel dim outermost, unrolled
+    /// by 3: each unrolled kernel stores `(3·c₂ + lane, y, x)`, so its
+    /// dim-0 extent collapses to 1 and the old dim-0 `RowBlock` proof
+    /// could never parallelize it — the `y` dim carries the
+    /// [`StorePartition`] instead.
+    fn planar_rgb(tile: i64) -> Program {
+        let rgb = Func::pure_fn(
+            "rgb",
+            &["c", "y", "x"],
+            Expr::add(
+                Expr::mul(
+                    Expr::c(3),
+                    Expr::ld("input", vec![Expr::v("c"), Expr::v("y"), Expr::v("x")]),
+                ),
+                Expr::v("c"),
+            ),
+        );
+        Program {
+            name: "prgb".into(),
+            inputs: vec![InputDecl { name: "input".into(), rank: 3 }],
+            funcs: vec![rgb],
+            schedule: HwSchedule::new([3, tile, tile]).unroll("rgb", "c", 3),
+        }
+    }
+
     fn inputs_for(lp: &LoweredPipeline, salt: i64) -> BTreeMap<String, Tensor> {
         let mut ins = BTreeMap::new();
         for name in &lp.inputs {
@@ -868,7 +925,7 @@ mod tests {
         assert!(
             plan.kernels.iter().any(|k| {
                 k.extents.iter().product::<i64>() >= PAR_MIN_POINTS
-                    && k.lane.row_block.is_some()
+                    && k.lane.partition.is_some()
             }),
             "fixture no longer exercises the parallel path"
         );
@@ -879,6 +936,61 @@ mod tests {
         assert_eq!(par.output.data, one.output.data);
         assert_eq!(par.output.data, sc.output.data);
         assert_eq!(par.stats, one.stats);
+    }
+
+    /// A previously-serial interleaved-store shape joins the parallel
+    /// path: the channel-unrolled planar RGB kernels have dim-0 extent
+    /// 1 (unprovable under the old dim-0 RowBlock rule) but partition
+    /// on `y` — and the pooled parallel run stays bit-exact against
+    /// one worker and the scalar reference.
+    #[test]
+    fn channel_unrolled_planar_store_joins_parallel_path() {
+        let p = planar_rgb(280); // per-kernel trip 280² > 2^16
+        let (lp, g, d) = compile(&p);
+        let plan = Arc::new(ExecPlan::build(&d, &g).unwrap());
+        for k in &plan.kernels {
+            assert_eq!(k.extents[0], 1, "{}: c should collapse under unroll", k.stage);
+            let sp = k.lane.partition.expect("planar store must partition");
+            assert!(sp.dim >= 1, "{}: partition must ride an inner dim", k.stage);
+        }
+        assert!(
+            plan.parallel_kernel_count() >= 1,
+            "fixture no longer exercises the partitioned parallel path"
+        );
+        let ins = inputs_for(&lp, 41);
+        let par = ExecRun::with_threads(Arc::clone(&plan), 8).run(&ins).unwrap();
+        let one = ExecRun::with_threads(Arc::clone(&plan), 1).run(&ins).unwrap();
+        let sc = ExecRun::new_scalar(plan).run(&ins).unwrap();
+        assert_eq!(par.output.data, one.output.data);
+        assert_eq!(par.output.data, sc.output.data);
+        assert_eq!(par.stats, one.stats);
+    }
+
+    /// The zero-spawn half of the warm-path contract: once the pool
+    /// has served one parallel run, further runs claim parked workers
+    /// instead of spawning threads.
+    #[test]
+    fn warm_parallel_runs_do_not_spawn_threads() {
+        let p = brighten_blur(280);
+        let (lp, g, d) = compile(&p);
+        let plan = Arc::new(ExecPlan::build(&d, &g).unwrap());
+        let mut run = ExecRun::with_threads(plan, 4);
+        let ins = inputs_for(&lp, 5);
+        run.run(&ins).unwrap(); // warm the pool
+        // Concurrent tests may legitimately grow the pool; only a
+        // spawn on *every* attempt is a real regression.
+        let mut ok = false;
+        for _ in 0..5 {
+            let before = super::super::pool::spawn_count();
+            for _ in 0..4 {
+                run.run(&ins).unwrap();
+            }
+            if super::super::pool::spawn_count() == before {
+                ok = true;
+                break;
+            }
+        }
+        assert!(ok, "warm parallel runs spawned threads");
     }
 
     /// A reused ExecRun is bit-identical across interleaved inputs,

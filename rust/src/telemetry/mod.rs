@@ -194,6 +194,9 @@ pub struct Metrics {
     /// Tiles a worker executed for a batch it did **not** submit —
     /// the cross-request work-stealing the scheduler exists for.
     pub sched_cross_tiles: Counter,
+    /// Claim runs drained from tile batches (`TileBatch::work_run`);
+    /// mean run length = tiles_executed / sched_claim_runs.
+    pub sched_claim_runs: Counter,
     /// Summed wall time workers spent inside jobs; utilization =
     /// worker_busy_ns / (uptime * workers_total).
     pub worker_busy_ns: Counter,
@@ -218,6 +221,22 @@ pub struct Metrics {
     pub exec_points_vector: Counter,
     pub exec_points_scalar: Counter,
     pub exec_threads_cap: Gauge,
+
+    // -- compute pool (exec/pool.rs) --------------------------------
+    /// Worker threads ever spawned by the persistent compute pool —
+    /// flat once warm (the zero-spawn steady-state invariant; always
+    /// recorded, spawning is never a sampled-only event).
+    pub pool_spawns: Counter,
+    /// Parallel kernel dispatches routed through the pool.
+    pub pool_dispatches: Counter,
+    /// Pool tasks run on claimed workers vs inline on the dispatcher
+    /// (inline counts the dispatcher's own share plus saturation
+    /// fallbacks); mean fan-out =
+    /// (pool_tasks + pool_tasks_inline) / pool_dispatches.
+    pub pool_tasks: Counter,
+    pub pool_tasks_inline: Counter,
+    /// Live pool workers (parked between dispatches).
+    pub pool_workers: Gauge,
 
     // -- stage histograms (nanoseconds) -----------------------------
     pub accept_wait: Histogram,
@@ -265,6 +284,7 @@ impl Metrics {
             tile_plan_builds: Counter::new(),
             sched_batches: Counter::new(),
             sched_cross_tiles: Counter::new(),
+            sched_claim_runs: Counter::new(),
             worker_busy_ns: Counter::new(),
             queue_depth: Gauge::new(),
             workers_busy: Gauge::new(),
@@ -276,6 +296,11 @@ impl Metrics {
             exec_points_vector: Counter::new(),
             exec_points_scalar: Counter::new(),
             exec_threads_cap: Gauge::new(),
+            pool_spawns: Counter::new(),
+            pool_dispatches: Counter::new(),
+            pool_tasks: Counter::new(),
+            pool_tasks_inline: Counter::new(),
+            pool_workers: Gauge::new(),
             accept_wait: Histogram::new(),
             stage_decode: Histogram::new(),
             stage_lookup: Histogram::new(),
@@ -361,6 +386,7 @@ impl Metrics {
             ("tile_plan_builds", self.tile_plan_builds.get()),
             ("sched_batches", self.sched_batches.get()),
             ("sched_cross_tiles", self.sched_cross_tiles.get()),
+            ("sched_claim_runs", self.sched_claim_runs.get()),
             ("worker_busy_ns", self.worker_busy_ns.get()),
             ("tiles_executed", self.tiles_executed.get()),
             ("exec_kernels", self.exec_kernels.get()),
@@ -368,12 +394,17 @@ impl Metrics {
             ("exec_threads_used", self.exec_threads_used.get()),
             ("exec_points_vector", self.exec_points_vector.get()),
             ("exec_points_scalar", self.exec_points_scalar.get()),
+            ("pool_spawns", self.pool_spawns.get()),
+            ("pool_dispatches", self.pool_dispatches.get()),
+            ("pool_tasks", self.pool_tasks.get()),
+            ("pool_tasks_inline", self.pool_tasks_inline.get()),
         ];
         let gauges = vec![
             ("queue_depth", self.queue_depth.get()),
             ("workers_busy", self.workers_busy.get()),
             ("workers_total", self.workers_total.get()),
             ("exec_threads_cap", self.exec_threads_cap.get()),
+            ("pool_workers", self.pool_workers.get()),
         ];
         let histograms = vec![
             ("accept_wait", self.accept_wait.snapshot()),

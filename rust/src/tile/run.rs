@@ -14,6 +14,14 @@
 //! submitting thread drains every unclaimed tile itself, so a fully
 //! busy pool degrades to sequential execution, not deadlock.
 //!
+//! Claims come in short **runs**: one cursor `fetch_add` hands out up
+//! to [`TileBatch::claim_run_len`] adjacent tiles, sized inversely to
+//! the design's per-tile cost so cheap tiles amortize cursor traffic
+//! while expensive (paper-scale) tiles keep the single-tile
+//! granularity the scheduler's fairness interleaving relies on
+//! ([`super::TileScheduler`]; `work_one` remains the explicit
+//! one-tile unit).
+//!
 //! ## The steady-state drain allocates nothing
 //!
 //! Each participant drains through a [`TileScratch`]: pre-shaped
@@ -46,6 +54,15 @@ use crate::exec::{Engine, EngineRun};
 use crate::tensor::Tensor;
 
 use super::plan::{ImageSource, TilePlan};
+
+/// Target output points per claim run: a run of cheap tiles amortizes
+/// cursor contention up to roughly this much work, keeping the claim
+/// granularity (and the scheduler's fairness) fine-grained in *time*
+/// rather than in tiles.
+const CLAIM_RUN_TARGET_POINTS: i64 = 2048;
+
+/// Hard cap on tiles per claim run, however cheap the tiles are.
+const CLAIM_RUN_MAX: usize = 8;
 
 /// A stitched whole-image result.
 pub struct TiledResult {
@@ -127,6 +144,8 @@ pub struct TileBatch {
     /// Next unclaimed tile index; `>= tile_count` once drained (or
     /// poisoned to stop claims after a failure).
     next: AtomicUsize,
+    /// Tiles handed out per cursor claim (see [`Self::claim_run_len`]).
+    run_len: usize,
     state: Mutex<BatchState>,
     done: Condvar,
 }
@@ -189,12 +208,20 @@ impl TileBatch {
         payload: BatchPayload,
     ) -> Result<Arc<TileBatch>> {
         let output = Tensor::zeros(plan.out_box.clone());
+        // K adaptive to tile cost: cheap tiles (small compiled tile
+        // extents) batch up to CLAIM_RUN_MAX per cursor hit;
+        // paper-scale tiles (≥ CLAIM_RUN_TARGET_POINTS output points)
+        // keep run length 1, preserving single-tile fairness.
+        let pts: i64 = c.tile_extent().iter().product();
+        let run_len =
+            ((CLAIM_RUN_TARGET_POINTS / pts.max(1)) as usize).clamp(1, CLAIM_RUN_MAX);
         Ok(Arc::new(TileBatch {
             c,
             engine,
             plan,
             payload,
             next: AtomicUsize::new(0),
+            run_len,
             state: Mutex::new(BatchState {
                 output: Some(output),
                 stats: SimStats::default(),
@@ -285,16 +312,14 @@ impl TileBatch {
     /// Claim and execute tiles until none remain unclaimed; safe to
     /// call from any number of threads, and returns quickly when the
     /// batch is already drained (stale helper wake-ups are free).
-    /// Each participant builds one engine runner and one scratch
-    /// lazily on its first claim and reuses them for every subsequent
-    /// tile.
+    /// Each participant builds one engine runner and one scratch on
+    /// its first pass and reuses them for every subsequent claim run.
     pub fn work(&self) {
+        if !self.has_unclaimed() {
+            return; // stale wake-up: no claims left, nothing to build
+        }
         let mut ctx: Option<(EngineRun, TileScratch)> = None;
         loop {
-            let i = self.next.fetch_add(1, Ordering::Relaxed);
-            if i >= self.plan.tile_count() {
-                return;
-            }
             if ctx.is_none() {
                 match self.c.runner(self.engine) {
                     Ok(r) => ctx = Some((r, TileScratch::new(&self.plan))),
@@ -302,7 +327,7 @@ impl TileBatch {
                 }
             }
             let (r, scratch) = ctx.as_mut().expect("runner just built");
-            if !self.step(i, r, scratch) {
+            if self.work_run(r, scratch) == 0 {
                 return;
             }
         }
@@ -313,24 +338,51 @@ impl TileBatch {
     /// [`TileScratch`] so a v3 request on a warm connection pays no
     /// setup and no per-tile allocation.
     pub fn work_with(&self, runner: &mut EngineRun, scratch: &mut TileScratch) {
-        loop {
-            let i = self.next.fetch_add(1, Ordering::Relaxed);
-            if i >= self.plan.tile_count() {
-                return;
-            }
-            if !self.step(i, runner, scratch) {
-                return;
+        while self.work_run(runner, scratch) > 0 {}
+    }
+
+    /// Tiles handed out per cursor claim for this batch (adaptive to
+    /// the design's per-tile cost; `1` for paper-scale tiles).
+    pub fn claim_run_len(&self) -> usize {
+        self.run_len
+    }
+
+    /// Claim and execute one **run** of up to [`Self::claim_run_len`]
+    /// adjacent tiles with a single cursor `fetch_add`; returns how
+    /// many tiles this call drained (`0` when nothing was left to
+    /// claim). The scheduler's drain unit: a worker drains one short
+    /// run, then re-asks the scheduler which batch deserves its next
+    /// claim, so no single large batch monopolizes a thread other
+    /// requests are waiting on — runs stay short in *work* because
+    /// `run_len` shrinks to 1 as tiles get expensive. A failed step
+    /// still counts as drained — the claim was spent; the failure is
+    /// recorded on the batch (and poisons the cursor, ending the run's
+    /// remainder along with everyone else's claims).
+    pub fn work_run(&self, runner: &mut EngineRun, scratch: &mut TileScratch) -> usize {
+        let count = self.plan.tile_count();
+        let i = self.next.fetch_add(self.run_len, Ordering::Relaxed);
+        if i >= count {
+            return 0;
+        }
+        let mut done = 0;
+        for t in i..(i + self.run_len).min(count) {
+            done += 1;
+            if !self.step(t, runner, scratch) {
+                break;
             }
         }
+        if crate::telemetry::sampling() {
+            crate::telemetry::metrics().sched_claim_runs.inc();
+        }
+        done
     }
 
     /// Claim and execute exactly **one** tile; `false` when nothing
-    /// was left to claim. The scheduler's drain unit
-    /// ([`super::TileScheduler`]): a worker claims one tile, then
-    /// re-asks the scheduler which batch deserves its next claim, so
-    /// no single large batch monopolizes a thread that other requests
-    /// are waiting on. A failed step still returns `true` — a claim
-    /// was spent; the failure is recorded on the batch.
+    /// was left to claim. The explicit single-tile unit (claim-run
+    /// length 1 regardless of tile cost) — the scheduler fairness
+    /// tests pin their interleaving with it. A failed step still
+    /// returns `true` — a claim was spent; the failure is recorded on
+    /// the batch.
     pub fn work_one(&self, runner: &mut EngineRun, scratch: &mut TileScratch) -> bool {
         let i = self.next.fetch_add(1, Ordering::Relaxed);
         if i >= self.plan.tile_count() {
@@ -617,10 +669,41 @@ mod tests {
         assert!(b.wait().is_ok());
     }
 
-    /// The zero-allocation contract of the steady-state drain: after
-    /// one warm-up batch, further batches through the same runner +
-    /// scratch freeze both allocation counters (the engine arena's and
-    /// the tile scratch's).
+    /// Claim runs adapt to tile cost: cheap 14×14 tiles (196 output
+    /// points) batch up to 8 per cursor hit — one `work_run` drains
+    /// this whole 4-tile batch — while tiles at or above the
+    /// 2048-point target keep the single-tile claim unit the
+    /// scheduler's fairness granularity relies on.
+    #[test]
+    fn claim_runs_adapt_to_tile_cost() {
+        let c = Arc::new(compile(&apps::gaussian::build(14)).unwrap());
+        let plan = c.tile_plan(&[28, 28]).unwrap();
+        let (inputs, _) = golden(14, &[28, 28]);
+        let b = TileBatch::new(Arc::clone(&c), Engine::Exec, plan, inputs).unwrap();
+        assert_eq!(b.claim_run_len(), 8, "2048 / 196 clamps to the max run");
+        let mut runner = c.runner(Engine::Exec).unwrap();
+        let mut scratch = TileScratch::new(b.plan());
+        assert_eq!(b.tile_count(), 4);
+        assert_eq!(b.work_run(&mut runner, &mut scratch), 4);
+        assert!(!b.has_unclaimed());
+        assert_eq!(b.claimed(), 4);
+        assert_eq!(b.work_run(&mut runner, &mut scratch), 0);
+        assert!(b.is_done());
+        assert!(b.wait().is_ok());
+
+        // Paper-scale tiles: 48×48 = 2304 ≥ 2048 points → runs of 1.
+        let big = Arc::new(compile(&apps::gaussian::build(48)).unwrap());
+        let plan = big.tile_plan(&[48, 48]).unwrap();
+        let (inputs, _) = golden(48, &[48, 48]);
+        let b = TileBatch::new(Arc::clone(&big), Engine::Exec, plan, inputs).unwrap();
+        assert_eq!(b.claim_run_len(), 1);
+    }
+
+    /// The zero-allocation **and zero-spawn** contract of the
+    /// steady-state drain: after one warm-up batch, further batches
+    /// through the same runner + scratch freeze both allocation
+    /// counters (the engine arena's and the tile scratch's) and the
+    /// compute pool's spawn counter.
     #[test]
     fn steady_state_tile_drain_does_not_allocate() {
         let c = Arc::new(compile(&apps::gaussian::build(14)).unwrap());
@@ -654,5 +737,18 @@ mod tests {
             frozen,
             "steady-state drain allocated"
         );
+        // Zero-spawn half of the warm contract: drained tiles never
+        // spawn threads. Concurrent tests may grow the pool, so only
+        // a spawn on every attempt is a real regression.
+        let mut zero_spawn = false;
+        for _ in 0..5 {
+            let before = crate::exec::pool::spawn_count();
+            drain(&mut runner, &mut scratch);
+            if crate::exec::pool::spawn_count() == before {
+                zero_spawn = true;
+                break;
+            }
+        }
+        assert!(zero_spawn, "steady-state drain spawned threads");
     }
 }

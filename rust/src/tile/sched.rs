@@ -11,12 +11,17 @@
 //! The scheduler replaces that with one shared structure holding the
 //! claim cursors of **all** in-flight batches, in admission order.
 //! Workers ask it one question — "which batch deserves my next tile
-//! claim?" — via [`TileScheduler::claim`], execute exactly one tile
-//! ([`crate::tile::TileBatch::work_one`]), and ask again. The answer
+//! claim?" — via [`TileScheduler::claim`], drain one short claim run
+//! ([`crate::tile::TileBatch::work_run`] — up to
+//! `TileBatch::claim_run_len` adjacent tiles per cursor hit, sized
+//! inversely to tile cost; [`crate::tile::TileBatch::work_one`]
+//! remains the explicit single-tile unit), and ask again. The answer
 //! is a weighted round-robin: the **oldest** live batch gets every
 //! other claim (it admitted first, it finishes first), and the
 //! remaining claims rotate across the younger batches so none of them
-//! starves while the oldest drains.
+//! starves while the oldest drains. Runs stay short in *work* —
+//! paper-scale tiles keep run length 1 — so the fairness granularity
+//! the interleaving tests pin is unchanged where it matters.
 //!
 //! ## Exactness
 //!
@@ -83,8 +88,9 @@ impl TileScheduler {
     /// `None` when no batch has unclaimed tiles. Weighted
     /// round-robin: even ticks go to the oldest live batch, odd ticks
     /// rotate across the rest (with one live batch, every tick is
-    /// its). The caller should claim exactly one tile
-    /// ([`TileBatch::work_one`]) and ask again, so scheduling
+    /// its). The caller should drain one short claim run
+    /// ([`TileBatch::work_run`]; [`TileBatch::work_one`] for the
+    /// strict single-tile unit) and ask again, so scheduling
     /// decisions track batch arrivals and completions claim by claim.
     pub fn claim(&self) -> Option<Arc<TileBatch>> {
         let mut st = self.lock();

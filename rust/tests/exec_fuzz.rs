@@ -28,9 +28,9 @@ use pushmem::apps;
 use pushmem::cgra::SimRun;
 use pushmem::coordinator::{compile, gen_inputs, Compiled};
 use pushmem::dse::{self, SpaceConfig};
-use pushmem::exec::{Engine, ExecRun};
+use pushmem::exec::{Engine, EngineRun, ExecRun};
 use pushmem::tensor::Tensor;
-use pushmem::tile::run_tiled;
+use pushmem::tile::{run_tiled, TileBatch, TileScratch, TiledResult};
 
 /// Splitmix64 — tiny, seedable, and good enough for case generation;
 /// the repo vendors no rand crate.
@@ -153,8 +153,28 @@ fn small_build(name: &str) -> pushmem::halide::Program {
     }
 }
 
+/// The `exec` leg at an explicit compute-pool width: drain the tile
+/// batch through an [`ExecRun::with_threads`] runner instead of
+/// `run_tiled`'s env-derived width, so the suite covers the serial
+/// path (1), a minimal fan-out (2), and a wide fan-out (8) through
+/// the persistent pool and the `StorePartition` parallel kernels.
+fn run_tiled_exec_width(
+    c: &Arc<Compiled>,
+    extent: &[i64],
+    inputs: BTreeMap<String, Tensor>,
+    width: usize,
+) -> anyhow::Result<TiledResult> {
+    let plan = c.tile_plan(extent)?;
+    let b = TileBatch::new(Arc::clone(c), Engine::Exec, plan, inputs)?;
+    let mut runner = EngineRun::Exec(ExecRun::with_threads(c.exec_plan()?, width));
+    let mut scratch = TileScratch::new(b.plan());
+    b.work_with(&mut runner, &mut scratch);
+    b.wait()
+}
+
 /// Drive one app's full case list through all three engines via the
-/// tile planner and require bit-identical outputs and stats.
+/// tile planner and require bit-identical outputs and stats. The
+/// exec leg randomizes its pool width (1, 2, or 8) per case.
 fn fuzz_app(name: &str) {
     let c = Arc::new(
         compile(&small_build(name)).unwrap_or_else(|e| panic!("{name}: compile: {e:#}")),
@@ -172,8 +192,9 @@ fn fuzz_app(name: &str) {
             let words: Vec<i32> = (0..b.cardinality()).map(|_| rng.value()).collect();
             inputs.insert(n.clone(), Tensor::from_data(b.clone(), words));
         }
-        let ex = run_tiled(&c, Engine::Exec, extent, inputs.clone(), 3)
-            .unwrap_or_else(|e| panic!("{}: exec: {e:#}", ctx()));
+        let width = [1usize, 2, 8][rng.below(3) as usize];
+        let ex = run_tiled_exec_width(&c, extent, inputs.clone(), width)
+            .unwrap_or_else(|e| panic!("{}: exec (pool width {width}): {e:#}", ctx()));
         let sc = run_tiled(&c, Engine::ExecScalar, extent, inputs.clone(), 3)
             .unwrap_or_else(|e| panic!("{}: exec-scalar: {e:#}", ctx()));
         let sim = run_tiled(&c, Engine::Sim, extent, inputs, 3)
@@ -252,6 +273,76 @@ fn fuzz_mobilenet() {
 fn every_primary_app_is_fuzzed() {
     for name in apps::PRIMARY {
         let _ = small_build(name);
+    }
+}
+
+/// A channel-unrolled planar-RGB program: unrolling `c` by 3 gives
+/// each of the three per-lane kernels a collapsed dim-0 extent of 1
+/// and an interleaved store (strides `[3T^2, T, 1]`, offset `l*T^2`),
+/// the store shape the generalized `StorePartition` proof exists for.
+fn planar_rgb(tile: i64) -> pushmem::halide::Program {
+    use pushmem::halide::{Expr, Func, HwSchedule, InputDecl, Program};
+    let rgb = Func::pure_fn(
+        "rgb",
+        &["c", "y", "x"],
+        Expr::add(
+            Expr::mul(
+                Expr::c(3),
+                Expr::ld("input", vec![Expr::v("c"), Expr::v("y"), Expr::v("x")]),
+            ),
+            Expr::v("c"),
+        ),
+    );
+    Program {
+        name: "prgb".into(),
+        inputs: vec![InputDecl { name: "input".into(), rank: 3 }],
+        funcs: vec![rgb],
+        schedule: HwSchedule::new([3, tile, tile]).unroll("rgb", "c", 3),
+    }
+}
+
+/// The persistent pool and the `StorePartition` parallel path at a
+/// trip count past `PAR_MIN_POINTS`: a channel-interleaved store that
+/// the old row-block proof could never parallelize must produce
+/// bit-identical outputs and stats at pool widths 1, 2, and 8 and on
+/// the scalar reference walk. The cycle-accurate leg is cross-checked
+/// on the same program shape at a small tile (a full 280-tile sim run
+/// is out of the fuzz budget; the small tile pins exec ≡ sim for this
+/// kernel shape, the large one pins serial ≡ parallel).
+#[test]
+fn pool_and_partitioned_kernels_agree_at_scale() {
+    // Small tile: all three engines, bit-exact.
+    let small = compile(&planar_rgb(16)).expect("compile planar rgb 16");
+    assert_three_engines_agree("prgb16", &small, &gen_inputs(&small.lp));
+
+    // Large tile: the per-lane kernels must actually take the
+    // partitioned parallel path, and every pool width must agree.
+    let c = Arc::new(compile(&planar_rgb(280)).expect("compile planar rgb 280"));
+    assert!(
+        c.exec_plan().expect("exec plan").parallel_kernel_count() >= 1,
+        "planar rgb kernels must be provably partitionable at scale"
+    );
+    let extent = c.tile_extent().to_vec();
+    let plan = c.tile_plan(&extent).expect("tile plan");
+    let mut rng = Rng::new(mix(fuzz_seed(), "prgb"));
+    let mut inputs = BTreeMap::new();
+    for (n, b) in plan.input_names.iter().zip(&plan.input_boxes) {
+        let words: Vec<i32> = (0..b.cardinality()).map(|_| rng.value()).collect();
+        inputs.insert(n.clone(), Tensor::from_data(b.clone(), words));
+    }
+    let sc = run_tiled(&c, Engine::ExecScalar, &extent, inputs.clone(), 1)
+        .unwrap_or_else(|e| panic!("prgb280 exec-scalar: {e:#}"));
+    for width in [1usize, 2, 8] {
+        let ex = run_tiled_exec_width(&c, &extent, inputs.clone(), width)
+            .unwrap_or_else(|e| panic!("prgb280 exec (pool width {width}): {e:#}"));
+        assert_eq!(
+            ex.output.data, sc.output.data,
+            "prgb280: width-{width} exec vs exec-scalar outputs differ"
+        );
+        assert_eq!(
+            ex.stats, sc.stats,
+            "prgb280: width-{width} exec vs exec-scalar stats differ"
+        );
     }
 }
 

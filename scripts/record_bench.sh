@@ -2,7 +2,10 @@
 # One-command perf-trajectory capture (README.md "Benchmarks"):
 # refresh BENCH_serve.json / BENCH_dse.json on a machine with the rust
 # toolchain, then sanity-diff the new serving numbers against the
-# committed baseline with scripts/bench_diff.py. Intended for landing
+# committed baseline with scripts/bench_diff.py. BENCH_serve.json
+# carries the compute-pool section ("pool": pool_vs_spawn_speedup,
+# strided_parallel_speedup, ...) alongside the engine/tiling/serving
+# numbers — see rust/benches/serve_throughput.rs §5. Intended for landing
 # bench JSON from a dev box when the CI/container image has no cargo:
 #
 #   scripts/record_bench.sh           # full-mode capture + diff
