@@ -33,6 +33,28 @@ def test_higher_is_better_suffixes():
     assert not is_higher_better("telemetry.histograms.stage_execute.sum_ns")
 
 
+def test_routing_section_metrics_classify():
+    # The §6 routing section of BENCH_serve.json (docs/routing.md):
+    # throughputs and the routed-vs-pinned speedup are higher-is-better
+    # under the existing dotted-suffix rules; the per-variant request
+    # counters in the embedded telemetry are plain counters.
+    assert is_higher_better("routing.routed_image_req_per_s")
+    assert is_higher_better("routing.pinned_image_req_per_s")
+    assert is_higher_better("routing.routed_vs_single_variant_speedup")
+    assert not is_higher_better("telemetry.counters.requests_variant_latency")
+    assert not is_higher_better("telemetry.counters.requests_variant_energy")
+    assert not is_higher_better("telemetry.gauges.active_variants")
+
+
+def test_routing_speedup_drop_is_a_regression():
+    old = {"routing": {"routed_vs_single_variant_speedup": 2.0}}
+    new = {"routing": {"routed_vs_single_variant_speedup": 1.1}}
+    by_path = {r[0]: r for r in diff(old, new, threshold=0.10)}
+    rec = by_path["routing.routed_vs_single_variant_speedup"]
+    assert rec[4] == "regressed"
+    assert rec[3] == pytest.approx(-0.45)
+
+
 def test_diff_classifies_within_and_past_threshold():
     old = {"a_per_s": 100.0, "count": 10, "same_per_s": 50.0}
     new = {"a_per_s": 80.0, "count": 200, "same_per_s": 52.0}

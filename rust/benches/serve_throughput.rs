@@ -16,7 +16,11 @@
 //! persistent compute pool: dispatch cost vs a per-run
 //! `std::thread::scope` spawn over identical work, and the
 //! `StorePartition` parallel path on a channel-interleaved store
-//! (8-wide vs serial req/s on the same compiled design).
+//! (8-wide vs serial req/s on the same compiled design). §6 measures
+//! load-adaptive variant routing (docs/routing.md): whole-image req/s
+//! through a multi-variant set built from a persisted `.pareto` front
+//! vs the same traffic pinned to the energy-optimal variant — the
+//! cost a single-variant deployment pays under light load.
 //!
 //! Results are also written machine-readably to `BENCH_serve.json`
 //! (the perf trajectory file `make bench-json` refreshes in CI).
@@ -446,6 +450,109 @@ fn main() {
          ({strided_parallel_speedup:.2}x)"
     );
 
+    // --- §6 Load-adaptive variant routing (docs/routing.md) ---------
+    // A deployment pinned to the energy-optimal variant (picked, say,
+    // for power) pays its smaller tile on every request even when the
+    // pool is idle. The router serves the latency variant under light
+    // load instead, shifting down only as pressure builds — so routed
+    // whole-image req/s on an idle pool must beat the pinned
+    // single-variant server on identical traffic, with bit-identical
+    // responses (every variant is a validated schedule of the same
+    // program).
+    let (routed_rps, pinned_rps, routing_roles) = {
+        use pushmem::coordinator::{compile_variants, VariantSet};
+        use pushmem::dse::cache::{candidate_key, encode_schedule, CacheEntry, DseCache};
+        use pushmem::halide::HwSchedule;
+
+        let tuned_dir =
+            std::env::temp_dir().join(format!("pushmem-bench-routing-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&tuned_dir);
+        let entry = |sched: &HwSchedule, cycles: i64, energy: f64, area: f64, pes: usize| CacheEntry {
+            key: candidate_key(APP, sched),
+            cycles,
+            completion: cycles,
+            pes,
+            mems: 1,
+            sram_words: 64,
+            energy_per_op_pj: energy,
+            pixels_per_cycle: 1.0,
+            area_um2: area,
+            encoded: encode_schedule(sched),
+        };
+        // Latency role: the full 62-tile schedule. Energy role: a
+        // 31-tile design (fewer PEs, lower synthetic pJ/op) that costs
+        // ~4x the tiles per image — the gap routing recovers.
+        let lat = HwSchedule::new([62, 62]);
+        let eco = HwSchedule::new([31, 31]);
+        let mut cache = DseCache::open(&tuned_dir, APP).expect("tuned dir");
+        let e_lat = entry(&lat, 100, 9.0, 900.0, 80);
+        let e_eco = entry(&eco, 400, 2.0, 300.0, 30);
+        let keys = vec![e_lat.key.clone(), e_eco.key.clone()];
+        cache.record(e_lat).expect("record");
+        cache.record(e_eco).expect("record");
+        cache.write_pareto(&keys).expect("write pareto");
+
+        let (prog, _) = pushmem::apps::by_name(APP).expect("app");
+        let set =
+            Arc::new(compile_variants(&prog, APP, Some(tuned_dir.as_path())).expect("variants"));
+        let roles: Vec<String> =
+            set.variants().iter().map(|v| v.role.to_string()).collect();
+        let pinned = Arc::new(VariantSet::solo(Arc::clone(
+            &set.by_role(1).expect("energy variant").compiled,
+        )));
+
+        let spawn_variant_server = |set: Arc<VariantSet>| {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            std::thread::spawn(move || {
+                let mut cfg = ServeConfig::single_set(APP, set);
+                cfg.workers = WORKERS;
+                serve::serve_on(listener, cfg)
+            });
+            addr
+        };
+        let routed_addr = spawn_variant_server(Arc::clone(&set));
+        let pinned_addr = spawn_variant_server(Arc::clone(&pinned));
+
+        // Bit-exactness across servers asserted outside the timed
+        // loops; the warm-up also takes compile/plan setup off the
+        // clock for both sides equally.
+        let mut routed_stream = TcpStream::connect(routed_addr).unwrap();
+        let mut pinned_stream = TcpStream::connect(pinned_addr).unwrap();
+        let (routed_words, _, _) =
+            serve::request_extent(&mut routed_stream, None, &extent, &refs).unwrap();
+        let (pinned_words, _, _) =
+            serve::request_extent(&mut pinned_stream, None, &extent, &refs).unwrap();
+        assert_eq!(routed_words, pinned_words, "variants must answer bit-identically");
+
+        let t0 = Instant::now();
+        for _ in 0..image_reps {
+            let (words, _, _) =
+                serve::request_extent(&mut routed_stream, None, &extent, &refs).unwrap();
+            assert_eq!(words.len() as i64, extent.iter().product::<i64>());
+        }
+        let routed_rps = image_reps as f64 / t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        for _ in 0..image_reps {
+            let (words, _, _) =
+                serve::request_extent(&mut pinned_stream, None, &extent, &refs).unwrap();
+            assert_eq!(words.len() as i64, extent.iter().product::<i64>());
+        }
+        let pinned_rps = image_reps as f64 / t0.elapsed().as_secs_f64();
+
+        let _ = std::fs::remove_dir_all(&tuned_dir);
+        (routed_rps, pinned_rps, roles)
+    };
+    let routed_vs_single_variant_speedup = routed_rps / pinned_rps;
+    println!(
+        "\nrouted serving ({APP} {}x{}, variants {}): {routed_rps:.2} image/s routed vs \
+         {pinned_rps:.2} image/s pinned-energy ({routed_vs_single_variant_speedup:.2}x)",
+        extent[0],
+        extent[1],
+        routing_roles.join("/")
+    );
+
     harness::write_bench_json(
         "BENCH_serve.json",
         &harness::Json::obj()
@@ -496,6 +603,15 @@ fn main() {
                     .num("strided_serial_req_per_s", strided_serial_req_per_s)
                     .num("strided_parallel_speedup", strided_parallel_speedup)
                     .int("pool_workers_spawned", pool::spawn_count() as i64)
+                    .end(),
+            )
+            .raw(
+                "routing",
+                &harness::Json::obj()
+                    .str_("variants", &routing_roles.join("/"))
+                    .num("routed_image_req_per_s", routed_rps)
+                    .num("pinned_image_req_per_s", pinned_rps)
+                    .num("routed_vs_single_variant_speedup", routed_vs_single_variant_speedup)
                     .end(),
             )
             // Point-in-time server telemetry (docs/observability.md):

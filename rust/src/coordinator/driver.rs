@@ -1,5 +1,9 @@
 //! Compilation driver: run the full pipeline of Fig 1 and bundle every
-//! intermediate for inspection, simulation, and reporting.
+//! intermediate for inspection, simulation, and reporting. Also home
+//! of the serving-side variant machinery ([`VariantSet`],
+//! [`compile_variants`]) that turns a tuner-persisted Pareto front
+//! into a bounded set of co-resident compiled designs per app
+//! (docs/routing.md).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -7,12 +11,14 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{bail, Context, Result};
 
-use crate::cgra::{place, route, CgraSpec, Placement, RoutingResult, SimPlan, SimRun};
+use crate::cgra::{place, route as route_nets, CgraSpec, Placement, RoutingResult, SimPlan, SimRun};
+use crate::dse::cache::CacheEntry;
 use crate::exec::{Engine, EngineRun, ExecPlan, ExecRun};
 use crate::extraction::extract;
 use crate::halide::{lower, LoweredPipeline, Program};
 use crate::mapping::{map_design, MappedDesign};
 use crate::sched::{self, PipelineSchedule};
+use crate::telemetry::{self, log, MAX_VARIANTS, VARIANT_ROLES};
 use crate::tensor::Tensor;
 use crate::tile::TilePlan;
 use crate::ub::UbGraph;
@@ -151,7 +157,7 @@ pub fn compile(program: &Program) -> Result<Compiled> {
     let graph = extract(&lp, &schedule).context("buffer extraction")?;
     let design = map_design(&graph).context("buffer mapping")?;
     let placement = place(&design, CgraSpec::default()).ok();
-    let routing = placement.as_ref().and_then(|p| route(p).ok());
+    let routing = placement.as_ref().and_then(|p| route_nets(p).ok());
     Ok(Compiled {
         program: program.clone(),
         lp,
@@ -166,26 +172,319 @@ pub fn compile(program: &Program) -> Result<Compiled> {
     })
 }
 
-/// Lazily-compiled, shared cache of [`Compiled`] designs keyed by
+/// One member of a [`VariantSet`]: a compiled design playing a named
+/// serving role. Role names come from
+/// [`crate::telemetry::VARIANT_ROLES`], so the routing policy, the
+/// per-variant request counters, and the request records all speak
+/// the same closed vocabulary.
+pub struct Variant {
+    /// `"latency"`, `"energy"`, `"area"`, or `"fallback"`.
+    pub role: &'static str,
+    /// Index of `role` in [`VARIANT_ROLES`] (and in the
+    /// `requests_by_variant` counter array).
+    pub role_index: usize,
+    pub compiled: Arc<Compiled>,
+    /// The tuner-recorded score this variant was selected by (`None`
+    /// for the hand-written fallback, which the tuner never scored).
+    pub entry: Option<CacheEntry>,
+}
+
+impl Variant {
+    /// PE footprint for co-residency budgeting: the tuner's recorded
+    /// count when available, the mapped design's otherwise.
+    pub fn pes(&self) -> u64 {
+        match &self.entry {
+            Some(e) => e.pes as u64,
+            None => self.compiled.design.pe_count() as u64,
+        }
+    }
+}
+
+/// The bounded set of compiled variants serving one app: up to three
+/// tuned frontier roles (latency-, energy-, and area-optimal picks
+/// off the persisted `.pareto` front) plus the hand-written fallback,
+/// in that order. Every variant is a validated bit-exact schedule of
+/// the *same program*, so routing between them can never change
+/// response bytes (docs/routing.md) — and each owns its own
+/// `Compiled`, hence its own exec/sim plans and bounded tile-plan
+/// cache, so variants never thrash each other's caches.
+pub struct VariantSet {
+    variants: Vec<Variant>,
+}
+
+impl VariantSet {
+    /// A single-variant set around an already-compiled design (the
+    /// test-seeding and untuned-serving shape): one `"fallback"`.
+    pub fn solo(c: Arc<Compiled>) -> VariantSet {
+        VariantSet {
+            variants: vec![Variant {
+                role: VARIANT_ROLES[3],
+                role_index: 3,
+                compiled: c,
+                entry: None,
+            }],
+        }
+    }
+
+    pub fn variants(&self) -> &[Variant] {
+        &self.variants
+    }
+
+    pub fn len(&self) -> usize {
+        self.variants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.variants.is_empty()
+    }
+
+    /// More than one variant to route between.
+    pub fn is_multi(&self) -> bool {
+        self.variants.len() > 1
+    }
+
+    /// The default variant: the best tuned one when the set is tuned
+    /// (first in role order — latency-optimal), the hand-written
+    /// fallback otherwise. Fixed-box (v1/v2) requests always use this
+    /// one — their payload is shaped by the compiled tile box, so
+    /// they must see a stable variant (docs/routing.md).
+    pub fn primary(&self) -> &Variant {
+        &self.variants[0]
+    }
+
+    /// The variant playing `role_index`, if present.
+    pub fn by_role(&self, role_index: usize) -> Option<&Variant> {
+        self.variants.iter().find(|v| v.role_index == role_index)
+    }
+
+    /// Test-only assembly of an arbitrary set (routing tests need
+    /// synthetic PE footprints without running the tuner).
+    #[cfg(test)]
+    pub(crate) fn from_variants(variants: Vec<Variant>) -> VariantSet {
+        VariantSet { variants }
+    }
+
+    /// Index of the smallest-PE-footprint variant — the co-residency
+    /// escape hatch when the array budget is exhausted.
+    pub fn min_pes_index(&self) -> usize {
+        let mut best = 0;
+        for (i, v) in self.variants.iter().enumerate() {
+            if v.pes() < self.variants[best].pes() {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+/// Pick the serving roles off a Pareto front: `(role_index,
+/// entry_index)` pairs in role order — latency-optimal (min cycles),
+/// energy-optimal (min energy/op), area-optimal (min area), each
+/// deduped so an entry that wins several roles appears once under its
+/// highest-priority role. Ties break on key, so selection is
+/// deterministic.
+pub fn select_variant_roles(entries: &[CacheEntry]) -> Vec<(usize, usize)> {
+    if entries.is_empty() {
+        return Vec::new();
+    }
+    let argmin = |score: &dyn Fn(&CacheEntry) -> f64| -> usize {
+        let mut best = 0;
+        for (i, e) in entries.iter().enumerate() {
+            let (s, b) = (score(e), score(&entries[best]));
+            if s < b || (s == b && e.key < entries[best].key) {
+                best = i;
+            }
+        }
+        best
+    };
+    let picks = [
+        argmin(&|e: &CacheEntry| e.cycles as f64),
+        argmin(&|e: &CacheEntry| e.energy_per_op_pj),
+        argmin(&|e: &CacheEntry| e.area_um2),
+    ];
+    let mut out: Vec<(usize, usize)> = Vec::new();
+    for (role, &idx) in picks.iter().enumerate() {
+        if !out.iter().any(|&(_, i)| i == idx) {
+            out.push((role, idx));
+        }
+    }
+    out
+}
+
+/// `PUSHMEM_VARIANTS`: cap on the total variants compiled per app
+/// (tuned roles + fallback), clamped to `1..=MAX_VARIANTS`. `1`
+/// disables multi-variant routing (fallback only); unset or invalid
+/// means the full set (invalid values warn, mirroring the
+/// `PUSHMEM_EXEC_THREADS` convention).
+fn env_variant_cap() -> usize {
+    match std::env::var("PUSHMEM_VARIANTS") {
+        Err(_) => MAX_VARIANTS,
+        Ok(s) => match s.trim().parse::<usize>() {
+            Ok(n) if (1..=MAX_VARIANTS).contains(&n) => n,
+            _ => {
+                log::warn(
+                    "route",
+                    &format!(
+                        "invalid PUSHMEM_VARIANTS={s:?} (want 1..={MAX_VARIANTS}); \
+                         using {MAX_VARIANTS}"
+                    ),
+                );
+                MAX_VARIANTS
+            }
+        },
+    }
+}
+
+/// Compile the full serving set for `program`: tuned frontier
+/// variants from `tuned_dir` (the verified `.pareto` record, or the
+/// single `.best` when no front was persisted) plus the hand-written
+/// fallback. Tuned records that fail verification, validation, or
+/// compilation are skipped with a `log::warn` + `tuned_fallbacks`
+/// count — variant serving must never be less available than plain
+/// serving. Honors `PUSHMEM_VARIANTS`.
+pub fn compile_variants(
+    program: &Program,
+    name: &str,
+    tuned_dir: Option<&Path>,
+) -> Result<VariantSet> {
+    compile_variants_capped(program, name, tuned_dir, env_variant_cap())
+}
+
+pub(crate) fn compile_variants_capped(
+    program: &Program,
+    name: &str,
+    tuned_dir: Option<&Path>,
+    cap: usize,
+) -> Result<VariantSet> {
+    let cap = cap.clamp(1, MAX_VARIANTS);
+    let mut variants: Vec<Variant> = Vec::new();
+    if let Some(dir) = tuned_dir {
+        let front = crate::dse::cache::load_pareto(dir, name);
+        // (role_index, schedule, entry) picks, in role order.
+        let picks: Vec<(usize, crate::halide::HwSchedule, CacheEntry)> = if front.is_empty()
+        {
+            if crate::dse::cache::pareto_path(dir, name).exists() {
+                tuned_fallback(name, "pareto record exists but no line verified");
+            }
+            // No front: `.best` serves as the single latency variant,
+            // preserving the pre-variant tuned-serving behavior.
+            match crate::dse::cache::load_best(dir, name) {
+                Some((sched, entry)) => vec![(0, sched, entry)],
+                None => {
+                    if crate::dse::cache::best_path(dir, name).exists() {
+                        tuned_fallback(name, "best record exists but is unreadable");
+                    } else {
+                        log::info(
+                            "tuned",
+                            &format!(
+                                "{name}: no record in {}; serving the hand-written \
+                                 schedule only",
+                                dir.display()
+                            ),
+                        );
+                    }
+                    Vec::new()
+                }
+            }
+        } else {
+            let entries: Vec<CacheEntry> = front.iter().map(|(_, e)| e.clone()).collect();
+            select_variant_roles(&entries)
+                .into_iter()
+                .map(|(role, i)| (role, front[i].0.clone(), front[i].1.clone()))
+                .collect()
+        };
+        let funcs: Vec<String> = program.funcs.iter().map(|f| f.name.clone()).collect();
+        for (role_index, sched, entry) in picks {
+            if variants.len() + 1 >= cap {
+                break; // keep one slot for the fallback
+            }
+            if let Err(e) = sched.validate(&funcs) {
+                tuned_fallback(
+                    name,
+                    &format!("invalid tuned schedule {}: {e:#}", entry.key),
+                );
+                continue;
+            }
+            let mut tuned = program.clone();
+            tuned.schedule = sched;
+            match compile(&tuned) {
+                Ok(c) => {
+                    log::info(
+                        "tuned",
+                        &format!(
+                            "{name}: variant {} = schedule {} ({} cycles, {} PEs) \
+                             from {}",
+                            VARIANT_ROLES[role_index],
+                            entry.key,
+                            entry.cycles,
+                            entry.pes,
+                            dir.display()
+                        ),
+                    );
+                    variants.push(Variant {
+                        role: VARIANT_ROLES[role_index],
+                        role_index,
+                        compiled: Arc::new(c),
+                        entry: Some(entry),
+                    });
+                }
+                Err(e) => tuned_fallback(
+                    name,
+                    &format!("tuned schedule {} failed to compile: {e:#}", entry.key),
+                ),
+            }
+        }
+    }
+    // The hand-written fallback is always last — unless it fails to
+    // compile while tuned variants succeeded, in which case the set
+    // stays tuned-only rather than losing the app entirely.
+    match compile(program) {
+        Ok(c) => variants.push(Variant {
+            role: VARIANT_ROLES[3],
+            role_index: 3,
+            compiled: Arc::new(c),
+            entry: None,
+        }),
+        Err(e) if variants.is_empty() => return Err(e),
+        Err(e) => log::warn(
+            "tuned",
+            &format!(
+                "{name}: hand-written schedule failed to compile ({e:#}); serving \
+                 tuned variants only"
+            ),
+        ),
+    }
+    Ok(VariantSet { variants })
+}
+
+/// One tuned-record fallback event: previously a silent `eprintln` +
+/// bare bool, now a leveled warning plus the `tuned_fallbacks`
+/// counter so operators can see (and alert on) stale tuned dirs.
+fn tuned_fallback(name: &str, why: &str) {
+    telemetry::metrics().tuned_fallbacks.inc();
+    log::warn("tuned", &format!("{name}: {why}; falling back to the hand-written schedule"));
+}
+
+/// Lazily-compiled, shared cache of per-app [`VariantSet`]s keyed by
 /// registered app name (the names [`crate::apps::by_name`] accepts).
 ///
 /// The first `get` for an app runs the full compile exactly once even
 /// under concurrent requests — each app owns a [`OnceLock`] slot, so
 /// racing callers block on the winner instead of recompiling.
 /// Failures are cached too: a bad app name cannot trigger a
-/// recompilation storm. Designs are handed out as `Arc<Compiled>` so
-/// every connection shares one copy (see DESIGN.md §2).
+/// recompilation storm. Designs are handed out as `Arc`s so every
+/// connection shares one copy (see DESIGN.md §2).
 ///
 /// A registry built [`with_tuned_dir`](Self::with_tuned_dir) consults
-/// the [`crate::dse`] result cache before compiling: when the tuner
-/// recorded a best schedule for an app (`<dir>/<app>.best`), that
-/// schedule replaces the hand-written default. A missing, malformed,
-/// or invalid record — or a tuned schedule that fails to compile —
-/// falls back to the hand-written schedule
-/// ([`compile_maybe_tuned`]): tuned serving must never be less
-/// available than untuned serving.
+/// the [`crate::dse`] result cache before compiling
+/// ([`compile_variants`]): the persisted `.pareto` front becomes up
+/// to three tuned variants, `.best` alone becomes one, and the
+/// hand-written schedule is always compiled as the fallback. Missing,
+/// malformed, or invalid records — or tuned schedules that fail to
+/// compile — fall back with a warning + `tuned_fallbacks` count:
+/// tuned serving must never be less available than untuned serving.
 pub struct CompiledRegistry {
-    slots: Mutex<BTreeMap<String, Arc<OnceLock<Result<Arc<Compiled>, String>>>>>,
+    slots: Mutex<BTreeMap<String, Arc<OnceLock<Result<Arc<VariantSet>, String>>>>>,
     tuned_dir: Option<PathBuf>,
 }
 
@@ -200,7 +499,7 @@ impl CompiledRegistry {
         CompiledRegistry { slots: Mutex::new(BTreeMap::new()), tuned_dir: Some(dir.into()) }
     }
 
-    fn slot(&self, name: &str) -> Arc<OnceLock<Result<Arc<Compiled>, String>>> {
+    fn slot(&self, name: &str) -> Arc<OnceLock<Result<Arc<VariantSet>, String>>> {
         let mut slots = self.slots.lock().unwrap();
         slots
             .entry(name.to_string())
@@ -208,29 +507,42 @@ impl CompiledRegistry {
             .clone()
     }
 
-    /// Fetch the compiled design for `name`, compiling on first use.
-    /// Concurrent first-`get`s for the same app compile once; the
+    /// Fetch the variant set for `name`, compiling on first use.
+    /// Concurrent first-gets for the same app compile once; the
     /// losers block until the winner's result lands in the slot.
-    pub fn get(&self, name: &str) -> Result<Arc<Compiled>> {
+    pub fn get_variants(&self, name: &str) -> Result<Arc<VariantSet>> {
         let slot = self.slot(name);
         let entry = slot.get_or_init(|| match crate::apps::by_name(name) {
             None => Err(format!("unknown app {name:?} (see `pushmem list`)")),
             Some((program, _)) => {
-                compile_maybe_tuned(&program, name, self.tuned_dir.as_deref())
+                compile_variants(&program, name, self.tuned_dir.as_deref())
                     .map(Arc::new)
                     .map_err(|e| format!("{e:#}"))
             }
         });
         match entry {
-            Ok(c) => Ok(Arc::clone(c)),
+            Ok(set) => Ok(Arc::clone(set)),
             Err(e) => bail!("{e}"),
         }
     }
 
+    /// The primary compiled design for `name` (the pre-variant API):
+    /// the best tuned variant when one loaded, the hand-written
+    /// design otherwise.
+    pub fn get(&self, name: &str) -> Result<Arc<Compiled>> {
+        Ok(Arc::clone(&self.get_variants(name)?.primary().compiled))
+    }
+
     /// Seed the cache with an already-compiled design (the
-    /// `pushmem serve <app>` path compiles before binding the port).
+    /// `pushmem serve <app>` path compiles before binding the port);
+    /// it becomes a single-variant set.
     pub fn insert(&self, name: &str, c: Arc<Compiled>) {
-        let _ = self.slot(name).set(Ok(c));
+        let _ = self.slot(name).set(Ok(Arc::new(VariantSet::solo(c))));
+    }
+
+    /// Seed the cache with a pre-built variant set.
+    pub fn insert_set(&self, name: &str, set: Arc<VariantSet>) {
+        let _ = self.slot(name).set(Ok(set));
     }
 
     /// Eagerly compile `names` on parallel threads (server warm-up);
@@ -284,9 +596,9 @@ pub fn compile_maybe_tuned(
         if apply_tuned_schedule(&mut tuned, name, dir) {
             match compile(&tuned) {
                 Ok(c) => return Ok(c),
-                Err(e) => eprintln!(
-                    "[tuned] {name}: tuned schedule failed to compile ({e:#}); \
-                     falling back to the hand-written schedule"
+                Err(e) => tuned_fallback(
+                    name,
+                    &format!("tuned schedule failed to compile: {e:#}"),
                 ),
             }
         }
@@ -299,35 +611,53 @@ pub fn compile_maybe_tuned(
 /// otherwise. Returns whether a tuned schedule was applied. (Compile
 /// failures are the caller's concern — [`compile_maybe_tuned`] adds
 /// that fallback.)
+///
+/// Fallbacks used to be a silent `eprintln` + bare `false`, which
+/// made a stale or corrupt tuned dir indistinguishable from an
+/// intentionally untuned one. Now every *failure* fallback (record
+/// present but unusable) is a `log::warn` plus a `tuned_fallbacks`
+/// count; a genuinely missing record stays informational.
 pub fn apply_tuned_schedule(program: &mut Program, name: &str, dir: &Path) -> bool {
     match crate::dse::cache::load_best(dir, name) {
         Some((sched, entry)) => {
             let funcs: Vec<String> = program.funcs.iter().map(|f| f.name.clone()).collect();
             match sched.validate(&funcs) {
                 Ok(()) => {
-                    eprintln!(
-                        "[tuned] {name}: schedule {} ({} cycles) from {}",
-                        entry.key,
-                        entry.cycles,
-                        dir.display()
+                    log::info(
+                        "tuned",
+                        &format!(
+                            "{name}: schedule {} ({} cycles) from {}",
+                            entry.key,
+                            entry.cycles,
+                            dir.display()
+                        ),
                     );
                     program.schedule = sched;
                     true
                 }
                 Err(e) => {
-                    eprintln!(
-                        "[tuned] {name}: ignoring invalid tuned schedule {}: {e:#}",
-                        entry.key
+                    tuned_fallback(
+                        name,
+                        &format!("invalid tuned schedule {}: {e:#}", entry.key),
                     );
                     false
                 }
             }
         }
         None => {
-            eprintln!(
-                "[tuned] {name}: no record in {}; using the hand-written schedule",
-                dir.display()
-            );
+            if crate::dse::cache::best_path(dir, name).exists() {
+                // A record exists but did not load: corrupt or
+                // key-mismatched — an operator problem, not a choice.
+                tuned_fallback(name, "best record exists but is unreadable");
+            } else {
+                log::info(
+                    "tuned",
+                    &format!(
+                        "{name}: no record in {}; using the hand-written schedule",
+                        dir.display()
+                    ),
+                );
+            }
             false
         }
     }
@@ -484,6 +814,176 @@ mod tests {
         let c = reg.get("gaussian").unwrap();
         assert_eq!(c.lp.tile, vec![62, 62], "hand-written fallback not used");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn front_entry(
+        app: &str,
+        sched: &crate::halide::HwSchedule,
+        cycles: i64,
+        energy_per_op_pj: f64,
+        area_um2: f64,
+        pes: usize,
+    ) -> crate::dse::cache::CacheEntry {
+        use crate::dse::cache::{candidate_key, encode_schedule, CacheEntry};
+        CacheEntry {
+            key: candidate_key(app, sched),
+            cycles,
+            completion: cycles,
+            pes,
+            mems: 1,
+            sram_words: 64,
+            energy_per_op_pj,
+            pixels_per_cycle: 1.0,
+            area_um2,
+            encoded: encode_schedule(sched),
+        }
+    }
+
+    #[test]
+    fn select_variant_roles_dedups_and_orders() {
+        use crate::halide::HwSchedule;
+        let a = front_entry("x", &HwSchedule::new([62, 62]), 100, 9.0, 900.0, 80);
+        let b = front_entry("x", &HwSchedule::new([31, 31]), 400, 2.0, 300.0, 30);
+        // a wins latency; b wins both energy and area → deduped under
+        // energy (its highest-priority role).
+        let roles = select_variant_roles(&[a.clone(), b.clone()]);
+        assert_eq!(roles, vec![(0, 0), (1, 1)]);
+        // One entry winning everything collapses to a single latency
+        // variant; an empty front selects nothing.
+        assert_eq!(select_variant_roles(&[a]), vec![(0, 0)]);
+        assert!(select_variant_roles(&[]).is_empty());
+        // Three distinct winners fill all three roles.
+        let l = front_entry("x", &HwSchedule::new([62, 62]), 100, 9.0, 900.0, 80);
+        let e = front_entry("x", &HwSchedule::new([31, 31]), 400, 2.0, 800.0, 30);
+        let r = front_entry("x", &HwSchedule::new([14, 14]), 900, 8.0, 100.0, 10);
+        assert_eq!(select_variant_roles(&[l, e, r]), vec![(0, 0), (1, 1), (2, 2)]);
+    }
+
+    /// A persisted `.pareto` front becomes one compiled variant per
+    /// distinct role winner, plus the hand-written fallback last; the
+    /// primary is the tuned latency pick.
+    #[test]
+    fn compile_variants_builds_role_set_from_pareto_front() {
+        use crate::dse::cache::DseCache;
+        use crate::halide::HwSchedule;
+
+        let app = "g14front-variants";
+        let dir = std::env::temp_dir()
+            .join(format!("pushmem-variants-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let lat_sched = HwSchedule::new([14, 14]);
+        let eco_sched = HwSchedule::new([7, 7]);
+        let lat = front_entry(app, &lat_sched, 100, 9.0, 900.0, 80);
+        let eco = front_entry(app, &eco_sched, 400, 2.0, 300.0, 30);
+        let keys = vec![lat.key.clone(), eco.key.clone()];
+        let mut c = DseCache::open(&dir, app).unwrap();
+        c.record(lat).unwrap();
+        c.record(eco).unwrap();
+        c.write_pareto(&keys).unwrap();
+
+        let program = apps::gaussian::build(14);
+        let set = compile_variants_capped(&program, app, Some(&dir), 4).unwrap();
+        assert!(set.is_multi());
+        assert_eq!(set.len(), 3, "latency + energy (area deduped) + fallback");
+        assert_eq!(set.primary().role, "latency");
+        assert_eq!(set.primary().compiled.lp.tile, vec![14, 14]);
+        let eco_v = set.by_role(1).expect("energy variant");
+        assert_eq!(eco_v.compiled.lp.tile, vec![7, 7]);
+        assert_eq!(eco_v.pes(), 30, "tuner-recorded PEs drive budgeting");
+        assert!(set.by_role(2).is_none(), "area role deduped into energy");
+        let fb = set.by_role(3).expect("hand-written fallback");
+        assert_eq!(fb.compiled.lp.tile, vec![14, 14]);
+        assert!(fb.entry.is_none());
+        // Smallest footprint is the tuned energy variant, not the
+        // fallback (whose PEs come from its mapped design).
+        assert_eq!(set.min_pes_index(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// `PUSHMEM_VARIANTS`-style caps always reserve one slot for the
+    /// fallback; cap 1 disables tuned variants entirely. (Tested via
+    /// the capped entry point — mutating the env var would race
+    /// parallel tests.)
+    #[test]
+    fn compile_variants_cap_reserves_the_fallback_slot() {
+        use crate::dse::cache::DseCache;
+        use crate::halide::HwSchedule;
+
+        let app = "g14cap-variants";
+        let dir = std::env::temp_dir()
+            .join(format!("pushmem-variants-cap-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let lat_sched = HwSchedule::new([14, 14]);
+        let eco_sched = HwSchedule::new([7, 7]);
+        let lat = front_entry(app, &lat_sched, 100, 9.0, 900.0, 80);
+        let eco = front_entry(app, &eco_sched, 400, 2.0, 300.0, 30);
+        let keys = vec![lat.key.clone(), eco.key.clone()];
+        let mut c = DseCache::open(&dir, app).unwrap();
+        c.record(lat).unwrap();
+        c.record(eco).unwrap();
+        c.write_pareto(&keys).unwrap();
+
+        let program = apps::gaussian::build(14);
+        let two = compile_variants_capped(&program, app, Some(&dir), 2).unwrap();
+        assert_eq!(two.len(), 2, "one tuned + the fallback");
+        assert_eq!(two.primary().role, "latency");
+        assert_eq!(two.variants().last().unwrap().role, "fallback");
+        let one = compile_variants_capped(&program, app, Some(&dir), 1).unwrap();
+        assert_eq!(one.len(), 1);
+        assert_eq!(one.primary().role, "fallback", "cap 1 = routing disabled");
+        // No tuned dir at all: a solo fallback set, still servable.
+        let untuned = compile_variants_capped(&program, app, None, 4).unwrap();
+        assert_eq!(untuned.len(), 1);
+        assert_eq!(untuned.primary().role, "fallback");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A front whose lines all fail verification falls back to
+    /// `.best`, and a bad `.best` falls back to the hand-written
+    /// schedule — tuned serving is never less available than untuned.
+    #[test]
+    fn compile_variants_survives_corrupt_records() {
+        use crate::dse::cache::DseCache;
+        use crate::halide::HwSchedule;
+
+        let app = "g14bad-variants";
+        let dir = std::env::temp_dir()
+            .join(format!("pushmem-variants-bad-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // Corrupt front + a good `.best`: the best record becomes the
+        // single tuned (latency) variant.
+        std::fs::write(dir.join(format!("{app}.pareto")), "garbage\n").unwrap();
+        let sched = HwSchedule::new([14, 14]);
+        let entry = front_entry(app, &sched, 100, 9.0, 900.0, 80);
+        let key = entry.key.clone();
+        let mut c = DseCache::open(&dir, app).unwrap();
+        c.record(entry).unwrap();
+        c.write_best(&key).unwrap();
+        let program = apps::gaussian::build(14);
+        let set = compile_variants_capped(&program, app, Some(&dir), 4).unwrap();
+        assert_eq!(set.len(), 2);
+        assert_eq!(set.primary().role, "latency");
+        assert_eq!(set.primary().compiled.lp.tile, vec![14, 14]);
+
+        // Corrupt both: only the fallback remains.
+        std::fs::write(dir.join(format!("{app}.best")), "also garbage\n").unwrap();
+        let set = compile_variants_capped(&program, app, Some(&dir), 4).unwrap();
+        assert_eq!(set.len(), 1);
+        assert_eq!(set.primary().role, "fallback");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn registry_get_variants_shares_one_set() {
+        let reg = CompiledRegistry::new();
+        let c = Arc::new(compile(&apps::gaussian::build(14)).unwrap());
+        reg.insert("gaussian", Arc::clone(&c));
+        let a = reg.get_variants("gaussian").unwrap();
+        let b = reg.get_variants("gaussian").unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.len(), 1);
+        assert!(Arc::ptr_eq(&a.primary().compiled, &c));
     }
 
     #[test]

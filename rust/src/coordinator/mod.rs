@@ -2,8 +2,9 @@
 //! the global buffer, validation against the XLA golden models, report
 //! generation, and the request-serving subsystem (wire framing in
 //! [`protocol`], lazy compile cache in
-//! [`driver::CompiledRegistry`], bounded worker-pool server in
-//! [`serve`] — see DESIGN.md §2 and docs/protocol.md).
+//! [`driver::CompiledRegistry`], load-adaptive variant routing in
+//! [`route`], bounded worker-pool server in [`serve`] — see DESIGN.md
+//! §2, docs/protocol.md, and docs/routing.md).
 //!
 //! Python never appears here — the HLO artifacts were lowered once at
 //! build time (`make artifacts`) and are loaded through the PJRT C API
@@ -13,12 +14,15 @@ pub mod driver;
 pub mod globalbuf;
 pub mod protocol;
 pub mod report;
+pub mod route;
 pub mod serve;
 pub mod validate;
 
 pub use driver::{
-    apply_tuned_schedule, compile, compile_maybe_tuned, gen_inputs, Compiled, CompiledRegistry,
+    apply_tuned_schedule, compile, compile_maybe_tuned, compile_variants, gen_inputs, Compiled,
+    CompiledRegistry, Variant, VariantSet,
 };
+pub use route::{LoadSignals, RoutePolicy};
 pub use globalbuf::GlobalBuffer;
 pub use report::{
     report_app, report_app_with, sequential_comparison, AppReport, SequentialComparison,

@@ -47,6 +47,16 @@
 //! interface and bypasses the leveled [`telemetry::log`] logger the
 //! rest of the module's stderr output goes through.
 //!
+//! Apps resolve to [`VariantSet`]s, not single designs: a tuned
+//! registry carries up to four compiled variants per app (latency-,
+//! energy-, area-optimal picks off the DSE Pareto front, plus the
+//! hand-written fallback), and each v3 request picks its variant
+//! through the server's [`RoutePolicy`] from load sampled at
+//! admission — bit-exact by construction, since every variant is a
+//! validated schedule of the same program and v3 responses are
+//! extent-addressed (docs/routing.md). Fixed-box v1/v2 requests
+//! always use the set's primary variant.
+//!
 //! This module owns only the socket I/O and the pool; framing is pure
 //! byte-slice code in [`super::protocol`], app-to-design resolution is
 //! the registry's job, and tiling is [`crate::tile`]'s. That split
@@ -61,8 +71,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use super::driver::{Compiled, CompiledRegistry};
+use super::driver::{Compiled, CompiledRegistry, VariantSet};
 use super::protocol::{self, FrameError, Request, Response};
+use super::route::{LoadSignals, RoutePolicy};
 use crate::exec::{Engine, EngineRun};
 use crate::telemetry::{self, log, RequestRecord, MAX_ACCEPT_SHARDS};
 use crate::tensor::Tensor;
@@ -92,9 +103,15 @@ enum Job {
 /// by [`serve_on`].
 pub struct ServeConfig {
     pub registry: Arc<CompiledRegistry>,
-    /// Target of v1 frames (which carry no app name). `None` makes
-    /// v1 frames an error — multi-app endpoints may choose that.
-    pub default_app: Option<Arc<Compiled>>,
+    /// Target of v1 frames (which carry no app name) and of default-
+    /// app v3 frames. `None` makes v1 frames an error — multi-app
+    /// endpoints may choose that. A multi-variant set here is what
+    /// load-adaptive routing routes over (docs/routing.md).
+    pub default_set: Option<Arc<VariantSet>>,
+    /// Per-request variant routing policy for v3 (whole-image)
+    /// requests — fixed-box requests always use the set's primary
+    /// variant (docs/routing.md).
+    pub route: RoutePolicy,
     /// Worker threads handling connections; accepted connections
     /// beyond this queue on a bounded channel (backpressure instead
     /// of unbounded thread spawn).
@@ -140,12 +157,19 @@ impl ServeConfig {
     /// so a v2 frame naming it shares the design instead of
     /// recompiling.
     pub fn single(cli_name: &str, c: Compiled) -> ServeConfig {
+        ServeConfig::single_set(cli_name, Arc::new(VariantSet::solo(Arc::new(c))))
+    }
+
+    /// Single-app serving over a pre-built variant set (the
+    /// `pushmem serve <app> --tuned-dir` path, where the tuner's
+    /// persisted Pareto front yields multiple routable variants).
+    pub fn single_set(cli_name: &str, set: Arc<VariantSet>) -> ServeConfig {
         let registry = Arc::new(CompiledRegistry::new());
-        let c = Arc::new(c);
-        registry.insert(cli_name, Arc::clone(&c));
+        registry.insert_set(cli_name, Arc::clone(&set));
         ServeConfig {
             registry,
-            default_app: Some(c),
+            default_set: Some(set),
+            route: RoutePolicy::new(),
             workers: 4,
             stats: false,
             engine: Engine::Auto,
@@ -163,7 +187,8 @@ impl ServeConfig {
     pub fn multi(registry: Arc<CompiledRegistry>, workers: usize) -> ServeConfig {
         ServeConfig {
             registry,
-            default_app: None,
+            default_set: None,
+            route: RoutePolicy::new(),
             workers,
             stats: false,
             engine: Engine::Auto,
@@ -290,6 +315,9 @@ fn fail_rec(version: u8, app: &str, ctx: &ReqCtx<'_>) {
     telemetry::metrics().record_request(RequestRecord {
         app: app.to_string(),
         engine: "?",
+        // Failures never count toward `requests_by_variant` — the
+        // reconciliation invariant is over OK requests only.
+        variant: "?",
         version,
         ok: false,
         tiles: 0,
@@ -508,17 +536,17 @@ pub fn handle_connection(cfg: &ServeConfig, stream: &mut TcpStream) -> Result<()
             queue_depth: m.queue_depth.get(),
             in_words: view.inputs.iter().map(|r| r.words as u64).sum(),
         };
-        let c: Arc<Compiled> = match view.app {
-            Some(name) => match cfg.registry.get(name) {
-                Ok(c) => c,
+        let set: Arc<VariantSet> = match view.app {
+            Some(name) => match cfg.registry.get_variants(name) {
+                Ok(s) => s,
                 Err(e) => {
                     fail_rec(version, name, &ctx);
                     write_error(stream, protocol::STATUS_UNKNOWN_APP);
                     bail!("client {peer}: {e:#}");
                 }
             },
-            None => match &cfg.default_app {
-                Some(c) => Arc::clone(c),
+            None => match &cfg.default_set {
+                Some(s) => Arc::clone(s),
                 None => {
                     fail_rec(version, "?", &ctx);
                     write_error(stream, protocol::STATUS_UNKNOWN_APP);
@@ -531,10 +559,32 @@ pub fn handle_connection(cfg: &ServeConfig, stream: &mut TcpStream) -> Result<()
         // frame buffer itself.
         let extent = view.extent;
         let ranges = view.inputs;
+        // Variant selection (docs/routing.md): v3 requests are
+        // extent-addressed, so any variant serves identical bytes —
+        // route them by live load. Fixed-box v1/v2 payloads are
+        // shaped by the compiled tile box, so they always see the
+        // set's primary variant. Every variant is its own `Compiled`,
+        // so `runner_for`'s design-identity key gives each variant
+        // its own warmed per-connection slot automatically.
+        let chosen = if extent.is_some() {
+            let sig = LoadSignals {
+                queue_depth: ctx.queue_depth,
+                backlog: cfg.sched.backlog(),
+                workers: cfg.workers.max(1) as u64,
+                workers_busy: m.workers_busy.get(),
+            };
+            cfg.route.decide(&set.primary().compiled.program.name, &set, &sig)
+        } else {
+            0
+        };
+        let variant = set.variants()[chosen].role;
+        let c: Arc<Compiled> = Arc::clone(&set.variants()[chosen].compiled);
+        drop(set);
         // v3: arbitrary-extent requests take the tiling path — plan,
         // fan tiles out across idle pool workers, stitch, respond.
         if let Some(extent) = extent {
-            match handle_tiled(cfg, stream, &c, &extent, buf, ranges, &mut runs, &ctx) {
+            match handle_tiled(cfg, stream, &c, variant, &extent, buf, ranges, &mut runs, &ctx)
+            {
                 Ok(()) => continue,
                 Err(e) => return Err(e),
             }
@@ -590,6 +640,7 @@ pub fn handle_connection(cfg: &ServeConfig, stream: &mut TcpStream) -> Result<()
         let rec = RequestRecord {
             app: c.program.name.clone(),
             engine: engine_name,
+            variant,
             version,
             ok: true,
             tiles: 1,
@@ -641,6 +692,7 @@ fn handle_tiled(
     cfg: &ServeConfig,
     stream: &mut TcpStream,
     c: &Arc<Compiled>,
+    variant: &'static str,
     extent: &[i64],
     frame_buf: Vec<u8>,
     ranges: Vec<protocol::WordsRange>,
@@ -779,6 +831,7 @@ fn handle_tiled(
     let rec = RequestRecord {
         app,
         engine: res.engine.name(),
+        variant,
         version: 3,
         ok: true,
         tiles: res.tiles as u64,
@@ -1137,19 +1190,39 @@ pub fn serve(
     engine: Engine,
     metrics_json: Option<std::path::PathBuf>,
 ) -> Result<()> {
+    let set = Arc::new(VariantSet::solo(Arc::new(c)));
+    serve_set(cli_name, set, addr, workers, stats, engine, metrics_json)
+}
+
+/// [`serve`] over a pre-built [`VariantSet`] — the
+/// `pushmem serve <app> --tuned-dir` path, where the tuner's
+/// persisted Pareto front yields multiple variants and v3 requests
+/// are routed between them by live load (docs/routing.md).
+pub fn serve_set(
+    cli_name: &str,
+    set: Arc<VariantSet>,
+    addr: &str,
+    workers: usize,
+    stats: bool,
+    engine: Engine,
+    metrics_json: Option<std::path::PathBuf>,
+) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    let roles: Vec<&str> = set.variants().iter().map(|v| v.role).collect();
+    let c = &set.primary().compiled;
     log::info(
         "serve",
         &format!(
-            "event=listening app={} addr={addr} pes={} mem_tiles={} cycles_per_tile={} workers={workers} engine={}",
+            "event=listening app={} addr={addr} pes={} mem_tiles={} cycles_per_tile={} workers={workers} engine={} variants={}",
             c.program.name,
             c.design.pe_count(),
             c.design.mem_tiles(),
             c.graph.completion,
-            engine.name()
+            engine.name(),
+            roles.join(",")
         ),
     );
-    let mut cfg = ServeConfig::single(cli_name, c);
+    let mut cfg = ServeConfig::single_set(cli_name, set);
     cfg.workers = workers;
     cfg.stats = stats;
     cfg.engine = engine;

@@ -14,10 +14,18 @@
 //!      pixels_per_cycle  area_um2  schedule-encoding
 //! ```
 //!
-//! plus `<dir>/<app>.best` holding the single winning line. Lines
-//! starting with `#` and lines that fail to parse are skipped on load
-//! (forward compatibility), and a corrupt `.best` simply means "no
-//! tuned schedule" — serving falls back to the hand-written default.
+//! plus `<dir>/<app>.best` holding the single winning line and — when
+//! the tuner ran with `--objective pareto` — `<dir>/<app>.pareto`
+//! holding one line per member of the cycles-vs-PEs Pareto front
+//! (best-cycles first), the record variant-aware serving loads (see
+//! docs/routing.md). Lines starting with `#` and lines that fail to
+//! parse are skipped on load (forward compatibility), and a corrupt
+//! `.best` simply means "no tuned schedule" — serving falls back to
+//! the hand-written default. `.pareto` lines are additionally
+//! *verified* on load ([`load_pareto`]): the key is recomputed from
+//! the decoded schedule exactly as [`lookup_verified`]
+//! (DseCache::lookup_verified) re-checks encodings, so a corrupt or
+//! forged line can never smuggle a different schedule into serving.
 //!
 //! No serde is vendored in this offline image, so the schedule
 //! encoding is a hand-rolled `field=value|...` string with set-valued
@@ -197,7 +205,20 @@ sram_words energy_per_op_pj pixels_per_cycle area_um2 schedule";
 pub struct DseCache {
     path: PathBuf,
     best_path: PathBuf,
+    pareto_path: PathBuf,
     entries: BTreeMap<String, CacheEntry>,
+}
+
+/// `<dir>/<app>.best` — exposed so callers (the tuned-serving loader)
+/// can distinguish "no record" from "unreadable record" without
+/// duplicating the naming convention.
+pub fn best_path(dir: &Path, app: &str) -> PathBuf {
+    dir.join(format!("{app}.best"))
+}
+
+/// `<dir>/<app>.pareto` — the persisted Pareto front.
+pub fn pareto_path(dir: &Path, app: &str) -> PathBuf {
+    dir.join(format!("{app}.pareto"))
 }
 
 impl DseCache {
@@ -207,7 +228,8 @@ impl DseCache {
         fs::create_dir_all(dir)
             .with_context(|| format!("creating cache dir {}", dir.display()))?;
         let path = dir.join(format!("{app}.tsv"));
-        let best_path = dir.join(format!("{app}.best"));
+        let best = best_path(dir, app);
+        let pareto = pareto_path(dir, app);
         let mut entries = BTreeMap::new();
         if path.exists() {
             let text = fs::read_to_string(&path)
@@ -221,7 +243,7 @@ impl DseCache {
                 }
             }
         }
-        Ok(DseCache { path, best_path, entries })
+        Ok(DseCache { path, best_path: best, pareto_path: pareto, entries })
     }
 
     pub fn len(&self) -> usize {
@@ -285,16 +307,77 @@ impl DseCache {
         fs::write(&self.best_path, format!("{}\n", e.to_line()))
             .with_context(|| format!("writing {}", self.best_path.display()))
     }
+
+    /// Persist the Pareto front (`<app>.pareto`): one cached line per
+    /// key, in the order given (best-cycles first by convention of the
+    /// caller). Every key must already be in the cache — the front is
+    /// always a subset of scored candidates.
+    pub fn write_pareto(&self, keys: &[String]) -> Result<()> {
+        let mut out = String::from(HEADER);
+        out.push('\n');
+        for key in keys {
+            let e = self
+                .entries
+                .get(key)
+                .with_context(|| format!("pareto key {key} not in cache"))?;
+            out.push_str(&e.to_line());
+            out.push('\n');
+        }
+        fs::write(&self.pareto_path, out)
+            .with_context(|| format!("writing {}", self.pareto_path.display()))
+    }
 }
 
 /// Load the tuned-best schedule for `app`, if one was recorded — the
 /// coordinator hook behind `--tuned-dir`. Any missing or malformed
 /// file is `None`: serving falls back to the hand-written schedule.
 pub fn load_best(dir: &Path, app: &str) -> Option<(HwSchedule, CacheEntry)> {
-    let text = fs::read_to_string(dir.join(format!("{app}.best"))).ok()?;
+    let text = fs::read_to_string(best_path(dir, app)).ok()?;
     let entry = CacheEntry::parse_line(text.lines().next()?.trim()).ok()?;
     let sched = entry.schedule().ok()?;
     Some((sched, entry))
+}
+
+/// Load the persisted Pareto front for `app`, *verified*: each line's
+/// schedule is decoded and its [`candidate_key`] recomputed — a line
+/// whose stored key does not match the schedule it carries (disk
+/// corruption, a hand-edited record, or an FNV collision smuggled
+/// into the file) is dropped, exactly mirroring the
+/// `lookup_verified` collision rule. Malformed lines and duplicate
+/// keys are skipped; a missing file is simply the empty front (the
+/// caller falls back to `.best` or the hand-written schedule). Order
+/// is preserved from the file (best-cycles first as written by
+/// [`DseCache::write_pareto`]).
+pub fn load_pareto(dir: &Path, app: &str) -> Vec<(HwSchedule, CacheEntry)> {
+    let Ok(text) = fs::read_to_string(pareto_path(dir, app)) else {
+        return Vec::new();
+    };
+    let mut seen = std::collections::BTreeSet::new();
+    let mut front = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let Ok(entry) = CacheEntry::parse_line(line) else { continue };
+        let Ok(sched) = entry.schedule() else { continue };
+        if candidate_key(app, &sched) != entry.key
+            || encode_schedule(&sched) != entry.encoded
+        {
+            eprintln!(
+                "[dse] {}: dropping unverifiable pareto line (key {} does not \
+                 match its schedule {:?})",
+                pareto_path(dir, app).display(),
+                entry.key,
+                entry.encoded
+            );
+            continue;
+        }
+        if seen.insert(entry.key.clone()) {
+            front.push((sched, entry));
+        }
+    }
+    front
 }
 
 #[cfg(test)]
@@ -419,6 +502,74 @@ mod tests {
         assert_eq!(best.key, entry.key);
         // Unknown app: no best.
         assert!(load_best(&dir, "nope").is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    fn entry_for(app: &str, sched: &HwSchedule, cycles: i64) -> CacheEntry {
+        CacheEntry {
+            key: candidate_key(app, sched),
+            cycles,
+            completion: cycles,
+            pes: 10,
+            mems: 2,
+            sram_words: 256,
+            energy_per_op_pj: 1.5,
+            pixels_per_cycle: 0.5,
+            area_um2: 1000.0,
+            encoded: encode_schedule(sched),
+        }
+    }
+
+    #[test]
+    fn pareto_record_roundtrips_in_order() {
+        let dir = std::env::temp_dir()
+            .join(format!("pushmem-dse-pareto-test-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let a = HwSchedule::new([60, 60]);
+        let b = HwSchedule::new([30, 30]).store_at("p");
+        let (ea, eb) = (entry_for("toy", &a, 100), entry_for("toy", &b, 200));
+        {
+            let mut c = DseCache::open(&dir, "toy").unwrap();
+            c.record(ea.clone()).unwrap();
+            c.record(eb.clone()).unwrap();
+            c.write_pareto(&[ea.key.clone(), eb.key.clone()]).unwrap();
+            // A key the cache never scored cannot be crowned; the
+            // failed call leaves the previous record untouched.
+            assert!(c.write_pareto(&["feedfacefeedface".into()]).is_err());
+        }
+        let front = load_pareto(&dir, "toy");
+        assert_eq!(front.len(), 2);
+        assert_eq!(front[0].1.key, ea.key, "file order (best-cycles first) preserved");
+        assert_eq!(front[0].0.tile, vec![60, 60]);
+        assert_eq!(front[1].0.tile, vec![30, 30]);
+        assert_eq!(front[1].1.cycles, 200);
+        // Missing file: empty front, not an error.
+        assert!(load_pareto(&dir, "nope").is_empty());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pareto_load_verifies_keys_and_skips_garbage() {
+        let dir = std::env::temp_dir()
+            .join(format!("pushmem-dse-pareto-verify-test-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let good = entry_for("toy", &HwSchedule::new([60, 60]), 100);
+        // A forged line: candidate A's key, candidate B's schedule —
+        // the collision shape lookup_verified guards against.
+        let mut forged = entry_for("toy", &HwSchedule::new([60, 60]), 50);
+        forged.encoded = encode_schedule(&HwSchedule::new([16, 16]));
+        let text = format!(
+            "{HEADER}\nnot a cache line\n{}\n{}\n{}\n",
+            forged.to_line(),
+            good.to_line(),
+            good.to_line(), // duplicate key: kept once
+        );
+        fs::write(pareto_path(&dir, "toy"), text).unwrap();
+        let front = load_pareto(&dir, "toy");
+        assert_eq!(front.len(), 1, "only the verifiable line survives");
+        assert_eq!(front[0].1.key, good.key);
+        assert_eq!(front[0].0.tile, vec![60, 60]);
         let _ = fs::remove_dir_all(&dir);
     }
 }

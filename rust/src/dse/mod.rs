@@ -330,18 +330,17 @@ pub fn tune_program(program: &Program, app_key: &str, cfg: &TuneConfig) -> Resul
         }
     }
 
-    // Phase 4: rank (deterministically) and persist the winner.
+    // Phase 4: rank (deterministically) and persist the winner — and,
+    // under the pareto objective, the whole front (`<app>.pareto`),
+    // which variant-aware serving loads through
+    // [`cache::load_pareto`] (docs/routing.md).
     results.sort_by(|a, b| {
         cfg.objective
             .score(&a.entry)
             .total_cmp(&cfg.objective.score(&b.entry))
             .then(a.entry.key.cmp(&b.entry.key))
     });
-    if let (Some(c), Some(best)) = (&dse_cache, results.first()) {
-        c.write_best(&best.entry.key)?;
-    }
-
-    Ok(TuneReport {
+    let report = TuneReport {
         app: app_key.to_string(),
         objective: cfg.objective,
         enumerated,
@@ -352,7 +351,20 @@ pub fn tune_program(program: &Program, app_key: &str, cfg: &TuneConfig) -> Resul
         failed,
         eval_seconds,
         results,
-    })
+    };
+    if let Some(c) = &dse_cache {
+        if let Some(best) = report.best() {
+            c.write_best(&best.entry.key)?;
+        }
+        if cfg.objective == Objective::Pareto {
+            let keys: Vec<String> =
+                report.pareto_front().iter().map(|r| r.entry.key.clone()).collect();
+            if !keys.is_empty() {
+                c.write_pareto(&keys)?;
+            }
+        }
+    }
+    Ok(report)
 }
 
 #[cfg(test)]
@@ -382,5 +394,37 @@ mod tests {
     #[test]
     fn unknown_app_rejected() {
         assert!(tune_app("no_such_app", &TuneConfig::default()).is_err());
+    }
+
+    /// A pareto-objective run writes `<app>.pareto` and the verified
+    /// loader round-trips exactly the front the report computed, in
+    /// best-cycles-first order.
+    #[test]
+    fn pareto_objective_persists_a_verified_front() {
+        let dir = std::env::temp_dir()
+            .join(format!("pushmem-dse-front-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let program = crate::apps::gaussian::build(14);
+        let cfg = TuneConfig {
+            objective: Objective::Pareto,
+            budget: 4,
+            workers: 2,
+            cache_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        let report = tune_program(&program, "g14front", &cfg).unwrap();
+        let front = report.pareto_front();
+        assert!(!front.is_empty(), "no front from {} results", report.results.len());
+        let loaded = cache::load_pareto(&dir, "g14front");
+        assert_eq!(loaded.len(), front.len());
+        for ((sched, entry), r) in loaded.iter().zip(&front) {
+            assert_eq!(entry.key, r.entry.key);
+            assert_eq!(cache::encode_schedule(sched), r.entry.encoded);
+        }
+        assert!(
+            loaded.windows(2).all(|w| w[0].1.cycles <= w[1].1.cycles),
+            "front must be best-cycles first"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -13,6 +13,9 @@
 //! pushmem report [--artifacts D]     all apps: Table IV + Fig 13/14 rows
 //! pushmem tables                     Tables V, VI, VII reproductions
 //! pushmem tune <app> [--budget N]    auto-tune the schedule (dse::)
+//! pushmem variants <app> --tuned-dir D  show the serving variant set
+//!                                    compiled off the persisted Pareto
+//!                                    front (docs/routing.md)
 //! pushmem serve <app> [--addr A]     serve one app over TCP (Fig 12 shape)
 //! pushmem serve-all [--addr A]       serve every app over one TCP port
 //! pushmem stats <host:port>          query a running server's telemetry
@@ -72,10 +75,11 @@ fn usage(cmd: &str) -> &'static str {
         "report" => "usage: pushmem report [--artifacts D] [--engine E]\n\n  --artifacts D   directory of HLO golden artifacts (default: artifacts)\n  --engine E      exec|exec-scalar|sim|auto (default: auto)\n\nAll seven Table III apps: Table IV resources plus Fig 13/14 rows.",
         "tables" => "usage: pushmem tables\n\nReproduce Tables V (Harris schedules), VI and VII (optimized vs\nsequential mappings).",
         "tune" => "usage: pushmem tune <app> [--objective O] [--budget N] [--workers N] [--seed S] [--cache-dir D] [--engine E]\n\n  --objective O   cycles|energy|pes|area|pareto (default: cycles)\n  --budget N      max candidates to score (default: 24)\n  --workers N     evaluation threads (default: all cores)\n  --seed S        enumeration seed (default: 1)\n  --cache-dir D   content-addressed result cache (default: dse-cache;\n                  'none' disables caching)\n  --engine E      exec|exec-scalar|sim|auto (default: auto) — exec scores an order\n                  of magnitude more candidates/sec at identical scores\n\nSearch the schedule space of <app>: enumerate tile/store_at/unroll/\nhost candidates, prune analytically, score survivors in parallel\n(each validated bit-exact against the functional reference), rank by\nthe objective, and record the winner for `serve --tuned-dir`. For\nharris the ranking is compared against the six hand-written Table V\nschedules. See docs/dse.md.",
-        "serve" => "usage: pushmem serve <app> [--addr A] [--workers N] [--stats] [--extent WxH] [--tuned-dir D] [--engine E] [--metrics-json PATH]\n\n  --addr A      listen address (default: 127.0.0.1:7411)\n  --workers N   connection worker threads (default: 4; a connection\n                holds its worker until it disconnects, and idle\n                workers join in-flight whole-image tile batches)\n  --stats       print one [req] line per served request\n  --extent WxH  pre-build (warm) the tile plan for this whole-image\n                output extent so the first v3 request at that size\n                pays nothing (docs/tiling.md)\n  --tuned-dir D use the tuner-recorded best schedule from D when one\n                exists (see `pushmem tune`); falls back to the\n                hand-written schedule otherwise\n  --engine E    exec|exec-scalar|sim|auto (default: auto) — the functional engine\n                serves requests in microseconds; sim stays available\n                as the cycle-accurate reference (docs/execution.md)\n  --metrics-json PATH  periodically dump the telemetry snapshot\n                (docs/observability.md) to PATH as JSON; also written\n                once at shutdown\n\nCompile <app> and serve tiles over TCP. v1 frames target <app>; v2\nframes may name any registered app; v3 frames carry a whole-image\noutput extent, tiled onto the fixed design (docs/protocol.md).\nLive counters are queryable with `pushmem stats <host:port>`.\nConcurrent v3 requests share one tile scheduler and, past the\nbounded queue, new connections are answered STATUS_BUSY with a retry\nhint instead of hanging (docs/serving.md). PUSHMEM_ACCEPT_SHARDS=K\nshards the accept loop across K threads (default 2).",
+        "serve" => "usage: pushmem serve <app> [--addr A] [--workers N] [--stats] [--extent WxH] [--tuned-dir D] [--engine E] [--metrics-json PATH]\n\n  --addr A      listen address (default: 127.0.0.1:7411)\n  --workers N   connection worker threads (default: 4; a connection\n                holds its worker until it disconnects, and idle\n                workers join in-flight whole-image tile batches)\n  --stats       print one [req] line per served request\n  --extent WxH  pre-build (warm) the tile plan for this whole-image\n                output extent so the first v3 request at that size\n                pays nothing (docs/tiling.md)\n  --tuned-dir D use tuner-recorded schedules from D (see `pushmem\n                tune`): a persisted Pareto front (`<D>/<app>.pareto`)\n                loads up to three tuned variants routed per-request\n                by live load (docs/routing.md; PUSHMEM_VARIANTS=N\n                caps the set), a `.best` alone loads one, and the\n                hand-written schedule always rides along as fallback\n  --engine E    exec|exec-scalar|sim|auto (default: auto) — the functional engine\n                serves requests in microseconds; sim stays available\n                as the cycle-accurate reference (docs/execution.md)\n  --metrics-json PATH  periodically dump the telemetry snapshot\n                (docs/observability.md) to PATH as JSON; also written\n                once at shutdown\n\nCompile <app> and serve tiles over TCP. v1 frames target <app>; v2\nframes may name any registered app; v3 frames carry a whole-image\noutput extent, tiled onto the fixed design (docs/protocol.md).\nLive counters are queryable with `pushmem stats <host:port>`.\nConcurrent v3 requests share one tile scheduler and, past the\nbounded queue, new connections are answered STATUS_BUSY with a retry\nhint instead of hanging (docs/serving.md). PUSHMEM_ACCEPT_SHARDS=K\nshards the accept loop across K threads (default 2).",
         "serve-all" => "usage: pushmem serve-all [--addr A] [--workers N] [--apps a,b,c] [--warm] [--tuned-dir D] [--engine E] [--metrics-json PATH]\n\n  --addr A      listen address (default: 127.0.0.1:7411)\n  --workers N   connection worker threads (default: 8)\n  --apps LIST   comma-separated app names to register (default: the\n                seven Table III apps; variants like harris_sch4 allowed)\n  --warm        compile every registered app up front instead of lazily\n                on first request\n  --tuned-dir D per-app tuner-recorded schedules from D override the\n                hand-written defaults (see `pushmem tune`)\n  --engine E    exec|exec-scalar|sim|auto (default: auto)\n  --metrics-json PATH  periodically dump the telemetry snapshot to PATH\n\nServe every registered app over one TCP port (v2 frames carry the app\nname; see docs/protocol.md). Designs are compiled once, cached, and\nshared across connections. Prints one [req] stats line per request.\nAdmission control and the cross-request tile scheduler behave as in\n`pushmem serve` (docs/serving.md; PUSHMEM_ACCEPT_SHARDS=K, default 2).",
+        "variants" => "usage: pushmem variants <app> [--tuned-dir D]\n\n  --tuned-dir D   tuner result directory (default: dse-cache)\n\nCompile and print the serving variant set `pushmem serve --tuned-dir`\nwould load for <app>: up to three tuned variants picked off the\npersisted Pareto front (`<D>/<app>.pareto`, written by\n`pushmem tune --objective pareto`) — latency-, energy-, and\narea-optimal — plus the hand-written fallback. One row per variant\nwith role, tile, cycles, PEs, energy, area, and provenance. With more\nthan one variant the server routes each whole-image (v3) request by\nlive load; responses are bit-exact regardless of variant\n(docs/routing.md). PUSHMEM_VARIANTS=N caps the set (1 disables\nrouting).",
         "stats" => "usage: pushmem stats <host:port>\n\nQuery a running `pushmem serve`/`serve-all` server for its telemetry\nsnapshot over the wire (the 8-byte ADMIN_STATS frame, docs/protocol.md)\nand print the JSON to stdout: request/error counters, per-stage latency\nhistograms with quantiles, exec-engine lane/thread counters, and the\nmost recent request records. See docs/observability.md for the schema.",
-        _ => "usage: pushmem <list|compile|run|validate|report|tables|tune|serve|serve-all|stats> [args]\nsee `pushmem list` for applications and `pushmem <cmd> --help` for flags",
+        _ => "usage: pushmem <list|compile|run|validate|report|tables|tune|variants|serve|serve-all|stats> [args]\nsee `pushmem list` for applications and `pushmem <cmd> --help` for flags",
     }
 }
 
@@ -501,6 +505,25 @@ fn cmd_tune(name: &str, args: &[String]) -> Result<()> {
                 r.entry.cycles, r.entry.pes, r.entry.encoded
             );
         }
+        // The serving roles `serve --tuned-dir` will compile off the
+        // persisted front (docs/routing.md).
+        let entries: Vec<_> =
+            report.pareto_front().iter().map(|r| r.entry.clone()).collect();
+        if !entries.is_empty() {
+            println!("\nserving roles (load-adaptive routing, docs/routing.md):");
+            for (role, i) in pushmem::coordinator::driver::select_variant_roles(&entries) {
+                let e = &entries[i];
+                println!(
+                    "  {:<8} key {}  {:>10} cycles  {:>5} PEs  {:>8.2} pJ/op  {:>10.0} um2",
+                    pushmem::telemetry::VARIANT_ROLES[role],
+                    e.key,
+                    e.cycles,
+                    e.pes,
+                    e.energy_per_op_pj,
+                    e.area_um2
+                );
+            }
+        }
     }
     if let Some(d) = &cfg.cache_dir {
         println!(
@@ -508,6 +531,13 @@ fn cmd_tune(name: &str, args: &[String]) -> Result<()> {
             d.display(),
             d.display()
         );
+        if objective == dse::Objective::Pareto {
+            println!(
+                "recorded          {}/{name}.pareto  (inspect: pushmem variants {name} --tuned-dir {})",
+                d.display(),
+                d.display()
+            );
+        }
     }
 
     // The paper's schedule-exploration subject (§VI-C): show the tuned
@@ -579,20 +609,77 @@ fn cmd_serve(name: &str, args: &[String]) -> Result<()> {
     let (program, _) =
         apps::by_name(name).with_context(|| format!("unknown app {name}"))?;
     let dir = (!tuned_dir.is_empty()).then(|| std::path::Path::new(&tuned_dir));
-    let c = pushmem::coordinator::compile_maybe_tuned(&program, name, dir)?;
+    // A tuned dir with a persisted `.pareto` front yields up to three
+    // tuned variants plus the hand-written fallback; untuned serving
+    // is a solo set. v3 requests route between them by live load
+    // (docs/routing.md).
+    let set = Arc::new(pushmem::coordinator::compile_variants(&program, name, dir)?);
     if let Some(extent) = extent_flag(args)? {
-        // Warm the tiling plan so the first v3 request at this size
-        // pays nothing; the plan cache rides into the server with `c`.
-        let plan = c
-            .tile_plan(&extent)
-            .with_context(|| format!("warming tile plan for --extent {extent:?}"))?;
-        eprintln!(
-            "warmed tile plan: extent {extent:?} -> {} tiles of {:?}",
-            plan.tile_count(),
-            plan.tile
-        );
+        // Warm the tiling plan on every variant (each compiled design
+        // keeps its own plan cache) so the first v3 request at this
+        // size pays nothing regardless of where the router sends it.
+        for v in set.variants() {
+            let plan = v
+                .compiled
+                .tile_plan(&extent)
+                .with_context(|| format!("warming tile plan for --extent {extent:?}"))?;
+            eprintln!(
+                "warmed tile plan ({}): extent {extent:?} -> {} tiles of {:?}",
+                v.role,
+                plan.tile_count(),
+                plan.tile
+            );
+        }
     }
-    serve::serve(name, c, &addr, workers, stats, engine, metrics_json_flag(args)?)
+    serve::serve_set(name, set, &addr, workers, stats, engine, metrics_json_flag(args)?)
+}
+
+/// `pushmem variants <app> --tuned-dir D`: compile and print the
+/// serving variant set the router would load — one row per variant
+/// with its role, score, and provenance (docs/routing.md).
+fn cmd_variants(name: &str, args: &[String]) -> Result<()> {
+    let tuned_dir = flag_value(args, "--tuned-dir", "dse-cache")?;
+    let (program, _) =
+        apps::by_name(name).with_context(|| format!("unknown app {name}"))?;
+    let dir = std::path::Path::new(&tuned_dir);
+    let set = pushmem::coordinator::compile_variants(&program, name, Some(dir))?;
+    println!("app               {name}");
+    println!("tuned dir         {tuned_dir}");
+    println!(
+        "variants          {} ({})",
+        set.len(),
+        if set.is_multi() { "load-adaptive routing active" } else { "routing disabled" }
+    );
+    println!();
+    println!(
+        "{:<9} {:>9} {:>10} {:>6} {:>9} {:>12}  source",
+        "role", "tile", "cycles", "PEs", "pJ/op", "area_um2"
+    );
+    for v in set.variants() {
+        let tile = v
+            .compiled
+            .tile_extent()
+            .iter()
+            .map(|e| e.to_string())
+            .collect::<Vec<_>>()
+            .join("x");
+        match &v.entry {
+            Some(e) => println!(
+                "{:<9} {:>9} {:>10} {:>6} {:>9.2} {:>12.0}  tuned {}",
+                v.role, tile, e.cycles, e.pes, e.energy_per_op_pj, e.area_um2, e.key
+            ),
+            None => println!(
+                "{:<9} {:>9} {:>10} {:>6} {:>9} {:>12}  hand-written schedule",
+                v.role,
+                tile,
+                v.compiled.graph.completion,
+                v.compiled.design.pe_count(),
+                "-",
+                "-"
+            ),
+        }
+    }
+    Ok(())
 }
 
 /// `pushmem stats <host:port>`: one ADMIN_STATS frame over a fresh
@@ -686,6 +773,10 @@ fn main() -> Result<()> {
         Some("tune") => {
             let name = args.get(1).context("usage: pushmem tune <app>")?;
             cmd_tune(name, &args[1..])
+        }
+        Some("variants") => {
+            let name = args.get(1).context("usage: pushmem variants <app>")?;
+            cmd_variants(name, &args[1..])
         }
         Some("serve") => {
             let name = args.get(1).context("usage: pushmem serve <app>")?;

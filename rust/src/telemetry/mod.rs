@@ -61,6 +61,26 @@ use std::time::Instant;
 /// is clamped to this in `coordinator/serve.rs`).
 pub const MAX_ACCEPT_SHARDS: usize = 8;
 
+/// Variant-set ceiling for load-adaptive serving (docs/routing.md):
+/// at most the three tuned frontier roles plus the hand-written
+/// fallback. Fixed so the per-variant request counters are a plain
+/// array and the recording path stays lock-free, exactly like
+/// [`MAX_ACCEPT_SHARDS`].
+pub const MAX_VARIANTS: usize = 4;
+
+/// The closed set of variant roles, in counter-index order. These are
+/// the only values a served request's `variant` field takes —
+/// `coordinator/route.rs` names its roles from this array, so the
+/// telemetry names and the routing policy cannot drift apart.
+pub const VARIANT_ROLES: [&str; MAX_VARIANTS] = ["latency", "energy", "area", "fallback"];
+
+/// Index of a variant-role name in [`VARIANT_ROLES`] (`None` for
+/// anything outside the closed set, e.g. the `"?"` placeholder on
+/// failed requests).
+pub fn variant_role_index(name: &str) -> Option<usize> {
+    VARIANT_ROLES.iter().position(|r| *r == name)
+}
+
 /// Global sampling switch for the hot-path hooks. Off by default so
 /// standalone CLI runs, the tuner, and the fuzz suites pay one
 /// relaxed bool load per kernel dispatch and nothing else; the
@@ -180,6 +200,16 @@ pub struct Metrics {
     /// Accelerator passes behind served OK responses (1 per fixed-box
     /// request, the plan's tile count per v3 request).
     pub tiles_served: Counter,
+    /// OK responses served by each variant role ([`VARIANT_ROLES`]
+    /// order: latency, energy, area, fallback). Fed from the request
+    /// record, so at quiescence the four counters sum to exactly
+    /// `requests_ok` — the reconciliation the stress smoke pins.
+    pub requests_by_variant: [Counter; MAX_VARIANTS],
+    /// Tuned records that failed to load, verify, or compile and fell
+    /// back to the hand-written schedule (`coordinator/driver.rs`) —
+    /// the previously-silent failure mode now also logged via
+    /// [`log::warn`].
+    pub tuned_fallbacks: Counter,
 
     // -- worker pool ------------------------------------------------
     pub jobs_conn: Counter,
@@ -203,6 +233,10 @@ pub struct Metrics {
     pub queue_depth: Gauge,
     pub workers_busy: Gauge,
     pub workers_total: Gauge,
+    /// Distinct (app, variant-role) pairs the routing policy has
+    /// activated — the co-residency footprint on the array
+    /// (docs/routing.md).
+    pub active_variants: Gauge,
 
     // -- hot-path hooks (recorded only while `sampling()` is on) ----
     /// Tiles executed by the tile drain (`tile/run.rs`), whoever
@@ -279,6 +313,8 @@ impl Metrics {
             words_in: Counter::new(),
             words_out: Counter::new(),
             tiles_served: Counter::new(),
+            requests_by_variant: std::array::from_fn(|_| Counter::new()),
+            tuned_fallbacks: Counter::new(),
             jobs_conn: Counter::new(),
             jobs_tiles: Counter::new(),
             tile_plan_builds: Counter::new(),
@@ -289,6 +325,7 @@ impl Metrics {
             queue_depth: Gauge::new(),
             workers_busy: Gauge::new(),
             workers_total: Gauge::new(),
+            active_variants: Gauge::new(),
             tiles_executed: Counter::new(),
             exec_kernels: Counter::new(),
             exec_kernels_parallel: Counter::new(),
@@ -321,8 +358,8 @@ impl Metrics {
     /// the two surfaces cannot diverge.
     ///
     /// Write order matters: `requests_total` is incremented *before*
-    /// the ok/failed split (see the module docs on snapshot
-    /// consistency).
+    /// the ok/failed split, and `requests_ok` before the per-variant
+    /// counter (see the module docs on snapshot consistency).
     pub fn record_request(&self, rec: RequestRecord) {
         self.requests_total.inc();
         match rec.version {
@@ -344,6 +381,14 @@ impl Metrics {
             self.stage_respond.record_ns(rec.respond_ns);
             self.request_total.record_ns(rec.total_ns);
             self.requests_ok.inc();
+            // After requests_ok (the snapshot reads variants first),
+            // so sum(requests_by_variant) <= requests_ok in every
+            // snapshot and == at quiescence. Every served OK response
+            // carries a role from the closed set; anything else would
+            // break the stress smoke's exact reconciliation.
+            if let Some(i) = variant_role_index(rec.variant) {
+                self.requests_by_variant[i].inc();
+            }
         } else {
             self.requests_failed.inc();
         }
@@ -354,6 +399,11 @@ impl Metrics {
     /// *before* `requests_total` (the reverse of the write order), so
     /// `ok + failed <= total` holds in every snapshot.
     pub fn snapshot(&self) -> Snapshot {
+        // Variants before requests_ok (the reverse of the write
+        // order), so sum(requests_by_variant) <= requests_ok holds in
+        // every snapshot.
+        let by_variant: [u64; MAX_VARIANTS] =
+            std::array::from_fn(|i| self.requests_by_variant[i].get());
         let requests_ok = self.requests_ok.get();
         let requests_failed = self.requests_failed.get();
         let requests_total = self.requests_total.get();
@@ -381,6 +431,11 @@ impl Metrics {
             ("words_in", self.words_in.get()),
             ("words_out", self.words_out.get()),
             ("tiles_served", self.tiles_served.get()),
+            ("requests_variant_latency", by_variant[0]),
+            ("requests_variant_energy", by_variant[1]),
+            ("requests_variant_area", by_variant[2]),
+            ("requests_variant_fallback", by_variant[3]),
+            ("tuned_fallbacks", self.tuned_fallbacks.get()),
             ("jobs_conn", self.jobs_conn.get()),
             ("jobs_tiles", self.jobs_tiles.get()),
             ("tile_plan_builds", self.tile_plan_builds.get()),
@@ -403,6 +458,7 @@ impl Metrics {
             ("queue_depth", self.queue_depth.get()),
             ("workers_busy", self.workers_busy.get()),
             ("workers_total", self.workers_total.get()),
+            ("active_variants", self.active_variants.get()),
             ("exec_threads_cap", self.exec_threads_cap.get()),
             ("pool_workers", self.pool_workers.get()),
         ];
@@ -542,6 +598,7 @@ mod tests {
         RequestRecord {
             app: "gaussian".into(),
             engine: "exec",
+            variant: if ok { "latency" } else { "?" },
             version: 3,
             ok,
             tiles: 4,
@@ -612,6 +669,14 @@ mod tests {
                         ok + failed <= total,
                         "ok {ok} + failed {failed} > total {total}"
                     );
+                    let by_variant: u64 = VARIANT_ROLES
+                        .iter()
+                        .map(|r| snap.counter(&format!("requests_variant_{r}")))
+                        .sum();
+                    assert!(
+                        by_variant <= ok,
+                        "variants {by_variant} > ok {ok} mid-flight"
+                    );
                     assert!(total >= last_total, "requests_total went backwards");
                     last_total = total;
                     for (name, h) in &snap.histograms {
@@ -632,6 +697,12 @@ mod tests {
             end.counter("requests_ok") + end.counter("requests_failed"),
             4 * PER_THREAD
         );
+        // Quiescent reconciliation: variants sum to exactly ok.
+        let by_variant: u64 = VARIANT_ROLES
+            .iter()
+            .map(|r| end.counter(&format!("requests_variant_{r}")))
+            .sum();
+        assert_eq!(by_variant, end.counter("requests_ok"));
         // OK-only histogram feeding: every stage histogram count
         // equals requests_ok exactly.
         for (name, h) in &end.histograms {
@@ -658,11 +729,18 @@ mod tests {
             "\"requests_busy\":",
             "\"accepts_shard0\":",
             "\"accepts_shard7\":",
+            "\"requests_variant_latency\":1",
+            "\"requests_variant_energy\":0",
+            "\"requests_variant_area\":0",
+            "\"requests_variant_fallback\":0",
+            "\"tuned_fallbacks\":",
             "\"tile_plan_builds\":",
             "\"sched_batches\":",
             "\"sched_cross_tiles\":",
             "\"gauges\":{",
             "\"queue_depth\":",
+            "\"active_variants\":",
+            "\"variant\":\"latency\"",
             "\"histograms\":{",
             "\"stage_decode\":{\"count\":1",
             "\"buckets\":[",
@@ -684,6 +762,38 @@ mod tests {
         assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
         assert_eq!(json_escape("x\ny"), "x\\ny");
         assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+
+    /// Every OK request carries a role from the closed set and the
+    /// per-variant counters reconcile exactly with `requests_ok`;
+    /// failed requests (variant `"?"`) count nowhere.
+    #[test]
+    fn variant_counters_reconcile_with_requests_ok() {
+        assert_eq!(variant_role_index("latency"), Some(0));
+        assert_eq!(variant_role_index("energy"), Some(1));
+        assert_eq!(variant_role_index("area"), Some(2));
+        assert_eq!(variant_role_index("fallback"), Some(3));
+        assert_eq!(variant_role_index("?"), None);
+        assert_eq!(variant_role_index("Latency"), None);
+
+        let m = Metrics::new();
+        for (i, role) in VARIANT_ROLES.iter().enumerate() {
+            for _ in 0..=i {
+                let mut r = rec(true);
+                r.variant = role;
+                m.record_request(r);
+            }
+        }
+        m.record_request(rec(false)); // variant "?": failed, uncounted
+        let snap = m.snapshot();
+        assert_eq!(snap.counter("requests_variant_latency"), 1);
+        assert_eq!(snap.counter("requests_variant_energy"), 2);
+        assert_eq!(snap.counter("requests_variant_area"), 3);
+        assert_eq!(snap.counter("requests_variant_fallback"), 4);
+        let sum: u64 =
+            VARIANT_ROLES.iter().map(|r| snap.counter(&format!("requests_variant_{r}"))).sum();
+        assert_eq!(sum, snap.counter("requests_ok"));
+        assert_eq!(snap.counter("requests_failed"), 1);
     }
 
     #[test]

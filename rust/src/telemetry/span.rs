@@ -37,6 +37,10 @@ pub struct RequestRecord {
     pub app: String,
     /// Concrete engine that executed ("?" before resolution).
     pub engine: &'static str,
+    /// Variant role that served the request — one of
+    /// [`super::VARIANT_ROLES`] on OK responses ("?" when the request
+    /// failed before a variant was chosen). See docs/routing.md.
+    pub variant: &'static str,
     /// Protocol generation: 1, 2, or 3.
     pub version: u8,
     pub ok: bool,
@@ -61,12 +65,14 @@ impl RequestRecord {
     /// snapshot's `recent` array).
     pub fn to_json(&self) -> String {
         format!(
-            "{{\"app\":\"{}\",\"engine\":\"{}\",\"version\":{},\"ok\":{},\
+            "{{\"app\":\"{}\",\"engine\":\"{}\",\"variant\":\"{}\",\
+             \"version\":{},\"ok\":{},\
              \"tiles\":{},\"in_words\":{},\"out_words\":{},\"cycles\":{},\
              \"queue_depth\":{},\"decode_ns\":{},\"lookup_ns\":{},\
              \"execute_ns\":{},\"stitch_ns\":{},\"respond_ns\":{},\"total_ns\":{}}}",
             json_escape(&self.app),
             json_escape(self.engine),
+            json_escape(self.variant),
             self.version,
             self.ok,
             self.tiles,
@@ -129,6 +135,7 @@ mod tests {
         RequestRecord {
             app: format!("app{i}"),
             engine: "exec",
+            variant: "latency",
             version: 3,
             ok: true,
             tiles: i,
@@ -164,6 +171,7 @@ mod tests {
         for key in [
             "\"app\":\"app7\"",
             "\"engine\":\"exec\"",
+            "\"variant\":\"latency\"",
             "\"version\":3",
             "\"ok\":true",
             "\"tiles\":7",

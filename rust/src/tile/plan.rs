@@ -6,7 +6,13 @@
 //! whole-image input boxes a request must supply, the clamped tile
 //! origins covering the requested extent, and — per tile, per input —
 //! the translation from the design's declared input box into
-//! whole-image coordinates (docs/tiling.md).
+//! whole-image coordinates (docs/tiling.md). The input boxes depend
+//! only on the extent and the program's stencil halo, never on the
+//! design's tile size — which is what lets the load-adaptive router
+//! retarget one v3 payload at any compiled variant of the same
+//! program (docs/routing.md): each variant's `Compiled` carries its
+//! own plan cache, so switching variants never re-plans another's
+//! extents.
 
 use std::collections::BTreeMap;
 

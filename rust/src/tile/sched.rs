@@ -117,7 +117,9 @@ impl TileScheduler {
     }
 
     /// Unclaimed tiles across every live batch — the admission
-    /// layer's in-flight backlog signal (prunes as it counts).
+    /// layer's retry-hint signal and one input of the load-adaptive
+    /// variant router's pressure score (docs/routing.md); prunes as
+    /// it counts.
     pub fn backlog(&self) -> u64 {
         let mut st = self.lock();
         let mut sum = 0u64;

@@ -1,0 +1,210 @@
+//! Load-adaptive variant routing over the wire (docs/routing.md):
+//! spawn the real server on a multi-variant set built from a
+//! persisted `.pareto` front, saturate a workers=1/queue_cap=1 pool,
+//! and assert the variant choice shifts with live load while every
+//! response stays bit-exact against the host golden.
+//!
+//! This lives in its own integration-test binary on purpose: the
+//! telemetry registry (variant counters, `active_variants`) is
+//! process-global, and the deterministic pressure sequence below
+//! needs no other test touching the pool gauges concurrently.
+
+use std::io::Read;
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use pushmem::apps;
+use pushmem::coordinator::compile_variants;
+use pushmem::coordinator::protocol;
+use pushmem::coordinator::serve::{self, ServeConfig};
+use pushmem::dse::cache::{candidate_key, encode_schedule, CacheEntry, DseCache};
+use pushmem::halide::HwSchedule;
+use pushmem::tensor::Tensor;
+
+/// Synthetic Pareto-front entry: only the fields the role picker and
+/// router read (cycles / energy / area / pes) carry signal.
+fn entry(
+    app: &str,
+    sched: &HwSchedule,
+    cycles: i64,
+    energy_per_op_pj: f64,
+    area_um2: f64,
+    pes: usize,
+) -> CacheEntry {
+    CacheEntry {
+        key: candidate_key(app, sched),
+        cycles,
+        completion: cycles,
+        pes,
+        mems: 1,
+        sram_words: 64,
+        energy_per_op_pj,
+        pixels_per_cycle: 1.0,
+        area_um2,
+        encoded: encode_schedule(sched),
+    }
+}
+
+/// A tuned dir whose `.pareto` front yields a latency variant (tile
+/// 14, fastest) and an energy variant (tile 7, cheapest pJ/op *and*
+/// smallest area, so it dedups under its higher-priority energy
+/// role). With the hand-written fallback that is a 3-variant set.
+fn build_tuned_dir(app: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pushmem-serve-variants-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let lat = HwSchedule::new([14, 14]);
+    let eco = HwSchedule::new([7, 7]);
+    let mut cache = DseCache::open(&dir, app).unwrap();
+    let e_lat = entry(app, &lat, 100, 9.0, 900.0, 80);
+    let e_eco = entry(app, &eco, 400, 2.0, 300.0, 30);
+    let keys = vec![e_lat.key.clone(), e_eco.key.clone()];
+    cache.record(e_lat).unwrap();
+    cache.record(e_eco).unwrap();
+    cache.write_pareto(&keys).unwrap();
+    dir
+}
+
+fn stats(addr: std::net::SocketAddr) -> String {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    serve::request_stats(&mut stream).unwrap()
+}
+
+/// Poll STATS until `pred` holds (counters publish after the
+/// response bytes). Panics with the last snapshot on timeout.
+fn stats_until(addr: std::net::SocketAddr, pred: impl Fn(&str) -> bool) -> String {
+    let mut last = String::new();
+    for _ in 0..400 {
+        last = stats(addr);
+        if pred(&last) {
+            return last;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    panic!("stats never converged; last snapshot: {last}");
+}
+
+/// First `"key":<u64>` occurrence (counter/gauge names are unique
+/// across the snapshot's scalar sections).
+fn json_u64(json: &str, key: &str) -> u64 {
+    let pat = format!("\"{key}\":");
+    let i = json
+        .find(&pat)
+        .unwrap_or_else(|| panic!("key {key:?} not in snapshot: {json}"));
+    let digits: String =
+        json[i + pat.len()..].chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().unwrap_or_else(|_| panic!("key {key:?} is not a u64 in: {json}"))
+}
+
+/// The acceptance scenario from ISSUE.md: under light load the
+/// router serves the latency-optimal variant; as the pool saturates
+/// and connections queue, it shifts to the energy variant; the shift
+/// is sticky across the drain (Schmitt trigger); every response is
+/// bit-exact; and the per-variant counters reconcile with
+/// `requests_ok` once the pool quiesces.
+#[test]
+fn routing_shifts_variant_under_load_and_stays_bit_exact() {
+    let app = "g14v";
+    let dir = build_tuned_dir(app);
+    let prog = apps::gaussian::build(14);
+    let set = Arc::new(compile_variants(&prog, app, Some(dir.as_path())).unwrap());
+    assert!(set.is_multi(), "front should yield a routable set");
+    assert_eq!(set.len(), 3, "latency + energy + fallback");
+    assert_eq!(set.variants()[0].role, "latency");
+    assert_eq!(set.by_role(1).unwrap().role, "energy");
+    assert!(set.by_role(2).is_none(), "area deduped under energy");
+
+    // workers=1, queue_cap=1, accept_shards=1: exactly one connection
+    // held by the worker, one parked in the queue, and a third is
+    // refused at accept — the fully deterministic pressure ladder.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let mut cfg = ServeConfig::single_set(app, Arc::clone(&set));
+    cfg.workers = 1;
+    cfg.queue_cap = Some(1);
+    cfg.accept_shards = Some(1);
+    std::thread::spawn(move || serve::serve_on(listener, cfg));
+
+    // Host golden: gaussian lowered whole-image at tile = extent. The
+    // routed variant only changes the server's internal tiling, so
+    // one golden covers every variant.
+    let extent = vec![20i64, 20];
+    let mut golden_prog = apps::gaussian::build(14);
+    golden_prog.schedule.tile = extent.clone();
+    let lp = pushmem::halide::lower::lower(&golden_prog).unwrap();
+    let inputs = pushmem::coordinator::gen_inputs(&lp);
+    let want = lp.execute(&inputs).unwrap()[&lp.output].clone();
+    let ordered: Vec<Tensor> = lp.inputs.iter().map(|n| inputs[n].clone()).collect();
+    let refs: Vec<&Tensor> = ordered.iter().collect();
+
+    let before = stats(addr);
+    let ok0 = json_u64(&before, "requests_ok");
+
+    // Request 1 — pool otherwise idle. Pressure = 2*0 (queue) + 0
+    // (backlog) + 1 (the handling worker counts itself busy) = 1,
+    // below T_ENERGY: the latency variant serves it.
+    let mut a = TcpStream::connect(addr).unwrap();
+    a.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let (words, _, _) = serve::request_extent(&mut a, None, &extent, &refs).unwrap();
+    assert_eq!(words, want.data, "light-load response != host golden");
+
+    // Park connection B in the queue (it never sends a frame), then
+    // prove it is enqueued: a third connection must be refused at
+    // accept with a `STATUS_BUSY` frame — the accept loop is FIFO, so
+    // by the time C is answered, B holds the queue slot and
+    // queue_depth is pinned at 1 for as long as A stays open. C sends
+    // nothing (a written frame left unread at the server's close
+    // could RST away the busy frame) and just reads the pushed
+    // response header: magic, status, word count (docs/protocol.md).
+    let b = TcpStream::connect(addr).unwrap();
+    {
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut hdr = [0u8; 12];
+        c.read_exact(&mut hdr).unwrap();
+        let status = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+        assert_eq!(status, protocol::STATUS_BUSY, "expected busy refusal");
+    }
+
+    // Request 2 — same connection, now with B queued. Pressure =
+    // 2*1 + 0 + 1 = 3 ≥ T_ENERGY: the router escalates to the energy
+    // variant. Bit-exactness is unchanged by construction.
+    let (words, _, _) = serve::request_extent(&mut a, None, &extent, &refs).unwrap();
+    assert_eq!(words, want.data, "energy-variant response != host golden");
+    drop(a);
+
+    // Request 3 — the worker picks B up once A hangs up. Pressure is
+    // back to 1, inside the hysteresis band [T_ENERGY/2, T_ENERGY):
+    // the trigger holds the energy level instead of flapping.
+    let mut b = b;
+    b.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let (words, _, _) = serve::request_extent(&mut b, None, &extent, &refs).unwrap();
+    assert_eq!(words, want.data, "held-level response != host golden");
+    drop(b);
+
+    // Quiesced: the variant counters reconcile exactly with the OK
+    // count, split 1 latency / 2 energy by the ladder above.
+    let after = stats_until(addr, |j| json_u64(j, "requests_ok") >= ok0 + 3);
+    let d = |key: &str| json_u64(&after, key) - json_u64(&before, key);
+    assert_eq!(d("requests_ok"), 3, "before:\n{before}\nafter:\n{after}");
+    assert_eq!(d("requests_variant_latency"), 1, "{after}");
+    assert_eq!(d("requests_variant_energy"), 2, "{after}");
+    assert_eq!(d("requests_variant_area"), 0);
+    assert_eq!(d("requests_variant_fallback"), 0);
+    let variant_sum = d("requests_variant_latency")
+        + d("requests_variant_energy")
+        + d("requests_variant_area")
+        + d("requests_variant_fallback");
+    assert_eq!(variant_sum, d("requests_ok"), "variant counters must reconcile with ok");
+
+    // Both served variants are resident on the array (this binary
+    // runs exactly one test, so the process-global gauge is ours).
+    assert_eq!(json_u64(&after, "active_variants"), 2, "{after}");
+
+    // The recent-request ring labels each record with its variant.
+    assert!(after.contains("\"variant\":\"latency\""), "{after}");
+    assert!(after.contains("\"variant\":\"energy\""), "{after}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -12,12 +12,25 @@ must reconcile the books exactly:
 * ``requests_busy == queue_full`` — every rejection was answered;
 * busy rejections observed by clients ``<= requests_busy`` (the server
   may also have rejected this script's own stray connects);
-* per-shard accept counters sum to at least every connection we opened.
+* per-shard accept counters sum to at least every connection we opened;
+* the per-variant counters reconcile: once quiesced,
+  ``sum(requests_variant_*) == requests_ok`` (docs/routing.md) — on a
+  plain server everything lands on the hand-written ``fallback``
+  variant, on a ``--tuned-dir`` multi-variant server the split follows
+  the load-adaptive router.
 
 Usage: ``serve_stress.py PORT [N_CLIENTS]`` (run by
 ``scripts/serve_stress.sh`` / ``make serve-stress-smoke``; stdlib only).
+
+``serve_stress.py --write-tuned-dir DIR`` instead writes a synthetic
+tuned dir (``gaussian.tsv`` + ``gaussian.pareto``, the dse/cache.rs
+formats byte-for-byte) whose front yields a latency variant on the
+hand schedule's own 62-tile — so this script's fixed-box 64x64
+requests stay valid against the primary variant — plus a 31-tile
+energy variant for the router to shift to under pressure.
 """
 
+import os
 import socket
 import sys
 import threading
@@ -32,6 +45,51 @@ WANT_WORDS = 62 * 62
 # Any single client stalling past this is the hang this harness exists
 # to catch (a loaded CI runner needs headroom, a hang needs minutes).
 CLIENT_TIMEOUT_S = 30.0
+
+
+def fnv1a64(data: bytes) -> int:
+    """FNV-1a 64 exactly as rust/src/dse/cache.rs computes it."""
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x00000100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def cache_line(app: str, tile: int, cycles: int, energy: float, area: float, pes: int) -> str:
+    """One ``<app>.tsv``/``.pareto`` line in the CacheEntry::to_line
+    format, keyed the way ``candidate_key`` would key it (the verified
+    loader recomputes the key from the schedule and drops mismatches).
+    """
+    encoded = f"tile={tile}x{tile}"
+    payload = f"{app}\n{encoded}"
+    key = f"{fnv1a64(payload.encode()):016x}"
+    return (
+        f"{key}\t{cycles}\t{cycles}\t{pes}\t1\t64"
+        f"\t{energy:.6f}\t1.000000\t{area:.1f}\t{encoded}"
+    )
+
+
+HEADER = (
+    "# pushmem dse cache v1: key cycles completion pes mems "
+    "sram_words energy_per_op_pj pixels_per_cycle area_um2 schedule"
+)
+
+
+def write_tuned_dir(path: str) -> int:
+    """Write a synthetic two-point Pareto front for ``gaussian``: the
+    62-tile hand schedule as the latency pick (fixed-box requests hit
+    the primary variant, so its tile must stay 62) and a 31-tile
+    energy/area pick for the router."""
+    os.makedirs(path, exist_ok=True)
+    lat = cache_line("gaussian", 62, 100, 9.0, 900.0, 80)
+    eco = cache_line("gaussian", 31, 400, 2.0, 300.0, 30)
+    body = f"{HEADER}\n{lat}\n{eco}\n"
+    for name in ("gaussian.tsv", "gaussian.pareto"):
+        with open(os.path.join(path, name), "w") as f:
+            f.write(body)
+    print(f"wrote synthetic tuned dir {path} (latency tile 62, energy tile 31)")
+    return 0
 
 
 def one_client(port: int, results: list, idx: int) -> None:
@@ -50,6 +108,8 @@ def one_client(port: int, results: list, idx: int) -> None:
 
 
 def main() -> int:
+    if sys.argv[1] == "--write-tuned-dir":
+        return write_tuned_dir(sys.argv[2])
     port = int(sys.argv[1])
     n_clients = int(sys.argv[2]) if len(sys.argv) > 2 else 100
 
@@ -85,9 +145,33 @@ def main() -> int:
         sys.exit(f"clients ended with non-OK/BUSY outcomes: {bad}")
     print(f"{n_clients} clients in {wall:.2f}s: {ok} ok, {busy} busy, 0 hangs")
 
+    # One whole-image (v3) request through the load-adaptive router:
+    # extent 62x62 grows to the same 64x64 halo input box on every
+    # gaussian variant, so this works against plain and tuned servers
+    # alike and exercises the routed path the burst above (fixed-box →
+    # always the primary variant) cannot.
     with PushmemClient(port=port, timeout=CLIENT_TIMEOUT_S) as c:
-        snap = c.stats()
-    counters = snap["counters"]
+        words, cycles, _ = c.request([INPUT], extent=(62, 62))
+    assert len(words) == WANT_WORDS, f"v3 request: {len(words)} words"
+    assert cycles > 0, "v3 request: zero cycles"
+    ok += 1
+
+    # Counters publish after the response bytes, so poll briefly for
+    # the books to close before asserting exact reconciliation.
+    deadline = time.monotonic() + 10.0
+    while True:
+        with PushmemClient(port=port, timeout=CLIENT_TIMEOUT_S) as c:
+            snap = c.stats()
+        counters = snap["counters"]
+        variant_sum = sum(
+            v for k, v in counters.items() if k.startswith("requests_variant_")
+        )
+        if variant_sum == counters["requests_ok"] or time.monotonic() > deadline:
+            break
+        time.sleep(0.1)
+    # Quiesced, every OK response is attributed to exactly one variant
+    # (docs/routing.md): the per-variant counters reconcile exactly.
+    assert variant_sum == counters["requests_ok"], (variant_sum, counters)
     assert snap["schema"] == "pushmem-stats-v1", snap
     assert counters["requests_busy"] == counters["queue_full"], counters
     assert counters["requests_busy"] >= busy, (busy, counters)
@@ -101,10 +185,16 @@ def main() -> int:
     shards_used = sum(
         1 for k, v in counters.items() if k.startswith("accepts_shard") and v > 0
     )
+    split = ", ".join(
+        f"{k.removeprefix('requests_variant_')}={v}"
+        for k, v in sorted(counters.items())
+        if k.startswith("requests_variant_") and v > 0
+    )
     print(
         f"stats reconcile: requests_busy={counters['requests_busy']} == "
         f"queue_full={counters['queue_full']}, "
-        f"{shard_accepts} accepts over {shards_used} shard(s)"
+        f"{shard_accepts} accepts over {shards_used} shard(s), "
+        f"variants [{split}] sum to requests_ok={counters['requests_ok']}"
     )
     return 0
 

@@ -5,7 +5,14 @@
 # (scripts/serve_stress.py). Every client must finish with OK or a
 # STATUS_BUSY + retry-after frame — zero hangs — and the final
 # ADMIN_STATS snapshot must reconcile every rejection
-# (requests_busy == queue_full) and every accept (per-shard counters).
+# (requests_busy == queue_full), every accept (per-shard counters),
+# and every served variant (sum(requests_variant_*) == requests_ok).
+#
+# Phase 2 repeats the burst against a multi-variant server: a
+# synthetic .pareto front (written by serve_stress.py
+# --write-tuned-dir) gives the server latency/energy/fallback
+# variants, and the same reconciliation must hold with the
+# load-adaptive router in the path (docs/routing.md).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -17,17 +24,32 @@ fi
 cargo build --release --quiet
 BIN=target/release/pushmem
 
-PORT=$((20000 + RANDOM % 20000))
-ADDR="127.0.0.1:${PORT}"
 TMP=$(mktemp -d)
 trap 'kill "${SERVER_PID:-}" 2>/dev/null || true; rm -rf "$TMP"' EXIT
 
-# 4 workers + 4 acceptor shards: enough parallelism that the burst
-# mostly succeeds, small enough that admission control has to act.
-PUSHMEM_ACCEPT_SHARDS=4 "$BIN" serve gaussian --addr "$ADDR" --workers 4 \
-  >"$TMP/serve.log" 2>&1 &
-SERVER_PID=$!
+run_phase() {
+  local label=$1; shift
+  PORT=$((20000 + RANDOM % 20000))
+  # 4 workers + 4 acceptor shards: enough parallelism that the burst
+  # mostly succeeds, small enough that admission control has to act.
+  PUSHMEM_ACCEPT_SHARDS=4 "$BIN" serve gaussian --addr "127.0.0.1:${PORT}" \
+    --workers 4 "$@" >"$TMP/serve-$label.log" 2>&1 &
+  SERVER_PID=$!
+  python3 scripts/serve_stress.py "$PORT" 100
+  kill "$SERVER_PID" 2>/dev/null || true
+  wait "$SERVER_PID" 2>/dev/null || true
+}
 
-python3 scripts/serve_stress.py "$PORT" 100
+run_phase single
+
+python3 scripts/serve_stress.py --write-tuned-dir "$TMP/tuned"
+run_phase tuned --tuned-dir "$TMP/tuned"
+# The tuned server must actually have loaded a routable set: its
+# listening banner names every variant role it serves.
+grep -q "variants=latency,energy,fallback" "$TMP/serve-tuned.log" || {
+  echo "tuned server did not load the multi-variant set:" >&2
+  cat "$TMP/serve-tuned.log" >&2
+  exit 1
+}
 
 echo "serve-stress-smoke: all checks passed"
